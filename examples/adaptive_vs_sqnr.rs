@@ -1,0 +1,94 @@
+//! The paper's headline comparison (Fig. 6 / Fig. 8 protocol): trace the
+//! size-accuracy frontier for the adaptive, SQNR and equal allocators on
+//! one model and report the compression advantage at matched accuracy.
+//!
+//!   cargo run --release --example adaptive_vs_sqnr [-- <model> [--conv-only]]
+
+use adaq::coordinator::{run_sweep, Session, SweepConfig};
+use adaq::measure::{calibrate_model, Calibration, SearchParams};
+use adaq::quant::Allocator;
+use adaq::report::{ascii_plot, Series};
+
+fn main() -> adaq::Result<()> {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let model = args
+        .iter()
+        .find(|a| !a.starts_with("--"))
+        .cloned()
+        .unwrap_or_else(|| "mini_alexnet".into());
+    let conv_only = args.iter().any(|a| a == "--conv-only");
+    let root = std::path::PathBuf::from("artifacts");
+
+    let session = Session::open(&root, &model, 250)?;
+    let cal = match Calibration::load(&root, &model) {
+        Ok(c) => c,
+        Err(_) => {
+            let c = calibrate_model(
+                &session,
+                session.baseline().accuracy * 0.5,
+                &SearchParams::default(),
+                |l| println!("{l}"),
+            )?;
+            c.save(&root)?;
+            c
+        }
+    };
+    let stats = cal.layer_stats();
+    let manifest = &session.artifacts.manifest;
+    let cfg = if conv_only {
+        SweepConfig::conv_only(manifest)
+    } else {
+        SweepConfig::default_for(manifest.num_weighted_layers)
+    };
+
+    let base = session.baseline().accuracy;
+    let mut series = Vec::new();
+    let mut at_matched: Vec<(&str, f64)> = Vec::new();
+    for (alloc, marker) in [
+        (Allocator::Adaptive, 'o'),
+        (Allocator::Sqnr, 'x'),
+        (Allocator::Equal, '+'),
+    ] {
+        let r = run_sweep(&session, alloc, &stats, &cfg)?;
+        let hit = r.frontier.iter().find(|p| p.accuracy >= base - 0.02);
+        println!("\n{} frontier:", alloc.name());
+        for p in &r.frontier {
+            println!("  {:>9.1} KiB  acc {:.4}", p.size_bytes / 1024.0, p.accuracy);
+        }
+        if let Some(p) = hit {
+            at_matched.push((alloc.name(), p.size_bytes));
+        }
+        series.push(Series::new(
+            alloc.name(),
+            marker,
+            r.frontier.iter().map(|p| (p.size_bytes / 1024.0, p.accuracy)).collect(),
+        ));
+    }
+    println!(
+        "\n{}",
+        ascii_plot(
+            &format!(
+                "{model}{}: size (KiB) vs accuracy",
+                if conv_only { " (conv-only)" } else { "" }
+            ),
+            &series,
+            70,
+            20,
+            false,
+            false
+        )
+    );
+    let size_of = |n: &str| at_matched.iter().find(|(a, _)| *a == n).map(|(_, s)| *s);
+    if let (Some(a), Some(s), Some(e)) = (size_of("adaptive"), size_of("sqnr"), size_of("equal")) {
+        println!(
+            "at ≤2% accuracy drop: adaptive {:.1} KiB — {:.0}% smaller than sqnr ({:.1} KiB), \
+             {:.0}% smaller than equal ({:.1} KiB)",
+            a / 1024.0,
+            (1.0 - a / s) * 100.0,
+            s / 1024.0,
+            (1.0 - a / e) * 100.0,
+            e / 1024.0
+        );
+    }
+    Ok(())
+}

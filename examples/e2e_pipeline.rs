@@ -1,0 +1,115 @@
+//! End-to-end validation driver (EXPERIMENTS.md §E2E): exercises every
+//! layer of the stack on all four models —
+//!
+//!   artifacts (L1 Pallas kernels + L2 JAX models, AOT HLO)
+//!     → PJRT runtime (L3) → calibration → allocation → quantized
+//!     evaluation → batch-1 quantized *serving* with latency stats,
+//!
+//! and cross-checks the PJRT forward against the pure-Rust `nn`
+//! substrate. Prints a one-line verdict per model and a final summary.
+//!
+//!   cargo run --release --example e2e_pipeline
+
+use adaq::coordinator::{serve_loop, Session};
+use adaq::dataset::Dataset;
+use adaq::measure::{calibrate_model, Calibration, SearchParams};
+use adaq::nn::GraphExecutor;
+use adaq::quant::Allocator;
+use adaq::report::{markdown_table, Align};
+use adaq::util::Timer;
+
+fn main() -> adaq::Result<()> {
+    let root = std::path::PathBuf::from("artifacts");
+    let models = ["mini_alexnet", "mini_vgg", "mini_resnet", "mini_inception"];
+    let test = Dataset::load(&root, "test")?;
+    println!("test set: {} images\n", test.len());
+
+    let mut rows = Vec::new();
+    let total = Timer::start();
+    for model in models {
+        let t = Timer::start();
+        let session = Session::open(&root, model, 250)?;
+        let base = session.baseline().accuracy;
+
+        // cross-check PJRT vs pure-rust nn (one batch)
+        let exec = GraphExecutor::new(&session.artifacts.manifest);
+        let params = session.artifacts.weights.tensors();
+        let xb = test.batch(0, 32)?;
+        let rust_logits = exec.forward(&xb, &params)?;
+        let nc = session.artifacts.manifest.num_classes;
+        let mut maxdiff = 0f32;
+        for (i, &v) in rust_logits.data().iter().take(32 * nc).enumerate() {
+            maxdiff = maxdiff.max((v - session.baseline().logits[0][i]).abs());
+        }
+        assert!(maxdiff < 1e-3, "{model}: PJRT vs rust-nn diverged ({maxdiff})");
+
+        // calibrate (or reuse cache)
+        let cal = match Calibration::load(&root, model) {
+            Ok(c) => c,
+            Err(_) => {
+                let c = calibrate_model(&session, base * 0.5, &SearchParams::default(), |_| {})?;
+                c.save(&root)?;
+                c
+            }
+        };
+
+        // allocate + evaluate at b1 = 8
+        let stats = cal.layer_stats();
+        let alloc = Allocator::Adaptive.allocate(&stats, 8.0, &vec![true; stats.len()], 16.0);
+        let bits: Vec<f32> = alloc.bits.iter().map(|&b| b.round() as f32).collect();
+        let out = session.eval_qbits(&bits)?;
+        let size = alloc.size_bytes(&stats);
+        let fp32 = session.artifacts.manifest.fp32_bytes();
+
+        // batch-1 quantized serving
+        let serve_session = Session::open(&root, model, 1)?;
+        let stats_serve = serve_loop(&serve_session, &test, &bits, 100)?;
+
+        rows.push(vec![
+            model.to_string(),
+            format!("{base:.4}"),
+            format!("{:.4}", out.accuracy),
+            format!("{:.2}x", fp32 / size),
+            format!("{:.4}", stats_serve.accuracy()),
+            format!("{:.2}", stats_serve.p50_ms),
+            format!("{:.0}", stats_serve.throughput_rps),
+            format!("{:.1}s", t.seconds()),
+        ]);
+        println!(
+            "{model}: fp32 {base:.4} → int-adaptive {:.4} at {:.2}x compression, \
+             serve p50 {:.2} ms [{}]",
+            out.accuracy,
+            fp32 / size,
+            stats_serve.p50_ms,
+            "OK"
+        );
+    }
+    println!(
+        "\n{}",
+        markdown_table(
+            &[
+                "model",
+                "fp32 acc",
+                "adaptive@b1=8",
+                "compression",
+                "serve acc",
+                "p50 ms",
+                "req/s",
+                "wall",
+            ],
+            &[
+                Align::Left,
+                Align::Right,
+                Align::Right,
+                Align::Right,
+                Align::Right,
+                Align::Right,
+                Align::Right,
+                Align::Right
+            ],
+            &rows
+        )
+    );
+    println!("e2e pipeline OK in {:.1}s", total.seconds());
+    Ok(())
+}

@@ -1,0 +1,75 @@
+//! Deploy-under-a-budget: the mobile scenario from the paper's
+//! introduction. Given a model-size budget (KiB), find the best
+//! allocation per strategy that fits, and compare the accuracy each
+//! strategy can afford at that budget.
+//!
+//!   cargo run --release --example mobile_budget -- [model] [budget_kib]
+
+use adaq::coordinator::{run_sweep, Session, SweepConfig};
+use adaq::measure::{calibrate_model, Calibration, SearchParams};
+use adaq::quant::Allocator;
+use adaq::report::{markdown_table, Align};
+
+fn main() -> adaq::Result<()> {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let model = args.first().cloned().unwrap_or_else(|| "mini_vgg".into());
+    let budget_kib: f64 = args.get(1).and_then(|s| s.parse().ok()).unwrap_or(64.0);
+    let root = std::path::PathBuf::from("artifacts");
+
+    let session = Session::open(&root, &model, 250)?;
+    let cal = match Calibration::load(&root, &model) {
+        Ok(c) => c,
+        Err(_) => {
+            let c = calibrate_model(
+                &session,
+                session.baseline().accuracy * 0.5,
+                &SearchParams::default(),
+                |l| println!("{l}"),
+            )?;
+            c.save(&root)?;
+            c
+        }
+    };
+    let stats = cal.layer_stats();
+    let manifest = &session.artifacts.manifest;
+    println!(
+        "{model}: fp32 {:.1} KiB, budget {budget_kib} KiB, baseline acc {:.4}\n",
+        manifest.fp32_bytes() / 1024.0,
+        session.baseline().accuracy
+    );
+
+    let cfg = SweepConfig::default_for(manifest.num_weighted_layers);
+    let mut rows = Vec::new();
+    for alloc in [Allocator::Adaptive, Allocator::Sqnr, Allocator::Equal] {
+        let r = run_sweep(&session, alloc, &stats, &cfg)?;
+        // best accuracy among points that fit the budget
+        let best = r
+            .points
+            .iter()
+            .filter(|p| p.size_bytes / 1024.0 <= budget_kib)
+            .max_by(|a, b| a.accuracy.partial_cmp(&b.accuracy).unwrap());
+        match best {
+            Some(p) => rows.push(vec![
+                alloc.name().into(),
+                format!("{:.1}", p.size_bytes / 1024.0),
+                format!("{:.4}", p.accuracy),
+                format!("{:?}", p.bits.iter().map(|&b| b as i32).collect::<Vec<_>>()),
+            ]),
+            None => rows.push(vec![
+                alloc.name().into(),
+                "-".into(),
+                "does not fit".into(),
+                String::new(),
+            ]),
+        }
+    }
+    println!(
+        "{}",
+        markdown_table(
+            &["allocator", "size KiB", "best accuracy", "bits"],
+            &[Align::Left, Align::Right, Align::Right, Align::Left],
+            &rows
+        )
+    );
+    Ok(())
+}

@@ -1,0 +1,52 @@
+//! Quickstart: the complete adaptive-quantization pipeline on one model,
+//! in ~60 lines of library calls.
+//!
+//!   cargo run --release --example quickstart
+//!
+//! Steps (= the paper's method, end to end):
+//!   1. open a PJRT session on the AOT artifacts (`make artifacts` first),
+//!   2. calibrate per-layer robustness t_i and noise prefactor p_i,
+//!   3. solve the closed-form optimal bit-widths (Eq. 22),
+//!   4. evaluate the quantized model through the Pallas fake-quant
+//!      executable and report accuracy vs model size.
+
+use adaq::coordinator::Session;
+use adaq::measure::{calibrate_model, SearchParams};
+use adaq::quant::Allocator;
+
+fn main() -> adaq::Result<()> {
+    let root = std::path::PathBuf::from("artifacts");
+    let model = std::env::args().nth(1).unwrap_or_else(|| "mini_alexnet".into());
+
+    // 1. session: loads HLO artifacts, uploads dataset + weights, caches
+    //    the fp32 baseline logits
+    let session = Session::open(&root, &model, 250)?;
+    let base = session.baseline().accuracy;
+    println!("{model}: fp32 accuracy {base:.4}");
+
+    // 2. calibration (Alg. 1 + 2); Δacc = half the base accuracy, as in
+    //    the paper's AlexNet example (57% → 28%)
+    let cal = calibrate_model(&session, base * 0.5, &SearchParams::default(), |l| {
+        println!("{l}")
+    })?;
+
+    // 3. closed-form allocation anchored at b1 = 8 bits
+    let stats = cal.layer_stats();
+    let mask = vec![true; stats.len()];
+    let alloc = Allocator::Adaptive.allocate(&stats, 8.0, &mask, 16.0);
+    println!("optimal fractional bits: {:?}", alloc.bits);
+
+    // 4. evaluate through the Pallas qforward executable
+    let bits: Vec<f32> = alloc.bits.iter().map(|&b| b.round() as f32).collect();
+    let out = session.eval_qbits(&bits)?;
+    let size = alloc.size_bytes(&stats);
+    let fp32 = session.artifacts.manifest.fp32_bytes();
+    println!(
+        "quantized: accuracy {:.4} (drop {:.4}), size {:.1} KiB = {:.2}x smaller than fp32",
+        out.accuracy,
+        base - out.accuracy,
+        size / 1024.0,
+        fp32 / size
+    );
+    Ok(())
+}

@@ -1,0 +1,152 @@
+"""AOT pipeline: dataset → train → lower → dump artifacts.
+
+This is the ONLY place Python runs; everything it emits is consumed by the
+Rust coordinator at request time:
+
+    artifacts/dataset/{train,test}.tnsr + meta.json
+    artifacts/<model>/forward_b{B}.hlo.txt    (x, w…) → (logits,)
+    artifacts/<model>/qforward_b{B}.hlo.txt   (x, w…, bits[k]) → (logits,)
+    artifacts/<model>/weights.tnsr
+    artifacts/<model>/manifest.json
+    artifacts/<model>/train_log.json
+
+Interchange format is HLO **text**, not a serialized HloModuleProto:
+jax ≥ 0.5 emits protos with 64-bit instruction ids which xla_extension
+0.5.1 (the version behind the `xla` 0.1.6 crate) rejects
+(`proto.id() <= INT_MAX`); the text parser reassigns ids and round-trips
+cleanly (see /opt/xla-example/README.md).
+
+Weights are *executable parameters*, not constants — one compiled artifact
+serves every quantization experiment with zero recompiles (DESIGN.md §3).
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import datagen
+from . import model as M
+from . import train as T
+from .tnsr import write_tnsr
+
+BATCH_SIZES = (1, 250)  # test set (1500) = 6 × 250; b1 for the serve demo
+EPOCHS_DEFAULT = 25
+
+
+def to_hlo_text(fn, example_args) -> str:
+    """Lower a jittable fn at the given abstract args to XLA HLO text."""
+    lowered = jax.jit(fn).lower(*example_args)
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def sds(shape):
+    return jax.ShapeDtypeStruct(shape, jnp.float32)
+
+
+def build_dataset_artifacts(outdir: str, log=print):
+    ds_dir = os.path.join(outdir, "dataset")
+    os.makedirs(ds_dir, exist_ok=True)
+    (xtr, ytr), (xte, yte) = datagen.build_dataset()
+    write_tnsr(
+        os.path.join(ds_dir, "train.tnsr"),
+        {"images": xtr, "labels": ytr},
+    )
+    write_tnsr(
+        os.path.join(ds_dir, "test.tnsr"),
+        {"images": xte, "labels": yte},
+    )
+    meta = {
+        "img": datagen.IMG,
+        "num_classes": datagen.NUM_CLASSES,
+        "class_names": datagen.CLASS_NAMES,
+        "train_n": datagen.TRAIN_N,
+        "test_n": datagen.TEST_N,
+        "train_seed": datagen.TRAIN_SEED,
+        "test_seed": datagen.TEST_SEED,
+        "generator": "pcg32-procedural-v1",
+    }
+    with open(os.path.join(ds_dir, "meta.json"), "w") as f:
+        json.dump(meta, f, indent=1)
+    log(f"dataset: train={xtr.shape} test={xte.shape}")
+    return (xtr, ytr), (xte, yte)
+
+
+def build_model_artifacts(name, outdir, data, epochs, log=print):
+    (xtr, ytr), (xte, yte) = data
+    model = M.MODELS[name]()
+    mdir = os.path.join(outdir, name)
+    os.makedirs(mdir, exist_ok=True)
+
+    params, history = T.train(model, xtr, ytr, xte, yte, epochs=epochs, log=log)
+    specs = M.param_specs(model)
+    write_tnsr(
+        os.path.join(mdir, "weights.tnsr"),
+        {n: np.asarray(p) for (n, _), p in zip(specs, params)},
+    )
+    with open(os.path.join(mdir, "train_log.json"), "w") as f:
+        json.dump(history, f, indent=1)
+
+    man = M.manifest(model)
+    man["batch_sizes"] = list(BATCH_SIZES)
+    man["final_test_acc"] = history["test_acc"][-1]
+    with open(os.path.join(mdir, "manifest.json"), "w") as f:
+        json.dump(man, f, indent=1)
+
+    pshapes = [s for _, s in specs]
+    nwl = len(M.weighted_layers(model))
+    fwd = M.make_forward_fn(model)
+    qfwd = M.make_qforward_fn(model)
+    for b in BATCH_SIZES:
+        xspec = sds((b, *M.INPUT_SHAPE))
+        args = [xspec] + [sds(s) for s in pshapes]
+        text = to_hlo_text(fwd, args)
+        with open(os.path.join(mdir, f"forward_b{b}.hlo.txt"), "w") as f:
+            f.write(text)
+        qargs = args + [sds((nwl,))]
+        qtext = to_hlo_text(qfwd, qargs)
+        with open(os.path.join(mdir, f"qforward_b{b}.hlo.txt"), "w") as f:
+            f.write(qtext)
+        log(
+            f"[{name}] lowered b={b}: forward {len(text) // 1024} KiB, "
+            f"qforward {len(qtext) // 1024} KiB"
+        )
+    return history["test_acc"][-1]
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="../artifacts", help="artifact output dir")
+    ap.add_argument("--models", default=",".join(M.MODELS), help="comma list")
+    ap.add_argument("--epochs", type=int, default=EPOCHS_DEFAULT)
+    args = ap.parse_args(argv)
+
+    outdir = args.out
+    os.makedirs(outdir, exist_ok=True)
+    data = build_dataset_artifacts(outdir)
+    summary = {}
+    for name in args.models.split(","):
+        name = name.strip()
+        if not name:
+            continue
+        if name not in M.MODELS:
+            sys.exit(f"unknown model {name!r}; have {list(M.MODELS)}")
+        summary[name] = build_model_artifacts(name, outdir, data, args.epochs)
+    with open(os.path.join(outdir, "summary.json"), "w") as f:
+        json.dump({"final_test_acc": summary}, f, indent=1)
+    print("artifact summary:", summary)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,163 @@
+"""Procedural "shapes" dataset — the ImageNet substitute (see DESIGN.md §2).
+
+10 classes of 16×16×1 grayscale images, each a parametric stroke pattern
+with pose / thickness / intensity jitter plus uniform pixel noise. The
+generator uses the in-repo PCG32 stream (`pcg.py` ↔ `rust/src/rng/pcg.rs`)
+and only +,-,*,/ float arithmetic, so Python and Rust regenerate
+bit-identical tensors.
+
+Classes:
+    0 h-bar    1 v-bar    2 cross(+)   3 diag(\\)   4 anti-diag(/)
+    5 hollow box   6 filled blob   7 X   8 T   9 L
+"""
+
+from __future__ import annotations
+
+import struct
+
+import numpy as np
+
+from .pcg import Pcg32
+
+IMG = 16
+NUM_CLASSES = 10
+CLASS_NAMES = [
+    "h_bar",
+    "v_bar",
+    "cross",
+    "diag",
+    "anti_diag",
+    "hollow_box",
+    "blob",
+    "x_shape",
+    "t_shape",
+    "l_shape",
+]
+
+
+def _f32(v: float) -> float:
+    return struct.unpack("<f", struct.pack("<f", v))[0]
+
+
+def _draw(img, r, c, val):
+    if 0 <= r < IMG and 0 <= c < IMG:
+        # accumulate, saturating at 1.0; round to f32 after every op so the
+        # stream matches rust's native-f32 arithmetic bit-for-bit
+        img[r][c] = _f32(min(1.0, _f32(img[r][c] + val)))
+
+
+def _hline(img, r, c0, c1, thick, val):
+    for t in range(thick):
+        for c in range(c0, c1 + 1):
+            _draw(img, r + t, c, val)
+
+
+def _vline(img, c, r0, r1, thick, val):
+    for t in range(thick):
+        for r in range(r0, r1 + 1):
+            _draw(img, r, c + t, val)
+
+
+def _diag(img, r0, c0, length, thick, val, anti=False):
+    for i in range(length):
+        for t in range(thick):
+            if anti:
+                _draw(img, r0 + i, c0 - i + t, val)
+            else:
+                _draw(img, r0 + i, c0 + i + t, val)
+
+
+def render_shape(cls: int, rng: Pcg32) -> list[list[float]]:
+    """Render one image of class *cls* as a 16×16 nested float list."""
+    img = [[0.0] * IMG for _ in range(IMG)]
+    thick = 1 + rng.below(2)
+    val = rng.uniform(0.35, 1.0)
+    off_r = rng.below(9) - 4  # -4..4 jitter
+    off_c = rng.below(9) - 4
+    cr = 8 + off_r
+    cc = 8 + off_c
+    length = 6 + rng.below(7)  # 6..12
+    half = length // 2
+
+    if cls == 0:  # horizontal bar
+        _hline(img, cr, cc - half, cc + half, thick, val)
+    elif cls == 1:  # vertical bar
+        _vline(img, cc, cr - half, cr + half, thick, val)
+    elif cls == 2:  # cross
+        _hline(img, cr, cc - half, cc + half, thick, val)
+        _vline(img, cc, cr - half, cr + half, thick, val)
+    elif cls == 3:  # main diagonal
+        _diag(img, cr - half, cc - half, length, thick, val)
+    elif cls == 4:  # anti-diagonal
+        _diag(img, cr - half, cc + half, length, thick, val, anti=True)
+    elif cls == 5:  # hollow box
+        s = half
+        _hline(img, cr - s, cc - s, cc + s, thick, val)
+        _hline(img, cr + s, cc - s, cc + s, thick, val)
+        _vline(img, cc - s, cr - s, cr + s, thick, val)
+        _vline(img, cc + s, cr - s, cr + s, thick, val)
+    elif cls == 6:  # filled blob
+        s = 2 + rng.below(3)
+        for r in range(cr - s, cr + s + 1):
+            for c in range(cc - s, cc + s + 1):
+                _draw(img, r, c, val)
+    elif cls == 7:  # X
+        _diag(img, cr - half, cc - half, length, thick, val)
+        _diag(img, cr - half, cc + half, length, thick, val, anti=True)
+    elif cls == 8:  # T
+        _hline(img, cr - half, cc - half, cc + half, thick, val)
+        _vline(img, cc, cr - half, cr + half, thick, val)
+    elif cls == 9:  # L
+        _vline(img, cc - half, cr - half, cr + half, thick, val)
+        _hline(img, cr + half, cc - half, cc + half, thick, val)
+    else:
+        raise ValueError(f"bad class {cls}")
+
+    # distractor speckles: short random strokes that overlap class features
+    n_spk = 2 + rng.below(4)
+    for _ in range(n_spk):
+        sr = rng.below(IMG)
+        sc = rng.below(IMG)
+        sval = rng.uniform(0.3, 0.9)
+        horiz = rng.below(2)
+        slen = 1 + rng.below(3)
+        for j in range(slen):
+            if horiz:
+                _draw(img, sr, sc + j, sval)
+            else:
+                _draw(img, sr + j, sc, sval)
+
+    # uniform pixel noise — keeps arithmetic transcendental-free
+    amp = rng.uniform(0.05, 0.30)
+    for r in range(IMG):
+        for c in range(IMG):
+            n = rng.uniform(0.0, 1.0)
+            img[r][c] = _f32(min(1.0, img[r][c] + _f32(amp * n)))
+    return img
+
+
+def generate(n: int, seed: int) -> tuple[np.ndarray, np.ndarray]:
+    """Generate *n* (image, label) pairs; labels cycle round-robin so every
+    class has n/10 examples. Returns (x[n,16,16,1] f32, y[n] i32)."""
+    rng = Pcg32(seed)
+    xs = np.zeros((n, IMG, IMG, 1), dtype=np.float32)
+    ys = np.zeros((n,), dtype=np.int32)
+    for i in range(n):
+        cls = i % NUM_CLASSES
+        img = render_shape(cls, rng)
+        xs[i, :, :, 0] = np.asarray(img, dtype=np.float32)
+        ys[i] = cls
+    return xs, ys
+
+
+TRAIN_SEED = 20180201  # AAAI'18 conference date — arbitrary but fixed
+TEST_SEED = 20180202
+TRAIN_N = 6000
+TEST_N = 1500
+
+
+def build_dataset():
+    """The canonical train/test split used by every artifact."""
+    xtr, ytr = generate(TRAIN_N, TRAIN_SEED)
+    xte, yte = generate(TEST_N, TEST_SEED)
+    return (xtr, ytr), (xte, yte)

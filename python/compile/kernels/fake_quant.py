@@ -1,0 +1,83 @@
+"""L1 Pallas kernel: tiled uniform quantize-dequantize (fake quant).
+
+TPU-shaped even though executed with interpret=True on CPU-PJRT (the CPU
+plugin cannot run Mosaic custom-calls — see DESIGN.md §8):
+
+- the weight is flattened and re-tiled to (rows, 128) — 128 is the TPU
+  lane width — and the grid walks (BLOCK_ROWS, 128) tiles, so each block
+  plus its output stays ≪ VMEM (2 × 128 KiB at BLOCK_ROWS=256);
+- the quantization range (lo, step, nlevels) is computed once outside the
+  kernel and rides along as (1,1) scalar blocks instead of being
+  re-reduced per tile (SMEM-style operands);
+- bits is a *runtime* scalar, so one compiled executable serves every
+  bit-width the coordinator wants to evaluate. bits<=0 (or a degenerate
+  range) means identity: the layer stays fp32.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+LANES = 128
+BLOCK_ROWS = 256
+
+
+def _kernel(w_ref, lo_ref, step_ref, nlev_ref, valid_ref, o_ref):
+    w = w_ref[...]
+    lo = lo_ref[0, 0]
+    step = step_ref[0, 0]
+    nlev = nlev_ref[0, 0]
+    q = jnp.floor((w - lo) / step)
+    q = jnp.clip(q, 0.0, nlev - 1.0)
+    recon = lo + (q + 0.5) * step
+    o_ref[...] = jnp.where(valid_ref[0, 0] > 0, recon, w)
+
+
+def fake_quant(w, bits, *, block_rows: int = BLOCK_ROWS, interpret: bool = True):
+    """Uniform quantize-dequantize of *w* (any shape) at runtime *bits*."""
+    w = jnp.asarray(w, jnp.float32)
+    bits = jnp.asarray(bits, jnp.float32).reshape(())
+    orig_shape = w.shape
+    n = w.size
+
+    lo = jnp.min(w)
+    hi = jnp.max(w)
+    span = hi - lo
+    nlev = jnp.exp2(bits)
+    step = span / nlev
+    valid = jnp.logical_and(bits > 0, span > 0)
+    safe_step = jnp.where(step > 0, step, 1.0)
+
+    # retile to (rows, LANES), padding the tail
+    rows = max(1, -(-n // LANES))
+    brows = min(block_rows, rows)
+    grid = -(-rows // brows)
+    padded_rows = grid * brows
+    flat = jnp.zeros((padded_rows * LANES,), jnp.float32).at[:n].set(w.reshape(-1))
+    tiled = flat.reshape(padded_rows, LANES)
+
+    scalar = lambda v: jnp.asarray(v, jnp.float32).reshape(1, 1)
+    sspec = pl.BlockSpec((1, 1), lambda i: (0, 0))
+    out = pl.pallas_call(
+        _kernel,
+        grid=(grid,),
+        in_specs=[
+            pl.BlockSpec((brows, LANES), lambda i: (i, 0)),
+            sspec,
+            sspec,
+            sspec,
+            sspec,
+        ],
+        out_specs=pl.BlockSpec((brows, LANES), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((padded_rows, LANES), jnp.float32),
+        interpret=interpret,
+    )(
+        tiled,
+        scalar(lo),
+        scalar(safe_step),
+        scalar(nlev),
+        scalar(jnp.where(valid, 1.0, 0.0)),
+    )
+    return out.reshape(-1)[:n].reshape(orig_shape)

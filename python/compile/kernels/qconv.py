@@ -1,0 +1,73 @@
+"""L1 Pallas kernel: quantized conv2d as im2col + fused dequant-matmul.
+
+What the paper's CUDA-minded reader would do with threadblock-staged
+shared memory is expressed here as the TPU decomposition (DESIGN.md §8):
+the NHWC input is patch-expanded (im2col — pure data movement, XLA
+handles it as gathers/reshapes), and the contraction runs through the
+same MXU-shaped fused dequant-matmul tile loop as the FC layers, so the
+conv weight tensor also ships quantized through HBM and dequantizes
+VMEM-side.
+
+Used by the ablation/test path; the shipped qforward artifacts use
+`fake_quant` + `lax.conv` (numerically identical, leaner HLO). The pytest
+suite holds this kernel to the same oracle as the others.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .qmatmul import qmatmul
+
+
+def _im2col(x, k: int, stride: int, pad: int):
+    """NHWC → patches [n·oh·ow, k·k·c] with (kh, kw, c) column order,
+    matching HWIO kernels flattened to [k·k·c, cout] (and the Rust
+    `nn::im2col`)."""
+    n, h, w, c = x.shape
+    if pad:
+        x = jnp.pad(x, ((0, 0), (pad, pad), (pad, pad), (0, 0)))
+    oh = (h + 2 * pad - k) // stride + 1
+    ow = (w + 2 * pad - k) // stride + 1
+    # gather k×k patches: index arithmetic unrolled over the small kernel
+    cols = []
+    for ky in range(k):
+        for kx in range(k):
+            sl = x[:, ky : ky + oh * stride : stride, kx : kx + ow * stride : stride, :]
+            cols.append(sl.reshape(n * oh * ow, c))
+    return jnp.concatenate(cols, axis=1), (n, oh, ow)
+
+
+def qconv2d(x, w, b, bits, *, stride: int = 1, pad: int = 0, interpret: bool = True):
+    """Quantized conv: NHWC input, HWIO weight, runtime scalar bits.
+
+    Equivalent to `lax.conv(x, fake_quant(w, bits)) + b`, but the
+    contraction runs through the Pallas fused dequant-matmul kernel.
+    """
+    x = jnp.asarray(x, jnp.float32)
+    w = jnp.asarray(w, jnp.float32)
+    kh, kw, cin, cout = w.shape
+    assert kh == kw, "square kernels only"
+    patches, (n, oh, ow) = _im2col(x, kh, stride, pad)
+    wm = w.reshape(kh * kw * cin, cout)
+    out = qmatmul(patches, wm, bits, interpret=interpret)
+    out = out.reshape(n, oh, ow, cout)
+    return out + jnp.asarray(b, jnp.float32)
+
+
+def qconv2d_ref(x, w, b, bits, *, stride: int = 1, pad: int = 0):
+    """Oracle: fake-quant the weight (pure jnp), then lax.conv."""
+    from jax import lax
+
+    from .ref import fake_quant_ref
+
+    wq = fake_quant_ref(w, bits)
+    out = lax.conv_general_dilated(
+        jnp.asarray(x, jnp.float32),
+        wq,
+        window_strides=(stride, stride),
+        padding=((pad, pad), (pad, pad)),
+        dimension_numbers=("NHWC", "HWIO", "NHWC"),
+    )
+    return out + jnp.asarray(b, jnp.float32)

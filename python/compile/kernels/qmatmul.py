@@ -1,0 +1,95 @@
+"""L1 Pallas kernel: fused dequantize + matmul — the quantized FC hot path.
+
+z = x @ fake_quant(w), with the weight dequantized *tile-by-tile after the
+HBM→VMEM copy*: on a real TPU the HBM traffic would be the quantized
+representation while the 128×128 MXU consumes full-precision tiles — this
+is the paper's bandwidth argument for quantization mapped onto the TPU
+memory hierarchy (DESIGN.md §8). Tiling is (bm, bk, bn) = (128, 128, 128)
+to match the MXU systolic array; accumulation runs over the k grid axis
+with an @pl.when(k==0) zero-init.
+
+interpret=True for CPU-PJRT execution; structure, not CPU wallclock, is
+what the TPU estimate in EXPERIMENTS.md §Perf is based on.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+BM, BK, BN = 128, 128, 128
+
+
+def _kernel(x_ref, w_ref, lo_ref, step_ref, nlev_ref, valid_ref, o_ref):
+    @pl.when(pl.program_id(2) == 0)
+    def _zero():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    w = w_ref[...]
+    lo = lo_ref[0, 0]
+    step = step_ref[0, 0]
+    nlev = nlev_ref[0, 0]
+    q = jnp.clip(jnp.floor((w - lo) / step), 0.0, nlev - 1.0)
+    wq = jnp.where(valid_ref[0, 0] > 0, lo + (q + 0.5) * step, w)
+    o_ref[...] += jnp.dot(x_ref[...], wq, preferred_element_type=jnp.float32)
+
+
+def _pad2(a, m, n):
+    pm = m - a.shape[0]
+    pn = n - a.shape[1]
+    if pm or pn:
+        a = jnp.pad(a, ((0, pm), (0, pn)))
+    return a
+
+
+@functools.partial(jax.named_call, name="qmatmul")
+def qmatmul(x, w, bits, *, interpret: bool = True):
+    """x[m,k] @ fake_quant(w[k,n], bits) with runtime scalar *bits*."""
+    x = jnp.asarray(x, jnp.float32)
+    w = jnp.asarray(w, jnp.float32)
+    bits = jnp.asarray(bits, jnp.float32).reshape(())
+    m, k = x.shape
+    k2, n = w.shape
+    assert k == k2, (x.shape, w.shape)
+
+    lo = jnp.min(w)
+    hi = jnp.max(w)
+    span = hi - lo
+    nlev = jnp.exp2(bits)
+    step = span / nlev
+    valid = jnp.logical_and(bits > 0, span > 0)
+    safe_step = jnp.where(step > 0, step, 1.0)
+
+    bm, bk, bn = min(BM, m), min(BK, k), min(BN, n)
+    gm, gk, gn = -(-m // bm), -(-k // bk), -(-n // bn)
+    xp = _pad2(x, gm * bm, gk * bk)
+    wp = _pad2(w, gk * bk, gn * bn)
+
+    scalar = lambda v: jnp.asarray(v, jnp.float32).reshape(1, 1)
+    sspec = pl.BlockSpec((1, 1), lambda i, j, kk: (0, 0))
+    out = pl.pallas_call(
+        _kernel,
+        grid=(gm, gn, gk),
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j)),
+            sspec,
+            sspec,
+            sspec,
+            sspec,
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((gm * bm, gn * bn), jnp.float32),
+        interpret=interpret,
+    )(
+        xp,
+        wp,
+        scalar(lo),
+        scalar(safe_step),
+        scalar(nlev),
+        scalar(jnp.where(valid, 1.0, 0.0)),
+    )
+    return out[:m, :n]

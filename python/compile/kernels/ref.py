@@ -1,0 +1,45 @@
+"""Pure-jnp oracles for the Pallas kernels (correctness ground truth).
+
+The quantizer semantics are the paper's uniform quantizer (Eq. 2-3 and the
+supplementary): the weight range [w_min, w_max] is split into M = 2^b
+equal intervals and every value is reconstructed at its interval midpoint,
+giving E[r²] = step²/12 per weight and the 6 dB/bit law of Eq. 3.
+
+`bits <= 0` and degenerate ranges (w_min == w_max) are identity — the
+coordinator uses bits=0 to mean "leave this layer at fp32".
+
+These definitions are mirrored exactly (same op order, f32 arithmetic) by
+`rust/src/quant/uniform.rs`; the integration tests compare all three
+implementations (ref, Pallas, Rust).
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def fake_quant_ref(w, bits):
+    """Uniform quantize-dequantize of *w* with a runtime scalar bit-width."""
+    w = jnp.asarray(w, jnp.float32)
+    bits = jnp.asarray(bits, jnp.float32)
+    lo = jnp.min(w)
+    hi = jnp.max(w)
+    span = hi - lo
+    nlev = jnp.exp2(bits)
+    step = span / nlev
+    # guard against div-by-zero; validity is decided by `valid` below
+    safe_step = jnp.where(step > 0, step, 1.0)
+    q = jnp.floor((w - lo) / safe_step)
+    q = jnp.clip(q, 0.0, nlev - 1.0)
+    recon = lo + (q + 0.5) * safe_step
+    valid = jnp.logical_and(bits > 0, span > 0)
+    return jnp.where(valid, recon, w)
+
+
+def qmatmul_ref(x, w, bits):
+    """x @ fake_quant(w) — the quantized fully-connected hot path."""
+    return jnp.dot(
+        jnp.asarray(x, jnp.float32),
+        fake_quant_ref(w, bits),
+        preferred_element_type=jnp.float32,
+    )

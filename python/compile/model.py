@@ -1,0 +1,369 @@
+"""L2 — the mini model zoo (JAX forward passes) and its layer-graph schema.
+
+Models are DAGs of layer dicts (JSON-able: the same structure is dumped to
+``artifacts/<model>/manifest.json`` and interpreted by the pure-Rust
+``rust/src/nn`` substrate). Four architectures mirror the paper's
+evaluation set structurally (DESIGN.md §2):
+
+    mini_alexnet   conv stack + 2 large FC  → layer sizes span 3 orders
+                   of magnitude (the regime where adaptive allocation
+                   wins 30-40 % in the paper)
+    mini_vgg       3×3 double-conv blocks + FC
+    mini_resnet    1×1-bottleneck residual blocks (the Fig. 6 discussion
+                   point: SQNR ≈ equal on 1×1-heavy nets)
+    mini_inception multi-branch mixed modules (GoogLeNet stand-in)
+
+Two forward functions are exported per model:
+
+    forward(x, *params)          plain fp32 graph (baseline / noise
+                                 injection experiments — the coordinator
+                                 perturbs weights host-side)
+    qforward(x, *params, bits)   every quantizable weight goes through
+                                 the L1 Pallas fake-quant kernel with a
+                                 *runtime* per-layer bit-width; FC layers
+                                 use the fused qmatmul kernel
+
+Parameter order is [w0, b0, w1, b1, ...] over weighted layers in graph
+order; ``manifest()`` records the mapping (plus s_i — the per-layer
+quantizable parameter count driving the Σ s_i·b_i objective).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from .kernels.fake_quant import fake_quant
+from .kernels.qmatmul import qmatmul
+
+NUM_CLASSES = 10
+INPUT_SHAPE = (16, 16, 1)
+
+
+# --------------------------------------------------------------------------
+# layer constructors (pure data)
+# --------------------------------------------------------------------------
+
+
+def conv(name, inp, cin, cout, k=3, stride=1, pad=1):
+    return {
+        "name": name,
+        "kind": "conv",
+        "inputs": [inp],
+        "cin": cin,
+        "cout": cout,
+        "k": k,
+        "stride": stride,
+        "pad": pad,
+    }
+
+
+def dense(name, inp, cin, cout):
+    return {"name": name, "kind": "dense", "inputs": [inp], "cin": cin, "cout": cout}
+
+
+def relu(name, inp):
+    return {"name": name, "kind": "relu", "inputs": [inp]}
+
+
+def maxpool(name, inp, k=2, stride=2, pad=0):
+    return {"name": name, "kind": "maxpool", "inputs": [inp], "k": k, "stride": stride, "pad": pad}
+
+
+def gap(name, inp):
+    return {"name": name, "kind": "gap", "inputs": [inp]}
+
+
+def flatten(name, inp):
+    return {"name": name, "kind": "flatten", "inputs": [inp]}
+
+
+def add(name, a, b):
+    return {"name": name, "kind": "add", "inputs": [a, b]}
+
+
+def concat(name, inps):
+    return {"name": name, "kind": "concat", "inputs": list(inps)}
+
+
+# --------------------------------------------------------------------------
+# architectures
+# --------------------------------------------------------------------------
+
+
+def mini_alexnet():
+    L = [
+        conv("conv1", "input", 1, 16),
+        relu("relu1", "conv1"),
+        maxpool("pool1", "relu1"),
+        conv("conv2", "pool1", 16, 32),
+        relu("relu2", "conv2"),
+        maxpool("pool2", "relu2"),
+        conv("conv3", "pool2", 32, 48),
+        relu("relu3", "conv3"),
+        conv("conv4", "relu3", 48, 48),
+        relu("relu4", "conv4"),
+        conv("conv5", "relu4", 48, 32),
+        relu("relu5", "conv5"),
+        maxpool("pool5", "relu5"),
+        flatten("flat", "pool5"),
+        dense("fc6", "flat", 128, 512),
+        relu("relu6", "fc6"),
+        dense("fc7", "relu6", 512, 256),
+        relu("relu7", "fc7"),
+        dense("fc8", "relu7", 256, NUM_CLASSES),
+    ]
+    return {"name": "mini_alexnet", "layers": L, "output": "fc8"}
+
+
+def mini_vgg():
+    L = [
+        conv("conv1_1", "input", 1, 16),
+        relu("relu1_1", "conv1_1"),
+        conv("conv1_2", "relu1_1", 16, 16),
+        relu("relu1_2", "conv1_2"),
+        maxpool("pool1", "relu1_2"),
+        conv("conv2_1", "pool1", 16, 32),
+        relu("relu2_1", "conv2_1"),
+        conv("conv2_2", "relu2_1", 32, 32),
+        relu("relu2_2", "conv2_2"),
+        maxpool("pool2", "relu2_2"),
+        conv("conv3_1", "pool2", 32, 64),
+        relu("relu3_1", "conv3_1"),
+        conv("conv3_2", "relu3_1", 64, 64),
+        relu("relu3_2", "conv3_2"),
+        maxpool("pool3", "relu3_2"),
+        flatten("flat", "pool3"),
+        dense("fc4", "flat", 256, 256),
+        relu("relu4", "fc4"),
+        dense("fc5", "relu4", 256, NUM_CLASSES),
+    ]
+    return {"name": "mini_vgg", "layers": L, "output": "fc5"}
+
+
+def _bottleneck(L, tag, inp, ch, mid):
+    """1×1 → 3×3 → 1×1 bottleneck with identity skip (shape-preserving)."""
+    L += [
+        conv(f"{tag}_a", inp, ch, mid, k=1, pad=0),
+        relu(f"{tag}_arelu", f"{tag}_a"),
+        conv(f"{tag}_b", f"{tag}_arelu", mid, mid, k=3, pad=1),
+        relu(f"{tag}_brelu", f"{tag}_b"),
+        conv(f"{tag}_c", f"{tag}_brelu", mid, ch, k=1, pad=0),
+        add(f"{tag}_add", f"{tag}_c", inp),
+        relu(f"{tag}_relu", f"{tag}_add"),
+    ]
+    return f"{tag}_relu"
+
+
+def mini_resnet():
+    L = [conv("stem", "input", 1, 32), relu("stem_relu", "stem")]
+    out = _bottleneck(L, "block1", "stem_relu", 32, 16)
+    L.append(maxpool("pool1", out))
+    out = _bottleneck(L, "block2", "pool1", 32, 16)
+    L.append(maxpool("pool2", out))
+    out = _bottleneck(L, "block3", "pool2", 32, 16)
+    L += [gap("gap", out), dense("fc", "gap", 32, NUM_CLASSES)]
+    return {"name": "mini_resnet", "layers": L, "output": "fc"}
+
+
+def _inception(L, tag, inp, cin, c1, c3r, c3, c5r, c5, cp):
+    """GoogLeNet-style mixed module: 1×1 / 1×1→3×3 / 1×1→5×5 / pool→1×1."""
+    L += [
+        conv(f"{tag}_1x1", inp, cin, c1, k=1, pad=0),
+        conv(f"{tag}_3x3r", inp, cin, c3r, k=1, pad=0),
+        relu(f"{tag}_3x3r_relu", f"{tag}_3x3r"),
+        conv(f"{tag}_3x3", f"{tag}_3x3r_relu", c3r, c3, k=3, pad=1),
+        conv(f"{tag}_5x5r", inp, cin, c5r, k=1, pad=0),
+        relu(f"{tag}_5x5r_relu", f"{tag}_5x5r"),
+        conv(f"{tag}_5x5", f"{tag}_5x5r_relu", c5r, c5, k=5, pad=2),
+        maxpool(f"{tag}_pool", inp, k=3, stride=1, pad=1),
+        conv(f"{tag}_poolp", f"{tag}_pool", cin, cp, k=1, pad=0),
+        concat(f"{tag}_cat", [f"{tag}_1x1", f"{tag}_3x3", f"{tag}_5x5", f"{tag}_poolp"]),
+        relu(f"{tag}_relu", f"{tag}_cat"),
+    ]
+    return f"{tag}_relu", c1 + c3 + c5 + cp
+
+
+def mini_inception():
+    L = [
+        conv("stem", "input", 1, 16),
+        relu("stem_relu", "stem"),
+        maxpool("pool_stem", "stem_relu"),
+    ]
+    out, ch = _inception(L, "incA", "pool_stem", 16, 8, 8, 8, 4, 8, 8)
+    L.append(maxpool("poolA", out))
+    out, ch = _inception(L, "incB", "poolA", ch, 16, 16, 16, 8, 16, 16)
+    L += [gap("gap", out), dense("fc", "gap", ch, NUM_CLASSES)]
+    return {"name": "mini_inception", "layers": L, "output": "fc"}
+
+
+MODELS = {
+    "mini_alexnet": mini_alexnet,
+    "mini_vgg": mini_vgg,
+    "mini_resnet": mini_resnet,
+    "mini_inception": mini_inception,
+}
+
+
+# --------------------------------------------------------------------------
+# shapes / parameters / manifest
+# --------------------------------------------------------------------------
+
+
+def weighted_layers(model):
+    """Graph-order list of layers that own parameters."""
+    return [l for l in model["layers"] if l["kind"] in ("conv", "dense")]
+
+
+def param_specs(model):
+    """[(name, shape)] in executable parameter order: [w0, b0, w1, b1, …]."""
+    specs = []
+    for l in weighted_layers(model):
+        if l["kind"] == "conv":
+            specs.append((l["name"] + ".w", (l["k"], l["k"], l["cin"], l["cout"])))
+        else:
+            specs.append((l["name"] + ".w", (l["cin"], l["cout"])))
+        specs.append((l["name"] + ".b", (l["cout"],)))
+    return specs
+
+
+def layer_sizes(model):
+    """s_i — quantizable parameter count per weighted layer (weights only;
+    biases stay fp32, matching the paper's r_b-ignored assumption)."""
+    sizes = []
+    for l in weighted_layers(model):
+        if l["kind"] == "conv":
+            sizes.append(l["k"] * l["k"] * l["cin"] * l["cout"])
+        else:
+            sizes.append(l["cin"] * l["cout"])
+    return sizes
+
+
+def init_params(model, seed: int = 0):
+    """He-normal init, deterministic in *seed*."""
+    key = jax.random.PRNGKey(seed)
+    params = []
+    for name, shape in param_specs(model):
+        key, sub = jax.random.split(key)
+        if name.endswith(".b"):
+            params.append(jnp.zeros(shape, jnp.float32))
+        else:
+            fan_in = 1
+            for d in shape[:-1]:
+                fan_in *= d
+            std = (2.0 / fan_in) ** 0.5
+            params.append(std * jax.random.normal(sub, shape, jnp.float32))
+    return params
+
+
+def manifest(model):
+    """JSON-able description consumed by the rust side (io::json + model)."""
+    wl = weighted_layers(model)
+    sizes = layer_sizes(model)
+    qidx = {l["name"]: i for i, l in enumerate(wl)}
+    layers = []
+    pidx = 1  # parameter 0 is the input batch
+    for l in model["layers"]:
+        e = dict(l)
+        if l["kind"] in ("conv", "dense"):
+            e["param_idx_w"] = pidx
+            e["param_idx_b"] = pidx + 1
+            e["qindex"] = qidx[l["name"]]
+            e["s_i"] = sizes[qidx[l["name"]]]
+            pidx += 2
+        layers.append(e)
+    return {
+        "model": model["name"],
+        "input_shape": list(INPUT_SHAPE),
+        "num_classes": NUM_CLASSES,
+        "output": model["output"],
+        "num_weighted_layers": len(wl),
+        "total_quantizable_params": int(sum(sizes)),
+        "layers": layers,
+    }
+
+
+# --------------------------------------------------------------------------
+# forward passes
+# --------------------------------------------------------------------------
+
+
+def _conv2d(x, w, b, stride, pad):
+    out = lax.conv_general_dilated(
+        x,
+        w,
+        window_strides=(stride, stride),
+        padding=((pad, pad), (pad, pad)),
+        dimension_numbers=("NHWC", "HWIO", "NHWC"),
+    )
+    return out + b
+
+
+def _maxpool(x, k, stride, pad):
+    if pad:
+        x = jnp.pad(x, ((0, 0), (pad, pad), (pad, pad), (0, 0)), constant_values=-jnp.inf)
+    return lax.reduce_window(
+        x, -jnp.inf, lax.max, (1, k, k, 1), (1, stride, stride, 1), "VALID"
+    )
+
+
+def forward(model, params, x, bits=None, *, interpret=True):
+    """Run the layer graph. If *bits* is a [num_weighted_layers] vector the
+    quantized path is taken (Pallas fake-quant / qmatmul per layer)."""
+    wl = weighted_layers(model)
+    qidx = {l["name"]: i for i, l in enumerate(wl)}
+    acts = {"input": x}
+    p = 0
+    for l in model["layers"]:
+        kind = l["kind"]
+        a = acts[l["inputs"][0]] if l["inputs"] else None
+        if kind == "conv":
+            w, b = params[p], params[p + 1]
+            p += 2
+            if bits is not None:
+                w = fake_quant(w, bits[qidx[l["name"]]], interpret=interpret)
+            out = _conv2d(a, w, b, l["stride"], l["pad"])
+        elif kind == "dense":
+            w, b = params[p], params[p + 1]
+            p += 2
+            if bits is not None:
+                out = qmatmul(a, w, bits[qidx[l["name"]]], interpret=interpret) + b
+            else:
+                out = a @ w + b
+        elif kind == "relu":
+            out = jnp.maximum(a, 0.0)
+        elif kind == "maxpool":
+            out = _maxpool(a, l["k"], l["stride"], l["pad"])
+        elif kind == "gap":
+            out = jnp.mean(a, axis=(1, 2))
+        elif kind == "flatten":
+            out = a.reshape(a.shape[0], -1)
+        elif kind == "add":
+            out = a + acts[l["inputs"][1]]
+        elif kind == "concat":
+            out = jnp.concatenate([acts[n] for n in l["inputs"]], axis=-1)
+        else:
+            raise ValueError(f"unknown layer kind {kind}")
+        acts[l["name"]] = out
+    return acts[model["output"]]
+
+
+def make_forward_fn(model):
+    """forward(x, *params) → (logits,) — plain fp32."""
+
+    def fn(x, *params):
+        return (forward(model, list(params), x),)
+
+    return fn
+
+
+def make_qforward_fn(model):
+    """qforward(x, *params, bits) → (logits,) — Pallas fake-quant path."""
+
+    def fn(x, *params_and_bits):
+        params = list(params_and_bits[:-1])
+        bits = params_and_bits[-1]
+        return (forward(model, params, x, bits=bits),)
+
+    return fn

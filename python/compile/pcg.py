@@ -1,0 +1,51 @@
+"""PCG32 (pcg_oneseq_64_xsh_rr_32) — deterministic RNG implemented
+identically in Python (here) and Rust (`rust/src/rng/pcg.rs`).
+
+The procedural dataset is generated from this stream so the Rust side can
+regenerate bit-identical data for parity tests without numpy's MT19937.
+All arithmetic is u64 wrapping; floats are derived as u32 / 2^32 in f64
+then rounded once to f32 — both languages follow IEEE-754, so the streams
+match exactly.
+"""
+
+from __future__ import annotations
+
+MASK64 = (1 << 64) - 1
+MULT = 6364136223846793005
+INC = 1442695040888963407
+
+
+class Pcg32:
+    """Single-stream PCG32 with the oneseq increment."""
+
+    def __init__(self, seed: int):
+        self.state = 0
+        self.next_u32()  # state = inc + 0 advance, matching the rust ctor
+        self.state = (self.state + (seed & MASK64)) & MASK64
+        self.next_u32()
+
+    def next_u32(self) -> int:
+        old = self.state
+        self.state = (old * MULT + INC) & MASK64
+        xorshifted = (((old >> 18) ^ old) >> 27) & 0xFFFFFFFF
+        rot = old >> 59
+        return ((xorshifted >> rot) | (xorshifted << ((32 - rot) & 31))) & 0xFFFFFFFF
+
+    def next_f32(self) -> float:
+        """Uniform in [0, 1): u32 / 2^32, rounded to f32."""
+        import struct
+
+        v = self.next_u32() / 4294967296.0
+        return struct.unpack("<f", struct.pack("<f", v))[0]
+
+    def uniform(self, lo: float, hi: float) -> float:
+        """Uniform in [lo, hi) as f32 (single rounding after fma-free math)."""
+        import struct
+
+        v = lo + (hi - lo) * (self.next_u32() / 4294967296.0)
+        return struct.unpack("<f", struct.pack("<f", v))[0]
+
+    def below(self, n: int) -> int:
+        """Uniform integer in [0, n) via simple modulo (bias acceptable for
+        dataset jitter; identical on both sides)."""
+        return self.next_u32() % n

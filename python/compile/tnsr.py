@@ -1,0 +1,105 @@
+"""TNSR — tiny binary tensor container shared between Python (writer at
+artifact-build time) and Rust (`rust/src/io/tnsr.rs`, reader + writer).
+
+Layout (all integers little-endian):
+
+    magic   b"TNSR"
+    version u32 (=1)
+    count   u32
+    count * entry:
+        name_len u32, name utf-8 bytes
+        dtype    u8   (0 = f32, 1 = i32)
+        ndim     u32
+        dims     u32 * ndim
+        offset   u64  (absolute file offset of the raw data)
+        nbytes   u64
+    raw data blobs (contiguous, 8-byte aligned, row-major / C order)
+"""
+
+from __future__ import annotations
+
+import struct
+
+import numpy as np
+
+MAGIC = b"TNSR"
+VERSION = 1
+DT_F32 = 0
+DT_I32 = 1
+
+_DTYPES = {DT_F32: np.float32, DT_I32: np.int32}
+_CODES = {np.dtype(np.float32): DT_F32, np.dtype(np.int32): DT_I32}
+
+
+def _align8(n: int) -> int:
+    return (n + 7) & ~7
+
+
+def write_tnsr(path: str, tensors: dict[str, np.ndarray]) -> None:
+    """Write an ordered name→array mapping to *path*."""
+    items = []
+    for name, arr in tensors.items():
+        arr = np.ascontiguousarray(arr)
+        if arr.dtype not in _CODES:
+            raise TypeError(f"{name}: unsupported dtype {arr.dtype}")
+        items.append((name, arr))
+
+    # First pass: compute header size.
+    header = len(MAGIC) + 4 + 4
+    for name, arr in items:
+        header += 4 + len(name.encode()) + 1 + 4 + 4 * arr.ndim + 8 + 8
+    data_start = _align8(header)
+
+    # Second pass: assign offsets.
+    offsets = []
+    off = data_start
+    for _, arr in items:
+        offsets.append(off)
+        off = _align8(off + arr.nbytes)
+
+    with open(path, "wb") as f:
+        f.write(MAGIC)
+        f.write(struct.pack("<II", VERSION, len(items)))
+        for (name, arr), data_off in zip(items, offsets):
+            nb = name.encode()
+            f.write(struct.pack("<I", len(nb)))
+            f.write(nb)
+            f.write(struct.pack("<B", _CODES[arr.dtype]))
+            f.write(struct.pack("<I", arr.ndim))
+            for d in arr.shape:
+                f.write(struct.pack("<I", d))
+            f.write(struct.pack("<QQ", data_off, arr.nbytes))
+        for (name, arr), data_off in zip(items, offsets):
+            pad = data_off - f.tell()
+            assert pad >= 0
+            f.write(b"\0" * pad)
+            f.write(arr.tobytes())
+
+
+def read_tnsr(path: str) -> dict[str, np.ndarray]:
+    """Read a TNSR file back into an ordered name→array mapping."""
+    with open(path, "rb") as f:
+        blob = f.read()
+    if blob[:4] != MAGIC:
+        raise ValueError(f"{path}: bad magic {blob[:4]!r}")
+    version, count = struct.unpack_from("<II", blob, 4)
+    if version != VERSION:
+        raise ValueError(f"{path}: unsupported version {version}")
+    pos = 12
+    out: dict[str, np.ndarray] = {}
+    for _ in range(count):
+        (name_len,) = struct.unpack_from("<I", blob, pos)
+        pos += 4
+        name = blob[pos : pos + name_len].decode()
+        pos += name_len
+        dtype_code = blob[pos]
+        pos += 1
+        (ndim,) = struct.unpack_from("<I", blob, pos)
+        pos += 4
+        dims = struct.unpack_from(f"<{ndim}I", blob, pos)
+        pos += 4 * ndim
+        off, nbytes = struct.unpack_from("<QQ", blob, pos)
+        pos += 16
+        arr = np.frombuffer(blob, dtype=_DTYPES[dtype_code], count=nbytes // 4, offset=off)
+        out[name] = arr.reshape(dims).copy()
+    return out

@@ -1,0 +1,131 @@
+"""TPU performance estimator for the L1 Pallas kernels (DESIGN.md §8).
+
+The kernels run under ``interpret=True`` on CPU-PJRT, so their wallclock
+says nothing about TPU behaviour. This module computes the *structural*
+performance model instead: per-kernel VMEM footprint, MXU utilization, and
+the HBM-bandwidth saving that quantized weight storage would buy — the
+quantities EXPERIMENTS.md §Perf reports for Layer 1.
+
+Model assumptions (TPU v4-ish, per core):
+    VMEM        = 16 MiB usable scratchpad
+    MXU         = 128×128 systolic array, bf16/f32 mac per cycle
+    HBM BW      ≈ 1.2 TB/s
+
+Usage:  python -m compile.tpu_estimate [--json out.json]
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+
+from .kernels.fake_quant import BLOCK_ROWS, LANES
+from .kernels.qmatmul import BK, BM, BN
+from . import model as M
+
+VMEM_BYTES = 16 * 2**20
+MXU_DIM = 128
+HBM_GBPS = 1200.0
+
+
+def fake_quant_estimate(n_elements: int) -> dict:
+    """VMEM + traffic model of the tiled fake-quant kernel."""
+    block_elems = BLOCK_ROWS * LANES
+    # in-block + out-block + scalars, double-buffered (in-flight copy)
+    vmem = 2 * (2 * block_elems * 4) + 4 * 4
+    rows = -(-n_elements // LANES)
+    grid = -(-rows // BLOCK_ROWS)
+    return {
+        "kernel": "fake_quant",
+        "elements": n_elements,
+        "grid": grid,
+        "block_shape": [BLOCK_ROWS, LANES],
+        "vmem_bytes": vmem,
+        "vmem_utilization": vmem / VMEM_BYTES,
+        # elementwise: one read + one write of the tensor
+        "hbm_bytes": 2 * n_elements * 4,
+        "flops_per_element": 6,  # sub, mul, floor, clamp(2), fma
+        "mxu_used": False,
+    }
+
+
+def qmatmul_estimate(m: int, k: int, n: int, bits: float) -> dict:
+    """VMEM/MXU/traffic model of the fused dequant-matmul kernel."""
+    # tiles resident per grid step: x(bm,bk), w(bk,bn), out(bm,bn), ×2 for
+    # double buffering on the streaming operands
+    vmem = (2 * BM * BK + 2 * BK * BN + BM * BN) * 4 + 4 * 4
+    gm, gk, gn = -(-m // BM), -(-k // BK), -(-n // BN)
+    flops = 2.0 * m * k * n
+    # MXU utilization = how full the 128×128 tiles are
+    eff_m = m / (gm * BM)
+    eff_k = k / (gk * BK)
+    eff_n = n / (gn * BN)
+    mxu_util = eff_m * eff_k * eff_n
+    # HBM traffic: weights move at `bits` instead of 32 — the paper's
+    # bandwidth argument mapped to the TPU memory hierarchy
+    w_bytes_fp32 = k * n * 4
+    w_bytes_q = k * n * bits / 8.0
+    x_bytes = m * k * 4 * gn  # x re-streamed per n-tile
+    out_bytes = m * n * 4
+    return {
+        "kernel": "qmatmul",
+        "mkn": [m, k, n],
+        "grid": [gm, gn, gk],
+        "block_shape": [BM, BK, BN],
+        "vmem_bytes": vmem,
+        "vmem_utilization": vmem / VMEM_BYTES,
+        "flops": flops,
+        "mxu_tile_utilization": mxu_util,
+        "hbm_bytes_fp32_weights": w_bytes_fp32 + x_bytes + out_bytes,
+        "hbm_bytes_quantized_weights": w_bytes_q + x_bytes + out_bytes,
+        "weight_traffic_saving": 1.0 - w_bytes_q / w_bytes_fp32,
+        "mxu_used": True,
+    }
+
+
+def model_estimates(name: str, batch: int = 250, bits: float = 8.0) -> list[dict]:
+    """Estimates for every kernel instance in one model's qforward."""
+    model = M.MODELS[name]()
+    out = []
+    for layer in M.weighted_layers(model):
+        if layer["kind"] == "dense":
+            est = qmatmul_estimate(batch, layer["cin"], layer["cout"], bits)
+        else:
+            k = layer["k"]
+            n_elem = k * k * layer["cin"] * layer["cout"]
+            est = fake_quant_estimate(n_elem)
+        est["layer"] = layer["name"]
+        est["model"] = name
+        out.append(est)
+    return out
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--json", default=None, help="write estimates to this path")
+    ap.add_argument("--batch", type=int, default=250)
+    ap.add_argument("--bits", type=float, default=8.0)
+    args = ap.parse_args(argv)
+
+    all_est = []
+    for name in M.MODELS:
+        all_est += model_estimates(name, args.batch, args.bits)
+    worst_vmem = max(e["vmem_utilization"] for e in all_est)
+    print(f"kernels analysed: {len(all_est)}")
+    print(f"worst-case VMEM utilization: {worst_vmem:.2%} of {VMEM_BYTES >> 20} MiB")
+    for e in all_est:
+        if e["kernel"] == "qmatmul":
+            print(
+                f"  {e['model']:>15}/{e['layer']:<6} qmatmul {e['mkn']}: "
+                f"VMEM {e['vmem_bytes'] / 1024:.0f} KiB, "
+                f"MXU tile util {e['mxu_tile_utilization']:.2%}, "
+                f"weight-traffic saving {e['weight_traffic_saving']:.0%}"
+            )
+    if args.json:
+        with open(args.json, "w") as f:
+            json.dump(all_est, f, indent=1)
+        print(f"wrote {args.json}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,87 @@
+"""Build-time training for the mini model zoo (hand-rolled Adam in JAX).
+
+Runs once inside ``make artifacts``; produces trained parameters that are
+frozen into ``artifacts/<model>/weights.tnsr``. Python never trains (or
+runs) on the request path — the Rust coordinator only consumes the frozen
+weights plus lowered HLO.
+"""
+
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import model as M
+
+LR = 1e-3
+BETA1, BETA2, EPS = 0.9, 0.999, 1e-8
+BATCH = 128
+EPOCHS = 25
+
+
+def cross_entropy(logits, labels):
+    logz = jax.nn.log_softmax(logits)
+    return -jnp.mean(jnp.take_along_axis(logz, labels[:, None], axis=1))
+
+
+def accuracy(logits, labels):
+    return jnp.mean((jnp.argmax(logits, axis=1) == labels).astype(jnp.float32))
+
+
+def make_train_step(model):
+    def loss_fn(params, x, y):
+        logits = M.forward(model, params, x)
+        return cross_entropy(logits, y)
+
+    @jax.jit
+    def step(params, m, v, t, x, y):
+        loss, grads = jax.value_and_grad(loss_fn)(params, x, y)
+        lr_t = LR * jnp.sqrt(1.0 - BETA2**t) / (1.0 - BETA1**t)
+        new_params, new_m, new_v = [], [], []
+        for p, g, mi, vi in zip(params, grads, m, v):
+            mi = BETA1 * mi + (1 - BETA1) * g
+            vi = BETA2 * vi + (1 - BETA2) * g * g
+            p = p - lr_t * mi / (jnp.sqrt(vi) + EPS)
+            new_params.append(p)
+            new_m.append(mi)
+            new_v.append(vi)
+        return new_params, new_m, new_v, loss
+
+    return step
+
+
+def train(model, xtr, ytr, xte, yte, epochs: int = EPOCHS, seed: int = 0, log=print):
+    """Train; returns (params, history dict)."""
+    params = M.init_params(model, seed)
+    m = [jnp.zeros_like(p) for p in params]
+    v = [jnp.zeros_like(p) for p in params]
+    step = make_train_step(model)
+
+    eval_fwd = jax.jit(lambda params, x: M.forward(model, params, x))
+    ntr = xtr.shape[0]
+    rng = np.random.RandomState(seed)
+    history = {"loss": [], "test_acc": [], "epochs": epochs}
+    t = 0
+    t0 = time.time()
+    for epoch in range(epochs):
+        perm = rng.permutation(ntr)
+        ep_loss = 0.0
+        nb = 0
+        for i in range(0, ntr - BATCH + 1, BATCH):
+            idx = perm[i : i + BATCH]
+            t += 1
+            params, m, v, loss = step(params, m, v, t, xtr[idx], ytr[idx])
+            ep_loss += float(loss)
+            nb += 1
+        te_acc = float(accuracy(eval_fwd(params, xte), yte))
+        history["loss"].append(ep_loss / max(nb, 1))
+        history["test_acc"].append(te_acc)
+        log(
+            f"[{model['name']}] epoch {epoch + 1}/{epochs} "
+            f"loss={ep_loss / max(nb, 1):.4f} test_acc={te_acc:.4f}"
+        )
+    history["train_seconds"] = time.time() - t0
+    return params, history

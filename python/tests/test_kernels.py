@@ -1,0 +1,129 @@
+"""L1 kernel correctness: Pallas fake_quant / qmatmul vs the pure-jnp
+oracle, with hypothesis sweeping shapes, bit-widths and value ranges."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels.fake_quant import fake_quant
+from compile.kernels.qmatmul import qmatmul
+from compile.kernels.ref import fake_quant_ref, qmatmul_ref
+
+SETTINGS = dict(max_examples=25, deadline=None)
+
+
+def rand(shape, seed, scale=1.0):
+    return (scale * np.random.RandomState(seed).randn(*shape)).astype(np.float32)
+
+
+# ----------------------------------------------------------------- fake_quant
+
+
+@settings(**SETTINGS)
+@given(
+    rows=st.integers(1, 300),
+    cols=st.integers(1, 70),
+    bits=st.sampled_from([0.0, 1.0, 2.0, 4.0, 8.0, 12.0, 16.0]),
+    seed=st.integers(0, 2**16),
+    scale=st.sampled_from([1e-3, 1.0, 50.0]),
+)
+def test_fake_quant_matches_ref(rows, cols, bits, seed, scale):
+    w = rand((rows, cols), seed, scale)
+    got = np.asarray(fake_quant(w, bits))
+    want = np.asarray(fake_quant_ref(w, bits))
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5 * scale)
+
+
+@settings(**SETTINGS)
+@given(n=st.integers(1, 4000), seed=st.integers(0, 2**16))
+def test_fake_quant_arbitrary_rank(n, seed):
+    # 1-D and 4-D shapes exercise the retile/pad/unpad path
+    w = rand((n,), seed)
+    np.testing.assert_allclose(
+        np.asarray(fake_quant(w, 5.0)), np.asarray(fake_quant_ref(w, 5.0)), atol=1e-6
+    )
+
+
+def test_fake_quant_4d_conv_kernel_shape():
+    w = rand((5, 5, 8, 16), 7)
+    got = np.asarray(fake_quant(w, 6.0))
+    want = np.asarray(fake_quant_ref(w, 6.0))
+    assert got.shape == (5, 5, 8, 16)
+    np.testing.assert_allclose(got, want, atol=1e-6)
+
+
+def test_fake_quant_identity_cases():
+    w = rand((64, 3), 1)
+    np.testing.assert_array_equal(np.asarray(fake_quant(w, 0.0)), w)
+    np.testing.assert_array_equal(np.asarray(fake_quant(w, -2.0)), w)
+    const = np.full((32,), 3.5, np.float32)
+    np.testing.assert_array_equal(np.asarray(fake_quant(const, 8.0)), const)
+
+
+def test_fake_quant_error_bounded_by_half_step():
+    w = rand((1000,), 3)
+    for bits in [2.0, 4.0, 8.0]:
+        q = np.asarray(fake_quant(w, bits))
+        step = (w.max() - w.min()) / 2**bits
+        assert np.max(np.abs(q - w)) <= step / 2 + 1e-6
+
+
+def test_fake_quant_level_count():
+    w = rand((5000,), 9)
+    for bits in [1.0, 2.0, 3.0, 4.0]:
+        q = np.asarray(fake_quant(w, bits))
+        assert len(np.unique(q)) <= 2**int(bits)
+
+
+def test_fake_quant_6db_per_bit():
+    w = rand((50_000,), 11)
+    e = {b: float(np.sum((np.asarray(fake_quant(w, b)) - w) ** 2)) for b in (6.0, 7.0, 8.0)}
+    assert e[6.0] / e[7.0] == pytest.approx(4.0, rel=0.15)
+    assert e[7.0] / e[8.0] == pytest.approx(4.0, rel=0.15)
+
+
+# ------------------------------------------------------------------- qmatmul
+
+
+@settings(**SETTINGS)
+@given(
+    m=st.integers(1, 150),
+    k=st.integers(1, 200),
+    n=st.integers(1, 150),
+    bits=st.sampled_from([0.0, 3.0, 8.0, 16.0]),
+    seed=st.integers(0, 2**16),
+)
+def test_qmatmul_matches_ref(m, k, n, bits, seed):
+    x = rand((m, k), seed)
+    w = rand((k, n), seed + 1)
+    got = np.asarray(qmatmul(x, w, bits))
+    want = np.asarray(qmatmul_ref(x, w, bits))
+    np.testing.assert_allclose(got, want, rtol=2e-4, atol=2e-4 * np.sqrt(k))
+
+
+def test_qmatmul_larger_than_tiles():
+    # all dims above the 128 tile: exercises the full grid + k-accumulation
+    x = rand((200, 300), 5)
+    w = rand((300, 170), 6)
+    got = np.asarray(qmatmul(x, w, 8.0))
+    want = np.asarray(qmatmul_ref(x, w, 8.0))
+    np.testing.assert_allclose(got, want, rtol=2e-4, atol=5e-3)
+
+
+def test_qmatmul_bits_zero_is_plain_matmul():
+    x = rand((32, 64), 2)
+    w = rand((64, 16), 3)
+    got = np.asarray(qmatmul(x, w, 0.0))
+    np.testing.assert_allclose(got, x @ w, rtol=1e-4, atol=1e-4)
+
+
+def test_qmatmul_jittable_with_traced_bits():
+    import jax
+
+    x = rand((16, 32), 4)
+    w = rand((32, 8), 5)
+    f = jax.jit(lambda b: qmatmul(x, w, b))
+    a = np.asarray(f(jnp.float32(4.0)))
+    b = np.asarray(qmatmul_ref(x, w, 4.0))
+    np.testing.assert_allclose(a, b, rtol=1e-4, atol=1e-4)

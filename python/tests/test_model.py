@@ -1,0 +1,113 @@
+"""L2 model zoo: shapes, parameter bookkeeping, manifest consistency, and
+agreement between the plain and Pallas-quantized forward paths."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import model as M
+
+
+@pytest.fixture(params=list(M.MODELS))
+def model(request):
+    return M.MODELS[request.param]()
+
+
+def test_forward_shape_and_finite(model):
+    p = M.init_params(model)
+    x = np.random.RandomState(0).rand(4, 16, 16, 1).astype(np.float32)
+    out = np.asarray(M.forward(model, p, x))
+    assert out.shape == (4, M.NUM_CLASSES)
+    assert np.isfinite(out).all()
+
+
+def test_param_specs_match_init(model):
+    p = M.init_params(model)
+    specs = M.param_specs(model)
+    assert len(p) == len(specs)
+    for arr, (name, shape) in zip(p, specs):
+        assert tuple(arr.shape) == shape, name
+
+
+def test_layer_sizes_count_weights_only(model):
+    sizes = M.layer_sizes(model)
+    specs = dict(M.param_specs(model))
+    wl = M.weighted_layers(model)
+    assert len(sizes) == len(wl)
+    for layer, s in zip(wl, sizes):
+        w_shape = specs[layer["name"] + ".w"]
+        assert s == int(np.prod(w_shape))
+
+
+def test_manifest_consistency(model):
+    man = M.manifest(model)
+    assert man["model"] == model["name"]
+    assert man["num_weighted_layers"] == len(M.weighted_layers(model))
+    assert man["total_quantizable_params"] == sum(M.layer_sizes(model))
+    # param indices must be 1..2k in order
+    idx = []
+    for l in man["layers"]:
+        if "param_idx_w" in l:
+            idx += [l["param_idx_w"], l["param_idx_b"]]
+    assert idx == list(range(1, len(idx) + 1))
+    # every input reference must resolve to an earlier layer or "input"
+    seen = {"input"}
+    for l in man["layers"]:
+        for inp in l["inputs"]:
+            assert inp in seen, f"{l['name']} references unseen {inp}"
+        seen.add(l["name"])
+    assert man["output"] in seen
+
+
+def test_qforward_high_bits_matches_plain(model):
+    p = M.init_params(model)
+    x = np.random.RandomState(1).rand(4, 16, 16, 1).astype(np.float32)
+    plain = np.asarray(M.forward(model, p, x))
+    nwl = len(M.weighted_layers(model))
+    q16 = np.asarray(M.forward(model, p, x, bits=jnp.full((nwl,), 16.0)))
+    np.testing.assert_allclose(plain, q16, rtol=1e-2, atol=2e-2)
+    # bits=0 must be exact identity
+    q0 = np.asarray(M.forward(model, p, x, bits=jnp.zeros((nwl,))))
+    np.testing.assert_allclose(plain, q0, rtol=1e-5, atol=1e-5)
+
+
+def test_qforward_low_bits_degrades(model):
+    p = M.init_params(model)
+    x = np.random.RandomState(2).rand(8, 16, 16, 1).astype(np.float32)
+    plain = np.asarray(M.forward(model, p, x))
+    nwl = len(M.weighted_layers(model))
+    q2 = np.asarray(M.forward(model, p, x, bits=jnp.full((nwl,), 2.0)))
+    # 2-bit quantization must visibly perturb the logits
+    assert np.max(np.abs(plain - q2)) > 1e-3
+
+
+def test_per_layer_bits_vector_respected():
+    model = M.MODELS["mini_vgg"]()
+    p = M.init_params(model)
+    x = np.random.RandomState(3).rand(4, 16, 16, 1).astype(np.float32)
+    nwl = len(M.weighted_layers(model))
+    plain = np.asarray(M.forward(model, p, x))
+    # quantizing only layer 0 at 2 bits ≠ quantizing only the last layer
+    b_first = jnp.zeros((nwl,)).at[0].set(2.0)
+    b_last = jnp.zeros((nwl,)).at[nwl - 1].set(2.0)
+    out_first = np.asarray(M.forward(model, p, x, bits=b_first))
+    out_last = np.asarray(M.forward(model, p, x, bits=b_last))
+    assert np.max(np.abs(out_first - plain)) > 0
+    assert np.max(np.abs(out_last - plain)) > 0
+    assert np.max(np.abs(out_first - out_last)) > 1e-6
+
+
+def test_alexnet_is_fc_dominated():
+    # the structural property DESIGN.md claims for the Fig. 6 regime
+    model = M.MODELS["mini_alexnet"]()
+    sizes = M.layer_sizes(model)
+    wl = M.weighted_layers(model)
+    fc = sum(s for l, s in zip(wl, sizes) if l["kind"] == "dense")
+    assert fc / sum(sizes) > 0.6
+    assert max(sizes) / min(sizes) > 500  # 3 orders of magnitude spread
+
+
+def test_resnet_has_1x1_bottlenecks():
+    model = M.MODELS["mini_resnet"]()
+    ks = [l["k"] for l in M.weighted_layers(model) if l["kind"] == "conv"]
+    assert ks.count(1) >= 6  # the Fig. 6 discussion point

@@ -1,0 +1,63 @@
+"""qconv Pallas kernel vs the lax.conv + fake-quant oracle."""
+
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels.qconv import qconv2d, qconv2d_ref
+
+
+def rand(shape, seed):
+    return np.random.RandomState(seed).randn(*shape).astype(np.float32)
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    n=st.integers(1, 6),
+    hw=st.integers(4, 12),
+    cin=st.integers(1, 8),
+    cout=st.integers(1, 12),
+    k=st.sampled_from([1, 3]),
+    bits=st.sampled_from([0.0, 4.0, 8.0]),
+    seed=st.integers(0, 2**16),
+)
+def test_qconv_matches_oracle(n, hw, cin, cout, k, bits, seed):
+    pad = k // 2
+    x = rand((n, hw, hw, cin), seed)
+    w = rand((k, k, cin, cout), seed + 1)
+    b = rand((cout,), seed + 2)
+    got = np.asarray(qconv2d(x, w, b, bits, stride=1, pad=pad))
+    want = np.asarray(qconv2d_ref(x, w, b, bits, stride=1, pad=pad))
+    assert got.shape == want.shape
+    np.testing.assert_allclose(got, want, rtol=2e-4, atol=2e-3)
+
+
+def test_qconv_stride_2():
+    x = rand((2, 8, 8, 3), 1)
+    w = rand((3, 3, 3, 5), 2)
+    b = np.zeros(5, np.float32)
+    got = np.asarray(qconv2d(x, w, b, 6.0, stride=2, pad=1))
+    want = np.asarray(qconv2d_ref(x, w, b, 6.0, stride=2, pad=1))
+    assert got.shape == (2, 4, 4, 5)
+    np.testing.assert_allclose(got, want, rtol=2e-4, atol=2e-3)
+
+
+def test_qconv_5x5_pad2():
+    x = rand((1, 8, 8, 4), 3)
+    w = rand((5, 5, 4, 8), 4)
+    b = rand((8,), 5)
+    got = np.asarray(qconv2d(x, w, b, 8.0, stride=1, pad=2))
+    want = np.asarray(qconv2d_ref(x, w, b, 8.0, stride=1, pad=2))
+    assert got.shape == (1, 8, 8, 8)
+    np.testing.assert_allclose(got, want, rtol=2e-4, atol=2e-3)
+
+
+def test_qconv_matches_rust_im2col_convention():
+    # identity 1x1 kernel: qconv == input channel mix, validating the
+    # (kh, kw, c) column order shared with rust nn::im2col
+    x = rand((1, 4, 4, 2), 6)
+    w = np.zeros((1, 1, 2, 2), np.float32)
+    w[0, 0, 0, 0] = 1.0
+    w[0, 0, 1, 1] = 1.0
+    b = np.zeros(2, np.float32)
+    got = np.asarray(qconv2d(x, w, b, 0.0))
+    np.testing.assert_allclose(got, x, atol=1e-6)

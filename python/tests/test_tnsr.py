@@ -1,0 +1,72 @@
+"""TNSR container: roundtrip, ordering, dtype handling, error paths."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.tnsr import read_tnsr, write_tnsr
+
+
+def test_roundtrip(tmp_path):
+    path = str(tmp_path / "t.tnsr")
+    tensors = {
+        "w": np.random.RandomState(0).randn(3, 4, 5).astype(np.float32),
+        "labels": np.arange(-5, 5, dtype=np.int32),
+        "scalarish": np.array([1.5], np.float32),
+    }
+    write_tnsr(path, tensors)
+    back = read_tnsr(path)
+    assert list(back) == list(tensors)  # order preserved
+    for k in tensors:
+        np.testing.assert_array_equal(back[k], tensors[k])
+        assert back[k].dtype == tensors[k].dtype
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    shapes=st.lists(
+        st.lists(st.integers(1, 20), min_size=1, max_size=4), min_size=1, max_size=5
+    ),
+    seed=st.integers(0, 2**16),
+)
+def test_roundtrip_random(tmp_path_factory, shapes, seed):
+    path = str(tmp_path_factory.mktemp("tnsr") / "r.tnsr")
+    rs = np.random.RandomState(seed)
+    tensors = {f"t{i}": rs.randn(*s).astype(np.float32) for i, s in enumerate(shapes)}
+    write_tnsr(path, tensors)
+    back = read_tnsr(path)
+    for k in tensors:
+        np.testing.assert_array_equal(back[k], tensors[k])
+
+
+def test_rejects_unsupported_dtype(tmp_path):
+    with pytest.raises(TypeError):
+        write_tnsr(str(tmp_path / "bad.tnsr"), {"x": np.zeros(3, np.float64)})
+
+
+def test_rejects_bad_magic(tmp_path):
+    path = tmp_path / "bad.tnsr"
+    path.write_bytes(b"NOPE" + b"\0" * 16)
+    with pytest.raises(ValueError):
+        read_tnsr(str(path))
+
+
+def test_data_is_8_byte_aligned(tmp_path):
+    path = str(tmp_path / "a.tnsr")
+    write_tnsr(
+        path,
+        {"a": np.ones(3, np.float32), "b": np.ones(5, np.float32)},
+    )
+    import struct
+
+    blob = open(path, "rb").read()
+    # walk entries, check offsets
+    pos = 12
+    for _ in range(2):
+        (nl,) = struct.unpack_from("<I", blob, pos)
+        pos += 4 + nl + 1
+        (nd,) = struct.unpack_from("<I", blob, pos)
+        pos += 4 + 4 * nd
+        off, nbytes = struct.unpack_from("<QQ", blob, pos)
+        pos += 16
+        assert off % 8 == 0

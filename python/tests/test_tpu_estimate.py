@@ -1,0 +1,35 @@
+"""Structural sanity of the TPU performance model (DESIGN.md §8)."""
+
+from compile import tpu_estimate as TE
+
+
+def test_fake_quant_blocks_fit_vmem():
+    for n in [144, 65536, 131072, 4 << 20]:
+        e = TE.fake_quant_estimate(n)
+        assert e["vmem_utilization"] < 0.05  # tiny tiles, by design
+        assert e["grid"] >= 1
+        assert e["hbm_bytes"] == 2 * n * 4
+
+
+def test_qmatmul_vmem_and_mxu():
+    e = TE.qmatmul_estimate(250, 512, 256, 8.0)
+    assert e["vmem_bytes"] < TE.VMEM_BYTES
+    assert 0 < e["mxu_tile_utilization"] <= 1.0
+    assert e["flops"] == 2.0 * 250 * 512 * 256
+    # 8-bit weights move 4x less than fp32
+    assert abs(e["weight_traffic_saving"] - 0.75) < 1e-9
+
+
+def test_qmatmul_full_tiles_are_fully_utilized():
+    e = TE.qmatmul_estimate(256, 256, 256, 8.0)
+    assert e["mxu_tile_utilization"] == 1.0
+
+
+def test_model_estimates_cover_all_weighted_layers():
+    from compile import model as M
+
+    for name in M.MODELS:
+        ests = TE.model_estimates(name)
+        assert len(ests) == len(M.weighted_layers(M.MODELS[name]()))
+        for e in ests:
+            assert e["vmem_utilization"] < 0.2, e

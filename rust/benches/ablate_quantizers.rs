@@ -1,0 +1,93 @@
+//! Ablation — quantizer family at a fixed bit budget: the paper's uniform
+//! midpoint quantizer vs k-means codebooks (Deep Compression) vs
+//! stochastic rounding (Gupta et al. 2015), plus the entropy-coded size
+//! each allocation would ship at (the Deep Compression Huffman stage).
+//!
+//! Shape to expect: k-means ⪅ uniform in noise (learned codebook) with
+//! similar accuracy at moderate bits; stochastic rounding ~2× the noise →
+//! earlier accuracy cliff; entropy coding shaves 10-30 % off Σ sᵢ·bᵢ.
+
+use adaq::bench_support as bs;
+use adaq::coordinator::Session;
+use adaq::io::csv::CsvWriter;
+use adaq::quant::{
+    entropy_coded_bits, fake_quant, kmeans_fake_quant, stochastic_fake_quant, Allocator,
+};
+use adaq::report::{markdown_table, Align};
+use adaq::rng::Pcg32;
+use adaq::tensor::Tensor;
+
+fn main() {
+    if !bs::artifacts_available() {
+        return;
+    }
+    let dir = bs::report_dir("ablate_quantizers");
+    let mut report = String::from("# Ablation — quantizer family at equal bit budget\n\n");
+    for model in bs::bench_models() {
+        let (session, cal) = match bs::session_with_calibration(&model) {
+            Ok(v) => v,
+            Err(e) => {
+                eprintln!("skip {model}: {e}");
+                continue;
+            }
+        };
+        let stats = cal.layer_stats();
+        let nwl = stats.len();
+        let mut csv = CsvWriter::create(
+            dir.join(format!("{model}.csv")),
+            &["bits", "uniform_acc", "kmeans_acc", "stochastic_acc"],
+        )
+        .unwrap();
+        let mut rows = Vec::new();
+        for bits in [2.0f32, 3.0, 4.0, 6.0, 8.0] {
+            // quantize EVERY layer host-side with each family
+            let mut apply = |f: &mut dyn FnMut(&Tensor, usize) -> Tensor| -> f64 {
+                let mut overrides = Vec::new();
+                let mut tensors = Vec::new();
+                for qi in 0..nwl {
+                    let (pidx, w) = session.layer_weight(qi).unwrap();
+                    tensors.push((pidx, f(w, qi)));
+                }
+                for (pidx, t) in &tensors {
+                    overrides.push((*pidx, t));
+                }
+                session.eval_with_overrides(&overrides).unwrap().accuracy
+            };
+            let uni = apply(&mut |w, _| fake_quant(w, bits));
+            let km = apply(&mut |w, qi| kmeans_fake_quant(w, bits as u32, qi as u64));
+            let mut rng = Pcg32::new(42);
+            let sto = apply(&mut |w, _| stochastic_fake_quant(w, bits, &mut rng));
+            csv.row(&[bits as f64, uni, km, sto]).unwrap();
+            rows.push(vec![
+                format!("{bits}"),
+                format!("{uni:.4}"),
+                format!("{km:.4}"),
+                format!("{sto:.4}"),
+            ]);
+        }
+        csv.flush().unwrap();
+        let table = markdown_table(
+            &["bits", "uniform", "kmeans", "stochastic"],
+            &[Align::Right; 4],
+            &rows,
+        );
+
+        // entropy-coded size of the adaptive allocation at b1 = 8
+        let alloc = Allocator::Adaptive.allocate(&stats, 8.0, &vec![true; nwl], 16.0);
+        let raw_bits = alloc.size_bits(&stats);
+        let mut coded = 0f64;
+        for qi in 0..nwl {
+            let (_, w) = session.layer_weight(qi).unwrap();
+            coded += entropy_coded_bits(w, alloc.bits[qi] as f32);
+        }
+        let entropy_line = format!(
+            "adaptive@b1=8: raw {:.1} KiB → entropy-coded {:.1} KiB ({:.1}% saved)\n",
+            raw_bits / 8192.0,
+            coded / 8192.0,
+            (1.0 - coded / raw_bits) * 100.0
+        );
+        println!("\n== {model} ==\n{table}\n{entropy_line}");
+        report.push_str(&format!("## {model}\n\n{table}\n{entropy_line}\n"));
+    }
+    bs::write_report("ablate_quantizers", &report);
+}

@@ -1,0 +1,87 @@
+//! Extension — composing adaptive quantization with magnitude pruning
+//! (the paper's conclusion: the two compress "without interfering"; Han,
+//! Mao & Dally 2015). For each pruning level, prune host-side, re-quantize
+//! with the adaptive allocation, and report accuracy + CSR-style size
+//! (b value bits + 4 relative-index bits per surviving weight).
+//!
+//! Deliberate scope cut (recorded in EXPERIMENTS.md): Deep Compression
+//! *retrains* between the pruning and quantization stages; our pipeline
+//! is strictly post-training, so this bench measures the composition
+//! *without* retraining — expect the interference to appear much earlier
+//! (tens of percent pruning) than the paper's retrained 90 %+. The bench
+//! exists to quantify exactly that gap.
+
+use adaq::bench_support as bs;
+use adaq::io::csv::CsvWriter;
+use adaq::quant::{fake_quant, magnitude_prune, pruned_quantized_bits, Allocator};
+use adaq::report::{markdown_table, Align};
+
+fn main() {
+    if !bs::artifacts_available() {
+        return;
+    }
+    let dir = bs::report_dir("ext_prune_quant");
+    let mut report = String::from("# Extension — pruning × adaptive quantization\n\n");
+    for model in bs::bench_models() {
+        let (session, cal) = match bs::session_with_calibration(&model) {
+            Ok(v) => v,
+            Err(e) => {
+                eprintln!("skip {model}: {e}");
+                continue;
+            }
+        };
+        let stats = cal.layer_stats();
+        let nwl = stats.len();
+        let alloc = Allocator::Adaptive.allocate(&stats, 8.0, &vec![true; nwl], 16.0);
+        let fp32_bits = session.artifacts.manifest.fp32_bytes() * 8.0;
+
+        let mut csv = CsvWriter::create(
+            dir.join(format!("{model}.csv")),
+            &["prune_frac", "accuracy", "size_kib", "compression_x"],
+        )
+        .unwrap();
+        let mut rows = Vec::new();
+        for frac in [0.0f64, 0.3, 0.5, 0.7, 0.9] {
+            let mut overrides_data = Vec::new();
+            let mut size_bits = 0f64;
+            for qi in 0..nwl {
+                let (pidx, w) = session.layer_weight(qi).unwrap();
+                let b = alloc.bits[qi];
+                let pruned = magnitude_prune(w, frac);
+                let quantized = fake_quant(&pruned, b as f32);
+                size_bits += if frac > 0.0 {
+                    pruned_quantized_bits(&pruned, b, 4.0)
+                } else {
+                    stats[qi].s * b
+                };
+                overrides_data.push((pidx, quantized));
+            }
+            let overrides: Vec<(usize, &adaq::tensor::Tensor)> =
+                overrides_data.iter().map(|(p, t)| (*p, t)).collect();
+            let out = session.eval_with_overrides(&overrides).unwrap();
+            let comp = fp32_bits / size_bits;
+            csv.row(&[frac, out.accuracy, size_bits / 8192.0, comp]).unwrap();
+            rows.push(vec![
+                format!("{:.0}%", frac * 100.0),
+                format!("{:.4}", out.accuracy),
+                format!("{:.1}", size_bits / 8192.0),
+                format!("{comp:.1}x"),
+            ]);
+        }
+        csv.flush().unwrap();
+        let table = markdown_table(
+            &["pruned", "accuracy", "size KiB", "vs fp32"],
+            &[Align::Right; 4],
+            &rows,
+        );
+        println!(
+            "\n== {model} (baseline acc {:.4}) ==\n{table}",
+            session.baseline().accuracy
+        );
+        report.push_str(&format!(
+            "## {model} (baseline {:.4})\n\n{table}\n",
+            session.baseline().accuracy
+        ));
+    }
+    bs::write_report("ext_prune_quant", &report);
+}

@@ -1,0 +1,15 @@
+//! Fig. 6 — model size vs accuracy, **convolutional layers only** (FC
+//! frozen at 16 bits, matching the paper's comparison protocol against
+//! the SQNR method, which does not handle FC layers).
+//!
+//! Expected shape: adaptive dominates SQNR dominates equal, with SQNR's
+//! edge over equal vanishing on the 1×1-bottleneck model (mini_resnet) —
+//! the paper's Fig. 6 discussion point.
+
+fn main() {
+    adaq::bench_support::run_figure_sweep(
+        "fig6_conv_only",
+        true,
+        "Fig. 6 — size vs accuracy (conv layers quantized, FC @ 16 bits)",
+    );
+}

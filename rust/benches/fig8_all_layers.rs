@@ -1,0 +1,14 @@
+//! Fig. 8 (supplementary) — model size vs accuracy with **all** weighted
+//! layers quantized (conv + FC).
+//!
+//! Expected shape: same ordering as Fig. 6 with a larger adaptive margin
+//! on FC-heavy models (the paper reports ~40% smaller at matched accuracy
+//! for AlexNet/VGG, 15-20% for GoogLeNet/ResNet-50).
+
+fn main() {
+    adaq::bench_support::run_figure_sweep(
+        "fig8_all_layers",
+        false,
+        "Fig. 8 — size vs accuracy (all layers quantized)",
+    );
+}

@@ -1,0 +1,133 @@
+//! PERF — hot-path micro/macro benches (EXPERIMENTS.md §Perf):
+//!
+//! * PJRT forward throughput (batch 250 and 1) vs the pure-Rust `nn`
+//!   substrate — the runtime must beat the CPU baseline comfortably or
+//!   L3 dispatch is the bottleneck;
+//! * Pallas `qforward` overhead over the plain forward (the price of
+//!   on-the-fly fake-quant on the request path);
+//! * host-side quantizer throughput (GB/s) and allocator latency.
+
+use adaq::bench_support as bs;
+use adaq::dataset::Dataset;
+use adaq::nn::GraphExecutor;
+use adaq::quant::{fake_quant_into, Allocator, LayerStats, QuantRange};
+use adaq::report::{markdown_table, Align};
+use adaq::rng::{fill_normal, Pcg32};
+use adaq::tensor::Tensor;
+use adaq::util::Timer;
+
+fn time_n<F: FnMut()>(n: usize, mut f: F) -> f64 {
+    // warmup
+    f();
+    let t = Timer::start();
+    for _ in 0..n {
+        f();
+    }
+    t.seconds() / n as f64
+}
+
+fn main() {
+    if !bs::artifacts_available() {
+        return;
+    }
+    let root = bs::artifacts_root();
+    let mut rows = Vec::new();
+
+    // ---- host-side quantizer throughput (no artifacts needed) ----
+    {
+        let mut rng = Pcg32::new(1);
+        let mut data = vec![0f32; 4 << 20];
+        fill_normal(&mut rng, &mut data);
+        let t = Tensor::from_vec(&[data.len()], data).unwrap();
+        let range = QuantRange::of(&t);
+        let mut out = vec![0f32; t.len()];
+        let per = time_n(10, || fake_quant_into(t.data(), range, 8.0, &mut out));
+        rows.push(vec![
+            "fake_quant host (4Mi f32)".into(),
+            format!("{:.2} ms", per * 1e3),
+            format!("{:.2} GB/s", (t.len() * 4) as f64 / per / 1e9),
+        ]);
+    }
+
+    // ---- allocator latency ----
+    {
+        let stats: Vec<LayerStats> = (0..64)
+            .map(|i| LayerStats {
+                name: format!("l{i}"),
+                s: 1000.0 * (i + 1) as f64,
+                p: 100.0 + i as f64,
+                t: 1.0 + (i % 7) as f64,
+            })
+            .collect();
+        let mask = vec![true; stats.len()];
+        let per = time_n(1000, || {
+            let _ = Allocator::Adaptive.allocate(&stats, 8.0, &mask, 16.0);
+        });
+        rows.push(vec![
+            "adaptive allocate (64 layers)".into(),
+            format!("{:.2} µs", per * 1e6),
+            String::new(),
+        ]);
+    }
+
+    // ---- per-model forward paths ----
+    for model in bs::bench_models() {
+        let session = match adaq::coordinator::Session::open(&root, &model, bs::bench_batch()) {
+            Ok(s) => s,
+            Err(e) => {
+                eprintln!("skip {model}: {e}");
+                continue;
+            }
+        };
+        let manifest = &session.artifacts.manifest;
+        let nwl = manifest.num_weighted_layers;
+        let test = Dataset::load(&root, "test").unwrap();
+        let n_imgs = (test.len() / session.batch_size()) * session.batch_size();
+
+        // full-dataset fp32 forward (cached-buffer hot path)
+        let per_fwd = time_n(3, || {
+            let _ = session.eval_with_overrides(&[]).unwrap();
+        });
+        rows.push(vec![
+            format!("{model} forward (PJRT, b{})", session.batch_size()),
+            format!("{:.1} ms/dataset", per_fwd * 1e3),
+            format!("{:.0} img/s", n_imgs as f64 / per_fwd),
+        ]);
+
+        // full-dataset Pallas qforward
+        let bits = vec![8.0f32; nwl];
+        let per_q = time_n(3, || {
+            let _ = session.eval_qbits(&bits).unwrap();
+        });
+        rows.push(vec![
+            format!("{model} qforward (Pallas fake-quant)"),
+            format!("{:.1} ms/dataset", per_q * 1e3),
+            format!("{:.2}x of fp32 fwd", per_q / per_fwd),
+        ]);
+
+        // pure-Rust nn baseline on one batch, scaled to dataset
+        let exec = GraphExecutor::new(manifest);
+        let params = session.artifacts.weights.tensors();
+        let xb = test.batch(0, session.batch_size()).unwrap();
+        let per_rust_batch = time_n(2, || {
+            let _ = exec.forward(&xb, &params).unwrap();
+        });
+        let per_rust = per_rust_batch * (n_imgs / session.batch_size()) as f64;
+        rows.push(vec![
+            format!("{model} forward (pure-rust nn)"),
+            format!("{:.1} ms/dataset", per_rust * 1e3),
+            format!("PJRT is {:.1}x faster", per_rust / per_fwd),
+        ]);
+    }
+
+    let table = markdown_table(
+        &["path", "latency", "notes"],
+        &[Align::Left, Align::Right, Align::Left],
+        &rows,
+    );
+    println!("{table}");
+    bs::write_report(
+        "perf_hotpath",
+        &format!("# PERF — hot-path benches\n\n{table}\n"),
+    );
+}

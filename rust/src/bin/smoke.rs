@@ -1,0 +1,38 @@
+// Throwaway smoke: load an HLO module plus a packed inputs blob
+// (u32 count, then per tensor: u32 ndim, u32 dims..., f32 data) and execute.
+use anyhow::Result;
+
+fn main() -> Result<()> {
+    let hlo = std::env::args().nth(1).unwrap_or("/tmp/qfwd_resnet.hlo.txt".into());
+    let inputs = std::env::args().nth(2).unwrap_or("/tmp/qfwd_inputs.bin".into());
+    let blob = std::fs::read(&inputs)?;
+    let mut pos = 0usize;
+    let rd_u32 = |b: &[u8], p: &mut usize| {
+        let v = u32::from_le_bytes(b[*p..*p + 4].try_into().unwrap());
+        *p += 4;
+        v
+    };
+    let count = rd_u32(&blob, &mut pos);
+    let mut lits = Vec::new();
+    for _ in 0..count {
+        let ndim = rd_u32(&blob, &mut pos) as usize;
+        let dims: Vec<i64> = (0..ndim).map(|_| rd_u32(&blob, &mut pos) as i64).collect();
+        let n: i64 = dims.iter().product::<i64>().max(1);
+        let mut data = vec![0f32; n as usize];
+        for v in data.iter_mut() {
+            *v = f32::from_le_bytes(blob[pos..pos + 4].try_into().unwrap());
+            pos += 4;
+        }
+        let lit = xla::Literal::vec1(&data);
+        lits.push(if ndim > 0 { lit.reshape(&dims)? } else { lit.reshape(&[])? });
+    }
+    let client = xla::PjRtClient::cpu()?;
+    let proto = xla::HloModuleProto::from_text_file(&hlo)?;
+    let exe = client.compile(&xla::XlaComputation::from_proto(&proto))?;
+    let t0 = std::time::Instant::now();
+    let r = exe.execute::<xla::Literal>(&lits)?[0][0].to_literal_sync()?;
+    let out = r.to_tuple1()?;
+    let v = out.to_vec::<f32>()?;
+    println!("exec {:?} out[0..4]={:?}", t0.elapsed(), &v[..4]);
+    Ok(())
+}

@@ -1,0 +1,134 @@
+//! Hand-rolled CLI argument parsing (the offline crate set has no clap).
+//!
+//! Grammar: `adaq <command> [--flag value]... [--switch]...`
+
+use std::collections::BTreeMap;
+
+use crate::{Error, Result};
+
+/// Parsed command line.
+#[derive(Clone, Debug, Default)]
+pub struct Args {
+    pub command: String,
+    pub flags: BTreeMap<String, String>,
+    pub switches: Vec<String>,
+}
+
+impl Args {
+    /// Parse raw argv (without the program name).
+    pub fn parse(argv: &[String]) -> Result<Args> {
+        let mut out = Args::default();
+        let mut it = argv.iter().peekable();
+        match it.next() {
+            Some(cmd) if !cmd.starts_with("--") => out.command = cmd.clone(),
+            Some(cmd) => return Err(Error::Cli(format!("expected command, got {cmd}"))),
+            None => return Err(Error::Cli("no command given (try `adaq help`)".into())),
+        }
+        while let Some(arg) = it.next() {
+            if let Some(name) = arg.strip_prefix("--") {
+                // `--flag=value`, `--flag value`, or bare switch
+                if let Some((k, v)) = name.split_once('=') {
+                    out.flags.insert(k.to_string(), v.to_string());
+                } else if it.peek().map_or(false, |n| !n.starts_with("--")) {
+                    out.flags.insert(name.to_string(), it.next().unwrap().clone());
+                } else {
+                    out.switches.push(name.to_string());
+                }
+            } else {
+                return Err(Error::Cli(format!("unexpected positional argument {arg:?}")));
+            }
+        }
+        Ok(out)
+    }
+
+    pub fn str_flag(&self, name: &str, default: &str) -> String {
+        self.flags.get(name).cloned().unwrap_or_else(|| default.to_string())
+    }
+
+    pub fn req_flag(&self, name: &str) -> Result<String> {
+        self.flags
+            .get(name)
+            .cloned()
+            .ok_or_else(|| Error::Cli(format!("missing required flag --{name}")))
+    }
+
+    pub fn f64_flag(&self, name: &str, default: f64) -> Result<f64> {
+        match self.flags.get(name) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|e| Error::Cli(format!("--{name} {v:?}: {e}"))),
+        }
+    }
+
+    pub fn usize_flag(&self, name: &str, default: usize) -> Result<usize> {
+        match self.flags.get(name) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|e| Error::Cli(format!("--{name} {v:?}: {e}"))),
+        }
+    }
+
+    pub fn has(&self, switch: &str) -> bool {
+        self.switches.iter().any(|s| s == switch)
+    }
+
+    /// Comma-separated list flag.
+    pub fn list_flag(&self, name: &str, default: &[&str]) -> Vec<String> {
+        match self.flags.get(name) {
+            None => default.iter().map(|s| s.to_string()).collect(),
+            Some(v) => v
+                .split(',')
+                .map(str::trim)
+                .filter(|s| !s.is_empty())
+                .map(String::from)
+                .collect(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &[&str]) -> Args {
+        Args::parse(&s.iter().map(|v| v.to_string()).collect::<Vec<_>>()).unwrap()
+    }
+
+    #[test]
+    fn parses_command_flags_switches() {
+        let a = parse(&["calibrate", "--model", "mini_alexnet", "--delta-acc=0.2", "--verbose"]);
+        assert_eq!(a.command, "calibrate");
+        assert_eq!(a.str_flag("model", ""), "mini_alexnet");
+        assert_eq!(a.f64_flag("delta-acc", 0.0).unwrap(), 0.2);
+        assert!(a.has("verbose"));
+        assert!(!a.has("quiet"));
+    }
+
+    #[test]
+    fn rejects_missing_command() {
+        assert!(Args::parse(&[]).is_err());
+        assert!(Args::parse(&["--model".to_string()]).is_err());
+    }
+
+    #[test]
+    fn required_flags() {
+        let a = parse(&["run"]);
+        assert!(a.req_flag("model").is_err());
+        assert!(a.f64_flag("x", 1.5).unwrap() == 1.5);
+    }
+
+    #[test]
+    fn list_flags() {
+        let a = parse(&["x", "--models", "a, b,c"]);
+        assert_eq!(a.list_flag("models", &[]), vec!["a", "b", "c"]);
+        assert_eq!(a.list_flag("other", &["d"]), vec!["d"]);
+    }
+
+    #[test]
+    fn bad_numbers_error() {
+        let a = parse(&["x", "--n", "abc"]);
+        assert!(a.usize_flag("n", 1).is_err());
+    }
+}

@@ -1,0 +1,22 @@
+//! The L3 coordinator: owns the PJRT session for one model, caches the
+//! baseline state (device buffers for every dataset batch + trained
+//! weight, baseline logits Z), and exposes the three evaluation primitives
+//! every experiment is built from:
+//!
+//! * [`Session::eval_with_overrides`] — forward pass with some weight
+//!   tensors replaced host-side (noise injection, host-side quantization);
+//! * [`Session::eval_qbits`] — the `qforward` executable with a runtime
+//!   per-layer bit-width vector (the L1 Pallas fake-quant kernel on the
+//!   request path);
+//! * [`Session::baseline`] — cached fp32 logits / accuracy / margins.
+//!
+//! On top of those, [`sweep`] traces the paper's size-accuracy trade-off
+//! curves (Fig. 6/8) for any [`Allocator`].
+
+mod serve;
+mod session;
+mod sweep;
+
+pub use serve::{serve_loop, ServeStats};
+pub use session::{Baseline, EvalOutput, Session};
+pub use sweep::{run_sweep, SweepConfig, SweepResult};

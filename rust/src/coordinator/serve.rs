@@ -1,0 +1,63 @@
+//! Minimal serving loop: run single-image requests through the quantized
+//! executable (batch-1 artifact) and report latency/throughput — the
+//! "deploy the quantized model" story of the paper's introduction, and
+//! the macro-benchmark for the perf pass.
+
+use crate::dataset::Dataset;
+use crate::tensor::Tensor;
+use crate::util::Timer;
+use crate::Result;
+
+use super::Session;
+
+/// Latency/throughput summary of a serve run.
+#[derive(Clone, Debug)]
+pub struct ServeStats {
+    pub requests: usize,
+    pub correct: usize,
+    pub total_seconds: f64,
+    pub p50_ms: f64,
+    pub p99_ms: f64,
+    pub throughput_rps: f64,
+}
+
+impl ServeStats {
+    pub fn accuracy(&self) -> f64 {
+        self.correct as f64 / self.requests as f64
+    }
+}
+
+/// Serve `n` single-image requests drawn round-robin from `data` through
+/// the quantized model (`bits` per layer). The session must have been
+/// opened with batch size 1.
+pub fn serve_loop(session: &Session, data: &Dataset, bits: &[f32], n: usize) -> Result<ServeStats> {
+    assert_eq!(session.batch_size(), 1, "serve loop wants batch-1 artifacts");
+    let mut latencies = Vec::with_capacity(n);
+    let mut correct = 0usize;
+    // the allocation is constant for the whole run: upload once
+    let bits_buf = session.prepare_bits(bits)?;
+    let total = Timer::start();
+    for i in 0..n {
+        let idx = i % data.len();
+        let x = data.batch(idx, 1)?;
+        let y = data.batch_labels(idx, 1)[0];
+        let t = Timer::start();
+        let logits = session.qforward_with(&x, &bits_buf)?;
+        latencies.push(t.millis());
+        let (pred, _) = Tensor::top2(&logits);
+        if pred as i32 == y {
+            correct += 1;
+        }
+    }
+    let total_seconds = total.seconds();
+    latencies.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let pct = |p: f64| latencies[((latencies.len() as f64 - 1.0) * p) as usize];
+    Ok(ServeStats {
+        requests: n,
+        correct,
+        total_seconds,
+        p50_ms: pct(0.50),
+        p99_ms: pct(0.99),
+        throughput_rps: n as f64 / total_seconds,
+    })
+}

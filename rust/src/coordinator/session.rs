@@ -1,0 +1,267 @@
+//! Per-model PJRT session with cached device state.
+
+use std::path::Path;
+
+use crate::dataset::Dataset;
+use crate::model::ModelArtifacts;
+use crate::runtime::{literal_of, Engine, Executable};
+use crate::tensor::Tensor;
+use crate::{Error, Result};
+
+/// Cached fp32 reference state for one model + test split.
+#[derive(Clone, Debug)]
+pub struct Baseline {
+    /// Logits per batch (flat `[batch × classes]` each).
+    pub logits: Vec<Vec<f32>>,
+    /// Top-1 accuracy of the unquantized model.
+    pub accuracy: f64,
+    /// Per-sample adversarial-noise norms (z₍₁₎−z₍₂₎)²/2.
+    pub margins: Vec<f64>,
+}
+
+/// Output of one full-dataset evaluation.
+#[derive(Clone, Debug)]
+pub struct EvalOutput {
+    pub logits: Vec<Vec<f32>>,
+    pub accuracy: f64,
+    /// mean over samples of ‖z − z_base‖² (the paper's mean ‖r_z‖²).
+    pub mean_rz_sq: f64,
+}
+
+/// One model's full evaluation state: compiled executables, uploaded
+/// dataset batches, uploaded baseline weights, cached baseline logits.
+pub struct Session {
+    pub artifacts: ModelArtifacts,
+    pub test: Dataset,
+    engine: Engine,
+    batch: usize,
+    num_classes: usize,
+    forward: Executable,
+    qforward: Executable,
+    x_buffers: Vec<xla::PjRtBuffer>,
+    labels: Vec<Vec<i32>>,
+    weight_buffers: Vec<xla::PjRtBuffer>,
+    baseline: Baseline,
+    /// Forward executions since session start (perf accounting).
+    pub exec_count: std::cell::Cell<u64>,
+}
+
+impl Session {
+    /// Build a session: load artifacts, compile both executables, upload
+    /// every test batch and the trained weights, cache baseline logits.
+    pub fn open(artifacts_root: impl AsRef<Path>, model: &str, batch: usize) -> Result<Session> {
+        let engine = Engine::cpu()?;
+        let artifacts = ModelArtifacts::load(&artifacts_root, model)?;
+        if !artifacts.manifest.batch_sizes.contains(&batch) {
+            return Err(Error::Model(format!(
+                "batch {batch} not lowered (have {:?})",
+                artifacts.manifest.batch_sizes
+            )));
+        }
+        let test = Dataset::load(&artifacts_root, "test")?;
+        let forward = engine.load_hlo(artifacts.hlo_path("forward", batch))?;
+        let qforward = engine.load_hlo(artifacts.hlo_path("qforward", batch))?;
+
+        let mut x_buffers = Vec::new();
+        let mut labels = Vec::new();
+        for (start, len) in test.batches(batch) {
+            let xb = test.batch(start, len)?;
+            x_buffers.push(engine.upload(&xb)?);
+            labels.push(test.batch_labels(start, len).to_vec());
+        }
+        let mut weight_buffers = Vec::new();
+        for (_, t) in &artifacts.weights.params {
+            weight_buffers.push(engine.upload(t)?);
+        }
+
+        let num_classes = artifacts.manifest.num_classes;
+        let mut session = Session {
+            artifacts,
+            test,
+            engine,
+            batch,
+            num_classes,
+            forward,
+            qforward,
+            x_buffers,
+            labels,
+            weight_buffers,
+            baseline: Baseline { logits: vec![], accuracy: 0.0, margins: vec![] },
+            exec_count: std::cell::Cell::new(0),
+        };
+        session.baseline = session.compute_baseline()?;
+        Ok(session)
+    }
+
+    pub fn batch_size(&self) -> usize {
+        self.batch
+    }
+
+    pub fn num_batches(&self) -> usize {
+        self.x_buffers.len()
+    }
+
+    pub fn baseline(&self) -> &Baseline {
+        &self.baseline
+    }
+
+    fn compute_baseline(&self) -> Result<Baseline> {
+        let mut logits = Vec::with_capacity(self.x_buffers.len());
+        for bi in 0..self.x_buffers.len() {
+            logits.push(self.run_forward_batch(bi, None)?);
+        }
+        let accuracy = self.accuracy_of(&logits);
+        let mut margins = Vec::with_capacity(self.test.len());
+        for lb in &logits {
+            for row in lb.chunks(self.num_classes) {
+                let (i1, i2) = Tensor::top2(row);
+                let d = (row[i1] - row[i2]) as f64;
+                margins.push(d * d / 2.0);
+            }
+        }
+        Ok(Baseline { logits, accuracy, margins })
+    }
+
+    /// Run the plain forward executable on batch `bi`, with optional
+    /// overridden weight buffers (indexed like `weights.params`).
+    fn run_forward_batch(
+        &self,
+        bi: usize,
+        overrides: Option<&[(usize, xla::PjRtBuffer)]>,
+    ) -> Result<Vec<f32>> {
+        let mut args: Vec<&xla::PjRtBuffer> = Vec::with_capacity(1 + self.weight_buffers.len());
+        args.push(&self.x_buffers[bi]);
+        for (pi, wb) in self.weight_buffers.iter().enumerate() {
+            let replaced = overrides
+                .and_then(|ov| ov.iter().find(|(i, _)| *i == pi))
+                .map(|(_, b)| b);
+            args.push(replaced.unwrap_or(wb));
+        }
+        self.exec_count.set(self.exec_count.get() + 1);
+        self.forward.run_buffers(&args)
+    }
+
+    /// Top-1 accuracy over per-batch flat logits.
+    pub fn accuracy_of(&self, logits: &[Vec<f32>]) -> f64 {
+        let mut correct = 0usize;
+        let mut total = 0usize;
+        for (lb, yb) in logits.iter().zip(&self.labels) {
+            for (row, &y) in lb.chunks(self.num_classes).zip(yb) {
+                let (i1, _) = Tensor::top2(row);
+                if i1 as i32 == y {
+                    correct += 1;
+                }
+                total += 1;
+            }
+        }
+        correct as f64 / total as f64
+    }
+
+    /// mean over samples of ‖z − z_base‖².
+    fn mean_rz_sq(&self, logits: &[Vec<f32>]) -> f64 {
+        let mut acc = 0f64;
+        let mut n = 0usize;
+        for (lb, base) in logits.iter().zip(&self.baseline.logits) {
+            for (a, b) in lb.iter().zip(base) {
+                let d = (*a - *b) as f64;
+                acc += d * d;
+            }
+            n += lb.len() / self.num_classes;
+        }
+        acc / n as f64
+    }
+
+    /// Full-dataset forward with some weight tensors replaced. `overrides`
+    /// maps parameter index (position in `weights.params`) → tensor.
+    pub fn eval_with_overrides(&self, overrides: &[(usize, &Tensor)]) -> Result<EvalOutput> {
+        // upload each override once, reuse across batches
+        let mut uploaded = Vec::with_capacity(overrides.len());
+        for (pi, t) in overrides {
+            uploaded.push((*pi, self.engine.upload(t)?));
+        }
+        let mut logits = Vec::with_capacity(self.x_buffers.len());
+        for bi in 0..self.x_buffers.len() {
+            logits.push(self.run_forward_batch(bi, Some(&uploaded))?);
+        }
+        let accuracy = self.accuracy_of(&logits);
+        let mean_rz_sq = self.mean_rz_sq(&logits);
+        Ok(EvalOutput { logits, accuracy, mean_rz_sq })
+    }
+
+    /// Full-dataset quantized forward: the `qforward` executable with a
+    /// per-layer bits vector (L1 Pallas fake-quant on the request path).
+    pub fn eval_qbits(&self, bits: &[f32]) -> Result<EvalOutput> {
+        let nwl = self.artifacts.manifest.num_weighted_layers;
+        if bits.len() != nwl {
+            return Err(Error::Model(format!(
+                "bits vector has {} entries, model has {nwl} weighted layers",
+                bits.len()
+            )));
+        }
+        let bits_t = Tensor::from_vec(&[nwl], bits.to_vec())?;
+        let bits_lit = literal_of(&bits_t)?;
+        let bits_buf = self.engine.upload(&bits_t)?;
+        let _ = bits_lit; // literal path kept for the serve loop
+        let mut logits = Vec::with_capacity(self.x_buffers.len());
+        for bi in 0..self.x_buffers.len() {
+            let mut args: Vec<&xla::PjRtBuffer> =
+                Vec::with_capacity(2 + self.weight_buffers.len());
+            args.push(&self.x_buffers[bi]);
+            for wb in &self.weight_buffers {
+                args.push(wb);
+            }
+            args.push(&bits_buf);
+            self.exec_count.set(self.exec_count.get() + 1);
+            logits.push(self.qforward.run_buffers(&args)?);
+        }
+        let accuracy = self.accuracy_of(&logits);
+        let mean_rz_sq = self.mean_rz_sq(&logits);
+        Ok(EvalOutput { logits, accuracy, mean_rz_sq })
+    }
+
+    /// Upload a per-layer bits vector once for reuse across many
+    /// [`Session::qforward_with`] calls (perf: the serve loop's bit
+    /// allocation is constant, so it must not be re-uploaded per request).
+    pub fn prepare_bits(&self, bits: &[f32]) -> Result<xla::PjRtBuffer> {
+        let nwl = self.artifacts.manifest.num_weighted_layers;
+        if bits.len() != nwl {
+            return Err(Error::Model(format!(
+                "bits vector has {} entries, model has {nwl} weighted layers",
+                bits.len()
+            )));
+        }
+        self.engine.upload(&Tensor::from_vec(&[nwl], bits.to_vec())?)
+    }
+
+    /// Single-batch quantized forward with a pre-uploaded bits buffer
+    /// (the serve hot path, batch-size 1 artifacts).
+    pub fn qforward_with(&self, x: &Tensor, bits_buf: &xla::PjRtBuffer) -> Result<Vec<f32>> {
+        let xb = self.engine.upload(x)?;
+        let mut args: Vec<&xla::PjRtBuffer> = Vec::with_capacity(2 + self.weight_buffers.len());
+        args.push(&xb);
+        for wb in &self.weight_buffers {
+            args.push(wb);
+        }
+        args.push(bits_buf);
+        self.exec_count.set(self.exec_count.get() + 1);
+        self.qforward.run_buffers(&args)
+    }
+
+    /// Single-batch quantized forward over caller-provided input (the
+    /// one-shot convenience path).
+    pub fn qforward_once(&self, x: &Tensor, bits: &[f32]) -> Result<Vec<f32>> {
+        let bb = self.prepare_bits(bits)?;
+        self.qforward_with(x, &bb)
+    }
+
+    /// The weight tensor + parameter index for quantization layer `qi`.
+    pub fn layer_weight(&self, qi: usize) -> Result<(usize, &Tensor)> {
+        let wl = self.artifacts.manifest.weighted_layers();
+        let layer = wl
+            .get(qi)
+            .ok_or_else(|| Error::Model(format!("no weighted layer {qi}")))?;
+        let (wi, _) = layer.param_idx.unwrap();
+        // param slot 0 is the input batch; weights.params starts at slot 1
+        Ok((wi - 1, &self.artifacts.weights.params[wi - 1].1))
+    }
+}

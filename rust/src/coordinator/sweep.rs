@@ -1,0 +1,94 @@
+//! Size-accuracy sweep driver (Fig. 6 / Fig. 8 engine): for an allocator
+//! and a ladder of anchor bit-widths b₁, build allocations, integerize by
+//! threshold rounding, evaluate each through the Pallas `qforward`
+//! executable, and report every point plus the Pareto frontier.
+
+use crate::quant::{
+    enumerate_roundings, pareto_frontier, Allocation, Allocator, LayerStats, SweepPoint,
+};
+use crate::Result;
+
+use super::Session;
+
+/// Sweep configuration.
+#[derive(Clone, Debug)]
+pub struct SweepConfig {
+    /// Anchor bit-widths for the first quantized layer.
+    pub b1_values: Vec<f64>,
+    /// Threshold-rounding granularity (extra datapoints per anchor).
+    pub roundings: usize,
+    /// Per-layer quantize mask (false = frozen at `frozen_bits`).
+    pub mask: Vec<bool>,
+    /// Bit-width of frozen layers (paper uses 16 for FC in Fig. 6).
+    pub frozen_bits: f64,
+}
+
+impl SweepConfig {
+    /// Default ladder: anchors 2..=10, 4 roundings, everything quantized.
+    pub fn default_for(nwl: usize) -> SweepConfig {
+        SweepConfig {
+            b1_values: (2..=10).map(|b| b as f64).collect(),
+            roundings: 4,
+            mask: vec![true; nwl],
+            frozen_bits: 16.0,
+        }
+    }
+
+    /// Fig. 6 variant: quantize conv layers only, freeze dense at 16 bits.
+    pub fn conv_only(manifest: &crate::model::Manifest) -> SweepConfig {
+        let mask: Vec<bool> = manifest
+            .weighted_layers()
+            .iter()
+            .map(|l| matches!(l.kind, crate::model::LayerKind::Conv { .. }))
+            .collect();
+        SweepConfig {
+            b1_values: (2..=10).map(|b| b as f64).collect(),
+            roundings: 4,
+            mask,
+            frozen_bits: 16.0,
+        }
+    }
+}
+
+/// All evaluated points for one allocator.
+#[derive(Clone, Debug)]
+pub struct SweepResult {
+    pub allocator: Allocator,
+    pub points: Vec<SweepPoint>,
+    pub frontier: Vec<SweepPoint>,
+}
+
+/// Run a sweep for `allocator` over the anchor ladder.
+pub fn run_sweep(
+    session: &Session,
+    allocator: Allocator,
+    stats: &[LayerStats],
+    cfg: &SweepConfig,
+) -> Result<SweepResult> {
+    let mut points = Vec::new();
+    for &b1 in &cfg.b1_values {
+        let frac = allocator.allocate(stats, b1, &cfg.mask, cfg.frozen_bits);
+        let candidates: Vec<Allocation> = if matches!(allocator, Allocator::Equal) {
+            // equal bit-width is integral already; no extra datapoints
+            vec![Allocation { bits: frac.bits.clone(), mask: frac.mask.clone() }]
+        } else {
+            enumerate_roundings(&frac, cfg.roundings)
+        };
+        for alloc in candidates {
+            let bits_f32: Vec<f32> = alloc.bits.iter().map(|&b| b as f32).collect();
+            let eval = session.eval_qbits(&bits_f32)?;
+            points.push(SweepPoint {
+                b1,
+                bits: alloc.bits.clone(),
+                // Fig. 6 protocol: frozen layers (FC @ 16 bits) are a
+                // constant for every allocator and excluded from the
+                // plotted size; with everything quantized this equals the
+                // total Σ s_i·b_i.
+                size_bytes: alloc.size_bytes_quantized(stats),
+                accuracy: eval.accuracy,
+            });
+        }
+    }
+    let frontier = pareto_frontier(&points);
+    Ok(SweepResult { allocator, points, frontier })
+}

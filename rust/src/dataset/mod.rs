@@ -1,0 +1,131 @@
+//! Procedural "shapes" dataset: artifact loader + a Rust generator that is
+//! **bit-identical** to `python/compile/datagen.py` (both sides draw from
+//! the shared PCG32 stream with f32-rounded arithmetic; parity is tested
+//! in `rust/tests/dataset_parity.rs`).
+
+mod gen;
+
+pub use gen::{generate, render_shape, CLASS_NAMES, IMG, NUM_CLASSES, TEST_N, TEST_SEED, TRAIN_N, TRAIN_SEED};
+
+use std::path::Path;
+
+use crate::io::tnsr::read_tnsr_map;
+use crate::tensor::{IntTensor, Tensor};
+use crate::{Error, Result};
+
+/// A labelled image set: images `[n, 16, 16, 1]`, labels `[n]`.
+#[derive(Clone, Debug)]
+pub struct Dataset {
+    pub images: Tensor,
+    pub labels: IntTensor,
+}
+
+impl Dataset {
+    pub fn len(&self) -> usize {
+        self.labels.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.labels.is_empty()
+    }
+
+    /// Load one split (`train.tnsr` / `test.tnsr`) from the artifact dir.
+    pub fn load(artifacts_root: impl AsRef<Path>, split: &str) -> Result<Dataset> {
+        let path = artifacts_root
+            .as_ref()
+            .join("dataset")
+            .join(format!("{split}.tnsr"));
+        let mut map = read_tnsr_map(&path)?;
+        let images = map
+            .remove("images")
+            .ok_or_else(|| Error::format(path.display().to_string(), "missing images"))?
+            .as_f32("images")?
+            .clone();
+        let labels = map
+            .remove("labels")
+            .ok_or_else(|| Error::format(path.display().to_string(), "missing labels"))?
+            .as_i32("labels")?
+            .clone();
+        if images.shape()[0] != labels.len() {
+            return Err(Error::format(
+                path.display().to_string(),
+                format!("{} images vs {} labels", images.shape()[0], labels.len()),
+            ));
+        }
+        Ok(Dataset { images, labels })
+    }
+
+    /// Regenerate a split procedurally (no artifacts needed) — used by the
+    /// parity test and the pure-Rust demo path.
+    pub fn generate(n: usize, seed: u64) -> Dataset {
+        let (images, labels) = generate(n, seed);
+        Dataset { images, labels }
+    }
+
+    /// Contiguous batch `[start, start+len)` as a batch-major tensor.
+    pub fn batch(&self, start: usize, len: usize) -> Result<Tensor> {
+        let sh = self.images.shape();
+        let (n, h, w, c) = (sh[0], sh[1], sh[2], sh[3]);
+        if start + len > n {
+            return Err(Error::Shape(format!(
+                "batch [{start}, {}) out of {n}",
+                start + len
+            )));
+        }
+        let stride = h * w * c;
+        let data = self.images.data()[start * stride..(start + len) * stride].to_vec();
+        Tensor::from_vec(&[len, h, w, c], data)
+    }
+
+    /// Labels for a contiguous batch.
+    pub fn batch_labels(&self, start: usize, len: usize) -> &[i32] {
+        &self.labels.data()[start..start + len]
+    }
+
+    /// Split the set into fixed-size batches; the tail remainder (if the
+    /// size does not divide) is dropped, mirroring the evaluation protocol
+    /// (1500 = 6 × 250 drops nothing).
+    pub fn batches(&self, batch: usize) -> Vec<(usize, usize)> {
+        let n = self.len();
+        (0..n / batch).map(|i| (i * batch, batch)).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn generate_shapes_and_labels() {
+        let ds = Dataset::generate(40, 123);
+        assert_eq!(ds.images.shape(), &[40, IMG, IMG, 1]);
+        assert_eq!(ds.labels.len(), 40);
+        // labels cycle round-robin
+        for (i, &l) in ds.labels.data().iter().enumerate() {
+            assert_eq!(l as usize, i % NUM_CLASSES);
+        }
+        // pixels in [0,1]
+        assert!(ds.images.data().iter().all(|&v| (0.0..=1.0).contains(&v)));
+        // shapes are visible: mean intensity comfortably above the noise floor
+        let mean: f32 = ds.images.data().iter().sum::<f32>() / ds.images.len() as f32;
+        assert!(mean > 0.03, "mean {mean}");
+    }
+
+    #[test]
+    fn batching() {
+        let ds = Dataset::generate(25, 7);
+        let b = ds.batches(10);
+        assert_eq!(b, vec![(0, 10), (10, 10)]);
+        let t = ds.batch(10, 10).unwrap();
+        assert_eq!(t.shape(), &[10, IMG, IMG, 1]);
+        assert!(ds.batch(20, 10).is_err());
+        assert_eq!(ds.batch_labels(10, 10).len(), 10);
+    }
+
+    #[test]
+    fn deterministic() {
+        let a = Dataset::generate(10, 99);
+        let b = Dataset::generate(10, 99);
+        assert_eq!(a.images.data(), b.images.data());
+    }
+}

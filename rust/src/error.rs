@@ -1,0 +1,49 @@
+//! Crate-wide error type.
+
+use thiserror::Error;
+
+/// All failure modes of the adaq coordinator.
+#[derive(Error, Debug)]
+pub enum Error {
+    #[error("io error: {0}")]
+    Io(#[from] std::io::Error),
+
+    #[error("xla/pjrt error: {0}")]
+    Xla(String),
+
+    #[error("format error in {path}: {msg}")]
+    Format { path: String, msg: String },
+
+    #[error("json parse error at byte {at}: {msg}")]
+    Json { at: usize, msg: String },
+
+    #[error("shape mismatch: {0}")]
+    Shape(String),
+
+    #[error("model error: {0}")]
+    Model(String),
+
+    #[error("cli error: {0}")]
+    Cli(String),
+
+    #[error("calibration failed: {0}")]
+    Calibration(String),
+
+    #[error("{0}")]
+    Other(String),
+}
+
+impl From<xla::Error> for Error {
+    fn from(e: xla::Error) -> Self {
+        Error::Xla(e.to_string())
+    }
+}
+
+impl Error {
+    /// Convenience constructor for format errors.
+    pub fn format(path: impl Into<String>, msg: impl Into<String>) -> Self {
+        Error::Format { path: path.into(), msg: msg.into() }
+    }
+}
+
+pub type Result<T> = std::result::Result<T, Error>;

@@ -1,0 +1,84 @@
+//! Tiny CSV writer — bench harnesses dump every figure's series as CSV
+//! next to the ascii rendering so the data can be re-plotted elsewhere.
+
+use std::io::Write;
+use std::path::Path;
+
+use crate::Result;
+
+/// Column-ordered CSV writer.
+pub struct CsvWriter {
+    file: std::io::BufWriter<std::fs::File>,
+    ncols: usize,
+}
+
+impl CsvWriter {
+    /// Create `path` (parent dirs included) and write the header row.
+    pub fn create(path: impl AsRef<Path>, header: &[&str]) -> Result<Self> {
+        if let Some(parent) = path.as_ref().parent() {
+            std::fs::create_dir_all(parent)?;
+        }
+        let mut file = std::io::BufWriter::new(std::fs::File::create(path)?);
+        writeln!(file, "{}", header.join(","))?;
+        Ok(CsvWriter { file, ncols: header.len() })
+    }
+
+    /// Write a row of f64 cells (must match the header width).
+    pub fn row(&mut self, cells: &[f64]) -> Result<()> {
+        assert_eq!(cells.len(), self.ncols, "csv row width mismatch");
+        let txt: Vec<String> = cells.iter().map(|v| format!("{v}")).collect();
+        writeln!(self.file, "{}", txt.join(","))?;
+        Ok(())
+    }
+
+    /// Write a row of preformatted string cells.
+    pub fn row_str(&mut self, cells: &[String]) -> Result<()> {
+        assert_eq!(cells.len(), self.ncols, "csv row width mismatch");
+        let quoted: Vec<String> = cells
+            .iter()
+            .map(|c| {
+                if c.contains(',') || c.contains('"') {
+                    format!("\"{}\"", c.replace('"', "\"\""))
+                } else {
+                    c.clone()
+                }
+            })
+            .collect();
+        writeln!(self.file, "{}", quoted.join(","))?;
+        Ok(())
+    }
+
+    pub fn flush(&mut self) -> Result<()> {
+        self.file.flush()?;
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn writes_rows() {
+        let mut p = std::env::temp_dir();
+        p.push(format!("adaq_csv_test_{}.csv", std::process::id()));
+        {
+            let mut w = CsvWriter::create(&p, &["a", "b"]).unwrap();
+            w.row(&[1.0, 2.5]).unwrap();
+            w.row_str(&["x,y".into(), "z".into()]).unwrap();
+            w.flush().unwrap();
+        }
+        let text = std::fs::read_to_string(&p).unwrap();
+        assert_eq!(text, "a,b\n1,2.5\n\"x,y\",z\n");
+        std::fs::remove_file(p).ok();
+    }
+
+    #[test]
+    #[should_panic(expected = "width mismatch")]
+    fn rejects_wrong_width() {
+        let mut p = std::env::temp_dir();
+        p.push(format!("adaq_csv_test_w_{}.csv", std::process::id()));
+        let mut w = CsvWriter::create(&p, &["a", "b"]).unwrap();
+        let _ = w.row(&[1.0]);
+    }
+}

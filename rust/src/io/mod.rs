@@ -1,0 +1,10 @@
+//! Serialization substrates: the TNSR tensor container (shared with the
+//! Python compile path), a dependency-free JSON parser/emitter, and a CSV
+//! writer for bench outputs.
+
+pub mod csv;
+pub mod json;
+pub mod tnsr;
+
+pub use json::Json;
+pub use tnsr::{read_tnsr, write_tnsr, TnsrValue};

@@ -1,0 +1,255 @@
+//! TNSR binary tensor container — Rust reader/writer.
+//!
+//! The format is produced by `python/compile/tnsr.py` at artifact-build
+//! time (layout documented there): magic `TNSR`, version, entry table
+//! ({name, dtype, shape, offset, nbytes}), then 8-byte-aligned raw blobs.
+
+use std::collections::BTreeMap;
+use std::io::Write;
+use std::path::Path;
+
+use crate::tensor::{IntTensor, Tensor};
+use crate::{Error, Result};
+
+const MAGIC: &[u8; 4] = b"TNSR";
+const VERSION: u32 = 1;
+const DT_F32: u8 = 0;
+const DT_I32: u8 = 1;
+
+/// A tensor read from (or destined for) a TNSR file.
+#[derive(Clone, Debug, PartialEq)]
+pub enum TnsrValue {
+    F32(Tensor),
+    I32(IntTensor),
+}
+
+impl TnsrValue {
+    /// Unwrap as f32, or error with the tensor's name for context.
+    pub fn as_f32(&self, name: &str) -> Result<&Tensor> {
+        match self {
+            TnsrValue::F32(t) => Ok(t),
+            TnsrValue::I32(_) => Err(Error::Other(format!("tensor {name} is i32, wanted f32"))),
+        }
+    }
+
+    /// Unwrap as i32.
+    pub fn as_i32(&self, name: &str) -> Result<&IntTensor> {
+        match self {
+            TnsrValue::I32(t) => Ok(t),
+            TnsrValue::F32(_) => Err(Error::Other(format!("tensor {name} is f32, wanted i32"))),
+        }
+    }
+}
+
+fn align8(n: usize) -> usize {
+    (n + 7) & !7
+}
+
+fn rd_u32(b: &[u8], pos: &mut usize, path: &str) -> Result<u32> {
+    if *pos + 4 > b.len() {
+        return Err(Error::format(path, "truncated (u32)"));
+    }
+    let v = u32::from_le_bytes(b[*pos..*pos + 4].try_into().unwrap());
+    *pos += 4;
+    Ok(v)
+}
+
+fn rd_u64(b: &[u8], pos: &mut usize, path: &str) -> Result<u64> {
+    if *pos + 8 > b.len() {
+        return Err(Error::format(path, "truncated (u64)"));
+    }
+    let v = u64::from_le_bytes(b[*pos..*pos + 8].try_into().unwrap());
+    *pos += 8;
+    Ok(v)
+}
+
+/// Read every tensor in the container, preserving file order.
+pub fn read_tnsr(path: impl AsRef<Path>) -> Result<Vec<(String, TnsrValue)>> {
+    let pstr = path.as_ref().display().to_string();
+    let blob = std::fs::read(path.as_ref())?;
+    if blob.len() < 12 || &blob[..4] != MAGIC {
+        return Err(Error::format(&pstr, "bad magic"));
+    }
+    let mut pos = 4usize;
+    let version = rd_u32(&blob, &mut pos, &pstr)?;
+    if version != VERSION {
+        return Err(Error::format(&pstr, format!("unsupported version {version}")));
+    }
+    let count = rd_u32(&blob, &mut pos, &pstr)? as usize;
+    let mut out = Vec::with_capacity(count);
+    for _ in 0..count {
+        let name_len = rd_u32(&blob, &mut pos, &pstr)? as usize;
+        if pos + name_len > blob.len() {
+            return Err(Error::format(&pstr, "truncated name"));
+        }
+        let name = String::from_utf8(blob[pos..pos + name_len].to_vec())
+            .map_err(|e| Error::format(&pstr, format!("bad name utf8: {e}")))?;
+        pos += name_len;
+        if pos >= blob.len() {
+            return Err(Error::format(&pstr, "truncated dtype"));
+        }
+        let dtype = blob[pos];
+        pos += 1;
+        let ndim = rd_u32(&blob, &mut pos, &pstr)? as usize;
+        let mut shape = Vec::with_capacity(ndim);
+        for _ in 0..ndim {
+            shape.push(rd_u32(&blob, &mut pos, &pstr)? as usize);
+        }
+        let off = rd_u64(&blob, &mut pos, &pstr)? as usize;
+        let nbytes = rd_u64(&blob, &mut pos, &pstr)? as usize;
+        if off + nbytes > blob.len() {
+            return Err(Error::format(&pstr, format!("{name}: data range out of file")));
+        }
+        let n = nbytes / 4;
+        let expect: usize = shape.iter().product();
+        if n != expect {
+            return Err(Error::format(
+                &pstr,
+                format!("{name}: {n} elements vs shape {shape:?}"),
+            ));
+        }
+        let value = match dtype {
+            DT_F32 => {
+                let mut data = vec![0f32; n];
+                for (i, v) in data.iter_mut().enumerate() {
+                    *v = f32::from_le_bytes(blob[off + 4 * i..off + 4 * i + 4].try_into().unwrap());
+                }
+                TnsrValue::F32(Tensor::from_vec(&shape, data)?)
+            }
+            DT_I32 => {
+                let mut data = vec![0i32; n];
+                for (i, v) in data.iter_mut().enumerate() {
+                    *v = i32::from_le_bytes(blob[off + 4 * i..off + 4 * i + 4].try_into().unwrap());
+                }
+                TnsrValue::I32(IntTensor::from_vec(&shape, data)?)
+            }
+            other => return Err(Error::format(&pstr, format!("{name}: bad dtype {other}"))),
+        };
+        out.push((name, value));
+    }
+    Ok(out)
+}
+
+/// Read into a name→tensor map.
+pub fn read_tnsr_map(path: impl AsRef<Path>) -> Result<BTreeMap<String, TnsrValue>> {
+    Ok(read_tnsr(path)?.into_iter().collect())
+}
+
+/// Write tensors in the given order.
+pub fn write_tnsr(path: impl AsRef<Path>, tensors: &[(String, TnsrValue)]) -> Result<()> {
+    // header size
+    let mut header = 4 + 4 + 4;
+    for (name, v) in tensors {
+        let ndim = match v {
+            TnsrValue::F32(t) => t.shape().len(),
+            TnsrValue::I32(t) => t.shape().len(),
+        };
+        header += 4 + name.len() + 1 + 4 + 4 * ndim + 8 + 8;
+    }
+    let data_start = align8(header);
+    let mut offsets = Vec::with_capacity(tensors.len());
+    let mut off = data_start;
+    for (_, v) in tensors {
+        offsets.push(off);
+        let nbytes = match v {
+            TnsrValue::F32(t) => 4 * t.len(),
+            TnsrValue::I32(t) => 4 * t.len(),
+        };
+        off = align8(off + nbytes);
+    }
+
+    let mut f = std::io::BufWriter::new(std::fs::File::create(path.as_ref())?);
+    f.write_all(MAGIC)?;
+    f.write_all(&VERSION.to_le_bytes())?;
+    f.write_all(&(tensors.len() as u32).to_le_bytes())?;
+    for ((name, v), &data_off) in tensors.iter().zip(&offsets) {
+        f.write_all(&(name.len() as u32).to_le_bytes())?;
+        f.write_all(name.as_bytes())?;
+        let (dtype, shape, nbytes): (u8, &[usize], usize) = match v {
+            TnsrValue::F32(t) => (DT_F32, t.shape(), 4 * t.len()),
+            TnsrValue::I32(t) => (DT_I32, t.shape(), 4 * t.len()),
+        };
+        f.write_all(&[dtype])?;
+        f.write_all(&(shape.len() as u32).to_le_bytes())?;
+        for &d in shape {
+            f.write_all(&(d as u32).to_le_bytes())?;
+        }
+        f.write_all(&(data_off as u64).to_le_bytes())?;
+        f.write_all(&(nbytes as u64).to_le_bytes())?;
+    }
+    let mut written = header;
+    for ((_, v), &data_off) in tensors.iter().zip(&offsets) {
+        for _ in written..data_off {
+            f.write_all(&[0u8])?;
+        }
+        match v {
+            TnsrValue::F32(t) => {
+                for &x in t.data() {
+                    f.write_all(&x.to_le_bytes())?;
+                }
+                written = data_off + 4 * t.len();
+            }
+            TnsrValue::I32(t) => {
+                for &x in t.data() {
+                    f.write_all(&x.to_le_bytes())?;
+                }
+                written = data_off + 4 * t.len();
+            }
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmpfile(name: &str) -> std::path::PathBuf {
+        let mut p = std::env::temp_dir();
+        p.push(format!("adaq_tnsr_test_{}_{}", std::process::id(), name));
+        p
+    }
+
+    #[test]
+    fn roundtrip() {
+        let path = tmpfile("roundtrip");
+        let t1 = Tensor::from_vec(&[2, 3], vec![1.5, -2.0, 0.0, 3.25, 4.0, -0.5]).unwrap();
+        let t2 = IntTensor::from_vec(&[4], vec![1, -2, 3, 7]).unwrap();
+        let t3 = Tensor::from_vec(&[1], vec![42.0]).unwrap();
+        write_tnsr(
+            &path,
+            &[
+                ("weights".into(), TnsrValue::F32(t1.clone())),
+                ("labels".into(), TnsrValue::I32(t2.clone())),
+                ("scalarish".into(), TnsrValue::F32(t3.clone())),
+            ],
+        )
+        .unwrap();
+        let back = read_tnsr(&path).unwrap();
+        assert_eq!(back.len(), 3);
+        assert_eq!(back[0].0, "weights");
+        assert_eq!(back[0].1, TnsrValue::F32(t1));
+        assert_eq!(back[1].1, TnsrValue::I32(t2));
+        assert_eq!(back[2].1, TnsrValue::F32(t3));
+        std::fs::remove_file(path).ok();
+    }
+
+    #[test]
+    fn rejects_bad_magic() {
+        let path = tmpfile("badmagic");
+        std::fs::write(&path, b"NOPE....").unwrap();
+        assert!(read_tnsr(&path).is_err());
+        std::fs::remove_file(path).ok();
+    }
+
+    #[test]
+    fn rejects_truncated() {
+        let path = tmpfile("trunc");
+        let t = Tensor::from_vec(&[8], vec![0.0; 8]).unwrap();
+        write_tnsr(&path, &[("t".into(), TnsrValue::F32(t))]).unwrap();
+        let blob = std::fs::read(&path).unwrap();
+        std::fs::write(&path, &blob[..blob.len() - 8]).unwrap();
+        assert!(read_tnsr(&path).is_err());
+        std::fs::remove_file(path).ok();
+    }
+}

@@ -1,0 +1,52 @@
+//! # adaq — Adaptive Quantization for Deep Neural Networks
+//!
+//! Rust + JAX + Pallas reproduction of *Adaptive Quantization for Deep
+//! Neural Network* (Zhou, Moosavi-Dezfooli, Cheung, Frossard — AAAI 2018).
+//!
+//! The crate is the **Layer-3 coordinator** of a three-layer stack
+//! (DESIGN.md §3): JAX models (L2) calling Pallas kernels (L1) are lowered
+//! once, at build time, to HLO-text artifacts; this crate loads them
+//! through the PJRT C API ([`runtime`]) and runs every experiment of the
+//! paper — robustness calibration, bit-width allocation, accuracy sweeps —
+//! without Python anywhere on the request path.
+//!
+//! Module map:
+//!
+//! | module | role |
+//! |---|---|
+//! | [`tensor`] | minimal dense f32/i32 tensors |
+//! | [`rng`] | PCG32/PCG64 deterministic RNG (bit-compatible with `python/compile/pcg.py`) |
+//! | [`io`] | TNSR container, JSON, CSV |
+//! | [`nn`] | pure-Rust CNN inference substrate (cross-validation oracle + CPU baseline) |
+//! | [`model`] | manifest, weight store, size accounting |
+//! | [`dataset`] | procedural shapes dataset: loader + bit-identical Rust generator |
+//! | [`runtime`] | PJRT wrapper: HLO text → executable, literal helpers |
+//! | [`quant`] | uniform quantizer, noise model, bit-width allocators (adaptive / SQNR / equal) |
+//! | [`measure`] | adversarial margin, t_i robustness calibration, p_i estimation, linearity/additivity probes |
+//! | [`coordinator`] | experiment engine: job planning, thread-pooled evaluation, sweeps, serve loop |
+//! | [`report`] | ascii plots, markdown/CSV tables |
+//! | [`cli`] | hand-rolled argument parser + subcommands |
+
+pub mod bench_support;
+pub mod cli;
+pub mod coordinator;
+pub mod dataset;
+pub mod error;
+pub mod io;
+pub mod measure;
+pub mod model;
+pub mod nn;
+pub mod quant;
+pub mod report;
+pub mod rng;
+pub mod runtime;
+pub mod tensor;
+pub mod util;
+
+pub use error::{Error, Result};
+
+/// Quantization efficiency constant α = ln 4 (Eq. 3: 6 dB/bit).
+pub const ALPHA: f64 = 1.3862943611198906; // ln(4)
+
+/// Default artifact directory (relative to the repo root / CWD).
+pub const DEFAULT_ARTIFACTS: &str = "artifacts";

@@ -1,0 +1,478 @@
+//! `adaq` — CLI for the Adaptive Quantization coordinator (L3).
+//!
+//! Commands:
+//!   info       — model + artifact inventory
+//!   calibrate  — Alg. 1+2: t_i / p_i per layer → calibration.json
+//!   allocate   — closed-form bit-widths (Eq. 22 / 23 / equal) from a
+//!                saved calibration
+//!   evaluate   — accuracy + size of an explicit or allocated bit vector
+//!   sweep      — Fig. 6/8 size-accuracy curves across allocators
+//!   serve      — batch-1 quantized serving loop with latency stats
+//!   selfcheck  — artifact inventory + PJRT↔rust-nn cross-validation
+
+use adaq::cli::Args;
+use adaq::coordinator::{run_sweep, serve_loop, Session, SweepConfig};
+use adaq::dataset::Dataset;
+use adaq::measure::{
+    adversarial_stats, calibrate_model, Calibration,
+};
+use adaq::model::ModelArtifacts;
+use adaq::nn::GraphExecutor;
+use adaq::quant::Allocator;
+use adaq::report::{ascii_histogram, ascii_plot, markdown_table, Align, Series};
+use adaq::util::Timer;
+use adaq::{Error, Result};
+use std::path::PathBuf;
+
+const USAGE: &str = "\
+adaq — Adaptive Quantization for DNNs (AAAI'18) coordinator
+
+USAGE: adaq <command> [--flags]
+
+  info       --model M [--artifacts DIR]
+  calibrate  --model M [--delta-acc F] [--batch N] [--seeds N]
+  allocate   --model M [--allocator adaptive|sqnr|equal] [--b1 F] [--conv-only]
+  evaluate   --model M (--bits 8,6,4,… | --allocator A --b1 F) [--conv-only]
+  sweep      --model M [--allocators a,b,c] [--conv-only] [--out CSV-DIR]
+  serve      --model M [--bits …] [--requests N]
+  export     --model M (--bits … | --allocator A --b1 F) [--out DIR]
+  figures    [--models a,b,…] (regenerate Fig. 6/8 sweeps in-process)
+  selfcheck  [--models a,b,…]
+  help
+
+Common flags: --artifacts DIR (default ./artifacts), --batch N (default 250)
+";
+
+fn main() {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let code = match run(&argv) {
+        Ok(()) => 0,
+        Err(e) => {
+            eprintln!("error: {e}");
+            1
+        }
+    };
+    std::process::exit(code);
+}
+
+fn run(argv: &[String]) -> Result<()> {
+    let args = match Args::parse(argv) {
+        Ok(a) => a,
+        Err(e) => {
+            eprintln!("{USAGE}");
+            return Err(e);
+        }
+    };
+    match args.command.as_str() {
+        "help" => {
+            println!("{USAGE}");
+            Ok(())
+        }
+        "info" => cmd_info(&args),
+        "calibrate" => cmd_calibrate(&args),
+        "allocate" => cmd_allocate(&args),
+        "evaluate" => cmd_evaluate(&args),
+        "sweep" => cmd_sweep(&args),
+        "serve" => cmd_serve(&args),
+        "export" => cmd_export(&args),
+        "figures" => cmd_figures(&args),
+        "selfcheck" => cmd_selfcheck(&args),
+        other => {
+            eprintln!("{USAGE}");
+            Err(Error::Cli(format!("unknown command {other:?}")))
+        }
+    }
+}
+
+fn artifacts_dir(args: &Args) -> PathBuf {
+    PathBuf::from(args.str_flag("artifacts", adaq::DEFAULT_ARTIFACTS))
+}
+
+fn parse_allocator(name: &str) -> Result<Allocator> {
+    match name {
+        "adaptive" => Ok(Allocator::Adaptive),
+        "sqnr" => Ok(Allocator::Sqnr),
+        "equal" => Ok(Allocator::Equal),
+        other => Err(Error::Cli(format!("unknown allocator {other:?}"))),
+    }
+}
+
+fn cmd_info(args: &Args) -> Result<()> {
+    let root = artifacts_dir(args);
+    let model = args.req_flag("model")?;
+    let arts = ModelArtifacts::load(&root, &model)?;
+    let m = &arts.manifest;
+    println!("model: {} (test acc {:.4})", m.model, m.final_test_acc);
+    println!(
+        "input {:?}, {} classes, {} layers ({} weighted), {} quantizable params ({:.1} KiB fp32)",
+        m.input_shape,
+        m.num_classes,
+        m.layers.len(),
+        m.num_weighted_layers,
+        m.total_quantizable_params,
+        m.fp32_bytes() / 1024.0
+    );
+    let rows: Vec<Vec<String>> = m
+        .weighted_layers()
+        .iter()
+        .map(|l| {
+            vec![
+                l.qindex.unwrap().to_string(),
+                l.name.clone(),
+                format!("{:?}", l.kind).split_whitespace().next().unwrap_or("?").trim_matches('{').to_string(),
+                l.s_i.unwrap().to_string(),
+            ]
+        })
+        .collect();
+    println!(
+        "{}",
+        markdown_table(
+            &["#", "layer", "kind", "s_i"],
+            &[Align::Right, Align::Left, Align::Left, Align::Right],
+            &rows
+        )
+    );
+    Ok(())
+}
+
+fn cmd_calibrate(args: &Args) -> Result<()> {
+    let root = artifacts_dir(args);
+    let model = args.req_flag("model")?;
+    let batch = args.usize_flag("batch", 250)?;
+    let seeds = args.usize_flag("seeds", 2)?;
+    let session = Session::open(&root, &model, batch)?;
+    let base_acc = session.baseline().accuracy;
+    // paper: Δacc ≈ half the base accuracy (57% → 28%)
+    let delta_acc = args.f64_flag("delta-acc", base_acc * 0.5)?;
+    let sp = adaq::measure::SearchParams { seeds, ..Default::default() };
+    let t = Timer::start();
+    let cal = calibrate_model(&session, delta_acc, &sp, |line| println!("{line}"))?;
+    cal.save(&root)?;
+    println!(
+        "saved {} ({} layers, {:.1}s, {} forward execs)",
+        Calibration::path(&root, &model).display(),
+        cal.layers.len(),
+        t.seconds(),
+        session.exec_count.get()
+    );
+    Ok(())
+}
+
+fn load_calibration(root: &std::path::Path, model: &str) -> Result<Calibration> {
+    Calibration::load(root, model).map_err(|e| {
+        Error::Other(format!(
+            "cannot load calibration for {model} ({e}); run `adaq calibrate --model {model}` first"
+        ))
+    })
+}
+
+fn conv_mask(manifest: &adaq::model::Manifest, conv_only: bool) -> Vec<bool> {
+    if conv_only {
+        SweepConfig::conv_only(manifest).mask
+    } else {
+        vec![true; manifest.num_weighted_layers]
+    }
+}
+
+fn cmd_allocate(args: &Args) -> Result<()> {
+    let root = artifacts_dir(args);
+    let model = args.req_flag("model")?;
+    let alloc = parse_allocator(&args.str_flag("allocator", "adaptive"))?;
+    let b1 = args.f64_flag("b1", 8.0)?;
+    let cal = load_calibration(&root, &model)?;
+    let arts = ModelArtifacts::load(&root, &model)?;
+    let stats = cal.layer_stats();
+    let mask = conv_mask(&arts.manifest, args.has("conv-only"));
+    let a = alloc.allocate(&stats, b1, &mask, 16.0);
+    let rows: Vec<Vec<String>> = stats
+        .iter()
+        .zip(&a.bits)
+        .zip(&mask)
+        .map(|((st, &b), &m)| {
+            vec![
+                st.name.clone(),
+                format!("{}", st.s),
+                format!("{:.3}", st.t),
+                format!("{:.3}", st.p),
+                if m { format!("{b:.2}") } else { format!("{b:.0} (frozen)") },
+            ]
+        })
+        .collect();
+    println!(
+        "{}",
+        markdown_table(
+            &["layer", "s_i", "t_i", "p_i", "bits"],
+            &[Align::Left, Align::Right, Align::Right, Align::Right, Align::Right],
+            &rows
+        )
+    );
+    println!(
+        "allocator={} b1={b1} size={:.1} KiB (fp32 {:.1} KiB, {:.2}x compression)",
+        alloc.name(),
+        a.size_bytes(&stats) / 1024.0,
+        arts.manifest.fp32_bytes() / 1024.0,
+        arts.manifest.fp32_bytes() / a.size_bytes(&stats)
+    );
+    Ok(())
+}
+
+fn parse_bits(spec: &str, nwl: usize) -> Result<Vec<f32>> {
+    let v: Vec<f32> = spec
+        .split(',')
+        .map(|s| s.trim().parse::<f32>())
+        .collect::<std::result::Result<_, _>>()
+        .map_err(|e| Error::Cli(format!("--bits: {e}")))?;
+    if v.len() == 1 {
+        return Ok(vec![v[0]; nwl]);
+    }
+    if v.len() != nwl {
+        return Err(Error::Cli(format!(
+            "--bits has {} entries, model has {nwl} weighted layers",
+            v.len()
+        )));
+    }
+    Ok(v)
+}
+
+fn cmd_evaluate(args: &Args) -> Result<()> {
+    let root = artifacts_dir(args);
+    let model = args.req_flag("model")?;
+    let batch = args.usize_flag("batch", 250)?;
+    let session = Session::open(&root, &model, batch)?;
+    let manifest = &session.artifacts.manifest;
+    let nwl = manifest.num_weighted_layers;
+
+    let bits: Vec<f32> = if let Some(spec) = args.flags.get("bits") {
+        parse_bits(spec, nwl)?
+    } else {
+        let alloc = parse_allocator(&args.str_flag("allocator", "adaptive"))?;
+        let b1 = args.f64_flag("b1", 8.0)?;
+        let cal = load_calibration(&root, &model)?;
+        let mask = conv_mask(manifest, args.has("conv-only"));
+        let a = alloc.allocate(&cal.layer_stats(), b1, &mask, 16.0);
+        a.bits.iter().map(|&b| b.round() as f32).collect()
+    };
+    let t = Timer::start();
+    let out = session.eval_qbits(&bits)?;
+    let size = manifest.model_bytes(&bits.iter().map(|&b| b as f64).collect::<Vec<_>>());
+    println!(
+        "bits={:?}\naccuracy {:.4} (baseline {:.4}, drop {:.4})  size {:.1} KiB ({:.2}x)  ‖r_Z‖² {:.4}  [{:.2}s]",
+        bits,
+        out.accuracy,
+        session.baseline().accuracy,
+        session.baseline().accuracy - out.accuracy,
+        size / 1024.0,
+        manifest.fp32_bytes() / size,
+        out.mean_rz_sq,
+        t.seconds()
+    );
+    Ok(())
+}
+
+fn cmd_sweep(args: &Args) -> Result<()> {
+    let root = artifacts_dir(args);
+    let model = args.req_flag("model")?;
+    let batch = args.usize_flag("batch", 250)?;
+    let session = Session::open(&root, &model, batch)?;
+    let cal = load_calibration(&root, &model)?;
+    let stats = cal.layer_stats();
+    let manifest = &session.artifacts.manifest;
+    let mut cfg = if args.has("conv-only") {
+        SweepConfig::conv_only(manifest)
+    } else {
+        SweepConfig::default_for(manifest.num_weighted_layers)
+    };
+    cfg.roundings = args.usize_flag("roundings", 4)?;
+    let names = args.list_flag("allocators", &["adaptive", "sqnr", "equal"]);
+
+    let mut series = Vec::new();
+    let markers = ['o', 'x', '+'];
+    for (i, name) in names.iter().enumerate() {
+        let alloc = parse_allocator(name)?;
+        let t = Timer::start();
+        let result = run_sweep(&session, alloc, &stats, &cfg)?;
+        println!(
+            "{name}: {} points, {} on frontier [{:.1}s]",
+            result.points.len(),
+            result.frontier.len(),
+            t.seconds()
+        );
+        for p in &result.frontier {
+            println!(
+                "  b1={:<4} size={:>9.1} KiB acc={:.4}",
+                p.b1,
+                p.size_bytes / 1024.0,
+                p.accuracy
+            );
+        }
+        series.push(Series::new(
+            name.clone(),
+            markers[i % markers.len()],
+            result
+                .frontier
+                .iter()
+                .map(|p| (p.size_bytes / 1024.0, p.accuracy))
+                .collect(),
+        ));
+        if let Some(outdir) = args.flags.get("out") {
+            let mut csv = adaq::io::csv::CsvWriter::create(
+                format!("{outdir}/{model}_{name}.csv"),
+                &["b1", "size_bytes", "accuracy"],
+            )?;
+            for p in &result.points {
+                csv.row(&[p.b1, p.size_bytes, p.accuracy])?;
+            }
+            csv.flush()?;
+        }
+    }
+    println!(
+        "{}",
+        ascii_plot(
+            &format!("{model}: model size (KiB) vs accuracy"),
+            &series,
+            64,
+            18,
+            false,
+            false
+        )
+    );
+    Ok(())
+}
+
+fn cmd_serve(args: &Args) -> Result<()> {
+    let root = artifacts_dir(args);
+    let model = args.req_flag("model")?;
+    let session = Session::open(&root, &model, 1)?;
+    let nwl = session.artifacts.manifest.num_weighted_layers;
+    let bits = match args.flags.get("bits") {
+        Some(spec) => parse_bits(spec, nwl)?,
+        None => vec![8.0; nwl],
+    };
+    let n = args.usize_flag("requests", 200)?;
+    let test = Dataset::load(&root, "test")?;
+    let stats = serve_loop(&session, &test, &bits, n)?;
+    println!(
+        "{n} requests: acc {:.4}, p50 {:.2} ms, p99 {:.2} ms, {:.1} req/s",
+        stats.accuracy(),
+        stats.p50_ms,
+        stats.p99_ms,
+        stats.throughput_rps
+    );
+    Ok(())
+}
+
+fn cmd_export(args: &Args) -> Result<()> {
+    let root = artifacts_dir(args);
+    let model = args.req_flag("model")?;
+    let arts = ModelArtifacts::load(&root, &model)?;
+    let nwl = arts.manifest.num_weighted_layers;
+    let bits_f: Vec<f32> = if let Some(spec) = args.flags.get("bits") {
+        parse_bits(spec, nwl)?
+    } else {
+        let alloc = parse_allocator(&args.str_flag("allocator", "adaptive"))?;
+        let b1 = args.f64_flag("b1", 8.0)?;
+        let cal = load_calibration(&root, &model)?;
+        let mask = conv_mask(&arts.manifest, args.has("conv-only"));
+        alloc
+            .allocate(&cal.layer_stats(), b1, &mask, 16.0)
+            .bits
+            .iter()
+            .map(|&b| b.round() as f32)
+            .collect()
+    };
+    let bits: Vec<u32> = bits_f.iter().map(|&b| b.round().max(0.0) as u32).collect();
+    let out = args.str_flag("out", &format!("{}/{model}/export", root.display()));
+    let summary = adaq::model::export_quantized(&arts, &bits, &out)?;
+    println!(
+        "exported {} layers to {out}: {:.1} KiB packed ({:.2}x vs fp32 weights)",
+        summary.layers.len(),
+        summary.packed_bytes as f64 / 1024.0,
+        summary.compression()
+    );
+    Ok(())
+}
+
+fn cmd_figures(args: &Args) -> Result<()> {
+    if let Some(models) = args.flags.get("models") {
+        std::env::set_var("ADAQ_MODELS", models);
+    }
+    std::env::set_var("ADAQ_ARTIFACTS", artifacts_dir(args));
+    adaq::bench_support::run_figure_sweep(
+        "fig6_conv_only",
+        true,
+        "Fig. 6 — size vs accuracy (conv layers quantized, FC @ 16 bits)",
+    );
+    adaq::bench_support::run_figure_sweep(
+        "fig8_all_layers",
+        false,
+        "Fig. 8 — size vs accuracy (all layers quantized)",
+    );
+    Ok(())
+}
+
+fn cmd_selfcheck(args: &Args) -> Result<()> {
+    let root = artifacts_dir(args);
+    let models = args.list_flag(
+        "models",
+        &["mini_alexnet", "mini_vgg", "mini_resnet", "mini_inception"],
+    );
+    let test = Dataset::load(&root, "test")?;
+    println!("dataset: {} test images", test.len());
+    let mut failures = 0;
+    for model in &models {
+        print!("{model}: ");
+        let session = match Session::open(&root, model, 250) {
+            Ok(s) => s,
+            Err(e) => {
+                println!("FAIL (open: {e})");
+                failures += 1;
+                continue;
+            }
+        };
+        let base = session.baseline().accuracy;
+        // cross-check PJRT vs pure-rust nn on one batch
+        let arts = &session.artifacts;
+        let exec = GraphExecutor::new(&arts.manifest);
+        let xb = test.batch(0, 16).unwrap();
+        let params = arts.weights.tensors();
+        let rust_logits = exec.forward(&xb, &params)?;
+        let pjrt_row = &session.baseline().logits[0];
+        let mut maxdiff = 0f32;
+        for (i, &v) in rust_logits.data().iter().take(16 * arts.manifest.num_classes).enumerate() {
+            maxdiff = maxdiff.max((v - pjrt_row[i]).abs());
+        }
+        // qforward at 16 bits ≈ fp32 forward
+        let q16 = session.eval_qbits(&vec![16.0; arts.manifest.num_weighted_layers])?;
+        let ok = maxdiff < 1e-3 && (q16.accuracy - base).abs() < 0.01;
+        if ok {
+            println!(
+                "OK  acc={base:.4} |pjrt−rust|∞={maxdiff:.2e} q16 acc={:.4}",
+                q16.accuracy
+            );
+        } else {
+            println!(
+                "FAIL acc={base:.4} |pjrt−rust|∞={maxdiff:.2e} q16 acc={:.4}",
+                q16.accuracy
+            );
+            failures += 1;
+        }
+    }
+    // histogram of adversarial margins for the first model (Fig. 7 preview)
+    if let Ok(session) = Session::open(&root, &models[0], 250) {
+        let st = adversarial_stats(&session, 12);
+        println!(
+            "\n{}",
+            ascii_histogram(
+                &format!("{}: ‖r*‖² histogram (mean {:.3})", models[0], st.mean_rstar),
+                &st.hist_edges,
+                &st.hist_counts,
+                40
+            )
+        );
+    }
+    if failures > 0 {
+        return Err(Error::Other(format!("{failures} selfcheck failures")));
+    }
+    println!("selfcheck OK");
+    Ok(())
+}

@@ -1,0 +1,35 @@
+//! Adversarial-noise statistics on the last feature map Z (Eq. 13 input):
+//! for a softmax (max) classifier the minimum misclassifying noise is
+//! r* = ((z₍₂₎−z₍₁₎)/2, (z₍₁₎−z₍₂₎)/2, 0, …) with ‖r*‖² = (z₍₁₎−z₍₂₎)²/2.
+
+use crate::coordinator::Session;
+use crate::util::{mean, median};
+
+/// Margin statistics of the baseline model (Fig. 7's histogram data).
+#[derive(Clone, Debug)]
+pub struct AdversarialStats {
+    /// mean_r* — the denominator of Eq. 13.
+    pub mean_rstar: f64,
+    pub median_rstar: f64,
+    pub max_rstar: f64,
+    /// Histogram of ‖r*‖² with `bins` equal-width buckets over
+    /// [0, max_rstar].
+    pub hist_counts: Vec<usize>,
+    pub hist_edges: Vec<f64>,
+}
+
+/// Compute margin statistics from the session's cached baseline.
+pub fn adversarial_stats(session: &Session, bins: usize) -> AdversarialStats {
+    let margins = &session.baseline().margins;
+    let mean_rstar = mean(margins);
+    let median_rstar = median(margins);
+    let max_rstar = margins.iter().copied().fold(0.0f64, f64::max);
+    let mut hist_counts = vec![0usize; bins];
+    let width = if max_rstar > 0.0 { max_rstar / bins as f64 } else { 1.0 };
+    for &m in margins {
+        let b = ((m / width) as usize).min(bins - 1);
+        hist_counts[b] += 1;
+    }
+    let hist_edges = (0..=bins).map(|i| i as f64 * width).collect();
+    AdversarialStats { mean_rstar, median_rstar, max_rstar, hist_counts, hist_edges }
+}

@@ -1,0 +1,21 @@
+//! Measurement machinery of the paper:
+//!
+//! * adversarial margin statistics `mean_r* = E[(z₍₁₎−z₍₂₎)²/2]` (Eq. 13),
+//! * robustness calibration t_i via geometric binary search (Alg. 1),
+//! * noise-transfer prefactor p_i (Alg. 2, Eq. 16),
+//! * the linearity (Fig. 4) and additivity (Fig. 5) probes that validate
+//!   the assumptions behind Eq. 20.
+//!
+//! Everything here drives forward passes through the
+//! [`Session`](crate::coordinator::Session) PJRT hot path.
+
+mod adversarial;
+mod probes;
+mod robustness;
+
+pub use adversarial::{adversarial_stats, AdversarialStats};
+pub use probes::{additivity_probe, linearity_probe, AdditivityPoint, LinearityCurve};
+pub use robustness::{
+    calibrate_model, calibrate_t, estimate_p, estimate_p_robust, CalibratedLayer, Calibration,
+    RobustnessCurve, SearchParams, P_REF_BITS_MULTI,
+};

@@ -1,0 +1,95 @@
+//! Assumption probes: linearity (Fig. 4) and additivity (Fig. 5).
+
+use crate::coordinator::Session;
+use crate::quant::{fake_quant, quant_noise};
+use crate::rng::{fill_uniform_pm_half, Pcg32};
+use crate::tensor::Tensor;
+use crate::util::pearson;
+use crate::Result;
+
+/// Per-layer linearity curve: ‖r_W‖² vs resulting ‖r_Z‖² for a geometric
+/// ladder of noise scales (Fig. 4).
+#[derive(Clone, Debug)]
+pub struct LinearityCurve {
+    pub layer: String,
+    pub qindex: usize,
+    /// (‖r_W‖², mean‖r_Z‖², accuracy) per scale.
+    pub points: Vec<(f64, f64, f64)>,
+    /// Pearson r of the curve restricted to the small-noise half — the
+    /// paper's claim is linearity in that regime.
+    pub small_noise_pearson: f64,
+}
+
+/// Probe linearity of noise transfer through layer `qi`: inject
+/// `k·U(−0.5,0.5)` for scales `ks`, record (‖r_W‖², ‖r_Z‖², acc).
+pub fn linearity_probe(
+    session: &Session,
+    qi: usize,
+    ks: &[f64],
+    seed: u64,
+) -> Result<LinearityCurve> {
+    let (pidx, w) = session.layer_weight(qi)?;
+    let name = session.artifacts.manifest.weighted_layers()[qi].name.clone();
+    let mut rng = Pcg32::new(0x11AE + seed + qi as u64);
+    let mut unit = vec![0f32; w.len()];
+    fill_uniform_pm_half(&mut rng, &mut unit);
+    let unit = Tensor::from_vec(w.shape(), unit).unwrap();
+
+    let mut points = Vec::with_capacity(ks.len());
+    for &k in ks {
+        let noise = unit.scale(k as f32);
+        let rw_sq = noise.l2_sq();
+        let perturbed = w.add(&noise)?;
+        let out = session.eval_with_overrides(&[(pidx, &perturbed)])?;
+        points.push((rw_sq, out.mean_rz_sq, out.accuracy));
+    }
+    // linearity is judged on the small-noise half of the ladder
+    let half = (points.len() / 2).max(2).min(points.len());
+    let xs: Vec<f64> = points[..half].iter().map(|p| p.0).collect();
+    let ys: Vec<f64> = points[..half].iter().map(|p| p.1).collect();
+    let small_noise_pearson = pearson(&xs, &ys);
+    Ok(LinearityCurve { layer: name, qindex: qi, points, small_noise_pearson })
+}
+
+/// One additivity measurement (Fig. 5): at a given bit-width, compare
+/// Σᵢ‖r_{Z_i}‖² (each layer quantized alone) against ‖r_Z‖² (all layers
+/// quantized together).
+#[derive(Clone, Debug)]
+pub struct AdditivityPoint {
+    pub bits: f64,
+    /// Σᵢ mean‖r_{Z_i}‖² from per-layer quantization.
+    pub sum_individual: f64,
+    /// mean‖r_Z‖² with all layers quantized simultaneously.
+    pub joint: f64,
+    /// Σᵢ‖r_{W_i}‖² (weight-domain noise, diagnostics).
+    pub rw_sq: f64,
+    /// Accuracy of the jointly quantized model.
+    pub joint_accuracy: f64,
+}
+
+/// Run the additivity probe across `bit_widths` (host-side quantization
+/// for the per-layer terms, the Pallas `qforward` for the joint term).
+pub fn additivity_probe(session: &Session, bit_widths: &[f64]) -> Result<Vec<AdditivityPoint>> {
+    let nwl = session.artifacts.manifest.num_weighted_layers;
+    let mut out = Vec::with_capacity(bit_widths.len());
+    for &bits in bit_widths {
+        let mut sum_individual = 0f64;
+        let mut rw_sq = 0f64;
+        for qi in 0..nwl {
+            let (pidx, w) = session.layer_weight(qi)?;
+            let wq = fake_quant(w, bits as f32);
+            rw_sq += quant_noise(w, bits as f32);
+            let eval = session.eval_with_overrides(&[(pidx, &wq)])?;
+            sum_individual += eval.mean_rz_sq;
+        }
+        let joint = session.eval_qbits(&vec![bits as f32; nwl])?;
+        out.push(AdditivityPoint {
+            bits,
+            sum_individual,
+            joint: joint.mean_rz_sq,
+            rw_sq,
+            joint_accuracy: joint.accuracy,
+        });
+    }
+    Ok(out)
+}

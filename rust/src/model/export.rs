@@ -1,0 +1,233 @@
+//! Quantized-model export: materialize an allocation as a deployable
+//! artifact — packed b-bit weight indices + per-layer codebook metadata
+//! (TNSR container + JSON sidecar). This is the "ship it to the mobile
+//! device" endpoint of the paper's pipeline; `adaq export` drives it.
+
+use std::path::Path;
+
+use crate::io::json::Json;
+use crate::io::tnsr::{write_tnsr, TnsrValue};
+use crate::model::ModelArtifacts;
+use crate::quant::QuantRange;
+use crate::tensor::{IntTensor, Tensor};
+use crate::{Error, Result};
+
+/// One exported layer's quantization metadata.
+#[derive(Clone, Debug)]
+pub struct ExportedLayer {
+    pub name: String,
+    pub bits: u32,
+    pub lo: f32,
+    pub hi: f32,
+    pub packed_words: usize,
+}
+
+/// Export result summary.
+#[derive(Clone, Debug)]
+pub struct ExportSummary {
+    pub layers: Vec<ExportedLayer>,
+    pub packed_bytes: usize,
+    pub fp32_bytes: usize,
+}
+
+impl ExportSummary {
+    pub fn compression(&self) -> f64 {
+        self.fp32_bytes as f64 / self.packed_bytes.max(1) as f64
+    }
+}
+
+/// Pack b-bit indices little-endian into u32 words.
+fn pack_indices(indices: &[u32], bits: u32) -> Vec<i32> {
+    let mut words: Vec<u32> = Vec::with_capacity((indices.len() * bits as usize + 31) / 32);
+    let mut acc = 0u64;
+    let mut nbits = 0u32;
+    for &idx in indices {
+        acc |= (idx as u64) << nbits;
+        nbits += bits;
+        while nbits >= 32 {
+            words.push((acc & 0xFFFF_FFFF) as u32);
+            acc >>= 32;
+            nbits -= 32;
+        }
+    }
+    if nbits > 0 {
+        words.push((acc & 0xFFFF_FFFF) as u32);
+    }
+    words.into_iter().map(|w| w as i32).collect()
+}
+
+/// Unpack b-bit indices from u32 words.
+fn unpack_indices(words: &[i32], bits: u32, count: usize) -> Vec<u32> {
+    let mut out = Vec::with_capacity(count);
+    let mask = (1u64 << bits) - 1;
+    let mut acc = 0u64;
+    let mut nbits = 0u32;
+    let mut wi = 0usize;
+    while out.len() < count {
+        if nbits < bits {
+            acc |= (words[wi] as u32 as u64) << nbits;
+            wi += 1;
+            nbits += 32;
+        }
+        out.push((acc & mask) as u32);
+        acc >>= bits;
+        nbits -= bits;
+    }
+    out
+}
+
+/// Quantize a tensor into (indices, range) at integer `bits`.
+fn quantize_indices(w: &Tensor, bits: u32) -> (Vec<u32>, QuantRange) {
+    let range = QuantRange::of(w);
+    let span = range.span();
+    let nlev = (1u64 << bits) as f32;
+    let step = if span > 0.0 { span / nlev } else { 1.0 };
+    let max_q = nlev - 1.0;
+    // same op order as quant::fake_quant_into (multiply by 1/step), so the
+    // exported indices decode to bit-identical reconstructions
+    let inv_step = 1.0 / step;
+    let idx = w
+        .data()
+        .iter()
+        .map(|&v| ((v - range.lo) * inv_step).floor().clamp(0.0, max_q) as u32)
+        .collect();
+    (idx, range)
+}
+
+/// Reconstruct a tensor from packed indices + range (midpoint decode).
+pub fn dequantize(
+    words: &[i32],
+    bits: u32,
+    count: usize,
+    shape: &[usize],
+    lo: f32,
+    hi: f32,
+) -> Result<Tensor> {
+    let span = hi - lo;
+    let nlev = (1u64 << bits) as f32;
+    let step = if span > 0.0 { span / nlev } else { 1.0 };
+    let idx = unpack_indices(words, bits, count);
+    let data = idx.iter().map(|&q| lo + (q as f32 + 0.5) * step).collect();
+    Tensor::from_vec(shape, data)
+}
+
+/// Export the model's weights quantized per `bits` (one integer width per
+/// weighted layer; 0 = keep fp32) into `<out>/quantized.tnsr` +
+/// `<out>/quantized.json`.
+pub fn export_quantized(
+    arts: &ModelArtifacts,
+    bits: &[u32],
+    out_dir: impl AsRef<Path>,
+) -> Result<ExportSummary> {
+    let manifest = &arts.manifest;
+    let wl = manifest.weighted_layers();
+    if bits.len() != wl.len() {
+        return Err(Error::Model(format!(
+            "bits has {} entries, model has {} weighted layers",
+            bits.len(),
+            wl.len()
+        )));
+    }
+    std::fs::create_dir_all(out_dir.as_ref())?;
+    let mut tensors: Vec<(String, TnsrValue)> = Vec::new();
+    let mut meta_layers = Vec::new();
+    let mut layers = Vec::new();
+    let mut packed_bytes = 0usize;
+    for (layer, &b) in wl.iter().zip(bits) {
+        let w = arts.weights.weight(&layer.name)?;
+        let bias = arts.weights.bias(&layer.name)?;
+        if b == 0 || b > 16 {
+            tensors.push((format!("{}.w.f32", layer.name), TnsrValue::F32(w.clone())));
+            packed_bytes += 4 * w.len();
+        } else {
+            let (idx, range) = quantize_indices(w, b);
+            let words = pack_indices(&idx, b);
+            packed_bytes += 4 * words.len();
+            layers.push(ExportedLayer {
+                name: layer.name.clone(),
+                bits: b,
+                lo: range.lo,
+                hi: range.hi,
+                packed_words: words.len(),
+            });
+            meta_layers.push(Json::obj(vec![
+                ("name", Json::Str(layer.name.clone())),
+                ("bits", Json::Num(b as f64)),
+                ("lo", Json::Num(range.lo as f64)),
+                ("hi", Json::Num(range.hi as f64)),
+                ("count", Json::Num(w.len() as f64)),
+                (
+                    "shape",
+                    Json::arr_f64(&w.shape().iter().map(|&d| d as f64).collect::<Vec<_>>()),
+                ),
+            ]));
+            tensors.push((
+                format!("{}.w.q{b}", layer.name),
+                TnsrValue::I32(IntTensor::from_vec(&[words.len()], words)?),
+            ));
+        }
+        // biases ship fp32 (the paper's convention)
+        tensors.push((format!("{}.b.f32", layer.name), TnsrValue::F32(bias.clone())));
+        packed_bytes += 4 * bias.len();
+    }
+    write_tnsr(out_dir.as_ref().join("quantized.tnsr"), &tensors)?;
+    Json::obj(vec![
+        ("model", Json::Str(manifest.model.clone())),
+        ("layers", Json::Arr(meta_layers)),
+    ])
+    .write_file(out_dir.as_ref().join("quantized.json"))?;
+    Ok(ExportSummary {
+        layers,
+        packed_bytes,
+        fp32_bytes: manifest.total_quantizable_params * 4,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::{fill_normal, Pcg32};
+
+    fn randn(n: usize, seed: u64) -> Tensor {
+        let mut rng = Pcg32::new(seed);
+        let mut data = vec![0f32; n];
+        fill_normal(&mut rng, &mut data);
+        Tensor::from_vec(&[n], data).unwrap()
+    }
+
+    #[test]
+    fn pack_unpack_roundtrip() {
+        for bits in [1u32, 3, 4, 5, 8, 11, 16] {
+            let mask = (1u32 << bits) - 1;
+            let mut rng = Pcg32::new(bits as u64);
+            let idx: Vec<u32> = (0..1000).map(|_| rng.next_u32() & mask).collect();
+            let words = pack_indices(&idx, bits);
+            assert_eq!(words.len(), (1000 * bits as usize + 31) / 32);
+            let back = unpack_indices(&words, bits, 1000);
+            assert_eq!(idx, back, "bits {bits}");
+        }
+    }
+
+    #[test]
+    fn quantize_dequantize_matches_fake_quant() {
+        let w = randn(777, 3);
+        for bits in [2u32, 5, 8] {
+            let (idx, range) = quantize_indices(&w, bits);
+            let words = pack_indices(&idx, bits);
+            let back =
+                dequantize(&words, bits, w.len(), w.shape(), range.lo, range.hi).unwrap();
+            let fq = crate::quant::fake_quant(&w, bits as f32);
+            for (a, b) in back.data().iter().zip(fq.data()) {
+                assert!((a - b).abs() < 2e-6, "bits {bits}: {a} vs {b}");
+            }
+        }
+    }
+
+    #[test]
+    fn packed_size_is_b_over_32() {
+        let w = randn(32_000, 4);
+        let (idx, _) = quantize_indices(&w, 4);
+        let words = pack_indices(&idx, 4);
+        assert_eq!(words.len(), 32_000 * 4 / 32);
+    }
+}

@@ -1,0 +1,338 @@
+//! Model metadata: the layer-graph manifest emitted by the Python compile
+//! path, the trained weight store, and Σ sᵢ·bᵢ size accounting.
+
+pub mod export;
+
+pub use export::{dequantize, export_quantized, ExportSummary, ExportedLayer};
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use crate::io::json::Json;
+use crate::io::tnsr::{read_tnsr, TnsrValue};
+use crate::tensor::Tensor;
+use crate::{Error, Result};
+
+/// Layer kinds understood by both L2 (JAX) and the pure-Rust [`crate::nn`]
+/// interpreter.
+#[derive(Clone, Debug, PartialEq)]
+pub enum LayerKind {
+    Conv { k: usize, stride: usize, pad: usize, cin: usize, cout: usize },
+    Dense { cin: usize, cout: usize },
+    Relu,
+    MaxPool { k: usize, stride: usize, pad: usize },
+    Gap,
+    Flatten,
+    Add,
+    Concat,
+}
+
+/// One node of the layer graph.
+#[derive(Clone, Debug)]
+pub struct Layer {
+    pub name: String,
+    pub kind: LayerKind,
+    pub inputs: Vec<String>,
+    /// Index of this layer among weighted layers (quantization index), if
+    /// the layer owns parameters.
+    pub qindex: Option<usize>,
+    /// Executable parameter slots for (w, b), if weighted.
+    pub param_idx: Option<(usize, usize)>,
+    /// Quantizable parameter count s_i (weights only), if weighted.
+    pub s_i: Option<usize>,
+}
+
+impl Layer {
+    pub fn is_weighted(&self) -> bool {
+        self.qindex.is_some()
+    }
+}
+
+/// Parsed `manifest.json`.
+#[derive(Clone, Debug)]
+pub struct Manifest {
+    pub model: String,
+    pub input_shape: Vec<usize>,
+    pub num_classes: usize,
+    pub output: String,
+    pub num_weighted_layers: usize,
+    pub total_quantizable_params: usize,
+    pub batch_sizes: Vec<usize>,
+    pub final_test_acc: f64,
+    pub layers: Vec<Layer>,
+}
+
+impl Manifest {
+    /// Parse `manifest.json` from an artifact directory.
+    pub fn load(dir: impl AsRef<Path>) -> Result<Manifest> {
+        let path = dir.as_ref().join("manifest.json");
+        let j = Json::parse_file(&path)?;
+        Self::from_json(&j).map_err(|e| match e {
+            Error::Other(msg) => Error::format(path.display().to_string(), msg),
+            e => e,
+        })
+    }
+
+    pub fn from_json(j: &Json) -> Result<Manifest> {
+        let layers_json = j
+            .req("layers")?
+            .as_arr()
+            .ok_or_else(|| Error::Other("layers must be an array".into()))?;
+        let mut layers = Vec::with_capacity(layers_json.len());
+        for lj in layers_json {
+            layers.push(parse_layer(lj)?);
+        }
+        let usize_of = |k: &str| -> Result<usize> {
+            j.req(k)?
+                .as_usize()
+                .ok_or_else(|| Error::Other(format!("{k} must be a number")))
+        };
+        Ok(Manifest {
+            model: j.req("model")?.as_str().unwrap_or_default().to_string(),
+            input_shape: j
+                .req("input_shape")?
+                .as_arr()
+                .map(|a| a.iter().filter_map(Json::as_usize).collect())
+                .unwrap_or_default(),
+            num_classes: usize_of("num_classes")?,
+            output: j.req("output")?.as_str().unwrap_or_default().to_string(),
+            num_weighted_layers: usize_of("num_weighted_layers")?,
+            total_quantizable_params: usize_of("total_quantizable_params")?,
+            batch_sizes: j
+                .get("batch_sizes")
+                .and_then(Json::as_arr)
+                .map(|a| a.iter().filter_map(Json::as_usize).collect())
+                .unwrap_or_default(),
+            final_test_acc: j
+                .get("final_test_acc")
+                .and_then(Json::as_f64)
+                .unwrap_or(f64::NAN),
+            layers,
+        })
+    }
+
+    /// Weighted layers in graph order (index = quantization index).
+    pub fn weighted_layers(&self) -> Vec<&Layer> {
+        let mut wl: Vec<&Layer> = self.layers.iter().filter(|l| l.is_weighted()).collect();
+        wl.sort_by_key(|l| l.qindex.unwrap());
+        wl
+    }
+
+    /// Per-layer quantizable sizes s_i in quantization-index order.
+    pub fn layer_sizes(&self) -> Vec<usize> {
+        self.weighted_layers()
+            .iter()
+            .map(|l| l.s_i.unwrap())
+            .collect()
+    }
+
+    /// Names of weighted layers in quantization-index order.
+    pub fn layer_names(&self) -> Vec<String> {
+        self.weighted_layers()
+            .iter()
+            .map(|l| l.name.clone())
+            .collect()
+    }
+
+    /// Quantized model size in bits for a bit-width vector (Σ sᵢ·bᵢ).
+    /// Biases and non-quantized layers are excluded, matching the paper's
+    /// objective (Eq. 1).
+    pub fn model_bits(&self, bits: &[f64]) -> f64 {
+        self.layer_sizes()
+            .iter()
+            .zip(bits)
+            .map(|(&s, &b)| s as f64 * b)
+            .sum()
+    }
+
+    /// Size in bytes for a bit allocation (Σ sᵢ·bᵢ / 8).
+    pub fn model_bytes(&self, bits: &[f64]) -> f64 {
+        self.model_bits(bits) / 8.0
+    }
+
+    /// fp32 baseline size in bytes of the quantizable parameters.
+    pub fn fp32_bytes(&self) -> f64 {
+        self.total_quantizable_params as f64 * 4.0
+    }
+}
+
+fn parse_layer(j: &Json) -> Result<Layer> {
+    let name = j.req("name")?.as_str().unwrap_or_default().to_string();
+    let kind_s = j.req("kind")?.as_str().unwrap_or_default().to_string();
+    let geti = |k: &str| -> Result<usize> {
+        j.req(k)?
+            .as_usize()
+            .ok_or_else(|| Error::Other(format!("layer {name}: {k} must be a number")))
+    };
+    let kind = match kind_s.as_str() {
+        "conv" => LayerKind::Conv {
+            k: geti("k")?,
+            stride: geti("stride")?,
+            pad: geti("pad")?,
+            cin: geti("cin")?,
+            cout: geti("cout")?,
+        },
+        "dense" => LayerKind::Dense { cin: geti("cin")?, cout: geti("cout")? },
+        "relu" => LayerKind::Relu,
+        "maxpool" => LayerKind::MaxPool { k: geti("k")?, stride: geti("stride")?, pad: geti("pad")? },
+        "gap" => LayerKind::Gap,
+        "flatten" => LayerKind::Flatten,
+        "add" => LayerKind::Add,
+        "concat" => LayerKind::Concat,
+        other => return Err(Error::Other(format!("layer {name}: unknown kind {other:?}"))),
+    };
+    let inputs = j
+        .req("inputs")?
+        .as_arr()
+        .map(|a| a.iter().filter_map(|v| v.as_str().map(String::from)).collect())
+        .unwrap_or_default();
+    let qindex = j.get("qindex").and_then(Json::as_usize);
+    let param_idx = match (
+        j.get("param_idx_w").and_then(Json::as_usize),
+        j.get("param_idx_b").and_then(Json::as_usize),
+    ) {
+        (Some(w), Some(b)) => Some((w, b)),
+        _ => None,
+    };
+    let s_i = j.get("s_i").and_then(Json::as_usize);
+    Ok(Layer { name, kind, inputs, qindex, param_idx, s_i })
+}
+
+/// Trained weights, in executable-parameter order [w0, b0, w1, b1, …].
+#[derive(Clone, Debug)]
+pub struct WeightStore {
+    /// (name, tensor) in file order == parameter order.
+    pub params: Vec<(String, Tensor)>,
+    by_name: BTreeMap<String, usize>,
+}
+
+impl WeightStore {
+    /// Load `weights.tnsr` from an artifact directory.
+    pub fn load(dir: impl AsRef<Path>) -> Result<WeightStore> {
+        let path = dir.as_ref().join("weights.tnsr");
+        let raw = read_tnsr(&path)?;
+        let mut params = Vec::with_capacity(raw.len());
+        for (name, v) in raw {
+            match v {
+                TnsrValue::F32(t) => params.push((name, t)),
+                TnsrValue::I32(_) => {
+                    return Err(Error::Model(format!("weight {name} has i32 dtype")))
+                }
+            }
+        }
+        let by_name = params
+            .iter()
+            .enumerate()
+            .map(|(i, (n, _))| (n.clone(), i))
+            .collect();
+        Ok(WeightStore { params, by_name })
+    }
+
+    pub fn get(&self, name: &str) -> Option<&Tensor> {
+        self.by_name.get(name).map(|&i| &self.params[i].1)
+    }
+
+    /// Tensor for a layer's weight (`<layer>.w`).
+    pub fn weight(&self, layer: &str) -> Result<&Tensor> {
+        self.get(&format!("{layer}.w"))
+            .ok_or_else(|| Error::Model(format!("no weight for layer {layer}")))
+    }
+
+    /// Tensor for a layer's bias (`<layer>.b`).
+    pub fn bias(&self, layer: &str) -> Result<&Tensor> {
+        self.get(&format!("{layer}.b"))
+            .ok_or_else(|| Error::Model(format!("no bias for layer {layer}")))
+    }
+
+    /// Flat clone of all parameter tensors (the mutable working set the
+    /// coordinator perturbs).
+    pub fn tensors(&self) -> Vec<Tensor> {
+        self.params.iter().map(|(_, t)| t.clone()).collect()
+    }
+}
+
+/// An artifact directory: manifest + weights + HLO paths.
+#[derive(Clone, Debug)]
+pub struct ModelArtifacts {
+    pub dir: PathBuf,
+    pub manifest: Manifest,
+    pub weights: WeightStore,
+}
+
+impl ModelArtifacts {
+    pub fn load(artifacts_root: impl AsRef<Path>, model: &str) -> Result<ModelArtifacts> {
+        let dir = artifacts_root.as_ref().join(model);
+        if !dir.is_dir() {
+            return Err(Error::Model(format!(
+                "no artifact dir {} — run `make artifacts`",
+                dir.display()
+            )));
+        }
+        let manifest = Manifest::load(&dir)?;
+        let weights = WeightStore::load(&dir)?;
+        // sanity: parameter count must match manifest
+        let expect = 2 * manifest.num_weighted_layers;
+        if weights.params.len() != expect {
+            return Err(Error::Model(format!(
+                "{model}: weights.tnsr has {} tensors, manifest wants {expect}",
+                weights.params.len()
+            )));
+        }
+        Ok(ModelArtifacts { dir, manifest, weights })
+    }
+
+    /// Path to a lowered HLO module.
+    pub fn hlo_path(&self, variant: &str, batch: usize) -> PathBuf {
+        self.dir.join(format!("{variant}_b{batch}.hlo.txt"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const MANIFEST: &str = r#"{
+        "model": "toy", "input_shape": [16,16,1], "num_classes": 10,
+        "output": "fc", "num_weighted_layers": 2,
+        "total_quantizable_params": 244,
+        "batch_sizes": [1, 250], "final_test_acc": 0.9,
+        "layers": [
+          {"name":"conv1","kind":"conv","inputs":["input"],"cin":1,"cout":4,
+           "k":3,"stride":1,"pad":1,"param_idx_w":1,"param_idx_b":2,
+           "qindex":0,"s_i":36},
+          {"name":"relu1","kind":"relu","inputs":["conv1"]},
+          {"name":"gap","kind":"gap","inputs":["relu1"]},
+          {"name":"fc","kind":"dense","inputs":["gap"],"cin":4,"cout":10,
+           "param_idx_w":3,"param_idx_b":4,"qindex":1,"s_i":40}
+        ]
+    }"#;
+
+    #[test]
+    fn parses_manifest() {
+        let m = Manifest::from_json(&Json::parse(MANIFEST).unwrap()).unwrap();
+        assert_eq!(m.model, "toy");
+        assert_eq!(m.num_weighted_layers, 2);
+        assert_eq!(m.layer_sizes(), vec![36, 40]);
+        assert_eq!(m.layer_names(), vec!["conv1", "fc"]);
+        assert_eq!(m.layers.len(), 4);
+        assert_eq!(
+            m.layers[0].kind,
+            LayerKind::Conv { k: 3, stride: 1, pad: 1, cin: 1, cout: 4 }
+        );
+    }
+
+    #[test]
+    fn size_accounting() {
+        let m = Manifest::from_json(&Json::parse(MANIFEST).unwrap()).unwrap();
+        // 36·8 + 40·4 bits
+        assert_eq!(m.model_bits(&[8.0, 4.0]), 36.0 * 8.0 + 40.0 * 4.0);
+        assert_eq!(m.fp32_bytes(), 244.0 * 4.0);
+        assert!((m.model_bytes(&[32.0, 32.0]) - 4.0 * 76.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn rejects_unknown_kind() {
+        let bad = MANIFEST.replace("\"relu\"", "\"warp\"");
+        assert!(Manifest::from_json(&Json::parse(&bad).unwrap()).is_err());
+    }
+}

@@ -1,0 +1,209 @@
+//! Layer-graph interpreter: executes a [`Manifest`](crate::model::Manifest)
+//! over NHWC tensors using the primitives in [`super::ops`].
+//!
+//! This is the pure-Rust twin of `python/compile/model.py::forward` and is
+//! held to agreement with the PJRT execution of the lowered HLO (see
+//! `rust/tests/pjrt_cross_check.rs`).
+
+use std::collections::HashMap;
+
+use crate::model::{Layer, LayerKind, Manifest};
+use crate::tensor::Tensor;
+use crate::{Error, Result};
+
+use super::ops;
+
+/// Executes one manifest graph; parameters are passed per call so the
+/// coordinator can feed perturbed / quantized weights.
+pub struct GraphExecutor<'m> {
+    manifest: &'m Manifest,
+}
+
+impl<'m> GraphExecutor<'m> {
+    pub fn new(manifest: &'m Manifest) -> Self {
+        GraphExecutor { manifest }
+    }
+
+    /// Forward pass: `params` is the executable-order parameter list
+    /// [w0, b0, w1, b1, …]; returns logits `[n, num_classes]`.
+    pub fn forward(&self, x: &Tensor, params: &[Tensor]) -> Result<Tensor> {
+        let mut acts: HashMap<&str, Tensor> = HashMap::new();
+        acts.insert("input", x.clone());
+        for layer in &self.manifest.layers {
+            let out = self.eval_layer(layer, &acts, params)?;
+            acts.insert(layer.name.as_str(), out);
+        }
+        acts.remove(self.manifest.output.as_str())
+            .ok_or_else(|| Error::Model(format!("output layer {} missing", self.manifest.output)))
+    }
+
+    fn input<'a>(
+        &self,
+        layer: &Layer,
+        acts: &'a HashMap<&str, Tensor>,
+        idx: usize,
+    ) -> Result<&'a Tensor> {
+        let name = layer
+            .inputs
+            .get(idx)
+            .ok_or_else(|| Error::Model(format!("layer {} missing input {idx}", layer.name)))?;
+        acts.get(name.as_str())
+            .ok_or_else(|| Error::Model(format!("layer {}: input {name} not computed", layer.name)))
+    }
+
+    fn params_of<'a>(&self, layer: &Layer, params: &'a [Tensor]) -> Result<(&'a Tensor, &'a Tensor)> {
+        let (wi, bi) = layer
+            .param_idx
+            .ok_or_else(|| Error::Model(format!("layer {} has no params", layer.name)))?;
+        // param_idx counts the executable slots where slot 0 is the input
+        // batch; the params slice starts at slot 1.
+        let w = params
+            .get(wi - 1)
+            .ok_or_else(|| Error::Model(format!("param {wi} out of range")))?;
+        let b = params
+            .get(bi - 1)
+            .ok_or_else(|| Error::Model(format!("param {bi} out of range")))?;
+        Ok((w, b))
+    }
+
+    fn eval_layer(
+        &self,
+        layer: &Layer,
+        acts: &HashMap<&str, Tensor>,
+        params: &[Tensor],
+    ) -> Result<Tensor> {
+        match &layer.kind {
+            LayerKind::Conv { stride, pad, .. } => {
+                let x = self.input(layer, acts, 0)?;
+                let (w, b) = self.params_of(layer, params)?;
+                ops::conv2d(x, w, b, *stride, *pad)
+            }
+            LayerKind::Dense { .. } => {
+                let x = self.input(layer, acts, 0)?;
+                let (w, b) = self.params_of(layer, params)?;
+                ops::dense(x, w, b)
+            }
+            LayerKind::Relu => Ok(ops::relu(self.input(layer, acts, 0)?)),
+            LayerKind::MaxPool { k, stride, pad } => {
+                ops::maxpool(self.input(layer, acts, 0)?, *k, *stride, *pad)
+            }
+            LayerKind::Gap => ops::avgpool_global(self.input(layer, acts, 0)?),
+            LayerKind::Flatten => {
+                let x = self.input(layer, acts, 0)?;
+                let n = x.shape()[0];
+                let rest: usize = x.shape()[1..].iter().product();
+                x.clone().reshape(&[n, rest])
+            }
+            LayerKind::Add => {
+                let a = self.input(layer, acts, 0)?;
+                let b = self.input(layer, acts, 1)?;
+                a.add(b)
+            }
+            LayerKind::Concat => {
+                let parts: Vec<&Tensor> = (0..layer.inputs.len())
+                    .map(|i| self.input(layer, acts, i))
+                    .collect::<Result<_>>()?;
+                concat_channels(&parts)
+            }
+        }
+    }
+}
+
+/// Concatenate NHWC tensors along the channel axis.
+fn concat_channels(parts: &[&Tensor]) -> Result<Tensor> {
+    if parts.is_empty() {
+        return Err(Error::Shape("concat of nothing".into()));
+    }
+    let base = parts[0].shape();
+    if base.len() != 4 {
+        return Err(Error::Shape(format!("concat wants NHWC, got {base:?}")));
+    }
+    let (n, h, w) = (base[0], base[1], base[2]);
+    let mut ctotal = 0usize;
+    for p in parts {
+        let s = p.shape();
+        if s.len() != 4 || s[0] != n || s[1] != h || s[2] != w {
+            return Err(Error::Shape(format!("concat mismatch {base:?} vs {s:?}")));
+        }
+        ctotal += s[3];
+    }
+    let mut out = vec![0f32; n * h * w * ctotal];
+    let pixels = n * h * w;
+    let mut coff = 0usize;
+    for p in parts {
+        let c = p.shape()[3];
+        let pd = p.data();
+        for px in 0..pixels {
+            out[px * ctotal + coff..px * ctotal + coff + c]
+                .copy_from_slice(&pd[px * c..(px + 1) * c]);
+        }
+        coff += c;
+    }
+    Tensor::from_vec(&[n, h, w, ctotal], out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::io::json::Json;
+
+    fn toy_manifest() -> Manifest {
+        Manifest::from_json(
+            &Json::parse(
+                r#"{
+            "model": "toy", "input_shape": [4,4,1], "num_classes": 2,
+            "output": "fc", "num_weighted_layers": 2,
+            "total_quantizable_params": 17,
+            "layers": [
+              {"name":"conv1","kind":"conv","inputs":["input"],"cin":1,
+               "cout":1,"k":3,"stride":1,"pad":1,"param_idx_w":1,
+               "param_idx_b":2,"qindex":0,"s_i":9},
+              {"name":"relu1","kind":"relu","inputs":["conv1"]},
+              {"name":"pool1","kind":"maxpool","inputs":["relu1"],"k":2,
+               "stride":2,"pad":0},
+              {"name":"flat","kind":"flatten","inputs":["pool1"]},
+              {"name":"fc","kind":"dense","inputs":["flat"],"cin":4,
+               "cout":2,"param_idx_w":3,"param_idx_b":4,"qindex":1,"s_i":8}
+            ]}"#,
+            )
+            .unwrap(),
+        )
+        .unwrap()
+    }
+
+    #[test]
+    fn runs_toy_graph() {
+        let m = toy_manifest();
+        let exec = GraphExecutor::new(&m);
+        let x = Tensor::from_vec(&[1, 4, 4, 1], (0..16).map(|v| v as f32 / 16.0).collect()).unwrap();
+        let params = vec![
+            Tensor::from_vec(&[3, 3, 1, 1], vec![0.0, 0.0, 0.0, 0.0, 1.0, 0.0, 0.0, 0.0, 0.0])
+                .unwrap(),
+            Tensor::from_vec(&[1], vec![0.0]).unwrap(),
+            Tensor::from_vec(&[4, 2], vec![1.0, -1.0, 1.0, -1.0, 1.0, -1.0, 1.0, -1.0]).unwrap(),
+            Tensor::from_vec(&[2], vec![0.0, 1.0]).unwrap(),
+        ];
+        let y = exec.forward(&x, &params).unwrap();
+        assert_eq!(y.shape(), &[1, 2]);
+        // identity conv → maxpool picks (5,7,13,15)/16 → fc sums
+        let s = (5.0 + 7.0 + 13.0 + 15.0) / 16.0;
+        assert!((y.data()[0] - s).abs() < 1e-6);
+        assert!((y.data()[1] - (1.0 - s)).abs() < 1e-6);
+    }
+
+    #[test]
+    fn concat_channel_order() {
+        let a = Tensor::from_vec(&[1, 1, 2, 1], vec![1.0, 2.0]).unwrap();
+        let b = Tensor::from_vec(&[1, 1, 2, 2], vec![3.0, 4.0, 5.0, 6.0]).unwrap();
+        let c = concat_channels(&[&a, &b]).unwrap();
+        assert_eq!(c.shape(), &[1, 1, 2, 3]);
+        assert_eq!(c.data(), &[1.0, 3.0, 4.0, 2.0, 5.0, 6.0]);
+    }
+
+    #[test]
+    fn concat_rejects_mismatch() {
+        let a = Tensor::from_vec(&[1, 1, 2, 1], vec![1.0, 2.0]).unwrap();
+        let b = Tensor::from_vec(&[1, 2, 1, 1], vec![3.0, 4.0]).unwrap();
+        assert!(concat_channels(&[&a, &b]).is_err());
+    }
+}

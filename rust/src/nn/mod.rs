@@ -1,0 +1,18 @@
+//! Pure-Rust CNN inference substrate.
+//!
+//! Interprets the same layer-graph manifests the JAX side lowers from
+//! (`artifacts/<model>/manifest.json`), over NHWC tensors. Two roles:
+//!
+//! 1. **cross-validation oracle** — integration tests assert this forward
+//!    pass matches the PJRT execution of the lowered HLO to ~1e-4;
+//! 2. **CPU baseline comparator** — the perf benches measure the PJRT hot
+//!    path against it (DESIGN.md §10).
+//!
+//! Layout conventions match L2 exactly: activations NHWC, conv kernels
+//! HWIO, dense weights (in, out).
+
+mod graph;
+mod ops;
+
+pub use graph::GraphExecutor;
+pub use ops::{avgpool_global, conv2d, dense, im2col, maxpool, relu, softmax};

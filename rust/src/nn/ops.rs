@@ -1,0 +1,294 @@
+//! NHWC CNN primitives: conv (im2col + GEMM), pooling, dense, activations.
+
+use crate::tensor::{matmul, Tensor};
+use crate::{Error, Result};
+
+/// im2col over NHWC input with symmetric zero padding.
+///
+/// Input `[n, h, w, c]`, kernel `k×k`, stride `s`, pad `p` →
+/// patches `[n·oh·ow, k·k·c]` where `oh = (h + 2p − k)/s + 1`.
+/// Patch column order is (kh, kw, c) — matching HWIO kernels flattened to
+/// `[k·k·c, cout]`.
+pub fn im2col(x: &Tensor, k: usize, stride: usize, pad: usize) -> Result<Tensor> {
+    let sh = x.shape();
+    if sh.len() != 4 {
+        return Err(Error::Shape(format!("im2col wants NHWC, got {sh:?}")));
+    }
+    let (n, h, w, c) = (sh[0], sh[1], sh[2], sh[3]);
+    if h + 2 * pad < k || w + 2 * pad < k {
+        return Err(Error::Shape(format!("kernel {k} too large for {h}x{w} pad {pad}")));
+    }
+    let oh = (h + 2 * pad - k) / stride + 1;
+    let ow = (w + 2 * pad - k) / stride + 1;
+    let cols = k * k * c;
+    let mut out = vec![0f32; n * oh * ow * cols];
+    let xd = x.data();
+    for b in 0..n {
+        let xoff = b * h * w * c;
+        for oy in 0..oh {
+            for ox in 0..ow {
+                let row = ((b * oh + oy) * ow + ox) * cols;
+                for ky in 0..k {
+                    let iy = (oy * stride + ky) as isize - pad as isize;
+                    if iy < 0 || iy >= h as isize {
+                        continue; // zero padding: leave zeros
+                    }
+                    for kx in 0..k {
+                        let ix = (ox * stride + kx) as isize - pad as isize;
+                        if ix < 0 || ix >= w as isize {
+                            continue;
+                        }
+                        let src = xoff + ((iy as usize) * w + ix as usize) * c;
+                        let dst = row + (ky * k + kx) * c;
+                        out[dst..dst + c].copy_from_slice(&xd[src..src + c]);
+                    }
+                }
+            }
+        }
+    }
+    Tensor::from_vec(&[n * oh * ow, cols], out)
+}
+
+/// NHWC conv2d: kernel HWIO `[k, k, cin, cout]`, bias `[cout]`.
+pub fn conv2d(x: &Tensor, w: &Tensor, bias: &Tensor, stride: usize, pad: usize) -> Result<Tensor> {
+    let xs = x.shape();
+    let ws = w.shape();
+    if ws.len() != 4 || ws[0] != ws[1] {
+        return Err(Error::Shape(format!("conv kernel must be HWIO square, got {ws:?}")));
+    }
+    let (k, cin, cout) = (ws[0], ws[2], ws[3]);
+    if xs[3] != cin {
+        return Err(Error::Shape(format!("conv cin {} vs input c {}", cin, xs[3])));
+    }
+    let (n, h, wd) = (xs[0], xs[1], xs[2]);
+    let oh = (h + 2 * pad - k) / stride + 1;
+    let ow = (wd + 2 * pad - k) / stride + 1;
+
+    let patches = im2col(x, k, stride, pad)?;
+    let wm = w.clone().reshape(&[k * k * cin, cout])?;
+    let mut out = matmul(&patches, &wm)?;
+    let bd = bias.data();
+    for row in 0..out.shape()[0] {
+        let off = row * cout;
+        let slice = &mut out.data_mut()[off..off + cout];
+        for (v, &b) in slice.iter_mut().zip(bd) {
+            *v += b;
+        }
+    }
+    out.reshape(&[n, oh, ow, cout])
+}
+
+/// Dense layer: x `[n, cin]` · w `[cin, cout]` + bias.
+pub fn dense(x: &Tensor, w: &Tensor, bias: &Tensor) -> Result<Tensor> {
+    let mut out = matmul(x, w)?;
+    let cout = w.shape()[1];
+    let bd = bias.data();
+    for row in 0..out.shape()[0] {
+        let off = row * cout;
+        let slice = &mut out.data_mut()[off..off + cout];
+        for (v, &b) in slice.iter_mut().zip(bd) {
+            *v += b;
+        }
+    }
+    Ok(out)
+}
+
+/// Elementwise max(x, 0).
+pub fn relu(x: &Tensor) -> Tensor {
+    let data = x.data().iter().map(|&v| v.max(0.0)).collect();
+    Tensor::from_vec(x.shape(), data).unwrap()
+}
+
+/// NHWC max pooling with optional −∞ padding (k, stride, pad).
+pub fn maxpool(x: &Tensor, k: usize, stride: usize, pad: usize) -> Result<Tensor> {
+    let sh = x.shape();
+    if sh.len() != 4 {
+        return Err(Error::Shape(format!("maxpool wants NHWC, got {sh:?}")));
+    }
+    let (n, h, w, c) = (sh[0], sh[1], sh[2], sh[3]);
+    let oh = (h + 2 * pad - k) / stride + 1;
+    let ow = (w + 2 * pad - k) / stride + 1;
+    let xd = x.data();
+    let mut out = vec![f32::NEG_INFINITY; n * oh * ow * c];
+    for b in 0..n {
+        let xoff = b * h * w * c;
+        for oy in 0..oh {
+            for ox in 0..ow {
+                let dst = ((b * oh + oy) * ow + ox) * c;
+                for ky in 0..k {
+                    let iy = (oy * stride + ky) as isize - pad as isize;
+                    if iy < 0 || iy >= h as isize {
+                        continue;
+                    }
+                    for kx in 0..k {
+                        let ix = (ox * stride + kx) as isize - pad as isize;
+                        if ix < 0 || ix >= w as isize {
+                            continue;
+                        }
+                        let src = xoff + ((iy as usize) * w + ix as usize) * c;
+                        for ch in 0..c {
+                            let v = xd[src + ch];
+                            if v > out[dst + ch] {
+                                out[dst + ch] = v;
+                            }
+                        }
+                    }
+                }
+            }
+        }
+    }
+    Tensor::from_vec(&[n, oh, ow, c], out)
+}
+
+/// Global average pool NHWC → `[n, c]`.
+pub fn avgpool_global(x: &Tensor) -> Result<Tensor> {
+    let sh = x.shape();
+    if sh.len() != 4 {
+        return Err(Error::Shape(format!("gap wants NHWC, got {sh:?}")));
+    }
+    let (n, h, w, c) = (sh[0], sh[1], sh[2], sh[3]);
+    let hw = (h * w) as f32;
+    let xd = x.data();
+    let mut out = vec![0f32; n * c];
+    for b in 0..n {
+        for i in 0..h * w {
+            let src = (b * h * w + i) * c;
+            for ch in 0..c {
+                out[b * c + ch] += xd[src + ch];
+            }
+        }
+    }
+    for v in out.iter_mut() {
+        *v /= hw;
+    }
+    Tensor::from_vec(&[n, c], out)
+}
+
+/// Row-wise softmax of `[n, d]`.
+pub fn softmax(x: &Tensor) -> Result<Tensor> {
+    let sh = x.shape();
+    if sh.len() != 2 {
+        return Err(Error::Shape(format!("softmax wants [n,d], got {sh:?}")));
+    }
+    let (n, d) = (sh[0], sh[1]);
+    let mut out = vec![0f32; n * d];
+    for i in 0..n {
+        let row = x.row(i);
+        let m = row.iter().copied().fold(f32::NEG_INFINITY, f32::max);
+        let mut z = 0f32;
+        for (j, &v) in row.iter().enumerate() {
+            let e = (v - m).exp();
+            out[i * d + j] = e;
+            z += e;
+        }
+        for j in 0..d {
+            out[i * d + j] /= z;
+        }
+    }
+    Tensor::from_vec(&[n, d], out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn t(shape: &[usize], data: Vec<f32>) -> Tensor {
+        Tensor::from_vec(shape, data).unwrap()
+    }
+
+    #[test]
+    fn conv_identity_kernel() {
+        // 1x1 kernel that copies channel 0
+        let x = t(&[1, 2, 2, 1], vec![1.0, 2.0, 3.0, 4.0]);
+        let w = t(&[1, 1, 1, 1], vec![1.0]);
+        let b = t(&[1], vec![0.0]);
+        let y = conv2d(&x, &w, &b, 1, 0).unwrap();
+        assert_eq!(y.data(), x.data());
+    }
+
+    #[test]
+    fn conv_3x3_sum_kernel() {
+        // all-ones 3x3 kernel with pad 1 on a 3x3 image of ones: center
+        // sees 9, edges 6, corners 4
+        let x = t(&[1, 3, 3, 1], vec![1.0; 9]);
+        let w = t(&[3, 3, 1, 1], vec![1.0; 9]);
+        let b = t(&[1], vec![0.0]);
+        let y = conv2d(&x, &w, &b, 1, 1).unwrap();
+        assert_eq!(y.shape(), &[1, 3, 3, 1]);
+        assert_eq!(
+            y.data(),
+            &[4.0, 6.0, 4.0, 6.0, 9.0, 6.0, 4.0, 6.0, 4.0]
+        );
+    }
+
+    #[test]
+    fn conv_bias_and_multichannel() {
+        // 2 input channels, 1x1 kernel summing them, bias 10
+        let x = t(&[1, 1, 2, 2], vec![1.0, 2.0, 3.0, 4.0]); // pixels (1,2),(3,4)
+        let w = t(&[1, 1, 2, 1], vec![1.0, 1.0]);
+        let b = t(&[1], vec![10.0]);
+        let y = conv2d(&x, &w, &b, 1, 0).unwrap();
+        assert_eq!(y.data(), &[13.0, 17.0]);
+    }
+
+    #[test]
+    fn conv_stride() {
+        let x = t(&[1, 4, 4, 1], (0..16).map(|v| v as f32).collect());
+        let w = t(&[1, 1, 1, 1], vec![1.0]);
+        let b = t(&[1], vec![0.0]);
+        let y = conv2d(&x, &w, &b, 2, 0).unwrap();
+        assert_eq!(y.shape(), &[1, 2, 2, 1]);
+        assert_eq!(y.data(), &[0.0, 2.0, 8.0, 10.0]);
+    }
+
+    #[test]
+    fn maxpool_2x2() {
+        let x = t(&[1, 2, 2, 1], vec![1.0, 5.0, 3.0, 2.0]);
+        let y = maxpool(&x, 2, 2, 0).unwrap();
+        assert_eq!(y.shape(), &[1, 1, 1, 1]);
+        assert_eq!(y.data(), &[5.0]);
+    }
+
+    #[test]
+    fn maxpool_3x3_s1_pad1_shape_preserving() {
+        let x = t(&[1, 4, 4, 1], (0..16).map(|v| v as f32).collect());
+        let y = maxpool(&x, 3, 1, 1).unwrap();
+        assert_eq!(y.shape(), &[1, 4, 4, 1]);
+        // top-left output = max of the 2x2 in-bounds region = 5
+        assert_eq!(y.data()[0], 5.0);
+        assert_eq!(y.data()[15], 15.0);
+    }
+
+    #[test]
+    fn gap_means() {
+        let x = t(&[1, 2, 2, 2], vec![1.0, 10.0, 2.0, 20.0, 3.0, 30.0, 4.0, 40.0]);
+        let y = avgpool_global(&x).unwrap();
+        assert_eq!(y.data(), &[2.5, 25.0]);
+    }
+
+    #[test]
+    fn dense_known() {
+        let x = t(&[1, 2], vec![1.0, 2.0]);
+        let w = t(&[2, 2], vec![1.0, 0.0, 0.0, 1.0]);
+        let b = t(&[2], vec![0.5, -0.5]);
+        let y = dense(&x, &w, &b).unwrap();
+        assert_eq!(y.data(), &[1.5, 1.5]);
+    }
+
+    #[test]
+    fn softmax_rows_sum_to_one() {
+        let x = t(&[2, 3], vec![1.0, 2.0, 3.0, -1.0, 0.0, 1.0]);
+        let y = softmax(&x).unwrap();
+        for i in 0..2 {
+            let s: f32 = y.row(i).iter().sum();
+            assert!((s - 1.0).abs() < 1e-6);
+        }
+        assert!(y.data()[2] > y.data()[1]);
+    }
+
+    #[test]
+    fn relu_clamps() {
+        let x = t(&[3], vec![-1.0, 0.0, 2.0]);
+        assert_eq!(relu(&x).data(), &[0.0, 0.0, 2.0]);
+    }
+}

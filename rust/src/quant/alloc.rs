@@ -1,0 +1,370 @@
+//! Layer-wise bit-width allocators (paper §Layer-wise bit-width
+//! optimization).
+//!
+//! Closed forms, from the KKT conditions on Eq. 21:
+//!
+//! * **Adaptive** (the paper, Eq. 22):  p_i·e^(−α·b_i)/(t_i·s_i) = const
+//!   → b_i = b₁ + (1/α)·ln[(p_i·t₁·s₁)/(p₁·t_i·s_i)]
+//! * **SQNR** (Lin et al. 2016, Eq. 23):  e^(−α·b_i)/s_i = const — the
+//!   adaptive form with p_i = t_i = 1 (every layer equally important)
+//! * **Equal**: b_i = b₁ for every layer.
+//!
+//! Sweeping the anchor b₁ traces the size-accuracy curve of Fig. 6/8;
+//! fractional optima are materialized by threshold-rounding enumeration
+//! (the paper's "more datapoints" remark) and Pareto-filtered.
+
+use crate::ALPHA;
+
+/// Per-layer statistics feeding the allocator.
+#[derive(Clone, Debug)]
+pub struct LayerStats {
+    pub name: String,
+    /// s_i — quantizable parameter count.
+    pub s: f64,
+    /// p_i — noise-transfer prefactor (Eq. 16), measured by
+    /// [`crate::measure::estimate_p`].
+    pub p: f64,
+    /// t_i — robustness (Eq. 13), calibrated by
+    /// [`crate::measure::calibrate_t`].
+    pub t: f64,
+}
+
+/// Allocation strategy.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Allocator {
+    /// Paper's method (Eq. 22) — needs p_i and t_i.
+    Adaptive,
+    /// SQNR baseline (Eq. 23) — sizes only.
+    Sqnr,
+    /// Same bit-width everywhere.
+    Equal,
+}
+
+impl Allocator {
+    pub fn name(&self) -> &'static str {
+        match self {
+            Allocator::Adaptive => "adaptive",
+            Allocator::Sqnr => "sqnr",
+            Allocator::Equal => "equal",
+        }
+    }
+
+    /// Fractional bit-widths for all layers, anchored at `b1` bits for the
+    /// *first unmasked* layer. `mask[i] = false` freezes layer i at
+    /// `frozen_bits` (Fig. 6 keeps FC layers at 16 bits) and removes it
+    /// from the optimization. Results are clamped to [1, 16].
+    pub fn allocate(
+        &self,
+        stats: &[LayerStats],
+        b1: f64,
+        mask: &[bool],
+        frozen_bits: f64,
+    ) -> Allocation {
+        assert_eq!(stats.len(), mask.len());
+        let anchor = mask
+            .iter()
+            .position(|&m| m)
+            .expect("allocate: at least one layer must be quantizable");
+        let a = &stats[anchor];
+        let bits: Vec<f64> = stats
+            .iter()
+            .zip(mask)
+            .map(|(li, &m)| {
+                if !m {
+                    return frozen_bits;
+                }
+                let raw = match self {
+                    Allocator::Equal => b1,
+                    Allocator::Sqnr => b1 + (a.s / li.s).ln() / ALPHA,
+                    Allocator::Adaptive => {
+                        b1 + ((li.p * a.t * a.s) / (a.p * li.t * li.s)).ln() / ALPHA
+                    }
+                };
+                raw.clamp(1.0, 16.0)
+            })
+            .collect();
+        Allocation { bits, mask: mask.to_vec() }
+    }
+}
+
+/// A (possibly fractional) bit assignment.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Allocation {
+    pub bits: Vec<f64>,
+    pub mask: Vec<bool>,
+}
+
+impl Allocation {
+    /// Predicted measurement m_all = Σ (p_i/t_i)·e^(−α·b_i) over the
+    /// quantized layers (Eq. 20 + 16).
+    pub fn predicted_measurement(&self, stats: &[LayerStats]) -> f64 {
+        self.bits
+            .iter()
+            .zip(stats)
+            .zip(&self.mask)
+            .filter(|(_, &m)| m)
+            .map(|((&b, li), _)| li.p / li.t * (-ALPHA * b).exp())
+            .sum()
+    }
+
+    /// Σ s_i·b_i in bits over **all** layers (frozen layers count at their
+    /// frozen width).
+    pub fn size_bits(&self, stats: &[LayerStats]) -> f64 {
+        self.bits.iter().zip(stats).map(|(&b, li)| li.s * b).sum()
+    }
+
+    pub fn size_bytes(&self, stats: &[LayerStats]) -> f64 {
+        self.size_bits(stats) / 8.0
+    }
+
+    /// Σ s_i·b_i over the *quantized* layers only — the Fig. 6 protocol:
+    /// when FC layers are frozen at 16 bits their constant size is
+    /// excluded from the plotted model size (the paper's plotted ranges
+    /// imply the same accounting; see DESIGN.md §5).
+    pub fn size_bits_quantized(&self, stats: &[LayerStats]) -> f64 {
+        self.bits
+            .iter()
+            .zip(stats)
+            .zip(&self.mask)
+            .filter(|(_, &m)| m)
+            .map(|((&b, li), _)| li.s * b)
+            .sum()
+    }
+
+    pub fn size_bytes_quantized(&self, stats: &[LayerStats]) -> f64 {
+        self.size_bits_quantized(stats) / 8.0
+    }
+}
+
+/// Integerize a fractional allocation by threshold rounding: for each
+/// θ ∈ {0, 1/n, …}, bits_i = ⌊b_i + θ⌋ (clamped to ≥1). Returns deduped
+/// allocations ordered by increasing size — the paper's way of generating
+/// extra datapoints along the trade-off curve.
+pub fn enumerate_roundings(frac: &Allocation, thresholds: usize) -> Vec<Allocation> {
+    let mut seen: Vec<Vec<i64>> = Vec::new();
+    let mut out = Vec::new();
+    for k in 0..thresholds.max(1) {
+        let theta = k as f64 / thresholds.max(1) as f64;
+        let bits: Vec<f64> = frac
+            .bits
+            .iter()
+            .zip(&frac.mask)
+            .map(|(&b, &m)| {
+                if m {
+                    ((b + theta).floor()).clamp(1.0, 16.0)
+                } else {
+                    b // frozen layers stay at their exact width
+                }
+            })
+            .collect();
+        let key: Vec<i64> = bits.iter().map(|&b| (b * 16.0) as i64).collect();
+        if !seen.contains(&key) {
+            seen.push(key);
+            out.push(Allocation { bits, mask: frac.mask.clone() });
+        }
+    }
+    out
+}
+
+/// One evaluated point of a size-accuracy sweep.
+#[derive(Clone, Debug)]
+pub struct SweepPoint {
+    pub b1: f64,
+    pub bits: Vec<f64>,
+    pub size_bytes: f64,
+    pub accuracy: f64,
+}
+
+/// Pareto frontier of (size ↓, accuracy ↑): returns the subset of points
+/// not dominated by any other, sorted by size.
+pub fn pareto_frontier(points: &[SweepPoint]) -> Vec<SweepPoint> {
+    let mut sorted: Vec<&SweepPoint> = points.iter().collect();
+    sorted.sort_by(|a, b| a.size_bytes.partial_cmp(&b.size_bytes).unwrap());
+    let mut out: Vec<SweepPoint> = Vec::new();
+    let mut best_acc = f64::NEG_INFINITY;
+    for p in sorted {
+        if p.accuracy > best_acc {
+            best_acc = p.accuracy;
+            out.push(p.clone());
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn stats3() -> Vec<LayerStats> {
+        vec![
+            LayerStats { name: "conv1".into(), s: 100.0, p: 50.0, t: 1.0 },
+            LayerStats { name: "conv2".into(), s: 10_000.0, p: 500.0, t: 1.0 },
+            LayerStats { name: "fc".into(), s: 100_000.0, p: 200.0, t: 4.0 },
+        ]
+    }
+
+    #[test]
+    fn equal_is_equal() {
+        let st = stats3();
+        let a = Allocator::Equal.allocate(&st, 8.0, &[true; 3], 16.0);
+        assert_eq!(a.bits, vec![8.0, 8.0, 8.0]);
+    }
+
+    #[test]
+    fn sqnr_gives_fewer_bits_to_bigger_layers() {
+        let st = stats3();
+        let a = Allocator::Sqnr.allocate(&st, 8.0, &[true; 3], 16.0);
+        assert!(a.bits[0] > a.bits[1]);
+        assert!(a.bits[1] > a.bits[2]);
+        // Eq. 23 invariant: e^{-αb_i}/s_i constant across layers
+        let c0 = (-ALPHA * a.bits[0]).exp() / st[0].s;
+        let c1 = (-ALPHA * a.bits[1]).exp() / st[1].s;
+        let c2 = (-ALPHA * a.bits[2]).exp() / st[2].s;
+        assert!((c0 / c1 - 1.0).abs() < 1e-9);
+        assert!((c1 / c2 - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn adaptive_satisfies_eq22() {
+        let st = stats3();
+        let a = Allocator::Adaptive.allocate(&st, 9.0, &[true; 3], 16.0);
+        let c: Vec<f64> = a
+            .bits
+            .iter()
+            .zip(&st)
+            .map(|(&b, li)| li.p * (-ALPHA * b).exp() / (li.t * li.s))
+            .collect();
+        assert!((c[0] / c[1] - 1.0).abs() < 1e-9, "{c:?}");
+        assert!((c[1] / c[2] - 1.0).abs() < 1e-9, "{c:?}");
+    }
+
+    #[test]
+    fn adaptive_reduces_to_sqnr_when_p_t_equal() {
+        let st: Vec<LayerStats> = stats3()
+            .into_iter()
+            .map(|mut l| {
+                l.p = 1.0;
+                l.t = 1.0;
+                l
+            })
+            .collect();
+        let a = Allocator::Adaptive.allocate(&st, 7.0, &[true; 3], 16.0);
+        let s = Allocator::Sqnr.allocate(&st, 7.0, &[true; 3], 16.0);
+        for (x, y) in a.bits.iter().zip(&s.bits) {
+            assert!((x - y).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn anchor_shift_is_uniform_shift() {
+        // Eq. 22 remark: the choice of Δacc (→ anchor) shifts all bits by
+        // the same constant, so relative allocation is invariant
+        let st = stats3();
+        let a = Allocator::Adaptive.allocate(&st, 8.0, &[true; 3], 16.0);
+        let b = Allocator::Adaptive.allocate(&st, 10.0, &[true; 3], 16.0);
+        for (x, y) in a.bits.iter().zip(&b.bits) {
+            assert!((y - x - 2.0).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn robust_layers_get_fewer_bits() {
+        // higher t_i (more robust) → fewer bits, all else equal
+        let st = vec![
+            LayerStats { name: "a".into(), s: 1000.0, p: 100.0, t: 1.0 },
+            LayerStats { name: "b".into(), s: 1000.0, p: 100.0, t: 8.0 },
+        ];
+        let a = Allocator::Adaptive.allocate(&st, 8.0, &[true; 2], 16.0);
+        assert!(a.bits[1] < a.bits[0]);
+        // ln(8)/α = 1.5 bits exactly
+        assert!((a.bits[0] - a.bits[1] - 8f64.ln() / ALPHA).abs() < 1e-9);
+    }
+
+    #[test]
+    fn mask_freezes_layers() {
+        let st = stats3();
+        let a = Allocator::Adaptive.allocate(&st, 8.0, &[true, true, false], 16.0);
+        assert_eq!(a.bits[2], 16.0);
+        // anchor is the first unmasked layer
+        assert_eq!(a.bits[0], 8.0);
+    }
+
+    #[test]
+    fn closed_form_beats_or_matches_brute_force() {
+        // For the same measurement budget C (computed from the adaptive
+        // allocation), no integer allocation found by brute force may be
+        // meaningfully smaller — KKT optimality sanity check.
+        let st = stats3();
+        let frac = Allocator::Adaptive.allocate(&st, 6.0, &[true; 3], 16.0);
+        let budget = frac.predicted_measurement(&st);
+        let frac_size = frac.size_bits(&st);
+        let mut best_int = f64::INFINITY;
+        for b0 in 1..=14 {
+            for b1 in 1..=14 {
+                for b2 in 1..=14 {
+                    let a = Allocation {
+                        bits: vec![b0 as f64, b1 as f64, b2 as f64],
+                        mask: vec![true; 3],
+                    };
+                    if a.predicted_measurement(&st) <= budget {
+                        best_int = best_int.min(a.size_bits(&st));
+                    }
+                }
+            }
+        }
+        // fractional optimum lower-bounds any feasible integer solution,
+        // up to the integrality gap (≤ one bit per layer)
+        let gap: f64 = st.iter().map(|l| l.s).sum();
+        assert!(
+            frac_size <= best_int + 1e-6,
+            "fractional {frac_size} > integer {best_int}"
+        );
+        assert!(
+            best_int <= frac_size + gap,
+            "integer {best_int} worse than fractional {frac_size} + gap {gap}"
+        );
+    }
+
+    #[test]
+    fn rounding_enumeration_dedups_and_orders() {
+        let frac = Allocation { bits: vec![3.4, 5.7, 7.1], mask: vec![true; 3] };
+        let all = enumerate_roundings(&frac, 10);
+        assert!(!all.is_empty());
+        for a in &all {
+            for (&b, &m) in a.bits.iter().zip(&a.mask) {
+                assert!(m);
+                assert_eq!(b.fract(), 0.0);
+                assert!(b >= 1.0);
+            }
+        }
+        // distinct allocations only
+        for i in 0..all.len() {
+            for j in i + 1..all.len() {
+                assert_ne!(all[i].bits, all[j].bits);
+            }
+        }
+    }
+
+    #[test]
+    fn rounding_preserves_frozen() {
+        let frac = Allocation { bits: vec![3.4, 16.0], mask: vec![true, false] };
+        for a in enumerate_roundings(&frac, 4) {
+            assert_eq!(a.bits[1], 16.0);
+        }
+    }
+
+    #[test]
+    fn pareto_filters_dominated() {
+        let pts = vec![
+            SweepPoint { b1: 1.0, bits: vec![], size_bytes: 100.0, accuracy: 0.5 },
+            SweepPoint { b1: 2.0, bits: vec![], size_bytes: 200.0, accuracy: 0.9 },
+            SweepPoint { b1: 3.0, bits: vec![], size_bytes: 150.0, accuracy: 0.4 }, // dominated
+            SweepPoint { b1: 4.0, bits: vec![], size_bytes: 300.0, accuracy: 0.95 },
+        ];
+        let front = pareto_frontier(&pts);
+        assert_eq!(front.len(), 3);
+        assert_eq!(front[0].size_bytes, 100.0);
+        assert_eq!(front[1].size_bytes, 200.0);
+        assert_eq!(front[2].size_bytes, 300.0);
+    }
+}

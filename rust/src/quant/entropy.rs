@@ -1,0 +1,109 @@
+//! Entropy-coded size accounting — the Deep Compression "Huffman stage"
+//! (Han, Mao & Dally 2015). The paper counts model size as Σ sᵢ·bᵢ raw
+//! bits; entropy coding the quantization indices is the standard follow-up
+//! and the extension bench quantifies how much it adds on top of the
+//! adaptive allocation.
+
+use crate::quant::uniform::QuantRange;
+use crate::tensor::Tensor;
+
+/// Shannon entropy (bits/symbol) of the b-bit quantization indices of `w`.
+pub fn index_entropy_bits(w: &Tensor, bits: f32) -> f64 {
+    let range = QuantRange::of(w);
+    let span = range.span();
+    if bits <= 0.0 || span <= 0.0 {
+        return 32.0; // unquantized: raw fp32
+    }
+    let nlev = (bits as f64).exp2() as usize;
+    let step = span / nlev as f32;
+    let mut counts = vec![0usize; nlev];
+    for &v in w.data() {
+        let q = (((v - range.lo) / step).floor() as usize).min(nlev - 1);
+        counts[q] += 1;
+    }
+    let n = w.len() as f64;
+    counts
+        .iter()
+        .filter(|&&c| c > 0)
+        .map(|&c| {
+            let p = c as f64 / n;
+            -p * p.log2()
+        })
+        .sum()
+}
+
+/// Entropy-coded size in bits of one layer at bit-width `bits`
+/// (indices at their entropy + the fp32 codebook of 2^bits midpoints).
+pub fn entropy_coded_bits(w: &Tensor, bits: f32) -> f64 {
+    if bits <= 0.0 {
+        return w.len() as f64 * 32.0;
+    }
+    let h = index_entropy_bits(w, bits);
+    let codebook = (bits as f64).exp2() * 32.0;
+    w.len() as f64 * h + codebook
+}
+
+/// Whole-model entropy-coded size (bits) for a per-layer allocation.
+pub fn model_entropy_bits(weights: &[&Tensor], bits: &[f64]) -> f64 {
+    weights
+        .iter()
+        .zip(bits)
+        .map(|(w, &b)| entropy_coded_bits(w, b as f32))
+        .sum()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::{fill_normal, Pcg32};
+
+    fn randn(n: usize, seed: u64) -> Tensor {
+        let mut rng = Pcg32::new(seed);
+        let mut data = vec![0f32; n];
+        fill_normal(&mut rng, &mut data);
+        Tensor::from_vec(&[n], data).unwrap()
+    }
+
+    #[test]
+    fn entropy_bounded_by_bits() {
+        let w = randn(20_000, 1);
+        for b in [2.0f32, 4.0, 6.0, 8.0] {
+            let h = index_entropy_bits(&w, b);
+            assert!(h > 0.0 && h <= b as f64 + 1e-9, "bits {b}: H={h}");
+        }
+    }
+
+    #[test]
+    fn gaussian_indices_compress_below_raw() {
+        // gaussian weights use outer levels rarely → entropy < b
+        let w = randn(50_000, 2);
+        let h = index_entropy_bits(&w, 6.0);
+        assert!(h < 5.7, "expected compression headroom, H={h}");
+    }
+
+    #[test]
+    fn uniform_data_has_full_entropy() {
+        let mut rng = Pcg32::new(3);
+        let data: Vec<f32> = (0..50_000).map(|_| rng.next_f32()).collect();
+        let w = Tensor::from_vec(&[data.len()], data).unwrap();
+        let h = index_entropy_bits(&w, 4.0);
+        assert!(h > 3.95, "uniform data should fill all levels, H={h}");
+    }
+
+    #[test]
+    fn coded_size_below_raw_for_gaussian() {
+        let w = randn(30_000, 4);
+        let raw = w.len() as f64 * 6.0;
+        let coded = entropy_coded_bits(&w, 6.0);
+        assert!(coded < raw, "coded {coded} !< raw {raw}");
+    }
+
+    #[test]
+    fn model_sum_matches_layers() {
+        let a = randn(100, 5);
+        let b = randn(200, 6);
+        let total = model_entropy_bits(&[&a, &b], &[4.0, 6.0]);
+        let manual = entropy_coded_bits(&a, 4.0) + entropy_coded_bits(&b, 6.0);
+        assert!((total - manual).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,181 @@
+//! k-means (codebook) quantization — the Deep Compression baseline
+//! (Han, Mao & Dally 2015) referenced in the paper's related work.
+//!
+//! Weights are clustered into 2^b centroids (1-D k-means, Lloyd's
+//! algorithm with k-means++-style seeding from the PCG stream); each
+//! weight is stored as a b-bit index plus a small fp32 codebook. Used by
+//! the ablation bench to compare uniform-grid vs learned-codebook
+//! quantization under the same bit budget.
+
+use crate::rng::Pcg32;
+use crate::tensor::Tensor;
+
+/// A trained 1-D codebook.
+#[derive(Clone, Debug)]
+pub struct Codebook {
+    pub centroids: Vec<f32>,
+}
+
+impl Codebook {
+    /// Train 2^bits centroids on `w` with `iters` Lloyd iterations.
+    pub fn train(w: &Tensor, bits: u32, iters: usize, seed: u64) -> Codebook {
+        let k = (1usize << bits).min(w.len().max(1));
+        let data = w.data();
+        let mut rng = Pcg32::new(seed ^ 0xC0DEB00C);
+
+        // k-means++-ish seeding: spread initial centroids over the range
+        // quantiles with jitter (cheap + deterministic)
+        let mut sorted: Vec<f32> = data.to_vec();
+        sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let mut centroids: Vec<f32> = (0..k)
+            .map(|i| {
+                let q = (i as f64 + rng.uniform(0.25, 0.75) as f64) / k as f64;
+                sorted[((q * (sorted.len() - 1) as f64) as usize).min(sorted.len() - 1)]
+            })
+            .collect();
+        centroids.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        centroids.dedup();
+        while centroids.len() < k {
+            // degenerate duplicates: pad with jittered copies
+            let c = centroids[rng.below(centroids.len() as u32) as usize];
+            centroids.push(c + rng.uniform(-1e-6, 1e-6));
+        }
+
+        let mut sums = vec![0f64; k];
+        let mut counts = vec![0usize; k];
+        for _ in 0..iters {
+            sums.iter_mut().for_each(|s| *s = 0.0);
+            counts.iter_mut().for_each(|c| *c = 0);
+            // assignment over the sorted centroid list via binary search
+            centroids.sort_by(|a, b| a.partial_cmp(b).unwrap());
+            for &v in data {
+                let idx = nearest(&centroids, v);
+                sums[idx] += v as f64;
+                counts[idx] += 1;
+            }
+            for i in 0..k {
+                if counts[i] > 0 {
+                    centroids[i] = (sums[i] / counts[i] as f64) as f32;
+                }
+            }
+        }
+        centroids.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        Codebook { centroids }
+    }
+
+    /// Quantize-dequantize through the codebook.
+    pub fn apply(&self, w: &Tensor) -> Tensor {
+        let data = w
+            .data()
+            .iter()
+            .map(|&v| self.centroids[nearest(&self.centroids, v)])
+            .collect();
+        Tensor::from_vec(w.shape(), data).unwrap()
+    }
+
+    /// Quantization noise energy ‖w − cb(w)‖².
+    pub fn noise(&self, w: &Tensor) -> f64 {
+        w.data()
+            .iter()
+            .map(|&v| {
+                let r = (v - self.centroids[nearest(&self.centroids, v)]) as f64;
+                r * r
+            })
+            .sum()
+    }
+}
+
+/// Index of the nearest centroid (centroids sorted ascending).
+fn nearest(centroids: &[f32], v: f32) -> usize {
+    match centroids.binary_search_by(|c| c.partial_cmp(&v).unwrap()) {
+        Ok(i) => i,
+        Err(i) => {
+            if i == 0 {
+                0
+            } else if i >= centroids.len() {
+                centroids.len() - 1
+            } else if (v - centroids[i - 1]).abs() <= (centroids[i] - v).abs() {
+                i - 1
+            } else {
+                i
+            }
+        }
+    }
+}
+
+/// One-call k-means fake-quant at `bits`.
+pub fn kmeans_fake_quant(w: &Tensor, bits: u32, seed: u64) -> Tensor {
+    Codebook::train(w, bits, 12, seed).apply(w)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::quant::uniform::quant_noise;
+    use crate::rng::fill_normal;
+
+    fn randn(n: usize, seed: u64) -> Tensor {
+        let mut rng = Pcg32::new(seed);
+        let mut data = vec![0f32; n];
+        fill_normal(&mut rng, &mut data);
+        Tensor::from_vec(&[n], data).unwrap()
+    }
+
+    #[test]
+    fn nearest_picks_closest() {
+        let cs = [0.0f32, 1.0, 2.0];
+        assert_eq!(nearest(&cs, -5.0), 0);
+        assert_eq!(nearest(&cs, 0.4), 0);
+        assert_eq!(nearest(&cs, 0.6), 1);
+        assert_eq!(nearest(&cs, 1.0), 1);
+        assert_eq!(nearest(&cs, 9.0), 2);
+    }
+
+    #[test]
+    fn codebook_has_k_centroids_and_reduces_noise() {
+        let w = randn(5000, 3);
+        let cb = Codebook::train(&w, 4, 12, 0);
+        assert_eq!(cb.centroids.len(), 16);
+        // centroids sorted + within data range
+        for pair in cb.centroids.windows(2) {
+            assert!(pair[0] <= pair[1]);
+        }
+        // learned codebook beats the uniform grid at equal bit budget on a
+        // gaussian (denser centroids where the mass is)
+        let km_noise = cb.noise(&w);
+        let uni_noise = quant_noise(&w, 4.0);
+        assert!(
+            km_noise < uni_noise,
+            "kmeans {km_noise} should beat uniform {uni_noise}"
+        );
+    }
+
+    #[test]
+    fn apply_is_idempotent() {
+        let w = randn(1000, 5);
+        let cb = Codebook::train(&w, 3, 10, 1);
+        let q1 = cb.apply(&w);
+        let q2 = cb.apply(&q1);
+        assert_eq!(q1.data(), q2.data());
+    }
+
+    #[test]
+    fn degenerate_constant_tensor() {
+        let w = Tensor::from_vec(&[64], vec![1.25; 64]).unwrap();
+        let cb = Codebook::train(&w, 3, 5, 2);
+        let q = cb.apply(&w);
+        for &v in q.data() {
+            assert!((v - 1.25).abs() < 1e-5);
+        }
+    }
+
+    #[test]
+    fn more_bits_less_noise() {
+        let w = randn(3000, 7);
+        let n2 = Codebook::train(&w, 2, 12, 0).noise(&w);
+        let n4 = Codebook::train(&w, 4, 12, 0).noise(&w);
+        let n6 = Codebook::train(&w, 6, 12, 0).noise(&w);
+        assert!(n4 < n2);
+        assert!(n6 < n4);
+    }
+}

@@ -1,0 +1,22 @@
+//! Quantization: the uniform quantizer (paper Eq. 2-3), its noise model,
+//! and the three bit-width allocators the evaluation compares —
+//! **adaptive** (the paper's contribution, Eq. 22), **SQNR** (Lin et al.
+//! 2016, Eq. 23) and **equal** bit-width.
+
+mod alloc;
+mod entropy;
+mod kmeans;
+mod noise_model;
+mod prune;
+mod stochastic;
+mod uniform;
+
+pub use alloc::{
+    enumerate_roundings, pareto_frontier, Allocation, Allocator, LayerStats, SweepPoint,
+};
+pub use entropy::{entropy_coded_bits, index_entropy_bits, model_entropy_bits};
+pub use kmeans::{kmeans_fake_quant, Codebook};
+pub use noise_model::{expected_noise_l2, prefactor, NoiseModel};
+pub use prune::{magnitude_prune, pruned_quantized_bits, sparsity};
+pub use stochastic::{stochastic_fake_quant, stochastic_noise};
+pub use uniform::{fake_quant, fake_quant_into, quant_noise, QuantRange};

@@ -1,0 +1,80 @@
+//! The analytic quantization-noise model of Eq. 3:
+//! `E‖r_W‖² = p′_W · e^(−α·b)`, `p′_W = N_W (w_max − w_min)²/12`, `α = ln 4`.
+//!
+//! Validated against the measured quantizer in the EQ3 bench
+//! (`benches/eq3_noise_model.rs`) — the 6 dB/bit law.
+
+use crate::quant::uniform::QuantRange;
+use crate::tensor::Tensor;
+use crate::ALPHA;
+
+/// Per-tensor noise-model parameters.
+#[derive(Clone, Copy, Debug)]
+pub struct NoiseModel {
+    /// p′ = N·span²/12.
+    pub prefactor: f64,
+    /// Element count N_W.
+    pub count: usize,
+    /// The tensor's quantization range.
+    pub range: QuantRange,
+}
+
+impl NoiseModel {
+    pub fn of(t: &Tensor) -> NoiseModel {
+        let range = QuantRange::of(t);
+        NoiseModel {
+            prefactor: prefactor(t.len(), range.span()),
+            count: t.len(),
+            range,
+        }
+    }
+
+    /// Predicted E‖r_W‖² at bit-width `b`.
+    pub fn expected(&self, bits: f64) -> f64 {
+        self.prefactor * (-ALPHA * bits).exp()
+    }
+}
+
+/// p′ = N·span²/12 (Eq. 3).
+pub fn prefactor(count: usize, span: f32) -> f64 {
+    count as f64 * (span as f64) * (span as f64) / 12.0
+}
+
+/// Predicted E‖r_W‖² for a tensor at bit-width `b`.
+pub fn expected_noise_l2(t: &Tensor, bits: f64) -> f64 {
+    NoiseModel::of(t).expected(bits)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::quant::uniform::quant_noise;
+    use crate::rng::{fill_normal, Pcg32};
+
+    #[test]
+    fn prediction_tracks_measurement() {
+        let mut rng = Pcg32::new(11);
+        let mut data = vec![0f32; 100_000];
+        fill_normal(&mut rng, &mut data);
+        let t = Tensor::from_vec(&[100_000], data).unwrap();
+        let nm = NoiseModel::of(&t);
+        for bits in [6.0f64, 8.0, 10.0] {
+            let predicted = nm.expected(bits);
+            let measured = quant_noise(&t, bits as f32);
+            let ratio = measured / predicted;
+            // uniform-noise model is an approximation for a gaussian
+            // weight distribution; 15% agreement is the expected regime
+            assert!(
+                (0.85..1.15).contains(&ratio),
+                "bits {bits}: measured/predicted = {ratio}"
+            );
+        }
+    }
+
+    #[test]
+    fn four_x_per_bit_exact_in_model() {
+        let nm = NoiseModel { prefactor: 12.0, count: 1, range: QuantRange { lo: 0.0, hi: 1.0 } };
+        let r = nm.expected(5.0) / nm.expected(6.0);
+        assert!((r - 4.0).abs() < 1e-9);
+    }
+}

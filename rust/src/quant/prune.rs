@@ -1,0 +1,99 @@
+//! Magnitude pruning — the paper's conclusion notes quantization and
+//! pruning compose "without interfering with each other" (Han, Mao &
+//! Dally 2015); the extension bench (`ext_prune_quant`) measures exactly
+//! that composition on our models.
+//!
+//! Pruned-model size accounting follows the CSR-style convention: each
+//! surviving weight stores its b-bit value plus a log2(group) relative
+//! index; zeros cost nothing.
+
+use crate::tensor::Tensor;
+
+/// Zero out the `fraction` smallest-magnitude entries of `w`.
+pub fn magnitude_prune(w: &Tensor, fraction: f64) -> Tensor {
+    assert!((0.0..=1.0).contains(&fraction));
+    let n = w.len();
+    let kill = ((n as f64) * fraction).round() as usize;
+    if kill == 0 {
+        return w.clone();
+    }
+    let mut order: Vec<usize> = (0..n).collect();
+    order.sort_by(|&a, &b| {
+        w.data()[a]
+            .abs()
+            .partial_cmp(&w.data()[b].abs())
+            .unwrap()
+    });
+    let mut data = w.data().to_vec();
+    for &i in &order[..kill.min(n)] {
+        data[i] = 0.0;
+    }
+    Tensor::from_vec(w.shape(), data).unwrap()
+}
+
+/// Fraction of exactly-zero entries.
+pub fn sparsity(w: &Tensor) -> f64 {
+    w.data().iter().filter(|&&v| v == 0.0).count() as f64 / w.len() as f64
+}
+
+/// Size in bits of a pruned + b-bit-quantized layer: surviving weights
+/// store value (b bits) + relative index (index_bits).
+pub fn pruned_quantized_bits(w: &Tensor, bits: f64, index_bits: f64) -> f64 {
+    let nz = w.data().iter().filter(|&&v| v != 0.0).count() as f64;
+    nz * (bits + index_bits)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::{fill_normal, Pcg32};
+
+    fn randn(n: usize, seed: u64) -> Tensor {
+        let mut rng = Pcg32::new(seed);
+        let mut data = vec![0f32; n];
+        fill_normal(&mut rng, &mut data);
+        Tensor::from_vec(&[n], data).unwrap()
+    }
+
+    #[test]
+    fn prunes_exact_fraction_of_smallest() {
+        let w = randn(1000, 1);
+        let p = magnitude_prune(&w, 0.3);
+        assert!((sparsity(&p) - 0.3).abs() < 0.01);
+        // every surviving weight must outweigh every pruned one
+        let max_killed = w
+            .data()
+            .iter()
+            .zip(p.data())
+            .filter(|(_, &pv)| pv == 0.0)
+            .map(|(&ov, _)| ov.abs())
+            .fold(0f32, f32::max);
+        let min_kept = p
+            .data()
+            .iter()
+            .filter(|&&v| v != 0.0)
+            .map(|v| v.abs())
+            .fold(f32::INFINITY, f32::min);
+        assert!(min_kept >= max_killed);
+    }
+
+    #[test]
+    fn zero_fraction_is_identity() {
+        let w = randn(100, 2);
+        assert_eq!(magnitude_prune(&w, 0.0).data(), w.data());
+    }
+
+    #[test]
+    fn full_prune_is_all_zero() {
+        let w = randn(64, 3);
+        assert_eq!(sparsity(&magnitude_prune(&w, 1.0)), 1.0);
+    }
+
+    #[test]
+    fn size_accounting() {
+        let w = randn(1000, 4);
+        let p = magnitude_prune(&w, 0.5);
+        let bits = pruned_quantized_bits(&p, 8.0, 4.0);
+        assert!((bits - 500.0 * 12.0).abs() < 12.0 * 10.0);
+    }
+}

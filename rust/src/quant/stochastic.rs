@@ -1,0 +1,115 @@
+//! Stochastic rounding (Gupta et al. 2015, cited in the paper's related
+//! work): instead of midpoint reconstruction, each weight rounds up or
+//! down with probability proportional to its position in the interval —
+//! unbiased (E[q(w)] = w) at the cost of ~2× the noise energy of
+//! round-to-nearest. Used by the ablation bench.
+
+use crate::quant::uniform::QuantRange;
+use crate::rng::Pcg32;
+use crate::tensor::Tensor;
+
+/// Stochastically quantize `w` to the 2^bits uniform grid over its range.
+pub fn stochastic_fake_quant(w: &Tensor, bits: f32, rng: &mut Pcg32) -> Tensor {
+    let range = QuantRange::of(w);
+    let span = range.span();
+    if bits <= 0.0 || span <= 0.0 {
+        return w.clone();
+    }
+    let nlev = (bits as f64).exp2() as f32;
+    let step = span / nlev;
+    // grid of 2^bits cell *boundaries*; reconstruct at cell edges so the
+    // expectation matches (classic stochastic rounding on a lattice)
+    let max_edge = nlev; // edges 0..=nlev, values lo + e*step
+    let data = w
+        .data()
+        .iter()
+        .map(|&v| {
+            let x = (v - range.lo) / step;
+            let lo_edge = x.floor().clamp(0.0, max_edge);
+            let frac = (x - lo_edge).clamp(0.0, 1.0);
+            let up = (rng.next_f32() < frac) as u32 as f32;
+            range.lo + (lo_edge + up).min(max_edge) * step
+        })
+        .collect();
+    Tensor::from_vec(w.shape(), data).unwrap()
+}
+
+/// Noise energy of stochastic quantization (one realization).
+pub fn stochastic_noise(w: &Tensor, bits: f32, rng: &mut Pcg32) -> f64 {
+    let q = stochastic_fake_quant(w, bits, rng);
+    w.data()
+        .iter()
+        .zip(q.data())
+        .map(|(a, b)| ((a - b) as f64).powi(2))
+        .sum()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::quant::uniform::quant_noise;
+    use crate::rng::fill_normal;
+
+    fn randn(n: usize, seed: u64) -> Tensor {
+        let mut rng = Pcg32::new(seed);
+        let mut data = vec![0f32; n];
+        fill_normal(&mut rng, &mut data);
+        Tensor::from_vec(&[n], data).unwrap()
+    }
+
+    #[test]
+    fn output_on_grid_and_bounded() {
+        let w = randn(2000, 1);
+        let range = QuantRange::of(&w);
+        let mut rng = Pcg32::new(9);
+        let q = stochastic_fake_quant(&w, 4.0, &mut rng);
+        let step = range.span() / 16.0;
+        for (&orig, &v) in w.data().iter().zip(q.data()) {
+            let e = (v - range.lo) / step;
+            assert!((e - e.round()).abs() < 1e-3, "off-grid value {v}");
+            assert!((v - orig).abs() <= step + 1e-5, "moved more than one cell");
+        }
+    }
+
+    #[test]
+    fn unbiased_in_expectation() {
+        // average many realizations of a single value: must approach it
+        let w = Tensor::from_vec(&[1000], vec![0.3337; 1000]).unwrap();
+        // give the quantizer a real range by appending extremes
+        let mut data = w.data().to_vec();
+        data.push(0.0);
+        data.push(1.0);
+        let w = Tensor::from_vec(&[1002], data).unwrap();
+        let mut rng = Pcg32::new(4);
+        let q = stochastic_fake_quant(&w, 3.0, &mut rng);
+        let mean: f64 =
+            q.data()[..1000].iter().map(|&v| v as f64).sum::<f64>() / 1000.0;
+        assert!(
+            (mean - 0.3337).abs() < 0.01,
+            "stochastic rounding biased: mean {mean}"
+        );
+    }
+
+    #[test]
+    fn noisier_than_round_to_nearest() {
+        // E[r²] = step²/6 for stochastic vs step²/12 for nearest → 2×
+        let w = randn(50_000, 2);
+        let mut rng = Pcg32::new(5);
+        let sn = stochastic_noise(&w, 6.0, &mut rng);
+        let un = quant_noise(&w, 6.0);
+        let ratio = sn / un;
+        assert!(
+            (1.6..2.4).contains(&ratio),
+            "expected ~2x noise, got {ratio}"
+        );
+    }
+
+    #[test]
+    fn identity_cases() {
+        let w = randn(100, 3);
+        let mut rng = Pcg32::new(6);
+        assert_eq!(stochastic_fake_quant(&w, 0.0, &mut rng).data(), w.data());
+        let c = Tensor::from_vec(&[8], vec![2.0; 8]).unwrap();
+        assert_eq!(stochastic_fake_quant(&c, 4.0, &mut rng).data(), c.data());
+    }
+}

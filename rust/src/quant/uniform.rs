@@ -1,0 +1,200 @@
+//! The uniform quantizer — Rust twin of the L1 Pallas kernel
+//! (`python/compile/kernels/fake_quant.py`) and the jnp oracle
+//! (`kernels/ref.py`). Same op order, f32 arithmetic, so all three agree
+//! to float rounding (cross-checked in `rust/tests/pjrt_cross_check.rs`).
+//!
+//! Semantics (paper Eq. 2-3 + supplementary): range [min, max] split into
+//! 2^b equal intervals, midpoint reconstruction → E[r²] = step²/12 per
+//! weight, i.e. E‖r_W‖² = p′·e^(−α·b) with α = ln 4.
+
+use crate::tensor::Tensor;
+
+/// Quantization range of a tensor (cached so sweeps don't re-reduce).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct QuantRange {
+    pub lo: f32,
+    pub hi: f32,
+}
+
+impl QuantRange {
+    pub fn of(t: &Tensor) -> QuantRange {
+        QuantRange { lo: t.min(), hi: t.max() }
+    }
+
+    pub fn span(&self) -> f32 {
+        self.hi - self.lo
+    }
+}
+
+/// Tensors below this size are quantized on the calling thread; larger
+/// ones are chunked across threads (perf pass, EXPERIMENTS.md §Perf/L3:
+/// the single-thread loop measured 1.2 GB/s and the eval hot path
+/// quantizes multi-MiB FC matrices per probe).
+const PAR_THRESHOLD: usize = 1 << 19;
+
+/// Quantize-dequantize `w` at `bits`, writing into `out`.
+///
+/// `bits <= 0` or a degenerate range copies the input through unchanged
+/// (the coordinator's "leave at fp32" convention shared with the kernel).
+pub fn fake_quant_into(w: &[f32], range: QuantRange, bits: f32, out: &mut [f32]) {
+    assert_eq!(w.len(), out.len());
+    let span = range.span();
+    if bits <= 0.0 || span <= 0.0 {
+        out.copy_from_slice(w);
+        return;
+    }
+    let nlev = (bits as f64).exp2() as f32;
+    let step = span / nlev;
+    let lo = range.lo;
+    let max_q = nlev - 1.0;
+    let inv_step = 1.0 / step;
+    let kernel = |src: &[f32], dst: &mut [f32]| {
+        for (o, &v) in dst.iter_mut().zip(src) {
+            let q = ((v - lo) * inv_step).floor().clamp(0.0, max_q);
+            *o = lo + (q + 0.5) * step;
+        }
+    };
+    if w.len() < PAR_THRESHOLD {
+        kernel(w, out);
+        return;
+    }
+    let threads = std::thread::available_parallelism().map_or(4, |n| n.get()).min(16);
+    let chunk = w.len().div_ceil(threads);
+    std::thread::scope(|s| {
+        for (src, dst) in w.chunks(chunk).zip(out.chunks_mut(chunk)) {
+            s.spawn(move || kernel(src, dst));
+        }
+    });
+}
+
+/// Allocating variant of [`fake_quant_into`] over a tensor.
+pub fn fake_quant(w: &Tensor, bits: f32) -> Tensor {
+    let range = QuantRange::of(w);
+    let mut out = vec![0f32; w.len()];
+    fake_quant_into(w.data(), range, bits, &mut out);
+    Tensor::from_vec(w.shape(), out).unwrap()
+}
+
+/// Measured quantization noise energy ‖w − fq(w)‖² (f64 accumulate).
+pub fn quant_noise(w: &Tensor, bits: f32) -> f64 {
+    let range = QuantRange::of(w);
+    let span = range.span();
+    if bits <= 0.0 || span <= 0.0 {
+        return 0.0;
+    }
+    let nlev = (bits as f64).exp2() as f32;
+    let step = span / nlev;
+    let lo = range.lo;
+    let max_q = nlev - 1.0;
+    let inv_step = 1.0 / step;
+    let mut acc = 0f64;
+    for &v in w.data() {
+        let q = ((v - lo) * inv_step).floor().clamp(0.0, max_q);
+        let r = (lo + (q + 0.5) * step) - v;
+        acc += (r as f64) * (r as f64);
+    }
+    acc
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::{fill_normal, Pcg32};
+
+    fn randn(n: usize, seed: u64) -> Tensor {
+        let mut rng = Pcg32::new(seed);
+        let mut data = vec![0f32; n];
+        fill_normal(&mut rng, &mut data);
+        Tensor::from_vec(&[n], data).unwrap()
+    }
+
+    #[test]
+    fn identity_on_bits_zero() {
+        let w = randn(100, 1);
+        assert_eq!(fake_quant(&w, 0.0).data(), w.data());
+        assert_eq!(fake_quant(&w, -3.0).data(), w.data());
+    }
+
+    #[test]
+    fn identity_on_degenerate_range() {
+        let w = Tensor::from_vec(&[4], vec![2.5; 4]).unwrap();
+        assert_eq!(fake_quant(&w, 8.0).data(), w.data());
+    }
+
+    #[test]
+    fn one_bit_two_levels() {
+        let w = Tensor::from_vec(&[4], vec![0.0, 0.3, 0.7, 1.0]).unwrap();
+        let q = fake_quant(&w, 1.0);
+        // levels at 0.25 and 0.75
+        assert_eq!(q.data(), &[0.25, 0.25, 0.75, 0.75]);
+    }
+
+    #[test]
+    fn idempotent() {
+        // fq(fq(x)) == fq(x): reconstruction points are fixed points as
+        // long as the range is preserved; midpoints stay in-bin
+        let w = randn(500, 2);
+        let q1 = fake_quant(&w, 5.0);
+        let range = QuantRange::of(&w);
+        let mut q2 = vec![0f32; w.len()];
+        fake_quant_into(q1.data(), range, 5.0, &mut q2);
+        assert_eq!(q1.data(), &q2[..]);
+    }
+
+    #[test]
+    fn error_bounded_by_half_step() {
+        let w = randn(2000, 3);
+        let range = QuantRange::of(&w);
+        for bits in [2.0f32, 4.0, 8.0] {
+            let q = fake_quant(&w, bits);
+            let step = range.span() / (bits as f64).exp2() as f32;
+            for (a, b) in w.data().iter().zip(q.data()) {
+                assert!(
+                    (a - b).abs() <= step * 0.5 + 1e-6,
+                    "bits={bits} err {} > step/2 {}",
+                    (a - b).abs(),
+                    step * 0.5
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn noise_follows_four_x_law() {
+        // Eq. 3: one bit less → 4× the noise energy (approximately, for a
+        // smooth distribution)
+        let w = randn(50_000, 4);
+        let e8 = quant_noise(&w, 8.0);
+        let e7 = quant_noise(&w, 7.0);
+        let e6 = quant_noise(&w, 6.0);
+        let r87 = e7 / e8;
+        let r76 = e6 / e7;
+        assert!((r87 - 4.0).abs() < 0.4, "ratio {r87}");
+        assert!((r76 - 4.0).abs() < 0.4, "ratio {r76}");
+    }
+
+    #[test]
+    fn noise_matches_quantized_diff() {
+        let w = randn(1000, 5);
+        let q = fake_quant(&w, 6.0);
+        let direct: f64 = w
+            .data()
+            .iter()
+            .zip(q.data())
+            .map(|(a, b)| ((a - b) as f64).powi(2))
+            .sum();
+        let model = quant_noise(&w, 6.0);
+        assert!((direct - model).abs() < 1e-9 * direct.max(1.0));
+    }
+
+    #[test]
+    fn more_bits_less_noise_monotone() {
+        let w = randn(5000, 6);
+        let mut last = f64::INFINITY;
+        for b in 1..=12 {
+            let e = quant_noise(&w, b as f32);
+            assert!(e < last, "bits {b}: {e} !< {last}");
+            last = e;
+        }
+    }
+}

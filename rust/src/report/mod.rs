@@ -1,0 +1,8 @@
+//! Reporting: ascii scatter/line plots and histograms for terminal
+//! rendering of every paper figure, plus markdown tables.
+
+mod plot;
+mod table;
+
+pub use plot::{ascii_histogram, ascii_plot, Series};
+pub use table::{markdown_table, Align};

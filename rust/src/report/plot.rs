@@ -1,0 +1,162 @@
+//! ASCII plotting: multi-series scatter plots with optional log axes and
+//! bar histograms. Every figure bench renders its series through this so
+//! the paper's plots can be eyeballed straight from the terminal (the CSV
+//! next to it has the exact numbers).
+
+/// One plotted series.
+#[derive(Clone, Debug)]
+pub struct Series {
+    pub label: String,
+    pub marker: char,
+    pub points: Vec<(f64, f64)>,
+}
+
+impl Series {
+    pub fn new(label: impl Into<String>, marker: char, points: Vec<(f64, f64)>) -> Series {
+        Series { label: label.into(), marker, points }
+    }
+}
+
+fn axis_transform(v: f64, log: bool) -> f64 {
+    if log {
+        v.max(1e-300).log10()
+    } else {
+        v
+    }
+}
+
+/// Render a scatter plot of the series into a `width`×`height` character
+/// canvas with axis labels. `log_x`/`log_y` switch to log₁₀ axes.
+pub fn ascii_plot(
+    title: &str,
+    series: &[Series],
+    width: usize,
+    height: usize,
+    log_x: bool,
+    log_y: bool,
+) -> String {
+    let mut pts: Vec<(f64, f64)> = Vec::new();
+    for s in series {
+        for &(x, y) in &s.points {
+            pts.push((axis_transform(x, log_x), axis_transform(y, log_y)));
+        }
+    }
+    if pts.is_empty() {
+        return format!("{title}\n  (no data)\n");
+    }
+    let (mut x0, mut x1) = (f64::INFINITY, f64::NEG_INFINITY);
+    let (mut y0, mut y1) = (f64::INFINITY, f64::NEG_INFINITY);
+    for &(x, y) in &pts {
+        x0 = x0.min(x);
+        x1 = x1.max(x);
+        y0 = y0.min(y);
+        y1 = y1.max(y);
+    }
+    if x1 - x0 < 1e-12 {
+        x1 = x0 + 1.0;
+    }
+    if y1 - y0 < 1e-12 {
+        y1 = y0 + 1.0;
+    }
+    let mut canvas = vec![vec![' '; width]; height];
+    for s in series {
+        for &(x, y) in &s.points {
+            let tx = axis_transform(x, log_x);
+            let ty = axis_transform(y, log_y);
+            let cx = (((tx - x0) / (x1 - x0)) * (width - 1) as f64).round() as usize;
+            let cy = (((ty - y0) / (y1 - y0)) * (height - 1) as f64).round() as usize;
+            let row = height - 1 - cy.min(height - 1);
+            canvas[row][cx.min(width - 1)] = s.marker;
+        }
+    }
+    let fmt_axis = |v: f64, log: bool| {
+        if log {
+            format!("1e{v:.1}")
+        } else if v.abs() >= 1000.0 || (v != 0.0 && v.abs() < 0.01) {
+            format!("{v:.2e}")
+        } else {
+            format!("{v:.3}")
+        }
+    };
+    let mut out = String::new();
+    out.push_str(title);
+    out.push('\n');
+    for (i, row) in canvas.iter().enumerate() {
+        let ylab = if i == 0 {
+            fmt_axis(y1, log_y)
+        } else if i == height - 1 {
+            fmt_axis(y0, log_y)
+        } else {
+            String::new()
+        };
+        out.push_str(&format!("{ylab:>10} |"));
+        out.extend(row.iter());
+        out.push('\n');
+    }
+    out.push_str(&format!("{:>10} +{}\n", "", "-".repeat(width)));
+    out.push_str(&format!(
+        "{:>10}  {}{}{}\n",
+        "",
+        fmt_axis(x0, log_x),
+        " ".repeat(width.saturating_sub(16)),
+        fmt_axis(x1, log_x)
+    ));
+    for s in series {
+        out.push_str(&format!("{:>12} = {}\n", s.marker, s.label));
+    }
+    out
+}
+
+/// Render a histogram as horizontal bars.
+pub fn ascii_histogram(title: &str, edges: &[f64], counts: &[usize], width: usize) -> String {
+    let maxc = counts.iter().copied().max().unwrap_or(1).max(1);
+    let mut out = String::new();
+    out.push_str(title);
+    out.push('\n');
+    for (i, &c) in counts.iter().enumerate() {
+        let lo = edges[i];
+        let hi = edges[i + 1];
+        let bar = "#".repeat(c * width / maxc);
+        out.push_str(&format!("[{lo:9.3} – {hi:9.3}) {c:6} {bar}\n"));
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn plot_contains_markers_and_labels() {
+        let s = vec![
+            Series::new("ours", 'o', vec![(1.0, 1.0), (2.0, 4.0), (3.0, 9.0)]),
+            Series::new("sqnr", 'x', vec![(1.0, 2.0), (2.0, 5.0)]),
+        ];
+        let p = ascii_plot("test", &s, 40, 10, false, false);
+        assert!(p.contains('o'));
+        assert!(p.contains('x'));
+        assert!(p.contains("ours"));
+        assert!(p.contains("sqnr"));
+        assert!(p.lines().count() > 10);
+    }
+
+    #[test]
+    fn plot_log_axes_no_panic() {
+        let s = vec![Series::new("a", '*', vec![(1e-6, 1e3), (1e2, 1e-2)])];
+        let p = ascii_plot("log", &s, 30, 8, true, true);
+        assert!(p.contains('*'));
+    }
+
+    #[test]
+    fn plot_empty_is_graceful() {
+        let p = ascii_plot("none", &[], 30, 8, false, false);
+        assert!(p.contains("no data"));
+    }
+
+    #[test]
+    fn histogram_renders_bars() {
+        let h = ascii_histogram("h", &[0.0, 1.0, 2.0], &[2, 4], 20);
+        assert!(h.contains("####"));
+        assert_eq!(h.lines().count(), 3);
+    }
+}

@@ -1,0 +1,76 @@
+//! Markdown table rendering for bench/CLI output.
+
+/// Column alignment.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Align {
+    Left,
+    Right,
+}
+
+/// Render rows as a github-markdown table.
+pub fn markdown_table(header: &[&str], aligns: &[Align], rows: &[Vec<String>]) -> String {
+    assert_eq!(header.len(), aligns.len());
+    let ncol = header.len();
+    let mut widths: Vec<usize> = header.iter().map(|h| h.len()).collect();
+    for row in rows {
+        assert_eq!(row.len(), ncol, "table row width mismatch");
+        for (w, cell) in widths.iter_mut().zip(row) {
+            *w = (*w).max(cell.len());
+        }
+    }
+    let mut out = String::new();
+    let pad = |s: &str, w: usize, a: Align| match a {
+        Align::Left => format!("{s:<w$}"),
+        Align::Right => format!("{s:>w$}"),
+    };
+    out.push('|');
+    for ((h, &w), &a) in header.iter().zip(&widths).zip(aligns) {
+        out.push_str(&format!(" {} |", pad(h, w, a)));
+    }
+    out.push('\n');
+    out.push('|');
+    for (&w, &a) in widths.iter().zip(aligns) {
+        let dashes = "-".repeat(w);
+        match a {
+            Align::Left => out.push_str(&format!(" {dashes} |")),
+            Align::Right => out.push_str(&format!(" {dashes}:|")),
+        }
+    }
+    out.push('\n');
+    for row in rows {
+        out.push('|');
+        for ((cell, &w), &a) in row.iter().zip(&widths).zip(aligns) {
+            out.push_str(&format!(" {} |", pad(cell, w, a)));
+        }
+        out.push('\n');
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn renders_aligned() {
+        let t = markdown_table(
+            &["layer", "bits"],
+            &[Align::Left, Align::Right],
+            &[
+                vec!["conv1".into(), "8".into()],
+                vec!["fc".into(), "4.25".into()],
+            ],
+        );
+        let lines: Vec<&str> = t.lines().collect();
+        assert_eq!(lines.len(), 4);
+        assert!(lines[0].contains("layer"));
+        assert!(lines[1].contains(":|"));
+        assert!(lines[3].contains("4.25"));
+    }
+
+    #[test]
+    #[should_panic(expected = "width mismatch")]
+    fn rejects_jagged_rows() {
+        markdown_table(&["a"], &[Align::Left], &[vec!["x".into(), "y".into()]]);
+    }
+}

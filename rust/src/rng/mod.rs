@@ -1,0 +1,62 @@
+//! Deterministic RNG: PCG32 (bit-compatible with `python/compile/pcg.py`)
+//! plus helpers for the noise-injection experiments.
+
+mod pcg;
+
+pub use pcg::Pcg32;
+
+/// Fill a slice with U(-0.5, 0.5) samples — the noise shape used by the
+/// paper's Algorithm 1 (t_i calibration).
+pub fn fill_uniform_pm_half(rng: &mut Pcg32, out: &mut [f32]) {
+    for v in out.iter_mut() {
+        *v = rng.uniform(-0.5, 0.5);
+    }
+}
+
+/// Standard-normal samples via Box-Muller (used only by Rust-side tests
+/// and synthetic benches, never by the parity-checked dataset path).
+pub fn fill_normal(rng: &mut Pcg32, out: &mut [f32]) {
+    let mut i = 0;
+    while i < out.len() {
+        let u1 = (rng.next_f64()).max(1e-12);
+        let u2 = rng.next_f64();
+        let r = (-2.0 * u1.ln()).sqrt();
+        let th = 2.0 * std::f64::consts::PI * u2;
+        out[i] = (r * th.cos()) as f32;
+        if i + 1 < out.len() {
+            out[i + 1] = (r * th.sin()) as f32;
+        }
+        i += 2;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn uniform_pm_half_in_range() {
+        let mut rng = Pcg32::new(7);
+        let mut buf = vec![0f32; 10_000];
+        fill_uniform_pm_half(&mut rng, &mut buf);
+        assert!(buf.iter().all(|&v| (-0.5..0.5).contains(&v)));
+        let mean: f64 = buf.iter().map(|&v| v as f64).sum::<f64>() / buf.len() as f64;
+        assert!(mean.abs() < 0.01, "mean {mean}");
+        // var of U(-0.5,0.5) is 1/12
+        let var: f64 =
+            buf.iter().map(|&v| (v as f64 - mean).powi(2)).sum::<f64>() / buf.len() as f64;
+        assert!((var - 1.0 / 12.0).abs() < 0.005, "var {var}");
+    }
+
+    #[test]
+    fn normal_moments() {
+        let mut rng = Pcg32::new(9);
+        let mut buf = vec![0f32; 20_000];
+        fill_normal(&mut rng, &mut buf);
+        let mean: f64 = buf.iter().map(|&v| v as f64).sum::<f64>() / buf.len() as f64;
+        let var: f64 =
+            buf.iter().map(|&v| (v as f64 - mean).powi(2)).sum::<f64>() / buf.len() as f64;
+        assert!(mean.abs() < 0.03, "mean {mean}");
+        assert!((var - 1.0).abs() < 0.05, "var {var}");
+    }
+}

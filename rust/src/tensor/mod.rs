@@ -1,0 +1,289 @@
+//! Minimal dense tensors: `Tensor` (f32) and `IntTensor` (i32).
+//!
+//! Just enough linear algebra for the coordinator: the heavy compute runs
+//! through PJRT (L1/L2 artifacts) or the [`crate::nn`] substrate; this
+//! module provides shapes, storage, reductions and the GEMM that `nn`
+//! builds its conv on.
+
+use crate::{Error, Result};
+
+/// Dense row-major f32 tensor.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Tensor {
+    shape: Vec<usize>,
+    data: Vec<f32>,
+}
+
+impl Tensor {
+    /// Zero-filled tensor.
+    pub fn zeros(shape: &[usize]) -> Self {
+        let n = shape.iter().product();
+        Tensor { shape: shape.to_vec(), data: vec![0.0; n] }
+    }
+
+    /// Build from parts; checks that the element count matches the shape.
+    pub fn from_vec(shape: &[usize], data: Vec<f32>) -> Result<Self> {
+        let n: usize = shape.iter().product();
+        if n != data.len() {
+            return Err(Error::Shape(format!(
+                "shape {:?} wants {} elements, got {}",
+                shape,
+                n,
+                data.len()
+            )));
+        }
+        Ok(Tensor { shape: shape.to_vec(), data })
+    }
+
+    /// Scalar (rank-0) tensor.
+    pub fn scalar(v: f32) -> Self {
+        Tensor { shape: vec![], data: vec![v] }
+    }
+
+    pub fn shape(&self) -> &[usize] {
+        &self.shape
+    }
+
+    pub fn ndim(&self) -> usize {
+        self.shape.len()
+    }
+
+    pub fn len(&self) -> usize {
+        self.data.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.data.is_empty()
+    }
+
+    pub fn data(&self) -> &[f32] {
+        &self.data
+    }
+
+    pub fn data_mut(&mut self) -> &mut [f32] {
+        &mut self.data
+    }
+
+    pub fn into_vec(self) -> Vec<f32> {
+        self.data
+    }
+
+    /// Reshape in place (same element count).
+    pub fn reshape(mut self, shape: &[usize]) -> Result<Self> {
+        let n: usize = shape.iter().product();
+        if n != self.data.len() {
+            return Err(Error::Shape(format!(
+                "cannot reshape {} elements to {:?}",
+                self.data.len(),
+                shape
+            )));
+        }
+        self.shape = shape.to_vec();
+        Ok(self)
+    }
+
+    /// Row `r` of a rank-2 tensor.
+    pub fn row(&self, r: usize) -> &[f32] {
+        debug_assert_eq!(self.ndim(), 2);
+        let c = self.shape[1];
+        &self.data[r * c..(r + 1) * c]
+    }
+
+    /// Minimum element (NaN-poisoning ignored; tensors here are finite).
+    pub fn min(&self) -> f32 {
+        self.data.iter().copied().fold(f32::INFINITY, f32::min)
+    }
+
+    /// Maximum element.
+    pub fn max(&self) -> f32 {
+        self.data.iter().copied().fold(f32::NEG_INFINITY, f32::max)
+    }
+
+    /// Σ x² in f64 (the measurement accumulators need the headroom).
+    pub fn l2_sq(&self) -> f64 {
+        self.data.iter().map(|&v| (v as f64) * (v as f64)).sum()
+    }
+
+    /// Elementwise a − b.
+    pub fn sub(&self, other: &Tensor) -> Result<Tensor> {
+        if self.shape != other.shape {
+            return Err(Error::Shape(format!(
+                "sub: {:?} vs {:?}",
+                self.shape, other.shape
+            )));
+        }
+        let data = self
+            .data
+            .iter()
+            .zip(&other.data)
+            .map(|(a, b)| a - b)
+            .collect();
+        Ok(Tensor { shape: self.shape.clone(), data })
+    }
+
+    /// Elementwise a + b.
+    pub fn add(&self, other: &Tensor) -> Result<Tensor> {
+        if self.shape != other.shape {
+            return Err(Error::Shape(format!(
+                "add: {:?} vs {:?}",
+                self.shape, other.shape
+            )));
+        }
+        let data = self
+            .data
+            .iter()
+            .zip(&other.data)
+            .map(|(a, b)| a + b)
+            .collect();
+        Ok(Tensor { shape: self.shape.clone(), data })
+    }
+
+    /// Elementwise scale.
+    pub fn scale(&self, k: f32) -> Tensor {
+        Tensor {
+            shape: self.shape.clone(),
+            data: self.data.iter().map(|&v| v * k).collect(),
+        }
+    }
+
+    /// Indices of the two largest entries of a 1-D slice, returned as
+    /// (argmax, arg-second-max). Used for the adversarial margin
+    /// (z₍₁₎ − z₍₂₎)²/2 of Eq. 13 and for accuracy.
+    pub fn top2(row: &[f32]) -> (usize, usize) {
+        debug_assert!(row.len() >= 2);
+        let (mut i1, mut i2) = if row[0] >= row[1] { (0, 1) } else { (1, 0) };
+        for (i, &v) in row.iter().enumerate().skip(2) {
+            if v > row[i1] {
+                i2 = i1;
+                i1 = i;
+            } else if v > row[i2] {
+                i2 = i;
+            }
+        }
+        (i1, i2)
+    }
+}
+
+/// Dense row-major i32 tensor (labels).
+#[derive(Clone, Debug, PartialEq)]
+pub struct IntTensor {
+    shape: Vec<usize>,
+    data: Vec<i32>,
+}
+
+impl IntTensor {
+    pub fn from_vec(shape: &[usize], data: Vec<i32>) -> Result<Self> {
+        let n: usize = shape.iter().product();
+        if n != data.len() {
+            return Err(Error::Shape(format!(
+                "shape {:?} wants {} elements, got {}",
+                shape,
+                n,
+                data.len()
+            )));
+        }
+        Ok(IntTensor { shape: shape.to_vec(), data })
+    }
+
+    pub fn shape(&self) -> &[usize] {
+        &self.shape
+    }
+
+    pub fn len(&self) -> usize {
+        self.data.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.data.is_empty()
+    }
+
+    pub fn data(&self) -> &[i32] {
+        &self.data
+    }
+}
+
+/// C = A(m×k) · B(k×n), accumulating in f32 with a blocked inner loop.
+/// This is the pure-Rust GEMM under `nn::conv2d` (im2col) and `nn::dense`.
+pub fn matmul(a: &Tensor, b: &Tensor) -> Result<Tensor> {
+    if a.ndim() != 2 || b.ndim() != 2 {
+        return Err(Error::Shape("matmul wants rank-2 operands".into()));
+    }
+    let (m, k) = (a.shape[0], a.shape[1]);
+    let (k2, n) = (b.shape[0], b.shape[1]);
+    if k != k2 {
+        return Err(Error::Shape(format!("matmul: {m}x{k} vs {k2}x{n}")));
+    }
+    let mut out = vec![0f32; m * n];
+    // ikj loop order: streams B rows, keeps C row hot.
+    for i in 0..m {
+        let arow = &a.data[i * k..(i + 1) * k];
+        let crow = &mut out[i * n..(i + 1) * n];
+        for (p, &av) in arow.iter().enumerate() {
+            if av == 0.0 {
+                continue; // post-ReLU activations are sparse
+            }
+            let brow = &b.data[p * n..(p + 1) * n];
+            for (cv, &bv) in crow.iter_mut().zip(brow) {
+                *cv += av * bv;
+            }
+        }
+    }
+    Tensor::from_vec(&[m, n], out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn from_vec_checks_len() {
+        assert!(Tensor::from_vec(&[2, 3], vec![0.0; 5]).is_err());
+        assert!(Tensor::from_vec(&[2, 3], vec![0.0; 6]).is_ok());
+    }
+
+    #[test]
+    fn reshape_roundtrip() {
+        let t = Tensor::from_vec(&[2, 3], (0..6).map(|v| v as f32).collect()).unwrap();
+        let t = t.reshape(&[3, 2]).unwrap();
+        assert_eq!(t.shape(), &[3, 2]);
+        assert!(t.clone().reshape(&[7]).is_err());
+    }
+
+    #[test]
+    fn matmul_known() {
+        let a = Tensor::from_vec(&[2, 2], vec![1.0, 2.0, 3.0, 4.0]).unwrap();
+        let b = Tensor::from_vec(&[2, 2], vec![1.0, 1.0, 1.0, 1.0]).unwrap();
+        let c = matmul(&a, &b).unwrap();
+        assert_eq!(c.data(), &[3.0, 3.0, 7.0, 7.0]);
+    }
+
+    #[test]
+    fn matmul_identity() {
+        let a = Tensor::from_vec(&[2, 3], vec![1., 2., 3., 4., 5., 6.]).unwrap();
+        let eye = Tensor::from_vec(&[3, 3], vec![1., 0., 0., 0., 1., 0., 0., 0., 1.]).unwrap();
+        assert_eq!(matmul(&a, &eye).unwrap().data(), a.data());
+    }
+
+    #[test]
+    fn top2_orderings() {
+        assert_eq!(Tensor::top2(&[3.0, 1.0, 2.0]), (0, 2));
+        assert_eq!(Tensor::top2(&[1.0, 3.0, 2.0]), (1, 2));
+        assert_eq!(Tensor::top2(&[1.0, 2.0, 3.0]), (2, 1));
+        assert_eq!(Tensor::top2(&[5.0, 5.0]), (0, 1));
+    }
+
+    #[test]
+    fn stats() {
+        let t = Tensor::from_vec(&[4], vec![-2.0, 0.0, 1.0, 3.0]).unwrap();
+        assert_eq!(t.min(), -2.0);
+        assert_eq!(t.max(), 3.0);
+        assert_eq!(t.l2_sq(), 14.0);
+    }
+
+    #[test]
+    fn sub_shape_check() {
+        let a = Tensor::zeros(&[2, 2]);
+        let b = Tensor::zeros(&[4]);
+        assert!(a.sub(&b).is_err());
+    }
+}

@@ -1,0 +1,105 @@
+//! CLI smoke tests: drive the compiled `adaq` binary end to end
+//! (argument handling, error paths, and the read-only commands against
+//! real artifacts).
+
+use std::process::Command;
+
+fn adaq() -> Command {
+    Command::new(env!("CARGO_BIN_EXE_adaq"))
+}
+
+fn have_artifacts() -> bool {
+    let ok = std::path::Path::new("artifacts/dataset/test.tnsr").is_file();
+    if !ok {
+        eprintln!("skipping: no artifacts (run `make artifacts`)");
+    }
+    ok
+}
+
+#[test]
+fn help_prints_usage() {
+    let out = adaq().arg("help").output().unwrap();
+    assert!(out.status.success());
+    let text = String::from_utf8_lossy(&out.stdout);
+    assert!(text.contains("calibrate"));
+    assert!(text.contains("sweep"));
+}
+
+#[test]
+fn unknown_command_fails_with_usage() {
+    let out = adaq().arg("frobnicate").output().unwrap();
+    assert!(!out.status.success());
+    let err = String::from_utf8_lossy(&out.stderr);
+    assert!(err.contains("unknown command"));
+}
+
+#[test]
+fn missing_required_flag_fails() {
+    let out = adaq().arg("info").output().unwrap();
+    assert!(!out.status.success());
+    assert!(String::from_utf8_lossy(&out.stderr).contains("--model"));
+}
+
+#[test]
+fn info_lists_layers() {
+    if !have_artifacts() {
+        return;
+    }
+    let out = adaq().args(["info", "--model", "mini_alexnet"]).output().unwrap();
+    assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+    let text = String::from_utf8_lossy(&out.stdout);
+    assert!(text.contains("conv1"));
+    assert!(text.contains("fc8"));
+    assert!(text.contains("8 weighted"));
+}
+
+#[test]
+fn evaluate_with_explicit_bits() {
+    if !have_artifacts() {
+        return;
+    }
+    let out = adaq()
+        .args(["evaluate", "--model", "mini_resnet", "--bits", "8"])
+        .output()
+        .unwrap();
+    assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+    let text = String::from_utf8_lossy(&out.stdout);
+    assert!(text.contains("accuracy"), "{text}");
+}
+
+#[test]
+fn evaluate_rejects_wrong_bits_arity() {
+    if !have_artifacts() {
+        return;
+    }
+    let out = adaq()
+        .args(["evaluate", "--model", "mini_resnet", "--bits", "8,8"])
+        .output()
+        .unwrap();
+    assert!(!out.status.success());
+    assert!(String::from_utf8_lossy(&out.stderr).contains("weighted layers"));
+}
+
+#[test]
+fn export_with_explicit_bits_writes_container() {
+    if !have_artifacts() {
+        return;
+    }
+    let out_dir = std::env::temp_dir().join(format!("adaq_cli_export_{}", std::process::id()));
+    let out = adaq()
+        .args([
+            "export",
+            "--model",
+            "mini_resnet",
+            "--bits",
+            "6",
+            "--out",
+            out_dir.to_str().unwrap(),
+        ])
+        .output()
+        .unwrap();
+    assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+    assert!(out_dir.join("quantized.tnsr").is_file());
+    assert!(out_dir.join("quantized.json").is_file());
+    std::fs::remove_dir_all(out_dir).ok();
+}

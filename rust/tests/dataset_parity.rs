@@ -1,0 +1,82 @@
+//! Cross-language dataset parity: the Rust procedural generator
+//! (`dataset::gen`) must reproduce the Python-generated artifact
+//! (`python/compile/datagen.py` → `artifacts/dataset/*.tnsr`)
+//! **bit-for-bit** — both draw from the shared PCG32 stream.
+//!
+//! Skipped when artifacts are absent (run `make artifacts`).
+
+use adaq::dataset::{self, Dataset};
+
+fn artifacts_root() -> std::path::PathBuf {
+    std::path::PathBuf::from(std::env::var("ADAQ_ARTIFACTS").unwrap_or_else(|_| "artifacts".into()))
+}
+
+fn have_artifacts() -> bool {
+    let ok = artifacts_root().join("dataset/test.tnsr").is_file();
+    if !ok {
+        eprintln!("skipping: no artifacts (run `make artifacts`)");
+    }
+    ok
+}
+
+#[test]
+fn test_split_bit_identical() {
+    if !have_artifacts() {
+        return;
+    }
+    let from_py = Dataset::load(artifacts_root(), "test").unwrap();
+    let from_rust = Dataset::generate(dataset::TEST_N, dataset::TEST_SEED);
+    assert_eq!(from_py.labels.data(), from_rust.labels.data());
+    assert_eq!(from_py.images.shape(), from_rust.images.shape());
+    let a = from_py.images.data();
+    let b = from_rust.images.data();
+    let mut mismatches = 0usize;
+    for i in 0..a.len() {
+        if a[i].to_bits() != b[i].to_bits() {
+            mismatches += 1;
+            if mismatches < 5 {
+                eprintln!("pixel {i}: py {} vs rust {}", a[i], b[i]);
+            }
+        }
+    }
+    assert_eq!(mismatches, 0, "{mismatches}/{} pixels differ", a.len());
+}
+
+#[test]
+fn train_split_first_images_bit_identical() {
+    if !have_artifacts() {
+        return;
+    }
+    // spot-check the train split (full comparison is the test split above)
+    let from_py = Dataset::load(artifacts_root(), "train").unwrap();
+    let from_rust = Dataset::generate(dataset::TRAIN_N, dataset::TRAIN_SEED);
+    let n = 50 * 16 * 16;
+    assert_eq!(
+        from_py.images.data()[..n]
+            .iter()
+            .map(|v| v.to_bits())
+            .collect::<Vec<_>>(),
+        from_rust.images.data()[..n]
+            .iter()
+            .map(|v| v.to_bits())
+            .collect::<Vec<_>>()
+    );
+}
+
+#[test]
+fn dataset_meta_consistent() {
+    if !have_artifacts() {
+        return;
+    }
+    let meta = adaq::io::Json::parse_file(artifacts_root().join("dataset/meta.json")).unwrap();
+    assert_eq!(meta.get("img").unwrap().as_usize(), Some(dataset::IMG));
+    assert_eq!(
+        meta.get("num_classes").unwrap().as_usize(),
+        Some(dataset::NUM_CLASSES)
+    );
+    assert_eq!(meta.get("test_n").unwrap().as_usize(), Some(dataset::TEST_N));
+    assert_eq!(
+        meta.get("test_seed").unwrap().as_usize(),
+        Some(dataset::TEST_SEED as usize)
+    );
+}

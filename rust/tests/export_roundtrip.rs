@@ -1,0 +1,115 @@
+//! Export path integration: packed b-bit export → dequantize → forward
+//! must agree with the fake-quant evaluation path, and the packed size
+//! must match Σ sᵢ·bᵢ.
+
+use adaq::coordinator::Session;
+use adaq::io::Json;
+use adaq::model::{dequantize, export_quantized};
+
+fn artifacts_root() -> std::path::PathBuf {
+    std::path::PathBuf::from(std::env::var("ADAQ_ARTIFACTS").unwrap_or_else(|_| "artifacts".into()))
+}
+
+fn have_artifacts() -> bool {
+    let ok = artifacts_root().join("dataset/test.tnsr").is_file();
+    if !ok {
+        eprintln!("skipping: no artifacts (run `make artifacts`)");
+    }
+    ok
+}
+
+#[test]
+fn export_dequantize_matches_fake_quant_eval() {
+    if !have_artifacts() {
+        return;
+    }
+    let session = Session::open(artifacts_root(), "mini_resnet", 250).unwrap();
+    let arts = &session.artifacts;
+    let nwl = arts.manifest.num_weighted_layers;
+    let bits: Vec<u32> = (0..nwl).map(|i| [4u32, 6, 8][i % 3]).collect();
+
+    let out_dir = std::env::temp_dir().join(format!("adaq_export_test_{}", std::process::id()));
+    let summary = export_quantized(arts, &bits, &out_dir).unwrap();
+    assert_eq!(summary.layers.len(), nwl);
+
+    // reload the packed container, dequantize every layer, run through the
+    // plain forward with overrides; compare against eval_qbits
+    let packed = adaq::io::tnsr::read_tnsr_map(out_dir.join("quantized.tnsr")).unwrap();
+    let meta = Json::parse_file(out_dir.join("quantized.json")).unwrap();
+    let mut overrides_data = Vec::new();
+    for lj in meta.get("layers").unwrap().as_arr().unwrap() {
+        let name = lj.get("name").unwrap().as_str().unwrap();
+        let b = lj.get("bits").unwrap().as_usize().unwrap() as u32;
+        let lo = lj.get("lo").unwrap().as_f64().unwrap() as f32;
+        let hi = lj.get("hi").unwrap().as_f64().unwrap() as f32;
+        let count = lj.get("count").unwrap().as_usize().unwrap();
+        let shape: Vec<usize> = lj
+            .get("shape")
+            .unwrap()
+            .as_arr()
+            .unwrap()
+            .iter()
+            .map(|v| v.as_usize().unwrap())
+            .collect();
+        let words = packed
+            .get(&format!("{name}.w.q{b}"))
+            .unwrap()
+            .as_i32("w")
+            .unwrap();
+        let w = dequantize(words.data(), b, count, &shape, lo, hi).unwrap();
+        // locate the parameter index via the manifest
+        let layer = arts
+            .manifest
+            .weighted_layers()
+            .into_iter()
+            .find(|l| l.name == name)
+            .unwrap()
+            .clone();
+        overrides_data.push((layer.param_idx.unwrap().0 - 1, w));
+    }
+    let overrides: Vec<(usize, &adaq::tensor::Tensor)> =
+        overrides_data.iter().map(|(p, t)| (*p, t)).collect();
+    let via_export = session.eval_with_overrides(&overrides).unwrap();
+
+    let bits_f: Vec<f32> = bits.iter().map(|&b| b as f32).collect();
+    let via_pallas = session.eval_qbits(&bits_f).unwrap();
+    assert_eq!(
+        via_export.accuracy, via_pallas.accuracy,
+        "export path and Pallas path must classify identically"
+    );
+    // logits agree to float tolerance
+    let mut maxdiff = 0f32;
+    for (a, b) in via_export.logits.iter().zip(&via_pallas.logits) {
+        for (x, y) in a.iter().zip(b) {
+            maxdiff = maxdiff.max((x - y).abs());
+        }
+    }
+    assert!(maxdiff < 1e-3, "logit diff {maxdiff}");
+
+    // packed weight size = ceil-to-words Σ sᵢ·bᵢ (+ fp32 biases)
+    let weight_bits: f64 = arts
+        .manifest
+        .layer_sizes()
+        .iter()
+        .zip(&bits)
+        .map(|(&s, &b)| {
+            // per-layer word padding
+            ((s as f64 * b as f64 / 32.0).ceil()) * 32.0
+        })
+        .sum();
+    let bias_bytes: usize = arts
+        .manifest
+        .weighted_layers()
+        .iter()
+        .map(|l| match l.kind {
+            adaq::model::LayerKind::Conv { cout, .. } => 4 * cout,
+            adaq::model::LayerKind::Dense { cout, .. } => 4 * cout,
+            _ => 0,
+        })
+        .sum();
+    assert_eq!(
+        summary.packed_bytes,
+        (weight_bits / 8.0) as usize + bias_bytes
+    );
+    std::fs::remove_dir_all(out_dir).ok();
+}

@@ -1,0 +1,147 @@
+//! End-to-end pipeline integration: calibrate → allocate → evaluate on a
+//! small model, asserting the *directional* properties the paper's method
+//! must satisfy (not absolute numbers).
+
+use adaq::coordinator::{run_sweep, Session, SweepConfig};
+use adaq::measure::{calibrate_model, estimate_p, Calibration, SearchParams};
+use adaq::quant::{pareto_frontier, Allocator};
+
+fn artifacts_root() -> std::path::PathBuf {
+    std::path::PathBuf::from(std::env::var("ADAQ_ARTIFACTS").unwrap_or_else(|_| "artifacts".into()))
+}
+
+fn have_artifacts() -> bool {
+    let ok = artifacts_root().join("dataset/test.tnsr").is_file();
+    if !ok {
+        eprintln!("skipping: no artifacts (run `make artifacts`)");
+    }
+    ok
+}
+
+/// Fast calibration settings for tests.
+fn fast_params() -> SearchParams {
+    SearchParams { seeds: 1, max_iters: 14, tol: 0.02, ..Default::default() }
+}
+
+#[test]
+fn calibrate_allocate_evaluate_mini_resnet() {
+    if !have_artifacts() {
+        return;
+    }
+    let session = Session::open(artifacts_root(), "mini_resnet", 250).unwrap();
+    let base = session.baseline().accuracy;
+    assert!(base > 0.85, "model should be well-trained, got {base}");
+
+    let cal = calibrate_model(&session, base * 0.5, &fast_params(), |_| {}).unwrap();
+    assert_eq!(cal.layers.len(), session.artifacts.manifest.num_weighted_layers);
+    for l in &cal.layers {
+        assert!(l.t.is_finite() && l.t > 0.0, "layer {}: t={}", l.name, l.t);
+        assert!(l.p.is_finite() && l.p > 0.0, "layer {}: p={}", l.name, l.p);
+    }
+    assert!(cal.mean_rstar > 0.0);
+
+    // allocation: higher anchor → larger model and (weakly) better accuracy
+    let stats = cal.layer_stats();
+    let mask = vec![true; stats.len()];
+    let mut last_size = 0.0;
+    let mut accs = Vec::new();
+    for b1 in [4.0, 6.0, 8.0] {
+        let a = Allocator::Adaptive.allocate(&stats, b1, &mask, 16.0);
+        let size = a.size_bytes(&stats);
+        assert!(size > last_size, "size must grow with b1");
+        last_size = size;
+        let bits: Vec<f32> = a.bits.iter().map(|&b| b.round().max(1.0) as f32).collect();
+        let out = session.eval_qbits(&bits).unwrap();
+        accs.push(out.accuracy);
+    }
+    assert!(
+        accs[2] >= accs[0] - 0.02,
+        "accuracy should not collapse as bits grow: {accs:?}"
+    );
+    assert!(
+        accs[2] >= base - 0.05,
+        "8-bit-anchored adaptive should be near baseline: {} vs {base}",
+        accs[2]
+    );
+}
+
+#[test]
+fn calibration_json_roundtrip() {
+    if !have_artifacts() {
+        return;
+    }
+    let session = Session::open(artifacts_root(), "mini_resnet", 250).unwrap();
+    let cal = calibrate_model(&session, session.baseline().accuracy * 0.4, &fast_params(), |_| {})
+        .unwrap();
+    let json = cal.to_json();
+    let back = Calibration::from_json(&json).unwrap();
+    assert_eq!(back.model, cal.model);
+    assert_eq!(back.layers.len(), cal.layers.len());
+    for (a, b) in back.layers.iter().zip(&cal.layers) {
+        assert_eq!(a.name, b.name);
+        assert!((a.t - b.t).abs() < 1e-12);
+        assert!((a.p - b.p).abs() < 1e-12);
+        assert_eq!(a.curve.points.len(), b.curve.points.len());
+    }
+}
+
+#[test]
+fn p_estimate_stable_in_linear_regime() {
+    if !have_artifacts() {
+        return;
+    }
+    // Eq. 16: p_i = ‖r_Z‖²·e^{αb} should be ~constant in b while the
+    // exponential model is well-conditioned (mid-range bit-widths; at
+    // high b the transferred noise approaches the numeric floor on our
+    // small layers, which is exactly why estimate_p_robust averages over
+    // P_REF_BITS_MULTI)
+    let session = Session::open(artifacts_root(), "mini_resnet", 250).unwrap();
+    let p6 = estimate_p(&session, 1, 6.0).unwrap();
+    let p8 = estimate_p(&session, 1, 8.0).unwrap();
+    let ratio = p6 / p8;
+    assert!(
+        (0.25..4.0).contains(&ratio),
+        "p estimate should be stable across mid-range b_ref: p6={p6:.4} p8={p8:.4}"
+    );
+}
+
+#[test]
+fn sweep_produces_monotone_frontier() {
+    if !have_artifacts() {
+        return;
+    }
+    let session = Session::open(artifacts_root(), "mini_resnet", 250).unwrap();
+    let cal = calibrate_model(&session, session.baseline().accuracy * 0.5, &fast_params(), |_| {})
+        .unwrap();
+    let stats = cal.layer_stats();
+    let mut cfg = SweepConfig::default_for(stats.len());
+    cfg.b1_values = vec![3.0, 5.0, 7.0, 9.0];
+    cfg.roundings = 2;
+    let r = run_sweep(&session, Allocator::Adaptive, &stats, &cfg).unwrap();
+    assert!(!r.frontier.is_empty());
+    // frontier must be strictly increasing in both size and accuracy
+    for w in r.frontier.windows(2) {
+        assert!(w[1].size_bytes > w[0].size_bytes);
+        assert!(w[1].accuracy > w[0].accuracy);
+    }
+    // and must be the pareto filter of its own points
+    let refiltered = pareto_frontier(&r.points);
+    assert_eq!(refiltered.len(), r.frontier.len());
+}
+
+#[test]
+fn conv_only_mask_freezes_dense() {
+    if !have_artifacts() {
+        return;
+    }
+    let session = Session::open(artifacts_root(), "mini_alexnet", 250).unwrap();
+    let manifest = &session.artifacts.manifest;
+    let cfg = SweepConfig::conv_only(manifest);
+    let wl = manifest.weighted_layers();
+    for (l, &m) in wl.iter().zip(&cfg.mask) {
+        let is_conv = matches!(l.kind, adaq::model::LayerKind::Conv { .. });
+        assert_eq!(m, is_conv, "layer {}", l.name);
+    }
+    assert!(cfg.mask.iter().any(|&m| m));
+    assert!(cfg.mask.iter().any(|&m| !m));
+}

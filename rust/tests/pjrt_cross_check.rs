@@ -1,0 +1,133 @@
+//! Three-way cross-validation of the compute stack, per model:
+//!
+//! 1. PJRT execution of the lowered L2 forward ≡ pure-Rust `nn` graph
+//!    interpreter (independent reimplementation);
+//! 2. Pallas `qforward` at 16 bits ≈ fp32 forward (quantization noise
+//!    below the accuracy floor);
+//! 3. Pallas `qforward` at b bits ≡ host-side Rust `fake_quant` of the
+//!    same layers fed through the plain forward — i.e. the L1 kernel and
+//!    the Rust quantizer implement the *same* quantizer.
+//!
+//! Skipped when artifacts are absent.
+
+use adaq::coordinator::Session;
+use adaq::nn::GraphExecutor;
+use adaq::quant::fake_quant;
+use adaq::tensor::Tensor;
+
+fn artifacts_root() -> std::path::PathBuf {
+    std::path::PathBuf::from(std::env::var("ADAQ_ARTIFACTS").unwrap_or_else(|_| "artifacts".into()))
+}
+
+fn have_artifacts() -> bool {
+    let ok = artifacts_root().join("dataset/test.tnsr").is_file();
+    if !ok {
+        eprintln!("skipping: no artifacts (run `make artifacts`)");
+    }
+    ok
+}
+
+const MODELS: [&str; 4] = ["mini_alexnet", "mini_vgg", "mini_resnet", "mini_inception"];
+
+#[test]
+fn pjrt_matches_pure_rust_nn() {
+    if !have_artifacts() {
+        return;
+    }
+    for model in MODELS {
+        let session = Session::open(artifacts_root(), model, 250).unwrap();
+        let nc = session.artifacts.manifest.num_classes;
+        let exec = GraphExecutor::new(&session.artifacts.manifest);
+        let params = session.artifacts.weights.tensors();
+        let xb = session.test.batch(0, 250).unwrap();
+        let rust_logits = exec.forward(&xb, &params).unwrap();
+        let pjrt = &session.baseline().logits[0];
+        assert_eq!(rust_logits.len(), pjrt.len());
+        let mut maxdiff = 0f32;
+        for (a, b) in rust_logits.data().iter().zip(pjrt) {
+            maxdiff = maxdiff.max((a - b).abs());
+        }
+        assert!(
+            maxdiff < 1e-3,
+            "{model}: PJRT vs rust-nn max diff {maxdiff} over {} logits",
+            250 * nc
+        );
+    }
+}
+
+#[test]
+fn qforward_16bit_is_lossless() {
+    if !have_artifacts() {
+        return;
+    }
+    for model in MODELS {
+        let session = Session::open(artifacts_root(), model, 250).unwrap();
+        let nwl = session.artifacts.manifest.num_weighted_layers;
+        let out = session.eval_qbits(&vec![16.0; nwl]).unwrap();
+        let base = session.baseline().accuracy;
+        assert!(
+            (out.accuracy - base).abs() <= 0.004,
+            "{model}: q16 acc {} vs base {base}",
+            out.accuracy
+        );
+    }
+}
+
+#[test]
+fn pallas_kernel_matches_rust_quantizer() {
+    if !have_artifacts() {
+        return;
+    }
+    // quantize ONLY layer qi via (a) the Pallas qforward path and (b) the
+    // Rust host-side quantizer + plain forward; logits must agree closely
+    for model in ["mini_alexnet", "mini_resnet"] {
+        let session = Session::open(artifacts_root(), model, 250).unwrap();
+        let nwl = session.artifacts.manifest.num_weighted_layers;
+        for qi in [0usize, nwl - 1] {
+            for b in [4.0f32, 8.0] {
+                let mut bits = vec![0.0f32; nwl]; // 0 = leave fp32
+                bits[qi] = b;
+                let via_pallas = session.eval_qbits(&bits).unwrap();
+                let (pidx, w) = session.layer_weight(qi).unwrap();
+                let wq: Tensor = fake_quant(w, b);
+                let via_host = session.eval_with_overrides(&[(pidx, &wq)]).unwrap();
+                let mut maxdiff = 0f32;
+                for (lb, hb) in via_pallas.logits.iter().zip(&via_host.logits) {
+                    for (a, c) in lb.iter().zip(hb) {
+                        maxdiff = maxdiff.max((a - c).abs());
+                    }
+                }
+                assert!(
+                    maxdiff < 1e-3,
+                    "{model} layer {qi} bits {b}: pallas vs host quantizer diff {maxdiff}"
+                );
+                assert_eq!(via_pallas.accuracy, via_host.accuracy, "{model} layer {qi}");
+            }
+        }
+    }
+}
+
+#[test]
+fn bits_zero_is_identity_through_pallas() {
+    if !have_artifacts() {
+        return;
+    }
+    let session = Session::open(artifacts_root(), "mini_vgg", 250).unwrap();
+    let nwl = session.artifacts.manifest.num_weighted_layers;
+    let out = session.eval_qbits(&vec![0.0; nwl]).unwrap();
+    assert_eq!(out.accuracy, session.baseline().accuracy);
+    assert!(out.mean_rz_sq < 1e-9, "‖r_Z‖² {}", out.mean_rz_sq);
+}
+
+#[test]
+fn serve_path_single_image() {
+    if !have_artifacts() {
+        return;
+    }
+    let session = Session::open(artifacts_root(), "mini_alexnet", 1).unwrap();
+    let nwl = session.artifacts.manifest.num_weighted_layers;
+    let x = session.test.batch(0, 1).unwrap();
+    let logits = session.qforward_once(&x, &vec![8.0; nwl]).unwrap();
+    assert_eq!(logits.len(), session.artifacts.manifest.num_classes);
+    assert!(logits.iter().all(|v| v.is_finite()));
+}

@@ -1,0 +1,281 @@
+//! Property-based tests over randomized inputs (in-repo mini-proptest:
+//! the offline crate set has no proptest, so we drive cases from PCG32
+//! and report the failing seed on assertion failure).
+//!
+//! Coordinator/state invariants covered:
+//! * quantizer: idempotence, range containment, error bound, identity
+//!   conventions, monotone noise in bits;
+//! * noise model: 4× law and prediction accuracy on random tensors;
+//! * allocators: Eq. 22/23 stationarity, Δacc-shift invariance, mask
+//!   freezing, SQNR = adaptive|p=t=1;
+//! * Pareto frontier: non-domination and coverage;
+//! * TNSR + JSON containers: roundtrip on random payloads;
+//! * batching: partition covers the prefix with no overlap.
+
+use adaq::io::json::Json;
+use adaq::io::tnsr::{read_tnsr, write_tnsr, TnsrValue};
+use adaq::quant::{
+    enumerate_roundings, fake_quant, fake_quant_into, pareto_frontier, quant_noise, Allocator,
+    LayerStats, NoiseModel, QuantRange, SweepPoint,
+};
+use adaq::rng::{fill_normal, Pcg32};
+use adaq::tensor::{IntTensor, Tensor};
+
+const CASES: u64 = 40;
+
+fn rand_tensor(rng: &mut Pcg32, max_len: usize) -> Tensor {
+    let n = 2 + rng.below(max_len as u32 - 2) as usize;
+    let mut data = vec![0f32; n];
+    fill_normal(rng, &mut data);
+    let scale = rng.uniform(0.01, 10.0);
+    for v in data.iter_mut() {
+        *v *= scale;
+    }
+    Tensor::from_vec(&[n], data).unwrap()
+}
+
+#[test]
+fn prop_quantizer_invariants() {
+    for seed in 0..CASES {
+        let mut rng = Pcg32::new(seed);
+        let w = rand_tensor(&mut rng, 5000);
+        let bits = 1.0 + rng.below(12) as f32;
+        let range = QuantRange::of(&w);
+        let q = fake_quant(&w, bits);
+        // 1. output stays in [lo, hi]
+        for &v in q.data() {
+            assert!(
+                v >= range.lo - 1e-5 && v <= range.hi + 1e-5,
+                "seed {seed}: {v} outside [{}, {}]",
+                range.lo,
+                range.hi
+            );
+        }
+        // 2. ≤ 2^bits distinct values
+        let mut vals: Vec<u32> = q.data().iter().map(|v| v.to_bits()).collect();
+        vals.sort_unstable();
+        vals.dedup();
+        assert!(
+            vals.len() as f64 <= (bits as f64).exp2() + 0.5,
+            "seed {seed}: {} levels at {bits} bits",
+            vals.len()
+        );
+        // 3. idempotence under the same range
+        let mut q2 = vec![0f32; q.len()];
+        fake_quant_into(q.data(), range, bits, &mut q2);
+        assert_eq!(q.data(), &q2[..], "seed {seed}: not idempotent");
+        // 4. error bound step/2
+        let step = range.span() / (bits as f64).exp2() as f32;
+        for (a, b) in w.data().iter().zip(q.data()) {
+            assert!((a - b).abs() <= 0.5 * step + 1e-5, "seed {seed}");
+        }
+        // 5. measured noise decreases with bits
+        assert!(quant_noise(&w, bits + 1.0) <= quant_noise(&w, bits) + 1e-12);
+    }
+}
+
+#[test]
+fn prop_noise_model_four_x_law() {
+    for seed in 100..100 + CASES {
+        let mut rng = Pcg32::new(seed);
+        let mut data = vec![0f32; 20_000];
+        fill_normal(&mut rng, &mut data);
+        let w = Tensor::from_vec(&[data.len()], data).unwrap();
+        let e = |b: f32| quant_noise(&w, b);
+        let ratio = e(6.0) / e(7.0);
+        assert!(
+            (3.3..4.7).contains(&ratio),
+            "seed {seed}: 4x law violated, ratio {ratio}"
+        );
+        let nm = NoiseModel::of(&w);
+        let pred = nm.expected(7.0);
+        let meas = e(7.0);
+        assert!(
+            (0.7..1.3).contains(&(meas / pred)),
+            "seed {seed}: model off, meas/pred {}",
+            meas / pred
+        );
+    }
+}
+
+fn rand_stats(rng: &mut Pcg32, n: usize) -> Vec<LayerStats> {
+    (0..n)
+        .map(|i| LayerStats {
+            name: format!("l{i}"),
+            s: rng.uniform(50.0, 200_000.0) as f64,
+            p: rng.uniform(1.0, 10_000.0) as f64,
+            t: rng.uniform(0.5, 100.0) as f64,
+        })
+        .collect()
+}
+
+#[test]
+fn prop_allocator_stationarity() {
+    for seed in 200..200 + CASES {
+        let mut rng = Pcg32::new(seed);
+        let n = 2 + rng.below(12) as usize;
+        let stats = rand_stats(&mut rng, n);
+        let mask = vec![true; n];
+        let b1 = 6.0 + rng.below(6) as f64;
+        let a = Allocator::Adaptive.allocate(&stats, b1, &mask, 16.0);
+        // Eq. 22 stationarity on unclamped coordinates
+        let cs: Vec<f64> = a
+            .bits
+            .iter()
+            .zip(&stats)
+            .filter(|(&b, _)| b > 1.0 + 1e-9 && b < 16.0 - 1e-9)
+            .map(|(&b, l)| (l.p * (-adaq::ALPHA * b).exp() / (l.t * l.s)).ln())
+            .collect();
+        for w in cs.windows(2) {
+            assert!(
+                (w[0] - w[1]).abs() < 1e-6,
+                "seed {seed}: Eq.22 constants differ: {cs:?}"
+            );
+        }
+        // Δacc-shift invariance: raising b1 shifts every unclamped layer
+        let b = Allocator::Adaptive.allocate(&stats, b1 + 1.0, &mask, 16.0);
+        for ((&x, &y), _l) in a.bits.iter().zip(&b.bits).zip(&stats) {
+            if x > 1.0 + 1e-9 && y < 16.0 - 1e-9 {
+                assert!((y - x - 1.0).abs() < 1e-9, "seed {seed}: shift broke");
+            }
+        }
+        // SQNR == adaptive with p=t=1
+        let flat: Vec<LayerStats> = stats
+            .iter()
+            .map(|l| LayerStats { name: l.name.clone(), s: l.s, p: 1.0, t: 1.0 })
+            .collect();
+        let s1 = Allocator::Sqnr.allocate(&stats, b1, &mask, 16.0);
+        let s2 = Allocator::Adaptive.allocate(&flat, b1, &mask, 16.0);
+        for (x, y) in s1.bits.iter().zip(&s2.bits) {
+            assert!((x - y).abs() < 1e-12, "seed {seed}");
+        }
+    }
+}
+
+#[test]
+fn prop_rounding_and_pareto() {
+    for seed in 300..300 + CASES {
+        let mut rng = Pcg32::new(seed);
+        let n = 2 + rng.below(10) as usize;
+        let stats = rand_stats(&mut rng, n);
+        let mut mask = vec![true; n];
+        if n > 2 {
+            mask[rng.below(n as u32) as usize] = false;
+        }
+        if !mask.iter().any(|&m| m) {
+            mask[0] = true;
+        }
+        let frac = Allocator::Adaptive.allocate(&stats, 7.5, &mask, 16.0);
+        for alloc in enumerate_roundings(&frac, 6) {
+            for ((&b, &bf), &m) in alloc.bits.iter().zip(&frac.bits).zip(&mask) {
+                if m {
+                    assert!(b >= 1.0 && b <= 16.0 && b.fract() == 0.0, "seed {seed}");
+                    assert!((b - bf).abs() <= 1.0 + 1e-9, "seed {seed}: rounding moved >1 bit");
+                } else {
+                    assert_eq!(b, bf, "seed {seed}: frozen layer changed");
+                }
+            }
+        }
+        // pareto: no frontier point dominated by any input point
+        let pts: Vec<SweepPoint> = (0..30)
+            .map(|i| SweepPoint {
+                b1: i as f64,
+                bits: vec![],
+                size_bytes: rng.uniform(10.0, 1000.0) as f64,
+                accuracy: rng.uniform(0.1, 1.0) as f64,
+            })
+            .collect();
+        let front = pareto_frontier(&pts);
+        for f in &front {
+            for p in &pts {
+                let dominates = p.size_bytes < f.size_bytes && p.accuracy >= f.accuracy
+                    || p.size_bytes <= f.size_bytes && p.accuracy > f.accuracy;
+                assert!(!dominates, "seed {seed}: frontier point dominated");
+            }
+        }
+        // coverage: the best-accuracy point is always on the frontier
+        let best = pts
+            .iter()
+            .max_by(|a, b| a.accuracy.partial_cmp(&b.accuracy).unwrap())
+            .unwrap();
+        assert!(
+            front.iter().any(|f| (f.accuracy - best.accuracy).abs() < 1e-12),
+            "seed {seed}"
+        );
+    }
+}
+
+#[test]
+fn prop_tnsr_roundtrip() {
+    for seed in 400..400 + CASES {
+        let mut rng = Pcg32::new(seed);
+        let k = 1 + rng.below(6) as usize;
+        let mut tensors = Vec::new();
+        for i in 0..k {
+            if rng.below(4) == 0 {
+                let n = 1 + rng.below(100) as usize;
+                let data: Vec<i32> = (0..n).map(|_| rng.next_u32() as i32).collect();
+                tensors.push((
+                    format!("int{i}"),
+                    TnsrValue::I32(IntTensor::from_vec(&[n], data).unwrap()),
+                ));
+            } else {
+                let t = rand_tensor(&mut rng, 300);
+                tensors.push((format!("f{i}"), TnsrValue::F32(t)));
+            }
+        }
+        let mut path = std::env::temp_dir();
+        path.push(format!("adaq_prop_tnsr_{}_{}", std::process::id(), seed));
+        write_tnsr(&path, &tensors).unwrap();
+        let back = read_tnsr(&path).unwrap();
+        assert_eq!(back, tensors, "seed {seed}");
+        std::fs::remove_file(path).ok();
+    }
+}
+
+#[test]
+fn prop_json_numeric_roundtrip() {
+    for seed in 500..500 + CASES {
+        let mut rng = Pcg32::new(seed);
+        let vals: Vec<f64> = (0..20)
+            .map(|_| (rng.uniform(-1e6, 1e6) as f64) * 10f64.powi(rng.below(9) as i32 - 4))
+            .collect();
+        let j = Json::obj(vec![
+            ("xs", Json::arr_f64(&vals)),
+            ("s", Json::Str(format!("seed {seed} with \"quotes\" and \\slashes\n"))),
+            ("flag", Json::Bool(seed % 2 == 0)),
+        ]);
+        let back = Json::parse(&j.to_pretty()).unwrap();
+        let xs = back.get("xs").unwrap().as_arr().unwrap();
+        for (a, b) in xs.iter().zip(&vals) {
+            let av = a.as_f64().unwrap();
+            assert!(
+                (av - b).abs() <= 1e-9 * b.abs().max(1.0),
+                "seed {seed}: {av} vs {b}"
+            );
+        }
+        assert_eq!(back.get("flag").unwrap().as_bool(), Some(seed % 2 == 0));
+    }
+}
+
+#[test]
+fn prop_batching_partitions() {
+    use adaq::dataset::Dataset;
+    for seed in 600..600 + 20 {
+        let mut rng = Pcg32::new(seed);
+        let n = 10 + rng.below(200) as usize;
+        let ds = Dataset::generate(n, seed);
+        let bs = 1 + rng.below(40) as usize;
+        let batches = ds.batches(bs);
+        let mut covered = vec![false; n];
+        for (start, len) in &batches {
+            assert_eq!(*len, bs);
+            for i in *start..*start + *len {
+                assert!(!covered[i], "seed {seed}: overlap at {i}");
+                covered[i] = true;
+            }
+        }
+        let expect = (n / bs) * bs;
+        assert_eq!(covered.iter().filter(|&&c| c).count(), expect, "seed {seed}");
+    }
+}
