@@ -1,0 +1,24 @@
+# Repo-level targets. `verify` is the tier-1 gate every PR must keep green.
+
+CARGO ?= cargo
+
+.PHONY: verify build test bench fmt-check clean
+
+verify: build test
+
+build:
+	$(CARGO) build --release
+
+test:
+	$(CARGO) test -q
+
+# Hot-path benches; writes reports/perf_hotpath.md and BENCH_hotpath.json
+# (see BENCH.md for how to read both).
+bench:
+	$(CARGO) bench --bench perf_hotpath -- --json
+
+fmt-check:
+	$(CARGO) fmt --all --check
+
+clean:
+	$(CARGO) clean

@@ -1,42 +1,209 @@
-//! Quickstart: the complete adaptive-quantization pipeline on one model,
-//! in ~60 lines of library calls.
+//! Quickstart: the complete adaptive-quantization pipeline, end to end,
+//! with **zero setup** — no artifacts, no PJRT, no Python.
 //!
 //!   cargo run --release --example quickstart
 //!
-//! Steps (= the paper's method, end to end):
-//!   1. open a PJRT session on the AOT artifacts (`make artifacts` first),
-//!   2. calibrate per-layer robustness t_i and noise prefactor p_i,
+//! Everything runs on the pure-Rust [`CpuBackend`]: the example
+//! procedurally generates the shapes dataset, trains a small MLP on it
+//! with hand-rolled SGD (forward/backward through the same blocked GEMM
+//! the coordinator uses), then runs the paper's method:
+//!
+//!   1. build an in-memory model + session (no files),
+//!   2. calibrate per-layer robustness t_i and noise prefactor p_i
+//!      (Algorithms 1 & 2),
 //!   3. solve the closed-form optimal bit-widths (Eq. 22),
-//!   4. evaluate the quantized model through the Pallas fake-quant
-//!      executable and report accuracy vs model size.
+//!   4. evaluate the quantized model and report accuracy vs model size.
+//!
+//! Pass a model name to run on trained artifacts instead (requires
+//! `make artifacts`):  cargo run --release --example quickstart mini_alexnet
 
 use adaq::coordinator::Session;
+use adaq::dataset::{Dataset, IMG, NUM_CLASSES, TEST_SEED, TRAIN_SEED};
+use adaq::io::Json;
 use adaq::measure::{calibrate_model, SearchParams};
+use adaq::model::{Manifest, ModelArtifacts, WeightStore};
+use adaq::nn::softmax;
 use adaq::quant::Allocator;
+use adaq::rng::{fill_normal, Pcg32};
+use adaq::tensor::{matmul, Tensor};
+
+const HIDDEN: usize = 32;
+const PIXELS: usize = IMG * IMG;
+
+fn mlp_manifest() -> Manifest {
+    let json = format!(
+        r#"{{
+        "model": "quickstart_mlp", "input_shape": [{IMG},{IMG},1],
+        "num_classes": {NUM_CLASSES}, "output": "fc2",
+        "num_weighted_layers": 2,
+        "total_quantizable_params": {},
+        "layers": [
+          {{"name":"flat","kind":"flatten","inputs":["input"]}},
+          {{"name":"fc1","kind":"dense","inputs":["flat"],"cin":{PIXELS},
+           "cout":{HIDDEN},"param_idx_w":1,"param_idx_b":2,"qindex":0,
+           "s_i":{}}},
+          {{"name":"relu1","kind":"relu","inputs":["fc1"]}},
+          {{"name":"fc2","kind":"dense","inputs":["relu1"],"cin":{HIDDEN},
+           "cout":{NUM_CLASSES},"param_idx_w":3,"param_idx_b":4,"qindex":1,
+           "s_i":{}}}
+        ]}}"#,
+        PIXELS * HIDDEN + HIDDEN * NUM_CLASSES,
+        PIXELS * HIDDEN,
+        HIDDEN * NUM_CLASSES,
+    );
+    Manifest::from_json(&Json::parse(&json).unwrap()).unwrap()
+}
+
+/// Train the 2-layer MLP with plain SGD + softmax cross-entropy; the
+/// forward *and* backward matmuls run through the blocked GEMM.
+fn train_mlp(train: &Dataset, epochs: usize, lr: f32) -> adaq::Result<Vec<Tensor>> {
+    let mut rng = Pcg32::new(0x5EED);
+    let scaled = |shape: &[usize], scale: f32, rng: &mut Pcg32| {
+        let n: usize = shape.iter().product();
+        let mut data = vec![0f32; n];
+        fill_normal(rng, &mut data);
+        for v in data.iter_mut() {
+            *v *= scale;
+        }
+        Tensor::from_vec(shape, data).unwrap()
+    };
+    let mut w1 = scaled(&[PIXELS, HIDDEN], 1.0 / (PIXELS as f32).sqrt(), &mut rng);
+    let mut b1 = Tensor::zeros(&[HIDDEN]);
+    let mut w2 = scaled(&[HIDDEN, NUM_CLASSES], 1.0 / (HIDDEN as f32).sqrt(), &mut rng);
+    let mut b2 = Tensor::zeros(&[NUM_CLASSES]);
+
+    let batch = 100;
+    for epoch in 0..epochs {
+        let mut loss_sum = 0f64;
+        let mut correct = 0usize;
+        for (start, len) in train.batches(batch) {
+            let x = train.batch(start, len)?.reshape(&[len, PIXELS])?;
+            let y = train.batch_labels(start, len);
+
+            // forward
+            let mut h = matmul(&x, &w1)?;
+            for row in h.data_mut().chunks_mut(HIDDEN) {
+                for (v, &b) in row.iter_mut().zip(b1.data()) {
+                    *v = (*v + b).max(0.0);
+                }
+            }
+            let mut z = matmul(&h, &w2)?;
+            for row in z.data_mut().chunks_mut(NUM_CLASSES) {
+                for (v, &b) in row.iter_mut().zip(b2.data()) {
+                    *v += b;
+                }
+            }
+            let p = softmax(&z)?;
+
+            // loss + dz = (p − onehot)/len
+            let mut dz = p.clone();
+            for (i, &label) in y.iter().enumerate() {
+                let row = &mut dz.data_mut()[i * NUM_CLASSES..(i + 1) * NUM_CLASSES];
+                loss_sum -= (row[label as usize].max(1e-12) as f64).ln();
+                row[label as usize] -= 1.0;
+                let (pred, _) = Tensor::top2(&p.data()[i * NUM_CLASSES..(i + 1) * NUM_CLASSES]);
+                if pred as i32 == label {
+                    correct += 1;
+                }
+            }
+            let inv = 1.0 / len as f32;
+            for v in dz.data_mut() {
+                *v *= inv;
+            }
+
+            // backward
+            let dw2 = matmul(&h.transpose2()?, &dz)?;
+            let mut db2 = vec![0f32; NUM_CLASSES];
+            for row in dz.data().chunks(NUM_CLASSES) {
+                for (acc, &v) in db2.iter_mut().zip(row) {
+                    *acc += v;
+                }
+            }
+            // ReLU mask: h == 0 exactly where the pre-activation was ≤ 0
+            let mut dh = matmul(&dz, &w2.transpose2()?)?;
+            for (g, &hv) in dh.data_mut().iter_mut().zip(h.data()) {
+                if hv == 0.0 {
+                    *g = 0.0;
+                }
+            }
+            let dw1 = matmul(&x.transpose2()?, &dh)?;
+            let mut db1 = vec![0f32; HIDDEN];
+            for row in dh.data().chunks(HIDDEN) {
+                for (acc, &v) in db1.iter_mut().zip(row) {
+                    *acc += v;
+                }
+            }
+
+            // SGD step
+            for (w, g) in w2.data_mut().iter_mut().zip(dw2.data()) {
+                *w -= lr * g;
+            }
+            for (w, &g) in b2.data_mut().iter_mut().zip(&db2) {
+                *w -= lr * g;
+            }
+            for (w, g) in w1.data_mut().iter_mut().zip(dw1.data()) {
+                *w -= lr * g;
+            }
+            for (w, &g) in b1.data_mut().iter_mut().zip(&db1) {
+                *w -= lr * g;
+            }
+        }
+        let n = (train.len() / batch) * batch;
+        println!(
+            "  epoch {epoch:>2}: loss {:.4}, train acc {:.4}",
+            loss_sum / n as f64,
+            correct as f64 / n as f64
+        );
+    }
+    Ok(vec![w1, b1, w2, b2])
+}
 
 fn main() -> adaq::Result<()> {
     let root = std::path::PathBuf::from("artifacts");
-    let model = std::env::args().nth(1).unwrap_or_else(|| "mini_alexnet".into());
+    let session = match std::env::args().nth(1) {
+        Some(model) => {
+            // artifacts mode (needs `make artifacts`)
+            Session::open(&root, &model, 250)?
+        }
+        None => {
+            // zero-setup mode: generate data, train in-process, build an
+            // in-memory session on the CPU backend
+            println!("training quickstart MLP on the procedural shapes dataset…");
+            let train = Dataset::generate(3000, TRAIN_SEED);
+            let params = train_mlp(&train, 12, 0.3)?;
+            let manifest = mlp_manifest();
+            let named: Vec<(String, Tensor)> = ["fc1.w", "fc1.b", "fc2.w", "fc2.b"]
+                .iter()
+                .map(|s| s.to_string())
+                .zip(params)
+                .collect();
+            let artifacts = ModelArtifacts {
+                dir: std::path::PathBuf::from("<in-memory>"),
+                manifest,
+                weights: WeightStore::from_params(named),
+            };
+            let test = Dataset::generate(1000, TEST_SEED);
+            Session::from_parts(artifacts, test, 250)?
+        }
+    };
 
-    // 1. session: loads HLO artifacts, uploads dataset + weights, caches
-    //    the fp32 baseline logits
-    let session = Session::open(&root, &model, 250)?;
+    let model = session.artifacts.manifest.model.clone();
     let base = session.baseline().accuracy;
-    println!("{model}: fp32 accuracy {base:.4}");
+    println!("{model} [{}]: fp32 accuracy {base:.4}", session.backend_name());
 
-    // 2. calibration (Alg. 1 + 2); Δacc = half the base accuracy, as in
-    //    the paper's AlexNet example (57% → 28%)
+    // calibration (Alg. 1 + 2); Δacc = half the base accuracy, as in the
+    // paper's AlexNet example (57% → 28%)
     let cal = calibrate_model(&session, base * 0.5, &SearchParams::default(), |l| {
         println!("{l}")
     })?;
 
-    // 3. closed-form allocation anchored at b1 = 8 bits
+    // closed-form allocation anchored at b1 = 8 bits
     let stats = cal.layer_stats();
     let mask = vec![true; stats.len()];
     let alloc = Allocator::Adaptive.allocate(&stats, 8.0, &mask, 16.0);
     println!("optimal fractional bits: {:?}", alloc.bits);
 
-    // 4. evaluate through the Pallas qforward executable
+    // evaluate the quantized model through the session backend
     let bits: Vec<f32> = alloc.bits.iter().map(|&b| b.round() as f32).collect();
     let out = session.eval_qbits(&bits)?;
     let size = alloc.size_bytes(&stats);

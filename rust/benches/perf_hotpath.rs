@@ -1,19 +1,27 @@
-//! PERF — hot-path micro/macro benches (EXPERIMENTS.md §Perf):
+//! PERF — hot-path micro/macro benches (EXPERIMENTS.md §Perf, BENCH.md):
 //!
-//! * PJRT forward throughput (batch 250 and 1) vs the pure-Rust `nn`
-//!   substrate — the runtime must beat the CPU baseline comfortably or
-//!   L3 dispatch is the bottleneck;
-//! * Pallas `qforward` overhead over the plain forward (the price of
-//!   on-the-fly fake-quant on the request path);
-//! * host-side quantizer throughput (GB/s) and allocator latency.
+//! * blocked multithreaded GEMM vs the seed's naive ikj loop at
+//!   512×512×512 (the headline: the calibration hot path is GEMM-bound);
+//! * sparse-LHS skip loop vs the dense blocked kernel on post-ReLU-like
+//!   activations (is the `av == 0` branch ever worth it?);
+//! * CPU backend full-dataset evaluation scaling across worker threads
+//!   (a procedurally generated CNN — no artifacts needed);
+//! * host-side quantizer throughput (GB/s) and allocator latency;
+//! * per-model session forward paths when artifacts are present.
+//!
+//! `--json` additionally writes `BENCH_hotpath.json` so the perf
+//! trajectory can be tracked across PRs (schema in BENCH.md).
 
 use adaq::bench_support as bs;
 use adaq::dataset::Dataset;
+use adaq::io::Json;
+use adaq::model::Manifest;
 use adaq::nn::GraphExecutor;
 use adaq::quant::{fake_quant_into, Allocator, LayerStats, QuantRange};
 use adaq::report::{markdown_table, Align};
 use adaq::rng::{fill_normal, Pcg32};
-use adaq::tensor::Tensor;
+use adaq::runtime::{Backend, CpuBackend};
+use adaq::tensor::{matmul_reference, matmul_sparse_lhs, matmul_threaded, Tensor};
 use adaq::util::Timer;
 
 fn time_n<F: FnMut()>(n: usize, mut f: F) -> f64 {
@@ -26,14 +34,190 @@ fn time_n<F: FnMut()>(n: usize, mut f: F) -> f64 {
     t.seconds() / n as f64
 }
 
-fn main() {
-    if !bs::artifacts_available() {
-        return;
-    }
-    let root = bs::artifacts_root();
-    let mut rows = Vec::new();
+fn randn_tensor(shape: &[usize], rng: &mut Pcg32) -> Tensor {
+    let n: usize = shape.iter().product();
+    let mut data = vec![0f32; n];
+    fill_normal(rng, &mut data);
+    Tensor::from_vec(shape, data).unwrap()
+}
 
-    // ---- host-side quantizer throughput (no artifacts needed) ----
+/// A small procedural CNN over the shapes dataset — lets the eval-scaling
+/// bench run on a fresh checkout with no artifacts.
+fn demo_manifest() -> Manifest {
+    Manifest::from_json(
+        &Json::parse(
+            r#"{
+        "model": "bench_cnn", "input_shape": [16,16,1], "num_classes": 10,
+        "output": "fc", "num_weighted_layers": 3,
+        "total_quantizable_params": 1384,
+        "layers": [
+          {"name":"conv1","kind":"conv","inputs":["input"],"cin":1,"cout":8,
+           "k":3,"stride":1,"pad":1,"param_idx_w":1,"param_idx_b":2,
+           "qindex":0,"s_i":72},
+          {"name":"relu1","kind":"relu","inputs":["conv1"]},
+          {"name":"pool1","kind":"maxpool","inputs":["relu1"],"k":2,
+           "stride":2,"pad":0},
+          {"name":"conv2","kind":"conv","inputs":["pool1"],"cin":8,
+           "cout":16,"k":3,"stride":1,"pad":1,"param_idx_w":3,
+           "param_idx_b":4,"qindex":1,"s_i":1152},
+          {"name":"relu2","kind":"relu","inputs":["conv2"]},
+          {"name":"gap","kind":"gap","inputs":["relu2"]},
+          {"name":"fc","kind":"dense","inputs":["gap"],"cin":16,"cout":10,
+           "param_idx_w":5,"param_idx_b":6,"qindex":2,"s_i":160}
+        ]}"#,
+        )
+        .unwrap(),
+    )
+    .unwrap()
+}
+
+fn demo_params(rng: &mut Pcg32) -> Vec<Tensor> {
+    vec![
+        randn_tensor(&[3, 3, 1, 8], rng),
+        randn_tensor(&[8], rng),
+        randn_tensor(&[3, 3, 8, 16], rng),
+        randn_tensor(&[16], rng),
+        randn_tensor(&[16, 10], rng),
+        randn_tensor(&[10], rng),
+    ]
+}
+
+fn main() {
+    let write_json = std::env::args().any(|a| a == "--json");
+    let mut rows = Vec::new();
+    let mut json_fields: Vec<(&str, Json)> = Vec::new();
+
+    // ---- GEMM: seed ikj vs blocked, 512x512x512 ----
+    let gemm_json;
+    {
+        let mut rng = Pcg32::new(7);
+        let dim = 512usize;
+        let a = randn_tensor(&[dim, dim], &mut rng);
+        let b = randn_tensor(&[dim, dim], &mut rng);
+        let seed_s = time_n(3, || {
+            let _ = matmul_reference(&a, &b).unwrap();
+        });
+        let one_s = time_n(3, || {
+            let _ = matmul_threaded(&a, &b, 1).unwrap();
+        });
+        let mt_s = time_n(5, || {
+            let _ = matmul_threaded(&a, &b, 0).unwrap();
+        });
+        let gflops = |s: f64| 2.0 * (dim * dim * dim) as f64 / s / 1e9;
+        let threads = std::thread::available_parallelism().map_or(1, |v| v.get()).min(16);
+        rows.push(vec![
+            format!("GEMM {dim}³ seed ikj loop"),
+            format!("{:.1} ms", seed_s * 1e3),
+            format!("{:.2} GFLOP/s", gflops(seed_s)),
+        ]);
+        rows.push(vec![
+            format!("GEMM {dim}³ blocked 1 thread"),
+            format!("{:.1} ms", one_s * 1e3),
+            format!("{:.2} GFLOP/s — {:.2}x vs seed", gflops(one_s), seed_s / one_s),
+        ]);
+        rows.push(vec![
+            format!("GEMM {dim}³ blocked {threads} threads"),
+            format!("{:.1} ms", mt_s * 1e3),
+            format!("{:.2} GFLOP/s — {:.2}x vs seed", gflops(mt_s), seed_s / mt_s),
+        ]);
+        gemm_json = Json::obj(vec![
+            ("m", Json::Num(dim as f64)),
+            ("n", Json::Num(dim as f64)),
+            ("k", Json::Num(dim as f64)),
+            ("seed_ikj_ms", Json::Num(seed_s * 1e3)),
+            ("blocked_1t_ms", Json::Num(one_s * 1e3)),
+            ("blocked_mt_ms", Json::Num(mt_s * 1e3)),
+            ("threads", Json::Num(threads as f64)),
+            ("speedup_1t", Json::Num(seed_s / one_s)),
+            ("speedup_mt", Json::Num(seed_s / mt_s)),
+        ]);
+    }
+    json_fields.push(("gemm_512", gemm_json));
+
+    // ---- sparse-LHS skip loop vs dense blocked kernel ----
+    {
+        let mut rng = Pcg32::new(11);
+        let (m, k, n) = (1024usize, 512usize, 256usize);
+        let mut a = randn_tensor(&[m, k], &mut rng);
+        // post-ReLU-like activations: clamp negatives to zero (~50% sparse)
+        for v in a.data_mut().iter_mut() {
+            *v = v.max(0.0);
+        }
+        let b = randn_tensor(&[k, n], &mut rng);
+        let zeros = a.data().iter().filter(|&&v| v == 0.0).count();
+        let sparsity = zeros as f64 / a.len() as f64;
+        let sparse_s = time_n(3, || {
+            let _ = matmul_sparse_lhs(&a, &b).unwrap();
+        });
+        let dense_s = time_n(3, || {
+            let _ = matmul_threaded(&a, &b, 1).unwrap();
+        });
+        rows.push(vec![
+            format!("sparse-LHS skip loop ({:.0}% zeros)", sparsity * 100.0),
+            format!("{:.1} ms", sparse_s * 1e3),
+            format!("blocked dense 1t: {:.1} ms ({:.2}x)", dense_s * 1e3, sparse_s / dense_s),
+        ]);
+        json_fields.push((
+            "sparse_lhs",
+            Json::obj(vec![
+                ("sparsity", Json::Num(sparsity)),
+                ("sparse_ms", Json::Num(sparse_s * 1e3)),
+                ("blocked_1t_ms", Json::Num(dense_s * 1e3)),
+            ]),
+        ));
+    }
+
+    // ---- CPU backend full-dataset evaluation scaling ----
+    {
+        let mut rng = Pcg32::new(13);
+        let params = demo_params(&mut rng);
+        let ds = Dataset::generate(1000, 20260731);
+        let batch = 125;
+        let batches: Vec<Tensor> = ds
+            .batches(batch)
+            .into_iter()
+            .map(|(s, l)| ds.batch(s, l).unwrap())
+            .collect();
+        let n_imgs = batches.len() * batch;
+        let avail = std::thread::available_parallelism().map_or(1, |v| v.get());
+        let mut scaling = Vec::new();
+        let mut base_s = 0.0;
+        for threads in [1usize, 2, 4, 8] {
+            if threads > avail.max(1) * 2 {
+                break;
+            }
+            let be = CpuBackend::new(demo_manifest(), params.clone(), batches.clone())
+                .unwrap()
+                .with_threads(threads);
+            // pin nested GEMMs on the 1-worker run (which executes on this
+            // thread) so the scaling baseline is truly single-threaded;
+            // multi-worker runs pin their own workers internally
+            if threads == 1 {
+                adaq::tensor::set_gemm_threads(1);
+            }
+            let per = time_n(3, || {
+                let _ = be.forward_all(&[]).unwrap();
+            });
+            if threads == 1 {
+                adaq::tensor::set_gemm_threads(0);
+                base_s = per;
+            }
+            rows.push(vec![
+                format!("cpu eval {n_imgs} imgs, {threads} worker(s)"),
+                format!("{:.1} ms/dataset", per * 1e3),
+                format!("{:.0} img/s — {:.2}x vs 1 worker", n_imgs as f64 / per, base_s / per),
+            ]);
+            scaling.push(Json::obj(vec![
+                ("threads", Json::Num(threads as f64)),
+                ("ms_per_dataset", Json::Num(per * 1e3)),
+                ("imgs_per_s", Json::Num(n_imgs as f64 / per)),
+                ("speedup_vs_1t", Json::Num(base_s / per)),
+            ]));
+        }
+        json_fields.push(("eval_scaling", Json::Arr(scaling)));
+    }
+
+    // ---- host-side quantizer throughput ----
     {
         let mut rng = Pcg32::new(1);
         let mut data = vec![0f32; 4 << 20];
@@ -47,6 +231,14 @@ fn main() {
             format!("{:.2} ms", per * 1e3),
             format!("{:.2} GB/s", (t.len() * 4) as f64 / per / 1e9),
         ]);
+        json_fields.push((
+            "fake_quant",
+            Json::obj(vec![
+                ("mi_f32", Json::Num(4.0)),
+                ("ms", Json::Num(per * 1e3)),
+                ("gbps", Json::Num((t.len() * 4) as f64 / per / 1e9)),
+            ]),
+        ));
     }
 
     // ---- allocator latency ----
@@ -68,56 +260,66 @@ fn main() {
             format!("{:.2} µs", per * 1e6),
             String::new(),
         ]);
+        json_fields.push((
+            "allocator_us",
+            Json::Num(per * 1e6),
+        ));
     }
 
-    // ---- per-model forward paths ----
-    for model in bs::bench_models() {
-        let session = match adaq::coordinator::Session::open(&root, &model, bs::bench_batch()) {
-            Ok(s) => s,
-            Err(e) => {
-                eprintln!("skip {model}: {e}");
-                continue;
-            }
-        };
-        let manifest = &session.artifacts.manifest;
-        let nwl = manifest.num_weighted_layers;
-        let test = Dataset::load(&root, "test").unwrap();
-        let n_imgs = (test.len() / session.batch_size()) * session.batch_size();
+    // ---- per-model session forward paths (artifacts needed) ----
+    if bs::artifacts_available() {
+        let root = bs::artifacts_root();
+        for model in bs::bench_models() {
+            let session = match adaq::coordinator::Session::open(&root, &model, bs::bench_batch()) {
+                Ok(s) => s,
+                Err(e) => {
+                    eprintln!("skip {model}: {e}");
+                    continue;
+                }
+            };
+            let backend = session.backend_name();
+            let manifest = &session.artifacts.manifest;
+            let nwl = manifest.num_weighted_layers;
+            let test = Dataset::load(&root, "test").unwrap();
+            let n_imgs = (test.len() / session.batch_size()) * session.batch_size();
 
-        // full-dataset fp32 forward (cached-buffer hot path)
-        let per_fwd = time_n(3, || {
-            let _ = session.eval_with_overrides(&[]).unwrap();
-        });
-        rows.push(vec![
-            format!("{model} forward (PJRT, b{})", session.batch_size()),
-            format!("{:.1} ms/dataset", per_fwd * 1e3),
-            format!("{:.0} img/s", n_imgs as f64 / per_fwd),
-        ]);
+            // full-dataset fp32 forward (cached-state hot path)
+            let per_fwd = time_n(3, || {
+                let _ = session.eval_with_overrides(&[]).unwrap();
+            });
+            rows.push(vec![
+                format!("{model} forward ({backend}, b{})", session.batch_size()),
+                format!("{:.1} ms/dataset", per_fwd * 1e3),
+                format!("{:.0} img/s", n_imgs as f64 / per_fwd),
+            ]);
 
-        // full-dataset Pallas qforward
-        let bits = vec![8.0f32; nwl];
-        let per_q = time_n(3, || {
-            let _ = session.eval_qbits(&bits).unwrap();
-        });
-        rows.push(vec![
-            format!("{model} qforward (Pallas fake-quant)"),
-            format!("{:.1} ms/dataset", per_q * 1e3),
-            format!("{:.2}x of fp32 fwd", per_q / per_fwd),
-        ]);
+            // full-dataset quantized forward
+            let bits = vec![8.0f32; nwl];
+            let per_q = time_n(3, || {
+                let _ = session.eval_qbits(&bits).unwrap();
+            });
+            rows.push(vec![
+                format!("{model} qforward ({backend} fake-quant)"),
+                format!("{:.1} ms/dataset", per_q * 1e3),
+                format!("{:.2}x of fp32 fwd", per_q / per_fwd),
+            ]);
 
-        // pure-Rust nn baseline on one batch, scaled to dataset
-        let exec = GraphExecutor::new(manifest);
-        let params = session.artifacts.weights.tensors();
-        let xb = test.batch(0, session.batch_size()).unwrap();
-        let per_rust_batch = time_n(2, || {
-            let _ = exec.forward(&xb, &params).unwrap();
-        });
-        let per_rust = per_rust_batch * (n_imgs / session.batch_size()) as f64;
-        rows.push(vec![
-            format!("{model} forward (pure-rust nn)"),
-            format!("{:.1} ms/dataset", per_rust * 1e3),
-            format!("PJRT is {:.1}x faster", per_rust / per_fwd),
-        ]);
+            // single-thread nn baseline on one batch, scaled to dataset
+            let exec = GraphExecutor::new(manifest);
+            let params = session.artifacts.weights.tensors();
+            let xb = test.batch(0, session.batch_size()).unwrap();
+            adaq::tensor::set_gemm_threads(1);
+            let per_rust_batch = time_n(2, || {
+                let _ = exec.forward(&xb, &params).unwrap();
+            });
+            adaq::tensor::set_gemm_threads(0);
+            let per_rust = per_rust_batch * (n_imgs / session.batch_size()) as f64;
+            rows.push(vec![
+                format!("{model} forward (nn, 1 thread)"),
+                format!("{:.1} ms/dataset", per_rust * 1e3),
+                format!("session path is {:.1}x faster", per_rust / per_fwd),
+            ]);
+        }
     }
 
     let table = markdown_table(
@@ -130,4 +332,11 @@ fn main() {
         "perf_hotpath",
         &format!("# PERF — hot-path benches\n\n{table}\n"),
     );
+    if write_json {
+        let j = Json::obj(json_fields);
+        match j.write_file("BENCH_hotpath.json") {
+            Ok(()) => eprintln!("[bench] wrote BENCH_hotpath.json"),
+            Err(e) => eprintln!("[bench] cannot write BENCH_hotpath.json: {e}"),
+        }
+    }
 }

@@ -1,7 +1,8 @@
-//! The L3 coordinator: owns the PJRT session for one model, caches the
-//! baseline state (device buffers for every dataset batch + trained
-//! weight, baseline logits Z), and exposes the three evaluation primitives
-//! every experiment is built from:
+//! The L3 coordinator: owns the evaluation session for one model — an
+//! execution [`Backend`](crate::runtime::Backend) (CPU by default, PJRT
+//! behind the `pjrt` feature) plus the cached baseline state (pre-batched
+//! dataset, trained weights, baseline logits Z) — and exposes the three
+//! evaluation primitives every experiment is built from:
 //!
 //! * [`Session::eval_with_overrides`] — forward pass with some weight
 //!   tensors replaced host-side (noise injection, host-side quantization);

@@ -34,15 +34,17 @@ pub fn serve_loop(session: &Session, data: &Dataset, bits: &[f32], n: usize) -> 
     assert_eq!(session.batch_size(), 1, "serve loop wants batch-1 artifacts");
     let mut latencies = Vec::with_capacity(n);
     let mut correct = 0usize;
-    // the allocation is constant for the whole run: upload once
-    let bits_buf = session.prepare_bits(bits)?;
+    // warm the backend's quantized-parameter state outside the timed
+    // region (the seed's prepare_bits did its one-time upload here too),
+    // so p99 reflects steady-state serving rather than the cold start
+    session.qforward_once(&data.batch(0, 1)?, bits)?;
     let total = Timer::start();
     for i in 0..n {
         let idx = i % data.len();
         let x = data.batch(idx, 1)?;
         let y = data.batch_labels(idx, 1)[0];
         let t = Timer::start();
-        let logits = session.qforward_with(&x, &bits_buf)?;
+        let logits = session.qforward_once(&x, bits)?;
         latencies.push(t.millis());
         let (pred, _) = Tensor::top2(&logits);
         if pred as i32 == y {

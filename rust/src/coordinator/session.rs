@@ -1,10 +1,12 @@
-//! Per-model PJRT session with cached device state.
+//! Per-model evaluation session with cached baseline state, generic over
+//! the execution [`Backend`] (CPU by default, PJRT behind the `pjrt`
+//! feature).
 
 use std::path::Path;
 
 use crate::dataset::Dataset;
 use crate::model::ModelArtifacts;
-use crate::runtime::{literal_of, Engine, Executable};
+use crate::runtime::{Backend, CpuBackend};
 use crate::tensor::Tensor;
 use crate::{Error, Result};
 
@@ -28,64 +30,79 @@ pub struct EvalOutput {
     pub mean_rz_sq: f64,
 }
 
-/// One model's full evaluation state: compiled executables, uploaded
-/// dataset batches, uploaded baseline weights, cached baseline logits.
+/// One model's full evaluation state: the execution backend (with its
+/// pre-registered dataset batches and baseline weights), per-batch
+/// labels, and the cached baseline logits.
 pub struct Session {
     pub artifacts: ModelArtifacts,
     pub test: Dataset,
-    engine: Engine,
     batch: usize,
     num_classes: usize,
-    forward: Executable,
-    qforward: Executable,
-    x_buffers: Vec<xla::PjRtBuffer>,
     labels: Vec<Vec<i32>>,
-    weight_buffers: Vec<xla::PjRtBuffer>,
+    backend: Box<dyn Backend>,
     baseline: Baseline,
     /// Forward executions since session start (perf accounting).
     pub exec_count: std::cell::Cell<u64>,
 }
 
 impl Session {
-    /// Build a session: load artifacts, compile both executables, upload
-    /// every test batch and the trained weights, cache baseline logits.
+    /// Open a session on the best available backend: with the `pjrt`
+    /// feature enabled and lowered HLO artifacts on disk, the PJRT
+    /// engine; otherwise the pure-Rust [`CpuBackend`] (which needs only
+    /// `manifest.json` + `weights.tnsr`).
     pub fn open(artifacts_root: impl AsRef<Path>, model: &str, batch: usize) -> Result<Session> {
-        let engine = Engine::cpu()?;
         let artifacts = ModelArtifacts::load(&artifacts_root, model)?;
-        if !artifacts.manifest.batch_sizes.contains(&batch) {
+        let test = Dataset::load(&artifacts_root, "test")?;
+        #[cfg(feature = "pjrt")]
+        {
+            if artifacts.hlo_path("forward", batch).is_file() {
+                let backend = crate::runtime::PjrtBackend::open(&artifacts, &test, batch)?;
+                return Session::with_backend(artifacts, test, batch, Box::new(backend));
+            }
+        }
+        Session::from_parts(artifacts, test, batch)
+    }
+
+    /// Open on the CPU backend unconditionally.
+    pub fn open_cpu(artifacts_root: impl AsRef<Path>, model: &str, batch: usize) -> Result<Session> {
+        let artifacts = ModelArtifacts::load(&artifacts_root, model)?;
+        let test = Dataset::load(&artifacts_root, "test")?;
+        Session::from_parts(artifacts, test, batch)
+    }
+
+    /// Build a CPU session from in-memory artifacts + test split — no
+    /// files needed. This is how `examples/quickstart.rs` and the benches
+    /// run the full pipeline on procedurally generated models.
+    pub fn from_parts(artifacts: ModelArtifacts, test: Dataset, batch: usize) -> Result<Session> {
+        let backend = CpuBackend::from_artifacts(&artifacts, &test, batch)?;
+        Session::with_backend(artifacts, test, batch, Box::new(backend))
+    }
+
+    fn with_backend(
+        artifacts: ModelArtifacts,
+        test: Dataset,
+        batch: usize,
+        backend: Box<dyn Backend>,
+    ) -> Result<Session> {
+        if test.len() < batch {
             return Err(Error::Model(format!(
-                "batch {batch} not lowered (have {:?})",
-                artifacts.manifest.batch_sizes
+                "test split has {} images, batch {batch} wants more",
+                test.len()
             )));
         }
-        let test = Dataset::load(&artifacts_root, "test")?;
-        let forward = engine.load_hlo(artifacts.hlo_path("forward", batch))?;
-        let qforward = engine.load_hlo(artifacts.hlo_path("qforward", batch))?;
-
-        let mut x_buffers = Vec::new();
-        let mut labels = Vec::new();
-        for (start, len) in test.batches(batch) {
-            let xb = test.batch(start, len)?;
-            x_buffers.push(engine.upload(&xb)?);
-            labels.push(test.batch_labels(start, len).to_vec());
-        }
-        let mut weight_buffers = Vec::new();
-        for (_, t) in &artifacts.weights.params {
-            weight_buffers.push(engine.upload(t)?);
-        }
-
+        let labels: Vec<Vec<i32>> = test
+            .batches(batch)
+            .into_iter()
+            .map(|(start, len)| test.batch_labels(start, len).to_vec())
+            .collect();
         let num_classes = artifacts.manifest.num_classes;
         let mut session = Session {
             artifacts,
             test,
-            engine,
             batch,
             num_classes,
-            forward,
-            qforward,
-            x_buffers,
             labels,
-            weight_buffers,
+            backend,
             baseline: Baseline { logits: vec![], accuracy: 0.0, margins: vec![] },
             exec_count: std::cell::Cell::new(0),
         };
@@ -98,20 +115,27 @@ impl Session {
     }
 
     pub fn num_batches(&self) -> usize {
-        self.x_buffers.len()
+        self.backend.num_batches()
+    }
+
+    /// Name of the execution backend ("cpu" / "pjrt").
+    pub fn backend_name(&self) -> &'static str {
+        self.backend.name()
     }
 
     pub fn baseline(&self) -> &Baseline {
         &self.baseline
     }
 
+    fn note_execs(&self) {
+        self.exec_count.set(self.backend.execs());
+    }
+
     fn compute_baseline(&self) -> Result<Baseline> {
-        let mut logits = Vec::with_capacity(self.x_buffers.len());
-        for bi in 0..self.x_buffers.len() {
-            logits.push(self.run_forward_batch(bi, None)?);
-        }
+        let logits = self.backend.forward_all(&[])?;
+        self.note_execs();
         let accuracy = self.accuracy_of(&logits);
-        let mut margins = Vec::with_capacity(self.test.len());
+        let mut margins = Vec::with_capacity(self.labels.iter().map(Vec::len).sum());
         for lb in &logits {
             for row in lb.chunks(self.num_classes) {
                 let (i1, i2) = Tensor::top2(row);
@@ -120,25 +144,6 @@ impl Session {
             }
         }
         Ok(Baseline { logits, accuracy, margins })
-    }
-
-    /// Run the plain forward executable on batch `bi`, with optional
-    /// overridden weight buffers (indexed like `weights.params`).
-    fn run_forward_batch(
-        &self,
-        bi: usize,
-        overrides: Option<&[(usize, xla::PjRtBuffer)]>,
-    ) -> Result<Vec<f32>> {
-        let mut args: Vec<&xla::PjRtBuffer> = Vec::with_capacity(1 + self.weight_buffers.len());
-        args.push(&self.x_buffers[bi]);
-        for (pi, wb) in self.weight_buffers.iter().enumerate() {
-            let replaced = overrides
-                .and_then(|ov| ov.iter().find(|(i, _)| *i == pi))
-                .map(|(_, b)| b);
-            args.push(replaced.unwrap_or(wb));
-        }
-        self.exec_count.set(self.exec_count.get() + 1);
-        self.forward.run_buffers(&args)
     }
 
     /// Top-1 accuracy over per-batch flat logits.
@@ -174,84 +179,31 @@ impl Session {
     /// Full-dataset forward with some weight tensors replaced. `overrides`
     /// maps parameter index (position in `weights.params`) → tensor.
     pub fn eval_with_overrides(&self, overrides: &[(usize, &Tensor)]) -> Result<EvalOutput> {
-        // upload each override once, reuse across batches
-        let mut uploaded = Vec::with_capacity(overrides.len());
-        for (pi, t) in overrides {
-            uploaded.push((*pi, self.engine.upload(t)?));
-        }
-        let mut logits = Vec::with_capacity(self.x_buffers.len());
-        for bi in 0..self.x_buffers.len() {
-            logits.push(self.run_forward_batch(bi, Some(&uploaded))?);
-        }
+        let logits = self.backend.forward_all(overrides)?;
+        self.note_execs();
         let accuracy = self.accuracy_of(&logits);
         let mean_rz_sq = self.mean_rz_sq(&logits);
         Ok(EvalOutput { logits, accuracy, mean_rz_sq })
     }
 
-    /// Full-dataset quantized forward: the `qforward` executable with a
-    /// per-layer bits vector (L1 Pallas fake-quant on the request path).
+    /// Full-dataset quantized forward with a per-layer bits vector (the
+    /// Pallas fake-quant kernel on PJRT, the same quantizer host-side on
+    /// the CPU backend).
     pub fn eval_qbits(&self, bits: &[f32]) -> Result<EvalOutput> {
-        let nwl = self.artifacts.manifest.num_weighted_layers;
-        if bits.len() != nwl {
-            return Err(Error::Model(format!(
-                "bits vector has {} entries, model has {nwl} weighted layers",
-                bits.len()
-            )));
-        }
-        let bits_t = Tensor::from_vec(&[nwl], bits.to_vec())?;
-        let bits_lit = literal_of(&bits_t)?;
-        let bits_buf = self.engine.upload(&bits_t)?;
-        let _ = bits_lit; // literal path kept for the serve loop
-        let mut logits = Vec::with_capacity(self.x_buffers.len());
-        for bi in 0..self.x_buffers.len() {
-            let mut args: Vec<&xla::PjRtBuffer> =
-                Vec::with_capacity(2 + self.weight_buffers.len());
-            args.push(&self.x_buffers[bi]);
-            for wb in &self.weight_buffers {
-                args.push(wb);
-            }
-            args.push(&bits_buf);
-            self.exec_count.set(self.exec_count.get() + 1);
-            logits.push(self.qforward.run_buffers(&args)?);
-        }
+        let logits = self.backend.forward_all_qbits(bits)?;
+        self.note_execs();
         let accuracy = self.accuracy_of(&logits);
         let mean_rz_sq = self.mean_rz_sq(&logits);
         Ok(EvalOutput { logits, accuracy, mean_rz_sq })
     }
 
-    /// Upload a per-layer bits vector once for reuse across many
-    /// [`Session::qforward_with`] calls (perf: the serve loop's bit
-    /// allocation is constant, so it must not be re-uploaded per request).
-    pub fn prepare_bits(&self, bits: &[f32]) -> Result<xla::PjRtBuffer> {
-        let nwl = self.artifacts.manifest.num_weighted_layers;
-        if bits.len() != nwl {
-            return Err(Error::Model(format!(
-                "bits vector has {} entries, model has {nwl} weighted layers",
-                bits.len()
-            )));
-        }
-        self.engine.upload(&Tensor::from_vec(&[nwl], bits.to_vec())?)
-    }
-
-    /// Single-batch quantized forward with a pre-uploaded bits buffer
-    /// (the serve hot path, batch-size 1 artifacts).
-    pub fn qforward_with(&self, x: &Tensor, bits_buf: &xla::PjRtBuffer) -> Result<Vec<f32>> {
-        let xb = self.engine.upload(x)?;
-        let mut args: Vec<&xla::PjRtBuffer> = Vec::with_capacity(2 + self.weight_buffers.len());
-        args.push(&xb);
-        for wb in &self.weight_buffers {
-            args.push(wb);
-        }
-        args.push(bits_buf);
-        self.exec_count.set(self.exec_count.get() + 1);
-        self.qforward.run_buffers(&args)
-    }
-
-    /// Single-batch quantized forward over caller-provided input (the
-    /// one-shot convenience path).
+    /// Single-input quantized forward over caller-provided input — the
+    /// serving path. Backends cache the quantized parameters keyed on
+    /// `bits`, so a serve loop with a constant allocation quantizes once.
     pub fn qforward_once(&self, x: &Tensor, bits: &[f32]) -> Result<Vec<f32>> {
-        let bb = self.prepare_bits(bits)?;
-        self.qforward_with(x, &bb)
+        let out = self.backend.qforward_one(x, bits);
+        self.note_execs();
+        out
     }
 
     /// The weight tensor + parameter index for quantization layer `qi`.

@@ -1,38 +1,54 @@
-//! Crate-wide error type.
+//! Crate-wide error type (hand-rolled Display/Error impls — the offline
+//! crate set has no thiserror).
 
-use thiserror::Error;
+use std::fmt;
 
 /// All failure modes of the adaq coordinator.
-#[derive(Error, Debug)]
+#[derive(Debug)]
 pub enum Error {
-    #[error("io error: {0}")]
-    Io(#[from] std::io::Error),
-
-    #[error("xla/pjrt error: {0}")]
+    Io(std::io::Error),
     Xla(String),
-
-    #[error("format error in {path}: {msg}")]
     Format { path: String, msg: String },
-
-    #[error("json parse error at byte {at}: {msg}")]
     Json { at: usize, msg: String },
-
-    #[error("shape mismatch: {0}")]
     Shape(String),
-
-    #[error("model error: {0}")]
     Model(String),
-
-    #[error("cli error: {0}")]
     Cli(String),
-
-    #[error("calibration failed: {0}")]
     Calibration(String),
-
-    #[error("{0}")]
     Other(String),
 }
 
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            Error::Io(e) => write!(f, "io error: {e}"),
+            Error::Xla(msg) => write!(f, "xla/pjrt error: {msg}"),
+            Error::Format { path, msg } => write!(f, "format error in {path}: {msg}"),
+            Error::Json { at, msg } => write!(f, "json parse error at byte {at}: {msg}"),
+            Error::Shape(msg) => write!(f, "shape mismatch: {msg}"),
+            Error::Model(msg) => write!(f, "model error: {msg}"),
+            Error::Cli(msg) => write!(f, "cli error: {msg}"),
+            Error::Calibration(msg) => write!(f, "calibration failed: {msg}"),
+            Error::Other(msg) => write!(f, "{msg}"),
+        }
+    }
+}
+
+impl std::error::Error for Error {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            Error::Io(e) => Some(e),
+            _ => None,
+        }
+    }
+}
+
+impl From<std::io::Error> for Error {
+    fn from(e: std::io::Error) -> Self {
+        Error::Io(e)
+    }
+}
+
+#[cfg(feature = "pjrt")]
 impl From<xla::Error> for Error {
     fn from(e: xla::Error) -> Self {
         Error::Xla(e.to_string())

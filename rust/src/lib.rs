@@ -4,11 +4,16 @@
 //! Neural Network* (Zhou, Moosavi-Dezfooli, Cheung, Frossard — AAAI 2018).
 //!
 //! The crate is the **Layer-3 coordinator** of a three-layer stack
-//! (DESIGN.md §3): JAX models (L2) calling Pallas kernels (L1) are lowered
-//! once, at build time, to HLO-text artifacts; this crate loads them
-//! through the PJRT C API ([`runtime`]) and runs every experiment of the
-//! paper — robustness calibration, bit-width allocation, accuracy sweeps —
-//! without Python anywhere on the request path.
+//! (DESIGN.md §3) and runs every experiment of the paper — robustness
+//! calibration, bit-width allocation, accuracy sweeps — without Python
+//! anywhere on the request path. Compute is pluggable behind the
+//! [`runtime::Backend`] trait: by default the pure-Rust
+//! [`runtime::CpuBackend`] (blocked multithreaded GEMM + fused
+//! conv→bias→relu over the [`nn`] substrate, evaluation parallelized
+//! across batches) executes everything with zero external dependencies;
+//! with the `pjrt` cargo feature, JAX models (L2) calling Pallas kernels
+//! (L1) lowered at build time to HLO-text artifacts run through the PJRT
+//! C API instead.
 //!
 //! Module map:
 //!
@@ -20,7 +25,7 @@
 //! | [`nn`] | pure-Rust CNN inference substrate (cross-validation oracle + CPU baseline) |
 //! | [`model`] | manifest, weight store, size accounting |
 //! | [`dataset`] | procedural shapes dataset: loader + bit-identical Rust generator |
-//! | [`runtime`] | PJRT wrapper: HLO text → executable, literal helpers |
+//! | [`runtime`] | pluggable execution backends: CPU (default) and PJRT (`pjrt` feature) |
 //! | [`quant`] | uniform quantizer, noise model, bit-width allocators (adaptive / SQNR / equal) |
 //! | [`measure`] | adversarial margin, t_i robustness calibration, p_i estimation, linearity/additivity probes |
 //! | [`coordinator`] | experiment engine: job planning, thread-pooled evaluation, sweeps, serve loop |

@@ -430,28 +430,34 @@ fn cmd_selfcheck(args: &Args) -> Result<()> {
             }
         };
         let base = session.baseline().accuracy;
-        // cross-check PJRT vs pure-rust nn on one batch
+        // cross-check the session backend vs a direct nn forward on one
+        // batch. On PJRT this compares two independent implementations;
+        // on the cpu backend both sides share the engine, so the diff
+        // instead validates session plumbing end-to-end — worker-thread
+        // batching, override wiring, scratch recycling, and the GEMM's
+        // thread-count invariance (expected diff: exactly 0).
+        let backend = session.backend_name();
         let arts = &session.artifacts;
         let exec = GraphExecutor::new(&arts.manifest);
         let xb = test.batch(0, 16).unwrap();
         let params = arts.weights.tensors();
         let rust_logits = exec.forward(&xb, &params)?;
-        let pjrt_row = &session.baseline().logits[0];
+        let base_row = &session.baseline().logits[0];
         let mut maxdiff = 0f32;
         for (i, &v) in rust_logits.data().iter().take(16 * arts.manifest.num_classes).enumerate() {
-            maxdiff = maxdiff.max((v - pjrt_row[i]).abs());
+            maxdiff = maxdiff.max((v - base_row[i]).abs());
         }
         // qforward at 16 bits ≈ fp32 forward
         let q16 = session.eval_qbits(&vec![16.0; arts.manifest.num_weighted_layers])?;
         let ok = maxdiff < 1e-3 && (q16.accuracy - base).abs() < 0.01;
         if ok {
             println!(
-                "OK  acc={base:.4} |pjrt−rust|∞={maxdiff:.2e} q16 acc={:.4}",
+                "OK  [{backend}] acc={base:.4} |{backend}−rust|∞={maxdiff:.2e} q16 acc={:.4}",
                 q16.accuracy
             );
         } else {
             println!(
-                "FAIL acc={base:.4} |pjrt−rust|∞={maxdiff:.2e} q16 acc={:.4}",
+                "FAIL [{backend}] acc={base:.4} |{backend}−rust|∞={maxdiff:.2e} q16 acc={:.4}",
                 q16.accuracy
             );
             failures += 1;

@@ -7,7 +7,8 @@
 //!   the assumptions behind Eq. 20.
 //!
 //! Everything here drives forward passes through the
-//! [`Session`](crate::coordinator::Session) PJRT hot path.
+//! [`Session`](crate::coordinator::Session) evaluation hot path (CPU
+//! backend by default, PJRT behind the `pjrt` feature).
 
 mod adversarial;
 mod probes;
@@ -16,6 +17,6 @@ mod robustness;
 pub use adversarial::{adversarial_stats, AdversarialStats};
 pub use probes::{additivity_probe, linearity_probe, AdditivityPoint, LinearityCurve};
 pub use robustness::{
-    calibrate_model, calibrate_t, estimate_p, estimate_p_robust, CalibratedLayer, Calibration,
-    RobustnessCurve, SearchParams, P_REF_BITS_MULTI,
+    calibrate_model, calibrate_t, estimate_p, estimate_p_robust, estimate_p_with, CalibratedLayer,
+    Calibration, RobustnessCurve, SearchParams, P_REF_BITS_MULTI,
 };

@@ -1,10 +1,10 @@
 //! Assumption probes: linearity (Fig. 4) and additivity (Fig. 5).
 
 use crate::coordinator::Session;
-use crate::quant::{fake_quant, quant_noise};
+use crate::quant::{fake_quant_with, quant_noise_with};
 use crate::rng::{fill_uniform_pm_half, Pcg32};
 use crate::tensor::Tensor;
-use crate::util::pearson;
+use crate::util::{pearson, Scratch};
 use crate::Result;
 
 /// Per-layer linearity curve: ‖r_W‖² vs resulting ‖r_Z‖² for a geometric
@@ -35,11 +35,12 @@ pub fn linearity_probe(
     fill_uniform_pm_half(&mut rng, &mut unit);
     let unit = Tensor::from_vec(w.shape(), unit).unwrap();
 
+    // one perturbed-weight buffer reused across the whole scale ladder
+    let mut perturbed = Tensor::zeros(w.shape());
     let mut points = Vec::with_capacity(ks.len());
     for &k in ks {
-        let noise = unit.scale(k as f32);
-        let rw_sq = noise.l2_sq();
-        let perturbed = w.add(&noise)?;
+        let rw_sq = unit.l2_sq() * k * k;
+        perturbed.assign_add_scaled(w, &unit, k as f32)?;
         let out = session.eval_with_overrides(&[(pidx, &perturbed)])?;
         points.push((rw_sq, out.mean_rz_sq, out.accuracy));
     }
@@ -71,15 +72,17 @@ pub struct AdditivityPoint {
 /// for the per-layer terms, the Pallas `qforward` for the joint term).
 pub fn additivity_probe(session: &Session, bit_widths: &[f64]) -> Result<Vec<AdditivityPoint>> {
     let nwl = session.artifacts.manifest.num_weighted_layers;
+    let mut scratch = Scratch::new();
     let mut out = Vec::with_capacity(bit_widths.len());
     for &bits in bit_widths {
         let mut sum_individual = 0f64;
         let mut rw_sq = 0f64;
         for qi in 0..nwl {
             let (pidx, w) = session.layer_weight(qi)?;
-            let wq = fake_quant(w, bits as f32);
-            rw_sq += quant_noise(w, bits as f32);
+            let wq = fake_quant_with(w, bits as f32, &mut scratch);
+            rw_sq += quant_noise_with(w, bits as f32, &mut scratch);
             let eval = session.eval_with_overrides(&[(pidx, &wq)])?;
+            scratch.put(wq.into_vec());
             sum_individual += eval.mean_rz_sq;
         }
         let joint = session.eval_qbits(&vec![bits as f32; nwl])?;

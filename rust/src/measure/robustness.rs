@@ -9,9 +9,10 @@
 //! measure mean‖r_z_i‖², and invert Eq. 16: `p_i = mean·e^(α·b_ref)`.
 
 use crate::coordinator::Session;
-use crate::quant::{fake_quant, LayerStats};
+use crate::quant::{fake_quant_with, LayerStats};
 use crate::rng::{fill_uniform_pm_half, Pcg32};
 use crate::tensor::Tensor;
+use crate::util::Scratch;
 use crate::{Error, Result, ALPHA};
 
 /// One point of the ‖r_Z‖²-vs-accuracy curve traced during calibration
@@ -204,12 +205,15 @@ pub fn calibrate_t(
     // perf (EXPERIMENTS.md §Perf/L3): the geometric binary search runs
     // with a single noise seed — only the *accepted* k is re-measured
     // with all sp.seeds draws, halving calibration wall time at equal
-    // final-estimate quality.
-    let probe = |k: f64, n_seeds: usize| -> Result<(f64, f64)> {
+    // final-estimate quality. The perturbed tensor is one buffer reused
+    // across every probe (w + k·noise written in place), so the search no
+    // longer allocates multi-MiB weight copies per step.
+    let mut perturbed = Tensor::zeros(w.shape());
+    let mut probe = |k: f64, n_seeds: usize| -> Result<(f64, f64)> {
         let mut acc_sum = 0f64;
         let mut rz_sum = 0f64;
         for noise in noises.iter().take(n_seeds) {
-            let perturbed = w.add(&noise.scale(k as f32))?;
+            perturbed.assign_add_scaled(w, noise, k as f32)?;
             let out = session.eval_with_overrides(&[(pidx, &perturbed)])?;
             acc_sum += out.accuracy;
             rz_sum += out.mean_rz_sq;
@@ -266,9 +270,20 @@ pub fn calibrate_t(
 /// Estimate p_i (Alg. 2): host-side fake-quant of layer `qi` at `b_ref`
 /// bits, one full evaluation, invert Eq. 16.
 pub fn estimate_p(session: &Session, qi: usize, b_ref: f64) -> Result<f64> {
+    estimate_p_with(session, qi, b_ref, &mut Scratch::new())
+}
+
+/// [`estimate_p`] with the quantized-weight buffer drawn from `scratch`.
+pub fn estimate_p_with(
+    session: &Session,
+    qi: usize,
+    b_ref: f64,
+    scratch: &mut Scratch,
+) -> Result<f64> {
     let (pidx, w) = session.layer_weight(qi)?;
-    let wq = fake_quant(w, b_ref as f32);
+    let wq = fake_quant_with(w, b_ref as f32, scratch);
     let out = session.eval_with_overrides(&[(pidx, &wq)])?;
+    scratch.put(wq.into_vec());
     Ok(out.mean_rz_sq * (ALPHA * b_ref).exp())
 }
 
@@ -283,9 +298,10 @@ pub const P_REF_BITS_MULTI: [f64; 2] = [6.0, 8.0];
 /// Robust p_i: geometric mean of [`estimate_p`] across
 /// [`P_REF_BITS_MULTI`].
 pub fn estimate_p_robust(session: &Session, qi: usize) -> Result<f64> {
+    let mut scratch = Scratch::new();
     let mut log_sum = 0f64;
     for &b in &P_REF_BITS_MULTI {
-        let p = estimate_p(session, qi, b)?;
+        let p = estimate_p_with(session, qi, b, &mut scratch)?;
         if p <= 0.0 || !p.is_finite() {
             return Err(Error::Calibration(format!(
                 "layer {qi}: p estimate {p} at b_ref {b}"

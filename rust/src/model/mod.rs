@@ -207,6 +207,18 @@ pub struct WeightStore {
 }
 
 impl WeightStore {
+    /// Build from in-memory parameters, in executable order — how the
+    /// procedural demo models (quickstart, benches) construct artifacts
+    /// without any files on disk.
+    pub fn from_params(params: Vec<(String, Tensor)>) -> WeightStore {
+        let by_name = params
+            .iter()
+            .enumerate()
+            .map(|(i, (n, _))| (n.clone(), i))
+            .collect();
+        WeightStore { params, by_name }
+    }
+
     /// Load `weights.tnsr` from an artifact directory.
     pub fn load(dir: impl AsRef<Path>) -> Result<WeightStore> {
         let path = dir.as_ref().join("weights.tnsr");

@@ -4,11 +4,20 @@
 //! This is the pure-Rust twin of `python/compile/model.py::forward` and is
 //! held to agreement with the PJRT execution of the lowered HLO (see
 //! `rust/tests/pjrt_cross_check.rs`).
+//!
+//! Perf: construction analyzes the graph once — every conv/dense whose
+//! output feeds exactly one ReLU is *deferred* and executed fused
+//! (conv→bias→relu in a single write-back pass), the input batch is read
+//! by reference (never copied into the activation map), and activations
+//! are recycled into the caller's [`Scratch`] arena the moment their
+//! last consumer has run — so in steady state every large buffer of a
+//! forward pass comes from the arena instead of the allocator.
 
 use std::collections::HashMap;
 
 use crate::model::{Layer, LayerKind, Manifest};
 use crate::tensor::Tensor;
+use crate::util::Scratch;
 use crate::{Error, Result};
 
 use super::ops;
@@ -17,20 +26,101 @@ use super::ops;
 /// coordinator can feed perturbed / quantized weights.
 pub struct GraphExecutor<'m> {
     manifest: &'m Manifest,
+    /// How many times each activation is read (graph inputs + final output).
+    uses: HashMap<&'m str, usize>,
+    /// ReLU layer index → index of the conv/dense producer fused into it.
+    fused_producer: Vec<Option<usize>>,
+    /// Producer layers whose evaluation is deferred into their sole ReLU.
+    deferred: Vec<bool>,
 }
 
 impl<'m> GraphExecutor<'m> {
     pub fn new(manifest: &'m Manifest) -> Self {
-        GraphExecutor { manifest }
+        let layers = &manifest.layers;
+        let mut uses: HashMap<&'m str, usize> = HashMap::new();
+        for layer in layers {
+            for inp in &layer.inputs {
+                *uses.entry(inp.as_str()).or_insert(0) += 1;
+            }
+        }
+        *uses.entry(manifest.output.as_str()).or_insert(0) += 1;
+
+        let index_of: HashMap<&str, usize> = layers
+            .iter()
+            .enumerate()
+            .map(|(i, l)| (l.name.as_str(), i))
+            .collect();
+        let mut fused_producer = vec![None; layers.len()];
+        let mut deferred = vec![false; layers.len()];
+        for (i, layer) in layers.iter().enumerate() {
+            if !matches!(layer.kind, LayerKind::Relu) {
+                continue;
+            }
+            let inp = match layer.inputs.first() {
+                Some(s) => s.as_str(),
+                None => continue,
+            };
+            if let Some(&j) = index_of.get(inp) {
+                let prod = &layers[j];
+                let fusable =
+                    matches!(prod.kind, LayerKind::Conv { .. } | LayerKind::Dense { .. });
+                if fusable && uses.get(inp) == Some(&1) && manifest.output != prod.name {
+                    fused_producer[i] = Some(j);
+                    deferred[j] = true;
+                }
+            }
+        }
+        GraphExecutor { manifest, uses, fused_producer, deferred }
     }
 
     /// Forward pass: `params` is the executable-order parameter list
     /// [w0, b0, w1, b1, …]; returns logits `[n, num_classes]`.
     pub fn forward(&self, x: &Tensor, params: &[Tensor]) -> Result<Tensor> {
+        let refs: Vec<&Tensor> = params.iter().collect();
+        self.forward_with(x, &refs, &mut Scratch::new())
+    }
+
+    /// [`GraphExecutor::forward`] with borrowed parameters and a reusable
+    /// scratch arena — the allocation-free hot path the
+    /// [`CpuBackend`](crate::runtime::CpuBackend) eval loop drives.
+    pub fn forward_with(
+        &self,
+        x: &Tensor,
+        params: &[&Tensor],
+        scratch: &mut Scratch,
+    ) -> Result<Tensor> {
+        let layers = &self.manifest.layers;
+        // the graph input is read by reference — never cloned into the
+        // activation map (it is the one tensor the caller owns)
         let mut acts: HashMap<&str, Tensor> = HashMap::new();
-        acts.insert("input", x.clone());
-        for layer in &self.manifest.layers {
-            let out = self.eval_layer(layer, &acts, params)?;
+        let mut remaining = self.uses.clone();
+        for (i, layer) in layers.iter().enumerate() {
+            if self.deferred[i] {
+                continue; // executed fused, at its ReLU consumer
+            }
+            let out = match self.fused_producer[i] {
+                Some(j) => {
+                    let prod = &layers[j];
+                    let xin = self.input(prod, &acts, x, 0)?;
+                    let (w, b) = self.params_of(prod, params)?;
+                    let fused = match &prod.kind {
+                        LayerKind::Conv { stride, pad, .. } => {
+                            ops::conv2d_fused(xin, w, b, *stride, *pad, true, scratch)?
+                        }
+                        LayerKind::Dense { .. } => ops::dense_fused(xin, w, b, true, scratch)?,
+                        _ => unreachable!("only conv/dense producers are fused"),
+                    };
+                    release(&mut acts, &mut remaining, prod.inputs[0].as_str(), scratch);
+                    fused
+                }
+                None => {
+                    let out = self.eval_layer(layer, &acts, x, params, scratch)?;
+                    for name in &layer.inputs {
+                        release(&mut acts, &mut remaining, name.as_str(), scratch);
+                    }
+                    out
+                }
+            };
             acts.insert(layer.name.as_str(), out);
         }
         acts.remove(self.manifest.output.as_str())
@@ -41,17 +131,21 @@ impl<'m> GraphExecutor<'m> {
         &self,
         layer: &Layer,
         acts: &'a HashMap<&str, Tensor>,
+        x: &'a Tensor,
         idx: usize,
     ) -> Result<&'a Tensor> {
         let name = layer
             .inputs
             .get(idx)
             .ok_or_else(|| Error::Model(format!("layer {} missing input {idx}", layer.name)))?;
+        if name == "input" {
+            return Ok(x);
+        }
         acts.get(name.as_str())
             .ok_or_else(|| Error::Model(format!("layer {}: input {name} not computed", layer.name)))
     }
 
-    fn params_of<'a>(&self, layer: &Layer, params: &'a [Tensor]) -> Result<(&'a Tensor, &'a Tensor)> {
+    fn params_of<'a>(&self, layer: &Layer, params: &'a [&'a Tensor]) -> Result<(&'a Tensor, &'a Tensor)> {
         let (wi, bi) = layer
             .param_idx
             .ok_or_else(|| Error::Model(format!("layer {} has no params", layer.name)))?;
@@ -59,9 +153,11 @@ impl<'m> GraphExecutor<'m> {
         // batch; the params slice starts at slot 1.
         let w = params
             .get(wi - 1)
+            .copied()
             .ok_or_else(|| Error::Model(format!("param {wi} out of range")))?;
         let b = params
             .get(bi - 1)
+            .copied()
             .ok_or_else(|| Error::Model(format!("param {bi} out of range")))?;
         Ok((w, b))
     }
@@ -70,40 +166,60 @@ impl<'m> GraphExecutor<'m> {
         &self,
         layer: &Layer,
         acts: &HashMap<&str, Tensor>,
-        params: &[Tensor],
+        x: &Tensor,
+        params: &[&Tensor],
+        scratch: &mut Scratch,
     ) -> Result<Tensor> {
         match &layer.kind {
             LayerKind::Conv { stride, pad, .. } => {
-                let x = self.input(layer, acts, 0)?;
+                let xin = self.input(layer, acts, x, 0)?;
                 let (w, b) = self.params_of(layer, params)?;
-                ops::conv2d(x, w, b, *stride, *pad)
+                ops::conv2d_fused(xin, w, b, *stride, *pad, false, scratch)
             }
             LayerKind::Dense { .. } => {
-                let x = self.input(layer, acts, 0)?;
+                let xin = self.input(layer, acts, x, 0)?;
                 let (w, b) = self.params_of(layer, params)?;
-                ops::dense(x, w, b)
+                ops::dense_fused(xin, w, b, false, scratch)
             }
-            LayerKind::Relu => Ok(ops::relu(self.input(layer, acts, 0)?)),
+            LayerKind::Relu => Ok(ops::relu_with(self.input(layer, acts, x, 0)?, scratch)),
             LayerKind::MaxPool { k, stride, pad } => {
-                ops::maxpool(self.input(layer, acts, 0)?, *k, *stride, *pad)
+                ops::maxpool(self.input(layer, acts, x, 0)?, *k, *stride, *pad)
             }
-            LayerKind::Gap => ops::avgpool_global(self.input(layer, acts, 0)?),
+            LayerKind::Gap => ops::avgpool_global(self.input(layer, acts, x, 0)?),
             LayerKind::Flatten => {
-                let x = self.input(layer, acts, 0)?;
-                let n = x.shape()[0];
-                let rest: usize = x.shape()[1..].iter().product();
-                x.clone().reshape(&[n, rest])
+                let xin = self.input(layer, acts, x, 0)?;
+                let n = xin.shape()[0];
+                let rest: usize = xin.shape()[1..].iter().product();
+                xin.clone().reshape(&[n, rest])
             }
             LayerKind::Add => {
-                let a = self.input(layer, acts, 0)?;
-                let b = self.input(layer, acts, 1)?;
+                let a = self.input(layer, acts, x, 0)?;
+                let b = self.input(layer, acts, x, 1)?;
                 a.add(b)
             }
             LayerKind::Concat => {
                 let parts: Vec<&Tensor> = (0..layer.inputs.len())
-                    .map(|i| self.input(layer, acts, i))
+                    .map(|i| self.input(layer, acts, x, i))
                     .collect::<Result<_>>()?;
                 concat_channels(&parts)
+            }
+        }
+    }
+}
+
+/// Decrement an activation's remaining-use count; on the last consumer,
+/// drop it from the live set and recycle its buffer into `scratch`.
+fn release(
+    acts: &mut HashMap<&str, Tensor>,
+    remaining: &mut HashMap<&str, usize>,
+    name: &str,
+    scratch: &mut Scratch,
+) {
+    if let Some(cnt) = remaining.get_mut(name) {
+        *cnt = cnt.saturating_sub(1);
+        if *cnt == 0 {
+            if let Some(t) = acts.remove(name) {
+                scratch.put(t.into_vec());
             }
         }
     }
@@ -175,6 +291,9 @@ mod tests {
     fn runs_toy_graph() {
         let m = toy_manifest();
         let exec = GraphExecutor::new(&m);
+        // conv1 feeds exactly one relu → executed fused
+        assert!(exec.deferred[0], "conv1 should be deferred into relu1");
+        assert_eq!(exec.fused_producer[1], Some(0));
         let x = Tensor::from_vec(&[1, 4, 4, 1], (0..16).map(|v| v as f32 / 16.0).collect()).unwrap();
         let params = vec![
             Tensor::from_vec(&[3, 3, 1, 1], vec![0.0, 0.0, 0.0, 0.0, 1.0, 0.0, 0.0, 0.0, 0.0])
@@ -189,6 +308,59 @@ mod tests {
         let s = (5.0 + 7.0 + 13.0 + 15.0) / 16.0;
         assert!((y.data()[0] - s).abs() < 1e-6);
         assert!((y.data()[1] - (1.0 - s)).abs() < 1e-6);
+    }
+
+    #[test]
+    fn fusion_skipped_when_conv_has_second_consumer() {
+        // conv1 feeds both relu1 and add1 → must NOT be fused away
+        let m = Manifest::from_json(
+            &Json::parse(
+                r#"{
+            "model": "branchy", "input_shape": [2,2,1], "num_classes": 4,
+            "output": "add1", "num_weighted_layers": 1,
+            "total_quantizable_params": 1,
+            "layers": [
+              {"name":"conv1","kind":"conv","inputs":["input"],"cin":1,
+               "cout":1,"k":1,"stride":1,"pad":0,"param_idx_w":1,
+               "param_idx_b":2,"qindex":0,"s_i":1},
+              {"name":"relu1","kind":"relu","inputs":["conv1"]},
+              {"name":"add1","kind":"add","inputs":["relu1","conv1"]}
+            ]}"#,
+            )
+            .unwrap(),
+        )
+        .unwrap();
+        let exec = GraphExecutor::new(&m);
+        assert!(!exec.deferred[0]);
+        assert_eq!(exec.fused_producer[1], None);
+        let x = Tensor::from_vec(&[1, 2, 2, 1], vec![-1.0, 2.0, -3.0, 4.0]).unwrap();
+        let params = vec![
+            Tensor::from_vec(&[1, 1, 1, 1], vec![1.0]).unwrap(),
+            Tensor::from_vec(&[1], vec![0.0]).unwrap(),
+        ];
+        let y = exec.forward(&x, &params).unwrap();
+        // relu(x) + x
+        assert_eq!(y.data(), &[-1.0, 4.0, -3.0, 8.0]);
+    }
+
+    #[test]
+    fn forward_with_reused_scratch_is_stable() {
+        let m = toy_manifest();
+        let exec = GraphExecutor::new(&m);
+        let x = Tensor::from_vec(&[1, 4, 4, 1], (0..16).map(|v| v as f32 / 8.0).collect()).unwrap();
+        let params = vec![
+            Tensor::from_vec(&[3, 3, 1, 1], (0..9).map(|v| v as f32 * 0.1).collect()).unwrap(),
+            Tensor::from_vec(&[1], vec![0.5]).unwrap(),
+            Tensor::from_vec(&[4, 2], (0..8).map(|v| v as f32 * 0.25 - 1.0).collect()).unwrap(),
+            Tensor::from_vec(&[2], vec![0.0, 1.0]).unwrap(),
+        ];
+        let refs: Vec<&Tensor> = params.iter().collect();
+        let mut scratch = Scratch::new();
+        let first = exec.forward_with(&x, &refs, &mut scratch).unwrap();
+        for _ in 0..3 {
+            let again = exec.forward_with(&x, &refs, &mut scratch).unwrap();
+            assert_eq!(again.data(), first.data());
+        }
     }
 
     #[test]

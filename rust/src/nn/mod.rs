@@ -5,8 +5,11 @@
 //!
 //! 1. **cross-validation oracle** — integration tests assert this forward
 //!    pass matches the PJRT execution of the lowered HLO to ~1e-4;
-//! 2. **CPU baseline comparator** — the perf benches measure the PJRT hot
-//!    path against it (DESIGN.md §10).
+//! 2. **the CPU compute engine** — [`crate::runtime::CpuBackend`] runs
+//!    every experiment through this substrate when PJRT is absent; the
+//!    blocked GEMM in [`crate::tensor`], the conv→bias→relu fusion in
+//!    [`GraphExecutor`], and the [`crate::util::Scratch`] recycling make
+//!    it the calibration hot path.
 //!
 //! Layout conventions match L2 exactly: activations NHWC, conv kernels
 //! HWIO, dense weights (in, out).
@@ -15,4 +18,7 @@ mod graph;
 mod ops;
 
 pub use graph::GraphExecutor;
-pub use ops::{avgpool_global, conv2d, dense, im2col, maxpool, relu, softmax};
+pub use ops::{
+    avgpool_global, conv2d, conv2d_fused, dense, dense_fused, im2col, im2col_with, maxpool, relu,
+    relu_with, softmax,
+};

@@ -1,6 +1,13 @@
 //! NHWC CNN primitives: conv (im2col + GEMM), pooling, dense, activations.
+//!
+//! The heavy ops come in two flavors: the original allocating entry points
+//! (`conv2d`, `dense`, `im2col`) and `*_fused`/`*_with` variants that draw
+//! every intermediate from a caller-owned [`Scratch`] arena and fold the
+//! bias add (and optionally ReLU) into the GEMM write-back pass — the
+//! [`GraphExecutor`](super::GraphExecutor) hot path uses the latter.
 
-use crate::tensor::{matmul, Tensor};
+use crate::tensor::{matmul_into, Tensor};
+use crate::util::Scratch;
 use crate::{Error, Result};
 
 /// im2col over NHWC input with symmetric zero padding.
@@ -10,6 +17,17 @@ use crate::{Error, Result};
 /// Patch column order is (kh, kw, c) — matching HWIO kernels flattened to
 /// `[k·k·c, cout]`.
 pub fn im2col(x: &Tensor, k: usize, stride: usize, pad: usize) -> Result<Tensor> {
+    im2col_with(x, k, stride, pad, &mut Scratch::new())
+}
+
+/// [`im2col`] drawing the patch matrix from `scratch`.
+pub fn im2col_with(
+    x: &Tensor,
+    k: usize,
+    stride: usize,
+    pad: usize,
+    scratch: &mut Scratch,
+) -> Result<Tensor> {
     let sh = x.shape();
     if sh.len() != 4 {
         return Err(Error::Shape(format!("im2col wants NHWC, got {sh:?}")));
@@ -21,7 +39,13 @@ pub fn im2col(x: &Tensor, k: usize, stride: usize, pad: usize) -> Result<Tensor>
     let oh = (h + 2 * pad - k) / stride + 1;
     let ow = (w + 2 * pad - k) / stride + 1;
     let cols = k * k * c;
-    let mut out = vec![0f32; n * oh * ow * cols];
+    // pad == 0 writes every patch element; padded convs rely on the
+    // zero-fill for the out-of-bounds taps they skip
+    let mut out = if pad == 0 {
+        scratch.take_any(n * oh * ow * cols)
+    } else {
+        scratch.take(n * oh * ow * cols)
+    };
     let xd = x.data();
     for b in 0..n {
         let xoff = b * h * w * c;
@@ -51,8 +75,26 @@ pub fn im2col(x: &Tensor, k: usize, stride: usize, pad: usize) -> Result<Tensor>
 
 /// NHWC conv2d: kernel HWIO `[k, k, cin, cout]`, bias `[cout]`.
 pub fn conv2d(x: &Tensor, w: &Tensor, bias: &Tensor, stride: usize, pad: usize) -> Result<Tensor> {
+    conv2d_fused(x, w, bias, stride, pad, false, &mut Scratch::new())
+}
+
+/// conv → bias (→ ReLU) in one pass: im2col patches and the output come
+/// from `scratch`, the GEMM runs blocked, and bias + activation are folded
+/// into a single write-back sweep instead of two extra full passes.
+pub fn conv2d_fused(
+    x: &Tensor,
+    w: &Tensor,
+    bias: &Tensor,
+    stride: usize,
+    pad: usize,
+    relu: bool,
+    scratch: &mut Scratch,
+) -> Result<Tensor> {
     let xs = x.shape();
     let ws = w.shape();
+    if xs.len() != 4 {
+        return Err(Error::Shape(format!("conv wants NHWC input, got {xs:?}")));
+    }
     if ws.len() != 4 || ws[0] != ws[1] {
         return Err(Error::Shape(format!("conv kernel must be HWIO square, got {ws:?}")));
     }
@@ -60,43 +102,88 @@ pub fn conv2d(x: &Tensor, w: &Tensor, bias: &Tensor, stride: usize, pad: usize) 
     if xs[3] != cin {
         return Err(Error::Shape(format!("conv cin {} vs input c {}", cin, xs[3])));
     }
+    if bias.len() != cout {
+        return Err(Error::Shape(format!("conv bias {} vs cout {cout}", bias.len())));
+    }
     let (n, h, wd) = (xs[0], xs[1], xs[2]);
     let oh = (h + 2 * pad - k) / stride + 1;
     let ow = (wd + 2 * pad - k) / stride + 1;
 
-    let patches = im2col(x, k, stride, pad)?;
-    let wm = w.clone().reshape(&[k * k * cin, cout])?;
-    let mut out = matmul(&patches, &wm)?;
-    let bd = bias.data();
-    for row in 0..out.shape()[0] {
-        let off = row * cout;
-        let slice = &mut out.data_mut()[off..off + cout];
-        for (v, &b) in slice.iter_mut().zip(bd) {
-            *v += b;
-        }
-    }
-    out.reshape(&[n, oh, ow, cout])
+    let patches = im2col_with(x, k, stride, pad, scratch)?;
+    let rows = n * oh * ow;
+    let kkc = k * k * cin;
+    let mut out = scratch.take(rows * cout);
+    // HWIO kernel memory is already the row-major [k·k·cin, cout] matrix.
+    matmul_into(patches.data(), w.data(), rows, kkc, cout, &mut out);
+    scratch.put(patches.into_vec());
+    bias_act_inplace(&mut out, bias.data(), relu);
+    Tensor::from_vec(&[n, oh, ow, cout], out)
 }
 
 /// Dense layer: x `[n, cin]` · w `[cin, cout]` + bias.
 pub fn dense(x: &Tensor, w: &Tensor, bias: &Tensor) -> Result<Tensor> {
-    let mut out = matmul(x, w)?;
-    let cout = w.shape()[1];
-    let bd = bias.data();
-    for row in 0..out.shape()[0] {
-        let off = row * cout;
-        let slice = &mut out.data_mut()[off..off + cout];
-        for (v, &b) in slice.iter_mut().zip(bd) {
-            *v += b;
+    dense_fused(x, w, bias, false, &mut Scratch::new())
+}
+
+/// dense → bias (→ ReLU) with the output drawn from `scratch`.
+pub fn dense_fused(
+    x: &Tensor,
+    w: &Tensor,
+    bias: &Tensor,
+    relu: bool,
+    scratch: &mut Scratch,
+) -> Result<Tensor> {
+    let xs = x.shape();
+    let ws = w.shape();
+    if xs.len() != 2 || ws.len() != 2 {
+        return Err(Error::Shape(format!("dense wants [n,cin]·[cin,cout], got {xs:?}·{ws:?}")));
+    }
+    let (n, cin) = (xs[0], xs[1]);
+    let (cin2, cout) = (ws[0], ws[1]);
+    if cin != cin2 {
+        return Err(Error::Shape(format!("dense: {n}x{cin} vs {cin2}x{cout}")));
+    }
+    if bias.len() != cout {
+        return Err(Error::Shape(format!("dense bias {} vs cout {cout}", bias.len())));
+    }
+    let mut out = scratch.take(n * cout);
+    matmul_into(x.data(), w.data(), n, cin, cout, &mut out);
+    bias_act_inplace(&mut out, bias.data(), relu);
+    Tensor::from_vec(&[n, cout], out)
+}
+
+/// One sweep over the GEMM output: add the per-column bias and optionally
+/// clamp at zero (the conv→bias→relu fusion's write-back pass).
+fn bias_act_inplace(out: &mut [f32], bias: &[f32], relu: bool) {
+    let cout = bias.len();
+    if relu {
+        for row in out.chunks_mut(cout) {
+            for (v, &b) in row.iter_mut().zip(bias) {
+                *v = (*v + b).max(0.0);
+            }
+        }
+    } else {
+        for row in out.chunks_mut(cout) {
+            for (v, &b) in row.iter_mut().zip(bias) {
+                *v += b;
+            }
         }
     }
-    Ok(out)
 }
 
 /// Elementwise max(x, 0).
 pub fn relu(x: &Tensor) -> Tensor {
     let data = x.data().iter().map(|&v| v.max(0.0)).collect();
     Tensor::from_vec(x.shape(), data).unwrap()
+}
+
+/// [`relu`] drawing the output from `scratch`.
+pub fn relu_with(x: &Tensor, scratch: &mut Scratch) -> Tensor {
+    let mut out = scratch.take_any(x.len());
+    for (o, &v) in out.iter_mut().zip(x.data()) {
+        *o = v.max(0.0);
+    }
+    Tensor::from_vec(x.shape(), out).unwrap()
 }
 
 /// NHWC max pooling with optional −∞ padding (k, stride, pad).
@@ -290,5 +377,34 @@ mod tests {
     fn relu_clamps() {
         let x = t(&[3], vec![-1.0, 0.0, 2.0]);
         assert_eq!(relu(&x).data(), &[0.0, 0.0, 2.0]);
+        let mut s = Scratch::new();
+        assert_eq!(relu_with(&x, &mut s).data(), &[0.0, 0.0, 2.0]);
+    }
+
+    #[test]
+    fn fused_conv_relu_matches_unfused() {
+        let x = t(&[1, 3, 3, 1], (0..9).map(|v| v as f32 - 4.0).collect());
+        let w = t(&[3, 3, 1, 2], (0..18).map(|v| (v as f32) * 0.1 - 0.9).collect());
+        let b = t(&[2], vec![0.25, -0.25]);
+        let unfused = relu(&conv2d(&x, &w, &b, 1, 1).unwrap());
+        let mut s = Scratch::new();
+        let fused = conv2d_fused(&x, &w, &b, 1, 1, true, &mut s).unwrap();
+        assert_eq!(fused.shape(), unfused.shape());
+        for (a, b) in fused.data().iter().zip(unfused.data()) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+    }
+
+    #[test]
+    fn fused_dense_relu_matches_unfused() {
+        let x = t(&[2, 3], vec![1.0, -2.0, 3.0, 0.5, 0.0, -1.0]);
+        let w = t(&[3, 2], vec![1.0, -1.0, 0.5, 0.5, -0.25, 2.0]);
+        let b = t(&[2], vec![-0.5, 0.125]);
+        let unfused = relu(&dense(&x, &w, &b).unwrap());
+        let mut s = Scratch::new();
+        let fused = dense_fused(&x, &w, &b, true, &mut s).unwrap();
+        for (a, b) in fused.data().iter().zip(unfused.data()) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
     }
 }

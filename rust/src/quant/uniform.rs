@@ -8,6 +8,7 @@
 //! weight, i.e. E‖r_W‖² = p′·e^(−α·b) with α = ln 4.
 
 use crate::tensor::Tensor;
+use crate::util::Scratch;
 
 /// Quantization range of a tensor (cached so sweeps don't re-reduce).
 #[derive(Clone, Copy, Debug, PartialEq)]
@@ -69,10 +70,37 @@ pub fn fake_quant_into(w: &[f32], range: QuantRange, bits: f32, out: &mut [f32])
 
 /// Allocating variant of [`fake_quant_into`] over a tensor.
 pub fn fake_quant(w: &Tensor, bits: f32) -> Tensor {
+    fake_quant_with(w, bits, &mut Scratch::new())
+}
+
+/// [`fake_quant`] drawing the output buffer from a [`Scratch`] arena —
+/// the calibration loop quantizes multi-MiB FC matrices once per probe,
+/// and recycling the buffer removes that per-probe allocation entirely
+/// (return the tensor with `scratch.put(t.into_vec())` when done).
+pub fn fake_quant_with(w: &Tensor, bits: f32, scratch: &mut Scratch) -> Tensor {
     let range = QuantRange::of(w);
-    let mut out = vec![0f32; w.len()];
+    let mut out = scratch.take_any(w.len());
     fake_quant_into(w.data(), range, bits, &mut out);
     Tensor::from_vec(w.shape(), out).unwrap()
+}
+
+/// [`quant_noise`] through a scratch buffer: quantizes with the threaded
+/// [`fake_quant_into`] kernel and diffs — faster than the single-thread
+/// streaming loop on multi-MiB tensors, and allocation-free across calls.
+pub fn quant_noise_with(w: &Tensor, bits: f32, scratch: &mut Scratch) -> f64 {
+    let range = QuantRange::of(w);
+    if bits <= 0.0 || range.span() <= 0.0 {
+        return 0.0;
+    }
+    let mut q = scratch.take_any(w.len());
+    fake_quant_into(w.data(), range, bits, &mut q);
+    let mut acc = 0f64;
+    for (&a, &b) in w.data().iter().zip(&q) {
+        let r = (b - a) as f64;
+        acc += r * r;
+    }
+    scratch.put(q);
+    acc
 }
 
 /// Measured quantization noise energy ‖w − fq(w)‖² (f64 accumulate).
@@ -171,6 +199,21 @@ mod tests {
         let r76 = e6 / e7;
         assert!((r87 - 4.0).abs() < 0.4, "ratio {r87}");
         assert!((r76 - 4.0).abs() < 0.4, "ratio {r76}");
+    }
+
+    #[test]
+    fn scratch_variants_match_allocating_paths() {
+        let w = randn(3000, 9);
+        let mut scratch = Scratch::new();
+        for bits in [1.0f32, 4.0, 7.0] {
+            let a = fake_quant(&w, bits);
+            let b = fake_quant_with(&w, bits, &mut scratch);
+            assert_eq!(a.data(), b.data());
+            let na = quant_noise(&w, bits);
+            let nb = quant_noise_with(&w, bits, &mut scratch);
+            assert!((na - nb).abs() <= 1e-12 * na.max(1.0), "{na} vs {nb}");
+            scratch.put(b.into_vec());
+        }
     }
 
     #[test]

@@ -1,0 +1,353 @@
+//! The pure-Rust CPU backend: [`nn::GraphExecutor`] over the blocked
+//! multithreaded GEMM, with full-dataset evaluation parallelized across
+//! pre-batched inputs via `std::thread::scope`.
+//!
+//! Threading model: one worker per batch chunk; each worker owns a
+//! [`Scratch`] arena (so steady-state forwards allocate nothing) and pins
+//! its nested GEMMs to a single thread — batch-level parallelism owns the
+//! cores, which is what makes calibration scale near-linearly (see
+//! `benches/perf_hotpath.rs`). Every thread count produces bitwise-
+//! identical logits because the per-batch compute is independent and the
+//! GEMM's accumulation order is thread-count-invariant.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+
+use crate::dataset::Dataset;
+use crate::model::{Manifest, ModelArtifacts};
+use crate::nn::GraphExecutor;
+use crate::quant::fake_quant;
+use crate::tensor::{self, Tensor};
+use crate::util::Scratch;
+use crate::{Error, Result};
+
+use super::Backend;
+
+/// CPU execution engine for one model + pre-batched test split.
+pub struct CpuBackend {
+    manifest: Manifest,
+    /// Baseline parameters in executable order [w0, b0, w1, b1, …].
+    params: Vec<Tensor>,
+    /// Pre-batched inputs, each `[batch, h, w, c]`.
+    batches: Vec<Tensor>,
+    /// Quantization index → position of the layer's weight in `params`.
+    qparam: Vec<usize>,
+    /// Worker threads for full-dataset evaluation.
+    threads: usize,
+    /// Cached quantized parameter set keyed on the bits vector (serve path).
+    qcache: Mutex<Option<(Vec<f32>, Vec<(usize, Tensor)>)>>,
+    /// Scratch arena reused across [`Backend::qforward_one`] requests so
+    /// steady-state serving draws all activation buffers from the pool.
+    serve_scratch: Mutex<Scratch>,
+    execs: AtomicU64,
+}
+
+impl CpuBackend {
+    /// Build from an in-memory manifest + parameter list + batches.
+    pub fn new(manifest: Manifest, params: Vec<Tensor>, batches: Vec<Tensor>) -> Result<CpuBackend> {
+        let expect = 2 * manifest.num_weighted_layers;
+        if params.len() != expect {
+            return Err(Error::Model(format!(
+                "cpu backend: {} params, manifest wants {expect}",
+                params.len()
+            )));
+        }
+        let mut qparam = Vec::with_capacity(manifest.num_weighted_layers);
+        for layer in manifest.weighted_layers() {
+            let (wi, _) = layer
+                .param_idx
+                .ok_or_else(|| Error::Model(format!("layer {} has no param_idx", layer.name)))?;
+            // param slot 0 is the input batch; `params` starts at slot 1
+            qparam.push(wi - 1);
+        }
+        let threads = std::thread::available_parallelism()
+            .map_or(1, |v| v.get())
+            .min(16)
+            .min(batches.len().max(1));
+        Ok(CpuBackend {
+            manifest,
+            params,
+            batches,
+            qparam,
+            threads,
+            qcache: Mutex::new(None),
+            serve_scratch: Mutex::new(Scratch::new()),
+            execs: AtomicU64::new(0),
+        })
+    }
+
+    /// Build from loaded artifacts: weights from the store, batches cut
+    /// from the test split (tail remainder dropped, as in the protocol).
+    pub fn from_artifacts(
+        artifacts: &ModelArtifacts,
+        test: &Dataset,
+        batch: usize,
+    ) -> Result<CpuBackend> {
+        let mut batches = Vec::new();
+        for (start, len) in test.batches(batch) {
+            batches.push(test.batch(start, len)?);
+        }
+        Self::new(artifacts.manifest.clone(), artifacts.weights.tensors(), batches)
+    }
+
+    /// Override the evaluation worker count (0 = keep auto).
+    pub fn with_threads(mut self, threads: usize) -> CpuBackend {
+        if threads > 0 {
+            self.threads = threads;
+        }
+        self
+    }
+
+    pub fn threads(&self) -> usize {
+        self.threads
+    }
+
+    /// The effective parameter list with `overrides` substituted.
+    fn effective<'a>(&'a self, overrides: &[(usize, &'a Tensor)]) -> Result<Vec<&'a Tensor>> {
+        let mut eff: Vec<&Tensor> = self.params.iter().collect();
+        for &(pi, t) in overrides {
+            if pi >= eff.len() {
+                return Err(Error::Model(format!("override param {pi} out of range")));
+            }
+            eff[pi] = t;
+        }
+        Ok(eff)
+    }
+
+    /// Run every batch through the graph with the given parameters,
+    /// splitting batches across up to `self.threads` workers.
+    fn forward_batches(&self, eff: &[&Tensor]) -> Result<Vec<Vec<f32>>> {
+        let nb = self.batches.len();
+        self.execs.fetch_add(nb as u64, Ordering::Relaxed);
+        let threads = self.threads.min(nb).max(1);
+        if threads <= 1 {
+            // runs on the caller's thread with GEMM threading left on
+            // auto — a single-batch dataset still gets the cores through
+            // the GEMM's own row-block parallelism (benches that want a
+            // truly serial baseline pin via tensor::set_gemm_threads(1))
+            let exec = GraphExecutor::new(&self.manifest);
+            let mut scratch = Scratch::new();
+            let mut out = Vec::with_capacity(nb);
+            for xb in &self.batches {
+                out.push(exec.forward_with(xb, eff, &mut scratch)?.into_vec());
+            }
+            return Ok(out);
+        }
+        let mut results: Vec<Result<Vec<f32>>> = (0..nb).map(|_| Ok(Vec::new())).collect();
+        let chunk = nb.div_ceil(threads);
+        std::thread::scope(|s| {
+            for (bchunk, rchunk) in self.batches.chunks(chunk).zip(results.chunks_mut(chunk)) {
+                s.spawn(move || {
+                    // batch-level parallelism owns the cores; nested GEMMs
+                    // stay single-threaded on this worker
+                    tensor::set_gemm_threads(1);
+                    let exec = GraphExecutor::new(&self.manifest);
+                    let mut scratch = Scratch::new();
+                    for (xb, slot) in bchunk.iter().zip(rchunk.iter_mut()) {
+                        *slot = exec.forward_with(xb, eff, &mut scratch).map(Tensor::into_vec);
+                    }
+                });
+            }
+        });
+        results.into_iter().collect()
+    }
+
+    fn check_bits(&self, bits: &[f32]) -> Result<()> {
+        let nwl = self.manifest.num_weighted_layers;
+        if bits.len() != nwl {
+            return Err(Error::Model(format!(
+                "bits vector has {} entries, model has {nwl} weighted layers",
+                bits.len()
+            )));
+        }
+        Ok(())
+    }
+
+    /// Host-side fake-quant of every weighted layer at its bit-width —
+    /// the same quantizer the Pallas `qforward` kernel applies on-device.
+    fn quantize_params(&self, bits: &[f32]) -> Vec<(usize, Tensor)> {
+        self.qparam
+            .iter()
+            .zip(bits)
+            .map(|(&pi, &b)| (pi, fake_quant(&self.params[pi], b)))
+            .collect()
+    }
+
+    /// Run `f` with the (cached) quantized parameter set for `bits`.
+    fn with_quantized<R>(
+        &self,
+        bits: &[f32],
+        f: impl FnOnce(&[(usize, Tensor)]) -> R,
+    ) -> R {
+        let mut guard = self.qcache.lock().unwrap();
+        let hit = matches!(&*guard, Some((b, _)) if b.as_slice() == bits);
+        if !hit {
+            let q = self.quantize_params(bits);
+            *guard = Some((bits.to_vec(), q));
+        }
+        f(&guard.as_ref().unwrap().1)
+    }
+}
+
+impl Backend for CpuBackend {
+    fn name(&self) -> &'static str {
+        "cpu"
+    }
+
+    fn num_batches(&self) -> usize {
+        self.batches.len()
+    }
+
+    fn forward_all(&self, overrides: &[(usize, &Tensor)]) -> Result<Vec<Vec<f32>>> {
+        let eff = self.effective(overrides)?;
+        self.forward_batches(&eff)
+    }
+
+    fn forward_all_qbits(&self, bits: &[f32]) -> Result<Vec<Vec<f32>>> {
+        self.check_bits(bits)?;
+        self.with_quantized(bits, |q| {
+            let refs: Vec<(usize, &Tensor)> = q.iter().map(|(pi, t)| (*pi, t)).collect();
+            let eff = self.effective(&refs)?;
+            self.forward_batches(&eff)
+        })
+    }
+
+    fn qforward_one(&self, x: &Tensor, bits: &[f32]) -> Result<Vec<f32>> {
+        self.check_bits(bits)?;
+        self.execs.fetch_add(1, Ordering::Relaxed);
+        self.with_quantized(bits, |q| {
+            let refs: Vec<(usize, &Tensor)> = q.iter().map(|(pi, t)| (*pi, t)).collect();
+            let eff = self.effective(&refs)?;
+            let exec = GraphExecutor::new(&self.manifest);
+            let mut scratch = self.serve_scratch.lock().unwrap();
+            Ok(exec.forward_with(x, &eff, &mut scratch)?.into_vec())
+        })
+    }
+
+    fn execs(&self) -> u64 {
+        self.execs.load(Ordering::Relaxed)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::io::json::Json;
+    use crate::rng::{fill_normal, Pcg32};
+
+    fn toy_manifest() -> Manifest {
+        Manifest::from_json(
+            &Json::parse(
+                r#"{
+            "model": "toy", "input_shape": [4,4,1], "num_classes": 3,
+            "output": "fc", "num_weighted_layers": 2,
+            "total_quantizable_params": 21,
+            "layers": [
+              {"name":"conv1","kind":"conv","inputs":["input"],"cin":1,
+               "cout":1,"k":3,"stride":1,"pad":1,"param_idx_w":1,
+               "param_idx_b":2,"qindex":0,"s_i":9},
+              {"name":"relu1","kind":"relu","inputs":["conv1"]},
+              {"name":"gap","kind":"gap","inputs":["relu1"]},
+              {"name":"fc","kind":"dense","inputs":["gap"],"cin":1,
+               "cout":3,"param_idx_w":3,"param_idx_b":4,"qindex":1,"s_i":3}
+            ]}"#,
+            )
+            .unwrap(),
+        )
+        .unwrap()
+    }
+
+    fn toy_backend(threads: usize) -> CpuBackend {
+        let mut rng = Pcg32::new(42);
+        let t = |shape: &[usize], rng: &mut Pcg32| {
+            let n: usize = shape.iter().product();
+            let mut data = vec![0f32; n];
+            fill_normal(rng, &mut data);
+            Tensor::from_vec(shape, data).unwrap()
+        };
+        let params = vec![
+            t(&[3, 3, 1, 1], &mut rng),
+            t(&[1], &mut rng),
+            t(&[1, 3], &mut rng),
+            t(&[3], &mut rng),
+        ];
+        let batches: Vec<Tensor> = (0..6).map(|_| t(&[5, 4, 4, 1], &mut rng)).collect();
+        CpuBackend::new(toy_manifest(), params, batches)
+            .unwrap()
+            .with_threads(threads)
+    }
+
+    #[test]
+    fn threaded_eval_matches_single_bitwise() {
+        let one = toy_backend(1).forward_all(&[]).unwrap();
+        let four = toy_backend(4).forward_all(&[]).unwrap();
+        assert_eq!(one.len(), four.len());
+        for (a, b) in one.iter().zip(&four) {
+            assert_eq!(a.len(), b.len());
+            for (x, y) in a.iter().zip(b) {
+                assert_eq!(x.to_bits(), y.to_bits());
+            }
+        }
+    }
+
+    #[test]
+    fn qbits_high_precision_close_to_fp32() {
+        let be = toy_backend(2);
+        let base = be.forward_all(&[]).unwrap();
+        let q = be.forward_all_qbits(&[16.0, 16.0]).unwrap();
+        for (lb, qb) in base.iter().zip(&q) {
+            for (a, b) in lb.iter().zip(qb) {
+                assert!((a - b).abs() < 1e-2, "{a} vs {b}");
+            }
+        }
+        // bits <= 0 means fp32 pass-through: bitwise equal to baseline
+        let id = be.forward_all_qbits(&[0.0, 0.0]).unwrap();
+        for (lb, qb) in base.iter().zip(&id) {
+            for (a, b) in lb.iter().zip(qb) {
+                assert_eq!(a.to_bits(), b.to_bits());
+            }
+        }
+    }
+
+    #[test]
+    fn qforward_one_matches_batch_eval() {
+        let be = toy_backend(2);
+        let x = be.batches[0].clone();
+        let bits = [6.0f32, 8.0];
+        let one = be.qforward_one(&x, &bits).unwrap();
+        let all = be.forward_all_qbits(&bits).unwrap();
+        assert_eq!(one.len(), all[0].len());
+        for (a, b) in one.iter().zip(&all[0]) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+        // second call with the same bits hits the quantized-param cache
+        let again = be.qforward_one(&x, &bits).unwrap();
+        assert_eq!(again, one);
+    }
+
+    #[test]
+    fn override_replaces_parameter() {
+        let be = toy_backend(1);
+        let zeroed = Tensor::zeros(&[1, 3]);
+        let out = be.forward_all(&[(2, &zeroed)]).unwrap();
+        // fc weight zeroed → logits are the bias, identical on every row
+        let bias = be.params[3].data();
+        for lb in &out {
+            for row in lb.chunks(3) {
+                for (v, b) in row.iter().zip(bias) {
+                    assert!((v - b).abs() < 1e-6);
+                }
+            }
+        }
+        assert!(be.forward_all(&[(99, &zeroed)]).is_err());
+        assert!(be.forward_all_qbits(&[8.0]).is_err());
+    }
+
+    #[test]
+    fn exec_count_tracks_batches() {
+        let be = toy_backend(3);
+        assert_eq!(be.execs(), 0);
+        be.forward_all(&[]).unwrap();
+        assert_eq!(be.execs(), 6);
+    }
+}

@@ -1,122 +1,61 @@
-//! PJRT runtime: loads the HLO-text artifacts lowered by the Python
-//! compile path and executes them on the CPU PJRT client.
+//! Execution backends.
 //!
-//! Interchange is HLO **text** (`HloModuleProto::from_text_file`): the
-//! crate's xla_extension 0.5.1 rejects jax≥0.5 serialized protos (64-bit
-//! instruction ids), while the text parser reassigns ids cleanly — see
-//! /opt/xla-example/README.md and DESIGN.md §4.
+//! [`Backend`] is the pluggable compute interface the
+//! [`Session`](crate::coordinator::Session) drives: a backend owns the
+//! pre-batched dataset and the baseline parameters, and answers full-
+//! dataset forward passes (optionally with host-side parameter overrides
+//! or per-layer fake-quantization). Two implementations:
 //!
-//! Perf notes (EXPERIMENTS.md §Perf): inputs that never change across
-//! calls (dataset batches, unperturbed weights) are uploaded once as
-//! device buffers and reused via `execute_b`; only perturbed tensors are
-//! re-uploaded per call.
+//! * [`CpuBackend`] — pure Rust, always available: the
+//!   [`nn::GraphExecutor`](crate::nn::GraphExecutor) substrate on top of
+//!   the blocked multithreaded GEMM, with evaluation parallelized across
+//!   pre-batched inputs. This is the default engine and the one the
+//!   calibration hot path (Algorithms 1 & 2) runs on.
+//! * [`PjrtBackend`] (cargo feature `pjrt`) — the XLA PJRT engine
+//!   executing the HLO-text artifacts lowered by the Python compile path.
+//!   Needs the external `xla` crate; see rust/Cargo.toml for how to
+//!   enable it.
 
-use std::path::Path;
+mod cpu;
+#[cfg(feature = "pjrt")]
+mod pjrt;
+
+pub use cpu::CpuBackend;
+#[cfg(feature = "pjrt")]
+pub use pjrt::{literal_of, Engine, Executable, PjrtBackend};
 
 use crate::tensor::Tensor;
-use crate::{Error, Result};
+use crate::Result;
 
-/// Owns the PJRT client; hands out compiled executables.
-pub struct Engine {
-    client: xla::PjRtClient,
-}
+/// A compute engine bound to one model + pre-batched test split.
+///
+/// Overrides are `(position in the executable parameter list, tensor)`
+/// pairs; `bits` vectors are indexed by quantization index (one entry per
+/// weighted layer, `<= 0` = leave at fp32).
+pub trait Backend {
+    /// Human-readable engine name for logs/benches ("cpu", "pjrt", …).
+    fn name(&self) -> &'static str;
 
-impl Engine {
-    /// CPU PJRT client.
-    pub fn cpu() -> Result<Engine> {
-        Ok(Engine { client: xla::PjRtClient::cpu()? })
-    }
+    /// Number of pre-registered dataset batches.
+    fn num_batches(&self) -> usize;
 
-    pub fn platform(&self) -> String {
-        self.client.platform_name()
-    }
+    /// Full-dataset forward pass with parameter overrides applied;
+    /// returns per-batch flat logits `[batch × classes]`. Backends are
+    /// free to evaluate batches in parallel but must return them in
+    /// order.
+    fn forward_all(&self, overrides: &[(usize, &Tensor)]) -> Result<Vec<Vec<f32>>>;
 
-    /// Load + compile an HLO-text module.
-    pub fn load_hlo(&self, path: impl AsRef<Path>) -> Result<Executable> {
-        let pstr = path.as_ref().display().to_string();
-        if !path.as_ref().is_file() {
-            return Err(Error::format(&pstr, "missing HLO artifact — run `make artifacts`"));
-        }
-        let proto = xla::HloModuleProto::from_text_file(
-            path.as_ref()
-                .to_str()
-                .ok_or_else(|| Error::format(&pstr, "non-utf8 path"))?,
-        )?;
-        let comp = xla::XlaComputation::from_proto(&proto);
-        let exe = self.client.compile(&comp)?;
-        Ok(Executable { exe, name: pstr })
-    }
+    /// Full-dataset forward with every weighted layer fake-quantized at
+    /// its per-layer bit-width (the paper's quantized evaluation).
+    fn forward_all_qbits(&self, bits: &[f32]) -> Result<Vec<Vec<f32>>>;
 
-    /// Upload a tensor to the device once; the buffer can be reused across
-    /// [`Executable::run_buffers`] calls without re-copying.
-    pub fn upload(&self, t: &Tensor) -> Result<xla::PjRtBuffer> {
-        let dims: Vec<usize> = t.shape().to_vec();
-        Ok(self
-            .client
-            .buffer_from_host_buffer(t.data(), &dims, None)?)
-    }
-}
+    /// Single-input quantized forward — the serving path. Backends
+    /// should cache per-`bits` state so repeated calls with the same
+    /// allocation stay hot ([`CpuBackend`] caches the quantized
+    /// parameter set; the PJRT backend still re-uploads the bits vector,
+    /// see its impl note). `serve_loop` issues one untimed warm-up call.
+    fn qforward_one(&self, x: &Tensor, bits: &[f32]) -> Result<Vec<f32>>;
 
-/// A compiled HLO module ready to execute.
-pub struct Executable {
-    exe: xla::PjRtLoadedExecutable,
-    name: String,
-}
-
-/// Convert a [`Tensor`] to an XLA literal (host-side).
-pub fn literal_of(t: &Tensor) -> Result<xla::Literal> {
-    let lit = xla::Literal::vec1(t.data());
-    if t.ndim() == 1 {
-        return Ok(lit);
-    }
-    let dims: Vec<i64> = t.shape().iter().map(|&d| d as i64).collect();
-    Ok(lit.reshape(&dims)?)
-}
-
-impl Executable {
-    pub fn name(&self) -> &str {
-        &self.name
-    }
-
-    /// Execute with host literals; returns the single (tuple-wrapped)
-    /// output as a flat f32 vector.
-    pub fn run(&self, args: &[&xla::Literal]) -> Result<Vec<f32>> {
-        let buffers = self.exe.execute::<&xla::Literal>(args)?;
-        Self::first_output(&buffers, &self.name)
-    }
-
-    /// Execute with pre-uploaded device buffers (the hot path).
-    pub fn run_buffers(&self, args: &[&xla::PjRtBuffer]) -> Result<Vec<f32>> {
-        let buffers = self.exe.execute_b::<&xla::PjRtBuffer>(args)?;
-        Self::first_output(&buffers, &self.name)
-    }
-
-    fn first_output(buffers: &[Vec<xla::PjRtBuffer>], name: &str) -> Result<Vec<f32>> {
-        let buf = buffers
-            .first()
-            .and_then(|replica| replica.first())
-            .ok_or_else(|| Error::Xla(format!("{name}: no output buffer")))?;
-        let lit = buf.to_literal_sync()?;
-        // aot.py lowers with return_tuple=True → 1-tuple
-        let inner = lit.to_tuple1()?;
-        Ok(inner.to_vec::<f32>()?)
-    }
-}
-
-#[cfg(test)]
-mod tests {
-    use super::*;
-
-    #[test]
-    fn literal_roundtrip_shapes() {
-        let t = Tensor::from_vec(&[2, 3], vec![1., 2., 3., 4., 5., 6.]).unwrap();
-        let lit = literal_of(&t).unwrap();
-        assert_eq!(lit.element_count(), 6);
-        let flat = Tensor::from_vec(&[4], vec![1., 2., 3., 4.]).unwrap();
-        let lit1 = literal_of(&flat).unwrap();
-        assert_eq!(lit1.element_count(), 4);
-    }
-
-    // Engine/Executable paths are exercised by the integration tests
-    // (rust/tests/pjrt_cross_check.rs) which need built artifacts.
+    /// Forward executions since construction (perf accounting).
+    fn execs(&self) -> u64;
 }

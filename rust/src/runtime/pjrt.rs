@@ -1,0 +1,246 @@
+//! PJRT engine (cargo feature `pjrt`): loads the HLO-text artifacts
+//! lowered by the Python compile path and executes them on the CPU PJRT
+//! client.
+//!
+//! Interchange is HLO **text** (`HloModuleProto::from_text_file`): the
+//! crate's xla_extension 0.5.1 rejects jax≥0.5 serialized protos (64-bit
+//! instruction ids), while the text parser reassigns ids cleanly — see
+//! /opt/xla-example/README.md and DESIGN.md §4.
+//!
+//! Perf notes (EXPERIMENTS.md §Perf): inputs that never change across
+//! calls (dataset batches, unperturbed weights) are uploaded once as
+//! device buffers and reused via `execute_b`; only perturbed tensors are
+//! re-uploaded per call.
+
+use std::path::Path;
+use std::sync::atomic::{AtomicU64, Ordering};
+
+use crate::dataset::Dataset;
+use crate::model::ModelArtifacts;
+use crate::tensor::Tensor;
+use crate::{Error, Result};
+
+use super::Backend;
+
+/// Owns the PJRT client; hands out compiled executables.
+pub struct Engine {
+    client: xla::PjRtClient,
+}
+
+impl Engine {
+    /// CPU PJRT client.
+    pub fn cpu() -> Result<Engine> {
+        Ok(Engine { client: xla::PjRtClient::cpu()? })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Load + compile an HLO-text module.
+    pub fn load_hlo(&self, path: impl AsRef<Path>) -> Result<Executable> {
+        let pstr = path.as_ref().display().to_string();
+        if !path.as_ref().is_file() {
+            return Err(Error::format(&pstr, "missing HLO artifact — run `make artifacts`"));
+        }
+        let proto = xla::HloModuleProto::from_text_file(
+            path.as_ref()
+                .to_str()
+                .ok_or_else(|| Error::format(&pstr, "non-utf8 path"))?,
+        )?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self.client.compile(&comp)?;
+        Ok(Executable { exe, name: pstr })
+    }
+
+    /// Upload a tensor to the device once; the buffer can be reused across
+    /// [`Executable::run_buffers`] calls without re-copying.
+    pub fn upload(&self, t: &Tensor) -> Result<xla::PjRtBuffer> {
+        let dims: Vec<usize> = t.shape().to_vec();
+        Ok(self
+            .client
+            .buffer_from_host_buffer(t.data(), &dims, None)?)
+    }
+}
+
+/// A compiled HLO module ready to execute.
+pub struct Executable {
+    exe: xla::PjRtLoadedExecutable,
+    name: String,
+}
+
+/// Convert a [`Tensor`] to an XLA literal (host-side).
+pub fn literal_of(t: &Tensor) -> Result<xla::Literal> {
+    let lit = xla::Literal::vec1(t.data());
+    if t.ndim() == 1 {
+        return Ok(lit);
+    }
+    let dims: Vec<i64> = t.shape().iter().map(|&d| d as i64).collect();
+    Ok(lit.reshape(&dims)?)
+}
+
+impl Executable {
+    pub fn name(&self) -> &str {
+        &self.name
+    }
+
+    /// Execute with host literals; returns the single (tuple-wrapped)
+    /// output as a flat f32 vector.
+    pub fn run(&self, args: &[&xla::Literal]) -> Result<Vec<f32>> {
+        let buffers = self.exe.execute::<&xla::Literal>(args)?;
+        Self::first_output(&buffers, &self.name)
+    }
+
+    /// Execute with pre-uploaded device buffers (the hot path).
+    pub fn run_buffers(&self, args: &[&xla::PjRtBuffer]) -> Result<Vec<f32>> {
+        let buffers = self.exe.execute_b::<&xla::PjRtBuffer>(args)?;
+        Self::first_output(&buffers, &self.name)
+    }
+
+    fn first_output(buffers: &[Vec<xla::PjRtBuffer>], name: &str) -> Result<Vec<f32>> {
+        let buf = buffers
+            .first()
+            .and_then(|replica| replica.first())
+            .ok_or_else(|| Error::Xla(format!("{name}: no output buffer")))?;
+        let lit = buf.to_literal_sync()?;
+        // aot.py lowers with return_tuple=True → 1-tuple
+        let inner = lit.to_tuple1()?;
+        Ok(inner.to_vec::<f32>()?)
+    }
+}
+
+/// [`Backend`] on the PJRT engine: compiled `forward`/`qforward`
+/// executables plus device buffers for every dataset batch and trained
+/// weight, uploaded once at open.
+pub struct PjrtBackend {
+    engine: Engine,
+    forward: Executable,
+    qforward: Executable,
+    x_buffers: Vec<xla::PjRtBuffer>,
+    weight_buffers: Vec<xla::PjRtBuffer>,
+    num_weighted_layers: usize,
+    execs: AtomicU64,
+}
+
+impl PjrtBackend {
+    /// Compile both executables and upload every test batch + weight.
+    pub fn open(artifacts: &ModelArtifacts, test: &Dataset, batch: usize) -> Result<PjrtBackend> {
+        if !artifacts.manifest.batch_sizes.contains(&batch) {
+            return Err(Error::Model(format!(
+                "batch {batch} not lowered (have {:?})",
+                artifacts.manifest.batch_sizes
+            )));
+        }
+        let engine = Engine::cpu()?;
+        let forward = engine.load_hlo(artifacts.hlo_path("forward", batch))?;
+        let qforward = engine.load_hlo(artifacts.hlo_path("qforward", batch))?;
+        let mut x_buffers = Vec::new();
+        for (start, len) in test.batches(batch) {
+            x_buffers.push(engine.upload(&test.batch(start, len)?)?);
+        }
+        let mut weight_buffers = Vec::new();
+        for (_, t) in &artifacts.weights.params {
+            weight_buffers.push(engine.upload(t)?);
+        }
+        Ok(PjrtBackend {
+            engine,
+            forward,
+            qforward,
+            x_buffers,
+            weight_buffers,
+            num_weighted_layers: artifacts.manifest.num_weighted_layers,
+            execs: AtomicU64::new(0),
+        })
+    }
+
+    fn check_bits(&self, bits: &[f32]) -> Result<()> {
+        if bits.len() != self.num_weighted_layers {
+            return Err(Error::Model(format!(
+                "bits vector has {} entries, model has {} weighted layers",
+                bits.len(),
+                self.num_weighted_layers
+            )));
+        }
+        Ok(())
+    }
+
+    fn run_forward_batch(
+        &self,
+        bi: usize,
+        overrides: &[(usize, xla::PjRtBuffer)],
+    ) -> Result<Vec<f32>> {
+        let mut args: Vec<&xla::PjRtBuffer> = Vec::with_capacity(1 + self.weight_buffers.len());
+        args.push(&self.x_buffers[bi]);
+        for (pi, wb) in self.weight_buffers.iter().enumerate() {
+            let replaced = overrides.iter().find(|(i, _)| *i == pi).map(|(_, b)| b);
+            args.push(replaced.unwrap_or(wb));
+        }
+        self.execs.fetch_add(1, Ordering::Relaxed);
+        self.forward.run_buffers(&args)
+    }
+}
+
+impl Backend for PjrtBackend {
+    fn name(&self) -> &'static str {
+        "pjrt"
+    }
+
+    fn num_batches(&self) -> usize {
+        self.x_buffers.len()
+    }
+
+    fn forward_all(&self, overrides: &[(usize, &Tensor)]) -> Result<Vec<Vec<f32>>> {
+        // upload each override once, reuse across batches
+        let mut uploaded = Vec::with_capacity(overrides.len());
+        for (pi, t) in overrides {
+            uploaded.push((*pi, self.engine.upload(t)?));
+        }
+        let mut logits = Vec::with_capacity(self.x_buffers.len());
+        for bi in 0..self.x_buffers.len() {
+            logits.push(self.run_forward_batch(bi, &uploaded)?);
+        }
+        Ok(logits)
+    }
+
+    fn forward_all_qbits(&self, bits: &[f32]) -> Result<Vec<Vec<f32>>> {
+        self.check_bits(bits)?;
+        let bits_t = Tensor::from_vec(&[bits.len()], bits.to_vec())?;
+        let bits_buf = self.engine.upload(&bits_t)?;
+        let mut logits = Vec::with_capacity(self.x_buffers.len());
+        for bi in 0..self.x_buffers.len() {
+            let mut args: Vec<&xla::PjRtBuffer> =
+                Vec::with_capacity(2 + self.weight_buffers.len());
+            args.push(&self.x_buffers[bi]);
+            for wb in &self.weight_buffers {
+                args.push(wb);
+            }
+            args.push(&bits_buf);
+            self.execs.fetch_add(1, Ordering::Relaxed);
+            logits.push(self.qforward.run_buffers(&args)?);
+        }
+        Ok(logits)
+    }
+
+    /// NOTE: unlike [`CpuBackend`](super::CpuBackend), this re-uploads
+    /// the bits vector per request (no cache — `PjRtBuffer`'s thread
+    /// affinity is unverified here); a device-side bits cache is listed
+    /// in ROADMAP "Open items" for when the `pjrt` feature is wired to a
+    /// real `xla` dependency again.
+    fn qforward_one(&self, x: &Tensor, bits: &[f32]) -> Result<Vec<f32>> {
+        self.check_bits(bits)?;
+        let xb = self.engine.upload(x)?;
+        let bits_buf = self.engine.upload(&Tensor::from_vec(&[bits.len()], bits.to_vec())?)?;
+        let mut args: Vec<&xla::PjRtBuffer> = Vec::with_capacity(2 + self.weight_buffers.len());
+        args.push(&xb);
+        for wb in &self.weight_buffers {
+            args.push(wb);
+        }
+        args.push(&bits_buf);
+        self.execs.fetch_add(1, Ordering::Relaxed);
+        self.qforward.run_buffers(&args)
+    }
+
+    fn execs(&self) -> u64 {
+        self.execs.load(Ordering::Relaxed)
+    }
+}

@@ -146,6 +146,36 @@ impl Tensor {
         }
     }
 
+    /// Transpose of a rank-2 tensor.
+    pub fn transpose2(&self) -> Result<Tensor> {
+        if self.ndim() != 2 {
+            return Err(Error::Shape(format!("transpose2 wants rank-2, got {:?}", self.shape)));
+        }
+        let (m, n) = (self.shape[0], self.shape[1]);
+        let mut out = vec![0f32; m * n];
+        for i in 0..m {
+            for j in 0..n {
+                out[j * m + i] = self.data[i * n + j];
+            }
+        }
+        Tensor::from_vec(&[n, m], out)
+    }
+
+    /// Overwrite `self` with `a + k·b` elementwise — the calibration
+    /// probe's noise-injection step, allocation-free across probes.
+    pub fn assign_add_scaled(&mut self, a: &Tensor, b: &Tensor, k: f32) -> Result<()> {
+        if self.shape != a.shape || self.shape != b.shape {
+            return Err(Error::Shape(format!(
+                "assign_add_scaled: {:?} vs {:?} vs {:?}",
+                self.shape, a.shape, b.shape
+            )));
+        }
+        for ((o, &av), &bv) in self.data.iter_mut().zip(&a.data).zip(&b.data) {
+            *o = av + k * bv;
+        }
+        Ok(())
+    }
+
     /// Indices of the two largest entries of a 1-D slice, returned as
     /// (argmax, arg-second-max). Used for the adversarial margin
     /// (z₍₁₎ − z₍₂₎)²/2 of Eq. 13 and for accuracy.
@@ -202,25 +232,219 @@ impl IntTensor {
     }
 }
 
-/// C = A(m×k) · B(k×n), accumulating in f32 with a blocked inner loop.
-/// This is the pure-Rust GEMM under `nn::conv2d` (im2col) and `nn::dense`.
+// ---------------------------------------------------------------------------
+// GEMM — the compute core under `nn::conv2d` (im2col) and `nn::dense`.
+//
+// [`matmul`] is a cache-blocked, register-tiled implementation: B is packed
+// into NR-wide column panels once, the inner kernel keeps an MR×NR
+// accumulator block in registers, and row blocks are distributed across
+// `std::thread::scope` threads. Per output element the k-summation order is
+// fixed (ascending p within KC blocks, blocks in ascending order) and does
+// not depend on the thread count, so threaded and single-threaded runs
+// agree **bitwise** — the cross-backend tests rely on that.
+//
+// [`matmul_sparse_lhs`] keeps the seed's `if av == 0.0 { continue; }`
+// skip for genuinely sparse left operands (post-ReLU activations); the
+// branch was removed from the dense kernel because on dense weights it
+// defeats branch prediction and blocks vectorization of the inner loop.
+// ---------------------------------------------------------------------------
+
+/// Microkernel row tile.
+const MR: usize = 4;
+/// Microkernel column tile (one packed B panel).
+const NR: usize = 8;
+/// k-dimension block: one A row slab of KC f32 stays in L1 while a packed
+/// B panel streams through.
+const KC: usize = 256;
+
+use std::cell::Cell;
+
+thread_local! {
+    /// Per-thread override for the GEMM thread count; 0 = auto. Worker
+    /// threads that already own one slice of a batch-parallel evaluation
+    /// set this to 1 so nested GEMMs don't oversubscribe the machine.
+    static GEMM_THREADS: Cell<usize> = Cell::new(0);
+    /// Per-thread B-panel pack buffer, reused across GEMM calls so the
+    /// steady-state hot path (same weight shapes every batch/probe) does
+    /// not allocate per multiply.
+    static PACK_BUF: Cell<Vec<f32>> = Cell::new(Vec::new());
+}
+
+/// Force the GEMM thread count on the *calling thread* (0 restores auto).
+pub fn set_gemm_threads(n: usize) {
+    GEMM_THREADS.with(|c| c.set(n));
+}
+
+/// Threads to use for an m×k·k×n product: the thread-local override if
+/// set, else all cores for products big enough to amortize the spawns.
+fn gemm_auto_threads(m: usize, n: usize, k: usize) -> usize {
+    let forced = GEMM_THREADS.with(|c| c.get());
+    if forced != 0 {
+        return forced;
+    }
+    let flops = m.saturating_mul(n).saturating_mul(k);
+    if flops < (1 << 22) || m < 2 * MR {
+        return 1;
+    }
+    std::thread::available_parallelism().map_or(1, |v| v.get()).min(16)
+}
+
+/// Pack B (k×n row-major) into NR-wide column panels, zero-padded on the
+/// right edge: `packed[jp][p][0..NR] = b[p][jp*NR .. jp*NR+NR]`.
+/// The buffer is caller-provided (resized and re-zeroed here) so the hot
+/// path can recycle it across calls.
+fn pack_b(b: &[f32], k: usize, n: usize, packed: &mut Vec<f32>) {
+    let npanels = n.div_ceil(NR);
+    packed.clear();
+    packed.resize(npanels * k * NR, 0.0);
+    for jp in 0..npanels {
+        let j0 = jp * NR;
+        let w = NR.min(n - j0);
+        let base = jp * k * NR;
+        for p in 0..k {
+            let src = p * n + j0;
+            packed[base + p * NR..base + p * NR + w].copy_from_slice(&b[src..src + w]);
+        }
+    }
+}
+
+/// Compute C rows [r0, r1) from A and packed B. `c` holds exactly those
+/// rows (row r0 of the full matrix is row 0 of `c`) and must be zeroed.
+fn gemm_rows(
+    a: &[f32],
+    packed: &[f32],
+    c: &mut [f32],
+    r0: usize,
+    r1: usize,
+    k: usize,
+    n: usize,
+) {
+    let npanels = n.div_ceil(NR);
+    let mut i = r0;
+    while i < r1 {
+        let mr = MR.min(r1 - i);
+        let mut pc = 0;
+        while pc < k {
+            let kc = KC.min(k - pc);
+            for jp in 0..npanels {
+                let j0 = jp * NR;
+                let nr = NR.min(n - j0);
+                let panel = &packed[jp * k * NR + pc * NR..jp * k * NR + (pc + kc) * NR];
+                // register-tiled MR×NR accumulator block
+                let mut acc = [[0f32; NR]; MR];
+                for p in 0..kc {
+                    let brow = &panel[p * NR..p * NR + NR];
+                    for r in 0..mr {
+                        let av = a[(i + r) * k + pc + p];
+                        let accr = &mut acc[r];
+                        for j in 0..NR {
+                            accr[j] += av * brow[j];
+                        }
+                    }
+                }
+                for r in 0..mr {
+                    let off = (i + r - r0) * n + j0;
+                    let crow = &mut c[off..off + nr];
+                    for (cv, &av) in crow.iter_mut().zip(&acc[r][..nr]) {
+                        *cv += av;
+                    }
+                }
+            }
+            pc += kc;
+        }
+        i += mr;
+    }
+}
+
+/// Blocked GEMM into a caller-provided (zeroed) output slice:
+/// `out[m×n] += a[m×k] · b[k×n]`. `threads == 0` picks automatically.
+pub fn matmul_into(a: &[f32], b: &[f32], m: usize, k: usize, n: usize, out: &mut [f32]) {
+    matmul_into_threaded(a, b, m, k, n, out, 0)
+}
+
+/// [`matmul_into`] with an explicit thread count (0 = auto).
+pub fn matmul_into_threaded(
+    a: &[f32],
+    b: &[f32],
+    m: usize,
+    k: usize,
+    n: usize,
+    out: &mut [f32],
+    threads: usize,
+) {
+    assert_eq!(a.len(), m * k, "lhs size");
+    assert_eq!(b.len(), k * n, "rhs size");
+    assert_eq!(out.len(), m * n, "out size");
+    if m == 0 || n == 0 || k == 0 {
+        return;
+    }
+    let threads = if threads == 0 { gemm_auto_threads(m, n, k) } else { threads };
+    // take the per-thread pack buffer out, pack into it, put it back —
+    // steady-state GEMMs (same shapes every batch) allocate nothing
+    let mut packed = PACK_BUF.with(|c| c.take());
+    pack_b(b, k, n, &mut packed);
+    if threads <= 1 || m < 2 * MR {
+        gemm_rows(a, &packed, out, 0, m, k, n);
+    } else {
+        // contiguous MR-aligned row chunks; the split never changes the
+        // per-element accumulation order, only who computes which rows.
+        let rows_per = m.div_ceil(threads).div_ceil(MR) * MR;
+        std::thread::scope(|s| {
+            for (ci, chunk) in out.chunks_mut(rows_per * n).enumerate() {
+                let r0 = ci * rows_per;
+                let r1 = (r0 + rows_per).min(m);
+                let packed = &packed;
+                s.spawn(move || gemm_rows(a, packed, chunk, r0, r1, k, n));
+            }
+        });
+    }
+    PACK_BUF.with(|c| c.set(packed));
+}
+
+/// C = A(m×k) · B(k×n): cache-blocked, register-tiled, multithreaded.
 pub fn matmul(a: &Tensor, b: &Tensor) -> Result<Tensor> {
-    if a.ndim() != 2 || b.ndim() != 2 {
-        return Err(Error::Shape("matmul wants rank-2 operands".into()));
-    }
-    let (m, k) = (a.shape[0], a.shape[1]);
-    let (k2, n) = (b.shape[0], b.shape[1]);
-    if k != k2 {
-        return Err(Error::Shape(format!("matmul: {m}x{k} vs {k2}x{n}")));
-    }
+    matmul_threaded(a, b, 0)
+}
+
+/// [`matmul`] with an explicit thread count (0 = auto, 1 = single-thread).
+/// Any thread count produces bitwise-identical results.
+pub fn matmul_threaded(a: &Tensor, b: &Tensor, threads: usize) -> Result<Tensor> {
+    let (m, k, n) = matmul_dims(a, b)?;
     let mut out = vec![0f32; m * n];
-    // ikj loop order: streams B rows, keeps C row hot.
+    matmul_into_threaded(&a.data, &b.data, m, k, n, &mut out, threads);
+    Tensor::from_vec(&[m, n], out)
+}
+
+/// The seed's single-threaded ikj loop (no sparsity skip) — kept as the
+/// correctness reference and the bench baseline for the blocked kernel.
+pub fn matmul_reference(a: &Tensor, b: &Tensor) -> Result<Tensor> {
+    let (m, k, n) = matmul_dims(a, b)?;
+    let mut out = vec![0f32; m * n];
+    for i in 0..m {
+        let arow = &a.data[i * k..(i + 1) * k];
+        let crow = &mut out[i * n..(i + 1) * n];
+        for (p, &av) in arow.iter().enumerate() {
+            let brow = &b.data[p * n..(p + 1) * n];
+            for (cv, &bv) in crow.iter_mut().zip(brow) {
+                *cv += av * bv;
+            }
+        }
+    }
+    Tensor::from_vec(&[m, n], out)
+}
+
+/// ikj GEMM that skips zero LHS entries — only worth it when the left
+/// operand is genuinely sparse (post-ReLU activations); on dense weights
+/// the branch costs more than the skipped multiplies (see perf_hotpath).
+pub fn matmul_sparse_lhs(a: &Tensor, b: &Tensor) -> Result<Tensor> {
+    let (m, k, n) = matmul_dims(a, b)?;
+    let mut out = vec![0f32; m * n];
     for i in 0..m {
         let arow = &a.data[i * k..(i + 1) * k];
         let crow = &mut out[i * n..(i + 1) * n];
         for (p, &av) in arow.iter().enumerate() {
             if av == 0.0 {
-                continue; // post-ReLU activations are sparse
+                continue;
             }
             let brow = &b.data[p * n..(p + 1) * n];
             for (cv, &bv) in crow.iter_mut().zip(brow) {
@@ -229,6 +453,18 @@ pub fn matmul(a: &Tensor, b: &Tensor) -> Result<Tensor> {
         }
     }
     Tensor::from_vec(&[m, n], out)
+}
+
+fn matmul_dims(a: &Tensor, b: &Tensor) -> Result<(usize, usize, usize)> {
+    if a.ndim() != 2 || b.ndim() != 2 {
+        return Err(Error::Shape("matmul wants rank-2 operands".into()));
+    }
+    let (m, k) = (a.shape[0], a.shape[1]);
+    let (k2, n) = (b.shape[0], b.shape[1]);
+    if k != k2 {
+        return Err(Error::Shape(format!("matmul: {m}x{k} vs {k2}x{n}")));
+    }
+    Ok((m, k, n))
 }
 
 #[cfg(test)]
@@ -262,6 +498,67 @@ mod tests {
         let a = Tensor::from_vec(&[2, 3], vec![1., 2., 3., 4., 5., 6.]).unwrap();
         let eye = Tensor::from_vec(&[3, 3], vec![1., 0., 0., 0., 1., 0., 0., 0., 1.]).unwrap();
         assert_eq!(matmul(&a, &eye).unwrap().data(), a.data());
+    }
+
+    #[test]
+    fn blocked_matches_reference_on_ragged_shape() {
+        // 5×7 · 7×9 — nothing divides the 4×8 tile
+        let a = Tensor::from_vec(&[5, 7], (0..35).map(|v| (v as f32) * 0.37 - 6.0).collect())
+            .unwrap();
+        let b = Tensor::from_vec(&[7, 9], (0..63).map(|v| (v as f32) * 0.11 - 3.0).collect())
+            .unwrap();
+        let blocked = matmul(&a, &b).unwrap();
+        let reference = matmul_reference(&a, &b).unwrap();
+        for (x, y) in blocked.data().iter().zip(reference.data()) {
+            assert!((x - y).abs() <= 1e-4 * (1.0 + y.abs()), "{x} vs {y}");
+        }
+    }
+
+    #[test]
+    fn threaded_matches_single_bitwise() {
+        let a = Tensor::from_vec(&[33, 21], (0..693).map(|v| (v as f32).sin()).collect()).unwrap();
+        let b = Tensor::from_vec(&[21, 17], (0..357).map(|v| (v as f32).cos()).collect()).unwrap();
+        let one = matmul_threaded(&a, &b, 1).unwrap();
+        let four = matmul_threaded(&a, &b, 4).unwrap();
+        for (x, y) in one.data().iter().zip(four.data()) {
+            assert_eq!(x.to_bits(), y.to_bits());
+        }
+    }
+
+    #[test]
+    fn sparse_lhs_matches_reference() {
+        let mut av: Vec<f32> = (0..60).map(|v| (v as f32) * 0.3 - 9.0).collect();
+        for (i, v) in av.iter_mut().enumerate() {
+            if i % 3 == 0 {
+                *v = 0.0;
+            }
+        }
+        let a = Tensor::from_vec(&[6, 10], av).unwrap();
+        let b = Tensor::from_vec(&[10, 4], (0..40).map(|v| (v as f32) * 0.21).collect()).unwrap();
+        let s = matmul_sparse_lhs(&a, &b).unwrap();
+        let r = matmul_reference(&a, &b).unwrap();
+        for (x, y) in s.data().iter().zip(r.data()) {
+            assert!((x - y).abs() <= 1e-5 * (1.0 + y.abs()));
+        }
+    }
+
+    #[test]
+    fn transpose2_roundtrip() {
+        let t = Tensor::from_vec(&[2, 3], vec![1., 2., 3., 4., 5., 6.]).unwrap();
+        let tt = t.transpose2().unwrap();
+        assert_eq!(tt.shape(), &[3, 2]);
+        assert_eq!(tt.data(), &[1., 4., 2., 5., 3., 6.]);
+        assert_eq!(tt.transpose2().unwrap().data(), t.data());
+    }
+
+    #[test]
+    fn assign_add_scaled_matches_add() {
+        let a = Tensor::from_vec(&[4], vec![1., 2., 3., 4.]).unwrap();
+        let b = Tensor::from_vec(&[4], vec![0.5, -0.5, 1.0, 0.0]).unwrap();
+        let mut out = Tensor::zeros(&[4]);
+        out.assign_add_scaled(&a, &b, 2.0).unwrap();
+        assert_eq!(out.data(), &[2.0, 1.0, 5.0, 4.0]);
+        assert!(out.assign_add_scaled(&a, &Tensor::zeros(&[3]), 1.0).is_err());
     }
 
     #[test]

@@ -1,6 +1,79 @@
-//! Small shared utilities: wall-clock timing and stat helpers.
+//! Small shared utilities: wall-clock timing, stat helpers, and the
+//! [`Scratch`] buffer arena the hot paths recycle allocations through.
 
 use std::time::Instant;
+
+/// Reusable pool of f32 buffers.
+///
+/// The calibration hot path runs thousands of forward passes; before the
+/// perf pass every one of them allocated fresh im2col patch matrices,
+/// fake-quant outputs and per-layer activations. A `Scratch` is owned by
+/// one evaluation thread and recycles those buffers across layers and
+/// across calls: [`Scratch::take`] hands out a zero-filled buffer (reusing
+/// a pooled allocation when one is big enough), [`Scratch::put`] returns a
+/// buffer to the pool.
+pub struct Scratch {
+    pool: Vec<Vec<f32>>,
+}
+
+/// Pool entries beyond this are dropped rather than kept (bounds resident
+/// memory when a graph has many differently-sized activations).
+const SCRATCH_POOL_CAP: usize = 16;
+
+impl Scratch {
+    pub fn new() -> Scratch {
+        Scratch { pool: Vec::new() }
+    }
+
+    /// A zero-filled buffer of exactly `len` elements — for consumers
+    /// that accumulate (`matmul_into`'s `+=`) or leave gaps (padded
+    /// im2col).
+    pub fn take(&mut self, len: usize) -> Vec<f32> {
+        match self.pool.iter().position(|b| b.capacity() >= len) {
+            Some(i) => {
+                let mut b = self.pool.swap_remove(i);
+                b.clear();
+                b.resize(len, 0.0);
+                b
+            }
+            None => vec![0.0; len],
+        }
+    }
+
+    /// A buffer of `len` elements with **unspecified contents** (stale
+    /// data from a previous use) — for consumers that overwrite every
+    /// element before reading, saving the zero-fill pass of
+    /// [`Scratch::take`] on multi-MiB quantizer/activation buffers.
+    pub fn take_any(&mut self, len: usize) -> Vec<f32> {
+        match self.pool.iter().position(|b| b.capacity() >= len) {
+            Some(i) => {
+                let mut b = self.pool.swap_remove(i);
+                if b.len() > len {
+                    b.truncate(len);
+                } else {
+                    b.resize(len, 0.0); // writes only the tail past the old len
+                }
+                b
+            }
+            None => vec![0.0; len],
+        }
+    }
+
+    /// Return a buffer to the pool for reuse (contents are kept; both
+    /// take variants fix them up on the way out).
+    pub fn put(&mut self, buf: Vec<f32>) {
+        if buf.capacity() == 0 || self.pool.len() >= SCRATCH_POOL_CAP {
+            return;
+        }
+        self.pool.push(buf);
+    }
+}
+
+impl Default for Scratch {
+    fn default() -> Self {
+        Scratch::new()
+    }
+}
 
 /// Simple scoped timer for the perf logs.
 pub struct Timer {
@@ -77,6 +150,37 @@ mod tests {
         assert_eq!(median(&[3.0, 1.0, 2.0]), 2.0);
         assert_eq!(median(&[4.0, 1.0, 2.0, 3.0]), 2.5);
         assert!((stddev(&[2.0, 4.0, 4.0, 4.0, 5.0, 5.0, 7.0, 9.0]) - 2.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn scratch_recycles_buffers() {
+        let mut s = Scratch::new();
+        let mut a = s.take(100);
+        a[0] = 7.0;
+        let cap = a.capacity();
+        s.put(a);
+        let b = s.take(50);
+        assert!(b.capacity() >= 50);
+        assert_eq!(b.capacity(), cap, "should reuse the pooled allocation");
+        assert!(b.iter().all(|&v| v == 0.0), "take() buffers come back zeroed");
+        assert_eq!(b.len(), 50);
+        let c = s.take(1000);
+        assert_eq!(c.len(), 1000);
+    }
+
+    #[test]
+    fn scratch_take_any_has_right_len() {
+        let mut s = Scratch::new();
+        let mut a = s.take(64);
+        a.iter_mut().for_each(|v| *v = 3.0);
+        s.put(a);
+        // contents are unspecified — only the length is contractual
+        assert_eq!(s.take_any(16).len(), 16);
+        let mut b = s.take(8);
+        b[0] = 1.0;
+        s.put(b);
+        assert_eq!(s.take_any(32).len(), 32);
+        assert_eq!(s.take_any(5000).len(), 5000);
     }
 
     #[test]

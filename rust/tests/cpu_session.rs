@@ -1,0 +1,132 @@
+//! CPU-backend session integration: the full coordinator API must run on
+//! an in-memory model with **no artifacts and no PJRT** — this is the
+//! tier-1 guarantee that calibration, allocation and quantized evaluation
+//! work on a fresh checkout.
+
+use adaq::coordinator::Session;
+use adaq::dataset::Dataset;
+use adaq::io::Json;
+use adaq::measure::{calibrate_t, estimate_p, SearchParams};
+use adaq::model::{Manifest, ModelArtifacts, WeightStore};
+use adaq::rng::{fill_normal, Pcg32};
+use adaq::tensor::Tensor;
+
+fn demo_manifest() -> Manifest {
+    Manifest::from_json(
+        &Json::parse(
+            r#"{
+        "model": "cpu_demo", "input_shape": [16,16,1], "num_classes": 10,
+        "output": "fc", "num_weighted_layers": 2,
+        "total_quantizable_params": 112,
+        "layers": [
+          {"name":"conv1","kind":"conv","inputs":["input"],"cin":1,"cout":4,
+           "k":3,"stride":2,"pad":1,"param_idx_w":1,"param_idx_b":2,
+           "qindex":0,"s_i":36},
+          {"name":"relu1","kind":"relu","inputs":["conv1"]},
+          {"name":"gap","kind":"gap","inputs":["relu1"]},
+          {"name":"fc","kind":"dense","inputs":["gap"],"cin":4,"cout":10,
+           "param_idx_w":3,"param_idx_b":4,"qindex":1,"s_i":40}
+        ]}"#,
+        )
+        .unwrap(),
+    )
+    .unwrap()
+}
+
+fn demo_session(n_test: usize, batch: usize) -> Session {
+    let mut rng = Pcg32::new(0xCAFE);
+    let t = |shape: &[usize], rng: &mut Pcg32| {
+        let n: usize = shape.iter().product();
+        let mut data = vec![0f32; n];
+        fill_normal(rng, &mut data);
+        Tensor::from_vec(shape, data).unwrap()
+    };
+    let weights = WeightStore::from_params(vec![
+        ("conv1.w".into(), t(&[3, 3, 1, 4], &mut rng)),
+        ("conv1.b".into(), t(&[4], &mut rng)),
+        ("fc.w".into(), t(&[4, 10], &mut rng)),
+        ("fc.b".into(), t(&[10], &mut rng)),
+    ]);
+    let artifacts = ModelArtifacts {
+        dir: std::path::PathBuf::from("<test>"),
+        manifest: demo_manifest(),
+        weights,
+    };
+    let test = Dataset::generate(n_test, 777);
+    Session::from_parts(artifacts, test, batch).unwrap()
+}
+
+#[test]
+fn opens_and_caches_baseline() {
+    let session = demo_session(200, 50);
+    assert_eq!(session.backend_name(), "cpu");
+    assert_eq!(session.num_batches(), 4);
+    assert_eq!(session.batch_size(), 50);
+    let base = session.baseline();
+    assert_eq!(base.logits.len(), 4);
+    assert_eq!(base.logits[0].len(), 50 * 10);
+    assert_eq!(base.margins.len(), 200);
+    assert!((0.0..=1.0).contains(&base.accuracy));
+    assert!(base.margins.iter().all(|&m| m >= 0.0));
+    assert!(session.exec_count.get() >= 4);
+}
+
+#[test]
+fn identity_override_reproduces_baseline_bitwise() {
+    let session = demo_session(100, 25);
+    let (pidx, w) = session.layer_weight(0).unwrap();
+    let copy = w.clone();
+    let out = session.eval_with_overrides(&[(pidx, &copy)]).unwrap();
+    for (lb, bb) in out.logits.iter().zip(&session.baseline().logits) {
+        for (a, b) in lb.iter().zip(bb) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+    }
+    assert_eq!(out.mean_rz_sq, 0.0);
+    assert_eq!(out.accuracy, session.baseline().accuracy);
+}
+
+#[test]
+fn qbits_identity_and_noise_monotonicity() {
+    let session = demo_session(100, 25);
+    // bits <= 0 = fp32 pass-through
+    let id = session.eval_qbits(&[0.0, 0.0]).unwrap();
+    assert_eq!(id.mean_rz_sq, 0.0);
+    // coarser quantization ⇒ more transferred noise (Eq. 3 direction)
+    let fine = session.eval_qbits(&[10.0, 10.0]).unwrap();
+    let coarse = session.eval_qbits(&[2.0, 2.0]).unwrap();
+    assert!(
+        coarse.mean_rz_sq > fine.mean_rz_sq,
+        "coarse {} !> fine {}",
+        coarse.mean_rz_sq,
+        fine.mean_rz_sq
+    );
+    assert!(session.eval_qbits(&[8.0]).is_err(), "wrong bits arity must fail");
+}
+
+#[test]
+fn qforward_once_matches_full_eval() {
+    let session = demo_session(100, 25);
+    let bits = [6.0f32, 8.0];
+    let all = session.eval_qbits(&bits).unwrap();
+    let x = session.test.batch(0, 25).unwrap();
+    let one = session.qforward_once(&x, &bits).unwrap();
+    assert_eq!(one.len(), all.logits[0].len());
+    for (a, b) in one.iter().zip(&all.logits[0]) {
+        assert_eq!(a.to_bits(), b.to_bits());
+    }
+}
+
+#[test]
+fn calibration_primitives_run_without_artifacts() {
+    let session = demo_session(150, 50);
+    let stats = adaq::measure::adversarial_stats(&session, 10);
+    assert!(stats.mean_rstar > 0.0);
+    let sp = SearchParams { max_iters: 8, seeds: 1, ..Default::default() };
+    let cal = calibrate_t(&session, 0, 0.05, stats.mean_rstar, &sp).unwrap();
+    assert_eq!(cal.qindex, 0);
+    assert!(cal.t.is_finite() && cal.t >= 0.0);
+    assert!(!cal.curve.points.is_empty());
+    let p = estimate_p(&session, 1, 6.0).unwrap();
+    assert!(p.is_finite() && p >= 0.0);
+}
