@@ -2,9 +2,9 @@
 
 CARGO ?= cargo
 
-.PHONY: verify build test bench fmt-check clean
+.PHONY: verify build test bench doc-check fmt-check clean
 
-verify: build test
+verify: build test doc-check
 
 build:
 	$(CARGO) build --release
@@ -16,6 +16,12 @@ test:
 # (see BENCH.md for how to read both).
 bench:
 	$(CARGO) bench --bench perf_hotpath -- --json
+
+# Rustdoc must build clean: broken intra-doc links and malformed docs are
+# errors, not warnings (the module docs double as the architecture docs —
+# see ARCHITECTURE.md).
+doc-check:
+	RUSTDOCFLAGS="-D warnings" $(CARGO) doc --no-deps --quiet
 
 fmt-check:
 	$(CARGO) fmt --all --check

@@ -21,8 +21,10 @@ use adaq::quant::{fake_quant_into, Allocator, LayerStats, QuantRange};
 use adaq::report::{markdown_table, Align};
 use adaq::rng::{fill_normal, Pcg32};
 use adaq::runtime::{Backend, CpuBackend};
-use adaq::tensor::{matmul_reference, matmul_sparse_lhs, matmul_threaded, Tensor};
-use adaq::util::Timer;
+use adaq::tensor::{
+    gemm_i8_packed, matmul_reference, matmul_sparse_lhs, matmul_threaded, pack_i8, Tensor,
+};
+use adaq::util::{Scratch, Timer};
 
 fn time_n<F: FnMut()>(n: usize, mut f: F) -> f64 {
     // warmup
@@ -134,6 +136,42 @@ fn main() {
     }
     json_fields.push(("gemm_512", gemm_json));
 
+    // ---- int8 GEMM 512³: the integer serving kernel ----
+    {
+        let dim = 512usize;
+        let mut rng = Pcg32::new(17);
+        let a: Vec<i8> = (0..dim * dim).map(|_| (rng.next_u32() >> 24) as u8 as i8).collect();
+        let b: Vec<i8> = (0..dim * dim).map(|_| (rng.next_u32() >> 24) as u8 as i8).collect();
+        // weights are packed once per bit-vector on the serve path, so
+        // measure the steady-state (pre-packed) kernel
+        let packed = pack_i8(&b, dim, dim);
+        let mut out = vec![0i32; dim * dim];
+        let one_s = time_n(3, || gemm_i8_packed(&a, &packed, dim, &mut out, 1));
+        let mt_s = time_n(5, || gemm_i8_packed(&a, &packed, dim, &mut out, 0));
+        let gops = |s: f64| 2.0 * (dim * dim * dim) as f64 / s / 1e9;
+        let threads = std::thread::available_parallelism().map_or(1, |v| v.get()).min(16);
+        rows.push(vec![
+            format!("int8 GEMM {dim}³ packed 1 thread"),
+            format!("{:.1} ms", one_s * 1e3),
+            format!("{:.2} GOP/s", gops(one_s)),
+        ]);
+        rows.push(vec![
+            format!("int8 GEMM {dim}³ packed {threads} threads"),
+            format!("{:.1} ms", mt_s * 1e3),
+            format!("{:.2} GOP/s", gops(mt_s)),
+        ]);
+        json_fields.push((
+            "gemm_512_int8",
+            Json::obj(vec![
+                ("dim", Json::Num(dim as f64)),
+                ("packed_1t_ms", Json::Num(one_s * 1e3)),
+                ("packed_mt_ms", Json::Num(mt_s * 1e3)),
+                ("gops_mt", Json::Num(gops(mt_s))),
+                ("threads", Json::Num(threads as f64)),
+            ]),
+        ));
+    }
+
     // ---- sparse-LHS skip loop vs dense blocked kernel ----
     {
         let mut rng = Pcg32::new(11);
@@ -215,6 +253,65 @@ fn main() {
             ]));
         }
         json_fields.push(("eval_scaling", Json::Arr(scaling)));
+    }
+
+    // ---- batch-1 serving: cached GraphPlan vs per-request rebuild ----
+    {
+        let mut rng = Pcg32::new(19);
+        let params = demo_params(&mut rng);
+        let ds = Dataset::generate(64, 20260731);
+        let x = ds.batch(0, 1).unwrap();
+        let bits = vec![8.0f32; 3];
+        let manifest = demo_manifest();
+
+        // PR-1 behavior: the executor analysis (use counts, fusion
+        // tables) was rebuilt per request; quantized params were cached.
+        let qparams: Vec<Tensor> =
+            params.iter().map(|p| adaq::quant::fake_quant(p, 8.0)).collect();
+        let qrefs: Vec<&Tensor> = qparams.iter().collect();
+        let mut scratch = Scratch::new();
+        let rebuild_s = time_n(500, || {
+            let exec = GraphExecutor::new(&manifest);
+            let _ = exec.forward_with(&x, &qrefs, &mut scratch).unwrap();
+        });
+
+        // this PR: the plan is computed once in CpuBackend::new
+        let be = CpuBackend::new(demo_manifest(), params.clone(), vec![x.clone()]).unwrap();
+        let cached_s = time_n(500, || {
+            let _ = be.qforward_one(&x, &bits).unwrap();
+        });
+
+        // and the integer path on top of the cached plan
+        let be8 = CpuBackend::new(demo_manifest(), params.clone(), vec![x.clone()])
+            .unwrap()
+            .with_int8_serving(true);
+        let int8_s = time_n(500, || {
+            let _ = be8.qforward_one(&x, &bits).unwrap();
+        });
+
+        rows.push(vec![
+            "serve b1 rebuild/request (PR1)".into(),
+            format!("{:.3} ms", rebuild_s * 1e3),
+            "GraphExecutor analysis rebuilt per request".into(),
+        ]);
+        rows.push(vec![
+            "serve b1 cached GraphPlan".into(),
+            format!("{:.3} ms", cached_s * 1e3),
+            format!("{:.2}x vs rebuild", rebuild_s / cached_s),
+        ]);
+        rows.push(vec![
+            "serve b1 int8 path".into(),
+            format!("{:.3} ms", int8_s * 1e3),
+            format!("{:.2}x vs rebuild", rebuild_s / int8_s),
+        ]);
+        json_fields.push((
+            "serve_batch1",
+            Json::obj(vec![
+                ("rebuild_ms", Json::Num(rebuild_s * 1e3)),
+                ("cached_plan_ms", Json::Num(cached_s * 1e3)),
+                ("int8_ms", Json::Num(int8_s * 1e3)),
+            ]),
+        ));
     }
 
     // ---- host-side quantizer throughput ----

@@ -6,7 +6,7 @@
 use crate::dataset::Dataset;
 use crate::tensor::Tensor;
 use crate::util::Timer;
-use crate::Result;
+use crate::{Error, Result};
 
 use super::Session;
 
@@ -28,10 +28,29 @@ impl ServeStats {
 }
 
 /// Serve `n` single-image requests drawn round-robin from `data` through
-/// the quantized model (`bits` per layer). The session must have been
-/// opened with batch size 1.
+/// the quantized model (`bits` per layer).
+///
+/// # Batch-1 contract
+///
+/// The session **must** have been opened with batch size 1: each request
+/// is a single image, and latency percentiles are per-request. Sessions
+/// opened with a larger batch return `Err` (this is a misuse of the API,
+/// not a panic — callers like the CLI surface it as a normal error).
+/// Whether requests run f32 fake-quant or the integer int8 path is the
+/// session's backend configuration (see
+/// [`Session::from_parts_int8`](super::Session::from_parts_int8)); the
+/// loop itself is execution-mode agnostic.
 pub fn serve_loop(session: &Session, data: &Dataset, bits: &[f32], n: usize) -> Result<ServeStats> {
-    assert_eq!(session.batch_size(), 1, "serve loop wants batch-1 artifacts");
+    if session.batch_size() != 1 {
+        return Err(Error::Model(format!(
+            "serve_loop wants a batch-1 session, got batch size {} — open the \
+             session with batch 1 for serving",
+            session.batch_size()
+        )));
+    }
+    if n == 0 || data.is_empty() {
+        return Err(Error::Model("serve_loop wants n > 0 requests and a non-empty dataset".into()));
+    }
     let mut latencies = Vec::with_capacity(n);
     let mut correct = 0usize;
     // warm the backend's quantized-parameter state outside the timed

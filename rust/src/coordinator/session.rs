@@ -78,6 +78,23 @@ impl Session {
         Session::with_backend(artifacts, test, batch, Box::new(backend))
     }
 
+    /// [`Session::from_parts`] with the CPU backend's **integer serving
+    /// mode** enabled: [`Session::qforward_once`] (and thus
+    /// `serve_loop`) answers requests through the int8×int8→i32 GEMM,
+    /// with weights encoded once per bits vector. Full-dataset
+    /// evaluation paths keep their exact f32 fake-quant semantics, so
+    /// the cached baseline is identical to a [`Session::from_parts`]
+    /// session's.
+    pub fn from_parts_int8(
+        artifacts: ModelArtifacts,
+        test: Dataset,
+        batch: usize,
+    ) -> Result<Session> {
+        let backend =
+            CpuBackend::from_artifacts(&artifacts, &test, batch)?.with_int8_serving(true);
+        Session::with_backend(artifacts, test, batch, Box::new(backend))
+    }
+
     fn with_backend(
         artifacts: ModelArtifacts,
         test: Dataset,

@@ -13,16 +13,18 @@
 //! across batches) executes everything with zero external dependencies;
 //! with the `pjrt` cargo feature, JAX models (L2) calling Pallas kernels
 //! (L1) lowered at build time to HLO-text artifacts run through the PJRT
-//! C API instead.
+//! C API instead. Deployment-style serving additionally has a real
+//! **integer path** (int8×int8→i32 GEMM with per-layer requantization —
+//! see ARCHITECTURE.md and [`runtime::CpuBackend::with_int8_serving`]).
 //!
 //! Module map:
 //!
 //! | module | role |
 //! |---|---|
-//! | [`tensor`] | minimal dense f32/i32 tensors |
+//! | [`tensor`] | minimal dense f32/i32 tensors + the blocked f32 and int8×int8→i32 GEMMs |
 //! | [`rng`] | PCG32/PCG64 deterministic RNG (bit-compatible with `python/compile/pcg.py`) |
 //! | [`io`] | TNSR container, JSON, CSV |
-//! | [`nn`] | pure-Rust CNN inference substrate (cross-validation oracle + CPU baseline) |
+//! | [`nn`] | pure-Rust CNN inference substrate: `GraphPlan` analysis + f32 and int8 forward paths |
 //! | [`model`] | manifest, weight store, size accounting |
 //! | [`dataset`] | procedural shapes dataset: loader + bit-identical Rust generator |
 //! | [`runtime`] | pluggable execution backends: CPU (default) and PJRT (`pjrt` feature) |

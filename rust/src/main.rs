@@ -34,7 +34,7 @@ USAGE: adaq <command> [--flags]
   allocate   --model M [--allocator adaptive|sqnr|equal] [--b1 F] [--conv-only]
   evaluate   --model M (--bits 8,6,4,… | --allocator A --b1 F) [--conv-only]
   sweep      --model M [--allocators a,b,c] [--conv-only] [--out CSV-DIR]
-  serve      --model M [--bits …] [--requests N]
+  serve      --model M [--bits …] [--requests N] [--int8]
   export     --model M (--bits … | --allocator A --b1 F) [--out DIR]
   figures    [--models a,b,…] (regenerate Fig. 6/8 sweeps in-process)
   selfcheck  [--models a,b,…]
@@ -342,17 +342,26 @@ fn cmd_sweep(args: &Args) -> Result<()> {
 fn cmd_serve(args: &Args) -> Result<()> {
     let root = artifacts_dir(args);
     let model = args.req_flag("model")?;
-    let session = Session::open(&root, &model, 1)?;
+    let test = Dataset::load(&root, "test")?;
+    // --int8: answer requests through the integer (int8×int8→i32) path
+    // on the CPU backend instead of f32 fake-quant
+    let session = if args.has("int8") {
+        let artifacts = ModelArtifacts::load(&root, &model)?;
+        Session::from_parts_int8(artifacts, test.clone(), 1)?
+    } else {
+        Session::open(&root, &model, 1)?
+    };
     let nwl = session.artifacts.manifest.num_weighted_layers;
     let bits = match args.flags.get("bits") {
         Some(spec) => parse_bits(spec, nwl)?,
         None => vec![8.0; nwl],
     };
     let n = args.usize_flag("requests", 200)?;
-    let test = Dataset::load(&root, "test")?;
     let stats = serve_loop(&session, &test, &bits, n)?;
     println!(
-        "{n} requests: acc {:.4}, p50 {:.2} ms, p99 {:.2} ms, {:.1} req/s",
+        "{n} requests [{}{}]: acc {:.4}, p50 {:.2} ms, p99 {:.2} ms, {:.1} req/s",
+        session.backend_name(),
+        if args.has("int8") { " int8" } else { "" },
         stats.accuracy(),
         stats.p50_ms,
         stats.p99_ms,

@@ -36,8 +36,10 @@ impl ExportSummary {
     }
 }
 
-/// Pack b-bit indices little-endian into u32 words.
-fn pack_indices(indices: &[u32], bits: u32) -> Vec<i32> {
+/// Pack b-bit indices little-endian into u32 words (stored as i32 for the
+/// TNSR container). Public so tests and tooling can rebuild containers
+/// in memory; [`unpack_indices`] is the inverse.
+pub fn pack_indices(indices: &[u32], bits: u32) -> Vec<i32> {
     let mut words: Vec<u32> = Vec::with_capacity((indices.len() * bits as usize + 31) / 32);
     let mut acc = 0u64;
     let mut nbits = 0u32;
@@ -56,8 +58,11 @@ fn pack_indices(indices: &[u32], bits: u32) -> Vec<i32> {
     words.into_iter().map(|w| w as i32).collect()
 }
 
-/// Unpack b-bit indices from u32 words.
-fn unpack_indices(words: &[i32], bits: u32, count: usize) -> Vec<u32> {
+/// Unpack b-bit indices from u32 words — the container-side inverse of
+/// [`pack_indices`]. The integer serving path uses this to turn an
+/// exported layer straight into signed int8 codes without a dequantize →
+/// re-quantize round trip (see `nn::QuantWeight::from_packed_words`).
+pub fn unpack_indices(words: &[i32], bits: u32, count: usize) -> Vec<u32> {
     let mut out = Vec::with_capacity(count);
     let mask = (1u64 << bits) - 1;
     let mut acc = 0u64;
@@ -76,8 +81,10 @@ fn unpack_indices(words: &[i32], bits: u32, count: usize) -> Vec<u32> {
     out
 }
 
-/// Quantize a tensor into (indices, range) at integer `bits`.
-fn quantize_indices(w: &Tensor, bits: u32) -> (Vec<u32>, QuantRange) {
+/// Quantize a tensor into (bin indices, range) at integer `bits` — the
+/// encode half of the container format ([`dequantize`] and
+/// `nn::QuantWeight::from_packed_words` are the two decode halves).
+pub fn quantize_indices(w: &Tensor, bits: u32) -> (Vec<u32>, QuantRange) {
     let range = QuantRange::of(w);
     let span = range.span();
     let nlev = (1u64 << bits) as f32;

@@ -3,7 +3,10 @@
 
 pub mod export;
 
-pub use export::{dequantize, export_quantized, ExportSummary, ExportedLayer};
+pub use export::{
+    dequantize, export_quantized, pack_indices, quantize_indices, unpack_indices, ExportSummary,
+    ExportedLayer,
+};
 
 use std::collections::BTreeMap;
 use std::path::{Path, PathBuf};

@@ -5,201 +5,358 @@
 //! held to agreement with the PJRT execution of the lowered HLO (see
 //! `rust/tests/pjrt_cross_check.rs`).
 //!
-//! Perf: construction analyzes the graph once — every conv/dense whose
-//! output feeds exactly one ReLU is *deferred* and executed fused
-//! (conv→bias→relu in a single write-back pass), the input batch is read
-//! by reference (never copied into the activation map), and activations
-//! are recycled into the caller's [`Scratch`] arena the moment their
-//! last consumer has run — so in steady state every large buffer of a
-//! forward pass comes from the arena instead of the allocator.
+//! Perf: all graph analysis lives in [`GraphPlan`] — an **owned**,
+//! index-resolved execution plan built once per model: layer kinds and
+//! input edges resolved to indices (no name lookups on the hot path),
+//! use counts for activation recycling, and the fusion table that defers
+//! every conv/dense whose output feeds exactly one ReLU into a fused
+//! conv→bias→relu pass. [`crate::runtime::CpuBackend`] computes the plan
+//! once at construction and reuses it for every request — batch-1
+//! serving no longer rebuilds use counts and fusion tables per call.
+//! During a forward pass the input batch is read by reference (never
+//! copied into the activation table) and activations are recycled into
+//! the caller's [`Scratch`] arena the moment their last consumer has run.
+//!
+//! The plan also carries the **integer serving mode**:
+//! [`GraphPlan::forward_int8_with`] executes conv/dense layers whose
+//! weights were pre-encoded to [`QuantWeight`] through the
+//! int8×int8→i32 GEMM (activations quantized per request), falling back
+//! to the f32 path for everything else.
 
-use std::collections::HashMap;
-
-use crate::model::{Layer, LayerKind, Manifest};
+use crate::model::{LayerKind, Manifest};
 use crate::tensor::Tensor;
 use crate::util::Scratch;
 use crate::{Error, Result};
 
-use super::ops;
+use super::ops::{self, QuantWeight};
 
-/// Executes one manifest graph; parameters are passed per call so the
-/// coordinator can feed perturbed / quantized weights.
-pub struct GraphExecutor<'m> {
-    manifest: &'m Manifest,
-    /// How many times each activation is read (graph inputs + final output).
-    uses: HashMap<&'m str, usize>,
+/// Where a layer reads one of its operands from.
+#[derive(Clone, Debug)]
+enum Src {
+    /// The graph input batch (the caller's `x`).
+    Input,
+    /// The output of another layer, by index into the plan.
+    Layer(usize),
+    /// A name that did not resolve at plan time — surfaces as an error
+    /// if (and only if) the layer is actually executed.
+    Missing(String),
+}
+
+/// The analysis side of graph execution, split out of the interpreter so
+/// it can be computed **once** per model and shared across requests:
+/// index-resolved dataflow edges, activation use counts, the
+/// conv/dense→ReLU fusion table, and 0-based parameter slots.
+///
+/// A plan is self-contained (it copies the layer kinds and names out of
+/// the manifest), so backends can own a `GraphPlan` alongside their
+/// `Manifest` without self-referential borrows, and worker threads can
+/// share it immutably.
+pub struct GraphPlan {
+    names: Vec<String>,
+    kinds: Vec<LayerKind>,
+    srcs: Vec<Vec<Src>>,
+    /// 0-based (weight, bias) positions in the params slice, if weighted.
+    param_slots: Vec<Option<(usize, usize)>>,
+    /// How many times each layer's activation is read (consumers, +1 if
+    /// it is the graph output).
+    uses: Vec<usize>,
+    output: Option<usize>,
+    output_name: String,
     /// ReLU layer index → index of the conv/dense producer fused into it.
     fused_producer: Vec<Option<usize>>,
     /// Producer layers whose evaluation is deferred into their sole ReLU.
     deferred: Vec<bool>,
 }
 
-impl<'m> GraphExecutor<'m> {
-    pub fn new(manifest: &'m Manifest) -> Self {
+impl GraphPlan {
+    /// Analyze a manifest: resolve names to indices, count uses, build
+    /// the fusion table. Unresolvable references are recorded and only
+    /// error when the affected layer executes.
+    pub fn new(manifest: &Manifest) -> GraphPlan {
         let layers = &manifest.layers;
-        let mut uses: HashMap<&'m str, usize> = HashMap::new();
-        for layer in layers {
-            for inp in &layer.inputs {
-                *uses.entry(inp.as_str()).or_insert(0) += 1;
-            }
-        }
-        *uses.entry(manifest.output.as_str()).or_insert(0) += 1;
+        let index_of = |name: &str| layers.iter().position(|l| l.name == name);
 
-        let index_of: HashMap<&str, usize> = layers
-            .iter()
-            .enumerate()
-            .map(|(i, l)| (l.name.as_str(), i))
-            .collect();
+        let mut srcs = Vec::with_capacity(layers.len());
+        let mut uses = vec![0usize; layers.len()];
+        for layer in layers {
+            let mut ls = Vec::with_capacity(layer.inputs.len());
+            for inp in &layer.inputs {
+                if inp == "input" {
+                    ls.push(Src::Input);
+                } else if let Some(j) = index_of(inp) {
+                    uses[j] += 1;
+                    ls.push(Src::Layer(j));
+                } else {
+                    ls.push(Src::Missing(inp.clone()));
+                }
+            }
+            srcs.push(ls);
+        }
+        let output = index_of(&manifest.output);
+        if let Some(o) = output {
+            uses[o] += 1;
+        }
+
         let mut fused_producer = vec![None; layers.len()];
         let mut deferred = vec![false; layers.len()];
         for (i, layer) in layers.iter().enumerate() {
             if !matches!(layer.kind, LayerKind::Relu) {
                 continue;
             }
-            let inp = match layer.inputs.first() {
-                Some(s) => s.as_str(),
-                None => continue,
-            };
-            if let Some(&j) = index_of.get(inp) {
-                let prod = &layers[j];
+            if let Some(Src::Layer(j)) = srcs[i].first() {
+                let j = *j;
                 let fusable =
-                    matches!(prod.kind, LayerKind::Conv { .. } | LayerKind::Dense { .. });
-                if fusable && uses.get(inp) == Some(&1) && manifest.output != prod.name {
+                    matches!(layers[j].kind, LayerKind::Conv { .. } | LayerKind::Dense { .. });
+                if fusable && uses[j] == 1 && output != Some(j) {
                     fused_producer[i] = Some(j);
                     deferred[j] = true;
                 }
             }
         }
-        GraphExecutor { manifest, uses, fused_producer, deferred }
+
+        // param_idx counts executable slots where slot 0 is the input
+        // batch; the params slice starts at slot 1 → store 0-based.
+        let param_slots = layers
+            .iter()
+            .map(|l| match l.param_idx {
+                Some((w, b)) if w >= 1 && b >= 1 => Some((w - 1, b - 1)),
+                _ => None,
+            })
+            .collect();
+
+        GraphPlan {
+            names: layers.iter().map(|l| l.name.clone()).collect(),
+            kinds: layers.iter().map(|l| l.kind.clone()).collect(),
+            srcs,
+            param_slots,
+            uses,
+            output,
+            output_name: manifest.output.clone(),
+            fused_producer,
+            deferred,
+        }
     }
 
-    /// Forward pass: `params` is the executable-order parameter list
-    /// [w0, b0, w1, b1, …]; returns logits `[n, num_classes]`.
+    /// Number of layers in the plan.
+    pub fn len(&self) -> usize {
+        self.kinds.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.kinds.is_empty()
+    }
+
+    /// Whether layer `i` is executed fused into its sole ReLU consumer.
+    pub fn is_deferred(&self, i: usize) -> bool {
+        self.deferred[i]
+    }
+
+    /// The conv/dense producer fused into ReLU layer `i`, if any.
+    pub fn fused_producer_of(&self, i: usize) -> Option<usize> {
+        self.fused_producer[i]
+    }
+
+    /// Forward pass with owned parameters (see [`GraphPlan::forward_with`]).
     pub fn forward(&self, x: &Tensor, params: &[Tensor]) -> Result<Tensor> {
         let refs: Vec<&Tensor> = params.iter().collect();
         self.forward_with(x, &refs, &mut Scratch::new())
     }
 
-    /// [`GraphExecutor::forward`] with borrowed parameters and a reusable
-    /// scratch arena — the allocation-free hot path the
+    /// Forward pass: `params` is the executable-order parameter list
+    /// [w0, b0, w1, b1, …] by reference, `scratch` the reusable arena —
+    /// the allocation-free hot path the
     /// [`CpuBackend`](crate::runtime::CpuBackend) eval loop drives.
+    /// Returns logits `[n, num_classes]`.
     pub fn forward_with(
         &self,
         x: &Tensor,
         params: &[&Tensor],
         scratch: &mut Scratch,
     ) -> Result<Tensor> {
-        let layers = &self.manifest.layers;
-        // the graph input is read by reference — never cloned into the
-        // activation map (it is the one tensor the caller owns)
-        let mut acts: HashMap<&str, Tensor> = HashMap::new();
+        self.run(x, params, None, scratch)
+    }
+
+    /// [`GraphPlan::forward_with`] in **integer serving mode**: conv and
+    /// dense layers with a pre-encoded [`QuantWeight`] in `qweights`
+    /// (indexed by layer) run through the int8×int8→i32 GEMM with
+    /// per-request activation quantization; `None` entries (and all
+    /// other layer kinds) take the f32 path with whatever `params`
+    /// holds. Biases always come from `params` (they ship fp32).
+    pub fn forward_int8_with(
+        &self,
+        x: &Tensor,
+        params: &[&Tensor],
+        qweights: &[Option<QuantWeight>],
+        scratch: &mut Scratch,
+    ) -> Result<Tensor> {
+        if qweights.len() != self.len() {
+            return Err(Error::Model(format!(
+                "int8 weight table has {} entries, plan has {} layers",
+                qweights.len(),
+                self.len()
+            )));
+        }
+        self.run(x, params, Some(qweights), scratch)
+    }
+
+    fn run(
+        &self,
+        x: &Tensor,
+        params: &[&Tensor],
+        qweights: Option<&[Option<QuantWeight>]>,
+        scratch: &mut Scratch,
+    ) -> Result<Tensor> {
+        let mut acts: Vec<Option<Tensor>> = (0..self.len()).map(|_| None).collect();
         let mut remaining = self.uses.clone();
-        for (i, layer) in layers.iter().enumerate() {
+        for i in 0..self.len() {
             if self.deferred[i] {
                 continue; // executed fused, at its ReLU consumer
             }
             let out = match self.fused_producer[i] {
                 Some(j) => {
-                    let prod = &layers[j];
-                    let xin = self.input(prod, &acts, x, 0)?;
-                    let (w, b) = self.params_of(prod, params)?;
-                    let fused = match &prod.kind {
-                        LayerKind::Conv { stride, pad, .. } => {
-                            ops::conv2d_fused(xin, w, b, *stride, *pad, true, scratch)?
-                        }
-                        LayerKind::Dense { .. } => ops::dense_fused(xin, w, b, true, scratch)?,
-                        _ => unreachable!("only conv/dense producers are fused"),
-                    };
-                    release(&mut acts, &mut remaining, prod.inputs[0].as_str(), scratch);
+                    let xin = self.input(j, &acts, x, 0)?;
+                    let fused = self.eval_weighted(j, xin, params, qweights, true, scratch)?;
+                    self.release(j, 0, &mut acts, &mut remaining, scratch);
                     fused
                 }
                 None => {
-                    let out = self.eval_layer(layer, &acts, x, params, scratch)?;
-                    for name in &layer.inputs {
-                        release(&mut acts, &mut remaining, name.as_str(), scratch);
+                    let out = self.eval_layer(i, &acts, x, params, qweights, scratch)?;
+                    for idx in 0..self.srcs[i].len() {
+                        self.release(i, idx, &mut acts, &mut remaining, scratch);
                     }
                     out
                 }
             };
-            acts.insert(layer.name.as_str(), out);
+            acts[i] = Some(out);
         }
-        acts.remove(self.manifest.output.as_str())
-            .ok_or_else(|| Error::Model(format!("output layer {} missing", self.manifest.output)))
+        let o = self
+            .output
+            .ok_or_else(|| Error::Model(format!("output layer {} missing", self.output_name)))?;
+        acts[o]
+            .take()
+            .ok_or_else(|| Error::Model(format!("output layer {} not computed", self.output_name)))
     }
 
+    /// Resolve operand `idx` of layer `i` against the live activations.
     fn input<'a>(
         &self,
-        layer: &Layer,
-        acts: &'a HashMap<&str, Tensor>,
+        i: usize,
+        acts: &'a [Option<Tensor>],
         x: &'a Tensor,
         idx: usize,
     ) -> Result<&'a Tensor> {
-        let name = layer
-            .inputs
-            .get(idx)
-            .ok_or_else(|| Error::Model(format!("layer {} missing input {idx}", layer.name)))?;
-        if name == "input" {
-            return Ok(x);
+        match self.srcs[i].get(idx) {
+            Some(Src::Input) => Ok(x),
+            Some(Src::Layer(j)) => acts[*j].as_ref().ok_or_else(|| {
+                Error::Model(format!(
+                    "layer {}: input {} not computed",
+                    self.names[i], self.names[*j]
+                ))
+            }),
+            Some(Src::Missing(name)) => {
+                Err(Error::Model(format!("layer {}: input {name} not computed", self.names[i])))
+            }
+            None => Err(Error::Model(format!("layer {} missing input {idx}", self.names[i]))),
         }
-        acts.get(name.as_str())
-            .ok_or_else(|| Error::Model(format!("layer {}: input {name} not computed", layer.name)))
     }
 
-    fn params_of<'a>(&self, layer: &Layer, params: &'a [&'a Tensor]) -> Result<(&'a Tensor, &'a Tensor)> {
-        let (wi, bi) = layer
-            .param_idx
-            .ok_or_else(|| Error::Model(format!("layer {} has no params", layer.name)))?;
-        // param_idx counts the executable slots where slot 0 is the input
-        // batch; the params slice starts at slot 1.
+    /// Decrement the remaining-use count of operand `idx` of layer `i`;
+    /// on the last consumer, recycle the activation into `scratch`.
+    fn release(
+        &self,
+        i: usize,
+        idx: usize,
+        acts: &mut [Option<Tensor>],
+        remaining: &mut [usize],
+        scratch: &mut Scratch,
+    ) {
+        if let Some(Src::Layer(j)) = self.srcs[i].get(idx) {
+            let j = *j;
+            remaining[j] = remaining[j].saturating_sub(1);
+            if remaining[j] == 0 {
+                if let Some(t) = acts[j].take() {
+                    scratch.put(t.into_vec());
+                }
+            }
+        }
+    }
+
+    fn params_of<'a>(&self, i: usize, params: &'a [&'a Tensor]) -> Result<(&'a Tensor, &'a Tensor)> {
+        let (wi, bi) = self
+            .param_slots[i]
+            .ok_or_else(|| Error::Model(format!("layer {} has no params", self.names[i])))?;
         let w = params
-            .get(wi - 1)
+            .get(wi)
             .copied()
-            .ok_or_else(|| Error::Model(format!("param {wi} out of range")))?;
+            .ok_or_else(|| Error::Model(format!("param {} out of range", wi + 1)))?;
         let b = params
-            .get(bi - 1)
+            .get(bi)
             .copied()
-            .ok_or_else(|| Error::Model(format!("param {bi} out of range")))?;
+            .ok_or_else(|| Error::Model(format!("param {} out of range", bi + 1)))?;
         Ok((w, b))
+    }
+
+    /// Evaluate weighted layer `i` (conv or dense) on `xin`, taking the
+    /// int8 path when an encoded weight is available for it.
+    fn eval_weighted(
+        &self,
+        i: usize,
+        xin: &Tensor,
+        params: &[&Tensor],
+        qweights: Option<&[Option<QuantWeight>]>,
+        relu: bool,
+        scratch: &mut Scratch,
+    ) -> Result<Tensor> {
+        let (w, b) = self.params_of(i, params)?;
+        let qw = qweights.and_then(|q| q[i].as_ref());
+        match (&self.kinds[i], qw) {
+            (LayerKind::Conv { k, stride, pad, .. }, Some(qw)) => {
+                ops::conv2d_int8_fused(xin, qw, b, *k, *stride, *pad, relu, scratch)
+            }
+            (LayerKind::Conv { stride, pad, .. }, None) => {
+                ops::conv2d_fused(xin, w, b, *stride, *pad, relu, scratch)
+            }
+            (LayerKind::Dense { .. }, Some(qw)) => {
+                ops::dense_int8_fused(xin, qw, b, relu, scratch)
+            }
+            (LayerKind::Dense { .. }, None) => ops::dense_fused(xin, w, b, relu, scratch),
+            _ => unreachable!("only conv/dense layers carry weights"),
+        }
     }
 
     fn eval_layer(
         &self,
-        layer: &Layer,
-        acts: &HashMap<&str, Tensor>,
+        i: usize,
+        acts: &[Option<Tensor>],
         x: &Tensor,
         params: &[&Tensor],
+        qweights: Option<&[Option<QuantWeight>]>,
         scratch: &mut Scratch,
     ) -> Result<Tensor> {
-        match &layer.kind {
-            LayerKind::Conv { stride, pad, .. } => {
-                let xin = self.input(layer, acts, x, 0)?;
-                let (w, b) = self.params_of(layer, params)?;
-                ops::conv2d_fused(xin, w, b, *stride, *pad, false, scratch)
+        match &self.kinds[i] {
+            LayerKind::Conv { .. } | LayerKind::Dense { .. } => {
+                let xin = self.input(i, acts, x, 0)?;
+                self.eval_weighted(i, xin, params, qweights, false, scratch)
             }
-            LayerKind::Dense { .. } => {
-                let xin = self.input(layer, acts, x, 0)?;
-                let (w, b) = self.params_of(layer, params)?;
-                ops::dense_fused(xin, w, b, false, scratch)
-            }
-            LayerKind::Relu => Ok(ops::relu_with(self.input(layer, acts, x, 0)?, scratch)),
+            LayerKind::Relu => Ok(ops::relu_with(self.input(i, acts, x, 0)?, scratch)),
             LayerKind::MaxPool { k, stride, pad } => {
-                ops::maxpool(self.input(layer, acts, x, 0)?, *k, *stride, *pad)
+                ops::maxpool(self.input(i, acts, x, 0)?, *k, *stride, *pad)
             }
-            LayerKind::Gap => ops::avgpool_global(self.input(layer, acts, x, 0)?),
+            LayerKind::Gap => ops::avgpool_global(self.input(i, acts, x, 0)?),
             LayerKind::Flatten => {
-                let xin = self.input(layer, acts, x, 0)?;
+                let xin = self.input(i, acts, x, 0)?;
                 let n = xin.shape()[0];
                 let rest: usize = xin.shape()[1..].iter().product();
                 xin.clone().reshape(&[n, rest])
             }
             LayerKind::Add => {
-                let a = self.input(layer, acts, x, 0)?;
-                let b = self.input(layer, acts, x, 1)?;
+                let a = self.input(i, acts, x, 0)?;
+                let b = self.input(i, acts, x, 1)?;
                 a.add(b)
             }
             LayerKind::Concat => {
-                let parts: Vec<&Tensor> = (0..layer.inputs.len())
-                    .map(|i| self.input(layer, acts, x, i))
+                let parts: Vec<&Tensor> = (0..self.srcs[i].len())
+                    .map(|idx| self.input(i, acts, x, idx))
                     .collect::<Result<_>>()?;
                 concat_channels(&parts)
             }
@@ -207,21 +364,47 @@ impl<'m> GraphExecutor<'m> {
     }
 }
 
-/// Decrement an activation's remaining-use count; on the last consumer,
-/// drop it from the live set and recycle its buffer into `scratch`.
-fn release(
-    acts: &mut HashMap<&str, Tensor>,
-    remaining: &mut HashMap<&str, usize>,
-    name: &str,
-    scratch: &mut Scratch,
-) {
-    if let Some(cnt) = remaining.get_mut(name) {
-        *cnt = cnt.saturating_sub(1);
-        if *cnt == 0 {
-            if let Some(t) = acts.remove(name) {
-                scratch.put(t.into_vec());
-            }
-        }
+/// Executes one manifest graph; parameters are passed per call so the
+/// coordinator can feed perturbed / quantized weights.
+///
+/// This is a thin convenience wrapper that builds (and owns) a
+/// [`GraphPlan`] — ad-hoc callers construct one per model and forward
+/// through it; the serve hot path holds the plan directly (see
+/// [`CpuBackend`](crate::runtime::CpuBackend)).
+pub struct GraphExecutor {
+    plan: GraphPlan,
+}
+
+impl GraphExecutor {
+    pub fn new(manifest: &Manifest) -> Self {
+        GraphExecutor { plan: GraphPlan::new(manifest) }
+    }
+
+    /// The underlying execution plan.
+    pub fn plan(&self) -> &GraphPlan {
+        &self.plan
+    }
+
+    /// Take ownership of the plan (how backends cache it).
+    pub fn into_plan(self) -> GraphPlan {
+        self.plan
+    }
+
+    /// Forward pass: `params` is the executable-order parameter list
+    /// [w0, b0, w1, b1, …]; returns logits `[n, num_classes]`.
+    pub fn forward(&self, x: &Tensor, params: &[Tensor]) -> Result<Tensor> {
+        self.plan.forward(x, params)
+    }
+
+    /// [`GraphExecutor::forward`] with borrowed parameters and a reusable
+    /// scratch arena.
+    pub fn forward_with(
+        &self,
+        x: &Tensor,
+        params: &[&Tensor],
+        scratch: &mut Scratch,
+    ) -> Result<Tensor> {
+        self.plan.forward_with(x, params, scratch)
     }
 }
 
@@ -292,8 +475,8 @@ mod tests {
         let m = toy_manifest();
         let exec = GraphExecutor::new(&m);
         // conv1 feeds exactly one relu → executed fused
-        assert!(exec.deferred[0], "conv1 should be deferred into relu1");
-        assert_eq!(exec.fused_producer[1], Some(0));
+        assert!(exec.plan().is_deferred(0), "conv1 should be deferred into relu1");
+        assert_eq!(exec.plan().fused_producer_of(1), Some(0));
         let x = Tensor::from_vec(&[1, 4, 4, 1], (0..16).map(|v| v as f32 / 16.0).collect()).unwrap();
         let params = vec![
             Tensor::from_vec(&[3, 3, 1, 1], vec![0.0, 0.0, 0.0, 0.0, 1.0, 0.0, 0.0, 0.0, 0.0])
@@ -331,8 +514,8 @@ mod tests {
         )
         .unwrap();
         let exec = GraphExecutor::new(&m);
-        assert!(!exec.deferred[0]);
-        assert_eq!(exec.fused_producer[1], None);
+        assert!(!exec.plan().is_deferred(0));
+        assert_eq!(exec.plan().fused_producer_of(1), None);
         let x = Tensor::from_vec(&[1, 2, 2, 1], vec![-1.0, 2.0, -3.0, 4.0]).unwrap();
         let params = vec![
             Tensor::from_vec(&[1, 1, 1, 1], vec![1.0]).unwrap(),
@@ -361,6 +544,63 @@ mod tests {
             let again = exec.forward_with(&x, &refs, &mut scratch).unwrap();
             assert_eq!(again.data(), first.data());
         }
+    }
+
+    #[test]
+    fn int8_forward_close_to_f32_on_toy_graph() {
+        use crate::rng::{fill_normal, Pcg32};
+        let m = toy_manifest();
+        let plan = GraphPlan::new(&m);
+        let mut rng = Pcg32::new(77);
+        let t = |shape: &[usize], rng: &mut Pcg32| {
+            let n: usize = shape.iter().product();
+            let mut data = vec![0f32; n];
+            fill_normal(rng, &mut data);
+            Tensor::from_vec(shape, data).unwrap()
+        };
+        let params = vec![
+            t(&[3, 3, 1, 1], &mut rng),
+            t(&[1], &mut rng),
+            t(&[4, 2], &mut rng),
+            t(&[2], &mut rng),
+        ];
+        let x = t(&[2, 4, 4, 1], &mut rng);
+        let refs: Vec<&Tensor> = params.iter().collect();
+        // encode conv1 (layer 0) and fc (layer 4) at 8 bits
+        let mut qweights: Vec<Option<QuantWeight>> = (0..plan.len()).map(|_| None).collect();
+        qweights[0] = QuantWeight::quantize(&params[0], 8.0);
+        qweights[4] = QuantWeight::quantize(&params[2], 8.0);
+        assert!(qweights[0].is_some() && qweights[4].is_some());
+        let mut scratch = Scratch::new();
+        let f32_out = plan.forward_with(&x, &refs, &mut scratch).unwrap();
+        let i8_out = plan.forward_int8_with(&x, &refs, &qweights, &mut scratch).unwrap();
+        assert_eq!(f32_out.shape(), i8_out.shape());
+        // 8-bit weights + 8-bit activations: small relative error
+        let scale = f32_out.data().iter().fold(0f32, |m, v| m.max(v.abs()));
+        for (a, b) in f32_out.data().iter().zip(i8_out.data()) {
+            assert!((a - b).abs() <= 0.05 * (1.0 + scale), "{a} vs {b}");
+        }
+        // repeated int8 passes through the same scratch are deterministic
+        let again = plan.forward_int8_with(&x, &refs, &qweights, &mut scratch).unwrap();
+        assert_eq!(again.data(), i8_out.data());
+    }
+
+    #[test]
+    fn int8_table_length_checked() {
+        let m = toy_manifest();
+        let plan = GraphPlan::new(&m);
+        let x = Tensor::zeros(&[1, 4, 4, 1]);
+        let params: Vec<Tensor> = vec![
+            Tensor::zeros(&[3, 3, 1, 1]),
+            Tensor::zeros(&[1]),
+            Tensor::zeros(&[4, 2]),
+            Tensor::zeros(&[2]),
+        ];
+        let refs: Vec<&Tensor> = params.iter().collect();
+        let short: Vec<Option<QuantWeight>> = vec![None; 2];
+        assert!(plan
+            .forward_int8_with(&x, &refs, &short, &mut Scratch::new())
+            .is_err());
     }
 
     #[test]

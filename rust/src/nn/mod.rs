@@ -8,8 +8,20 @@
 //! 2. **the CPU compute engine** — [`crate::runtime::CpuBackend`] runs
 //!    every experiment through this substrate when PJRT is absent; the
 //!    blocked GEMM in [`crate::tensor`], the conv→bias→relu fusion in
-//!    [`GraphExecutor`], and the [`crate::util::Scratch`] recycling make
+//!    [`GraphPlan`], and the [`crate::util::Scratch`] recycling make
 //!    it the calibration hot path.
+//!
+//! Execution is split into an **analysis** half and an **interpreter**
+//! half: [`GraphPlan`] resolves names to indices, counts activation
+//! uses, and builds the fusion table once per model; forward passes then
+//! run off the plan with no per-request analysis. [`GraphExecutor`] is
+//! the thin plan-owning wrapper for ad-hoc callers.
+//!
+//! The **integer serving path** lives here too: [`QuantWeight`] encodes
+//! a layer's weights as packed signed-int8 codes once per bit-vector,
+//! and [`dense_int8_fused`] / [`conv2d_int8_fused`] (driven by
+//! [`GraphPlan::forward_int8_with`]) run the inner products through the
+//! int8×int8→i32 GEMM with per-request activation quantization.
 //!
 //! Layout conventions match L2 exactly: activations NHWC, conv kernels
 //! HWIO, dense weights (in, out).
@@ -17,8 +29,8 @@
 mod graph;
 mod ops;
 
-pub use graph::GraphExecutor;
+pub use graph::{GraphExecutor, GraphPlan};
 pub use ops::{
-    avgpool_global, conv2d, conv2d_fused, dense, dense_fused, im2col, im2col_with, maxpool, relu,
-    relu_with, softmax,
+    avgpool_global, conv2d, conv2d_fused, conv2d_int8_fused, dense, dense_fused,
+    dense_int8_fused, im2col, im2col_with, maxpool, relu, relu_with, softmax, QuantWeight,
 };

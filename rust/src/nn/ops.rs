@@ -5,8 +5,17 @@
 //! every intermediate from a caller-owned [`Scratch`] arena and fold the
 //! bias add (and optionally ReLU) into the GEMM write-back pass — the
 //! [`GraphExecutor`](super::GraphExecutor) hot path uses the latter.
+//!
+//! The **integer serving path** adds a third flavor: [`QuantWeight`]
+//! holds a layer's weights as packed signed-int8 codes (encoded once per
+//! bit-vector), and [`dense_int8_fused`] / [`conv2d_int8_fused`] quantize
+//! the incoming activation to 8 bits per request, run the
+//! int8×int8→i32 GEMM, and map the integer accumulators back to f32 in a
+//! single write-back sweep that also applies the per-layer scale +
+//! zero-point correction terms, the bias, and (optionally) ReLU.
 
-use crate::tensor::{matmul_into, Tensor};
+use crate::quant::{AffineI8, QuantRange};
+use crate::tensor::{gemm_i8_packed, matmul_into, pack_i8, PackedI8, Tensor};
 use crate::util::Scratch;
 use crate::{Error, Result};
 
@@ -169,6 +178,314 @@ fn bias_act_inplace(out: &mut [f32], bias: &[f32], relu: bool) {
             }
         }
     }
+}
+
+// ---------------------------------------------------------------------------
+// Integer serving path: int8 weights (encoded once per bit-vector) ×
+// int8 activations (encoded per request) → i32 GEMM → requantizing
+// write-back. See ARCHITECTURE.md §Integer serving for the algebra.
+// ---------------------------------------------------------------------------
+
+/// A weighted layer's parameters as packed signed-int8 codes plus the
+/// affine metadata needed to map integer GEMM accumulators back to f32.
+///
+/// With weights `w ≈ s_w·W + o_w` (codes `W`, per-layer scale `s_w` and
+/// offset `o_w` — the zero-point in offset form) and an activation
+/// `x ≈ s_x·X + o_x`, the real-valued product expands to
+///
+/// ```text
+/// Σ_p x·w = s_x·s_w·(X·W)  +  s_x·o_w·rowsum(X)
+///         + o_x·s_w·colsum(W) + k·o_x·o_w
+/// ```
+///
+/// so the layer keeps `colsum(W)` precomputed, the request computes
+/// `rowsum(X)` while encoding, and only `X·W` runs through the
+/// int8×int8→i32 GEMM. The B-panel packing is done here, once, so serve
+/// requests never re-pack weights.
+#[derive(Clone, Debug, PartialEq)]
+pub struct QuantWeight {
+    packed: PackedI8,
+    bits: u32,
+    /// Reconstruction scale `s_w` (the quantization step).
+    scale: f32,
+    /// Reconstruction offset `o_w` (zero-point in additive form).
+    offset: f32,
+    /// Per-output-column Σ of weight codes.
+    col_sums: Vec<i32>,
+}
+
+impl QuantWeight {
+    /// Encode a weight tensor at `bits` onto the same lattice
+    /// [`crate::quant::fake_quant`] reconstructs on. Returns `None` when
+    /// that lattice has no int8 form — fractional or zero `bits`, or
+    /// `bits > 8` — in which case callers fall back to f32 fake-quant.
+    /// The last axis is the output-column axis (dense `[cin, cout]`
+    /// weights and flattened HWIO conv kernels both satisfy this).
+    ///
+    /// A constant (degenerate-range) tensor encodes as all-zero codes
+    /// with `scale = 0`, matching fake-quant's pass-through convention.
+    pub fn quantize(w: &Tensor, bits: f32) -> Option<QuantWeight> {
+        if w.ndim() < 2 {
+            return None;
+        }
+        let cols = w.shape()[w.ndim() - 1];
+        let rows = w.len() / cols.max(1);
+        let range = QuantRange::of(w);
+        let (scale, offset, codes) = match AffineI8::of(range, bits) {
+            Some(grid) => {
+                let codes: Vec<i8> = w.data().iter().map(|&v| grid.encode(v)).collect();
+                (grid.scale, grid.offset, codes)
+            }
+            None => {
+                if bits < 1.0 || bits > 8.0 || bits.fract() != 0.0 {
+                    return None;
+                }
+                // degenerate range: every element equals `lo`
+                (0.0, range.lo, vec![0i8; w.len()])
+            }
+        };
+        Some(QuantWeight::from_parts(codes, rows, cols, bits as u32, scale, offset))
+    }
+
+    /// Rebuild a [`QuantWeight`] straight from an exported layer of the
+    /// packed container (`model::export`): the stored bin indices become
+    /// signed codes without a dequantize → re-quantize round trip. For
+    /// any tensor with a non-degenerate range the result is identical to
+    /// [`QuantWeight::quantize`] of the original tensor (same grid, same
+    /// codes). A constant tensor follows the container's convention
+    /// instead — `export::dequantize`'s `step = 1` fallback reconstructs
+    /// `lo + 0.5` — where [`QuantWeight::quantize`] mirrors fake-quant's
+    /// pass-through (`lo` exactly); each decode path matches its own f32
+    /// reference.
+    pub fn from_packed_words(
+        words: &[i32],
+        bits: u32,
+        count: usize,
+        shape: &[usize],
+        lo: f32,
+        hi: f32,
+    ) -> Result<QuantWeight> {
+        if !(1..=8).contains(&bits) {
+            return Err(Error::Model(format!("int8 serving needs 1..=8 bits, got {bits}")));
+        }
+        if shape.len() < 2 {
+            return Err(Error::Shape(format!("quantized weight wants rank ≥ 2, got {shape:?}")));
+        }
+        let n: usize = shape.iter().product();
+        if n != count {
+            return Err(Error::Shape(format!("shape {shape:?} wants {n} codes, got {count}")));
+        }
+        let cols = shape[shape.len() - 1];
+        let rows = count / cols.max(1);
+        let nlev = (1u64 << bits) as f32;
+        let span = hi - lo;
+        // mirror export::dequantize exactly, including its step=1 fallback
+        let step = if span > 0.0 { span / nlev } else { 1.0 };
+        let half = 1i32 << (bits - 1);
+        let offset = lo + (half as f32 + 0.5) * step;
+        let codes: Vec<i8> = crate::model::export::unpack_indices(words, bits, count)
+            .into_iter()
+            .map(|q| (q as i32 - half) as i8)
+            .collect();
+        Ok(QuantWeight::from_parts(codes, rows, cols, bits, step, offset))
+    }
+
+    fn from_parts(
+        codes: Vec<i8>,
+        rows: usize,
+        cols: usize,
+        bits: u32,
+        scale: f32,
+        offset: f32,
+    ) -> QuantWeight {
+        let mut col_sums = vec![0i32; cols];
+        for row in codes.chunks(cols.max(1)) {
+            for (cs, &c) in col_sums.iter_mut().zip(row) {
+                *cs += c as i32;
+            }
+        }
+        QuantWeight { packed: pack_i8(&codes, rows, cols), bits, scale, offset, col_sums }
+    }
+
+    /// Reduction dimension (dense `cin`, conv `k·k·cin`).
+    pub fn rows(&self) -> usize {
+        self.packed.k()
+    }
+
+    /// Output columns (`cout`).
+    pub fn cols(&self) -> usize {
+        self.packed.n()
+    }
+
+    pub fn bits(&self) -> u32 {
+        self.bits
+    }
+}
+
+/// Encode an activation slice to signed 8-bit codes over its own dynamic
+/// range, filling per-row code sums along the way. Returns the
+/// activation's `(scale, offset)`; a constant (or empty) slice encodes as
+/// all-zero codes with `scale = 0` and `offset =` the constant.
+fn quantize_act(x: &[f32], cols: usize, out: &mut [i8], rsum: &mut [i32]) -> (f32, f32) {
+    debug_assert_eq!(x.len(), out.len());
+    let mut lo = f32::INFINITY;
+    let mut hi = f32::NEG_INFINITY;
+    for &v in x {
+        if v < lo {
+            lo = v;
+        }
+        if v > hi {
+            hi = v;
+        }
+    }
+    match AffineI8::of(QuantRange { lo, hi }, 8.0) {
+        Some(grid) => {
+            for ((row_x, row_o), rs) in
+                x.chunks(cols).zip(out.chunks_mut(cols)).zip(rsum.iter_mut())
+            {
+                let mut acc = 0i32;
+                for (o, &v) in row_o.iter_mut().zip(row_x) {
+                    let c = grid.encode(v);
+                    *o = c;
+                    acc += c as i32;
+                }
+                *rs = acc;
+            }
+            (grid.scale, grid.offset)
+        }
+        None => {
+            out.fill(0);
+            rsum.fill(0);
+            (0.0, if lo.is_finite() { lo } else { 0.0 })
+        }
+    }
+}
+
+/// Map int8-GEMM accumulators back to f32 in one sweep: apply the four
+/// affine correction terms (see [`QuantWeight`]), the bias, and
+/// optionally ReLU. `colc` is a `cols`-sized scratch row.
+#[allow(clippy::too_many_arguments)]
+fn requant_bias_act(
+    acc: &[i32],
+    rsum: &[i32],
+    sx: f32,
+    ox: f32,
+    qw: &QuantWeight,
+    kdim: usize,
+    bias: &[f32],
+    relu: bool,
+    out: &mut [f32],
+    colc: &mut [f32],
+) {
+    let cols = bias.len();
+    let sxsw = sx * qw.scale;
+    let sxow = sx * qw.offset;
+    let base = kdim as f32 * ox * qw.offset;
+    for ((cc, &cs), &b) in colc.iter_mut().zip(&qw.col_sums).zip(bias) {
+        *cc = ox * qw.scale * cs as f32 + base + b;
+    }
+    for ((orow, arow), &rs) in out.chunks_mut(cols).zip(acc.chunks(cols)).zip(rsum) {
+        let rowc = sxow * rs as f32;
+        if relu {
+            for ((o, &a), &cc) in orow.iter_mut().zip(arow).zip(colc.iter()) {
+                *o = (sxsw * a as f32 + rowc + cc).max(0.0);
+            }
+        } else {
+            for ((o, &a), &cc) in orow.iter_mut().zip(arow).zip(colc.iter()) {
+                *o = sxsw * a as f32 + rowc + cc;
+            }
+        }
+    }
+}
+
+/// Shared int8 matmul + requantize core over a row-major f32 LHS.
+fn int8_matmul_requant(
+    lhs: &[f32],
+    rows: usize,
+    qw: &QuantWeight,
+    bias: &Tensor,
+    relu: bool,
+    scratch: &mut Scratch,
+) -> Result<Vec<f32>> {
+    let kdim = qw.rows();
+    let cols = qw.cols();
+    if bias.len() != cols {
+        return Err(Error::Shape(format!("int8 bias {} vs cout {cols}", bias.len())));
+    }
+    let mut xq = scratch.take_i8(rows * kdim);
+    let mut rsum = scratch.take_i32(rows);
+    let (sx, ox) = quantize_act(lhs, kdim, &mut xq, &mut rsum);
+    let mut acc = scratch.take_i32(rows * cols);
+    gemm_i8_packed(&xq, &qw.packed, rows, &mut acc, 0);
+    let mut out = scratch.take_any(rows * cols);
+    let mut colc = scratch.take_any(cols);
+    requant_bias_act(&acc, &rsum, sx, ox, qw, kdim, bias.data(), relu, &mut out, &mut colc);
+    scratch.put_i8(xq);
+    scratch.put_i32(rsum);
+    scratch.put_i32(acc);
+    scratch.put(colc);
+    Ok(out)
+}
+
+/// Dense layer on the integer path: x `[n, cin]` f32 in, f32 out, with
+/// the inner product running int8×int8→i32 (bias → ReLU fused into the
+/// requantizing write-back).
+pub fn dense_int8_fused(
+    x: &Tensor,
+    qw: &QuantWeight,
+    bias: &Tensor,
+    relu: bool,
+    scratch: &mut Scratch,
+) -> Result<Tensor> {
+    let xs = x.shape();
+    if xs.len() != 2 {
+        return Err(Error::Shape(format!("dense_int8 wants [n,cin], got {xs:?}")));
+    }
+    let (n, cin) = (xs[0], xs[1]);
+    if cin != qw.rows() {
+        return Err(Error::Shape(format!("dense_int8: cin {cin} vs weight rows {}", qw.rows())));
+    }
+    let out = int8_matmul_requant(x.data(), n, qw, bias, relu, scratch)?;
+    Tensor::from_vec(&[n, qw.cols()], out)
+}
+
+/// NHWC conv on the integer path: im2col patches are encoded to int8 per
+/// request (structural padding zeros quantize like any other value), the
+/// GEMM runs int8×int8→i32, and bias (→ ReLU) folds into the
+/// requantizing write-back. `k` is the kernel size of the HWIO weights
+/// `qw` was encoded from (`qw.rows() == k·k·cin`).
+#[allow(clippy::too_many_arguments)]
+pub fn conv2d_int8_fused(
+    x: &Tensor,
+    qw: &QuantWeight,
+    bias: &Tensor,
+    k: usize,
+    stride: usize,
+    pad: usize,
+    relu: bool,
+    scratch: &mut Scratch,
+) -> Result<Tensor> {
+    let xs = x.shape();
+    if xs.len() != 4 {
+        return Err(Error::Shape(format!("conv_int8 wants NHWC input, got {xs:?}")));
+    }
+    let (n, h, w, cin) = (xs[0], xs[1], xs[2], xs[3]);
+    if k * k * cin != qw.rows() {
+        return Err(Error::Shape(format!(
+            "conv_int8: k²·cin {} vs weight rows {}",
+            k * k * cin,
+            qw.rows()
+        )));
+    }
+    // im2col_with validates k against h/w + padding before we do any
+    // output-shape arithmetic
+    let patches = im2col_with(x, k, stride, pad, scratch)?;
+    let oh = (h + 2 * pad - k) / stride + 1;
+    let ow = (w + 2 * pad - k) / stride + 1;
+    let rows = n * oh * ow;
+    let out = int8_matmul_requant(patches.data(), rows, qw, bias, relu, scratch)?;
+    scratch.put(patches.into_vec());
+    Tensor::from_vec(&[n, oh, ow, qw.cols()], out)
 }
 
 /// Elementwise max(x, 0).
@@ -379,6 +696,139 @@ mod tests {
         assert_eq!(relu(&x).data(), &[0.0, 0.0, 2.0]);
         let mut s = Scratch::new();
         assert_eq!(relu_with(&x, &mut s).data(), &[0.0, 0.0, 2.0]);
+    }
+
+    use crate::quant::fake_quant;
+    use crate::rng::{fill_normal, Pcg32};
+
+    fn randn(shape: &[usize], seed: u64) -> Tensor {
+        let mut rng = Pcg32::new(seed);
+        let n: usize = shape.iter().product();
+        let mut data = vec![0f32; n];
+        fill_normal(&mut rng, &mut data);
+        Tensor::from_vec(shape, data).unwrap()
+    }
+
+    /// f32 reference for the int8 path: fake-quant the activation at 8
+    /// bits and the weights at `bits`, then multiply in f32. The integer
+    /// path computes the same real-valued sum (exactly, in the integer
+    /// part), so the two agree to float rounding.
+    fn int8_reference(x: &Tensor, w: &Tensor, bias: &Tensor, bits: f32, relu_on: bool) -> Tensor {
+        let fqx = fake_quant(x, 8.0);
+        let fqw = fake_quant(w, bits);
+        let mut y = crate::tensor::matmul_reference(&fqx, &fqw).unwrap();
+        bias_act_inplace(y.data_mut(), bias.data(), relu_on);
+        y
+    }
+
+    #[test]
+    fn dense_int8_matches_fake_quant_reference() {
+        for &(n, cin, cout, bits) in
+            &[(4usize, 7usize, 5usize, 8.0f32), (1, 13, 3, 5.0), (9, 16, 11, 2.0)]
+        {
+            let x = randn(&[n, cin], 100 + n as u64);
+            let w = randn(&[cin, cout], 200 + cin as u64);
+            let b = randn(&[cout], 300 + cout as u64);
+            let qw = QuantWeight::quantize(&w, bits).unwrap();
+            assert_eq!((qw.rows(), qw.cols()), (cin, cout));
+            let mut s = Scratch::new();
+            for relu_on in [false, true] {
+                let got = dense_int8_fused(&x, &qw, &b, relu_on, &mut s).unwrap();
+                let want = int8_reference(&x, &w, &b, bits, relu_on);
+                assert_eq!(got.shape(), &[n, cout]);
+                for (g, e) in got.data().iter().zip(want.data()) {
+                    assert!(
+                        (g - e).abs() <= 1e-3 * (1.0 + e.abs()),
+                        "bits {bits} relu {relu_on}: {g} vs {e}"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn dense_int8_reuses_scratch_deterministically() {
+        let x = randn(&[3, 10], 1);
+        let w = randn(&[10, 4], 2);
+        let b = randn(&[4], 3);
+        let qw = QuantWeight::quantize(&w, 6.0).unwrap();
+        let mut s = Scratch::new();
+        let first = dense_int8_fused(&x, &qw, &b, true, &mut s).unwrap();
+        for _ in 0..3 {
+            let again = dense_int8_fused(&x, &qw, &b, true, &mut s).unwrap();
+            assert_eq!(first.data(), again.data());
+        }
+    }
+
+    #[test]
+    fn conv_int8_matches_fake_quant_reference() {
+        let (k, cin, cout) = (3usize, 2usize, 4usize);
+        let x = randn(&[2, 5, 5, cin], 11);
+        let w = randn(&[k, k, cin, cout], 12);
+        let b = randn(&[cout], 13);
+        let bits = 6.0f32;
+        let qw = QuantWeight::quantize(&w, bits).unwrap();
+        assert_eq!(qw.rows(), k * k * cin);
+        let mut s = Scratch::new();
+        let got = conv2d_int8_fused(&x, &qw, &b, k, 1, 1, true, &mut s).unwrap();
+        assert_eq!(got.shape(), &[2, 5, 5, cout]);
+        // reference: same im2col (same padding zeros), fake-quant both
+        // operands, f32 matmul
+        let patches = im2col(&x, k, 1, 1).unwrap();
+        let wflat = w.clone().reshape(&[k * k * cin, cout]).unwrap();
+        let want = int8_reference(&patches, &wflat, &b, bits, true);
+        for (g, e) in got.data().iter().zip(want.data()) {
+            assert!((g - e).abs() <= 1e-3 * (1.0 + e.abs()), "{g} vs {e}");
+        }
+    }
+
+    #[test]
+    fn int8_constant_weight_passthrough() {
+        // degenerate weight range: fake-quant passes through, and so must
+        // the int8 path (scale 0, offset = the constant)
+        let x = randn(&[3, 6], 21);
+        let w = Tensor::from_vec(&[6, 2], vec![2.5; 12]).unwrap();
+        let b = Tensor::from_vec(&[2], vec![0.25, -0.5]).unwrap();
+        let qw = QuantWeight::quantize(&w, 8.0).unwrap();
+        let mut s = Scratch::new();
+        let got = dense_int8_fused(&x, &qw, &b, false, &mut s).unwrap();
+        let want = int8_reference(&x, &w, &b, 8.0, false);
+        for (g, e) in got.data().iter().zip(want.data()) {
+            assert!((g - e).abs() <= 1e-4 * (1.0 + e.abs()), "{g} vs {e}");
+        }
+    }
+
+    #[test]
+    fn quantweight_rejects_unrepresentable_widths() {
+        let w = randn(&[4, 4], 31);
+        assert!(QuantWeight::quantize(&w, 0.0).is_none());
+        assert!(QuantWeight::quantize(&w, 6.5).is_none());
+        assert!(QuantWeight::quantize(&w, 16.0).is_none());
+        assert!(QuantWeight::quantize(&randn(&[4], 32), 8.0).is_none());
+    }
+
+    #[test]
+    fn quantweight_from_packed_container_matches_direct_quantize() {
+        // the export container round trip: quantize → pack → rebuild the
+        // QuantWeight from packed words must be *identical* to encoding
+        // the original tensor (same grid, same codes, same metadata)
+        use crate::model::export::{pack_indices, quantize_indices};
+        let w = randn(&[6, 4], 41);
+        for bits in [2u32, 3, 5, 8] {
+            let (idx, range) = quantize_indices(&w, bits);
+            let words = pack_indices(&idx, bits);
+            let from_container = QuantWeight::from_packed_words(
+                &words,
+                bits,
+                w.len(),
+                w.shape(),
+                range.lo,
+                range.hi,
+            )
+            .unwrap();
+            let direct = QuantWeight::quantize(&w, bits as f32).unwrap();
+            assert_eq!(from_container, direct, "bits {bits}");
+        }
     }
 
     #[test]

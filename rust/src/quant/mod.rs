@@ -20,5 +20,6 @@ pub use noise_model::{expected_noise_l2, prefactor, NoiseModel};
 pub use prune::{magnitude_prune, pruned_quantized_bits, sparsity};
 pub use stochastic::{stochastic_fake_quant, stochastic_noise};
 pub use uniform::{
-    fake_quant, fake_quant_into, fake_quant_with, quant_noise, quant_noise_with, QuantRange,
+    fake_quant, fake_quant_into, fake_quant_with, quant_noise, quant_noise_with, AffineI8,
+    QuantRange,
 };

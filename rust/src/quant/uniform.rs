@@ -27,6 +27,70 @@ impl QuantRange {
     }
 }
 
+/// The uniform quantizer's lattice viewed as a signed-int8 affine code:
+/// `value ≈ scale · code + offset` with `code = q − 2^(b−1)` for the bin
+/// index `q` of [`fake_quant_into`]. Only whole bit-widths `1 ≤ b ≤ 8`
+/// over a non-degenerate range admit this view (fractional widths have a
+/// non-lattice top level; wider ones don't fit i8) — [`AffineI8::of`]
+/// returns `None` otherwise and callers fall back to f32 fake-quant.
+///
+/// This is what the integer serving path executes on: weights are encoded
+/// once per bit-vector, activations per request at 8 bits, and the
+/// int8×int8→i32 GEMM's result is mapped back to f32 through the two
+/// (scale, offset) pairs — see `nn::dense_int8_fused`.
+#[derive(Clone, Copy, Debug)]
+pub struct AffineI8 {
+    /// Reconstruction scale (the quantization step).
+    pub scale: f32,
+    /// Reconstruction offset: `lo + (2^(b−1) + 0.5) · step`.
+    pub offset: f32,
+    lo: f32,
+    inv_step: f32,
+    max_q: f32,
+    half: i32,
+}
+
+impl AffineI8 {
+    /// The affine-int8 view of the `bits`-wide uniform grid over `range`,
+    /// or `None` when that grid has no exact i8 representation.
+    pub fn of(range: QuantRange, bits: f32) -> Option<AffineI8> {
+        let span = range.span();
+        if bits < 1.0 || bits > 8.0 || bits.fract() != 0.0 || !(span > 0.0) {
+            return None;
+        }
+        let nlev = (bits as f64).exp2() as f32;
+        let step = span / nlev;
+        let half = (nlev * 0.5) as i32;
+        Some(AffineI8 {
+            scale: step,
+            offset: range.lo + (half as f32 + 0.5) * step,
+            lo: range.lo,
+            inv_step: 1.0 / step,
+            max_q: nlev - 1.0,
+            half,
+        })
+    }
+
+    /// Encode one value to its signed code (same bin arithmetic and op
+    /// order as [`fake_quant_into`], so codes decode onto the exact
+    /// fake-quant lattice).
+    pub fn encode(&self, v: f32) -> i8 {
+        let q = ((v - self.lo) * self.inv_step).floor().clamp(0.0, self.max_q) as i32;
+        (q - self.half) as i8
+    }
+
+    /// Signed code for an already-computed bin index (the export
+    /// container stores bin indices; see `model::export`).
+    pub fn code_of_index(&self, q: u32) -> i8 {
+        (q as i32 - self.half) as i8
+    }
+
+    /// Decode a signed code back to f32 (midpoint reconstruction).
+    pub fn decode(&self, code: i8) -> f32 {
+        self.scale * code as f32 + self.offset
+    }
+}
+
 /// Tensors below this size are quantized on the calling thread; larger
 /// ones are chunked across threads (perf pass, EXPERIMENTS.md §Perf/L3:
 /// the single-thread loop measured 1.2 GB/s and the eval hot path
@@ -214,6 +278,47 @@ mod tests {
             assert!((na - nb).abs() <= 1e-12 * na.max(1.0), "{na} vs {nb}");
             scratch.put(b.into_vec());
         }
+    }
+
+    #[test]
+    fn affine_i8_decodes_onto_fake_quant_lattice() {
+        let w = randn(2000, 7);
+        let range = QuantRange::of(&w);
+        for bits in [1.0f32, 3.0, 5.0, 8.0] {
+            let grid = AffineI8::of(range, bits).unwrap();
+            let fq = fake_quant(&w, bits);
+            for (&v, &f) in w.data().iter().zip(fq.data()) {
+                let d = grid.decode(grid.encode(v));
+                assert!(
+                    (d - f).abs() <= 1e-5 * (1.0 + f.abs()),
+                    "bits {bits}: {d} vs {f}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn affine_i8_codes_fit_width() {
+        let w = randn(500, 8);
+        let range = QuantRange::of(&w);
+        for bits in [1i32, 4, 8] {
+            let grid = AffineI8::of(range, bits as f32).unwrap();
+            let half = 1i32 << (bits - 1);
+            for &v in w.data() {
+                let c = grid.encode(v) as i32;
+                assert!(c >= -half && c < half, "bits {bits}: code {c}");
+            }
+        }
+    }
+
+    #[test]
+    fn affine_i8_rejects_non_integer_wide_or_degenerate() {
+        let w = randn(10, 9);
+        let range = QuantRange::of(&w);
+        assert!(AffineI8::of(range, 0.0).is_none());
+        assert!(AffineI8::of(range, 6.5).is_none());
+        assert!(AffineI8::of(range, 9.0).is_none());
+        assert!(AffineI8::of(QuantRange { lo: 1.0, hi: 1.0 }, 8.0).is_none());
     }
 
     #[test]

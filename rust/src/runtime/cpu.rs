@@ -1,4 +1,4 @@
-//! The pure-Rust CPU backend: [`nn::GraphExecutor`] over the blocked
+//! The pure-Rust CPU backend: [`crate::nn::GraphPlan`] over the blocked
 //! multithreaded GEMM, with full-dataset evaluation parallelized across
 //! pre-batched inputs via `std::thread::scope`.
 //!
@@ -9,13 +9,23 @@
 //! `benches/perf_hotpath.rs`). Every thread count produces bitwise-
 //! identical logits because the per-batch compute is independent and the
 //! GEMM's accumulation order is thread-count-invariant.
+//!
+//! Serve path: the [`GraphPlan`] (use counts, fusion tables, resolved
+//! edges) is computed **once** in [`CpuBackend::new`] and shared by every
+//! forward — batch-1 requests no longer rebuild the analysis. With
+//! [`CpuBackend::with_int8_serving`] enabled, [`Backend::qforward_one`]
+//! additionally executes conv/dense layers through the int8×int8→i32
+//! GEMM: weights are encoded to [`QuantWeight`] once per bits vector
+//! (cached, like the f32 fake-quant set), activations are quantized per
+//! request. Bit-widths outside the int8 lattice (fractional, 0, or > 8)
+//! fall back to f32 fake-quant per layer.
 
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Mutex;
 
 use crate::dataset::Dataset;
 use crate::model::{Manifest, ModelArtifacts};
-use crate::nn::GraphExecutor;
+use crate::nn::{GraphPlan, QuantWeight};
 use crate::quant::fake_quant;
 use crate::tensor::{self, Tensor};
 use crate::util::Scratch;
@@ -23,19 +33,36 @@ use crate::{Error, Result};
 
 use super::Backend;
 
+/// One bits-vector's integer-serving state: per-layer encoded weights
+/// (indexed by plan layer) plus f32 fake-quant fallbacks for layers whose
+/// width has no int8 form.
+struct Int8Set {
+    qweights: Vec<Option<QuantWeight>>,
+    fallbacks: Vec<(usize, Tensor)>,
+}
+
 /// CPU execution engine for one model + pre-batched test split.
 pub struct CpuBackend {
     manifest: Manifest,
+    /// Execution plan (use counts, fusion, resolved edges) — computed
+    /// once here, reused by every forward on every worker thread.
+    plan: GraphPlan,
     /// Baseline parameters in executable order [w0, b0, w1, b1, …].
     params: Vec<Tensor>,
     /// Pre-batched inputs, each `[batch, h, w, c]`.
     batches: Vec<Tensor>,
     /// Quantization index → position of the layer's weight in `params`.
     qparam: Vec<usize>,
+    /// Quantization index → layer index in the plan.
+    qlayer: Vec<usize>,
     /// Worker threads for full-dataset evaluation.
     threads: usize,
+    /// Serve requests take the integer path (see [`CpuBackend::with_int8_serving`]).
+    int8_serving: bool,
     /// Cached quantized parameter set keyed on the bits vector (serve path).
     qcache: Mutex<Option<(Vec<f32>, Vec<(usize, Tensor)>)>>,
+    /// Cached int8 weight set keyed on the bits vector (integer serving).
+    qcache_int8: Mutex<Option<(Vec<f32>, Int8Set)>>,
     /// Scratch arena reused across [`Backend::qforward_one`] requests so
     /// steady-state serving draws all activation buffers from the pool.
     serve_scratch: Mutex<Scratch>,
@@ -53,24 +80,37 @@ impl CpuBackend {
             )));
         }
         let mut qparam = Vec::with_capacity(manifest.num_weighted_layers);
+        let mut qlayer = Vec::with_capacity(manifest.num_weighted_layers);
         for layer in manifest.weighted_layers() {
             let (wi, _) = layer
                 .param_idx
                 .ok_or_else(|| Error::Model(format!("layer {} has no param_idx", layer.name)))?;
             // param slot 0 is the input batch; `params` starts at slot 1
             qparam.push(wi - 1);
+            qlayer.push(
+                manifest
+                    .layers
+                    .iter()
+                    .position(|l| l.name == layer.name)
+                    .expect("weighted layer comes from this manifest"),
+            );
         }
         let threads = std::thread::available_parallelism()
             .map_or(1, |v| v.get())
             .min(16)
             .min(batches.len().max(1));
+        let plan = GraphPlan::new(&manifest);
         Ok(CpuBackend {
             manifest,
+            plan,
             params,
             batches,
             qparam,
+            qlayer,
             threads,
+            int8_serving: false,
             qcache: Mutex::new(None),
+            qcache_int8: Mutex::new(None),
             serve_scratch: Mutex::new(Scratch::new()),
             execs: AtomicU64::new(0),
         })
@@ -98,8 +138,29 @@ impl CpuBackend {
         self
     }
 
+    /// Toggle the integer serving mode: when on, [`Backend::qforward_one`]
+    /// runs conv/dense layers through the int8×int8→i32 GEMM (weights
+    /// encoded once per bits vector, activations per request) instead of
+    /// f32 fake-quant. Full-dataset paths ([`Backend::forward_all_qbits`])
+    /// are unaffected — calibration measures the fake-quant noise model
+    /// and must keep its exact semantics.
+    pub fn with_int8_serving(mut self, on: bool) -> CpuBackend {
+        self.int8_serving = on;
+        self
+    }
+
     pub fn threads(&self) -> usize {
         self.threads
+    }
+
+    /// Whether serve requests take the integer path.
+    pub fn int8_serving(&self) -> bool {
+        self.int8_serving
+    }
+
+    /// The cached execution plan (analysis computed at construction).
+    pub fn plan(&self) -> &GraphPlan {
+        &self.plan
     }
 
     /// The effective parameter list with `overrides` substituted.
@@ -125,26 +186,25 @@ impl CpuBackend {
             // auto — a single-batch dataset still gets the cores through
             // the GEMM's own row-block parallelism (benches that want a
             // truly serial baseline pin via tensor::set_gemm_threads(1))
-            let exec = GraphExecutor::new(&self.manifest);
             let mut scratch = Scratch::new();
             let mut out = Vec::with_capacity(nb);
             for xb in &self.batches {
-                out.push(exec.forward_with(xb, eff, &mut scratch)?.into_vec());
+                out.push(self.plan.forward_with(xb, eff, &mut scratch)?.into_vec());
             }
             return Ok(out);
         }
         let mut results: Vec<Result<Vec<f32>>> = (0..nb).map(|_| Ok(Vec::new())).collect();
         let chunk = nb.div_ceil(threads);
+        let plan = &self.plan;
         std::thread::scope(|s| {
             for (bchunk, rchunk) in self.batches.chunks(chunk).zip(results.chunks_mut(chunk)) {
                 s.spawn(move || {
                     // batch-level parallelism owns the cores; nested GEMMs
                     // stay single-threaded on this worker
                     tensor::set_gemm_threads(1);
-                    let exec = GraphExecutor::new(&self.manifest);
                     let mut scratch = Scratch::new();
                     for (xb, slot) in bchunk.iter().zip(rchunk.iter_mut()) {
-                        *slot = exec.forward_with(xb, eff, &mut scratch).map(Tensor::into_vec);
+                        *slot = plan.forward_with(xb, eff, &mut scratch).map(Tensor::into_vec);
                     }
                 });
             }
@@ -173,6 +233,23 @@ impl CpuBackend {
             .collect()
     }
 
+    /// Encode every weighted layer for the integer path: int8 codes for
+    /// widths on the i8 lattice (whole 1..=8), f32 fake-quant fallbacks
+    /// for the rest (`<= 0` stays fp32 pass-through, matching the
+    /// fake-quant convention).
+    fn quantize_params_int8(&self, bits: &[f32]) -> Int8Set {
+        let mut qweights: Vec<Option<QuantWeight>> = (0..self.plan.len()).map(|_| None).collect();
+        let mut fallbacks = Vec::new();
+        for ((&pi, &li), &b) in self.qparam.iter().zip(&self.qlayer).zip(bits) {
+            match QuantWeight::quantize(&self.params[pi], b) {
+                Some(qw) => qweights[li] = Some(qw),
+                None if b > 0.0 => fallbacks.push((pi, fake_quant(&self.params[pi], b))),
+                None => {} // fp32 pass-through
+            }
+        }
+        Int8Set { qweights, fallbacks }
+    }
+
     /// Run `f` with the (cached) quantized parameter set for `bits`.
     fn with_quantized<R>(
         &self,
@@ -183,6 +260,18 @@ impl CpuBackend {
         let hit = matches!(&*guard, Some((b, _)) if b.as_slice() == bits);
         if !hit {
             let q = self.quantize_params(bits);
+            *guard = Some((bits.to_vec(), q));
+        }
+        f(&guard.as_ref().unwrap().1)
+    }
+
+    /// Run `f` with the (cached) int8 weight set for `bits` — weights are
+    /// encoded once per bits vector, not per request.
+    fn with_quantized_int8<R>(&self, bits: &[f32], f: impl FnOnce(&Int8Set) -> R) -> R {
+        let mut guard = self.qcache_int8.lock().unwrap();
+        let hit = matches!(&*guard, Some((b, _)) if b.as_slice() == bits);
+        if !hit {
+            let q = self.quantize_params_int8(bits);
             *guard = Some((bits.to_vec(), q));
         }
         f(&guard.as_ref().unwrap().1)
@@ -215,12 +304,23 @@ impl Backend for CpuBackend {
     fn qforward_one(&self, x: &Tensor, bits: &[f32]) -> Result<Vec<f32>> {
         self.check_bits(bits)?;
         self.execs.fetch_add(1, Ordering::Relaxed);
+        if self.int8_serving {
+            return self.with_quantized_int8(bits, |set| {
+                let refs: Vec<(usize, &Tensor)> =
+                    set.fallbacks.iter().map(|(pi, t)| (*pi, t)).collect();
+                let eff = self.effective(&refs)?;
+                let mut scratch = self.serve_scratch.lock().unwrap();
+                Ok(self
+                    .plan
+                    .forward_int8_with(x, &eff, &set.qweights, &mut scratch)?
+                    .into_vec())
+            });
+        }
         self.with_quantized(bits, |q| {
             let refs: Vec<(usize, &Tensor)> = q.iter().map(|(pi, t)| (*pi, t)).collect();
             let eff = self.effective(&refs)?;
-            let exec = GraphExecutor::new(&self.manifest);
             let mut scratch = self.serve_scratch.lock().unwrap();
-            Ok(exec.forward_with(x, &eff, &mut scratch)?.into_vec())
+            Ok(self.plan.forward_with(x, &eff, &mut scratch)?.into_vec())
         })
     }
 
@@ -323,6 +423,41 @@ mod tests {
         // second call with the same bits hits the quantized-param cache
         let again = be.qforward_one(&x, &bits).unwrap();
         assert_eq!(again, one);
+    }
+
+    #[test]
+    fn int8_serving_close_to_fake_quant_path() {
+        let f32_be = toy_backend(2);
+        let i8_be = toy_backend(2).with_int8_serving(true);
+        assert!(i8_be.int8_serving());
+        let x = f32_be.batches[0].clone();
+        let bits = [8.0f32, 8.0];
+        let f32_out = f32_be.qforward_one(&x, &bits).unwrap();
+        let i8_out = i8_be.qforward_one(&x, &bits).unwrap();
+        assert_eq!(f32_out.len(), i8_out.len());
+        let scale = f32_out.iter().fold(0f32, |m, v| m.max(v.abs()));
+        for (a, b) in f32_out.iter().zip(&i8_out) {
+            assert!((a - b).abs() <= 0.05 * (1.0 + scale), "{a} vs {b}");
+        }
+        // repeated requests hit the cached int8 set and stay bitwise stable
+        let again = i8_be.qforward_one(&x, &bits).unwrap();
+        assert_eq!(again, i8_out);
+    }
+
+    #[test]
+    fn int8_serving_falls_back_off_lattice() {
+        // fractional width (no i8 form) and 0 (fp32 pass-through): the
+        // int8 path must agree with the f32 fake-quant path bitwise,
+        // because every layer falls back
+        let f32_be = toy_backend(2);
+        let i8_be = toy_backend(2).with_int8_serving(true);
+        let x = f32_be.batches[1].clone();
+        let bits = [6.5f32, 0.0];
+        let a = f32_be.qforward_one(&x, &bits).unwrap();
+        let b = i8_be.qforward_one(&x, &bits).unwrap();
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.to_bits(), y.to_bits());
+        }
     }
 
     #[test]

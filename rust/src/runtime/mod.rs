@@ -7,10 +7,13 @@
 //! or per-layer fake-quantization). Two implementations:
 //!
 //! * [`CpuBackend`] — pure Rust, always available: the
-//!   [`nn::GraphExecutor`](crate::nn::GraphExecutor) substrate on top of
-//!   the blocked multithreaded GEMM, with evaluation parallelized across
-//!   pre-batched inputs. This is the default engine and the one the
-//!   calibration hot path (Algorithms 1 & 2) runs on.
+//!   [`nn::GraphPlan`](crate::nn::GraphPlan) substrate (analysis computed
+//!   once at construction, shared by every request) on top of the blocked
+//!   multithreaded GEMM, with evaluation parallelized across pre-batched
+//!   inputs. This is the default engine and the one the calibration hot
+//!   path (Algorithms 1 & 2) runs on. Its opt-in integer serving mode
+//!   ([`CpuBackend::with_int8_serving`]) answers single-request forwards
+//!   through the int8×int8→i32 GEMM.
 //! * [`PjrtBackend`] (cargo feature `pjrt`) — the XLA PJRT engine
 //!   executing the HLO-text artifacts lowered by the Python compile path.
 //!   Needs the external `xla` crate; see rust/Cargo.toml for how to
@@ -52,7 +55,8 @@ pub trait Backend {
     /// Single-input quantized forward — the serving path. Backends
     /// should cache per-`bits` state so repeated calls with the same
     /// allocation stay hot ([`CpuBackend`] caches the quantized
-    /// parameter set; the PJRT backend still re-uploads the bits vector,
+    /// parameter set — f32 fake-quant, or packed int8 codes in integer
+    /// serving mode; the PJRT backend still re-uploads the bits vector,
     /// see its impl note). `serve_loop` issues one untimed warm-up call.
     fn qforward_one(&self, x: &Tensor, bits: &[f32]) -> Result<Vec<f32>>;
 

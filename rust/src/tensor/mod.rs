@@ -455,6 +455,151 @@ pub fn matmul_sparse_lhs(a: &Tensor, b: &Tensor) -> Result<Tensor> {
     Tensor::from_vec(&[m, n], out)
 }
 
+// ---------------------------------------------------------------------------
+// int8 GEMM — the integer serving kernel under `nn::dense_int8_fused` /
+// `nn::conv2d_int8_fused`.
+//
+// Same structure as the f32 kernel above: B is packed once into NR-wide
+// column panels ([`pack_i8`] → [`PackedI8`], cached per quantized layer so
+// the serve path never re-packs weights), and an MR×NR block of **i32**
+// accumulators is kept in registers. Unlike the f32 kernel there is no KC
+// split: the accumulator block holds the full k-sum for one panel and is
+// *stored* (not accumulated) on write-back, so the output buffer does not
+// need to be zeroed. Integer accumulation is exact, so results are
+// bitwise identical for every thread count and association order.
+//
+// Overflow headroom: |Σ a·b| ≤ 128·128·k (worst case (−128)·(−128)),
+// which fits i32 for k ≤ i32::MAX/16384 = 131 071 — far above any
+// reduction dimension in this repo (debug-asserted in
+// [`gemm_i8_packed`]).
+// ---------------------------------------------------------------------------
+
+/// B matrix packed into NR-wide int8 column panels, ready for
+/// [`gemm_i8_packed`]. Quantized layers build this once per bit-vector
+/// and reuse it across serve requests.
+#[derive(Clone, Debug, PartialEq)]
+pub struct PackedI8 {
+    panels: Vec<i8>,
+    k: usize,
+    n: usize,
+}
+
+impl PackedI8 {
+    pub fn k(&self) -> usize {
+        self.k
+    }
+
+    pub fn n(&self) -> usize {
+        self.n
+    }
+}
+
+/// Pack an int8 B (k×n row-major) into NR-wide column panels, zero-padded
+/// on the right edge — the i8 twin of the f32 `pack_b`.
+pub fn pack_i8(b: &[i8], k: usize, n: usize) -> PackedI8 {
+    assert_eq!(b.len(), k * n, "rhs size");
+    let npanels = n.div_ceil(NR);
+    let mut panels = vec![0i8; npanels * k * NR];
+    for jp in 0..npanels {
+        let j0 = jp * NR;
+        let w = NR.min(n - j0);
+        let base = jp * k * NR;
+        for p in 0..k {
+            let src = p * n + j0;
+            panels[base + p * NR..base + p * NR + w].copy_from_slice(&b[src..src + w]);
+        }
+    }
+    PackedI8 { panels, k, n }
+}
+
+/// int8×int8→i32 GEMM rows [r0, r1) from A and a packed B. `c` holds
+/// exactly those rows and is fully overwritten (no zeroing needed).
+fn gemm_i8_rows(a: &[i8], packed: &[i8], c: &mut [i32], r0: usize, r1: usize, k: usize, n: usize) {
+    let npanels = n.div_ceil(NR);
+    let mut i = r0;
+    while i < r1 {
+        let mr = MR.min(r1 - i);
+        for jp in 0..npanels {
+            let j0 = jp * NR;
+            let nr = NR.min(n - j0);
+            let panel = &packed[jp * k * NR..(jp + 1) * k * NR];
+            // register-tiled MR×NR i32 accumulator block over the full k
+            let mut acc = [[0i32; NR]; MR];
+            for p in 0..k {
+                let brow = &panel[p * NR..p * NR + NR];
+                for r in 0..mr {
+                    let av = a[(i + r) * k + p] as i32;
+                    let accr = &mut acc[r];
+                    for j in 0..NR {
+                        accr[j] += av * brow[j] as i32;
+                    }
+                }
+            }
+            for r in 0..mr {
+                let off = (i + r - r0) * n + j0;
+                c[off..off + nr].copy_from_slice(&acc[r][..nr]);
+            }
+        }
+        i += mr;
+    }
+}
+
+/// `out[m×n] = a[m×k] · b_packed[k×n]` in int8×int8→i32. `out` is fully
+/// overwritten (stale contents are fine). `threads == 0` picks
+/// automatically, honoring [`set_gemm_threads`] like the f32 kernel.
+pub fn gemm_i8_packed(a: &[i8], b: &PackedI8, m: usize, out: &mut [i32], threads: usize) {
+    let (k, n) = (b.k, b.n);
+    assert_eq!(a.len(), m * k, "lhs size");
+    assert_eq!(out.len(), m * n, "out size");
+    debug_assert!(k <= 131_071, "int8 GEMM k={k} risks i32 overflow");
+    if m == 0 || n == 0 {
+        return;
+    }
+    if k == 0 {
+        out.fill(0);
+        return;
+    }
+    let threads = if threads == 0 { gemm_auto_threads(m, n, k) } else { threads };
+    if threads <= 1 || m < 2 * MR {
+        gemm_i8_rows(a, &b.panels, out, 0, m, k, n);
+        return;
+    }
+    let rows_per = m.div_ceil(threads).div_ceil(MR) * MR;
+    std::thread::scope(|s| {
+        for (ci, chunk) in out.chunks_mut(rows_per * n).enumerate() {
+            let r0 = ci * rows_per;
+            let r1 = (r0 + rows_per).min(m);
+            let panels = &b.panels;
+            s.spawn(move || gemm_i8_rows(a, panels, chunk, r0, r1, k, n));
+        }
+    });
+}
+
+/// Convenience int8 GEMM that packs B per call — benches and tests; the
+/// serve path packs once via [`pack_i8`] and calls [`gemm_i8_packed`].
+pub fn matmul_i8_into(a: &[i8], b: &[i8], m: usize, k: usize, n: usize, out: &mut [i32]) {
+    let packed = pack_i8(b, k, n);
+    gemm_i8_packed(a, &packed, m, out, 0);
+}
+
+/// Naive ikj int8 GEMM — correctness reference for the blocked kernel.
+pub fn matmul_i8_reference(a: &[i8], b: &[i8], m: usize, k: usize, n: usize, out: &mut [i32]) {
+    assert_eq!(a.len(), m * k, "lhs size");
+    assert_eq!(b.len(), k * n, "rhs size");
+    assert_eq!(out.len(), m * n, "out size");
+    out.fill(0);
+    for i in 0..m {
+        for p in 0..k {
+            let av = a[i * k + p] as i32;
+            let brow = &b[p * n..(p + 1) * n];
+            let crow = &mut out[i * n..(i + 1) * n];
+            for (cv, &bv) in crow.iter_mut().zip(brow) {
+                *cv += av * bv as i32;
+            }
+        }
+    }
+}
+
 fn matmul_dims(a: &Tensor, b: &Tensor) -> Result<(usize, usize, usize)> {
     if a.ndim() != 2 || b.ndim() != 2 {
         return Err(Error::Shape("matmul wants rank-2 operands".into()));
@@ -540,6 +685,75 @@ mod tests {
         for (x, y) in s.data().iter().zip(r.data()) {
             assert!((x - y).abs() <= 1e-5 * (1.0 + y.abs()));
         }
+    }
+
+    fn randi8(n: usize, seed: u64) -> Vec<i8> {
+        // simple LCG over the full i8 range, deterministic
+        let mut state = seed.wrapping_mul(0x9E37_79B9_7F4A_7C15) | 1;
+        (0..n)
+            .map(|_| {
+                state = state.wrapping_mul(6364136223846793005).wrapping_add(1442695040888963407);
+                (state >> 56) as i8
+            })
+            .collect()
+    }
+
+    #[test]
+    fn int8_known_small() {
+        let a: Vec<i8> = vec![1, 2, 3, 4];
+        let b: Vec<i8> = vec![1, 1, 1, 1];
+        let mut out = vec![0i32; 4];
+        matmul_i8_into(&a, &b, 2, 2, 2, &mut out);
+        assert_eq!(out, &[3, 3, 7, 7]);
+    }
+
+    #[test]
+    fn int8_blocked_matches_reference_on_ragged_shapes() {
+        // nothing divides the 4×8 tile on any of these
+        for &(m, k, n) in &[(5usize, 7usize, 9usize), (1, 13, 4), (17, 33, 23), (8, 8, 8)] {
+            let a = randi8(m * k, (m * 1000 + k) as u64);
+            let b = randi8(k * n, (k * 1000 + n) as u64);
+            let mut blocked = vec![0i32; m * n];
+            let mut reference = vec![0i32; m * n];
+            matmul_i8_into(&a, &b, m, k, n, &mut blocked);
+            matmul_i8_reference(&a, &b, m, k, n, &mut reference);
+            assert_eq!(blocked, reference, "{m}x{k}x{n}");
+        }
+    }
+
+    #[test]
+    fn int8_threaded_matches_single_exactly() {
+        let (m, k, n) = (33usize, 21usize, 17usize);
+        let a = randi8(m * k, 5);
+        let b = randi8(k * n, 6);
+        let packed = pack_i8(&b, k, n);
+        let mut one = vec![0i32; m * n];
+        let mut four = vec![0i32; m * n];
+        gemm_i8_packed(&a, &packed, m, &mut one, 1);
+        gemm_i8_packed(&a, &packed, m, &mut four, 4);
+        assert_eq!(one, four);
+    }
+
+    #[test]
+    fn int8_overwrites_stale_output() {
+        // gemm_i8_packed stores (doesn't accumulate): stale contents must
+        // not leak through
+        let a: Vec<i8> = vec![1, 1];
+        let b: Vec<i8> = vec![2, 3];
+        let mut out = vec![999i32; 2];
+        matmul_i8_into(&a, &b, 2, 1, 1, &mut out);
+        assert_eq!(out, &[2, 3]);
+    }
+
+    #[test]
+    fn int8_extreme_values_no_overflow() {
+        // all-(-128)·all-(+127) at k=64: the most negative products
+        let (m, k, n) = (4usize, 64usize, 8usize);
+        let a = vec![-128i8; m * k];
+        let b = vec![127i8; k * n];
+        let mut out = vec![0i32; m * n];
+        matmul_i8_into(&a, &b, m, k, n, &mut out);
+        assert!(out.iter().all(|&v| v == -128 * 127 * 64));
     }
 
     #[test]

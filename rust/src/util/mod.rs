@@ -14,6 +14,10 @@ use std::time::Instant;
 /// buffer to the pool.
 pub struct Scratch {
     pool: Vec<Vec<f32>>,
+    /// int8 buffers (quantized activations on the integer serve path).
+    pool_i8: Vec<Vec<i8>>,
+    /// i32 buffers (int8-GEMM accumulators and row sums).
+    pool_i32: Vec<Vec<i32>>,
 }
 
 /// Pool entries beyond this are dropped rather than kept (bounds resident
@@ -22,7 +26,7 @@ const SCRATCH_POOL_CAP: usize = 16;
 
 impl Scratch {
     pub fn new() -> Scratch {
-        Scratch { pool: Vec::new() }
+        Scratch { pool: Vec::new(), pool_i8: Vec::new(), pool_i32: Vec::new() }
     }
 
     /// A zero-filled buffer of exactly `len` elements — for consumers
@@ -66,6 +70,51 @@ impl Scratch {
             return;
         }
         self.pool.push(buf);
+    }
+
+    /// An i8 buffer of `len` elements with **unspecified contents** —
+    /// the int8 serve path overwrites every element when it quantizes an
+    /// activation tensor into it.
+    pub fn take_i8(&mut self, len: usize) -> Vec<i8> {
+        match self.pool_i8.iter().position(|b| b.capacity() >= len) {
+            Some(i) => {
+                let mut b = self.pool_i8.swap_remove(i);
+                b.resize(len.min(b.len()), 0);
+                b.resize(len, 0);
+                b
+            }
+            None => vec![0; len],
+        }
+    }
+
+    /// Return an i8 buffer to the pool.
+    pub fn put_i8(&mut self, buf: Vec<i8>) {
+        if buf.capacity() == 0 || self.pool_i8.len() >= SCRATCH_POOL_CAP {
+            return;
+        }
+        self.pool_i8.push(buf);
+    }
+
+    /// An i32 buffer of `len` elements with **unspecified contents** —
+    /// int8-GEMM outputs are stored (not accumulated), so no zeroing.
+    pub fn take_i32(&mut self, len: usize) -> Vec<i32> {
+        match self.pool_i32.iter().position(|b| b.capacity() >= len) {
+            Some(i) => {
+                let mut b = self.pool_i32.swap_remove(i);
+                b.resize(len.min(b.len()), 0);
+                b.resize(len, 0);
+                b
+            }
+            None => vec![0; len],
+        }
+    }
+
+    /// Return an i32 buffer to the pool.
+    pub fn put_i32(&mut self, buf: Vec<i32>) {
+        if buf.capacity() == 0 || self.pool_i32.len() >= SCRATCH_POOL_CAP {
+            return;
+        }
+        self.pool_i32.push(buf);
     }
 }
 
@@ -181,6 +230,23 @@ mod tests {
         s.put(b);
         assert_eq!(s.take_any(32).len(), 32);
         assert_eq!(s.take_any(5000).len(), 5000);
+    }
+
+    #[test]
+    fn scratch_int_pools_recycle() {
+        let mut s = Scratch::new();
+        let a = s.take_i8(64);
+        assert_eq!(a.len(), 64);
+        let cap = a.capacity();
+        s.put_i8(a);
+        let b = s.take_i8(16);
+        assert_eq!(b.len(), 16);
+        assert_eq!(b.capacity(), cap, "should reuse the pooled i8 allocation");
+        let c = s.take_i32(100);
+        assert_eq!(c.len(), 100);
+        s.put_i32(c);
+        assert_eq!(s.take_i32(200).len(), 200);
+        assert_eq!(s.take_i32(7).len(), 7);
     }
 
     #[test]
