@@ -13,9 +13,11 @@
 //! trajectory can be tracked across PRs (schema in BENCH.md).
 
 use adaq::bench_support as bs;
+use adaq::coordinator::{run_sweep_jobs, EvalCache, Session, SweepConfig};
 use adaq::dataset::Dataset;
 use adaq::io::Json;
-use adaq::model::Manifest;
+use adaq::measure::{calibrate_model_jobs, SearchParams};
+use adaq::model::{Manifest, ModelArtifacts, WeightStore};
 use adaq::nn::GraphExecutor;
 use adaq::quant::{fake_quant_into, Allocator, LayerStats, QuantRange};
 use adaq::report::{markdown_table, Align};
@@ -253,6 +255,103 @@ fn main() {
             ]));
         }
         json_fields.push(("eval_scaling", Json::Arr(scaling)));
+    }
+
+    // ---- coordinator tier: calibration + sweep wall time, 1 job vs a
+    //      full pool (outputs are byte-identical; only wall time moves) ----
+    {
+        let mut rng = Pcg32::new(23);
+        let params = demo_params(&mut rng);
+        let named: Vec<(String, Tensor)> =
+            ["conv1.w", "conv1.b", "conv2.w", "conv2.b", "fc.w", "fc.b"]
+                .iter()
+                .map(|s| s.to_string())
+                .zip(params)
+                .collect();
+        let artifacts = ModelArtifacts {
+            dir: std::path::PathBuf::from("<bench>"),
+            manifest: demo_manifest(),
+            weights: WeightStore::from_params(named),
+        };
+        let test = Dataset::generate(500, 20260731);
+        let session = Session::from_parts(artifacts, test, 125).unwrap();
+        let delta = session.baseline().accuracy * 0.5;
+        let sp = SearchParams { max_iters: 10, seeds: 1, ..Default::default() };
+        let jobs = std::thread::available_parallelism().map_or(1, |v| v.get()).min(16);
+
+        let calib = |j: usize| calibrate_model_jobs(&session, delta, &sp, j, |_| {}).unwrap();
+        let t = Timer::start();
+        let cal = calib(1);
+        let calib_1 = t.seconds();
+        let t = Timer::start();
+        let cal_n = calib(jobs);
+        let calib_n = t.seconds();
+        assert_eq!(cal.layers.len(), cal_n.layers.len());
+        rows.push(vec![
+            "calibrate (3 layers, 1 job)".into(),
+            format!("{:.0} ms", calib_1 * 1e3),
+            "Alg. 1+2 wall time, sequential".into(),
+        ]);
+        rows.push(vec![
+            format!("calibrate (3 layers, {jobs} jobs)"),
+            format!("{:.0} ms", calib_n * 1e3),
+            format!("{:.2}x vs 1 job — byte-identical output", calib_1 / calib_n),
+        ]);
+        json_fields.push((
+            "calib_wall",
+            Json::obj(vec![
+                ("layers", Json::Num(cal.layers.len() as f64)),
+                ("jobs1_ms", Json::Num(calib_1 * 1e3)),
+                ("jobsN_ms", Json::Num(calib_n * 1e3)),
+                ("jobs", Json::Num(jobs as f64)),
+                ("speedup", Json::Num(calib_1 / calib_n)),
+            ]),
+        ));
+
+        let stats = cal.layer_stats();
+        let cfg = SweepConfig::default_for(stats.len());
+        let sweep = |j: usize, cache: &EvalCache| {
+            run_sweep_jobs(&session, Allocator::Adaptive, &stats, &cfg, j, cache).unwrap()
+        };
+        let t = Timer::start();
+        let r1 = sweep(1, &EvalCache::new());
+        let sweep_1 = t.seconds();
+        let shared = EvalCache::new();
+        let t = Timer::start();
+        let rn = sweep(jobs, &shared);
+        let sweep_n = t.seconds();
+        let unique = shared.len();
+        // a second sweep over the warm cache re-evaluates nothing
+        let t = Timer::start();
+        let _ = sweep(jobs, &shared);
+        let sweep_hot = t.seconds();
+        assert_eq!(r1.points.len(), rn.points.len());
+        rows.push(vec![
+            format!("sweep adaptive ({} pts, 1 job)", r1.points.len()),
+            format!("{:.0} ms", sweep_1 * 1e3),
+            format!("{unique} unique allocations evaluated"),
+        ]);
+        rows.push(vec![
+            format!("sweep adaptive ({} pts, {jobs} jobs)", rn.points.len()),
+            format!("{:.0} ms", sweep_n * 1e3),
+            format!(
+                "{:.2}x vs 1 job; warm cache re-run {:.1} ms",
+                sweep_1 / sweep_n,
+                sweep_hot * 1e3
+            ),
+        ]);
+        json_fields.push((
+            "sweep_wall",
+            Json::obj(vec![
+                ("points", Json::Num(r1.points.len() as f64)),
+                ("unique_evals", Json::Num(unique as f64)),
+                ("jobs1_ms", Json::Num(sweep_1 * 1e3)),
+                ("jobsN_ms", Json::Num(sweep_n * 1e3)),
+                ("warm_cache_ms", Json::Num(sweep_hot * 1e3)),
+                ("jobs", Json::Num(jobs as f64)),
+                ("speedup", Json::Num(sweep_1 / sweep_n)),
+            ]),
+        ));
     }
 
     // ---- batch-1 serving: cached GraphPlan vs per-request rebuild ----

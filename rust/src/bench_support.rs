@@ -11,7 +11,7 @@
 use std::path::{Path, PathBuf};
 
 use crate::coordinator::Session;
-use crate::measure::{calibrate_model, Calibration, SearchParams};
+use crate::measure::{calibrate_model_jobs, Calibration, SearchParams};
 use crate::Result;
 
 /// Artifacts root for benches.
@@ -35,6 +35,14 @@ pub fn bench_batch() -> usize {
     std::env::var("ADAQ_BATCH").ok().and_then(|v| v.parse().ok()).unwrap_or(250)
 }
 
+/// Parallel jobs for figure sweeps/calibration (`ADAQ_JOBS`, default 0 =
+/// auto, capped at 16 like the backend's own pool). Outputs are
+/// byte-identical at any value — only wall time changes — so the figure
+/// benches default to parallel.
+pub fn bench_jobs() -> usize {
+    std::env::var("ADAQ_JOBS").ok().and_then(|v| v.parse().ok()).unwrap_or(0)
+}
+
 /// Open a session and load (or compute-and-save) its calibration.
 pub fn session_with_calibration(model: &str) -> Result<(Session, Calibration)> {
     let root = artifacts_root();
@@ -44,9 +52,13 @@ pub fn session_with_calibration(model: &str) -> Result<(Session, Calibration)> {
         Err(_) => {
             eprintln!("[bench] calibrating {model} (cached in calibration.json)…");
             let delta = session.baseline().accuracy * 0.5;
-            let cal = calibrate_model(&session, delta, &SearchParams::default(), |line| {
-                eprintln!("[bench] {line}")
-            })?;
+            let cal = calibrate_model_jobs(
+                &session,
+                delta,
+                &SearchParams::default(),
+                bench_jobs(),
+                |line| eprintln!("[bench] {line}"),
+            )?;
             cal.save(&root)?;
             cal
         }
@@ -77,7 +89,7 @@ pub fn write_report(bench: &str, text: &str) {
 /// write the markdown report, and summarize the compression-at-matched-
 /// accuracy headline (T-CMP).
 pub fn run_figure_sweep(bench: &str, conv_only: bool, title: &str) {
-    use crate::coordinator::{run_sweep, SweepConfig};
+    use crate::coordinator::{run_sweep_jobs, EvalCache, SweepConfig};
     use crate::io::csv::CsvWriter;
     use crate::quant::Allocator;
     use crate::report::{ascii_plot, markdown_table, Align, Series};
@@ -102,6 +114,10 @@ pub fn run_figure_sweep(bench: &str, conv_only: bool, title: &str) {
         } else {
             SweepConfig::default_for(manifest.num_weighted_layers)
         };
+        // one eval cache per model across all three allocators — identical
+        // integer allocations (ladder-end clamps, rounding collisions)
+        // evaluate once for the whole figure
+        let cache = EvalCache::new();
         let mut series = Vec::new();
         let mut frontiers = Vec::new();
         let markers = ['o', 'x', '+'];
@@ -109,7 +125,8 @@ pub fn run_figure_sweep(bench: &str, conv_only: bool, title: &str) {
             .into_iter()
             .enumerate()
         {
-            let result = run_sweep(&session, alloc, &stats, &cfg).unwrap();
+            let result =
+                run_sweep_jobs(&session, alloc, &stats, &cfg, bench_jobs(), &cache).unwrap();
             let mut csv = CsvWriter::create(
                 dir.join(format!("{model}_{}.csv", alloc.name())),
                 &["b1", "size_bytes", "accuracy"],

@@ -12,12 +12,17 @@
 //! * [`Session::baseline`] — cached fp32 logits / accuracy / margins.
 //!
 //! On top of those, [`sweep`] traces the paper's size-accuracy trade-off
-//! curves (Fig. 6/8) for any [`Allocator`].
+//! curves (Fig. 6/8) for any [`Allocator`], and [`pool`] schedules the
+//! independent evaluations of calibration and sweeps across a
+//! deterministic job pool (`--jobs N` on the CLI) — sessions are
+//! `Send + Sync`, so one session serves every worker.
 
+pub mod pool;
 mod serve;
 mod session;
 mod sweep;
 
+pub use pool::JobPool;
 pub use serve::{serve_loop, ServeStats};
 pub use session::{Baseline, EvalOutput, Session};
-pub use sweep::{run_sweep, SweepConfig, SweepResult};
+pub use sweep::{run_sweep, run_sweep_jobs, EvalCache, SweepConfig, SweepResult};

@@ -1,0 +1,171 @@
+//! The coordinator's work scheduler: a small scoped-thread job pool for
+//! the embarrassingly parallel tiers above the kernels — per-layer
+//! calibration searches (Alg. 1/2) and the Fig. 6/8 sweep's independent
+//! full-dataset evaluations.
+//!
+//! Design constraints, in order:
+//!
+//! 1. **Determinism** — results are collected by job index, so the output
+//!    of [`JobPool::run`] is independent of worker count and scheduling.
+//!    Combined with the GEMM's thread-count-invariant accumulation order,
+//!    every pipeline built on the pool produces byte-identical artifacts
+//!    at any `--jobs` value.
+//! 2. **No oversubscription** — callers whose jobs evaluate through a
+//!    [`Session`](super::Session) declare the job count via
+//!    [`Session::set_parallel_budget`](super::Session::set_parallel_budget),
+//!    and the backend divides its internal batch/GEMM thread budget by
+//!    it (see [`crate::runtime::CpuBackend`]).
+//! 3. **Allocation reuse** — each worker owns one
+//!    [`Scratch`](crate::util::Scratch) arena for the lifetime of the
+//!    run, handed to every job it executes, so per-job buffers (noise
+//!    tensors, fake-quant outputs) recycle instead of reallocating.
+//!
+//! Jobs are pulled from an atomic counter (dynamic scheduling), which
+//! keeps workers busy when job costs are skewed — layer calibration times
+//! vary by an order of magnitude between a 3×3×1 stem conv and an FC
+//! layer.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+
+use crate::util::Scratch;
+
+/// A fixed-size pool of scoped worker threads executing indexed jobs.
+///
+/// The pool itself is stateless between runs (workers are scoped to each
+/// [`JobPool::run`] call); constructing one is free, so per-command pools
+/// — `adaq calibrate --jobs N` — are the intended usage.
+#[derive(Clone, Copy, Debug)]
+pub struct JobPool {
+    jobs: usize,
+}
+
+impl JobPool {
+    /// A pool with `jobs` workers; `0` picks the machine's available
+    /// parallelism (capped at 16, like the backend's own thread pool).
+    pub fn new(jobs: usize) -> JobPool {
+        let jobs = if jobs == 0 {
+            std::thread::available_parallelism().map_or(1, |v| v.get()).min(16)
+        } else {
+            jobs
+        };
+        JobPool { jobs }
+    }
+
+    /// The worker count this pool runs with.
+    pub fn jobs(&self) -> usize {
+        self.jobs
+    }
+
+    /// Execute jobs `0..n` across the workers and return their results
+    /// **in job order**. `f` receives the job index and the executing
+    /// worker's [`Scratch`] arena.
+    ///
+    /// With one worker (or one job) everything runs inline on the caller's
+    /// thread in index order — byte-identical to a hand-written loop, so
+    /// sequential paths can share this entry point.
+    pub fn run<T, F>(&self, n: usize, f: F) -> Vec<T>
+    where
+        T: Send,
+        F: Fn(usize, &mut Scratch) -> T + Sync,
+    {
+        let workers = self.jobs.min(n).max(1);
+        if workers <= 1 {
+            let mut scratch = Scratch::new();
+            return (0..n).map(|i| f(i, &mut scratch)).collect();
+        }
+        let next = AtomicUsize::new(0);
+        let parts: Vec<Vec<(usize, T)>> = std::thread::scope(|s| {
+            let handles: Vec<_> = (0..workers)
+                .map(|_| {
+                    s.spawn(|| {
+                        let mut scratch = Scratch::new();
+                        let mut done = Vec::new();
+                        loop {
+                            let i = next.fetch_add(1, Ordering::Relaxed);
+                            if i >= n {
+                                break;
+                            }
+                            done.push((i, f(i, &mut scratch)));
+                        }
+                        done
+                    })
+                })
+                .collect();
+            handles
+                .into_iter()
+                .map(|h| h.join().expect("pool worker panicked"))
+                .collect()
+        });
+        // reassemble by job index — scheduling order never leaks out
+        let mut slots: Vec<Option<T>> = (0..n).map(|_| None).collect();
+        for part in parts {
+            for (i, v) in part {
+                debug_assert!(slots[i].is_none(), "job {i} ran twice");
+                slots[i] = Some(v);
+            }
+        }
+        slots
+            .into_iter()
+            .map(|s| s.expect("every job index assigned exactly once"))
+            .collect()
+    }
+}
+
+impl Default for JobPool {
+    /// The auto-sized pool (`JobPool::new(0)`).
+    fn default() -> Self {
+        JobPool::new(0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn results_are_in_job_order_any_worker_count() {
+        for jobs in [1usize, 2, 3, 8, 32] {
+            let pool = JobPool::new(jobs);
+            let out = pool.run(17, |i, _| i * i);
+            assert_eq!(out, (0..17).map(|i| i * i).collect::<Vec<_>>(), "jobs={jobs}");
+        }
+    }
+
+    #[test]
+    fn zero_jobs_autosizes_and_handles_empty_runs() {
+        let pool = JobPool::new(0);
+        assert!(pool.jobs() >= 1 && pool.jobs() <= 16);
+        let out: Vec<usize> = pool.run(0, |i, _| i);
+        assert!(out.is_empty());
+        // more workers than jobs is fine
+        assert_eq!(JobPool::new(16).run(2, |i, _| i), vec![0, 1]);
+    }
+
+    #[test]
+    fn workers_reuse_their_scratch() {
+        // a worker's scratch persists across the jobs it executes: after
+        // the first job pools a buffer, later jobs on the same worker get
+        // a recycled allocation (observable via capacity stability)
+        let pool = JobPool::new(1);
+        let caps = pool.run(3, |_, scratch| {
+            let buf = scratch.take(64);
+            let cap = buf.capacity();
+            scratch.put(buf);
+            cap
+        });
+        assert_eq!(caps[0], caps[1]);
+        assert_eq!(caps[1], caps[2]);
+    }
+
+    #[test]
+    fn skewed_job_costs_still_collect_correctly() {
+        let pool = JobPool::new(4);
+        let out = pool.run(12, |i, _| {
+            if i % 3 == 0 {
+                std::thread::sleep(std::time::Duration::from_millis(2));
+            }
+            i + 100
+        });
+        assert_eq!(out, (100..112).collect::<Vec<_>>());
+    }
+}

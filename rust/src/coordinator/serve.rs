@@ -5,7 +5,7 @@
 
 use crate::dataset::Dataset;
 use crate::tensor::Tensor;
-use crate::util::Timer;
+use crate::util::{percentile_nearest_rank, Timer};
 use crate::{Error, Result};
 
 use super::Session;
@@ -71,8 +71,10 @@ pub fn serve_loop(session: &Session, data: &Dataset, bits: &[f32], n: usize) -> 
         }
     }
     let total_seconds = total.seconds();
-    latencies.sort_by(|a, b| a.partial_cmp(b).unwrap());
-    let pct = |p: f64| latencies[((latencies.len() as f64 - 1.0) * p) as usize];
+    latencies.sort_by(f64::total_cmp);
+    // nearest-rank (⌈p·n⌉): the truncating (n−1)·p index biased p99 low
+    // at small request counts (n=10 reported the 9th-slowest as p99)
+    let pct = |p: f64| percentile_nearest_rank(&latencies, p);
     Ok(ServeStats {
         requests: n,
         correct,

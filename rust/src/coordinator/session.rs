@@ -1,8 +1,15 @@
 //! Per-model evaluation session with cached baseline state, generic over
 //! the execution [`Backend`] (CPU by default, PJRT behind the `pjrt`
 //! feature).
+//!
+//! A `Session` is **shareable**: every evaluation primitive takes
+//! `&self`, the backend is `Send + Sync`, and the exec counter is atomic,
+//! so the calibration/sweep job pool (see
+//! [`pool`](crate::coordinator::pool)) can drive one session from many
+//! scoped worker threads (`&Session` or `Arc<Session>`) concurrently.
 
 use std::path::Path;
+use std::sync::atomic::{AtomicU64, Ordering};
 
 use crate::dataset::Dataset;
 use crate::model::ModelArtifacts;
@@ -41,8 +48,11 @@ pub struct Session {
     labels: Vec<Vec<i32>>,
     backend: Box<dyn Backend>,
     baseline: Baseline,
-    /// Forward executions since session start (perf accounting).
-    pub exec_count: std::cell::Cell<u64>,
+    /// Forward executions since session start (perf accounting). Atomic
+    /// so concurrent evaluation jobs can note their executions through
+    /// `&Session`; read with `load(Ordering::Relaxed)` (or use
+    /// [`Session::execs`], which reads the backend counter directly).
+    pub exec_count: AtomicU64,
 }
 
 impl Session {
@@ -121,7 +131,7 @@ impl Session {
             labels,
             backend,
             baseline: Baseline { logits: vec![], accuracy: 0.0, margins: vec![] },
-            exec_count: std::cell::Cell::new(0),
+            exec_count: AtomicU64::new(0),
         };
         session.baseline = session.compute_baseline()?;
         Ok(session)
@@ -144,8 +154,27 @@ impl Session {
         &self.baseline
     }
 
+    /// Exact forward executions since session start, read from the
+    /// backend's own counter — always current, even while concurrent
+    /// jobs are mid-evaluation.
+    pub fn execs(&self) -> u64 {
+        self.backend.execs()
+    }
+
+    /// Declare how many coordinator-level jobs will evaluate through this
+    /// session concurrently, so the backend can split its thread budget
+    /// between job-level and batch/GEMM-level parallelism (see
+    /// [`Backend::set_parallel_budget`]). Pass 1 to restore exclusive
+    /// single-job scheduling.
+    pub fn set_parallel_budget(&self, outer_jobs: usize) {
+        self.backend.set_parallel_budget(outer_jobs);
+    }
+
     fn note_execs(&self) {
-        self.exec_count.set(self.backend.execs());
+        // fetch_max (not store): concurrent workers may observe the
+        // backend counter out of order, and the published count must
+        // never move backwards
+        self.exec_count.fetch_max(self.backend.execs(), Ordering::Relaxed);
     }
 
     fn compute_baseline(&self) -> Result<Baseline> {
@@ -233,4 +262,12 @@ impl Session {
         // param slot 0 is the input batch; weights.params starts at slot 1
         Ok((wi - 1, &self.artifacts.weights.params[wi - 1].1))
     }
+}
+
+// Compile-time guarantee behind the job pool: a session is usable from
+// scoped threads as `&Session` / `Arc<Session>`.
+#[allow(dead_code)]
+fn _assert_session_shareable() {
+    fn assert_send_sync<T: Send + Sync>() {}
+    assert_send_sync::<Session>();
 }

@@ -2,13 +2,28 @@
 //! and a ladder of anchor bit-widths b₁, build allocations, integerize by
 //! threshold rounding, evaluate each through the Pallas `qforward`
 //! executable, and report every point plus the Pareto frontier.
+//!
+//! Execution model (the concurrency refactor): candidate allocations are
+//! enumerated up front, **deduplicated through a memoizing
+//! [`EvalCache`]** keyed on the integerized bits vector, and only the
+//! cache misses are evaluated — across a [`JobPool`] when `jobs > 1`.
+//! Threshold rounding and the 1..=16 clamp collapse many (b₁, θ) cells
+//! onto the same integer allocation, and different allocators converge on
+//! the same vectors at the ladder ends, so sharing one cache across a
+//! whole figure (all allocators, both sweeps) saves a large fraction of
+//! the full-dataset evaluations. Results are byte-identical to the
+//! sequential, uncached path: evaluation is deterministic and
+//! thread-count-invariant, so a cached accuracy equals a re-measured one.
+
+use std::collections::{HashMap, HashSet};
+use std::sync::Mutex;
 
 use crate::quant::{
     enumerate_roundings, pareto_frontier, Allocation, Allocator, LayerStats, SweepPoint,
 };
 use crate::Result;
 
-use super::Session;
+use super::{JobPool, Session};
 
 /// Sweep configuration.
 #[derive(Clone, Debug)]
@@ -50,6 +65,52 @@ impl SweepConfig {
     }
 }
 
+/// Memoizing evaluation cache for sweep points, keyed on the exact
+/// (integerized) bits vector handed to the backend.
+///
+/// One cache is scoped to **one session** (model + test split): accuracies
+/// are only reusable against the same weights and data. Share it across
+/// allocators and threshold ladders of that session — duplicate
+/// allocations then trigger exactly one backend evaluation each
+/// (assertable via [`Session::execs`]).
+///
+/// Internally a mutex-guarded map; lookups are a hash of ≤ #layers f32
+/// bit patterns, negligible against a full-dataset forward.
+#[derive(Debug, Default)]
+pub struct EvalCache {
+    accuracy: Mutex<HashMap<Vec<u32>, f64>>,
+}
+
+impl EvalCache {
+    pub fn new() -> EvalCache {
+        EvalCache::default()
+    }
+
+    /// Exact key: the bit patterns of the f32 bits vector (the same
+    /// representation the backend caches quantized parameters under).
+    fn key(bits: &[f32]) -> Vec<u32> {
+        bits.iter().map(|b| b.to_bits()).collect()
+    }
+
+    /// Cached accuracy for `bits`, if this vector was evaluated before.
+    pub fn get(&self, bits: &[f32]) -> Option<f64> {
+        self.accuracy.lock().unwrap().get(&Self::key(bits)).copied()
+    }
+
+    fn insert(&self, bits: &[f32], acc: f64) {
+        self.accuracy.lock().unwrap().insert(Self::key(bits), acc);
+    }
+
+    /// Distinct bit vectors evaluated so far.
+    pub fn len(&self) -> usize {
+        self.accuracy.lock().unwrap().len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
 /// All evaluated points for one allocator.
 #[derive(Clone, Debug)]
 pub struct SweepResult {
@@ -58,37 +119,86 @@ pub struct SweepResult {
     pub frontier: Vec<SweepPoint>,
 }
 
-/// Run a sweep for `allocator` over the anchor ladder.
+/// Run a sweep for `allocator` over the anchor ladder — sequential,
+/// private-cache convenience wrapper over [`run_sweep_jobs`]. Duplicate
+/// allocations within this one sweep still evaluate once.
 pub fn run_sweep(
     session: &Session,
     allocator: Allocator,
     stats: &[LayerStats],
     cfg: &SweepConfig,
 ) -> Result<SweepResult> {
-    let mut points = Vec::new();
+    run_sweep_jobs(session, allocator, stats, cfg, 1, &EvalCache::new())
+}
+
+/// Run a sweep for `allocator` with its unique allocations evaluated
+/// across a `jobs`-worker pool and memoized in `cache`.
+///
+/// Pass the same `cache` to successive calls on the same session (other
+/// allocators, the conv-only and all-layers variants) to evaluate each
+/// distinct integer allocation once per figure instead of once per
+/// appearance. Output is byte-identical at every `jobs` value, and to the
+/// pre-cache sequential driver.
+pub fn run_sweep_jobs(
+    session: &Session,
+    allocator: Allocator,
+    stats: &[LayerStats],
+    cfg: &SweepConfig,
+    jobs: usize,
+    cache: &EvalCache,
+) -> Result<SweepResult> {
+    // 1. enumerate every candidate point (cheap, closed-form)
+    let mut candidates: Vec<(f64, Allocation, Vec<f32>)> = Vec::new();
     for &b1 in &cfg.b1_values {
         let frac = allocator.allocate(stats, b1, &cfg.mask, cfg.frozen_bits);
-        let candidates: Vec<Allocation> = if matches!(allocator, Allocator::Equal) {
+        let allocs: Vec<Allocation> = if matches!(allocator, Allocator::Equal) {
             // equal bit-width is integral already; no extra datapoints
             vec![Allocation { bits: frac.bits.clone(), mask: frac.mask.clone() }]
         } else {
             enumerate_roundings(&frac, cfg.roundings)
         };
-        for alloc in candidates {
+        for alloc in allocs {
             let bits_f32: Vec<f32> = alloc.bits.iter().map(|&b| b as f32).collect();
-            let eval = session.eval_qbits(&bits_f32)?;
-            points.push(SweepPoint {
-                b1,
-                bits: alloc.bits.clone(),
-                // Fig. 6 protocol: frozen layers (FC @ 16 bits) are a
-                // constant for every allocator and excluded from the
-                // plotted size; with everything quantized this equals the
-                // total Σ s_i·b_i.
-                size_bytes: alloc.size_bytes_quantized(stats),
-                accuracy: eval.accuracy,
-            });
+            candidates.push((b1, alloc, bits_f32));
         }
     }
+
+    // 2. the distinct bit vectors not already memoized
+    let mut seen: HashSet<Vec<u32>> = HashSet::new();
+    let mut pending: Vec<&[f32]> = Vec::new();
+    for (_, _, bits) in &candidates {
+        if cache.get(bits).is_none() && seen.insert(EvalCache::key(bits)) {
+            pending.push(bits);
+        }
+    }
+
+    // 3. evaluate the misses — one backend evaluation per distinct
+    //    allocation, scheduled across the pool
+    let pool = JobPool::new(jobs); // 0 = auto-size to the machine
+    session.set_parallel_budget(pool.jobs().min(pending.len().max(1)));
+    let evals = pool.run(pending.len(), |i, _scratch| {
+        session.eval_qbits(pending[i]).map(|out| out.accuracy)
+    });
+    session.set_parallel_budget(1);
+    for (bits, acc) in pending.iter().zip(evals) {
+        cache.insert(bits, acc?);
+    }
+
+    // 4. assemble every point from the cache (duplicates resolve to the
+    //    single measured accuracy)
+    let points: Vec<SweepPoint> = candidates
+        .into_iter()
+        .map(|(b1, alloc, bits)| SweepPoint {
+            b1,
+            // Fig. 6 protocol: frozen layers (FC @ 16 bits) are a
+            // constant for every allocator and excluded from the
+            // plotted size; with everything quantized this equals the
+            // total Σ s_i·b_i.
+            size_bytes: alloc.size_bytes_quantized(stats),
+            accuracy: cache.get(&bits).expect("evaluated or cached above"),
+            bits: alloc.bits,
+        })
+        .collect();
     let frontier = pareto_frontier(&points);
     Ok(SweepResult { allocator, points, frontier })
 }

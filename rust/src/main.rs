@@ -11,10 +11,10 @@
 //!   selfcheck  — artifact inventory + PJRT↔rust-nn cross-validation
 
 use adaq::cli::Args;
-use adaq::coordinator::{run_sweep, serve_loop, Session, SweepConfig};
+use adaq::coordinator::{run_sweep_jobs, serve_loop, EvalCache, Session, SweepConfig};
 use adaq::dataset::Dataset;
 use adaq::measure::{
-    adversarial_stats, calibrate_model, Calibration,
+    adversarial_stats, calibrate_model_jobs, Calibration,
 };
 use adaq::model::ModelArtifacts;
 use adaq::nn::GraphExecutor;
@@ -30,17 +30,19 @@ adaq — Adaptive Quantization for DNNs (AAAI'18) coordinator
 USAGE: adaq <command> [--flags]
 
   info       --model M [--artifacts DIR]
-  calibrate  --model M [--delta-acc F] [--batch N] [--seeds N]
+  calibrate  --model M [--delta-acc F] [--batch N] [--seeds N] [--jobs N]
   allocate   --model M [--allocator adaptive|sqnr|equal] [--b1 F] [--conv-only]
   evaluate   --model M (--bits 8,6,4,… | --allocator A --b1 F) [--conv-only]
-  sweep      --model M [--allocators a,b,c] [--conv-only] [--out CSV-DIR]
+  sweep      --model M [--allocators a,b,c] [--conv-only] [--out CSV-DIR] [--jobs N]
   serve      --model M [--bits …] [--requests N] [--int8]
   export     --model M (--bits … | --allocator A --b1 F) [--out DIR]
   figures    [--models a,b,…] (regenerate Fig. 6/8 sweeps in-process)
   selfcheck  [--models a,b,…]
   help
 
-Common flags: --artifacts DIR (default ./artifacts), --batch N (default 250)
+Common flags: --artifacts DIR (default ./artifacts), --batch N (default 250),
+--jobs N (parallel calibration/sweep jobs; 0 = auto, capped at 16; default
+1 — any value produces byte-identical outputs)
 ";
 
 fn main() {
@@ -140,20 +142,21 @@ fn cmd_calibrate(args: &Args) -> Result<()> {
     let model = args.req_flag("model")?;
     let batch = args.usize_flag("batch", 250)?;
     let seeds = args.usize_flag("seeds", 2)?;
+    let jobs = args.usize_flag("jobs", 1)?;
     let session = Session::open(&root, &model, batch)?;
     let base_acc = session.baseline().accuracy;
     // paper: Δacc ≈ half the base accuracy (57% → 28%)
     let delta_acc = args.f64_flag("delta-acc", base_acc * 0.5)?;
     let sp = adaq::measure::SearchParams { seeds, ..Default::default() };
     let t = Timer::start();
-    let cal = calibrate_model(&session, delta_acc, &sp, |line| println!("{line}"))?;
+    let cal = calibrate_model_jobs(&session, delta_acc, &sp, jobs, |line| println!("{line}"))?;
     cal.save(&root)?;
     println!(
         "saved {} ({} layers, {:.1}s, {} forward execs)",
         Calibration::path(&root, &model).display(),
         cal.layers.len(),
         t.seconds(),
-        session.exec_count.get()
+        session.execs()
     );
     Ok(())
 }
@@ -283,17 +286,25 @@ fn cmd_sweep(args: &Args) -> Result<()> {
         SweepConfig::default_for(manifest.num_weighted_layers)
     };
     cfg.roundings = args.usize_flag("roundings", 4)?;
+    let jobs = args.usize_flag("jobs", 1)?;
     let names = args.list_flag("allocators", &["adaptive", "sqnr", "equal"]);
 
+    // one memoizing cache across every allocator: duplicate integer
+    // allocations (threshold-rounding collisions, ladder-end clamps)
+    // evaluate exactly once for the whole command
+    let cache = EvalCache::new();
     let mut series = Vec::new();
     let markers = ['o', 'x', '+'];
     for (i, name) in names.iter().enumerate() {
         let alloc = parse_allocator(name)?;
         let t = Timer::start();
-        let result = run_sweep(&session, alloc, &stats, &cfg)?;
+        let before = cache.len();
+        let result = run_sweep_jobs(&session, alloc, &stats, &cfg, jobs, &cache)?;
         println!(
-            "{name}: {} points, {} on frontier [{:.1}s]",
+            "{name}: {} points ({} evaluated, {} cache hits), {} on frontier [{:.1}s]",
             result.points.len(),
+            cache.len() - before,
+            result.points.len() - (cache.len() - before),
             result.frontier.len(),
             t.seconds()
         );

@@ -17,6 +17,7 @@ mod robustness;
 pub use adversarial::{adversarial_stats, AdversarialStats};
 pub use probes::{additivity_probe, linearity_probe, AdditivityPoint, LinearityCurve};
 pub use robustness::{
-    calibrate_model, calibrate_t, estimate_p, estimate_p_robust, estimate_p_with, CalibratedLayer,
-    Calibration, RobustnessCurve, SearchParams, P_REF_BITS_MULTI,
+    calibrate_model, calibrate_model_jobs, calibrate_t, calibrate_t_with, estimate_p,
+    estimate_p_robust, estimate_p_robust_with, estimate_p_with, CalibratedLayer, Calibration,
+    RobustnessCurve, SearchParams, P_REF_BITS_MULTI,
 };

@@ -8,7 +8,7 @@
 //! **p_i** (Alg. 2): quantize layer i alone at a reference width b_ref,
 //! measure mean‖r_z_i‖², and invert Eq. 16: `p_i = mean·e^(α·b_ref)`.
 
-use crate::coordinator::Session;
+use crate::coordinator::{JobPool, Session};
 use crate::quant::{fake_quant_with, LayerStats};
 use crate::rng::{fill_uniform_pm_half, Pcg32};
 use crate::tensor::Tensor;
@@ -110,8 +110,14 @@ impl Calibration {
                 .map(|pts| {
                     pts.iter()
                         .filter_map(|p| {
+                            // malformed/short curve points (hand-edited or
+                            // truncated files) are dropped, not a panic
                             let a = p.as_arr()?;
-                            Some((a[0].as_f64()?, a[1].as_f64()?, a[2].as_f64()?))
+                            Some((
+                                a.first()?.as_f64()?,
+                                a.get(1)?.as_f64()?,
+                                a.get(2)?.as_f64()?,
+                            ))
                         })
                         .collect()
                 })
@@ -183,6 +189,20 @@ pub fn calibrate_t(
     mean_rstar: f64,
     sp: &SearchParams,
 ) -> Result<CalibratedLayer> {
+    calibrate_t_with(session, qi, delta_acc, mean_rstar, sp, &mut Scratch::new())
+}
+
+/// [`calibrate_t`] with the noise and perturbed-weight buffers drawn from
+/// `scratch` — the job-pool entry point, where each worker's arena
+/// recycles these multi-MiB buffers across the layers it calibrates.
+pub fn calibrate_t_with(
+    session: &Session,
+    qi: usize,
+    delta_acc: f64,
+    mean_rstar: f64,
+    sp: &SearchParams,
+    scratch: &mut Scratch,
+) -> Result<CalibratedLayer> {
     let manifest = &session.artifacts.manifest;
     let wl = manifest.weighted_layers();
     let layer = wl
@@ -193,11 +213,13 @@ pub fn calibrate_t(
     let (pidx, w) = session.layer_weight(qi)?;
     let base_acc = session.baseline().accuracy;
 
-    // unit noise U(-0.5, 0.5), one draw per seed, scaled by k each probe
+    // unit noise U(-0.5, 0.5), one draw per seed, scaled by k each probe;
+    // buffers come from the worker's scratch arena (fill overwrites every
+    // element, so recycled contents never leak into the draw)
     let mut noises = Vec::with_capacity(sp.seeds);
     for seed in 0..sp.seeds {
         let mut rng = Pcg32::new(0x7A51 + 1000 * seed as u64 + qi as u64);
-        let mut buf = vec![0f32; w.len()];
+        let mut buf = scratch.take_any(w.len());
         fill_uniform_pm_half(&mut rng, &mut buf);
         noises.push(Tensor::from_vec(w.shape(), buf).unwrap());
     }
@@ -208,7 +230,7 @@ pub fn calibrate_t(
     // final-estimate quality. The perturbed tensor is one buffer reused
     // across every probe (w + k·noise written in place), so the search no
     // longer allocates multi-MiB weight copies per step.
-    let mut perturbed = Tensor::zeros(w.shape());
+    let mut perturbed = Tensor::from_vec(w.shape(), scratch.take_any(w.len())).unwrap();
     let mut probe = |k: f64, n_seeds: usize| -> Result<(f64, f64)> {
         let mut acc_sum = 0f64;
         let mut rz_sum = 0f64;
@@ -255,6 +277,10 @@ pub fn calibrate_t(
         rz_at_delta = rz;
         points.push((k_at_delta, rz, acc));
     }
+    scratch.put(perturbed.into_vec());
+    for noise in noises {
+        scratch.put(noise.into_vec());
+    }
     let t = rz_at_delta / mean_rstar;
     Ok(CalibratedLayer {
         name: name.clone(),
@@ -298,10 +324,19 @@ pub const P_REF_BITS_MULTI: [f64; 2] = [6.0, 8.0];
 /// Robust p_i: geometric mean of [`estimate_p`] across
 /// [`P_REF_BITS_MULTI`].
 pub fn estimate_p_robust(session: &Session, qi: usize) -> Result<f64> {
-    let mut scratch = Scratch::new();
+    estimate_p_robust_with(session, qi, &mut Scratch::new())
+}
+
+/// [`estimate_p_robust`] with quantized-weight buffers drawn from
+/// `scratch` (the job-pool entry point).
+pub fn estimate_p_robust_with(
+    session: &Session,
+    qi: usize,
+    scratch: &mut Scratch,
+) -> Result<f64> {
     let mut log_sum = 0f64;
     for &b in &P_REF_BITS_MULTI {
-        let p = estimate_p_with(session, qi, b, &mut scratch)?;
+        let p = estimate_p_with(session, qi, b, scratch)?;
         if p <= 0.0 || !p.is_finite() {
             return Err(Error::Calibration(format!(
                 "layer {qi}: p estimate {p} at b_ref {b}"
@@ -314,10 +349,33 @@ pub fn estimate_p_robust(session: &Session, qi: usize) -> Result<f64> {
 
 /// Full-model calibration: mean_r* → t_i for every layer (Alg. 1) → p_i
 /// for every layer (Alg. 2). `progress` receives one line per step.
+///
+/// Sequential convenience wrapper over [`calibrate_model_jobs`] with one
+/// job — byte-identical output, streaming per-layer progress.
 pub fn calibrate_model(
     session: &Session,
     delta_acc: f64,
     sp: &SearchParams,
+    progress: impl FnMut(&str),
+) -> Result<Calibration> {
+    calibrate_model_jobs(session, delta_acc, sp, 1, progress)
+}
+
+/// [`calibrate_model`] with the per-layer searches scheduled across a
+/// `jobs`-worker [`JobPool`] (0 = auto-size to the machine).
+///
+/// Every layer's Alg. 1 binary search and Alg. 2 probes are independent
+/// given the shared `mean_r*` (computed once up front), and each layer's
+/// noise draws are seeded by its qindex alone — so the result is
+/// **byte-identical at every job count**: same t/p/k_at_delta bits, same
+/// curves, same `calibration.json`. Results are collected by qindex;
+/// per-layer progress lines are emitted in qindex order (streamed as
+/// layers complete when sequential, after the pool joins when parallel).
+pub fn calibrate_model_jobs(
+    session: &Session,
+    delta_acc: f64,
+    sp: &SearchParams,
+    jobs: usize,
     mut progress: impl FnMut(&str),
 ) -> Result<Calibration> {
     let manifest = &session.artifacts.manifest;
@@ -327,15 +385,44 @@ pub fn calibrate_model(
         "[{}] base_acc={:.4} mean_r*={:.4} Δacc={:.3}",
         manifest.model, base_acc, stats.mean_rstar, delta_acc
     ));
-    let mut layers = Vec::with_capacity(manifest.num_weighted_layers);
-    for qi in 0..manifest.num_weighted_layers {
-        let mut cal = calibrate_t(session, qi, delta_acc, stats.mean_rstar, sp)?;
-        cal.p = estimate_p_robust(session, qi)?;
-        progress(&format!(
+    let nwl = manifest.num_weighted_layers;
+    let pool = JobPool::new(jobs); // 0 = auto; run() caps workers at nwl
+    let layer_line = |cal: &CalibratedLayer| {
+        format!(
             "  layer {:<12} s={:<8} t={:<12.4} p={:<12.4} k@Δ={:.4}",
             cal.name, cal.s, cal.t, cal.p, cal.k_at_delta
-        ));
-        layers.push(cal);
+        )
+    };
+    let mut layers = Vec::with_capacity(nwl);
+    if pool.jobs() <= 1 {
+        // sequential: keep the historical streaming behavior (a line per
+        // layer as it finishes)
+        let mut scratch = Scratch::new();
+        for qi in 0..nwl {
+            let mut cal =
+                calibrate_t_with(session, qi, delta_acc, stats.mean_rstar, sp, &mut scratch)?;
+            cal.p = estimate_p_robust_with(session, qi, &mut scratch)?;
+            progress(&layer_line(&cal));
+            layers.push(cal);
+        }
+    } else {
+        let workers = pool.jobs().min(nwl);
+        progress(&format!("  calibrating {nwl} layers across {workers} jobs…"));
+        // split the backend's thread budget across the workers for the
+        // duration of the pooled section
+        session.set_parallel_budget(workers);
+        let results = pool.run(nwl, |qi, scratch| -> Result<CalibratedLayer> {
+            let mut cal =
+                calibrate_t_with(session, qi, delta_acc, stats.mean_rstar, sp, scratch)?;
+            cal.p = estimate_p_robust_with(session, qi, scratch)?;
+            Ok(cal)
+        });
+        session.set_parallel_budget(1);
+        for r in results {
+            let cal = r?;
+            progress(&layer_line(&cal));
+            layers.push(cal);
+        }
     }
     Ok(Calibration {
         model: manifest.model.clone(),

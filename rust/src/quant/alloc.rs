@@ -177,9 +177,17 @@ pub struct SweepPoint {
 
 /// Pareto frontier of (size ↓, accuracy ↑): returns the subset of points
 /// not dominated by any other, sorted by size.
+///
+/// NaN-robust: sizes compare with `f64::total_cmp` (a total order — no
+/// panic, unlike `partial_cmp(..).unwrap()`), and points with a NaN size
+/// or accuracy are excluded up front, so one poisoned evaluation cannot
+/// take down — or pollute — a whole sweep.
 pub fn pareto_frontier(points: &[SweepPoint]) -> Vec<SweepPoint> {
-    let mut sorted: Vec<&SweepPoint> = points.iter().collect();
-    sorted.sort_by(|a, b| a.size_bytes.partial_cmp(&b.size_bytes).unwrap());
+    let mut sorted: Vec<&SweepPoint> = points
+        .iter()
+        .filter(|p| !p.size_bytes.is_nan() && !p.accuracy.is_nan())
+        .collect();
+    sorted.sort_by(|a, b| a.size_bytes.total_cmp(&b.size_bytes));
     let mut out: Vec<SweepPoint> = Vec::new();
     let mut best_acc = f64::NEG_INFINITY;
     for p in sorted {
@@ -351,6 +359,31 @@ mod tests {
         for a in enumerate_roundings(&frac, 4) {
             assert_eq!(a.bits[1], 16.0);
         }
+    }
+
+    #[test]
+    fn pareto_survives_nan_points() {
+        // a NaN size or accuracy must neither panic the sort nor reach
+        // the frontier
+        let pts = vec![
+            SweepPoint { b1: 1.0, bits: vec![], size_bytes: 100.0, accuracy: 0.5 },
+            SweepPoint { b1: 2.0, bits: vec![], size_bytes: f64::NAN, accuracy: 0.9 },
+            SweepPoint { b1: 3.0, bits: vec![], size_bytes: 200.0, accuracy: f64::NAN },
+            SweepPoint { b1: 4.0, bits: vec![], size_bytes: 300.0, accuracy: 0.8 },
+        ];
+        let front = pareto_frontier(&pts);
+        assert!(front.iter().all(|p| p.accuracy.is_finite() && p.size_bytes.is_finite()));
+        assert_eq!(front.len(), 2);
+        assert_eq!(front[0].size_bytes, 100.0);
+        assert_eq!(front[1].size_bytes, 300.0);
+        // all-NaN input degrades to an empty frontier, no panic
+        let all_nan = vec![SweepPoint {
+            b1: 1.0,
+            bits: vec![],
+            size_bytes: f64::NAN,
+            accuracy: f64::NAN,
+        }];
+        assert!(pareto_frontier(&all_nan).is_empty());
     }
 
     #[test]

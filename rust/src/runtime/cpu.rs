@@ -10,6 +10,13 @@
 //! identical logits because the per-batch compute is independent and the
 //! GEMM's accumulation order is thread-count-invariant.
 //!
+//! When the coordinator's job pool issues evaluations from several
+//! threads at once it declares that via
+//! [`Backend::set_parallel_budget`]: each evaluation then gets
+//! `threads / outer_jobs` batch workers (and pins GEMMs to one thread on
+//! the budget-exhausted inline path), so job-level × batch-level × GEMM
+//! threads never oversubscribe the machine.
+//!
 //! Serve path: the [`GraphPlan`] (use counts, fusion tables, resolved
 //! edges) is computed **once** in [`CpuBackend::new`] and shared by every
 //! forward — batch-1 requests no longer rebuild the analysis. With
@@ -20,7 +27,7 @@
 //! request. Bit-widths outside the int8 lattice (fractional, 0, or > 8)
 //! fall back to f32 fake-quant per layer.
 
-use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
 use std::sync::Mutex;
 
 use crate::dataset::Dataset;
@@ -57,6 +64,11 @@ pub struct CpuBackend {
     qlayer: Vec<usize>,
     /// Worker threads for full-dataset evaluation.
     threads: usize,
+    /// Coordinator-level jobs sharing this backend concurrently (the
+    /// parallelism budget): each `forward_batches` gets `threads /
+    /// outer_jobs` workers so job-level and batch-level threads compose
+    /// without oversubscription. 1 = exclusive (default).
+    outer_jobs: AtomicUsize,
     /// Serve requests take the integer path (see [`CpuBackend::with_int8_serving`]).
     int8_serving: bool,
     /// Cached quantized parameter set keyed on the bits vector (serve path).
@@ -108,6 +120,7 @@ impl CpuBackend {
             qparam,
             qlayer,
             threads,
+            outer_jobs: AtomicUsize::new(1),
             int8_serving: false,
             qcache: Mutex::new(None),
             qcache_int8: Mutex::new(None),
@@ -176,12 +189,29 @@ impl CpuBackend {
     }
 
     /// Run every batch through the graph with the given parameters,
-    /// splitting batches across up to `self.threads` workers.
+    /// splitting batches across up to `self.threads / outer_jobs`
+    /// workers (the parallelism budget — see
+    /// [`Backend::set_parallel_budget`]).
     fn forward_batches(&self, eff: &[&Tensor]) -> Result<Vec<Vec<f32>>> {
         let nb = self.batches.len();
         self.execs.fetch_add(nb as u64, Ordering::Relaxed);
-        let threads = self.threads.min(nb).max(1);
+        let outer = self.outer_jobs.load(Ordering::Relaxed).max(1);
+        let threads = (self.threads / outer).max(1).min(nb);
         if threads <= 1 {
+            if outer > 1 {
+                // under an outer job pool this evaluation owns one slot of
+                // the machine: keep nested GEMMs single-threaded too, and
+                // restore the caller's setting afterwards
+                let prev = tensor::gemm_threads();
+                tensor::set_gemm_threads(1);
+                let mut scratch = Scratch::new();
+                let mut out: Vec<Result<Vec<f32>>> = Vec::with_capacity(nb);
+                for xb in &self.batches {
+                    out.push(self.plan.forward_with(xb, eff, &mut scratch).map(Tensor::into_vec));
+                }
+                tensor::set_gemm_threads(prev);
+                return out.into_iter().collect();
+            }
             // runs on the caller's thread with GEMM threading left on
             // auto — a single-batch dataset still gets the cores through
             // the GEMM's own row-block parallelism (benches that want a
@@ -294,11 +324,17 @@ impl Backend for CpuBackend {
 
     fn forward_all_qbits(&self, bits: &[f32]) -> Result<Vec<Vec<f32>>> {
         self.check_bits(bits)?;
-        self.with_quantized(bits, |q| {
-            let refs: Vec<(usize, &Tensor)> = q.iter().map(|(pi, t)| (*pi, t)).collect();
-            let eff = self.effective(&refs)?;
-            self.forward_batches(&eff)
-        })
+        // quantize locally instead of through `with_quantized`: that
+        // helper holds the qcache mutex for the duration of the closure,
+        // which would serialize concurrent sweep evaluations issued by
+        // the job pool. The cache only earns its keep on the serve path
+        // (same bits every request); a sweep evaluates each distinct
+        // vector once, and fake-quant cost is negligible against the
+        // full-dataset forward.
+        let q = self.quantize_params(bits);
+        let refs: Vec<(usize, &Tensor)> = q.iter().map(|(pi, t)| (*pi, t)).collect();
+        let eff = self.effective(&refs)?;
+        self.forward_batches(&eff)
     }
 
     fn qforward_one(&self, x: &Tensor, bits: &[f32]) -> Result<Vec<f32>> {
@@ -326,6 +362,10 @@ impl Backend for CpuBackend {
 
     fn execs(&self) -> u64 {
         self.execs.load(Ordering::Relaxed)
+    }
+
+    fn set_parallel_budget(&self, outer_jobs: usize) {
+        self.outer_jobs.store(outer_jobs.max(1), Ordering::Relaxed);
     }
 }
 
@@ -476,6 +516,41 @@ mod tests {
         }
         assert!(be.forward_all(&[(99, &zeroed)]).is_err());
         assert!(be.forward_all_qbits(&[8.0]).is_err());
+    }
+
+    #[test]
+    fn parallel_budget_keeps_results_bitwise_identical() {
+        // evaluation under a split thread budget (outer jobs 1, 2 and 4,
+        // including the budget-exhausted inline path) must stay bitwise
+        // equal to the exclusive run — the budget only changes scheduling
+        let exclusive = toy_backend(4).forward_all(&[]).unwrap();
+        for outer in [2usize, 4, 16] {
+            let be = toy_backend(4);
+            be.set_parallel_budget(outer);
+            let got = be.forward_all(&[]).unwrap();
+            assert_eq!(exclusive.len(), got.len());
+            for (a, b) in exclusive.iter().zip(&got) {
+                for (x, y) in a.iter().zip(b) {
+                    assert_eq!(x.to_bits(), y.to_bits(), "outer={outer}");
+                }
+            }
+            // restoring the budget restores exclusive scheduling
+            be.set_parallel_budget(1);
+            let back = be.forward_all(&[]).unwrap();
+            assert_eq!(back, got);
+        }
+    }
+
+    #[test]
+    fn budget_inline_path_restores_gemm_threads() {
+        // the budget-exhausted inline path pins GEMMs to one thread for
+        // the duration of the call and must restore the caller's setting
+        tensor::set_gemm_threads(3);
+        let be = toy_backend(1).with_threads(1);
+        be.set_parallel_budget(8);
+        be.forward_all(&[]).unwrap();
+        assert_eq!(tensor::gemm_threads(), 3);
+        tensor::set_gemm_threads(0);
     }
 
     #[test]

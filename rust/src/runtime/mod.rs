@@ -35,7 +35,13 @@ use crate::Result;
 /// Overrides are `(position in the executable parameter list, tensor)`
 /// pairs; `bits` vectors are indexed by quantization index (one entry per
 /// weighted layer, `<= 0` = leave at fp32).
-pub trait Backend {
+///
+/// Backends are `Send + Sync`: the coordinator tier shares one backend
+/// across scoped worker threads (the calibration job pool issues
+/// concurrent [`Backend::forward_all`] calls for independent layers), so
+/// every implementation must use interior mutability that is safe under
+/// concurrent `&self` access (atomics, mutex-guarded caches).
+pub trait Backend: Send + Sync {
     /// Human-readable engine name for logs/benches ("cpu", "pjrt", …).
     fn name(&self) -> &'static str;
 
@@ -62,4 +68,13 @@ pub trait Backend {
 
     /// Forward executions since construction (perf accounting).
     fn execs(&self) -> u64;
+
+    /// Declare how many coordinator-level jobs will issue evaluations
+    /// concurrently, so the backend can split its internal thread budget
+    /// between job-level and batch/GEMM-level parallelism instead of
+    /// oversubscribing the machine (`outer_jobs` workers × full thread
+    /// pool each). `1` (or `0`) restores exclusive single-job behavior.
+    /// Backends without internal threading may ignore this (default
+    /// no-op).
+    fn set_parallel_budget(&self, _outer_jobs: usize) {}
 }

@@ -112,6 +112,16 @@ impl Executable {
 /// [`Backend`] on the PJRT engine: compiled `forward`/`qforward`
 /// executables plus device buffers for every dataset batch and trained
 /// weight, uploaded once at open.
+///
+/// **Re-enablement note (PR 3):** [`Backend`] now requires `Send + Sync`
+/// (the coordinator job pool shares one backend across worker threads).
+/// The xla-rs wrapper types held here (`PjRtClient`, `PjRtBuffer`,
+/// `PjRtLoadedExecutable`) are raw-pointer FFI handles with no Send/Sync
+/// impls, so wiring a real `xla` dependency (see rust/Cargo.toml) must
+/// also make this type satisfy the bound — either per-thread
+/// clients/buffers, a mutex-guarded engine, or audited `unsafe impl`s
+/// backed by the PJRT C API's documented thread-safety. Tracked in
+/// ROADMAP.md §PJRT feature re-enable.
 pub struct PjrtBackend {
     engine: Engine,
     forward: Executable,

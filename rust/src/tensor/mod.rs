@@ -275,6 +275,13 @@ pub fn set_gemm_threads(n: usize) {
     GEMM_THREADS.with(|c| c.set(n));
 }
 
+/// The calling thread's GEMM thread-count override (0 = auto). Lets
+/// callers that need to pin temporarily (e.g. a backend running inline
+/// under an outer job pool) save and restore the previous setting.
+pub fn gemm_threads() -> usize {
+    GEMM_THREADS.with(|c| c.get())
+}
+
 /// Threads to use for an m×k·k×n product: the thread-local override if
 /// set, else all cores for products big enough to amortize the spawns.
 fn gemm_auto_threads(m: usize, n: usize, k: usize) -> usize {

@@ -157,6 +157,20 @@ pub fn stddev(xs: &[f64]) -> f64 {
     (xs.iter().map(|&v| (v - m) * (v - m)).sum::<f64>() / xs.len() as f64).sqrt()
 }
 
+/// Nearest-rank percentile over an **ascending-sorted** slice: the value
+/// at 1-indexed rank `⌈p·n⌉` (p in [0, 1]).
+///
+/// Unlike the truncating `(n−1)·p` index, nearest-rank never biases tail
+/// percentiles low at small n — with n = 100, p99 is the 99th value
+/// (second-largest), not the 98th; with n = 10, p99 is the maximum.
+pub fn percentile_nearest_rank(sorted: &[f64], p: f64) -> f64 {
+    if sorted.is_empty() {
+        return f64::NAN;
+    }
+    let rank = (p.clamp(0.0, 1.0) * sorted.len() as f64).ceil() as usize;
+    sorted[rank.max(1) - 1]
+}
+
 /// Median (copies + sorts).
 pub fn median(xs: &[f64]) -> f64 {
     if xs.is_empty() {
@@ -247,6 +261,24 @@ mod tests {
         s.put_i32(c);
         assert_eq!(s.take_i32(200).len(), 200);
         assert_eq!(s.take_i32(7).len(), 7);
+    }
+
+    #[test]
+    fn percentile_nearest_rank_is_unbiased_at_small_n() {
+        let v: Vec<f64> = (1..=10).map(|i| i as f64).collect();
+        // rank ⌈0.5·10⌉ = 5 → value 5; ⌈0.99·10⌉ = 10 → the max —
+        // the truncating index ((n−1)·0.99 = 8.91 → 9th value) biased
+        // p99 low here
+        assert_eq!(percentile_nearest_rank(&v, 0.50), 5.0);
+        assert_eq!(percentile_nearest_rank(&v, 0.99), 10.0);
+        assert_eq!(percentile_nearest_rank(&v, 1.0), 10.0);
+        assert_eq!(percentile_nearest_rank(&v, 0.0), 1.0);
+        let w: Vec<f64> = (1..=100).map(|i| i as f64).collect();
+        assert_eq!(percentile_nearest_rank(&w, 0.99), 99.0);
+        assert_eq!(percentile_nearest_rank(&w, 0.50), 50.0);
+        // degenerate inputs
+        assert_eq!(percentile_nearest_rank(&[42.0], 0.99), 42.0);
+        assert!(percentile_nearest_rank(&[], 0.5).is_nan());
     }
 
     #[test]

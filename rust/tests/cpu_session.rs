@@ -68,7 +68,8 @@ fn opens_and_caches_baseline() {
     assert_eq!(base.margins.len(), 200);
     assert!((0.0..=1.0).contains(&base.accuracy));
     assert!(base.margins.iter().all(|&m| m >= 0.0));
-    assert!(session.exec_count.get() >= 4);
+    assert!(session.exec_count.load(std::sync::atomic::Ordering::Relaxed) >= 4);
+    assert!(session.execs() >= 4);
 }
 
 #[test]

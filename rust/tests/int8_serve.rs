@@ -192,6 +192,19 @@ fn int8_qforward_is_deterministic_across_requests() {
 }
 
 #[test]
+fn serve_percentiles_are_ordered_and_positive() {
+    let arts = trained_artifacts();
+    let test = Dataset::generate(50, TEST_SEED);
+    let session = Session::from_parts(arts, test.clone(), 1).unwrap();
+    // small n is exactly where the old truncating index biased p99 low
+    // (at n=10 nearest-rank p99 is the slowest request, not the 9th)
+    let stats = serve_loop(&session, &test, &[8.0, 8.0], 10).unwrap();
+    assert!(stats.p50_ms > 0.0);
+    assert!(stats.p99_ms >= stats.p50_ms, "p99 {} < p50 {}", stats.p99_ms, stats.p50_ms);
+    assert!(stats.throughput_rps > 0.0);
+}
+
+#[test]
 fn serve_loop_rejects_non_batch1_session() {
     let arts = trained_artifacts();
     let test = Dataset::generate(200, TEST_SEED);

@@ -1,0 +1,244 @@
+//! Determinism of the concurrent coordinator tier: parallel calibration
+//! (`calibrate_model_jobs`) and the cached/pooled sweep must be
+//! **byte-identical** to their sequential counterparts on a trained
+//! model — the `--jobs N` contract. Also covers the sweep eval cache's
+//! "one backend evaluation per distinct allocation" guarantee via
+//! `Session::execs`.
+
+use std::sync::OnceLock;
+
+use adaq::coordinator::{run_sweep, run_sweep_jobs, EvalCache, Session, SweepConfig};
+use adaq::dataset::{Dataset, IMG, NUM_CLASSES, TEST_SEED, TRAIN_SEED};
+use adaq::io::Json;
+use adaq::measure::{calibrate_model_jobs, SearchParams};
+use adaq::model::{Manifest, ModelArtifacts, WeightStore};
+use adaq::nn::softmax;
+use adaq::quant::Allocator;
+use adaq::rng::{fill_normal, Pcg32};
+use adaq::tensor::{matmul, Tensor};
+
+const HIDDEN: usize = 24;
+const PIXELS: usize = IMG * IMG;
+
+fn mlp_manifest() -> Manifest {
+    let json = format!(
+        r#"{{
+        "model": "determinism_mlp", "input_shape": [{IMG},{IMG},1],
+        "num_classes": {NUM_CLASSES}, "output": "fc2",
+        "num_weighted_layers": 2,
+        "total_quantizable_params": {},
+        "layers": [
+          {{"name":"flat","kind":"flatten","inputs":["input"]}},
+          {{"name":"fc1","kind":"dense","inputs":["flat"],"cin":{PIXELS},
+           "cout":{HIDDEN},"param_idx_w":1,"param_idx_b":2,"qindex":0,
+           "s_i":{}}},
+          {{"name":"relu1","kind":"relu","inputs":["fc1"]}},
+          {{"name":"fc2","kind":"dense","inputs":["relu1"],"cin":{HIDDEN},
+           "cout":{NUM_CLASSES},"param_idx_w":3,"param_idx_b":4,"qindex":1,
+           "s_i":{}}}
+        ]}}"#,
+        PIXELS * HIDDEN + HIDDEN * NUM_CLASSES,
+        PIXELS * HIDDEN,
+        HIDDEN * NUM_CLASSES,
+    );
+    Manifest::from_json(&Json::parse(&json).unwrap()).unwrap()
+}
+
+/// A few epochs of the quickstart MLP training loop — enough that the
+/// model is genuinely trained (accuracy well above the 10% chance floor)
+/// and calibration's binary search operates on a real accuracy cliff.
+fn train_mlp(train: &Dataset, epochs: usize, lr: f32) -> Vec<Tensor> {
+    let mut rng = Pcg32::new(0x5EED);
+    let scaled = |shape: &[usize], scale: f32, rng: &mut Pcg32| {
+        let n: usize = shape.iter().product();
+        let mut data = vec![0f32; n];
+        fill_normal(rng, &mut data);
+        for v in data.iter_mut() {
+            *v *= scale;
+        }
+        Tensor::from_vec(shape, data).unwrap()
+    };
+    let mut w1 = scaled(&[PIXELS, HIDDEN], 1.0 / (PIXELS as f32).sqrt(), &mut rng);
+    let mut b1 = Tensor::zeros(&[HIDDEN]);
+    let mut w2 = scaled(&[HIDDEN, NUM_CLASSES], 1.0 / (HIDDEN as f32).sqrt(), &mut rng);
+    let mut b2 = Tensor::zeros(&[NUM_CLASSES]);
+    let batch = 100;
+    for _ in 0..epochs {
+        for (start, len) in train.batches(batch) {
+            let x = train.batch(start, len).unwrap().reshape(&[len, PIXELS]).unwrap();
+            let y = train.batch_labels(start, len);
+            let mut h = matmul(&x, &w1).unwrap();
+            for row in h.data_mut().chunks_mut(HIDDEN) {
+                for (v, &b) in row.iter_mut().zip(b1.data()) {
+                    *v = (*v + b).max(0.0);
+                }
+            }
+            let mut z = matmul(&h, &w2).unwrap();
+            for row in z.data_mut().chunks_mut(NUM_CLASSES) {
+                for (v, &b) in row.iter_mut().zip(b2.data()) {
+                    *v += b;
+                }
+            }
+            let p = softmax(&z).unwrap();
+            let mut dz = p.clone();
+            for (i, &label) in y.iter().enumerate() {
+                dz.data_mut()[i * NUM_CLASSES + label as usize] -= 1.0;
+            }
+            let inv = 1.0 / len as f32;
+            for v in dz.data_mut() {
+                *v *= inv;
+            }
+            let dw2 = matmul(&h.transpose2().unwrap(), &dz).unwrap();
+            let mut db2 = vec![0f32; NUM_CLASSES];
+            for row in dz.data().chunks(NUM_CLASSES) {
+                for (acc, &v) in db2.iter_mut().zip(row) {
+                    *acc += v;
+                }
+            }
+            let mut dh = matmul(&dz, &w2.transpose2().unwrap()).unwrap();
+            for (g, &hv) in dh.data_mut().iter_mut().zip(h.data()) {
+                if hv == 0.0 {
+                    *g = 0.0;
+                }
+            }
+            let dw1 = matmul(&x.transpose2().unwrap(), &dh).unwrap();
+            let mut db1 = vec![0f32; HIDDEN];
+            for row in dh.data().chunks(HIDDEN) {
+                for (acc, &v) in db1.iter_mut().zip(row) {
+                    *acc += v;
+                }
+            }
+            for (w, g) in w2.data_mut().iter_mut().zip(dw2.data()) {
+                *w -= lr * g;
+            }
+            for (w, &g) in b2.data_mut().iter_mut().zip(&db2) {
+                *w -= lr * g;
+            }
+            for (w, g) in w1.data_mut().iter_mut().zip(dw1.data()) {
+                *w -= lr * g;
+            }
+            for (w, &g) in b1.data_mut().iter_mut().zip(&db1) {
+                *w -= lr * g;
+            }
+        }
+    }
+    vec![w1, b1, w2, b2]
+}
+
+/// Trained parameters, shared across the tests in this binary (training
+/// is deterministic, so sharing changes nothing observable).
+fn trained_params() -> &'static Vec<Tensor> {
+    static PARAMS: OnceLock<Vec<Tensor>> = OnceLock::new();
+    PARAMS.get_or_init(|| {
+        let train = Dataset::generate(1200, TRAIN_SEED);
+        train_mlp(&train, 4, 0.3)
+    })
+}
+
+fn trained_session() -> Session {
+    let named: Vec<(String, Tensor)> = ["fc1.w", "fc1.b", "fc2.w", "fc2.b"]
+        .iter()
+        .map(|s| s.to_string())
+        .zip(trained_params().iter().cloned())
+        .collect();
+    let artifacts = ModelArtifacts {
+        dir: std::path::PathBuf::from("<test>"),
+        manifest: mlp_manifest(),
+        weights: WeightStore::from_params(named),
+    };
+    let test = Dataset::generate(400, TEST_SEED);
+    Session::from_parts(artifacts, test, 100).unwrap()
+}
+
+fn fast_params() -> SearchParams {
+    SearchParams { max_iters: 10, seeds: 2, ..Default::default() }
+}
+
+#[test]
+fn parallel_calibration_is_bit_identical_to_sequential() {
+    let session = trained_session();
+    let base = session.baseline().accuracy;
+    assert!(base > 0.2, "model should be trained, got acc {base}");
+    let delta = base * 0.5;
+    let seq =
+        calibrate_model_jobs(&session, delta, &fast_params(), 1, |_| {}).unwrap();
+    let par =
+        calibrate_model_jobs(&session, delta, &fast_params(), 4, |_| {}).unwrap();
+    assert_eq!(seq.layers.len(), par.layers.len());
+    assert_eq!(seq.mean_rstar.to_bits(), par.mean_rstar.to_bits());
+    assert_eq!(seq.base_accuracy.to_bits(), par.base_accuracy.to_bits());
+    for (a, b) in seq.layers.iter().zip(&par.layers) {
+        assert_eq!(a.name, b.name);
+        assert_eq!(a.qindex, b.qindex);
+        assert_eq!(a.t.to_bits(), b.t.to_bits(), "t differs on {}", a.name);
+        assert_eq!(a.p.to_bits(), b.p.to_bits(), "p differs on {}", a.name);
+        assert_eq!(
+            a.k_at_delta.to_bits(),
+            b.k_at_delta.to_bits(),
+            "k@Δ differs on {}",
+            a.name
+        );
+        assert_eq!(a.curve.points.len(), b.curve.points.len());
+        for (pa, pb) in a.curve.points.iter().zip(&b.curve.points) {
+            assert_eq!(pa.0.to_bits(), pb.0.to_bits());
+            assert_eq!(pa.1.to_bits(), pb.1.to_bits());
+            assert_eq!(pa.2.to_bits(), pb.2.to_bits());
+        }
+    }
+    // the artifact that lands on disk is byte-identical too
+    assert_eq!(seq.to_json().to_string(), par.to_json().to_string());
+}
+
+#[test]
+fn pooled_cached_sweep_matches_sequential_and_evaluates_each_allocation_once() {
+    let session = trained_session();
+    let delta = session.baseline().accuracy * 0.5;
+    let cal =
+        calibrate_model_jobs(&session, delta, &fast_params(), 2, |_| {}).unwrap();
+    let stats = cal.layer_stats();
+    let cfg = SweepConfig::default_for(stats.len());
+
+    // sequential, private cache — the reference
+    let seq = run_sweep(&session, Allocator::Adaptive, &stats, &cfg).unwrap();
+
+    // pooled + shared cache must reproduce it byte-for-byte
+    let cache = EvalCache::new();
+    let par = run_sweep_jobs(&session, Allocator::Adaptive, &stats, &cfg, 4, &cache).unwrap();
+    assert_eq!(seq.points.len(), par.points.len());
+    for (a, b) in seq.points.iter().zip(&par.points) {
+        assert_eq!(a.b1.to_bits(), b.b1.to_bits());
+        assert_eq!(a.size_bytes.to_bits(), b.size_bytes.to_bits());
+        assert_eq!(a.accuracy.to_bits(), b.accuracy.to_bits());
+        assert_eq!(a.bits, b.bits);
+    }
+    assert_eq!(seq.frontier.len(), par.frontier.len());
+
+    // cache hit accounting: each distinct allocation evaluated exactly
+    // once — a re-run over the warm cache issues zero backend evaluations
+    let unique = cache.len();
+    assert!(unique <= seq.points.len());
+    let before = session.execs();
+    let again = run_sweep_jobs(&session, Allocator::Adaptive, &stats, &cfg, 1, &cache).unwrap();
+    assert_eq!(session.execs(), before, "warm cache must not re-evaluate");
+    for (a, b) in par.points.iter().zip(&again.points) {
+        assert_eq!(a.accuracy.to_bits(), b.accuracy.to_bits());
+    }
+
+    // across allocators, only genuinely new allocations cost evaluations:
+    // execs grow by (new unique allocations) × (batches per evaluation)
+    let before = session.execs();
+    let _ = run_sweep_jobs(&session, Allocator::Equal, &stats, &cfg, 2, &cache).unwrap();
+    let new_unique = cache.len() - unique;
+    assert_eq!(
+        session.execs() - before,
+        (new_unique * session.num_batches()) as u64,
+        "each new allocation must cost exactly one full-dataset evaluation"
+    );
+
+    // a memoized accuracy equals a from-scratch evaluation of the same
+    // bits vector (cached sweep results match uncached ones)
+    let p = par.points.last().unwrap();
+    let bits_f32: Vec<f32> = p.bits.iter().map(|&b| b as f32).collect();
+    let fresh = session.eval_qbits(&bits_f32).unwrap();
+    assert_eq!(fresh.accuracy.to_bits(), p.accuracy.to_bits());
+}
