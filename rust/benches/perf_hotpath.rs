@@ -11,9 +11,16 @@
 //!
 //! `--json` additionally writes `BENCH_hotpath.json` so the perf
 //! trajectory can be tracked across PRs (schema in BENCH.md).
+//!
+//! `ADAQ_BENCH_TINY=1` shrinks every problem size (~10× faster end to
+//! end) while keeping **every JSON row present** — the CI bench-smoke
+//! job runs this mode and fails if a documented row goes missing.
+//! Timings from tiny runs are smoke signals, not perf trajectory points.
 
 use adaq::bench_support as bs;
-use adaq::coordinator::{run_sweep_jobs, EvalCache, Session, SweepConfig};
+use adaq::coordinator::{
+    run_server, run_sweep_jobs, EvalCache, ServerConfig, Session, SweepConfig,
+};
 use adaq::dataset::Dataset;
 use adaq::io::Json;
 use adaq::measure::{calibrate_model_jobs, SearchParams};
@@ -86,6 +93,31 @@ fn demo_params(rng: &mut Pcg32) -> Vec<Tensor> {
     ]
 }
 
+/// In-memory artifacts for the demo CNN (weights drawn from `seed`) —
+/// one construction shared by the coordinator-tier and serve-engine
+/// sections so their model stays identical by construction.
+fn demo_artifacts(seed: u64) -> ModelArtifacts {
+    let mut rng = Pcg32::new(seed);
+    let params = demo_params(&mut rng);
+    let named: Vec<(String, Tensor)> =
+        ["conv1.w", "conv1.b", "conv2.w", "conv2.b", "fc.w", "fc.b"]
+            .iter()
+            .map(|s| s.to_string())
+            .zip(params)
+            .collect();
+    ModelArtifacts {
+        dir: std::path::PathBuf::from("<bench>"),
+        manifest: demo_manifest(),
+        weights: WeightStore::from_params(named),
+    }
+}
+
+/// Smoke-size mode for CI (`ADAQ_BENCH_TINY=1`): every section runs,
+/// every JSON row is emitted, problem sizes shrink.
+fn tiny() -> bool {
+    std::env::var("ADAQ_BENCH_TINY").map_or(false, |v| !v.is_empty() && v != "0")
+}
+
 fn main() {
     let write_json = std::env::args().any(|a| a == "--json");
     let mut rows = Vec::new();
@@ -95,7 +127,7 @@ fn main() {
     let gemm_json;
     {
         let mut rng = Pcg32::new(7);
-        let dim = 512usize;
+        let dim = if tiny() { 96usize } else { 512usize };
         let a = randn_tensor(&[dim, dim], &mut rng);
         let b = randn_tensor(&[dim, dim], &mut rng);
         let seed_s = time_n(3, || {
@@ -140,7 +172,7 @@ fn main() {
 
     // ---- int8 GEMM 512³: the integer serving kernel ----
     {
-        let dim = 512usize;
+        let dim = if tiny() { 96usize } else { 512usize };
         let mut rng = Pcg32::new(17);
         let a: Vec<i8> = (0..dim * dim).map(|_| (rng.next_u32() >> 24) as u8 as i8).collect();
         let b: Vec<i8> = (0..dim * dim).map(|_| (rng.next_u32() >> 24) as u8 as i8).collect();
@@ -177,7 +209,8 @@ fn main() {
     // ---- sparse-LHS skip loop vs dense blocked kernel ----
     {
         let mut rng = Pcg32::new(11);
-        let (m, k, n) = (1024usize, 512usize, 256usize);
+        let (m, k, n) =
+            if tiny() { (192usize, 96usize, 64usize) } else { (1024usize, 512usize, 256usize) };
         let mut a = randn_tensor(&[m, k], &mut rng);
         // post-ReLU-like activations: clamp negatives to zero (~50% sparse)
         for v in a.data_mut().iter_mut() {
@@ -211,8 +244,8 @@ fn main() {
     {
         let mut rng = Pcg32::new(13);
         let params = demo_params(&mut rng);
-        let ds = Dataset::generate(1000, 20260731);
-        let batch = 125;
+        let ds = Dataset::generate(if tiny() { 320 } else { 1000 }, 20260731);
+        let batch = if tiny() { 40 } else { 125 };
         let batches: Vec<Tensor> = ds
             .batches(batch)
             .into_iter()
@@ -260,21 +293,10 @@ fn main() {
     // ---- coordinator tier: calibration + sweep wall time, 1 job vs a
     //      full pool (outputs are byte-identical; only wall time moves) ----
     {
-        let mut rng = Pcg32::new(23);
-        let params = demo_params(&mut rng);
-        let named: Vec<(String, Tensor)> =
-            ["conv1.w", "conv1.b", "conv2.w", "conv2.b", "fc.w", "fc.b"]
-                .iter()
-                .map(|s| s.to_string())
-                .zip(params)
-                .collect();
-        let artifacts = ModelArtifacts {
-            dir: std::path::PathBuf::from("<bench>"),
-            manifest: demo_manifest(),
-            weights: WeightStore::from_params(named),
-        };
-        let test = Dataset::generate(500, 20260731);
-        let session = Session::from_parts(artifacts, test, 125).unwrap();
+        let artifacts = demo_artifacts(23);
+        let test = Dataset::generate(if tiny() { 200 } else { 500 }, 20260731);
+        let session =
+            Session::from_parts(artifacts, test, if tiny() { 50 } else { 125 }).unwrap();
         let delta = session.baseline().accuracy * 0.5;
         let sp = SearchParams { max_iters: 10, seeds: 1, ..Default::default() };
         let jobs = std::thread::available_parallelism().map_or(1, |v| v.get()).min(16);
@@ -368,15 +390,16 @@ fn main() {
         let qparams: Vec<Tensor> =
             params.iter().map(|p| adaq::quant::fake_quant(p, 8.0)).collect();
         let qrefs: Vec<&Tensor> = qparams.iter().collect();
+        let reps = if tiny() { 150 } else { 500 };
         let mut scratch = Scratch::new();
-        let rebuild_s = time_n(500, || {
+        let rebuild_s = time_n(reps, || {
             let exec = GraphExecutor::new(&manifest);
             let _ = exec.forward_with(&x, &qrefs, &mut scratch).unwrap();
         });
 
-        // this PR: the plan is computed once in CpuBackend::new
+        // PR 2+: the plan is computed once in CpuBackend::new
         let be = CpuBackend::new(demo_manifest(), params.clone(), vec![x.clone()]).unwrap();
-        let cached_s = time_n(500, || {
+        let cached_s = time_n(reps, || {
             let _ = be.qforward_one(&x, &bits).unwrap();
         });
 
@@ -384,7 +407,7 @@ fn main() {
         let be8 = CpuBackend::new(demo_manifest(), params.clone(), vec![x.clone()])
             .unwrap()
             .with_int8_serving(true);
-        let int8_s = time_n(500, || {
+        let int8_s = time_n(reps, || {
             let _ = be8.qforward_one(&x, &bits).unwrap();
         });
 
@@ -413,24 +436,115 @@ fn main() {
         ));
     }
 
+    // ---- concurrent serve engine: workers × deadline micro-batching.
+    //      Accuracy/predictions are invariant across configs (asserted);
+    //      only throughput and latency move. ----
+    {
+        let test = Dataset::generate(if tiny() { 128 } else { 512 }, 20260731);
+        let session = Session::from_parts(demo_artifacts(29), test.clone(), 1).unwrap();
+        let bits = vec![8.0f32; 3];
+        let n = if tiny() { 300 } else { 2000 };
+        let avail = std::thread::available_parallelism().map_or(1, |v| v.get()).min(16);
+        let w = avail.clamp(2, 8);
+        let mut serve_json = Vec::new();
+        let mut base_correct: Option<usize> = None;
+        let mut base_rps = 0.0f64;
+        for (workers, batch, deadline_us) in
+            [(1usize, 1usize, 0u64), (w, 1, 0), (w, 4, 200), (w, 8, 200)]
+        {
+            let cfg = ServerConfig { workers, batch, deadline_us, queue_cap: 0 };
+            let r = run_server(&session, &test, &bits, n, &cfg).unwrap();
+            match base_correct {
+                None => {
+                    base_correct = Some(r.correct);
+                    base_rps = r.throughput_rps;
+                }
+                Some(c) => assert_eq!(
+                    c, r.correct,
+                    "serve correctness must be invariant across engine configs"
+                ),
+            }
+            rows.push(vec![
+                format!("serve_mt {n} reqs, w{workers} b{batch} d{deadline_us}µs"),
+                format!("{:.0} req/s", r.throughput_rps),
+                format!(
+                    "{:.2}x vs w1 b1; mean batch {:.2}; sojourn p50/p99 {:.2}/{:.2} ms",
+                    if base_rps > 0.0 { r.throughput_rps / base_rps } else { 0.0 },
+                    r.mean_batch_occupancy(),
+                    r.p50_ms,
+                    r.p99_ms
+                ),
+            ]);
+            serve_json.push(Json::obj(vec![
+                ("workers", Json::Num(workers as f64)),
+                ("batch", Json::Num(batch as f64)),
+                ("deadline_us", Json::Num(deadline_us as f64)),
+                ("requests", Json::Num(n as f64)),
+                ("rps", Json::Num(r.throughput_rps)),
+                ("speedup_vs_seq", Json::Num(if base_rps > 0.0 {
+                    r.throughput_rps / base_rps
+                } else {
+                    0.0
+                })),
+                ("p50_ms", Json::Num(r.p50_ms)),
+                ("p99_ms", Json::Num(r.p99_ms)),
+                ("p999_ms", Json::Num(r.p999_ms)),
+                ("service_p50_ms", Json::Num(r.service_p50_ms)),
+                ("mean_batch", Json::Num(r.mean_batch_occupancy())),
+                ("forwards", Json::Num(r.forwards as f64)),
+                ("correct", Json::Num(r.correct as f64)),
+            ]));
+        }
+        // the integer path through the same engine and the same model
+        // (one config is enough for the trajectory; invariance is
+        // covered by tests/serve_mt.rs)
+        let i8_session = Session::from_parts_int8(demo_artifacts(29), test.clone(), 1).unwrap();
+        let cfg = ServerConfig { workers: w, batch: 4, deadline_us: 200, queue_cap: 0 };
+        let r = run_server(&i8_session, &test, &bits, n, &cfg).unwrap();
+        rows.push(vec![
+            format!("serve_mt {n} reqs, w{w} b4 int8"),
+            format!("{:.0} req/s", r.throughput_rps),
+            format!(
+                "integer path; mean batch {:.2}; sojourn p50 {:.2} ms",
+                r.mean_batch_occupancy(),
+                r.p50_ms
+            ),
+        ]);
+        serve_json.push(Json::obj(vec![
+            ("workers", Json::Num(w as f64)),
+            ("batch", Json::Num(4.0)),
+            ("deadline_us", Json::Num(200.0)),
+            ("int8", Json::Bool(true)),
+            ("requests", Json::Num(n as f64)),
+            ("rps", Json::Num(r.throughput_rps)),
+            ("p50_ms", Json::Num(r.p50_ms)),
+            ("p99_ms", Json::Num(r.p99_ms)),
+            ("mean_batch", Json::Num(r.mean_batch_occupancy())),
+            ("correct", Json::Num(r.correct as f64)),
+        ]));
+        json_fields.push(("serve_mt", Json::Arr(serve_json)));
+    }
+
     // ---- host-side quantizer throughput ----
     {
         let mut rng = Pcg32::new(1);
-        let mut data = vec![0f32; 4 << 20];
+        let elems = if tiny() { 1usize << 19 } else { 4usize << 20 };
+        let mut data = vec![0f32; elems];
         fill_normal(&mut rng, &mut data);
         let t = Tensor::from_vec(&[data.len()], data).unwrap();
         let range = QuantRange::of(&t);
         let mut out = vec![0f32; t.len()];
         let per = time_n(10, || fake_quant_into(t.data(), range, 8.0, &mut out));
+        let mi = elems as f64 / (1 << 20) as f64;
         rows.push(vec![
-            "fake_quant host (4Mi f32)".into(),
+            format!("fake_quant host ({mi}Mi f32)"),
             format!("{:.2} ms", per * 1e3),
             format!("{:.2} GB/s", (t.len() * 4) as f64 / per / 1e9),
         ]);
         json_fields.push((
             "fake_quant",
             Json::obj(vec![
-                ("mi_f32", Json::Num(4.0)),
+                ("mi_f32", Json::Num(mi)),
                 ("ms", Json::Num(per * 1e3)),
                 ("gbps", Json::Num((t.len() * 4) as f64 / per / 1e9)),
             ]),

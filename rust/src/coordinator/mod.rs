@@ -12,17 +12,21 @@
 //! * [`Session::baseline`] — cached fp32 logits / accuracy / margins.
 //!
 //! On top of those, [`sweep`] traces the paper's size-accuracy trade-off
-//! curves (Fig. 6/8) for any [`Allocator`], and [`pool`] schedules the
+//! curves (Fig. 6/8) for any [`Allocator`], [`pool`] schedules the
 //! independent evaluations of calibration and sweeps across a
-//! deterministic job pool (`--jobs N` on the CLI) — sessions are
-//! `Send + Sync`, so one session serves every worker.
+//! deterministic job pool (`--jobs N` on the CLI), and [`server`] is the
+//! concurrent serving engine (bounded request queue → deadline
+//! micro-batcher → N workers over one shared session) — sessions are
+//! `Send + Sync`, so one session serves every worker at every tier.
 
 pub mod pool;
 mod serve;
+pub mod server;
 mod session;
 mod sweep;
 
 pub use pool::JobPool;
 pub use serve::{serve_loop, ServeStats};
+pub use server::{run_server, ServeReport, ServerConfig};
 pub use session::{Baseline, EvalOutput, Session};
 pub use sweep::{run_sweep, run_sweep_jobs, EvalCache, SweepConfig, SweepResult};

@@ -1,13 +1,19 @@
 //! Minimal serving loop: run single-image requests through the quantized
 //! executable (batch-1 artifact) and report latency/throughput — the
-//! "deploy the quantized model" story of the paper's introduction, and
-//! the macro-benchmark for the perf pass.
+//! "deploy the quantized model" story of the paper's introduction.
+//!
+//! Since the concurrent engine landed this is the **degenerate case** of
+//! [`server::run_server`](super::server::run_server): `serve_loop`
+//! delegates to the engine at `workers = 1, batch = 1` and reports the
+//! same compact [`ServeStats`] it always has (service-latency
+//! percentiles, i.e. the forward pass that answered each request — the
+//! engine's full [`ServeReport`](super::server::ServeReport) adds
+//! sojourn tails and congestion histograms on top).
 
 use crate::dataset::Dataset;
-use crate::tensor::Tensor;
-use crate::util::{percentile_nearest_rank, Timer};
 use crate::{Error, Result};
 
+use super::server::{run_server, ServeReport, ServerConfig};
 use super::Session;
 
 /// Latency/throughput summary of a serve run.
@@ -18,12 +24,31 @@ pub struct ServeStats {
     pub total_seconds: f64,
     pub p50_ms: f64,
     pub p99_ms: f64,
+    /// Requests per second; 0 (never `inf`) when the wall time of a
+    /// tiny, very fast run rounds to zero.
     pub throughput_rps: f64,
 }
 
 impl ServeStats {
+    /// Top-1 accuracy over the served requests (0 when none were — a
+    /// degenerate run must not return NaN).
     pub fn accuracy(&self) -> f64 {
+        if self.requests == 0 {
+            return 0.0;
+        }
         self.correct as f64 / self.requests as f64
+    }
+
+    /// The compact view of an engine report `serve_loop` returns.
+    pub fn from_report(r: &ServeReport) -> ServeStats {
+        ServeStats {
+            requests: r.requests,
+            correct: r.correct,
+            total_seconds: r.total_seconds,
+            p50_ms: r.service_p50_ms,
+            p99_ms: r.service_p99_ms,
+            throughput_rps: r.throughput_rps,
+        }
     }
 }
 
@@ -39,7 +64,9 @@ impl ServeStats {
 /// Whether requests run f32 fake-quant or the integer int8 path is the
 /// session's backend configuration (see
 /// [`Session::from_parts_int8`](super::Session::from_parts_int8)); the
-/// loop itself is execution-mode agnostic.
+/// loop itself is execution-mode agnostic. For multi-worker or batched
+/// serving, call [`run_server`] directly (it accepts any session batch
+/// size — the engine assembles its own micro-batches).
 pub fn serve_loop(session: &Session, data: &Dataset, bits: &[f32], n: usize) -> Result<ServeStats> {
     if session.batch_size() != 1 {
         return Err(Error::Model(format!(
@@ -48,39 +75,46 @@ pub fn serve_loop(session: &Session, data: &Dataset, bits: &[f32], n: usize) -> 
             session.batch_size()
         )));
     }
-    if n == 0 || data.is_empty() {
-        return Err(Error::Model("serve_loop wants n > 0 requests and a non-empty dataset".into()));
+    let report = run_server(session, data, bits, n, &ServerConfig::sequential())?;
+    Ok(ServeStats::from_report(&report))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stats_guards_degenerate_runs() {
+        let s = ServeStats {
+            requests: 0,
+            correct: 0,
+            total_seconds: 0.0,
+            p50_ms: 0.0,
+            p99_ms: 0.0,
+            throughput_rps: 0.0,
+        };
+        assert_eq!(s.accuracy(), 0.0, "0 requests must not divide to NaN");
+        let r = ServeReport {
+            requests: 10,
+            correct: 7,
+            total_seconds: 0.0, // clock rounded to zero on a tiny run
+            p50_ms: 0.1,
+            p99_ms: 0.2,
+            p999_ms: 0.2,
+            service_p50_ms: 0.05,
+            service_p99_ms: 0.15,
+            throughput_rps: 0.0,
+            workers: 1,
+            batch: 1,
+            deadline_us: 0,
+            forwards: 10,
+            batch_occupancy: vec![10],
+            queue_depth: vec![10],
+            predictions: vec![0; 10],
+        };
+        let s = ServeStats::from_report(&r);
+        assert_eq!(s.throughput_rps, 0.0, "degenerate wall time reports 0, not inf");
+        assert_eq!(s.p50_ms, 0.05, "serve_loop keeps service-latency semantics");
+        assert_eq!(s.accuracy(), 0.7);
     }
-    let mut latencies = Vec::with_capacity(n);
-    let mut correct = 0usize;
-    // warm the backend's quantized-parameter state outside the timed
-    // region (the seed's prepare_bits did its one-time upload here too),
-    // so p99 reflects steady-state serving rather than the cold start
-    session.qforward_once(&data.batch(0, 1)?, bits)?;
-    let total = Timer::start();
-    for i in 0..n {
-        let idx = i % data.len();
-        let x = data.batch(idx, 1)?;
-        let y = data.batch_labels(idx, 1)[0];
-        let t = Timer::start();
-        let logits = session.qforward_once(&x, bits)?;
-        latencies.push(t.millis());
-        let (pred, _) = Tensor::top2(&logits);
-        if pred as i32 == y {
-            correct += 1;
-        }
-    }
-    let total_seconds = total.seconds();
-    latencies.sort_by(f64::total_cmp);
-    // nearest-rank (⌈p·n⌉): the truncating (n−1)·p index biased p99 low
-    // at small request counts (n=10 reported the 9th-slowest as p99)
-    let pct = |p: f64| percentile_nearest_rank(&latencies, p);
-    Ok(ServeStats {
-        requests: n,
-        correct,
-        total_seconds,
-        p50_ms: pct(0.50),
-        p99_ms: pct(0.99),
-        throughput_rps: n as f64 / total_seconds,
-    })
 }

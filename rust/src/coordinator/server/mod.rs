@@ -1,0 +1,179 @@
+//! The concurrent serving engine: a bounded MPMC request queue feeding N
+//! scoped worker threads over one shared [`Session`], with a deadline
+//! micro-batcher that trades p50 for throughput.
+//!
+//! ```text
+//!   load generator ──► RequestQueue (bounded) ──► worker 0 ─┐
+//!   (closed loop:        │  pop_batch(B, deadline)          ├─► Session::qforward_once
+//!    push blocks          └───────────────────► worker N-1 ─┘    (batch-B stacked forward,
+//!    when full)                                                   shared qcache, scratch pool)
+//! ```
+//!
+//! Three design rules, in order:
+//!
+//! 1. **Determinism** — request `i` always asks about dataset image
+//!    `i % len`, the backend forwards every sample of a coalesced batch
+//!    bitwise-identically to a batch-1 request, and results are keyed by
+//!    request id. Accuracy, per-request predictions, and correct counts
+//!    are therefore **invariant across worker counts, batch sizes, and
+//!    deadlines** — only latency/throughput move
+//!    (`rust/tests/serve_mt.rs` enforces this).
+//! 2. **Closed-loop back-pressure** — the generator blocks while the
+//!    queue is full, so offered load tracks service rate and the queue
+//!    depth histogram reads as a congestion gauge, not an artifact of an
+//!    unbounded backlog.
+//! 3. **Thread-budget composition** — W workers cap their nested GEMM
+//!    auto-threading at `threads / W`
+//!    ([`crate::tensor::set_gemm_thread_cap`]), reusing the parallelism-
+//!    budget idea from the calibration pool at the serve tier.
+//!
+//! The single-threaded [`serve_loop`](super::serve_loop) is the
+//! `workers = 1, batch = 1` degenerate case and delegates here.
+
+mod queue;
+mod stats;
+mod worker;
+
+pub use queue::{Request, RequestQueue};
+pub use stats::ServeReport;
+
+use std::time::{Duration, Instant};
+
+use crate::dataset::Dataset;
+use crate::util::Timer;
+use crate::{Error, Result};
+
+use super::Session;
+
+/// Engine shape: worker count, micro-batch bound, coalescing deadline.
+#[derive(Clone, Copy, Debug)]
+pub struct ServerConfig {
+    /// Concurrent serve workers (≥ 1).
+    pub workers: usize,
+    /// Micro-batch bound B: a worker coalesces up to B queued requests
+    /// into one stacked forward (1 = no batching).
+    pub batch: usize,
+    /// How long (µs) a worker may hold a short batch open waiting for
+    /// late arrivals — the p50-for-throughput knob. 0 = serve whatever
+    /// is queued immediately.
+    pub deadline_us: u64,
+    /// Bound on pending requests; 0 = auto (`2·workers·batch`, min 4).
+    pub queue_cap: usize,
+}
+
+impl ServerConfig {
+    /// `workers = 1, batch = 1`: the degenerate single-threaded engine
+    /// `serve_loop` delegates to.
+    pub fn sequential() -> ServerConfig {
+        ServerConfig { workers: 1, batch: 1, deadline_us: 0, queue_cap: 0 }
+    }
+
+    fn effective_queue_cap(&self) -> usize {
+        if self.queue_cap > 0 {
+            self.queue_cap
+        } else {
+            (2 * self.workers * self.batch).max(4)
+        }
+    }
+}
+
+/// Serve `n` requests (request `i` asks about image `i % data.len()`)
+/// through the engine described by `cfg`, returning the merged
+/// [`ServeReport`].
+///
+/// The warm-up forward (quantized-parameter encode, plan state) runs
+/// before the clock starts, so the report reflects steady-state serving.
+/// Unlike `serve_loop`, any session batch size is accepted — the engine
+/// assembles its own micro-batches straight from the dataset.
+pub fn run_server(
+    session: &Session,
+    data: &Dataset,
+    bits: &[f32],
+    n: usize,
+    cfg: &ServerConfig,
+) -> Result<ServeReport> {
+    if cfg.workers == 0 || cfg.batch == 0 {
+        return Err(Error::Model(format!(
+            "serve engine wants workers ≥ 1 and batch ≥ 1, got workers={} batch={}",
+            cfg.workers, cfg.batch
+        )));
+    }
+    if n == 0 || data.is_empty() {
+        return Err(Error::Model(
+            "serve engine wants n > 0 requests and a non-empty dataset".into(),
+        ));
+    }
+    // the concurrent/batched contract (stacked inputs, simultaneous
+    // qforward callers) is a CpuBackend guarantee; the PJRT backend
+    // compiles batch-1 executables and its FFI buffers are not
+    // thread-safe, so anything beyond the sequential engine must be
+    // rejected up front rather than erroring mid-run
+    if session.backend_name() != "cpu" && (cfg.workers > 1 || cfg.batch > 1) {
+        return Err(Error::Model(format!(
+            "the {} backend only supports the sequential serve engine \
+             (workers=1, batch=1); multi-worker / micro-batched serving \
+             needs the cpu backend",
+            session.backend_name()
+        )));
+    }
+    // warm outside the timed region — also validates `bits` once, so
+    // workers cannot fail on malformed input mid-run
+    session.qforward_once(&data.batch(0, 1)?, bits)?;
+
+    let queue = RequestQueue::new(cfg.effective_queue_cap());
+    let threads = std::thread::available_parallelism().map_or(1, |v| v.get()).min(16);
+    let params = worker::WorkerParams {
+        batch: cfg.batch,
+        deadline: Duration::from_micros(cfg.deadline_us),
+        // single-worker engines keep the backend's native GEMM behavior
+        // (bitwise identical either way; the cap only changes scheduling)
+        gemm_cap: if cfg.workers > 1 { (threads / cfg.workers).max(1) } else { 0 },
+    };
+    let timer = Timer::start();
+    let outputs: Vec<Result<stats::WorkerTally>> = std::thread::scope(|s| {
+        let handles: Vec<_> = (0..cfg.workers)
+            .map(|_| s.spawn(|| worker::run_worker(session, data, bits, &queue, &params)))
+            .collect();
+        // closed-loop load generator on this thread: push blocks while
+        // the queue is full, so offered load tracks the service rate
+        for id in 0..n {
+            let accepted =
+                queue.push(Request { id, idx: id % data.len(), enqueued_at: Instant::now() });
+            if !accepted {
+                break; // a worker died and closed the queue
+            }
+        }
+        queue.close();
+        handles.into_iter().map(|h| h.join().expect("serve worker panicked")).collect()
+    });
+    let total_seconds = timer.seconds();
+    let mut tallies = Vec::with_capacity(outputs.len());
+    for o in outputs {
+        tallies.push(o?);
+    }
+    let served: usize = tallies.iter().map(|t| t.results.len()).sum();
+    debug_assert_eq!(served, n, "every accepted request must be served exactly once");
+    Ok(stats::merge_report(
+        tallies,
+        n,
+        total_seconds,
+        cfg.workers,
+        cfg.batch,
+        cfg.deadline_us,
+        |id| data.label(id % data.len()),
+    ))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn config_validation_and_auto_cap() {
+        assert_eq!(ServerConfig::sequential().effective_queue_cap(), 4);
+        let cfg = ServerConfig { workers: 4, batch: 8, deadline_us: 0, queue_cap: 0 };
+        assert_eq!(cfg.effective_queue_cap(), 64);
+        let pinned = ServerConfig { queue_cap: 7, ..cfg };
+        assert_eq!(pinned.effective_queue_cap(), 7);
+    }
+}

@@ -1,0 +1,228 @@
+//! Serve-engine statistics: per-worker tallies merged into one
+//! [`ServeReport`] — tail latencies (sojourn **and** service), queue
+//! congestion, and batch-occupancy histograms.
+
+use crate::util::percentile_nearest_rank;
+
+/// Rate `n / seconds`, or 0 when the denominator is degenerate — very
+/// fast tiny runs can see a wall time that rounds to zero, and `inf`
+/// requests/s is a lie no dashboard should ingest.
+pub(crate) fn safe_rate(n: usize, seconds: f64) -> f64 {
+    if seconds > 0.0 {
+        n as f64 / seconds
+    } else {
+        0.0
+    }
+}
+
+/// What one worker thread measured; merged by the engine after join.
+#[derive(Debug, Default)]
+pub(crate) struct WorkerTally {
+    /// `(request id, predicted class)` for every request this worker
+    /// served — id-keyed, so merging is scheduling-independent.
+    pub results: Vec<(usize, i32)>,
+    /// Sojourn latency (enqueue → completion) per request, ms.
+    pub sojourn_ms: Vec<f64>,
+    /// Service latency (the batch forward, attributed to each request in
+    /// it) per request, ms.
+    pub service_ms: Vec<f64>,
+    /// `occupancy[b-1]` = how many micro-batches held exactly `b` requests.
+    pub occupancy: Vec<usize>,
+    /// `depth[d]` = how many pops left `d` requests behind in the queue
+    /// (clamped at the histogram's last bucket).
+    pub depth: Vec<usize>,
+    /// Forward passes executed (micro-batches served).
+    pub forwards: usize,
+}
+
+impl WorkerTally {
+    pub fn new(batch: usize, queue_cap: usize) -> WorkerTally {
+        WorkerTally {
+            occupancy: vec![0; batch.max(1)],
+            depth: vec![0; queue_cap + 1],
+            ..WorkerTally::default()
+        }
+    }
+}
+
+/// Full report of one serve-engine run (`coordinator::server::run_server`).
+///
+/// Latency comes in two flavors: **sojourn** (enqueue → completion — what
+/// a client of the engine experiences, includes queueing and deadline
+/// waits) and **service** (the forward pass that answered the request —
+/// comparable to the single-threaded `serve_loop`'s per-request timing).
+/// Batching deliberately trades sojourn p50 for throughput; the
+/// occupancy histogram shows how full the traded batches actually ran.
+#[derive(Clone, Debug)]
+pub struct ServeReport {
+    pub requests: usize,
+    pub correct: usize,
+    /// Wall time of the whole run (generator start → last worker done).
+    pub total_seconds: f64,
+    /// Sojourn percentiles (ms): enqueue → completion.
+    pub p50_ms: f64,
+    pub p99_ms: f64,
+    pub p999_ms: f64,
+    /// Service percentiles (ms): the answering forward pass.
+    pub service_p50_ms: f64,
+    pub service_p99_ms: f64,
+    /// Requests per second over the whole run (0 on a degenerate clock).
+    pub throughput_rps: f64,
+    /// Engine configuration the run used.
+    pub workers: usize,
+    pub batch: usize,
+    pub deadline_us: u64,
+    /// Micro-batches (forward passes) executed.
+    pub forwards: usize,
+    /// `batch_occupancy[b-1]` = micro-batches that held exactly `b`
+    /// requests; Σ (b · occupancy[b-1]) == requests.
+    pub batch_occupancy: Vec<usize>,
+    /// `queue_depth[d]` = pops that left `d` requests queued (last
+    /// bucket = "cap or more"); a mass near 0 means workers are starved,
+    /// near cap means the generator is back-pressured (closed loop at
+    /// full service rate).
+    pub queue_depth: Vec<usize>,
+    /// Predicted class per request id — bitwise invariant across worker
+    /// counts and batch sizes (the engine's determinism contract).
+    pub predictions: Vec<i32>,
+}
+
+impl ServeReport {
+    /// Top-1 accuracy over the served requests (0 when none were).
+    pub fn accuracy(&self) -> f64 {
+        if self.requests == 0 {
+            return 0.0;
+        }
+        self.correct as f64 / self.requests as f64
+    }
+
+    /// Mean requests per executed micro-batch.
+    pub fn mean_batch_occupancy(&self) -> f64 {
+        if self.forwards == 0 {
+            return 0.0;
+        }
+        self.requests as f64 / self.forwards as f64
+    }
+}
+
+/// Merge worker tallies into a [`ServeReport`]. `labels(id)` maps a
+/// request id to its ground-truth label (the engine passes the dataset's
+/// round-robin mapping, keeping correctness scheduling-independent).
+pub(crate) fn merge_report(
+    tallies: Vec<WorkerTally>,
+    n: usize,
+    total_seconds: f64,
+    workers: usize,
+    batch: usize,
+    deadline_us: u64,
+    labels: impl Fn(usize) -> i32,
+) -> ServeReport {
+    let mut predictions = vec![0i32; n];
+    let mut seen = vec![false; n];
+    let mut sojourn = Vec::with_capacity(n);
+    let mut service = Vec::with_capacity(n);
+    let mut occupancy = vec![0usize; batch.max(1)];
+    let mut depth: Vec<usize> = Vec::new();
+    let mut forwards = 0usize;
+    for t in tallies {
+        for (id, pred) in t.results {
+            debug_assert!(!seen[id], "request {id} served twice");
+            seen[id] = true;
+            predictions[id] = pred;
+        }
+        sojourn.extend(t.sojourn_ms);
+        service.extend(t.service_ms);
+        for (i, c) in t.occupancy.into_iter().enumerate() {
+            occupancy[i.min(batch.max(1) - 1)] += c;
+        }
+        if depth.len() < t.depth.len() {
+            depth.resize(t.depth.len(), 0);
+        }
+        for (i, c) in t.depth.into_iter().enumerate() {
+            depth[i] += c;
+        }
+        forwards += t.forwards;
+    }
+    debug_assert!(seen.iter().all(|&s| s), "every accepted request must drain");
+    let correct = predictions
+        .iter()
+        .enumerate()
+        .filter(|&(id, &p)| p == labels(id))
+        .count();
+    sojourn.sort_by(f64::total_cmp);
+    service.sort_by(f64::total_cmp);
+    let pct = |v: &[f64], p: f64| percentile_nearest_rank(v, p);
+    ServeReport {
+        requests: n,
+        correct,
+        total_seconds,
+        p50_ms: pct(&sojourn, 0.50),
+        p99_ms: pct(&sojourn, 0.99),
+        p999_ms: pct(&sojourn, 0.999),
+        service_p50_ms: pct(&service, 0.50),
+        service_p99_ms: pct(&service, 0.99),
+        throughput_rps: safe_rate(n, total_seconds),
+        workers,
+        batch,
+        deadline_us,
+        forwards,
+        batch_occupancy: occupancy,
+        queue_depth: depth,
+        predictions,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn safe_rate_never_reports_inf() {
+        assert_eq!(safe_rate(100, 0.0), 0.0);
+        assert_eq!(safe_rate(100, -1.0), 0.0);
+        assert_eq!(safe_rate(100, 2.0), 50.0);
+        assert!(safe_rate(0, 1.0) == 0.0);
+    }
+
+    #[test]
+    fn merge_is_scheduling_independent() {
+        // the same results split differently across workers merge to the
+        // same report (ids key everything)
+        let mk = |splits: Vec<Vec<usize>>| {
+            let tallies: Vec<WorkerTally> = splits
+                .into_iter()
+                .map(|ids| {
+                    let mut t = WorkerTally::new(2, 4);
+                    t.forwards = ids.len();
+                    for id in ids {
+                        t.results.push((id, (id % 3) as i32));
+                        t.sojourn_ms.push(id as f64);
+                        t.service_ms.push(id as f64 * 0.5);
+                        t.occupancy[0] += 1;
+                        t.depth[0] += 1;
+                    }
+                    t
+                })
+                .collect();
+            merge_report(tallies, 6, 2.0, 2, 2, 0, |id| (id % 3) as i32)
+        };
+        let a = mk(vec![vec![0, 1, 2], vec![3, 4, 5]]);
+        let b = mk(vec![vec![5, 1, 3], vec![4, 0, 2]]);
+        assert_eq!(a.predictions, b.predictions);
+        assert_eq!(a.correct, 6);
+        assert_eq!(b.correct, 6);
+        assert_eq!(a.accuracy(), 1.0);
+        assert_eq!(a.throughput_rps, 3.0);
+        assert_eq!(a.p50_ms, b.p50_ms);
+        assert_eq!(a.mean_batch_occupancy(), 1.0);
+    }
+
+    #[test]
+    fn degenerate_report_guards() {
+        let r = merge_report(vec![], 0, 0.0, 1, 1, 0, |_| 0);
+        assert_eq!(r.accuracy(), 0.0, "no requests → 0, not NaN");
+        assert_eq!(r.throughput_rps, 0.0, "zero wall time → 0, not inf");
+        assert_eq!(r.mean_batch_occupancy(), 0.0);
+        assert!(r.p50_ms.is_nan(), "no latencies → NaN percentile (documented)");
+    }
+}

@@ -1,0 +1,104 @@
+//! Serve worker: pops deadline micro-batches off the [`RequestQueue`],
+//! assembles them into one stacked input tensor, and answers them with a
+//! single batch-B quantized forward through the shared
+//! [`Session`](crate::coordinator::Session).
+//!
+//! Correctness does not depend on scheduling: the backend forwards each
+//! sample of a stacked batch bitwise-identically to a batch-1 request
+//! (fixed GEMM k-order; per-sample int8 activation grids), so a
+//! request's prediction is a pure function of its dataset index — any
+//! worker count, any batch composition, same answers.
+//!
+//! Threading composition: each worker owns one OS thread and caps its
+//! nested GEMM auto-threading at `threads / workers`
+//! ([`tensor::set_gemm_thread_cap`]) — worker-level × GEMM-level threads
+//! never oversubscribe the machine, and tiny per-request GEMMs still run
+//! inline instead of paying spawn overhead.
+
+use std::time::Duration;
+
+use crate::dataset::Dataset;
+use crate::tensor::{self, Tensor};
+use crate::util::{Scratch, Timer};
+use crate::Result;
+
+use super::queue::RequestQueue;
+use super::stats::WorkerTally;
+use super::Session;
+
+/// Engine parameters a worker needs (a copy of the relevant
+/// [`ServerConfig`](super::ServerConfig) fields plus derived budgets).
+pub(crate) struct WorkerParams {
+    pub batch: usize,
+    pub deadline: Duration,
+    /// GEMM auto-thread cap for this worker (0 = uncapped, single-worker
+    /// engines keep the backend's existing auto behavior).
+    pub gemm_cap: usize,
+}
+
+/// Run one worker until the queue shuts down. On any forward error the
+/// worker closes the queue (failing the generator fast and releasing its
+/// peers) and returns the error.
+pub(crate) fn run_worker(
+    session: &Session,
+    data: &Dataset,
+    bits: &[f32],
+    queue: &RequestQueue,
+    params: &WorkerParams,
+) -> Result<WorkerTally> {
+    let out = serve_requests(session, data, bits, queue, params);
+    if out.is_err() {
+        // poison-style shutdown: a dead worker must not leave the
+        // generator blocked on a full queue or its peers waiting forever
+        queue.close();
+    }
+    out
+}
+
+fn serve_requests(
+    session: &Session,
+    data: &Dataset,
+    bits: &[f32],
+    queue: &RequestQueue,
+    params: &WorkerParams,
+) -> Result<WorkerTally> {
+    if params.gemm_cap > 0 {
+        tensor::set_gemm_thread_cap(params.gemm_cap);
+    }
+    let classes = session.artifacts.manifest.num_classes;
+    let stride = data.image_elems();
+    let sh = data.images.shape();
+    let (h, w, c) = (sh[1], sh[2], sh[3]);
+    let mut tally = WorkerTally::new(params.batch, queue.capacity());
+    let mut scratch = Scratch::new();
+    let mut batch = Vec::with_capacity(params.batch);
+    let mut ids = Vec::with_capacity(params.batch);
+    while let Some(depth) = queue.pop_batch(params.batch, params.deadline, &mut batch) {
+        let b = batch.len();
+        tally.occupancy[b - 1] += 1;
+        let dslot = tally.depth.len() - 1;
+        tally.depth[depth.min(dslot)] += 1;
+        ids.clear();
+        ids.extend(batch.iter().map(|r| r.idx));
+        let mut xbuf = scratch.take_any(b * stride);
+        data.fill_images(&ids, &mut xbuf)?;
+        let x = Tensor::from_vec(&[b, h, w, c], xbuf)?;
+        let t = Timer::start();
+        let logits = session.qforward_once(&x, bits)?;
+        let service_ms = t.millis();
+        scratch.put(x.into_vec());
+        tally.forwards += 1;
+        for (i, req) in batch.iter().enumerate() {
+            let row = &logits[i * classes..(i + 1) * classes];
+            let (pred, _) = Tensor::top2(row);
+            tally.results.push((req.id, pred as i32));
+            tally.sojourn_ms.push(req.enqueued_at.elapsed().as_secs_f64() * 1e3);
+            tally.service_ms.push(service_ms);
+        }
+        batch.clear();
+    }
+    if params.gemm_cap > 0 {
+        tensor::set_gemm_thread_cap(0);
+    }
+    Ok(tally)
+}

@@ -243,9 +243,16 @@ impl Session {
         Ok(EvalOutput { logits, accuracy, mean_rz_sq })
     }
 
-    /// Single-input quantized forward over caller-provided input — the
-    /// serving path. Backends cache the quantized parameters keyed on
-    /// `bits`, so a serve loop with a constant allocation quantizes once.
+    /// Quantized forward over caller-provided input — the serving path.
+    /// On the CPU backend, `x` may be a single image or a stack of B
+    /// coalesced requests (`[B, …]`, flat logits row-per-sample; each
+    /// sample bitwise identical to a batch-1 call) and concurrent
+    /// callers are safe — the multi-worker engine
+    /// ([`crate::coordinator::server`]) drives this from N threads; see
+    /// [`Backend::qforward_one`](crate::runtime::Backend::qforward_one)
+    /// for which backends honor that contract. Backends cache the
+    /// quantized parameters keyed on `bits`, so a serve engine with a
+    /// constant allocation quantizes once.
     pub fn qforward_once(&self, x: &Tensor, bits: &[f32]) -> Result<Vec<f32>> {
         let out = self.backend.qforward_one(x, bits);
         self.note_execs();

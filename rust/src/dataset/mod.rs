@@ -82,6 +82,54 @@ impl Dataset {
         &self.labels.data()[start..start + len]
     }
 
+    /// The label of one image — the serve hot path's accessor (no slice
+    /// bookkeeping, no temporaries; the old `batch_labels(idx, 1)[0]`
+    /// spelling built a tensor-shaped batch next to it just to read one
+    /// label).
+    pub fn label(&self, idx: usize) -> i32 {
+        self.labels.data()[idx]
+    }
+
+    /// Elements per image (`h·w·c`) — the row stride of [`Dataset::fill_images`].
+    pub fn image_elems(&self) -> usize {
+        let sh = self.images.shape();
+        sh[1] * sh[2] * sh[3]
+    }
+
+    /// Copy the images at `ids` (any order, repeats allowed) into `out`,
+    /// one image per `image_elems()`-sized row — how the serve workers
+    /// assemble a coalesced micro-batch into a reused buffer without
+    /// allocating per request.
+    pub fn fill_images(&self, ids: &[usize], out: &mut [f32]) -> Result<()> {
+        let stride = self.image_elems();
+        if out.len() != ids.len() * stride {
+            return Err(Error::Shape(format!(
+                "fill_images: {} ids × {stride} elems wants {}, buffer has {}",
+                ids.len(),
+                ids.len() * stride,
+                out.len()
+            )));
+        }
+        let n = self.len();
+        let data = self.images.data();
+        for (&id, row) in ids.iter().zip(out.chunks_mut(stride)) {
+            if id >= n {
+                return Err(Error::Shape(format!("fill_images: image {id} out of {n}")));
+            }
+            row.copy_from_slice(&data[id * stride..(id + 1) * stride]);
+        }
+        Ok(())
+    }
+
+    /// Gathered batch tensor `[ids.len(), h, w, c]` (allocating
+    /// convenience over [`Dataset::fill_images`]).
+    pub fn gather(&self, ids: &[usize]) -> Result<Tensor> {
+        let sh = self.images.shape();
+        let mut out = vec![0f32; ids.len() * self.image_elems()];
+        self.fill_images(ids, &mut out)?;
+        Tensor::from_vec(&[ids.len(), sh[1], sh[2], sh[3]], out)
+    }
+
     /// Split the set into fixed-size batches; the tail remainder (if the
     /// size does not divide) is dropped, mirroring the evaluation protocol
     /// (1500 = 6 × 250 drops nothing).
@@ -120,6 +168,28 @@ mod tests {
         assert_eq!(t.shape(), &[10, IMG, IMG, 1]);
         assert!(ds.batch(20, 10).is_err());
         assert_eq!(ds.batch_labels(10, 10).len(), 10);
+    }
+
+    #[test]
+    fn single_label_and_gather_match_batch_views() {
+        let ds = Dataset::generate(12, 5);
+        for i in 0..12 {
+            assert_eq!(ds.label(i), ds.batch_labels(i, 1)[0]);
+        }
+        // gather of contiguous ids equals the contiguous batch, and
+        // arbitrary order/repeats pick the right rows
+        let contig = ds.batch(3, 4).unwrap();
+        let gathered = ds.gather(&[3, 4, 5, 6]).unwrap();
+        assert_eq!(contig.shape(), gathered.shape());
+        assert_eq!(contig.data(), gathered.data());
+        let stride = ds.image_elems();
+        let g = ds.gather(&[7, 2, 7]).unwrap();
+        assert_eq!(&g.data()[..stride], &ds.batch(7, 1).unwrap().data()[..]);
+        assert_eq!(&g.data()[stride..2 * stride], &ds.batch(2, 1).unwrap().data()[..]);
+        assert_eq!(&g.data()[2 * stride..], &ds.batch(7, 1).unwrap().data()[..]);
+        // bad ids / sizes error instead of panicking
+        assert!(ds.gather(&[12]).is_err());
+        assert!(ds.fill_images(&[0], &mut vec![0.0; stride - 1]).is_err());
     }
 
     #[test]

@@ -30,7 +30,7 @@
 //! | [`runtime`] | pluggable execution backends: CPU (default) and PJRT (`pjrt` feature) |
 //! | [`quant`] | uniform quantizer, noise model, bit-width allocators (adaptive / SQNR / equal) |
 //! | [`measure`] | adversarial margin, t_i robustness calibration, p_i estimation, linearity/additivity probes |
-//! | [`coordinator`] | experiment engine: job planning, thread-pooled evaluation, sweeps, serve loop |
+//! | [`coordinator`] | experiment engine: job planning, thread-pooled evaluation, sweeps, concurrent serve engine |
 //! | [`report`] | ascii plots, markdown/CSV tables |
 //! | [`cli`] | hand-rolled argument parser + subcommands |
 

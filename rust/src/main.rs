@@ -7,11 +7,12 @@
 //!                saved calibration
 //!   evaluate   — accuracy + size of an explicit or allocated bit vector
 //!   sweep      — Fig. 6/8 size-accuracy curves across allocators
-//!   serve      — batch-1 quantized serving loop with latency stats
+//!   serve      — concurrent quantized serving engine (workers × deadline
+//!                micro-batching) with latency/throughput stats
 //!   selfcheck  — artifact inventory + PJRT↔rust-nn cross-validation
 
 use adaq::cli::Args;
-use adaq::coordinator::{run_sweep_jobs, serve_loop, EvalCache, Session, SweepConfig};
+use adaq::coordinator::{run_server, run_sweep_jobs, EvalCache, ServerConfig, Session, SweepConfig};
 use adaq::dataset::Dataset;
 use adaq::measure::{
     adversarial_stats, calibrate_model_jobs, Calibration,
@@ -35,14 +36,19 @@ USAGE: adaq <command> [--flags]
   evaluate   --model M (--bits 8,6,4,… | --allocator A --b1 F) [--conv-only]
   sweep      --model M [--allocators a,b,c] [--conv-only] [--out CSV-DIR] [--jobs N]
   serve      --model M [--bits …] [--requests N] [--int8]
+             [--workers N] [--batch B] [--deadline-us D] [--queue-cap Q]
+             (workers > 1 / batch > 1 run the concurrent engine: N workers
+              over one session, up to B requests coalesced per forward
+              within D µs; accuracy is identical at any setting)
   export     --model M (--bits … | --allocator A --b1 F) [--out DIR]
   figures    [--models a,b,…] (regenerate Fig. 6/8 sweeps in-process)
   selfcheck  [--models a,b,…]
   help
 
-Common flags: --artifacts DIR (default ./artifacts), --batch N (default 250),
---jobs N (parallel calibration/sweep jobs; 0 = auto, capped at 16; default
-1 — any value produces byte-identical outputs)
+Common flags: --artifacts DIR (default ./artifacts), --batch N (default 250;
+for serve it is the micro-batch bound, default 1), --jobs N (parallel
+calibration/sweep jobs; 0 = auto, capped at 16; default 1 — any value
+produces byte-identical outputs)
 ";
 
 fn main() {
@@ -368,15 +374,33 @@ fn cmd_serve(args: &Args) -> Result<()> {
         None => vec![8.0; nwl],
     };
     let n = args.usize_flag("requests", 200)?;
-    let stats = serve_loop(&session, &test, &bits, n)?;
+    let cfg = ServerConfig {
+        workers: args.usize_flag("workers", 1)?.max(1),
+        batch: args.usize_flag("batch", 1)?.max(1),
+        deadline_us: args.usize_flag("deadline-us", 200)? as u64,
+        queue_cap: args.usize_flag("queue-cap", 0)?,
+    };
+    let r = run_server(&session, &test, &bits, n, &cfg)?;
     println!(
-        "{n} requests [{}{}]: acc {:.4}, p50 {:.2} ms, p99 {:.2} ms, {:.1} req/s",
+        "{n} requests [{}{}] workers {} batch ≤{} deadline {} µs: acc {:.4}, {:.1} req/s",
         session.backend_name(),
         if args.has("int8") { " int8" } else { "" },
-        stats.accuracy(),
-        stats.p50_ms,
-        stats.p99_ms,
-        stats.throughput_rps
+        cfg.workers,
+        cfg.batch,
+        cfg.deadline_us,
+        r.accuracy(),
+        r.throughput_rps,
+    );
+    println!(
+        "  sojourn p50 {:.2} / p99 {:.2} / p99.9 {:.2} ms, service p50 {:.2} / p99 {:.2} ms",
+        r.p50_ms, r.p99_ms, r.p999_ms, r.service_p50_ms, r.service_p99_ms
+    );
+    println!(
+        "  {} forwards, mean batch {:.2}, occupancy {:?}, queue depth {:?}",
+        r.forwards,
+        r.mean_batch_occupancy(),
+        r.batch_occupancy,
+        r.queue_depth
     );
     Ok(())
 }

@@ -179,9 +179,11 @@ impl GraphPlan {
     /// [`GraphPlan::forward_with`] in **integer serving mode**: conv and
     /// dense layers with a pre-encoded [`QuantWeight`] in `qweights`
     /// (indexed by layer) run through the int8×int8→i32 GEMM with
-    /// per-request activation quantization; `None` entries (and all
-    /// other layer kinds) take the f32 path with whatever `params`
-    /// holds. Biases always come from `params` (they ship fp32).
+    /// per-sample activation quantization (one grid per image, so a
+    /// stacked batch forwards each sample bitwise-identically to a
+    /// batch-1 call); `None` entries (and all other layer kinds) take
+    /// the f32 path with whatever `params` holds. Biases always come
+    /// from `params` (they ship fp32).
     pub fn forward_int8_with(
         &self,
         x: &Tensor,

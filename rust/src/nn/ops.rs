@@ -9,10 +9,14 @@
 //! The **integer serving path** adds a third flavor: [`QuantWeight`]
 //! holds a layer's weights as packed signed-int8 codes (encoded once per
 //! bit-vector), and [`dense_int8_fused`] / [`conv2d_int8_fused`] quantize
-//! the incoming activation to 8 bits per request, run the
-//! int8×int8→i32 GEMM, and map the integer accumulators back to f32 in a
-//! single write-back sweep that also applies the per-layer scale +
-//! zero-point correction terms, the bias, and (optionally) ReLU.
+//! the incoming activation to 8 bits **per sample** (one affine grid per
+//! image of the batch), run the int8×int8→i32 GEMM, and map the integer
+//! accumulators back to f32 in a single write-back sweep that also
+//! applies the per-layer scale + zero-point correction terms, the bias,
+//! and (optionally) ReLU. Per-sample grids make the outputs of a
+//! coalesced serve batch bitwise identical to the same requests run one
+//! at a time — the invariance the multi-worker serve engine
+//! (`coordinator::server`) is built on.
 
 use crate::quant::{AffineI8, QuantRange};
 use crate::tensor::{gemm_i8_packed, matmul_into, pack_i8, PackedI8, Tensor};
@@ -322,54 +326,81 @@ impl QuantWeight {
     }
 }
 
-/// Encode an activation slice to signed 8-bit codes over its own dynamic
-/// range, filling per-row code sums along the way. Returns the
-/// activation's `(scale, offset)`; a constant (or empty) slice encodes as
-/// all-zero codes with `scale = 0` and `offset =` the constant.
-fn quantize_act(x: &[f32], cols: usize, out: &mut [i8], rsum: &mut [i32]) -> (f32, f32) {
+/// Encode an activation slice to signed 8-bit codes, one affine grid
+/// **per sample group** (`groups` equal row blocks — one per image in a
+/// coalesced serve batch), filling per-row code sums along the way.
+/// Writes each group's `(scale, offset)` into `scales` (interleaved,
+/// `2·groups` floats); a constant (or empty) group encodes as all-zero
+/// codes with `scale = 0` and `offset =` the constant.
+///
+/// Per-group grids are what makes micro-batched serving **bitwise
+/// invariant**: sample `i` of a batch-B request quantizes over its own
+/// dynamic range, exactly as it would in a batch-1 request, so its codes
+/// (and the integer GEMM row, which is exact) cannot depend on which
+/// other requests it was coalesced with.
+fn quantize_act(
+    x: &[f32],
+    cols: usize,
+    groups: usize,
+    out: &mut [i8],
+    rsum: &mut [i32],
+    scales: &mut [f32],
+) {
     debug_assert_eq!(x.len(), out.len());
-    let mut lo = f32::INFINITY;
-    let mut hi = f32::NEG_INFINITY;
-    for &v in x {
-        if v < lo {
-            lo = v;
-        }
-        if v > hi {
-            hi = v;
-        }
-    }
-    match AffineI8::of(QuantRange { lo, hi }, 8.0) {
-        Some(grid) => {
-            for ((row_x, row_o), rs) in
-                x.chunks(cols).zip(out.chunks_mut(cols)).zip(rsum.iter_mut())
-            {
-                let mut acc = 0i32;
-                for (o, &v) in row_o.iter_mut().zip(row_x) {
-                    let c = grid.encode(v);
-                    *o = c;
-                    acc += c as i32;
-                }
-                *rs = acc;
+    let rows = x.len() / cols.max(1);
+    debug_assert!(groups >= 1 && rows % groups == 0, "{rows} rows / {groups} groups");
+    debug_assert_eq!(scales.len(), 2 * groups);
+    let rows_per = rows / groups;
+    let elems = rows_per * cols;
+    for g in 0..groups {
+        let xg = &x[g * elems..(g + 1) * elems];
+        let og = &mut out[g * elems..(g + 1) * elems];
+        let rg = &mut rsum[g * rows_per..(g + 1) * rows_per];
+        let mut lo = f32::INFINITY;
+        let mut hi = f32::NEG_INFINITY;
+        for &v in xg {
+            if v < lo {
+                lo = v;
             }
-            (grid.scale, grid.offset)
+            if v > hi {
+                hi = v;
+            }
         }
-        None => {
-            out.fill(0);
-            rsum.fill(0);
-            (0.0, if lo.is_finite() { lo } else { 0.0 })
-        }
+        let (s, o) = match AffineI8::of(QuantRange { lo, hi }, 8.0) {
+            Some(grid) => {
+                for ((row_x, row_o), rs) in
+                    xg.chunks(cols).zip(og.chunks_mut(cols)).zip(rg.iter_mut())
+                {
+                    let mut acc = 0i32;
+                    for (o, &v) in row_o.iter_mut().zip(row_x) {
+                        let c = grid.encode(v);
+                        *o = c;
+                        acc += c as i32;
+                    }
+                    *rs = acc;
+                }
+                (grid.scale, grid.offset)
+            }
+            None => {
+                og.fill(0);
+                rg.fill(0);
+                (0.0, if lo.is_finite() { lo } else { 0.0 })
+            }
+        };
+        scales[2 * g] = s;
+        scales[2 * g + 1] = o;
     }
 }
 
 /// Map int8-GEMM accumulators back to f32 in one sweep: apply the four
-/// affine correction terms (see [`QuantWeight`]), the bias, and
-/// optionally ReLU. `colc` is a `cols`-sized scratch row.
+/// affine correction terms (see [`QuantWeight`]) with each sample
+/// group's own activation `(scale, offset)`, the bias, and optionally
+/// ReLU. `colc` is a `cols`-sized scratch row (recomputed per group).
 #[allow(clippy::too_many_arguments)]
 fn requant_bias_act(
     acc: &[i32],
     rsum: &[i32],
-    sx: f32,
-    ox: f32,
+    scales: &[f32],
     qw: &QuantWeight,
     kdim: usize,
     bias: &[f32],
@@ -378,30 +409,41 @@ fn requant_bias_act(
     colc: &mut [f32],
 ) {
     let cols = bias.len();
-    let sxsw = sx * qw.scale;
-    let sxow = sx * qw.offset;
-    let base = kdim as f32 * ox * qw.offset;
-    for ((cc, &cs), &b) in colc.iter_mut().zip(&qw.col_sums).zip(bias) {
-        *cc = ox * qw.scale * cs as f32 + base + b;
-    }
-    for ((orow, arow), &rs) in out.chunks_mut(cols).zip(acc.chunks(cols)).zip(rsum) {
-        let rowc = sxow * rs as f32;
-        if relu {
-            for ((o, &a), &cc) in orow.iter_mut().zip(arow).zip(colc.iter()) {
-                *o = (sxsw * a as f32 + rowc + cc).max(0.0);
-            }
-        } else {
-            for ((o, &a), &cc) in orow.iter_mut().zip(arow).zip(colc.iter()) {
-                *o = sxsw * a as f32 + rowc + cc;
+    let groups = scales.len() / 2;
+    let rows = rsum.len();
+    let rows_per = rows / groups.max(1);
+    for g in 0..groups {
+        let (sx, ox) = (scales[2 * g], scales[2 * g + 1]);
+        let sxsw = sx * qw.scale;
+        let sxow = sx * qw.offset;
+        let base = kdim as f32 * ox * qw.offset;
+        for ((cc, &cs), &b) in colc.iter_mut().zip(&qw.col_sums).zip(bias) {
+            *cc = ox * qw.scale * cs as f32 + base + b;
+        }
+        let orows = &mut out[g * rows_per * cols..(g + 1) * rows_per * cols];
+        let arows = &acc[g * rows_per * cols..(g + 1) * rows_per * cols];
+        let rsums = &rsum[g * rows_per..(g + 1) * rows_per];
+        for ((orow, arow), &rs) in orows.chunks_mut(cols).zip(arows.chunks(cols)).zip(rsums) {
+            let rowc = sxow * rs as f32;
+            if relu {
+                for ((o, &a), &cc) in orow.iter_mut().zip(arow).zip(colc.iter()) {
+                    *o = (sxsw * a as f32 + rowc + cc).max(0.0);
+                }
+            } else {
+                for ((o, &a), &cc) in orow.iter_mut().zip(arow).zip(colc.iter()) {
+                    *o = sxsw * a as f32 + rowc + cc;
+                }
             }
         }
     }
 }
 
-/// Shared int8 matmul + requantize core over a row-major f32 LHS.
+/// Shared int8 matmul + requantize core over a row-major f32 LHS, with
+/// activations quantized per sample group (`rows % groups == 0`).
 fn int8_matmul_requant(
     lhs: &[f32],
     rows: usize,
+    groups: usize,
     qw: &QuantWeight,
     bias: &Tensor,
     relu: bool,
@@ -412,24 +454,33 @@ fn int8_matmul_requant(
     if bias.len() != cols {
         return Err(Error::Shape(format!("int8 bias {} vs cout {cols}", bias.len())));
     }
+    let groups = groups.max(1);
+    if rows % groups != 0 {
+        return Err(Error::Shape(format!("int8: {rows} rows not divisible into {groups} groups")));
+    }
     let mut xq = scratch.take_i8(rows * kdim);
     let mut rsum = scratch.take_i32(rows);
-    let (sx, ox) = quantize_act(lhs, kdim, &mut xq, &mut rsum);
+    let mut scales = scratch.take_any(2 * groups);
+    quantize_act(lhs, kdim, groups, &mut xq, &mut rsum, &mut scales);
     let mut acc = scratch.take_i32(rows * cols);
     gemm_i8_packed(&xq, &qw.packed, rows, &mut acc, 0);
     let mut out = scratch.take_any(rows * cols);
     let mut colc = scratch.take_any(cols);
-    requant_bias_act(&acc, &rsum, sx, ox, qw, kdim, bias.data(), relu, &mut out, &mut colc);
+    requant_bias_act(&acc, &rsum, &scales, qw, kdim, bias.data(), relu, &mut out, &mut colc);
     scratch.put_i8(xq);
     scratch.put_i32(rsum);
     scratch.put_i32(acc);
+    scratch.put(scales);
     scratch.put(colc);
     Ok(out)
 }
 
 /// Dense layer on the integer path: x `[n, cin]` f32 in, f32 out, with
 /// the inner product running int8×int8→i32 (bias → ReLU fused into the
-/// requantizing write-back).
+/// requantizing write-back). Activations are quantized **per sample**
+/// (one grid per row), so row `i` of a batch-n call is bitwise identical
+/// to a batch-1 call on that row — the serve micro-batcher's invariance
+/// contract.
 pub fn dense_int8_fused(
     x: &Tensor,
     qw: &QuantWeight,
@@ -445,7 +496,7 @@ pub fn dense_int8_fused(
     if cin != qw.rows() {
         return Err(Error::Shape(format!("dense_int8: cin {cin} vs weight rows {}", qw.rows())));
     }
-    let out = int8_matmul_requant(x.data(), n, qw, bias, relu, scratch)?;
+    let out = int8_matmul_requant(x.data(), n, n.max(1), qw, bias, relu, scratch)?;
     Tensor::from_vec(&[n, qw.cols()], out)
 }
 
@@ -453,7 +504,10 @@ pub fn dense_int8_fused(
 /// request (structural padding zeros quantize like any other value), the
 /// GEMM runs int8×int8→i32, and bias (→ ReLU) folds into the
 /// requantizing write-back. `k` is the kernel size of the HWIO weights
-/// `qw` was encoded from (`qw.rows() == k·k·cin`).
+/// `qw` was encoded from (`qw.rows() == k·k·cin`). As in
+/// [`dense_int8_fused`], each of the `n` input images gets its own
+/// activation grid (over its `oh·ow` patch rows), so per-image outputs
+/// are independent of the batch they were coalesced into.
 #[allow(clippy::too_many_arguments)]
 pub fn conv2d_int8_fused(
     x: &Tensor,
@@ -483,7 +537,7 @@ pub fn conv2d_int8_fused(
     let oh = (h + 2 * pad - k) / stride + 1;
     let ow = (w + 2 * pad - k) / stride + 1;
     let rows = n * oh * ow;
-    let out = int8_matmul_requant(patches.data(), rows, qw, bias, relu, scratch)?;
+    let out = int8_matmul_requant(patches.data(), rows, n.max(1), qw, bias, relu, scratch)?;
     scratch.put(patches.into_vec());
     Tensor::from_vec(&[n, oh, ow, qw.cols()], out)
 }
@@ -698,7 +752,7 @@ mod tests {
         assert_eq!(relu_with(&x, &mut s).data(), &[0.0, 0.0, 2.0]);
     }
 
-    use crate::quant::fake_quant;
+    use crate::quant::{fake_quant, fake_quant_into};
     use crate::rng::{fill_normal, Pcg32};
 
     fn randn(shape: &[usize], seed: u64) -> Tensor {
@@ -709,12 +763,33 @@ mod tests {
         Tensor::from_vec(shape, data).unwrap()
     }
 
+    /// Fake-quant a rank-2 LHS at 8 bits with one grid per sample group —
+    /// the f32 twin of the int8 path's per-sample activation encoding.
+    fn fake_quant_grouped(x: &Tensor, groups: usize) -> Tensor {
+        let per = x.len() / groups;
+        let mut out = vec![0f32; x.len()];
+        for (xg, og) in x.data().chunks(per).zip(out.chunks_mut(per)) {
+            let lo = xg.iter().copied().fold(f32::INFINITY, f32::min);
+            let hi = xg.iter().copied().fold(f32::NEG_INFINITY, f32::max);
+            fake_quant_into(xg, QuantRange { lo, hi }, 8.0, og);
+        }
+        Tensor::from_vec(x.shape(), out).unwrap()
+    }
+
     /// f32 reference for the int8 path: fake-quant the activation at 8
-    /// bits and the weights at `bits`, then multiply in f32. The integer
-    /// path computes the same real-valued sum (exactly, in the integer
-    /// part), so the two agree to float rounding.
-    fn int8_reference(x: &Tensor, w: &Tensor, bias: &Tensor, bits: f32, relu_on: bool) -> Tensor {
-        let fqx = fake_quant(x, 8.0);
+    /// bits (per sample group, like the integer path) and the weights at
+    /// `bits`, then multiply in f32. The integer path computes the same
+    /// real-valued sum (exactly, in the integer part), so the two agree
+    /// to float rounding.
+    fn int8_reference(
+        x: &Tensor,
+        w: &Tensor,
+        bias: &Tensor,
+        bits: f32,
+        relu_on: bool,
+        groups: usize,
+    ) -> Tensor {
+        let fqx = fake_quant_grouped(x, groups);
         let fqw = fake_quant(w, bits);
         let mut y = crate::tensor::matmul_reference(&fqx, &fqw).unwrap();
         bias_act_inplace(y.data_mut(), bias.data(), relu_on);
@@ -734,7 +809,7 @@ mod tests {
             let mut s = Scratch::new();
             for relu_on in [false, true] {
                 let got = dense_int8_fused(&x, &qw, &b, relu_on, &mut s).unwrap();
-                let want = int8_reference(&x, &w, &b, bits, relu_on);
+                let want = int8_reference(&x, &w, &b, bits, relu_on, n);
                 assert_eq!(got.shape(), &[n, cout]);
                 for (g, e) in got.data().iter().zip(want.data()) {
                     assert!(
@@ -742,6 +817,44 @@ mod tests {
                         "bits {bits} relu {relu_on}: {g} vs {e}"
                     );
                 }
+            }
+        }
+    }
+
+    #[test]
+    fn int8_batch_rows_match_single_sample_calls_bitwise() {
+        // the serve micro-batcher's contract: row i of a batch-n int8
+        // call is bitwise identical to a batch-1 call on sample i alone
+        let (n, cin, cout) = (5usize, 11usize, 7usize);
+        let x = randn(&[n, cin], 400);
+        let w = randn(&[cin, cout], 401);
+        let b = randn(&[cout], 402);
+        let qw = QuantWeight::quantize(&w, 6.0).unwrap();
+        let mut s = Scratch::new();
+        let batched = dense_int8_fused(&x, &qw, &b, true, &mut s).unwrap();
+        for i in 0..n {
+            let xi = Tensor::from_vec(&[1, cin], x.row(i).to_vec()).unwrap();
+            let one = dense_int8_fused(&xi, &qw, &b, true, &mut s).unwrap();
+            for (a, b) in batched.row(i).iter().zip(one.data()) {
+                assert_eq!(a.to_bits(), b.to_bits(), "sample {i}");
+            }
+        }
+        // conv: per-image grids over each image's im2col patch rows
+        let (k, ci, co) = (3usize, 2usize, 4usize);
+        let xc = randn(&[3, 5, 5, ci], 410);
+        let wc = randn(&[k, k, ci, co], 411);
+        let bc = randn(&[co], 412);
+        let qwc = QuantWeight::quantize(&wc, 8.0).unwrap();
+        let batched = conv2d_int8_fused(&xc, &qwc, &bc, k, 1, 1, false, &mut s).unwrap();
+        let img = 5 * 5 * ci;
+        for i in 0..3 {
+            let xi =
+                Tensor::from_vec(&[1, 5, 5, ci], xc.data()[i * img..(i + 1) * img].to_vec())
+                    .unwrap();
+            let one = conv2d_int8_fused(&xi, &qwc, &bc, k, 1, 1, false, &mut s).unwrap();
+            let per = one.len();
+            for (a, b) in batched.data()[i * per..(i + 1) * per].iter().zip(one.data()) {
+                assert_eq!(a.to_bits(), b.to_bits(), "image {i}");
             }
         }
     }
@@ -773,10 +886,10 @@ mod tests {
         let got = conv2d_int8_fused(&x, &qw, &b, k, 1, 1, true, &mut s).unwrap();
         assert_eq!(got.shape(), &[2, 5, 5, cout]);
         // reference: same im2col (same padding zeros), fake-quant both
-        // operands, f32 matmul
+        // operands (one activation grid per image), f32 matmul
         let patches = im2col(&x, k, 1, 1).unwrap();
         let wflat = w.clone().reshape(&[k * k * cin, cout]).unwrap();
-        let want = int8_reference(&patches, &wflat, &b, bits, true);
+        let want = int8_reference(&patches, &wflat, &b, bits, true, 2);
         for (g, e) in got.data().iter().zip(want.data()) {
             assert!((g - e).abs() <= 1e-3 * (1.0 + e.abs()), "{g} vs {e}");
         }
@@ -792,7 +905,7 @@ mod tests {
         let qw = QuantWeight::quantize(&w, 8.0).unwrap();
         let mut s = Scratch::new();
         let got = dense_int8_fused(&x, &qw, &b, false, &mut s).unwrap();
-        let want = int8_reference(&x, &w, &b, 8.0, false);
+        let want = int8_reference(&x, &w, &b, 8.0, false, 3);
         for (g, e) in got.data().iter().zip(want.data()) {
             assert!((g - e).abs() <= 1e-4 * (1.0 + e.abs()), "{g} vs {e}");
         }

@@ -19,16 +19,24 @@
 //!
 //! Serve path: the [`GraphPlan`] (use counts, fusion tables, resolved
 //! edges) is computed **once** in [`CpuBackend::new`] and shared by every
-//! forward — batch-1 requests no longer rebuild the analysis. With
-//! [`CpuBackend::with_int8_serving`] enabled, [`Backend::qforward_one`]
-//! additionally executes conv/dense layers through the int8×int8→i32
-//! GEMM: weights are encoded to [`QuantWeight`] once per bits vector
-//! (cached, like the f32 fake-quant set), activations are quantized per
-//! request. Bit-widths outside the int8 lattice (fractional, 0, or > 8)
+//! forward — requests never rebuild the analysis. [`Backend::qforward_one`]
+//! is **concurrency-ready and batch-agnostic**: the quantized-parameter
+//! caches hand out `Arc` snapshots under a short lock and a pool of
+//! scratch arenas replaces the old single shared arena, so N serve
+//! workers (`coordinator::server`) forward simultaneously without
+//! serializing on the backend; and `x` may stack B coalesced requests
+//! (`[B, h, w, c]`), with every sample's logits bitwise identical to a
+//! batch-1 call — the f32 GEMM accumulates each output element in a
+//! fixed k-order independent of the row count, and the int8 path
+//! quantizes activations per sample. With
+//! [`CpuBackend::with_int8_serving`] enabled, conv/dense layers execute
+//! through the int8×int8→i32 GEMM: weights are encoded to
+//! [`QuantWeight`] once per bits vector (cached, like the f32 fake-quant
+//! set). Bit-widths outside the int8 lattice (fractional, 0, or > 8)
 //! fall back to f32 fake-quant per layer.
 
 use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
-use std::sync::Mutex;
+use std::sync::{Arc, Mutex};
 
 use crate::dataset::Dataset;
 use crate::model::{Manifest, ModelArtifacts};
@@ -71,15 +79,27 @@ pub struct CpuBackend {
     outer_jobs: AtomicUsize,
     /// Serve requests take the integer path (see [`CpuBackend::with_int8_serving`]).
     int8_serving: bool,
-    /// Cached quantized parameter set keyed on the bits vector (serve path).
-    qcache: Mutex<Option<(Vec<f32>, Vec<(usize, Tensor)>)>>,
-    /// Cached int8 weight set keyed on the bits vector (integer serving).
-    qcache_int8: Mutex<Option<(Vec<f32>, Int8Set)>>,
-    /// Scratch arena reused across [`Backend::qforward_one`] requests so
-    /// steady-state serving draws all activation buffers from the pool.
-    serve_scratch: Mutex<Scratch>,
+    /// Cached quantized parameter set keyed on the bits vector (serve
+    /// path). The set is behind an `Arc` so a request clones the handle
+    /// under a short lock and runs its forward **outside** the mutex —
+    /// concurrent serve workers share the cache without serializing on
+    /// it (the lock is held across requantization only when the bits
+    /// vector actually changes).
+    qcache: Mutex<Option<(Vec<f32>, Arc<Vec<(usize, Tensor)>>)>>,
+    /// Cached int8 weight set keyed on the bits vector (integer serving);
+    /// same `Arc` hand-off discipline as `qcache`.
+    qcache_int8: Mutex<Option<(Vec<f32>, Arc<Int8Set>)>>,
+    /// Pool of scratch arenas for [`Backend::qforward_one`]: each request
+    /// pops one (or builds a fresh one under contention), forwards, and
+    /// pushes it back — steady-state serving allocates nothing, and N
+    /// concurrent workers never block on a shared arena.
+    serve_scratch: Mutex<Vec<Scratch>>,
     execs: AtomicU64,
 }
+
+/// Pooled serve arenas beyond this are dropped rather than kept (bounds
+/// resident memory after a burst of concurrent workers).
+const SERVE_SCRATCH_CAP: usize = 32;
 
 impl CpuBackend {
     /// Build from an in-memory manifest + parameter list + batches.
@@ -124,7 +144,7 @@ impl CpuBackend {
             int8_serving: false,
             qcache: Mutex::new(None),
             qcache_int8: Mutex::new(None),
-            serve_scratch: Mutex::new(Scratch::new()),
+            serve_scratch: Mutex::new(Vec::new()),
             execs: AtomicU64::new(0),
         })
     }
@@ -280,31 +300,43 @@ impl CpuBackend {
         Int8Set { qweights, fallbacks }
     }
 
-    /// Run `f` with the (cached) quantized parameter set for `bits`.
-    fn with_quantized<R>(
-        &self,
-        bits: &[f32],
-        f: impl FnOnce(&[(usize, Tensor)]) -> R,
-    ) -> R {
+    /// The (cached) quantized parameter set for `bits`, as a shared
+    /// handle the caller uses **after** dropping the cache lock. A bits
+    /// change requantizes under the lock (one writer, once per vector);
+    /// steady-state requests only clone the `Arc`.
+    fn quantized_for(&self, bits: &[f32]) -> Arc<Vec<(usize, Tensor)>> {
         let mut guard = self.qcache.lock().unwrap();
         let hit = matches!(&*guard, Some((b, _)) if b.as_slice() == bits);
         if !hit {
-            let q = self.quantize_params(bits);
+            let q = Arc::new(self.quantize_params(bits));
             *guard = Some((bits.to_vec(), q));
         }
-        f(&guard.as_ref().unwrap().1)
+        guard.as_ref().unwrap().1.clone()
     }
 
-    /// Run `f` with the (cached) int8 weight set for `bits` — weights are
-    /// encoded once per bits vector, not per request.
-    fn with_quantized_int8<R>(&self, bits: &[f32], f: impl FnOnce(&Int8Set) -> R) -> R {
+    /// The (cached) int8 weight set for `bits` — encoded once per bits
+    /// vector, handed out as a shared handle like [`CpuBackend::quantized_for`].
+    fn int8_for(&self, bits: &[f32]) -> Arc<Int8Set> {
         let mut guard = self.qcache_int8.lock().unwrap();
         let hit = matches!(&*guard, Some((b, _)) if b.as_slice() == bits);
         if !hit {
-            let q = self.quantize_params_int8(bits);
+            let q = Arc::new(self.quantize_params_int8(bits));
             *guard = Some((bits.to_vec(), q));
         }
-        f(&guard.as_ref().unwrap().1)
+        guard.as_ref().unwrap().1.clone()
+    }
+
+    /// Pop a serve arena from the pool (or build one under contention).
+    fn take_serve_scratch(&self) -> Scratch {
+        self.serve_scratch.lock().unwrap().pop().unwrap_or_default()
+    }
+
+    /// Return a serve arena to the pool.
+    fn put_serve_scratch(&self, scratch: Scratch) {
+        let mut pool = self.serve_scratch.lock().unwrap();
+        if pool.len() < SERVE_SCRATCH_CAP {
+            pool.push(scratch);
+        }
     }
 }
 
@@ -324,13 +356,11 @@ impl Backend for CpuBackend {
 
     fn forward_all_qbits(&self, bits: &[f32]) -> Result<Vec<Vec<f32>>> {
         self.check_bits(bits)?;
-        // quantize locally instead of through `with_quantized`: that
-        // helper holds the qcache mutex for the duration of the closure,
-        // which would serialize concurrent sweep evaluations issued by
-        // the job pool. The cache only earns its keep on the serve path
-        // (same bits every request); a sweep evaluates each distinct
-        // vector once, and fake-quant cost is negligible against the
-        // full-dataset forward.
+        // quantize locally instead of through the serve qcache: the
+        // cache only earns its keep on the serve path (same bits every
+        // request); a sweep evaluates each distinct vector once, and
+        // fake-quant cost is negligible against the full-dataset
+        // forward — caching here would just churn the serve entry.
         let q = self.quantize_params(bits);
         let refs: Vec<(usize, &Tensor)> = q.iter().map(|(pi, t)| (*pi, t)).collect();
         let eff = self.effective(&refs)?;
@@ -340,24 +370,26 @@ impl Backend for CpuBackend {
     fn qforward_one(&self, x: &Tensor, bits: &[f32]) -> Result<Vec<f32>> {
         self.check_bits(bits)?;
         self.execs.fetch_add(1, Ordering::Relaxed);
-        if self.int8_serving {
-            return self.with_quantized_int8(bits, |set| {
-                let refs: Vec<(usize, &Tensor)> =
-                    set.fallbacks.iter().map(|(pi, t)| (*pi, t)).collect();
-                let eff = self.effective(&refs)?;
-                let mut scratch = self.serve_scratch.lock().unwrap();
-                Ok(self
-                    .plan
-                    .forward_int8_with(x, &eff, &set.qweights, &mut scratch)?
-                    .into_vec())
-            });
-        }
-        self.with_quantized(bits, |q| {
+        // clone the cached-set handle under a short lock, pop a private
+        // scratch arena, then forward with no lock held — concurrent
+        // serve workers only contend on the two brief pool/cache locks
+        let mut scratch = self.take_serve_scratch();
+        let out = if self.int8_serving {
+            let set = self.int8_for(bits);
+            let refs: Vec<(usize, &Tensor)> =
+                set.fallbacks.iter().map(|(pi, t)| (*pi, t)).collect();
+            let eff = self.effective(&refs)?;
+            self.plan
+                .forward_int8_with(x, &eff, &set.qweights, &mut scratch)
+                .map(Tensor::into_vec)
+        } else {
+            let q = self.quantized_for(bits);
             let refs: Vec<(usize, &Tensor)> = q.iter().map(|(pi, t)| (*pi, t)).collect();
             let eff = self.effective(&refs)?;
-            let mut scratch = self.serve_scratch.lock().unwrap();
-            Ok(self.plan.forward_with(x, &eff, &mut scratch)?.into_vec())
-        })
+            self.plan.forward_with(x, &eff, &mut scratch).map(Tensor::into_vec)
+        };
+        self.put_serve_scratch(scratch);
+        out
     }
 
     fn execs(&self) -> u64 {
@@ -482,6 +514,57 @@ mod tests {
         // repeated requests hit the cached int8 set and stay bitwise stable
         let again = i8_be.qforward_one(&x, &bits).unwrap();
         assert_eq!(again, i8_out);
+    }
+
+    #[test]
+    fn qforward_batch_rows_match_single_requests_bitwise() {
+        // the serve micro-batcher's contract, end to end through the
+        // graph: a stacked batch-B request produces, per sample, exactly
+        // the logits of B batch-1 requests — on both serving modes
+        for int8 in [false, true] {
+            let be = toy_backend(2).with_int8_serving(int8);
+            let xb = be.batches[2].clone(); // [5, 4, 4, 1]
+            let bits = [6.0f32, 8.0];
+            let stacked = be.qforward_one(&xb, &bits).unwrap();
+            let img = 4 * 4;
+            let classes = 3;
+            for i in 0..5 {
+                let xi = Tensor::from_vec(
+                    &[1, 4, 4, 1],
+                    xb.data()[i * img..(i + 1) * img].to_vec(),
+                )
+                .unwrap();
+                let one = be.qforward_one(&xi, &bits).unwrap();
+                assert_eq!(one.len(), classes);
+                for (a, b) in stacked[i * classes..(i + 1) * classes].iter().zip(&one) {
+                    assert_eq!(a.to_bits(), b.to_bits(), "int8={int8} sample {i}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn concurrent_qforward_requests_are_stable() {
+        // many threads hammering qforward_one with the same bits must
+        // all see the cached set and produce identical logits (the Arc
+        // hand-off: no torn caches, no serialization artifacts)
+        let be = std::sync::Arc::new(toy_backend(2).with_int8_serving(true));
+        let x = be.batches[0].clone();
+        let bits = [8.0f32, 8.0];
+        let want = be.qforward_one(&x, &bits).unwrap();
+        std::thread::scope(|s| {
+            for _ in 0..8 {
+                let be = &be;
+                let x = &x;
+                let want = &want;
+                s.spawn(move || {
+                    for _ in 0..16 {
+                        let got = be.qforward_one(x, &bits).unwrap();
+                        assert_eq!(&got, want);
+                    }
+                });
+            }
+        });
     }
 
     #[test]

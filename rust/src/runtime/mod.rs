@@ -58,12 +58,21 @@ pub trait Backend: Send + Sync {
     /// its per-layer bit-width (the paper's quantized evaluation).
     fn forward_all_qbits(&self, bits: &[f32]) -> Result<Vec<Vec<f32>>>;
 
-    /// Single-input quantized forward — the serving path. Backends
-    /// should cache per-`bits` state so repeated calls with the same
-    /// allocation stay hot ([`CpuBackend`] caches the quantized
-    /// parameter set — f32 fake-quant, or packed int8 codes in integer
-    /// serving mode; the PJRT backend still re-uploads the bits vector,
-    /// see its impl note). `serve_loop` issues one untimed warm-up call.
+    /// Single-request quantized forward — the serving path. On
+    /// [`CpuBackend`], `x` may also be a stack of B coalesced requests
+    /// (`[B, …]`): flat logits come back row-per-sample, each sample's
+    /// logits independent of the batch it rode in, and concurrent
+    /// callers are safe — the multi-worker serve engine
+    /// (`coordinator::server`) relies on both. Backends that cannot
+    /// honor that (the PJRT backend compiles batch-1 executables and
+    /// its FFI buffers are not thread-safe) are restricted to the
+    /// sequential engine — `run_server` rejects `workers > 1` /
+    /// `batch > 1` on them up front. Backends should cache per-`bits`
+    /// state so repeated calls with the same allocation stay hot
+    /// ([`CpuBackend`] caches the quantized parameter set — f32
+    /// fake-quant, or packed int8 codes in integer serving mode; the
+    /// PJRT backend still re-uploads the bits vector, see its impl
+    /// note). The serve drivers issue one untimed warm-up call.
     fn qforward_one(&self, x: &Tensor, bits: &[f32]) -> Result<Vec<f32>>;
 
     /// Forward executions since construction (perf accounting).

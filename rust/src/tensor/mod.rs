@@ -264,6 +264,13 @@ thread_local! {
     /// threads that already own one slice of a batch-parallel evaluation
     /// set this to 1 so nested GEMMs don't oversubscribe the machine.
     static GEMM_THREADS: Cell<usize> = Cell::new(0);
+    /// Per-thread *ceiling* on auto-picked GEMM threads; 0 = no cap.
+    /// Unlike [`set_gemm_threads`] (a hard override that also forces
+    /// threading onto products too small to amortize spawns), the cap
+    /// only limits what auto-threading may choose — tiny GEMMs still run
+    /// inline. Serve workers use this to split the machine: W workers ×
+    /// cap(threads/W) GEMM threads never oversubscribe.
+    static GEMM_THREAD_CAP: Cell<usize> = Cell::new(0);
     /// Per-thread B-panel pack buffer, reused across GEMM calls so the
     /// steady-state hot path (same weight shapes every batch/probe) does
     /// not allocate per multiply.
@@ -282,8 +289,21 @@ pub fn gemm_threads() -> usize {
     GEMM_THREADS.with(|c| c.get())
 }
 
+/// Cap auto-picked GEMM threads on the *calling thread* (0 removes the
+/// cap). Small products still run inline; big ones use at most `n`
+/// threads. A [`set_gemm_threads`] override takes precedence.
+pub fn set_gemm_thread_cap(n: usize) {
+    GEMM_THREAD_CAP.with(|c| c.set(n));
+}
+
+/// The calling thread's auto-threading cap (0 = uncapped).
+pub fn gemm_thread_cap() -> usize {
+    GEMM_THREAD_CAP.with(|c| c.get())
+}
+
 /// Threads to use for an m×k·k×n product: the thread-local override if
-/// set, else all cores for products big enough to amortize the spawns.
+/// set, else all cores (bounded by the thread-local cap) for products
+/// big enough to amortize the spawns.
 fn gemm_auto_threads(m: usize, n: usize, k: usize) -> usize {
     let forced = GEMM_THREADS.with(|c| c.get());
     if forced != 0 {
@@ -293,7 +313,11 @@ fn gemm_auto_threads(m: usize, n: usize, k: usize) -> usize {
     if flops < (1 << 22) || m < 2 * MR {
         return 1;
     }
-    std::thread::available_parallelism().map_or(1, |v| v.get()).min(16)
+    let auto = std::thread::available_parallelism().map_or(1, |v| v.get()).min(16);
+    match GEMM_THREAD_CAP.with(|c| c.get()) {
+        0 => auto,
+        cap => auto.min(cap),
+    }
 }
 
 /// Pack B (k×n row-major) into NR-wide column panels, zero-padded on the
@@ -761,6 +785,33 @@ mod tests {
         let mut out = vec![0i32; m * n];
         matmul_i8_into(&a, &b, m, k, n, &mut out);
         assert!(out.iter().all(|&v| v == -128 * 127 * 64));
+    }
+
+    #[test]
+    fn gemm_thread_cap_bounds_auto_only() {
+        // the cap bounds auto-threading but never forces threading onto
+        // tiny products, and a hard override wins over the cap
+        set_gemm_thread_cap(2);
+        assert_eq!(gemm_thread_cap(), 2);
+        // tiny product: auto stays 1 (flops guard) regardless of cap
+        assert_eq!(gemm_auto_threads(8, 8, 8), 1);
+        // big product: auto is clamped to the cap
+        assert!(gemm_auto_threads(1024, 1024, 1024) <= 2);
+        set_gemm_threads(5);
+        assert_eq!(gemm_auto_threads(1024, 1024, 1024), 5);
+        set_gemm_threads(0);
+        set_gemm_thread_cap(0);
+        assert_eq!(gemm_thread_cap(), 0);
+        // capped runs stay bitwise identical — only scheduling changes
+        let a = Tensor::from_vec(&[33, 21], (0..693).map(|v| (v as f32).sin()).collect()).unwrap();
+        let b = Tensor::from_vec(&[21, 17], (0..357).map(|v| (v as f32).cos()).collect()).unwrap();
+        let free = matmul(&a, &b).unwrap();
+        set_gemm_thread_cap(1);
+        let capped = matmul(&a, &b).unwrap();
+        set_gemm_thread_cap(0);
+        for (x, y) in free.data().iter().zip(capped.data()) {
+            assert_eq!(x.to_bits(), y.to_bits());
+        }
     }
 
     #[test]

@@ -1,0 +1,261 @@
+//! Concurrent serving engine integration — all artifact-free, on a
+//! briefly-trained MLP over the procedural shapes dataset:
+//!
+//! * **Invariance**: `workers=4, batch=4` produces identical `correct`
+//!   counts and per-request predictions to `workers=1, batch=1`, on both
+//!   the f32 fake-quant and the `--int8` serving paths — batching and
+//!   concurrency may move latency/throughput, never answers;
+//! * `serve_loop` is the engine's `workers=1, batch=1` degenerate case
+//!   and still honors its batch-1 session contract;
+//! * the queue drains every accepted request on shutdown (none dropped,
+//!   none served twice);
+//! * report bookkeeping is self-consistent (occupancy ↔ requests ↔
+//!   forwards).
+
+use std::sync::OnceLock;
+
+use adaq::coordinator::{run_server, serve_loop, ServerConfig, Session};
+use adaq::coordinator::server::{Request, RequestQueue};
+use adaq::dataset::{Dataset, IMG, NUM_CLASSES, TEST_SEED, TRAIN_SEED};
+use adaq::io::Json;
+use adaq::model::{Manifest, ModelArtifacts, WeightStore};
+use adaq::nn::softmax;
+use adaq::rng::{fill_normal, Pcg32};
+use adaq::tensor::{matmul, Tensor};
+
+const HIDDEN: usize = 24;
+const PIXELS: usize = IMG * IMG;
+
+fn mlp_manifest() -> Manifest {
+    let json = format!(
+        r#"{{
+        "model": "serve_mt_mlp", "input_shape": [{IMG},{IMG},1],
+        "num_classes": {NUM_CLASSES}, "output": "fc2",
+        "num_weighted_layers": 2,
+        "total_quantizable_params": {},
+        "layers": [
+          {{"name":"flat","kind":"flatten","inputs":["input"]}},
+          {{"name":"fc1","kind":"dense","inputs":["flat"],"cin":{PIXELS},
+           "cout":{HIDDEN},"param_idx_w":1,"param_idx_b":2,"qindex":0,
+           "s_i":{}}},
+          {{"name":"relu1","kind":"relu","inputs":["fc1"]}},
+          {{"name":"fc2","kind":"dense","inputs":["relu1"],"cin":{HIDDEN},
+           "cout":{NUM_CLASSES},"param_idx_w":3,"param_idx_b":4,"qindex":1,
+           "s_i":{}}}
+        ]}}"#,
+        PIXELS * HIDDEN + HIDDEN * NUM_CLASSES,
+        PIXELS * HIDDEN,
+        HIDDEN * NUM_CLASSES,
+    );
+    Manifest::from_json(&Json::parse(&json).unwrap()).unwrap()
+}
+
+/// A few epochs of plain SGD — enough that serving accuracy is well above
+/// chance and predictions carry real margins.
+fn train_mlp(train: &Dataset, epochs: usize, lr: f32) -> Vec<Tensor> {
+    let mut rng = Pcg32::new(0x5EED);
+    let scaled = |shape: &[usize], scale: f32, rng: &mut Pcg32| {
+        let n: usize = shape.iter().product();
+        let mut data = vec![0f32; n];
+        fill_normal(rng, &mut data);
+        for v in data.iter_mut() {
+            *v *= scale;
+        }
+        Tensor::from_vec(shape, data).unwrap()
+    };
+    let mut w1 = scaled(&[PIXELS, HIDDEN], 1.0 / (PIXELS as f32).sqrt(), &mut rng);
+    let mut b1 = Tensor::zeros(&[HIDDEN]);
+    let mut w2 = scaled(&[HIDDEN, NUM_CLASSES], 1.0 / (HIDDEN as f32).sqrt(), &mut rng);
+    let mut b2 = Tensor::zeros(&[NUM_CLASSES]);
+    let batch = 100;
+    for _ in 0..epochs {
+        for (start, len) in train.batches(batch) {
+            let x = train.batch(start, len).unwrap().reshape(&[len, PIXELS]).unwrap();
+            let y = train.batch_labels(start, len);
+            let mut h = matmul(&x, &w1).unwrap();
+            for row in h.data_mut().chunks_mut(HIDDEN) {
+                for (v, &b) in row.iter_mut().zip(b1.data()) {
+                    *v = (*v + b).max(0.0);
+                }
+            }
+            let mut z = matmul(&h, &w2).unwrap();
+            for row in z.data_mut().chunks_mut(NUM_CLASSES) {
+                for (v, &b) in row.iter_mut().zip(b2.data()) {
+                    *v += b;
+                }
+            }
+            let p = softmax(&z).unwrap();
+            let mut dz = p.clone();
+            for (i, &label) in y.iter().enumerate() {
+                dz.data_mut()[i * NUM_CLASSES + label as usize] -= 1.0;
+            }
+            let inv = 1.0 / len as f32;
+            for v in dz.data_mut() {
+                *v *= inv;
+            }
+            let dw2 = matmul(&h.transpose2().unwrap(), &dz).unwrap();
+            let mut db2 = vec![0f32; NUM_CLASSES];
+            for row in dz.data().chunks(NUM_CLASSES) {
+                for (acc, &v) in db2.iter_mut().zip(row) {
+                    *acc += v;
+                }
+            }
+            let mut dh = matmul(&dz, &w2.transpose2().unwrap()).unwrap();
+            for (g, &hv) in dh.data_mut().iter_mut().zip(h.data()) {
+                if hv == 0.0 {
+                    *g = 0.0;
+                }
+            }
+            let dw1 = matmul(&x.transpose2().unwrap(), &dh).unwrap();
+            let mut db1 = vec![0f32; HIDDEN];
+            for row in dh.data().chunks(HIDDEN) {
+                for (acc, &v) in db1.iter_mut().zip(row) {
+                    *acc += v;
+                }
+            }
+            for (w, g) in w2.data_mut().iter_mut().zip(dw2.data()) {
+                *w -= lr * g;
+            }
+            for (w, &g) in b2.data_mut().iter_mut().zip(&db2) {
+                *w -= lr * g;
+            }
+            for (w, g) in w1.data_mut().iter_mut().zip(dw1.data()) {
+                *w -= lr * g;
+            }
+            for (w, &g) in b1.data_mut().iter_mut().zip(&db1) {
+                *w -= lr * g;
+            }
+        }
+    }
+    vec![w1, b1, w2, b2]
+}
+
+fn trained_params() -> &'static Vec<Tensor> {
+    static PARAMS: OnceLock<Vec<Tensor>> = OnceLock::new();
+    PARAMS.get_or_init(|| {
+        let train = Dataset::generate(1200, TRAIN_SEED);
+        train_mlp(&train, 4, 0.3)
+    })
+}
+
+fn trained_artifacts() -> ModelArtifacts {
+    let named: Vec<(String, Tensor)> = ["fc1.w", "fc1.b", "fc2.w", "fc2.b"]
+        .iter()
+        .map(|s| s.to_string())
+        .zip(trained_params().iter().cloned())
+        .collect();
+    ModelArtifacts {
+        dir: std::path::PathBuf::from("<in-memory>"),
+        manifest: mlp_manifest(),
+        weights: WeightStore::from_params(named),
+    }
+}
+
+fn cfg(workers: usize, batch: usize, deadline_us: u64) -> ServerConfig {
+    ServerConfig { workers, batch, deadline_us, queue_cap: 0 }
+}
+
+#[test]
+fn mt_batched_serving_is_invariant_f32() {
+    let arts = trained_artifacts();
+    let test = Dataset::generate(300, TEST_SEED);
+    let session = Session::from_parts(arts, test.clone(), 1).unwrap();
+    assert!(session.baseline().accuracy > 0.3, "MLP should be trained");
+    let bits = [8.0f32, 8.0];
+    let n = 200;
+    let base = run_server(&session, &test, &bits, n, &cfg(1, 1, 0)).unwrap();
+    assert_eq!(base.requests, n);
+    assert_eq!(base.forwards, n, "batch-1 engine forwards once per request");
+    for c in [cfg(4, 1, 0), cfg(4, 4, 500), cfg(2, 8, 200)] {
+        let got = run_server(&session, &test, &bits, n, &c).unwrap();
+        assert_eq!(got.predictions, base.predictions, "{c:?}");
+        assert_eq!(got.correct, base.correct, "{c:?}");
+        assert_eq!(got.accuracy(), base.accuracy(), "{c:?}");
+        // bookkeeping: every request rode exactly one micro-batch
+        let served: usize =
+            got.batch_occupancy.iter().enumerate().map(|(i, c)| (i + 1) * c).sum();
+        assert_eq!(served, n, "{c:?}");
+        assert_eq!(got.batch_occupancy.iter().sum::<usize>(), got.forwards, "{c:?}");
+        assert!(got.forwards <= n);
+    }
+    // and the engine agrees with the legacy sequential loop
+    let legacy = serve_loop(&session, &test, &bits, n).unwrap();
+    assert_eq!(legacy.correct, base.correct);
+    assert_eq!(legacy.requests, n);
+    assert!(legacy.throughput_rps >= 0.0);
+}
+
+#[test]
+fn mt_batched_serving_is_invariant_int8() {
+    let arts = trained_artifacts();
+    let test = Dataset::generate(300, TEST_SEED);
+    let session = Session::from_parts_int8(arts, test.clone(), 1).unwrap();
+    let bits = [8.0f32, 6.0];
+    let n = 200;
+    let base = run_server(&session, &test, &bits, n, &cfg(1, 1, 0)).unwrap();
+    for c in [cfg(4, 4, 500), cfg(3, 2, 0)] {
+        let got = run_server(&session, &test, &bits, n, &c).unwrap();
+        // per-sample activation grids make batched int8 bitwise
+        // invariant, so predictions (not just accuracy) must match
+        assert_eq!(got.predictions, base.predictions, "{c:?}");
+        assert_eq!(got.correct, base.correct, "{c:?}");
+    }
+    // int8 serving still tracks the f32 path's accuracy on this model
+    let f32_session = Session::from_parts(trained_artifacts(), test.clone(), 1).unwrap();
+    let f32_r = run_server(&f32_session, &test, &bits, n, &cfg(4, 4, 500)).unwrap();
+    let diff = (f32_r.accuracy() - base.accuracy()).abs();
+    assert!(diff <= 0.05, "int8 {} vs f32 {}", base.accuracy(), f32_r.accuracy());
+}
+
+#[test]
+fn engine_rejects_degenerate_configs() {
+    let arts = trained_artifacts();
+    let test = Dataset::generate(40, TEST_SEED);
+    let session = Session::from_parts(arts, test.clone(), 1).unwrap();
+    let bits = [8.0f32, 8.0];
+    assert!(run_server(&session, &test, &bits, 0, &cfg(1, 1, 0)).is_err());
+    assert!(run_server(&session, &test, &bits, 10, &cfg(0, 1, 0)).is_err());
+    assert!(run_server(&session, &test, &bits, 10, &cfg(1, 0, 0)).is_err());
+    // malformed bits surface as Err from the warm-up, not a worker panic
+    assert!(run_server(&session, &test, &[8.0], 10, &cfg(2, 2, 100)).is_err());
+}
+
+#[test]
+fn queue_drains_all_accepted_requests_on_shutdown() {
+    use std::sync::atomic::{AtomicUsize, Ordering};
+    use std::time::{Duration, Instant};
+
+    let queue = RequestQueue::new(8);
+    let n = 500usize;
+    let served = AtomicUsize::new(0);
+    let mut seen = vec![false; n];
+    std::thread::scope(|s| {
+        let consumers: Vec<_> = (0..3)
+            .map(|_| {
+                s.spawn(|| {
+                    let mut got = Vec::new();
+                    let mut out = Vec::new();
+                    while queue.pop_batch(4, Duration::from_micros(100), &mut out).is_some() {
+                        served.fetch_add(out.len(), Ordering::Relaxed);
+                        got.extend(out.iter().map(|r| r.id));
+                        out.clear();
+                    }
+                    got
+                })
+            })
+            .collect();
+        for id in 0..n {
+            assert!(queue.push(Request { id, idx: id, enqueued_at: Instant::now() }));
+        }
+        queue.close();
+        assert!(!queue.push(Request { id: n, idx: 0, enqueued_at: Instant::now() }));
+        for c in consumers {
+            for id in c.join().unwrap() {
+                assert!(!seen[id], "request {id} served twice");
+                seen[id] = true;
+            }
+        }
+    });
+    assert_eq!(served.load(Ordering::Relaxed), n, "all accepted requests drained");
+    assert!(seen.iter().all(|&s| s), "every id served exactly once");
+}
