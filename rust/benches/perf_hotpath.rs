@@ -19,7 +19,8 @@
 
 use adaq::bench_support as bs;
 use adaq::coordinator::{
-    run_server, run_sweep_jobs, EvalCache, ServerConfig, Session, SweepConfig,
+    run_open_loop, run_rate_ladder, run_server, run_sweep_jobs, EvalCache, OpenLoopConfig,
+    ServerConfig, Session, ShedPolicy, SweepConfig,
 };
 use adaq::dataset::Dataset;
 use adaq::io::Json;
@@ -439,6 +440,10 @@ fn main() {
     // ---- concurrent serve engine: workers × deadline micro-batching.
     //      Accuracy/predictions are invariant across configs (asserted);
     //      only throughput and latency move. ----
+    // measured closed-loop w1 b1 service rate — the open-loop section
+    // below uses it as its admission-controller drain capacity so the
+    // rate ladder lands around the knee on any machine
+    let closed_rps_est: f64;
     {
         let test = Dataset::generate(if tiny() { 128 } else { 512 }, 20260731);
         let session = Session::from_parts(demo_artifacts(29), test.clone(), 1).unwrap();
@@ -523,6 +528,73 @@ fn main() {
             ("correct", Json::Num(r.correct as f64)),
         ]));
         json_fields.push(("serve_mt", Json::Arr(serve_json)));
+        closed_rps_est = base_rps;
+    }
+
+    // ---- open-loop serve: offered-rate ladder with deterministic
+    //      admission control. Shed accounting must close exactly
+    //      (asserted); the shed set is a pure function of the seed and
+    //      the admission model, never of worker count or timing. ----
+    {
+        let test = Dataset::generate(if tiny() { 128 } else { 512 }, 20260731);
+        let session = Session::from_parts(demo_artifacts(29), test.clone(), 1).unwrap();
+        let bits = vec![8.0f32; 3];
+        let n = if tiny() { 200 } else { 1200 };
+        let avail = std::thread::available_parallelism().map_or(1, |v| v.get()).min(16);
+        let w = avail.clamp(2, 8);
+        let cfg = ServerConfig { workers: w, batch: 4, deadline_us: 200, queue_cap: 0 };
+        // admission capacity = the measured closed-loop service rate
+        // (pin a floor in case the serve_mt clock degenerated)
+        let drain = if closed_rps_est > 1.0 { closed_rps_est } else { 500.0 };
+        let base = OpenLoopConfig {
+            rate_rps: drain,
+            drain_rps: drain,
+            requests: n,
+            seed: 42,
+            shed: ShedPolicy::RejectNew,
+            slice_ms: 0,
+        };
+        let rates = [drain * 0.7, drain * 1.5, drain * 3.0];
+        let curve = run_rate_ladder(&session, &test, &bits, &cfg, &base, &rates).unwrap();
+        let mut ol_json = Vec::new();
+        fn push_point(
+            r: &adaq::coordinator::OpenLoopReport,
+            w: usize,
+            rows: &mut Vec<Vec<String>>,
+            ol_json: &mut Vec<Json>,
+        ) {
+            assert_eq!(
+                r.accepted + r.shed_total(),
+                r.offered,
+                "open-loop shed accounting must close"
+            );
+            rows.push(vec![
+                format!(
+                    "serve_openloop {:.0} rps offered, w{w} b4 [{}]",
+                    r.offered_rate_rps,
+                    r.shed_policy.name()
+                ),
+                format!("{:.0} rps goodput", r.goodput_rps),
+                format!(
+                    "{}/{} accepted, {} shed; sojourn p50/p99 {:.2}/{:.2} ms; mean depth {:.1}",
+                    r.accepted,
+                    r.offered,
+                    r.shed_total(),
+                    r.serve.p50_ms,
+                    r.serve.p99_ms,
+                    r.mean_depth
+                ),
+            ]);
+            ol_json.push(r.to_json());
+        }
+        for r in &curve.points {
+            push_point(r, w, &mut rows, &mut ol_json);
+        }
+        // one oldest-drop rung at the deepest overload for the trajectory
+        let ol = OpenLoopConfig { rate_rps: drain * 3.0, shed: ShedPolicy::DropOldest, ..base };
+        let r = run_open_loop(&session, &test, &bits, &cfg, &ol).unwrap();
+        push_point(&r, w, &mut rows, &mut ol_json);
+        json_fields.push(("serve_openloop", Json::Arr(ol_json)));
     }
 
     // ---- host-side quantizer throughput ----

@@ -74,6 +74,23 @@ impl Args {
         self.switches.iter().any(|s| s == switch)
     }
 
+    /// Comma-separated numeric list flag (e.g. `--rates 250,500,1000`);
+    /// empty segments are skipped, a malformed number is a CLI error.
+    pub fn f64_list_flag(&self, name: &str, default: &[f64]) -> Result<Vec<f64>> {
+        match self.flags.get(name) {
+            None => Ok(default.to_vec()),
+            Some(v) => v
+                .split(',')
+                .map(str::trim)
+                .filter(|s| !s.is_empty())
+                .map(|s| {
+                    s.parse()
+                        .map_err(|e| Error::Cli(format!("--{name} {s:?}: {e}")))
+                })
+                .collect(),
+        }
+    }
+
     /// Comma-separated list flag.
     pub fn list_flag(&self, name: &str, default: &[&str]) -> Vec<String> {
         match self.flags.get(name) {
@@ -130,5 +147,14 @@ mod tests {
     fn bad_numbers_error() {
         let a = parse(&["x", "--n", "abc"]);
         assert!(a.usize_flag("n", 1).is_err());
+    }
+
+    #[test]
+    fn f64_list_flags() {
+        let a = parse(&["x", "--rates", "250, 500,1e3,"]);
+        assert_eq!(a.f64_list_flag("rates", &[]).unwrap(), vec![250.0, 500.0, 1000.0]);
+        assert_eq!(a.f64_list_flag("other", &[42.0]).unwrap(), vec![42.0]);
+        let bad = parse(&["x", "--rates", "250,oops"]);
+        assert!(bad.f64_list_flag("rates", &[]).is_err());
     }
 }

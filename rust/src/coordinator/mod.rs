@@ -17,7 +17,12 @@
 //! deterministic job pool (`--jobs N` on the CLI), and [`server`] is the
 //! concurrent serving engine (bounded request queue → deadline
 //! micro-batcher → N workers over one shared session) — sessions are
-//! `Send + Sync`, so one session serves every worker at every tier.
+//! `Send + Sync`, so one session serves every worker at every tier. The
+//! engine runs closed-loop ([`run_server`]: back-pressured load, the
+//! benchmark view) or open-loop ([`run_open_loop`]: seeded arrival
+//! process at a configured offered rate with deterministic admission
+//! control / load shedding — the overload view, swept into
+//! latency-vs-offered-load curves by [`run_rate_ladder`]).
 
 pub mod pool;
 mod serve;
@@ -27,6 +32,9 @@ mod sweep;
 
 pub use pool::JobPool;
 pub use serve::{serve_loop, ServeStats};
-pub use server::{run_server, ServeReport, ServerConfig};
+pub use server::{
+    run_open_loop, run_rate_ladder, run_server, LoadCurve, OpenLoopConfig, OpenLoopReport,
+    ServeReport, ServerConfig, ShedPolicy,
+};
 pub use session::{Baseline, EvalOutput, Session};
 pub use sweep::{run_sweep, run_sweep_jobs, EvalCache, SweepConfig, SweepResult};

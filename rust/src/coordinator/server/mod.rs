@@ -29,13 +29,27 @@
 //!
 //! The single-threaded [`serve_loop`](super::serve_loop) is the
 //! `workers = 1, batch = 1` degenerate case and delegates here.
+//!
+//! Rule 2 is also the engine's blind spot: a generator that waits to get
+//! in can never offer more load than the engine serves, so overload is
+//! unobservable. The [`openloop`] submodule replaces it with a seeded
+//! arrival process at a configured offered rate plus deterministic
+//! admission control ([`ShedPolicy`]) — same queue, same workers, same
+//! determinism contract, but saturation and load shedding become
+//! measurable (latency-vs-offered-load curves, shed accounting,
+//! time-sliced queue-depth series).
 
+pub mod openloop;
 mod queue;
 mod stats;
 mod worker;
 
-pub use queue::{Request, RequestQueue};
-pub use stats::ServeReport;
+pub use openloop::{
+    plan_arrivals, run_open_loop, run_rate_ladder, AdmissionPlan, LoadCurve, OpenLoopConfig,
+    OpenLoopReport,
+};
+pub use queue::{Admission, Request, RequestQueue, ShedPolicy};
+pub use stats::{slice_series, ServeReport, SliceStat};
 
 use std::time::{Duration, Instant};
 
@@ -68,7 +82,7 @@ impl ServerConfig {
         ServerConfig { workers: 1, batch: 1, deadline_us: 0, queue_cap: 0 }
     }
 
-    fn effective_queue_cap(&self) -> usize {
+    pub(crate) fn effective_queue_cap(&self) -> usize {
         if self.queue_cap > 0 {
             self.queue_cap
         } else {
@@ -92,6 +106,47 @@ pub fn run_server(
     n: usize,
     cfg: &ServerConfig,
 ) -> Result<ServeReport> {
+    let (queue, params, timer) = start_engine(session, data, bits, n, cfg)?;
+    // closed-loop load generator on this thread: push blocks while the
+    // queue is full, so offered load tracks the service rate
+    let (tallies, total_seconds) =
+        drive_engine(session, data, bits, cfg.workers, &queue, &params, &timer, |q| {
+            for id in 0..n {
+                let accepted =
+                    q.push(Request { id, idx: id % data.len(), enqueued_at: Instant::now() });
+                if !accepted {
+                    break; // a worker died and closed the queue
+                }
+            }
+        })?;
+    let served: usize = tallies.iter().map(|t| t.results.len()).sum();
+    debug_assert_eq!(served, n, "every accepted request must be served exactly once");
+    Ok(stats::merge_report(
+        tallies,
+        n,
+        None,
+        total_seconds,
+        cfg.workers,
+        cfg.batch,
+        cfg.deadline_us,
+        |id| data.label(id % data.len()),
+    ))
+}
+
+/// Shared engine front door for the closed-loop ([`run_server`]) and
+/// open-loop ([`openloop::run_open_loop`]) drivers: validate the config,
+/// warm the session (also validating `bits` once, so workers cannot fail
+/// on malformed input mid-run), and hand back the queue + worker params +
+/// started run clock. The returned `WorkerParams::epoch` is the instant
+/// the clock started — open-loop arrival offsets and worker completion
+/// timestamps are both measured from it.
+fn start_engine(
+    session: &Session,
+    data: &Dataset,
+    bits: &[f32],
+    n: usize,
+    cfg: &ServerConfig,
+) -> Result<(RequestQueue, worker::WorkerParams, Timer)> {
     if cfg.workers == 0 || cfg.batch == 0 {
         return Err(Error::Model(format!(
             "serve engine wants workers ≥ 1 and batch ≥ 1, got workers={} batch={}",
@@ -116,33 +171,47 @@ pub fn run_server(
             session.backend_name()
         )));
     }
-    // warm outside the timed region — also validates `bits` once, so
-    // workers cannot fail on malformed input mid-run
+    // warm outside the timed region
     session.qforward_once(&data.batch(0, 1)?, bits)?;
 
     let queue = RequestQueue::new(cfg.effective_queue_cap());
     let threads = std::thread::available_parallelism().map_or(1, |v| v.get()).min(16);
+    let timer = Timer::start();
     let params = worker::WorkerParams {
         batch: cfg.batch,
         deadline: Duration::from_micros(cfg.deadline_us),
         // single-worker engines keep the backend's native GEMM behavior
         // (bitwise identical either way; the cap only changes scheduling)
         gemm_cap: if cfg.workers > 1 { (threads / cfg.workers).max(1) } else { 0 },
+        epoch: Instant::now(),
     };
-    let timer = Timer::start();
+    Ok((queue, params, timer))
+}
+
+/// Shared engine back half: spawn the workers, run `generator` on the
+/// calling thread (it owns all load injection), close the queue when it
+/// returns, join, and surface the first worker error. Both engines run
+/// through here so shutdown, worker-panic, and error propagation cannot
+/// diverge between the closed-loop and open-loop drivers.
+#[allow(clippy::too_many_arguments)]
+fn drive_engine<F>(
+    session: &Session,
+    data: &Dataset,
+    bits: &[f32],
+    workers: usize,
+    queue: &RequestQueue,
+    params: &worker::WorkerParams,
+    timer: &Timer,
+    generator: F,
+) -> Result<(Vec<stats::WorkerTally>, f64)>
+where
+    F: FnOnce(&RequestQueue),
+{
     let outputs: Vec<Result<stats::WorkerTally>> = std::thread::scope(|s| {
-        let handles: Vec<_> = (0..cfg.workers)
-            .map(|_| s.spawn(|| worker::run_worker(session, data, bits, &queue, &params)))
+        let handles: Vec<_> = (0..workers)
+            .map(|_| s.spawn(|| worker::run_worker(session, data, bits, queue, params)))
             .collect();
-        // closed-loop load generator on this thread: push blocks while
-        // the queue is full, so offered load tracks the service rate
-        for id in 0..n {
-            let accepted =
-                queue.push(Request { id, idx: id % data.len(), enqueued_at: Instant::now() });
-            if !accepted {
-                break; // a worker died and closed the queue
-            }
-        }
+        generator(queue);
         queue.close();
         handles.into_iter().map(|h| h.join().expect("serve worker panicked")).collect()
     });
@@ -151,17 +220,7 @@ pub fn run_server(
     for o in outputs {
         tallies.push(o?);
     }
-    let served: usize = tallies.iter().map(|t| t.results.len()).sum();
-    debug_assert_eq!(served, n, "every accepted request must be served exactly once");
-    Ok(stats::merge_report(
-        tallies,
-        n,
-        total_seconds,
-        cfg.workers,
-        cfg.batch,
-        cfg.deadline_us,
-        |id| data.label(id % data.len()),
-    ))
+    Ok((tallies, total_seconds))
 }
 
 #[cfg(test)]

@@ -1,0 +1,564 @@
+//! Open-loop (streaming) load mode with deterministic admission control
+//! — the serve engine under *offered* load instead of closed-loop
+//! back-pressure.
+//!
+//! The closed-loop generator of [`run_server`](super::run_server) blocks
+//! while the queue is full, so offered load can never exceed service
+//! rate and the engine cannot be observed in overload. This module
+//! injects requests from a **seeded Poisson arrival process** at a
+//! configured rate whether or not replies have come back, which makes
+//! latency-vs-offered-load curves and load shedding measurable.
+//!
+//! ## Determinism contract
+//!
+//! Reproducibility at any worker count is the design constraint (the
+//! same one the calibration pool and the closed-loop engine obey), and
+//! live shed decisions cannot satisfy it: whether a *real* queue is full
+//! at an arrival instant depends on how fast `--workers N` drains it.
+//! The open-loop harness therefore splits admission from enforcement:
+//!
+//! * **Admission ledger (virtual time)** — [`plan_arrivals`] replays the
+//!   whole arrival schedule against a virtual single-server queue with a
+//!   configured drain capacity (`drain_rps`) and the configured
+//!   [`ShedPolicy`], before any real request is injected. The admitted
+//!   set and the shed set are pure functions of
+//!   `(seed, rate, drain, queue_cap, policy, n)` — worker count, batch
+//!   size, and machine speed never enter, so shed sets are **bitwise
+//!   identical across `--workers 1..N`** (`rust/tests/serve_openloop.rs`).
+//! * **Enforcement (real time)** — the generator paces the admitted
+//!   requests onto the real [`RequestQueue`](super::RequestQueue) at
+//!   their planned arrival offsets and counts the shed ones without
+//!   executing them. Admitted requests use the blocking
+//!   [`push_stamped`](super::RequestQueue::push_stamped) carrying the
+//!   **planned arrival instant as the sojourn origin**: if the real
+//!   engine lags the admission model, the wait counts against sojourn
+//!   (no coordinated omission — overload tails are reported, not
+//!   absorbed) and the injection lag is also visible in
+//!   `achieved_rate_rps`; a request the ledger promised to serve is
+//!   never dropped, so predictions stay a pure function of the request
+//!   id. The queue-level [`offer`](super::RequestQueue::offer) path
+//!   (same policies, live depth) exists for callers that want
+//!   non-deterministic live shedding and is property-tested separately.
+//!
+//! Request `i` still asks about image `i % len`, so accepted-request
+//! predictions are the same bits the closed-loop engine would produce.
+
+use std::collections::VecDeque;
+use std::time::{Duration, Instant};
+
+use crate::dataset::Dataset;
+use crate::io::Json;
+use crate::rng::Pcg32;
+use crate::{Error, Result};
+
+use super::queue::{Request, ShedPolicy};
+use super::stats::{self, safe_rate, slice_series, ServeReport, SliceStat};
+use super::{start_engine, ServerConfig, Session};
+
+/// Admission-ledger queue capacity when `--queue-cap` is not set — a
+/// fixed constant, deliberately independent of the engine shape
+/// (workers, batch), so the default shed set is a function of the
+/// documented `(seed, rate, drain, policy, n)` tuple alone.
+pub const DEFAULT_ADMISSION_CAP: usize = 16;
+
+/// Open-loop load shape: offered rate, virtual drain capacity of the
+/// admission controller, and the seeded arrival process.
+#[derive(Clone, Copy, Debug)]
+pub struct OpenLoopConfig {
+    /// Offered arrival rate, requests/second (Poisson process).
+    pub rate_rps: f64,
+    /// Drain capacity assumed by the admission ledger, requests/second;
+    /// ≤ 0 defaults to `rate_rps` (admission matched to offered load —
+    /// sheds only on arrival bursts).
+    pub drain_rps: f64,
+    /// Offered requests (admitted + shed).
+    pub requests: usize,
+    /// Seed of the arrival process (inter-arrival gaps are PCG32 draws).
+    pub seed: u64,
+    /// What the admission ledger does when its virtual queue is full.
+    pub shed: ShedPolicy,
+    /// Width of the time-sliced goodput/queue-depth series, ms
+    /// (0 → 100 ms).
+    pub slice_ms: u64,
+}
+
+impl OpenLoopConfig {
+    /// Rate `rate_rps`, `requests` offered, and the defaults the CLI
+    /// uses: drain matched to rate, seed 42, reject-on-full, 100 ms
+    /// slices.
+    pub fn at_rate(rate_rps: f64, requests: usize) -> OpenLoopConfig {
+        OpenLoopConfig {
+            rate_rps,
+            drain_rps: 0.0,
+            requests,
+            seed: 42,
+            shed: ShedPolicy::RejectNew,
+            slice_ms: 0,
+        }
+    }
+
+    fn effective_drain(&self) -> f64 {
+        if self.drain_rps > 0.0 {
+            self.drain_rps
+        } else {
+            self.rate_rps
+        }
+    }
+
+    fn effective_slice_ms(&self) -> u64 {
+        if self.slice_ms > 0 {
+            self.slice_ms
+        } else {
+            100
+        }
+    }
+}
+
+/// The deterministic product of [`plan_arrivals`]: the arrival schedule
+/// and every admission decision, fixed before the run starts.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct AdmissionPlan {
+    /// Arrival offset of offered request `i`, µs from the run epoch.
+    pub arrivals_us: Vec<u64>,
+    /// Whether offered request `i` was admitted (survived admission and
+    /// any oldest-drop eviction) — admitted requests are injected and
+    /// served, the rest are shed.
+    pub admitted: Vec<bool>,
+    /// Shed request ids in decision order (under
+    /// [`ShedPolicy::DropOldest`] an id sheds *after* later ids were
+    /// offered, so this is not generally ascending).
+    pub shed_ids: Vec<usize>,
+    /// Sheds where the arrival itself was rejected (queue full,
+    /// [`ShedPolicy::RejectNew`]).
+    pub shed_rejected: usize,
+    /// Sheds where an older queued request was evicted to admit the
+    /// arrival ([`ShedPolicy::DropOldest`]).
+    pub shed_dropped: usize,
+}
+
+impl AdmissionPlan {
+    /// Admitted request count (`accepted + shed == offered`).
+    pub fn accepted(&self) -> usize {
+        self.admitted.iter().filter(|&&a| a).count()
+    }
+}
+
+/// Replay a seeded Poisson arrival schedule (`offered` arrivals at
+/// `rate_rps`) against a virtual single-server queue (capacity
+/// `queue_cap` waiting slots, deterministic service time
+/// `1e6 / drain_rps` µs) and record every admission decision.
+///
+/// The virtual queue mirrors the real [`RequestQueue`](super::RequestQueue)
+/// shape: the request in service occupies no waiting slot, waiting
+/// requests are FIFO, and a full queue triggers `policy`. All arithmetic
+/// is a fixed f64 sequence over the PCG32 stream, so the plan is bitwise
+/// reproducible for a `(seed, rate, drain, cap, policy, n)` tuple and
+/// independent of worker count or machine speed by construction.
+pub fn plan_arrivals(
+    offered: usize,
+    rate_rps: f64,
+    drain_rps: f64,
+    queue_cap: usize,
+    policy: ShedPolicy,
+    seed: u64,
+) -> AdmissionPlan {
+    assert!(rate_rps > 0.0 && drain_rps > 0.0, "rates must be positive");
+    let queue_cap = queue_cap.max(1);
+    let mut rng = Pcg32::new(seed);
+    let gap_mean_us = 1e6 / rate_rps;
+    let service_us = 1e6 / drain_rps;
+    let mut arrivals_us = Vec::with_capacity(offered);
+    let mut admitted = vec![true; offered];
+    let mut shed_ids = Vec::new();
+    let (mut shed_rejected, mut shed_dropped) = (0usize, 0usize);
+    // virtual server state: FIFO of waiting ids + when the in-service
+    // request finishes
+    let mut waiting: VecDeque<usize> = VecDeque::new();
+    let mut free_at = 0.0f64;
+    let mut t = 0.0f64;
+    for i in 0..offered {
+        t += rng.exponential(gap_mean_us);
+        let t_us = t.round() as u64;
+        arrivals_us.push(t_us);
+        // replay virtual service up to this arrival: the server takes
+        // the head of the line whenever it is free and one is waiting
+        while let Some(&head) = waiting.front() {
+            let start = free_at.max(arrivals_us[head] as f64);
+            if start > t {
+                break;
+            }
+            waiting.pop_front();
+            free_at = start + service_us;
+        }
+        if waiting.len() >= queue_cap {
+            match policy {
+                ShedPolicy::RejectNew => {
+                    admitted[i] = false;
+                    shed_ids.push(i);
+                    shed_rejected += 1;
+                }
+                ShedPolicy::DropOldest => {
+                    let old = waiting.pop_front().expect("full virtual queue has a head");
+                    admitted[old] = false;
+                    shed_ids.push(old);
+                    shed_dropped += 1;
+                    waiting.push_back(i);
+                }
+            }
+        } else {
+            waiting.push_back(i);
+        }
+    }
+    AdmissionPlan { arrivals_us, admitted, shed_ids, shed_rejected, shed_dropped }
+}
+
+/// Full report of one open-loop run: the engine's [`ServeReport`] over
+/// the admitted requests plus offered-load accounting, shed counters,
+/// and the time-sliced goodput/queue-depth series.
+#[derive(Clone, Debug)]
+pub struct OpenLoopReport {
+    /// Engine report over the **admitted** requests (`requests` =
+    /// accepted; `predictions` is indexed by offered id with `-1` for
+    /// shed ids).
+    pub serve: ServeReport,
+    /// Offered arrivals (= accepted + shed).
+    pub offered: usize,
+    /// Admitted and served requests.
+    pub accepted: usize,
+    pub shed_rejected: usize,
+    pub shed_dropped: usize,
+    /// Shed ids in decision order (deterministic; see [`AdmissionPlan`]).
+    pub shed_ids: Vec<usize>,
+    /// Configured offered rate.
+    pub offered_rate_rps: f64,
+    /// Offered arrivals / actual injection span — how close the real
+    /// generator got to the configured rate (0 on a degenerate span;
+    /// sleep granularity and queue back-pressure both show up here).
+    pub achieved_rate_rps: f64,
+    /// Admission-ledger drain capacity the shed decisions assumed.
+    pub drain_rps: f64,
+    /// Accepted completions / wall time — the throughput that survived
+    /// admission (0 on a degenerate clock, never inf). Identical to
+    /// `serve.throughput_rps` by construction (the engine report only
+    /// counts admitted requests), surfaced under the open-loop name.
+    pub goodput_rps: f64,
+    /// Mean queue depth over the per-arrival samples (0 when none).
+    pub mean_depth: f64,
+    /// Shed policy the ledger applied.
+    pub shed_policy: ShedPolicy,
+    /// Slice width of `slices`, ms.
+    pub slice_ms: u64,
+    /// Time-sliced completions/goodput/sojourn/queue-depth series
+    /// (empty-window slices report zeros, never NaN — see
+    /// [`SliceStat`]).
+    pub slices: Vec<SliceStat>,
+}
+
+impl OpenLoopReport {
+    /// Total shed requests (rejected + dropped).
+    pub fn shed_total(&self) -> usize {
+        self.shed_rejected + self.shed_dropped
+    }
+
+    /// Shed fraction of offered load (0 when nothing was offered).
+    pub fn shed_fraction(&self) -> f64 {
+        if self.offered == 0 {
+            return 0.0;
+        }
+        self.shed_total() as f64 / self.offered as f64
+    }
+
+    /// This rung as a JSON object — the shape of one `load_curve`
+    /// artifact point and of one `serve_openloop` row in
+    /// `BENCH_hotpath.json` (schema documented in BENCH.md). The
+    /// time-sliced series rides along under `slices`, one object per
+    /// `slice_ms` window, so the artifact carries the within-run
+    /// congestion story, not just the run-level aggregates.
+    pub fn to_json(&self) -> Json {
+        let slices: Vec<Json> = self
+            .slices
+            .iter()
+            .map(|s| {
+                Json::obj(vec![
+                    ("start_ms", Json::Num(s.start_ms as f64)),
+                    ("completions", Json::Num(s.completions as f64)),
+                    ("goodput_rps", Json::Num(s.goodput_rps)),
+                    ("mean_sojourn_ms", Json::Num(s.mean_sojourn_ms)),
+                    ("mean_depth", Json::Num(s.mean_depth)),
+                ])
+            })
+            .collect();
+        Json::obj(vec![
+            ("rate_rps", Json::Num(self.offered_rate_rps)),
+            ("achieved_rps", Json::Num(self.achieved_rate_rps)),
+            ("drain_rps", Json::Num(self.drain_rps)),
+            ("shed_policy", Json::Str(self.shed_policy.name().into())),
+            ("offered", Json::Num(self.offered as f64)),
+            ("accepted", Json::Num(self.accepted as f64)),
+            ("shed", Json::Num(self.shed_total() as f64)),
+            ("shed_rejected", Json::Num(self.shed_rejected as f64)),
+            ("shed_dropped", Json::Num(self.shed_dropped as f64)),
+            ("goodput_rps", Json::Num(self.goodput_rps)),
+            ("mean_depth", Json::Num(self.mean_depth)),
+            ("p50_ms", Json::Num(self.serve.p50_ms)),
+            ("p99_ms", Json::Num(self.serve.p99_ms)),
+            ("p999_ms", Json::Num(self.serve.p999_ms)),
+            ("accuracy", Json::Num(self.serve.accuracy())),
+            ("workers", Json::Num(self.serve.workers as f64)),
+            ("batch", Json::Num(self.serve.batch as f64)),
+            ("slice_ms", Json::Num(self.slice_ms as f64)),
+            ("slices", Json::Arr(slices)),
+        ])
+    }
+}
+
+/// Run the serve engine under open-loop load: plan admissions with the
+/// deterministic ledger, then pace the admitted requests onto the real
+/// queue at their arrival offsets while `cfg.workers` workers serve.
+///
+/// Shed accounting is exact (`accepted + shed == offered`) and the shed
+/// set + accepted predictions are invariant across worker counts for a
+/// fixed `ol.seed` — see the module docs for why admission runs in
+/// virtual time.
+pub fn run_open_loop(
+    session: &Session,
+    data: &Dataset,
+    bits: &[f32],
+    cfg: &ServerConfig,
+    ol: &OpenLoopConfig,
+) -> Result<OpenLoopReport> {
+    if !(ol.rate_rps > 0.0) {
+        return Err(Error::Model(format!(
+            "open-loop serving wants an offered rate > 0 req/s, got {}",
+            ol.rate_rps
+        )));
+    }
+    let drain = ol.effective_drain();
+    // the ledger's queue capacity must not inherit the closed-loop
+    // auto-cap (2·workers·batch): that scales with the engine shape and
+    // would make the shed set depend on `--workers`/`--batch`. An
+    // explicit --queue-cap is honored; otherwise the admission buffer
+    // is a fixed constant, so only the documented tuple enters the plan.
+    let admission_cap = if cfg.queue_cap > 0 { cfg.queue_cap } else { DEFAULT_ADMISSION_CAP };
+    // plan before the engine starts its clock: the O(n) schedule replay
+    // must not eat into the first arrival offsets or the timed region
+    let plan = plan_arrivals(ol.requests, ol.rate_rps, drain, admission_cap, ol.shed, ol.seed);
+    // the real queue must hold at least what the ledger admits: if it
+    // were smaller, the generator's blocking push would absorb queueing
+    // time invisibly (push re-stamps enqueued_at at admission) and the
+    // sojourn tails would under-report exactly the overload latency
+    // this mode exists to measure
+    let engine_cfg =
+        ServerConfig { queue_cap: admission_cap.max(cfg.effective_queue_cap()), ..*cfg };
+    let (queue, params, timer) = start_engine(session, data, bits, ol.requests, &engine_cfg)?;
+    let epoch = params.epoch;
+    let mut depth_samples: Vec<(u64, usize)> = Vec::with_capacity(ol.requests);
+    // open-loop generator: sleep to each planned arrival offset, sample
+    // queue depth (Poisson arrivals see time averages), then inject or
+    // shed according to the ledger
+    let (tallies, total_seconds) =
+        super::drive_engine(session, data, bits, cfg.workers, &queue, &params, &timer, |q| {
+            for id in 0..ol.requests {
+                let target = epoch + Duration::from_micros(plan.arrivals_us[id]);
+                let now = Instant::now();
+                if target > now {
+                    std::thread::sleep(target - now);
+                }
+                depth_samples.push((epoch.elapsed().as_micros() as u64, q.depth()));
+                if plan.admitted[id] {
+                    // sojourn origin = the *planned* arrival instant, kept
+                    // by push_stamped: schedule lag and back-pressure
+                    // waits count against latency (no coordinated
+                    // omission), unlike the closed loop's re-stamping push
+                    let accepted =
+                        q.push_stamped(Request { id, idx: id % data.len(), enqueued_at: target });
+                    if !accepted {
+                        break; // a worker died and closed the queue
+                    }
+                }
+            }
+        })?;
+    let completions: Vec<(u64, f64)> = tallies
+        .iter()
+        .flat_map(|t| t.done_us.iter().copied().zip(t.sojourn_ms.iter().copied()))
+        .collect();
+    let serve = stats::merge_report(
+        tallies,
+        ol.requests,
+        Some(&plan.admitted),
+        total_seconds,
+        cfg.workers,
+        cfg.batch,
+        cfg.deadline_us,
+        |id| data.label(id % data.len()),
+    );
+    let accepted = serve.requests;
+    debug_assert_eq!(accepted + plan.shed_ids.len(), ol.requests, "accounting must close");
+    let injection_span_s = depth_samples.last().map_or(0.0, |&(t, _)| t as f64 / 1e6);
+    let slice_ms = ol.effective_slice_ms();
+    let mean_depth = if depth_samples.is_empty() {
+        0.0
+    } else {
+        depth_samples.iter().map(|&(_, d)| d as f64).sum::<f64>() / depth_samples.len() as f64
+    };
+    Ok(OpenLoopReport {
+        offered: ol.requests,
+        accepted,
+        shed_rejected: plan.shed_rejected,
+        shed_dropped: plan.shed_dropped,
+        shed_ids: plan.shed_ids,
+        offered_rate_rps: ol.rate_rps,
+        achieved_rate_rps: safe_rate(ol.requests, injection_span_s),
+        drain_rps: drain,
+        goodput_rps: serve.throughput_rps,
+        mean_depth,
+        shed_policy: ol.shed,
+        slice_ms,
+        slices: slice_series(slice_ms, &completions, &depth_samples),
+        serve,
+    })
+}
+
+/// Latency-vs-offered-load curve: one [`OpenLoopReport`] per rung of a
+/// rate ladder, all sharing one admission model (`drain_rps`, policy,
+/// seed) so the only thing moving along the curve is offered load.
+#[derive(Clone, Debug)]
+pub struct LoadCurve {
+    pub points: Vec<OpenLoopReport>,
+}
+
+impl LoadCurve {
+    /// The `load_curve` artifact: one JSON object per rung
+    /// ([`OpenLoopReport::to_json`], schema documented in BENCH.md).
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![(
+            "points",
+            Json::Arr(self.points.iter().map(OpenLoopReport::to_json).collect()),
+        )])
+    }
+}
+
+/// Sweep a rate ladder under one admission model and collect the
+/// latency-vs-offered-load curve. `base.drain_rps` must be explicit
+/// (> 0): a curve where the admission capacity floats with the offered
+/// rate would shed the same fraction at every rung and measure nothing.
+pub fn run_rate_ladder(
+    session: &Session,
+    data: &Dataset,
+    bits: &[f32],
+    cfg: &ServerConfig,
+    base: &OpenLoopConfig,
+    rates: &[f64],
+) -> Result<LoadCurve> {
+    if rates.is_empty() {
+        return Err(Error::Model("rate ladder wants at least one rate".into()));
+    }
+    if !(base.drain_rps > 0.0) {
+        return Err(Error::Model(
+            "rate ladder wants an explicit --drain capacity (> 0 req/s); \
+             otherwise every rung would shed against its own offered rate"
+                .into(),
+        ));
+    }
+    let mut points = Vec::with_capacity(rates.len());
+    for &rate in rates {
+        let ol = OpenLoopConfig { rate_rps: rate, ..*base };
+        points.push(run_open_loop(session, data, bits, cfg, &ol)?);
+    }
+    Ok(LoadCurve { points })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn plan_is_deterministic_per_seed_and_ignores_everything_else() {
+        let a = plan_arrivals(500, 2000.0, 1000.0, 8, ShedPolicy::RejectNew, 7);
+        let b = plan_arrivals(500, 2000.0, 1000.0, 8, ShedPolicy::RejectNew, 7);
+        assert_eq!(a, b, "same tuple → bitwise-identical plan");
+        let c = plan_arrivals(500, 2000.0, 1000.0, 8, ShedPolicy::RejectNew, 8);
+        assert_ne!(a.arrivals_us, c.arrivals_us, "seed moves the schedule");
+        // worker count / batch size are not inputs: nothing to vary here
+        // is the point — the signature admits no scheduling parameters
+    }
+
+    #[test]
+    fn plan_arrivals_are_monotone_and_accounting_closes() {
+        for policy in [ShedPolicy::RejectNew, ShedPolicy::DropOldest] {
+            let p = plan_arrivals(400, 5000.0, 1000.0, 4, policy, 11);
+            assert!(p.arrivals_us.windows(2).all(|w| w[0] <= w[1]), "time flows forward");
+            assert_eq!(p.accepted() + p.shed_ids.len(), 400, "{policy:?}");
+            assert_eq!(p.shed_rejected + p.shed_dropped, p.shed_ids.len());
+            assert!(p.shed_ids.len() > 100, "5x overload must shed heavily ({policy:?})");
+            // shed ids are unique
+            let mut ids = p.shed_ids.clone();
+            ids.sort_unstable();
+            ids.dedup();
+            assert_eq!(ids.len(), p.shed_ids.len());
+            match policy {
+                ShedPolicy::RejectNew => assert_eq!(p.shed_dropped, 0),
+                ShedPolicy::DropOldest => assert_eq!(p.shed_rejected, 0),
+            }
+        }
+    }
+
+    #[test]
+    fn plan_underload_sheds_nothing() {
+        // drain 10x the offered rate and a roomy queue: every arrival
+        // is admitted
+        let p = plan_arrivals(300, 500.0, 5000.0, 16, ShedPolicy::RejectNew, 3);
+        assert_eq!(p.accepted(), 300);
+        assert!(p.shed_ids.is_empty());
+    }
+
+    #[test]
+    fn drop_oldest_sheds_older_ids_than_reject_new() {
+        // under the same schedule, oldest-drop evicts queue heads (ids
+        // offered before the arrival that overflowed), reject-new sheds
+        // the overflowing arrivals themselves
+        let rej = plan_arrivals(200, 4000.0, 800.0, 4, ShedPolicy::RejectNew, 5);
+        let drop = plan_arrivals(200, 4000.0, 800.0, 4, ShedPolicy::DropOldest, 5);
+        assert_eq!(rej.arrivals_us, drop.arrivals_us, "same seed → same schedule");
+        assert!(!rej.shed_ids.is_empty() && !drop.shed_ids.is_empty());
+        let mean = |ids: &[usize]| ids.iter().sum::<usize>() as f64 / ids.len() as f64;
+        assert!(
+            mean(&drop.shed_ids) < mean(&rej.shed_ids),
+            "oldest-drop pays with older requests"
+        );
+    }
+
+    #[test]
+    fn open_loop_config_defaults() {
+        let ol = OpenLoopConfig::at_rate(750.0, 100);
+        assert_eq!(ol.effective_drain(), 750.0, "drain defaults to the offered rate");
+        assert_eq!(ol.effective_slice_ms(), 100);
+        assert_eq!(ol.shed, ShedPolicy::RejectNew);
+        let pinned = OpenLoopConfig { drain_rps: 300.0, slice_ms: 25, ..ol };
+        assert_eq!(pinned.effective_drain(), 300.0);
+        assert_eq!(pinned.effective_slice_ms(), 25);
+    }
+
+    #[test]
+    fn report_shed_helpers_guard_degenerate_counts() {
+        let serve = stats::merge_report(vec![], 0, None, 0.0, 1, 1, 0, |_| 0);
+        let r = OpenLoopReport {
+            serve,
+            offered: 0,
+            accepted: 0,
+            shed_rejected: 0,
+            shed_dropped: 0,
+            shed_ids: vec![],
+            offered_rate_rps: 100.0,
+            achieved_rate_rps: 0.0,
+            drain_rps: 100.0,
+            goodput_rps: 0.0,
+            mean_depth: 0.0,
+            shed_policy: ShedPolicy::RejectNew,
+            slice_ms: 100,
+            slices: vec![],
+        };
+        assert_eq!(r.shed_total(), 0);
+        assert_eq!(r.shed_fraction(), 0.0, "0 offered → 0, not NaN");
+    }
+}

@@ -10,10 +10,77 @@
 //! consumers **drain every request already accepted** before observing
 //! shutdown — nothing enqueued is ever dropped (tested in
 //! `rust/tests/serve_mt.rs`).
+//!
+//! [`RequestQueue::offer`] is the queue's non-blocking, live-shedding
+//! admission primitive: a full queue triggers the configured
+//! [`ShedPolicy`] — reject the new arrival, or evict the oldest waiting
+//! request to admit it — and the returned [`Admission`] tells the
+//! caller exactly which request was shed, so shed accounting is exact
+//! (every offered request is counted exactly once as served or shed;
+//! property-tested in `rust/tests/proptest_invariants.rs`). Note the
+//! shipped open-loop harness does **not** shed here: its shed decisions
+//! come from the deterministic virtual-time ledger
+//! (`openloop::plan_arrivals`), and its generator injects the admitted
+//! requests with the blocking `push` (see the openloop module docs);
+//! `offer` is the building block for a future live-shed mode where
+//! decisions may depend on real queue depth.
 
 use std::collections::VecDeque;
 use std::sync::{Condvar, Mutex};
 use std::time::{Duration, Instant};
+
+/// What a bounded queue does with an arrival that finds it full — the
+/// admission-control knob of the open-loop serve mode (`--shed`).
+///
+/// Both policies keep the queue within its capacity and keep FIFO order
+/// among the requests that survive; they differ in *which* request pays
+/// for the overload: `RejectNew` sheds the arrival (freshest-first
+/// shedding — queued work is never wasted), `DropOldest` sheds the head
+/// of the line (the request that has already waited longest and is most
+/// likely to miss any deadline anyway).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ShedPolicy {
+    /// A full queue rejects the incoming request.
+    RejectNew,
+    /// A full queue evicts its oldest waiting request and admits the
+    /// incoming one.
+    DropOldest,
+}
+
+impl ShedPolicy {
+    /// Parse a CLI spelling (`reject` / `reject-new`, `oldest-drop` /
+    /// `drop-oldest`).
+    pub fn parse(s: &str) -> Option<ShedPolicy> {
+        match s {
+            "reject" | "reject-new" | "reject-on-full" => Some(ShedPolicy::RejectNew),
+            "oldest-drop" | "drop-oldest" => Some(ShedPolicy::DropOldest),
+            _ => None,
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            ShedPolicy::RejectNew => "reject-new",
+            ShedPolicy::DropOldest => "oldest-drop",
+        }
+    }
+}
+
+/// Outcome of a non-blocking [`RequestQueue::offer`].
+#[derive(Clone, Copy, Debug)]
+pub enum Admission {
+    /// The queue had room; the request was enqueued.
+    Accepted,
+    /// The queue was full and the policy was [`ShedPolicy::RejectNew`]:
+    /// the offered request was shed (not enqueued).
+    Rejected,
+    /// The queue was full and the policy was [`ShedPolicy::DropOldest`]:
+    /// the offered request was enqueued and the returned (oldest) request
+    /// was evicted — it will never be served.
+    Evicted(Request),
+    /// The queue is closed; nothing was enqueued.
+    Closed,
+}
 
 /// One serve request: a dense id (`0..n`, the deterministic identity the
 /// engine collects results by) and the dataset image it asks about.
@@ -25,11 +92,13 @@ pub struct Request {
     /// Dataset image index (`id % dataset len` under the closed-loop
     /// generator).
     pub idx: usize,
-    /// Admission timestamp — sojourn latency (enqueue → completion) is
-    /// measured from here. [`RequestQueue::push`] (re)stamps this the
-    /// moment the queue actually accepts the request, so a generator
-    /// blocked on a full queue does not inflate the sojourn tail with
-    /// its own back-pressure wait.
+    /// Sojourn-origin timestamp — sojourn latency (origin → completion)
+    /// is measured from here. [`RequestQueue::push`] (re)stamps this the
+    /// moment the queue actually accepts the request (closed loop: a
+    /// generator blocked on a full queue does not inflate the sojourn
+    /// tail with its own back-pressure wait);
+    /// [`RequestQueue::push_stamped`] preserves it (open loop: the
+    /// planned arrival instant, so schedule lag **does** count).
     pub enqueued_at: Instant,
 }
 
@@ -73,8 +142,26 @@ impl RequestQueue {
     /// closed. The request's `enqueued_at` is stamped here, at
     /// admission — after any back-pressure wait — so sojourn latency
     /// measures queueing + service, not how long the generator was
-    /// blocked getting in.
-    pub fn push(&self, mut req: Request) -> bool {
+    /// blocked getting in (the right convention for a **closed** loop,
+    /// where generator blocking *is* the intended pacing).
+    pub fn push(&self, req: Request) -> bool {
+        self.push_inner(req, true)
+    }
+
+    /// Like [`push`], but **preserves the caller's `enqueued_at` stamp**
+    /// instead of re-stamping at admission. The open-loop generator
+    /// passes the *planned* arrival instant, so sojourn measures
+    /// completion − scheduled arrival: generator lag and back-pressure
+    /// waits count against latency instead of being silently excluded —
+    /// the coordinated-omission correction an offered-load benchmark
+    /// needs.
+    ///
+    /// [`push`]: RequestQueue::push
+    pub fn push_stamped(&self, req: Request) -> bool {
+        self.push_inner(req, false)
+    }
+
+    fn push_inner(&self, mut req: Request, restamp: bool) -> bool {
         let mut st = self.inner.lock().unwrap();
         loop {
             if st.closed {
@@ -85,11 +172,49 @@ impl RequestQueue {
             }
             st = self.not_full.wait(st).unwrap();
         }
-        req.enqueued_at = Instant::now();
+        if restamp {
+            req.enqueued_at = Instant::now();
+        }
         st.buf.push_back(req);
         drop(st);
         self.not_empty.notify_all();
         true
+    }
+
+    /// Offer a request without ever blocking: admission control for
+    /// open-loop producers. A queue with room behaves like [`push`]
+    /// (stamping `enqueued_at` at admission); a full queue applies the
+    /// [`ShedPolicy`] and reports exactly which request was shed via the
+    /// returned [`Admission`], so `accepted + shed == offered` holds
+    /// request-by-request.
+    ///
+    /// [`push`]: RequestQueue::push
+    pub fn offer(&self, mut req: Request, policy: ShedPolicy) -> Admission {
+        let mut st = self.inner.lock().unwrap();
+        if st.closed {
+            return Admission::Closed;
+        }
+        let out = if st.buf.len() < self.cap {
+            req.enqueued_at = Instant::now();
+            st.buf.push_back(req);
+            Admission::Accepted
+        } else {
+            match policy {
+                ShedPolicy::RejectNew => Admission::Rejected,
+                ShedPolicy::DropOldest => {
+                    // cap ≥ 1, so a full queue has a head to evict
+                    let evicted = st.buf.pop_front().expect("full queue has a head");
+                    req.enqueued_at = Instant::now();
+                    st.buf.push_back(req);
+                    Admission::Evicted(evicted)
+                }
+            }
+        };
+        drop(st);
+        if !matches!(out, Admission::Rejected) {
+            self.not_empty.notify_all();
+        }
+        out
     }
 
     /// Dequeue up to `max` requests as one micro-batch.
@@ -214,6 +339,69 @@ mod tests {
         out.clear();
         assert!(q.pop_batch(8, Duration::ZERO, &mut out).is_none(), "then shutdown");
         assert!(q.is_closed());
+    }
+
+    #[test]
+    fn offer_reject_new_sheds_the_arrival() {
+        let q = RequestQueue::new(2);
+        assert!(matches!(q.offer(req(0), ShedPolicy::RejectNew), Admission::Accepted));
+        assert!(matches!(q.offer(req(1), ShedPolicy::RejectNew), Admission::Accepted));
+        // full: the new arrival is shed, the queue keeps [0, 1]
+        assert!(matches!(q.offer(req(2), ShedPolicy::RejectNew), Admission::Rejected));
+        assert_eq!(q.depth(), 2);
+        let mut out = Vec::new();
+        q.pop_batch(4, Duration::ZERO, &mut out).unwrap();
+        assert_eq!(out.iter().map(|r| r.id).collect::<Vec<_>>(), vec![0, 1]);
+    }
+
+    #[test]
+    fn offer_drop_oldest_evicts_the_head() {
+        let q = RequestQueue::new(2);
+        q.offer(req(0), ShedPolicy::DropOldest);
+        q.offer(req(1), ShedPolicy::DropOldest);
+        match q.offer(req(2), ShedPolicy::DropOldest) {
+            Admission::Evicted(old) => assert_eq!(old.id, 0),
+            other => panic!("expected eviction, got {other:?}"),
+        }
+        assert_eq!(q.depth(), 2, "drop-oldest keeps depth at cap");
+        let mut out = Vec::new();
+        q.pop_batch(4, Duration::ZERO, &mut out).unwrap();
+        // survivors keep FIFO order
+        assert_eq!(out.iter().map(|r| r.id).collect::<Vec<_>>(), vec![1, 2]);
+    }
+
+    #[test]
+    fn push_stamped_preserves_the_callers_stamp() {
+        let q = RequestQueue::new(4);
+        let stamp = Instant::now() - Duration::from_millis(50);
+        assert!(q.push_stamped(Request { id: 0, idx: 0, enqueued_at: stamp }));
+        assert!(q.push(Request { id: 1, idx: 1, enqueued_at: stamp }));
+        let mut out = Vec::new();
+        q.pop_batch(2, Duration::ZERO, &mut out).unwrap();
+        assert_eq!(out[0].enqueued_at, stamp, "push_stamped keeps the planned-arrival origin");
+        assert!(out[1].enqueued_at > stamp, "plain push re-stamps at admission");
+        q.close();
+        assert!(!q.push_stamped(Request { id: 2, idx: 2, enqueued_at: stamp }));
+    }
+
+    #[test]
+    fn offer_on_closed_queue_reports_closed() {
+        let q = RequestQueue::new(2);
+        q.close();
+        assert!(matches!(q.offer(req(0), ShedPolicy::RejectNew), Admission::Closed));
+        assert!(matches!(q.offer(req(0), ShedPolicy::DropOldest), Admission::Closed));
+        assert_eq!(q.depth(), 0);
+    }
+
+    #[test]
+    fn shed_policy_parse_spellings() {
+        assert_eq!(ShedPolicy::parse("reject"), Some(ShedPolicy::RejectNew));
+        assert_eq!(ShedPolicy::parse("reject-new"), Some(ShedPolicy::RejectNew));
+        assert_eq!(ShedPolicy::parse("oldest-drop"), Some(ShedPolicy::DropOldest));
+        assert_eq!(ShedPolicy::parse("drop-oldest"), Some(ShedPolicy::DropOldest));
+        assert_eq!(ShedPolicy::parse("nope"), None);
+        assert_eq!(ShedPolicy::RejectNew.name(), "reject-new");
+        assert_eq!(ShedPolicy::DropOldest.name(), "oldest-drop");
     }
 
     #[test]

@@ -31,6 +31,10 @@ pub(crate) struct WorkerTally {
     /// `depth[d]` = how many pops left `d` requests behind in the queue
     /// (clamped at the histogram's last bucket).
     pub depth: Vec<usize>,
+    /// Completion time per request, µs since the run epoch — feeds the
+    /// open-loop mode's time-sliced goodput/latency series (parallel to
+    /// `sojourn_ms`).
+    pub done_us: Vec<u64>,
     /// Forward passes executed (micro-batches served).
     pub forwards: usize,
 }
@@ -83,7 +87,9 @@ pub struct ServeReport {
     /// full service rate).
     pub queue_depth: Vec<usize>,
     /// Predicted class per request id — bitwise invariant across worker
-    /// counts and batch sizes (the engine's determinism contract).
+    /// counts and batch sizes (the engine's determinism contract). Under
+    /// the open-loop mode this is indexed by **offered** id and holds
+    /// `-1` for requests the admission controller shed (never served).
     pub predictions: Vec<i32>,
 }
 
@@ -108,16 +114,23 @@ impl ServeReport {
 /// Merge worker tallies into a [`ServeReport`]. `labels(id)` maps a
 /// request id to its ground-truth label (the engine passes the dataset's
 /// round-robin mapping, keeping correctness scheduling-independent).
+///
+/// `served` is the open-loop admission mask over ids `0..n`: `None`
+/// (closed loop) means every id must drain; `Some(mask)` means exactly
+/// the `true` ids must drain — shed ids get prediction `-1` and are
+/// excluded from `requests`/`correct`, so accuracy is over **goodput**,
+/// never over work that was refused.
 pub(crate) fn merge_report(
     tallies: Vec<WorkerTally>,
     n: usize,
+    served: Option<&[bool]>,
     total_seconds: f64,
     workers: usize,
     batch: usize,
     deadline_us: u64,
     labels: impl Fn(usize) -> i32,
 ) -> ServeReport {
-    let mut predictions = vec![0i32; n];
+    let mut predictions = vec![-1i32; n];
     let mut seen = vec![false; n];
     let mut sojourn = Vec::with_capacity(n);
     let mut service = Vec::with_capacity(n);
@@ -143,17 +156,21 @@ pub(crate) fn merge_report(
         }
         forwards += t.forwards;
     }
-    debug_assert!(seen.iter().all(|&s| s), "every accepted request must drain");
+    debug_assert!(
+        seen.iter().enumerate().all(|(id, &s)| s == served.map_or(true, |m| m[id])),
+        "exactly the admitted requests must drain"
+    );
+    let requests = served.map_or(n, |m| m.iter().filter(|&&s| s).count());
     let correct = predictions
         .iter()
         .enumerate()
-        .filter(|&(id, &p)| p == labels(id))
+        .filter(|&(id, &p)| seen[id] && p == labels(id))
         .count();
     sojourn.sort_by(f64::total_cmp);
     service.sort_by(f64::total_cmp);
     let pct = |v: &[f64], p: f64| percentile_nearest_rank(v, p);
     ServeReport {
-        requests: n,
+        requests,
         correct,
         total_seconds,
         p50_ms: pct(&sojourn, 0.50),
@@ -161,7 +178,7 @@ pub(crate) fn merge_report(
         p999_ms: pct(&sojourn, 0.999),
         service_p50_ms: pct(&service, 0.50),
         service_p99_ms: pct(&service, 0.99),
-        throughput_rps: safe_rate(n, total_seconds),
+        throughput_rps: safe_rate(requests, total_seconds),
         workers,
         batch,
         deadline_us,
@@ -170,6 +187,100 @@ pub(crate) fn merge_report(
         queue_depth: depth,
         predictions,
     }
+}
+
+/// One time slice of an open-loop run: completions, goodput, latency,
+/// and queue depth within `[start_ms, start_ms + slice_ms)`.
+///
+/// Every per-slice statistic is **empty-window safe**: a slice that saw
+/// no completions (reachable whenever offered load starves a window —
+/// e.g. a burst admitted early drains before the next arrival) reports
+/// `goodput_rps = 0` and `mean_sojourn_ms = 0`, never NaN/inf, and a
+/// slice with no depth samples reports `mean_depth = 0`
+/// (regression-tested in `rust/tests/serve_openloop.rs`).
+#[derive(Clone, Debug, PartialEq)]
+pub struct SliceStat {
+    /// Slice start, ms since the run epoch.
+    pub start_ms: u64,
+    /// Requests completed inside this slice.
+    pub completions: usize,
+    /// Completions / covered span (0 for an empty slice). All windows
+    /// but the last divide by the full slice width; the final, usually
+    /// partial window divides by its covered span (last event − window
+    /// start, ≥ 1 ms) so short runs and run tails are not biased low.
+    pub goodput_rps: f64,
+    /// Mean sojourn of the completions in this slice (0 when none).
+    pub mean_sojourn_ms: f64,
+    /// Queue-depth samples taken inside this slice (arrival instants).
+    pub depth_samples: usize,
+    /// Mean sampled queue depth (0 when no samples landed here).
+    pub mean_depth: f64,
+}
+
+/// Bucket completions (`(done_us, sojourn_ms)`) and queue-depth samples
+/// (`(at_us, depth)`) into fixed `slice_ms` windows from the run epoch.
+///
+/// The series spans slice 0 through the slice containing the last event
+/// of either stream, so mid-run windows with no completions appear as
+/// explicit zero-goodput slices instead of being silently skipped —
+/// that is the signal an overloaded open-loop run is starving.
+pub fn slice_series(
+    slice_ms: u64,
+    completions: &[(u64, f64)],
+    depths: &[(u64, usize)],
+) -> Vec<SliceStat> {
+    let slice_ms = slice_ms.max(1);
+    let slice_us = slice_ms * 1000;
+    let last_us = completions
+        .iter()
+        .map(|&(t, _)| t)
+        .chain(depths.iter().map(|&(t, _)| t))
+        .max();
+    let Some(last_us) = last_us else {
+        return Vec::new();
+    };
+    let nslices = (last_us / slice_us + 1) as usize;
+    let mut out: Vec<SliceStat> = (0..nslices)
+        .map(|i| SliceStat {
+            start_ms: i as u64 * slice_ms,
+            completions: 0,
+            goodput_rps: 0.0,
+            mean_sojourn_ms: 0.0,
+            depth_samples: 0,
+            mean_depth: 0.0,
+        })
+        .collect();
+    for &(t, sojourn) in completions {
+        let s = &mut out[(t / slice_us) as usize];
+        s.completions += 1;
+        s.mean_sojourn_ms += sojourn; // sums; divided below
+    }
+    for &(t, depth) in depths {
+        let s = &mut out[(t / slice_us) as usize];
+        s.depth_samples += 1;
+        s.mean_depth += depth as f64;
+    }
+    let slice_seconds = slice_ms as f64 / 1e3;
+    for (i, s) in out.iter_mut().enumerate() {
+        // empty-window guards: 0, never 0/0
+        if s.completions > 0 {
+            s.mean_sojourn_ms /= s.completions as f64;
+        }
+        if s.depth_samples > 0 {
+            s.mean_depth /= s.depth_samples as f64;
+        }
+        // the final window is usually partial: rate it over its covered
+        // span (last event − window start, floored at 1 ms) instead of
+        // the full width, so short runs and run tails do not
+        // under-report goodput
+        let span_seconds = if i + 1 == nslices {
+            (last_us - s.start_ms * 1000).clamp(1000, slice_us) as f64 / 1e6
+        } else {
+            slice_seconds
+        };
+        s.goodput_rps = safe_rate(s.completions, span_seconds);
+    }
+    out
 }
 
 #[cfg(test)]
@@ -204,7 +315,7 @@ mod tests {
                     t
                 })
                 .collect();
-            merge_report(tallies, 6, 2.0, 2, 2, 0, |id| (id % 3) as i32)
+            merge_report(tallies, 6, None, 2.0, 2, 2, 0, |id| (id % 3) as i32)
         };
         let a = mk(vec![vec![0, 1, 2], vec![3, 4, 5]]);
         let b = mk(vec![vec![5, 1, 3], vec![4, 0, 2]]);
@@ -219,10 +330,66 @@ mod tests {
 
     #[test]
     fn degenerate_report_guards() {
-        let r = merge_report(vec![], 0, 0.0, 1, 1, 0, |_| 0);
+        let r = merge_report(vec![], 0, None, 0.0, 1, 1, 0, |_| 0);
         assert_eq!(r.accuracy(), 0.0, "no requests → 0, not NaN");
         assert_eq!(r.throughput_rps, 0.0, "zero wall time → 0, not inf");
         assert_eq!(r.mean_batch_occupancy(), 0.0);
         assert!(r.p50_ms.is_nan(), "no latencies → NaN percentile (documented)");
+    }
+
+    #[test]
+    fn merge_with_admission_mask_counts_goodput_only() {
+        // offered ids 0..6, ids 2 and 5 shed: only the 4 admitted ids
+        // were served, and the report must reflect goodput, not offer
+        let served = [true, true, false, true, true, false];
+        let mut t = WorkerTally::new(1, 4);
+        for id in [0usize, 1, 3, 4] {
+            t.results.push((id, (id % 3) as i32));
+            t.sojourn_ms.push(1.0);
+            t.service_ms.push(0.5);
+            t.done_us.push(id as u64 * 100);
+            t.occupancy[0] += 1;
+            t.forwards += 1;
+        }
+        let r = merge_report(vec![t], 6, Some(&served), 2.0, 1, 1, 0, |id| (id % 3) as i32);
+        assert_eq!(r.requests, 4, "requests = admitted, not offered");
+        assert_eq!(r.correct, 4);
+        assert_eq!(r.throughput_rps, 2.0, "rate over admitted requests");
+        assert_eq!(r.predictions.len(), 6, "predictions indexed by offered id");
+        assert_eq!(r.predictions[2], -1, "shed id carries the -1 sentinel");
+        assert_eq!(r.predictions[5], -1);
+        assert_eq!(r.accuracy(), 1.0);
+    }
+
+    #[test]
+    fn slice_series_buckets_and_guards_empty_windows() {
+        // completions in slices 0 and 2 — slice 1 receives none (the
+        // mid-run empty window open-loop overload makes reachable)
+        let completions = [(10_000u64, 2.0f64), (30_000, 4.0), (210_000, 6.0)];
+        let depths = [(5_000u64, 3usize), (215_000, 5)];
+        let s = slice_series(100, &completions, &depths);
+        assert_eq!(s.len(), 3);
+        assert_eq!(s[0].completions, 2);
+        assert_eq!(s[0].mean_sojourn_ms, 3.0);
+        assert_eq!(s[0].goodput_rps, 20.0, "2 completions / 0.1 s");
+        assert_eq!(s[0].mean_depth, 3.0);
+        // the empty mid-run window: zeros, never NaN/inf
+        assert_eq!(s[1].completions, 0);
+        assert_eq!(s[1].goodput_rps, 0.0);
+        assert_eq!(s[1].mean_sojourn_ms, 0.0);
+        assert_eq!(s[1].mean_depth, 0.0);
+        assert!(s[1].goodput_rps.is_finite() && s[1].mean_sojourn_ms.is_finite());
+        assert_eq!(s[2].completions, 1);
+        assert_eq!(s[2].mean_depth, 5.0);
+        // the final window is partial (last event at 215 ms, window
+        // starts at 200 ms): goodput rates over the 15 ms covered span,
+        // not the full 100 ms width
+        assert!((s[2].goodput_rps - 1.0 / 0.015).abs() < 1e-9, "{}", s[2].goodput_rps);
+        // degenerate inputs
+        assert!(slice_series(100, &[], &[]).is_empty());
+        let one = slice_series(0, &[(0, 1.0)], &[]); // slice_ms clamps to 1
+        assert_eq!(one.len(), 1);
+        assert_eq!(one[0].completions, 1);
+        assert_eq!(one[0].goodput_rps, 1000.0);
     }
 }

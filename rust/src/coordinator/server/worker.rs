@@ -15,7 +15,7 @@
 //! never oversubscribe the machine, and tiny per-request GEMMs still run
 //! inline instead of paying spawn overhead.
 
-use std::time::Duration;
+use std::time::{Duration, Instant};
 
 use crate::dataset::Dataset;
 use crate::tensor::{self, Tensor};
@@ -34,6 +34,10 @@ pub(crate) struct WorkerParams {
     /// GEMM auto-thread cap for this worker (0 = uncapped, single-worker
     /// engines keep the backend's existing auto behavior).
     pub gemm_cap: usize,
+    /// Run epoch — completion timestamps (`WorkerTally::done_us`) are
+    /// recorded relative to this, so the open-loop mode can slice the
+    /// run into fixed time windows across all workers.
+    pub epoch: Instant,
 }
 
 /// Run one worker until the queue shuts down. On any forward error the
@@ -88,12 +92,14 @@ fn serve_requests(
         let service_ms = t.millis();
         scratch.put(x.into_vec());
         tally.forwards += 1;
+        let done_us = params.epoch.elapsed().as_micros() as u64;
         for (i, req) in batch.iter().enumerate() {
             let row = &logits[i * classes..(i + 1) * classes];
             let (pred, _) = Tensor::top2(row);
             tally.results.push((req.id, pred as i32));
             tally.sojourn_ms.push(req.enqueued_at.elapsed().as_secs_f64() * 1e3);
             tally.service_ms.push(service_ms);
+            tally.done_us.push(done_us);
         }
         batch.clear();
     }

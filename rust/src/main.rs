@@ -8,11 +8,16 @@
 //!   evaluate   — accuracy + size of an explicit or allocated bit vector
 //!   sweep      — Fig. 6/8 size-accuracy curves across allocators
 //!   serve      — concurrent quantized serving engine (workers × deadline
-//!                micro-batching) with latency/throughput stats
+//!                micro-batching) with latency/throughput stats; --open-loop
+//!                adds streaming load at an offered rate with deterministic
+//!                admission control and latency-vs-load curves
 //!   selfcheck  — artifact inventory + PJRT↔rust-nn cross-validation
 
 use adaq::cli::Args;
-use adaq::coordinator::{run_server, run_sweep_jobs, EvalCache, ServerConfig, Session, SweepConfig};
+use adaq::coordinator::{
+    run_open_loop, run_rate_ladder, run_server, run_sweep_jobs, EvalCache, LoadCurve,
+    OpenLoopConfig, ServerConfig, Session, ShedPolicy, SweepConfig,
+};
 use adaq::dataset::Dataset;
 use adaq::measure::{
     adversarial_stats, calibrate_model_jobs, Calibration,
@@ -40,6 +45,14 @@ USAGE: adaq <command> [--flags]
              (workers > 1 / batch > 1 run the concurrent engine: N workers
               over one session, up to B requests coalesced per forward
               within D µs; accuracy is identical at any setting)
+             [--open-loop --rate R | --rates R1,R2,…] [--drain RPS]
+             [--shed reject|oldest-drop] [--seed S] [--slice-ms MS]
+             [--load-curve PATH]
+             (open loop: inject a seeded Poisson arrival stream at R req/s
+              instead of waiting for replies; the admission controller
+              sheds deterministically against --drain capacity — same
+              seed ⇒ same shed set at any worker count. --rates sweeps a
+              rate ladder and writes the latency-vs-load curve artifact)
   export     --model M (--bits … | --allocator A --b1 F) [--out DIR]
   figures    [--models a,b,…] (regenerate Fig. 6/8 sweeps in-process)
   selfcheck  [--models a,b,…]
@@ -380,6 +393,9 @@ fn cmd_serve(args: &Args) -> Result<()> {
         deadline_us: args.usize_flag("deadline-us", 200)? as u64,
         queue_cap: args.usize_flag("queue-cap", 0)?,
     };
+    if args.has("open-loop") {
+        return cmd_serve_open_loop(args, &session, &test, &bits, n, &cfg);
+    }
     let r = run_server(&session, &test, &bits, n, &cfg)?;
     println!(
         "{n} requests [{}{}] workers {} batch ≤{} deadline {} µs: acc {:.4}, {:.1} req/s",
@@ -402,6 +418,85 @@ fn cmd_serve(args: &Args) -> Result<()> {
         r.batch_occupancy,
         r.queue_depth
     );
+    Ok(())
+}
+
+/// `adaq serve --open-loop`: streaming load at a configured offered rate
+/// (or a `--rates` ladder) with deterministic admission control; writes
+/// the `load_curve` artifact when a ladder (or `--load-curve`) asks.
+fn cmd_serve_open_loop(
+    args: &Args,
+    session: &Session,
+    test: &Dataset,
+    bits: &[f32],
+    n: usize,
+    cfg: &ServerConfig,
+) -> Result<()> {
+    let spec = args.str_flag("shed", "reject");
+    let shed = ShedPolicy::parse(&spec)
+        .ok_or_else(|| Error::Cli(format!("unknown --shed policy {spec:?} (reject|oldest-drop)")))?;
+    let mut ladder = args.f64_list_flag("rates", &[])?;
+    if !ladder.is_empty() && args.flags.contains_key("rate") {
+        return Err(Error::Cli(
+            "--rate and --rates conflict; pass one offered rate or one ladder".into(),
+        ));
+    }
+    if ladder.is_empty() {
+        let rate = args.f64_flag("rate", 0.0)?;
+        if rate <= 0.0 {
+            return Err(Error::Cli(
+                "open-loop serving wants --rate R (req/s) or --rates R1,R2,…".into(),
+            ));
+        }
+        ladder.push(rate);
+    }
+    let base = OpenLoopConfig {
+        rate_rps: ladder[0],
+        drain_rps: args.f64_flag("drain", 0.0)?,
+        requests: n,
+        seed: args.usize_flag("seed", 42)? as u64,
+        shed,
+        slice_ms: args.usize_flag("slice-ms", 0)? as u64,
+    };
+    let curve = if ladder.len() > 1 {
+        run_rate_ladder(session, test, bits, cfg, &base, &ladder)?
+    } else {
+        LoadCurve { points: vec![run_open_loop(session, test, bits, cfg, &base)?] }
+    };
+    for r in &curve.points {
+        println!(
+            "open-loop {:.0} rps offered (achieved {:.0}), drain {:.0} [{}]: \
+             {} accepted + {} shed = {} offered, goodput {:.1} rps, acc {:.4}",
+            r.offered_rate_rps,
+            r.achieved_rate_rps,
+            r.drain_rps,
+            r.shed_policy.name(),
+            r.accepted,
+            r.shed_total(),
+            r.offered,
+            r.goodput_rps,
+            r.serve.accuracy(),
+        );
+        println!(
+            "  sojourn p50 {:.2} / p99 {:.2} / p99.9 {:.2} ms, mean queue depth {:.2}, \
+             {} slices × {} ms",
+            r.serve.p50_ms,
+            r.serve.p99_ms,
+            r.serve.p999_ms,
+            r.mean_depth,
+            r.slices.len(),
+            r.slice_ms,
+        );
+    }
+    let artifact = args
+        .flags
+        .get("load-curve")
+        .cloned()
+        .or_else(|| (curve.points.len() > 1).then(|| "load_curve.json".to_string()));
+    if let Some(path) = artifact {
+        curve.to_json().write_file(&path)?;
+        println!("wrote {path} ({} rate points)", curve.points.len());
+    }
     Ok(())
 }
 

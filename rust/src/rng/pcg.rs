@@ -61,6 +61,18 @@ impl Pcg32 {
     pub fn below(&mut self, n: u32) -> u32 {
         self.next_u32() % n
     }
+
+    /// Exponentially-distributed sample with the given `mean` (inverse
+    /// CDF of one 32-bit draw): `-mean · ln(1 − u)`, u ∈ [0, 1). With
+    /// `mean = 1/λ` this is the inter-arrival gap of a Poisson process
+    /// at rate λ — the open-loop serve harness draws its seeded arrival
+    /// schedule from exactly this sequence, so the schedule is bitwise
+    /// reproducible per seed.
+    #[inline]
+    pub fn exponential(&mut self, mean: f64) -> f64 {
+        // u < 1 always, so 1-u ∈ (0, 1] and ln never sees 0
+        -mean * (1.0 - self.next_f64()).ln()
+    }
 }
 
 #[cfg(test)]
@@ -86,6 +98,30 @@ mod tests {
         let c: Vec<u32> = { let mut r = Pcg32::new(2); (0..16).map(|_| r.next_u32()).collect() };
         assert_eq!(a, b);
         assert_ne!(a, c);
+    }
+
+    #[test]
+    fn exponential_moments_and_support() {
+        let mut rng = Pcg32::new(13);
+        let mean = 4.0;
+        let n = 50_000;
+        let mut sum = 0.0;
+        let mut sumsq = 0.0;
+        for _ in 0..n {
+            let v = rng.exponential(mean);
+            assert!(v >= 0.0 && v.is_finite(), "exponential sample {v} out of support");
+            sum += v;
+            sumsq += v * v;
+        }
+        let m = sum / n as f64;
+        let var = sumsq / n as f64 - m * m;
+        // Exp(mean): E = mean, Var = mean² (loose 5% tolerance)
+        assert!((m - mean).abs() < 0.05 * mean, "mean {m}");
+        assert!((var - mean * mean).abs() < 0.10 * mean * mean, "var {var}");
+        // deterministic per seed
+        let a = Pcg32::new(99).exponential(1.0);
+        let b = Pcg32::new(99).exponential(1.0);
+        assert_eq!(a.to_bits(), b.to_bits());
     }
 
     #[test]

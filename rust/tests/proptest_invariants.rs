@@ -10,7 +10,11 @@
 //!   freezing, SQNR = adaptive|p=t=1;
 //! * Pareto frontier: non-domination and coverage;
 //! * TNSR + JSON containers: roundtrip on random payloads;
-//! * batching: partition covers the prefix with no overlap.
+//! * batching: partition covers the prefix with no overlap;
+//! * serve-queue admission control: reject-on-full never exceeds the
+//!   cap, oldest-drop preserves FIFO order of survivors, `close()`
+//!   drains every accepted request, and `accepted + shed == offered`
+//!   closes exactly under random offer/pop interleavings.
 
 use adaq::io::json::Json;
 use adaq::io::tnsr::{read_tnsr, write_tnsr, TnsrValue};
@@ -255,6 +259,85 @@ fn prop_json_numeric_roundtrip() {
             );
         }
         assert_eq!(back.get("flag").unwrap().as_bool(), Some(seed % 2 == 0));
+    }
+}
+
+#[test]
+fn prop_queue_shed_policies() {
+    use adaq::coordinator::server::{Admission, Request, RequestQueue, ShedPolicy};
+    use std::collections::VecDeque;
+    use std::time::{Duration, Instant};
+
+    let req = |id: usize| Request { id, idx: id, enqueued_at: Instant::now() };
+    for seed in 700..700 + CASES {
+        let mut rng = Pcg32::new(seed);
+        let cap = 1 + rng.below(10) as usize;
+        let policy =
+            if rng.below(2) == 0 { ShedPolicy::RejectNew } else { ShedPolicy::DropOldest };
+        let q = RequestQueue::new(cap);
+        // single-threaded model mirror: the queue's exact expected content
+        let mut model: VecDeque<usize> = VecDeque::new();
+        let (mut offered, mut shed, mut served) = (0usize, 0usize, 0usize);
+        let mut out = Vec::new();
+        for step in 0..200 {
+            if rng.below(3) < 2 {
+                let id = offered;
+                offered += 1;
+                match q.offer(req(id), policy) {
+                    Admission::Accepted => {
+                        assert!(model.len() < cap, "seed {seed} step {step}: accept at cap");
+                        model.push_back(id);
+                    }
+                    Admission::Rejected => {
+                        assert_eq!(policy, ShedPolicy::RejectNew, "seed {seed}");
+                        assert_eq!(model.len(), cap, "seed {seed}: reject below cap");
+                        shed += 1;
+                    }
+                    Admission::Evicted(old) => {
+                        assert_eq!(policy, ShedPolicy::DropOldest, "seed {seed}");
+                        assert_eq!(model.len(), cap, "seed {seed}: evict below cap");
+                        let expect = model.pop_front().unwrap();
+                        assert_eq!(old.id, expect, "seed {seed}: evicted non-oldest");
+                        model.push_back(id);
+                        shed += 1;
+                    }
+                    Admission::Closed => panic!("seed {seed}: queue not closed yet"),
+                }
+            } else if !model.is_empty() {
+                // pop_batch on an empty open queue would block: only pop
+                // when the model says something is queued
+                let max = 1 + rng.below(4) as usize;
+                out.clear();
+                let left = q.pop_batch(max, Duration::ZERO, &mut out).unwrap();
+                for r in &out {
+                    let expect = model.pop_front().unwrap();
+                    assert_eq!(r.id, expect, "seed {seed}: survivors must stay FIFO");
+                }
+                served += out.len();
+                assert_eq!(left, model.len(), "seed {seed}");
+            }
+            // the load-bearing bound: no policy ever exceeds the cap
+            assert!(q.depth() <= cap, "seed {seed} step {step}: cap exceeded");
+            assert_eq!(q.depth(), model.len(), "seed {seed} step {step}");
+        }
+        // close(): new offers fail, the backlog drains in FIFO order
+        q.close();
+        assert!(matches!(q.offer(req(usize::MAX), policy), Admission::Closed), "seed {seed}");
+        loop {
+            out.clear();
+            match q.pop_batch(8, Duration::ZERO, &mut out) {
+                Some(_) => {
+                    for r in &out {
+                        let expect = model.pop_front().unwrap();
+                        assert_eq!(r.id, expect, "seed {seed}: drain must stay FIFO");
+                    }
+                    served += out.len();
+                }
+                None => break,
+            }
+        }
+        assert!(model.is_empty(), "seed {seed}: close() left accepted requests behind");
+        assert_eq!(served + shed, offered, "seed {seed}: accounting must close");
     }
 }
 

@@ -1,0 +1,352 @@
+//! Open-loop serving battery — all artifact-free, on a small random-weight
+//! MLP over the procedural shapes dataset (determinism needs fixed
+//! weights, not trained ones):
+//!
+//! * **Schedule determinism**: one seed ⇒ one arrival schedule, one
+//!   admitted set, one shed set — bitwise identical across
+//!   `workers ∈ {1, 2, 4}` and across repeated runs;
+//! * **Ground truth**: every accepted request's prediction equals the
+//!   batch-1 `qforward_once` answer for its image, on both the f32
+//!   fake-quant and the int8 serving paths; shed ids carry the `-1`
+//!   sentinel;
+//! * **Shed accounting**: `accepted + shed == offered` exactly, under a
+//!   rate far above the admission capacity, for both shed policies;
+//! * **Empty-window regression**: time slices with zero completions
+//!   report zeros, never NaN/inf (the PR 4 `0-not-inf` guard extended to
+//!   the sliced series).
+
+use std::collections::HashMap;
+
+use adaq::coordinator::server::{plan_arrivals, slice_series};
+use adaq::coordinator::{
+    run_open_loop, run_rate_ladder, OpenLoopConfig, OpenLoopReport, ServerConfig, Session,
+    ShedPolicy,
+};
+use adaq::dataset::{Dataset, IMG, NUM_CLASSES, TEST_SEED};
+use adaq::io::Json;
+use adaq::model::{Manifest, ModelArtifacts, WeightStore};
+use adaq::rng::{fill_normal, Pcg32};
+use adaq::tensor::Tensor;
+
+const HIDDEN: usize = 16;
+const PIXELS: usize = IMG * IMG;
+
+fn mlp_manifest() -> Manifest {
+    let json = format!(
+        r#"{{
+        "model": "openloop_mlp", "input_shape": [{IMG},{IMG},1],
+        "num_classes": {NUM_CLASSES}, "output": "fc2",
+        "num_weighted_layers": 2,
+        "total_quantizable_params": {},
+        "layers": [
+          {{"name":"flat","kind":"flatten","inputs":["input"]}},
+          {{"name":"fc1","kind":"dense","inputs":["flat"],"cin":{PIXELS},
+           "cout":{HIDDEN},"param_idx_w":1,"param_idx_b":2,"qindex":0,
+           "s_i":{}}},
+          {{"name":"relu1","kind":"relu","inputs":["fc1"]}},
+          {{"name":"fc2","kind":"dense","inputs":["relu1"],"cin":{HIDDEN},
+           "cout":{NUM_CLASSES},"param_idx_w":3,"param_idx_b":4,"qindex":1,
+           "s_i":{}}}
+        ]}}"#,
+        PIXELS * HIDDEN + HIDDEN * NUM_CLASSES,
+        PIXELS * HIDDEN,
+        HIDDEN * NUM_CLASSES,
+    );
+    Manifest::from_json(&Json::parse(&json).unwrap()).unwrap()
+}
+
+/// Fixed random weights (seeded): enough to make predictions meaningful
+/// bits without paying for training in every test.
+fn artifacts() -> ModelArtifacts {
+    let mut rng = Pcg32::new(0x0133D);
+    let scaled = |shape: &[usize], scale: f32, rng: &mut Pcg32| {
+        let n: usize = shape.iter().product();
+        let mut data = vec![0f32; n];
+        fill_normal(rng, &mut data);
+        for v in data.iter_mut() {
+            *v *= scale;
+        }
+        Tensor::from_vec(shape, data).unwrap()
+    };
+    let params = vec![
+        scaled(&[PIXELS, HIDDEN], 1.0 / (PIXELS as f32).sqrt(), &mut rng),
+        scaled(&[HIDDEN], 0.1, &mut rng),
+        scaled(&[HIDDEN, NUM_CLASSES], 1.0 / (HIDDEN as f32).sqrt(), &mut rng),
+        scaled(&[NUM_CLASSES], 0.1, &mut rng),
+    ];
+    let named: Vec<(String, Tensor)> = ["fc1.w", "fc1.b", "fc2.w", "fc2.b"]
+        .iter()
+        .map(|s| s.to_string())
+        .zip(params)
+        .collect();
+    ModelArtifacts {
+        dir: std::path::PathBuf::from("<in-memory>"),
+        manifest: mlp_manifest(),
+        weights: WeightStore::from_params(named),
+    }
+}
+
+fn cfg(workers: usize) -> ServerConfig {
+    // queue_cap pinned explicitly: the test also exercises the default
+    // (worker-independent) admission cap separately below
+    ServerConfig { workers, batch: 2, deadline_us: 100, queue_cap: 8 }
+}
+
+fn overload() -> OpenLoopConfig {
+    OpenLoopConfig {
+        rate_rps: 4000.0,
+        drain_rps: 800.0, // 5x overload: the ledger must shed heavily
+        requests: 300,
+        seed: 7,
+        shed: ShedPolicy::RejectNew,
+        slice_ms: 20,
+    }
+}
+
+/// Batch-1 ground truth per dataset image, via the same session.
+fn ground_truth(session: &Session, data: &Dataset, bits: &[f32]) -> Vec<i32> {
+    let classes = NUM_CLASSES;
+    (0..data.len())
+        .map(|idx| {
+            let x = data.gather(&[idx]).unwrap();
+            let logits = session.qforward_once(&x, bits).unwrap();
+            let (pred, _) = Tensor::top2(&logits[..classes]);
+            pred as i32
+        })
+        .collect()
+}
+
+fn check_against_ground_truth(r: &OpenLoopReport, truth: &[i32], data_len: usize) {
+    let mut admitted = vec![true; r.offered];
+    for &id in &r.shed_ids {
+        admitted[id] = false;
+    }
+    assert_eq!(admitted.iter().filter(|&&a| a).count(), r.accepted);
+    for id in 0..r.offered {
+        if admitted[id] {
+            assert_eq!(
+                r.serve.predictions[id],
+                truth[id % data_len],
+                "request {id} must match its batch-1 answer"
+            );
+        } else {
+            assert_eq!(r.serve.predictions[id], -1, "shed request {id} carries the sentinel");
+        }
+    }
+}
+
+#[test]
+fn shed_set_and_predictions_invariant_across_worker_counts_f32() {
+    let test = Dataset::generate(120, TEST_SEED);
+    let session = Session::from_parts(artifacts(), test.clone(), 1).unwrap();
+    let bits = [8.0f32, 8.0];
+    let ol = overload();
+    let truth = ground_truth(&session, &test, &bits);
+    let mut base: Option<OpenLoopReport> = None;
+    for workers in [1usize, 2, 4] {
+        let r = run_open_loop(&session, &test, &bits, &cfg(workers), &ol).unwrap();
+        assert_eq!(r.accepted + r.shed_total(), r.offered, "w{workers}: accounting closes");
+        assert!(r.shed_total() > 0, "w{workers}: 5x overload must shed");
+        check_against_ground_truth(&r, &truth, test.len());
+        // slice bookkeeping: every accepted completion lands in a slice
+        let sliced: usize = r.slices.iter().map(|s| s.completions).sum();
+        assert_eq!(sliced, r.accepted, "w{workers}");
+        match &base {
+            None => base = Some(r),
+            Some(b) => {
+                assert_eq!(r.shed_ids, b.shed_ids, "w{workers}: shed set moved");
+                assert_eq!(r.serve.predictions, b.serve.predictions, "w{workers}");
+                assert_eq!(r.accepted, b.accepted, "w{workers}");
+                assert_eq!(r.shed_rejected, b.shed_rejected, "w{workers}");
+                assert_eq!(r.shed_dropped, b.shed_dropped, "w{workers}");
+                assert_eq!(r.serve.correct, b.serve.correct, "w{workers}");
+            }
+        }
+    }
+    // repeated run at the same worker count is bitwise identical too
+    let again = run_open_loop(&session, &test, &bits, &cfg(2), &ol).unwrap();
+    let b = base.unwrap();
+    assert_eq!(again.shed_ids, b.shed_ids);
+    assert_eq!(again.serve.predictions, b.serve.predictions);
+}
+
+#[test]
+fn default_admission_cap_is_worker_independent() {
+    // queue_cap = 0: the real queue auto-sizes by workers, but the
+    // admission ledger must not — shed sets stay identical
+    let test = Dataset::generate(80, TEST_SEED);
+    let session = Session::from_parts(artifacts(), test.clone(), 1).unwrap();
+    let bits = [8.0f32, 8.0];
+    let ol = OpenLoopConfig { requests: 200, ..overload() };
+    let mut shed_sets = Vec::new();
+    for (workers, batch) in [(1usize, 2usize), (4, 2), (2, 4)] {
+        let c = ServerConfig { workers, batch, deadline_us: 0, queue_cap: 0 };
+        let r = run_open_loop(&session, &test, &bits, &c, &ol).unwrap();
+        assert!(r.shed_total() > 0);
+        shed_sets.push(r.shed_ids);
+    }
+    assert_eq!(shed_sets[0], shed_sets[1], "auto-cap must not leak worker count into admission");
+    assert_eq!(shed_sets[0], shed_sets[2], "nor batch size (fixed default admission cap)");
+}
+
+#[test]
+fn accepted_predictions_match_batch1_ground_truth_int8() {
+    let test = Dataset::generate(100, TEST_SEED);
+    let session = Session::from_parts_int8(artifacts(), test.clone(), 1).unwrap();
+    let bits = [8.0f32, 6.0];
+    let truth = ground_truth(&session, &test, &bits);
+    let ol = overload();
+    let mut base: Option<OpenLoopReport> = None;
+    for workers in [1usize, 4] {
+        let r = run_open_loop(&session, &test, &bits, &cfg(workers), &ol).unwrap();
+        assert_eq!(r.accepted + r.shed_total(), r.offered);
+        check_against_ground_truth(&r, &truth, test.len());
+        match &base {
+            None => base = Some(r),
+            Some(b) => {
+                assert_eq!(r.shed_ids, b.shed_ids, "int8 w{workers}");
+                assert_eq!(r.serve.predictions, b.serve.predictions, "int8 w{workers}");
+            }
+        }
+    }
+}
+
+#[test]
+fn shed_accounting_far_above_capacity_both_policies() {
+    let test = Dataset::generate(60, TEST_SEED);
+    let session = Session::from_parts(artifacts(), test.clone(), 1).unwrap();
+    let bits = [8.0f32, 8.0];
+    for shed in [ShedPolicy::RejectNew, ShedPolicy::DropOldest] {
+        // 100x the admission capacity: nearly everything sheds, and the
+        // counters must still close exactly
+        let ol = OpenLoopConfig {
+            rate_rps: 50_000.0,
+            drain_rps: 500.0,
+            requests: 400,
+            seed: 11,
+            shed,
+            slice_ms: 10,
+        };
+        let r = run_open_loop(&session, &test, &bits, &cfg(2), &ol).unwrap();
+        assert_eq!(r.accepted + r.shed_total(), r.offered, "{shed:?}");
+        assert_eq!(r.shed_ids.len(), r.shed_total(), "{shed:?}");
+        assert!(
+            r.shed_total() > r.offered / 2,
+            "{shed:?}: 100x overload shed only {} of {}",
+            r.shed_total(),
+            r.offered
+        );
+        assert_eq!(r.serve.requests, r.accepted, "{shed:?}");
+        match shed {
+            ShedPolicy::RejectNew => assert_eq!(r.shed_dropped, 0),
+            ShedPolicy::DropOldest => assert_eq!(r.shed_rejected, 0),
+        }
+        // goodput/throughput stay finite whatever the clock did
+        assert!(r.goodput_rps.is_finite() && r.achieved_rate_rps.is_finite());
+        assert!(r.shed_fraction() >= 0.0 && r.shed_fraction() <= 1.0);
+    }
+}
+
+#[test]
+fn rate_ladder_emits_one_point_per_rung_and_requires_drain() {
+    let test = Dataset::generate(60, TEST_SEED);
+    let session = Session::from_parts(artifacts(), test.clone(), 1).unwrap();
+    let bits = [8.0f32, 8.0];
+    let base = OpenLoopConfig {
+        rate_rps: 0.0, // overwritten per rung
+        drain_rps: 1000.0,
+        requests: 120,
+        seed: 3,
+        shed: ShedPolicy::RejectNew,
+        slice_ms: 20,
+    };
+    let rates = [500.0, 2000.0, 8000.0];
+    let curve = run_rate_ladder(&session, &test, &bits, &cfg(2), &base, &rates).unwrap();
+    assert_eq!(curve.points.len(), rates.len());
+    for (r, &rate) in curve.points.iter().zip(&rates) {
+        assert_eq!(r.offered_rate_rps, rate);
+        assert_eq!(r.drain_rps, 1000.0, "one admission model across the curve");
+        assert_eq!(r.accepted + r.shed_total(), r.offered);
+    }
+    // deeper overload never sheds less (same seed, same admission model)
+    assert!(curve.points[2].shed_total() >= curve.points[1].shed_total());
+    // the artifact serializes: one JSON point per rung with the schema keys
+    let j = curve.to_json();
+    let pts = j.get("points").unwrap().as_arr().unwrap();
+    assert_eq!(pts.len(), 3);
+    for p in pts {
+        for key in
+            ["rate_rps", "goodput_rps", "accepted", "shed", "p50_ms", "p99_ms", "slices"]
+        {
+            assert!(p.get(key).is_some(), "load_curve point missing {key}");
+        }
+        let slices = p.get("slices").unwrap().as_arr().unwrap();
+        assert!(!slices.is_empty(), "the within-run series must ride in the artifact");
+        for s in slices {
+            assert!(s.get("goodput_rps").unwrap().as_f64().unwrap().is_finite());
+        }
+    }
+    // a ladder without an explicit drain capacity is a config error
+    let floating = OpenLoopConfig { drain_rps: 0.0, ..base };
+    assert!(run_rate_ladder(&session, &test, &bits, &cfg(2), &floating, &rates).is_err());
+    // as is a non-positive offered rate
+    let bad = OpenLoopConfig { rate_rps: 0.0, ..overload() };
+    assert!(run_open_loop(&session, &test, &bits, &cfg(1), &bad).is_err());
+}
+
+#[test]
+fn plan_is_pure_function_of_its_tuple() {
+    // the admission ledger has no scheduling inputs at all — same tuple,
+    // same plan, across arbitrarily many replays
+    let mk = || plan_arrivals(1000, 3000.0, 750.0, 8, ShedPolicy::DropOldest, 99);
+    let a = mk();
+    assert_eq!(a, mk());
+    assert_eq!(a.accepted() + a.shed_ids.len(), 1000);
+    // and the schedule is strictly reproducible at the µs level
+    let b = plan_arrivals(1000, 3000.0, 750.0, 8, ShedPolicy::DropOldest, 99);
+    assert_eq!(a.arrivals_us, b.arrivals_us);
+}
+
+#[test]
+fn empty_window_slices_report_zeros_not_nan() {
+    // regression (satellite of this PR): a mid-run slice with no
+    // completions — reachable whenever admitted work drains before the
+    // next arrival burst — must divide to 0, never NaN/inf
+    let completions = [(2_000u64, 1.5f64), (62_000, 3.0)]; // slices 0 and 3
+    let depths = [(1_000u64, 2usize)];
+    let s = slice_series(20, &completions, &depths);
+    assert_eq!(s.len(), 4);
+    for (i, slice) in s.iter().enumerate() {
+        assert!(
+            slice.goodput_rps.is_finite()
+                && slice.mean_sojourn_ms.is_finite()
+                && slice.mean_depth.is_finite(),
+            "slice {i} leaked a NaN/inf"
+        );
+    }
+    assert_eq!(s[1].completions, 0);
+    assert_eq!(s[1].goodput_rps, 0.0);
+    assert_eq!(s[1].mean_sojourn_ms, 0.0);
+    assert_eq!(s[2].completions, 0);
+    assert_eq!(s[3].completions, 1);
+}
+
+#[test]
+fn latency_curve_percentiles_on_known_series() {
+    // the load-curve tails come from util::percentile_nearest_rank over
+    // the per-run sojourn series; pin the contract on known data,
+    // including the 0- and 1-sample edges
+    use adaq::util::percentile_nearest_rank;
+    let v: Vec<f64> = (1..=200).map(|i| i as f64).collect();
+    assert_eq!(percentile_nearest_rank(&v, 0.50), 100.0);
+    assert_eq!(percentile_nearest_rank(&v, 0.99), 198.0);
+    assert_eq!(percentile_nearest_rank(&v, 0.999), 200.0);
+    assert_eq!(percentile_nearest_rank(&[7.5], 0.999), 7.5, "1 sample: every tail is it");
+    assert!(percentile_nearest_rank(&[], 0.5).is_nan(), "0 samples: NaN by contract");
+    // a single-completion open-loop run must therefore report that
+    // completion as every percentile, finite throughout
+    let mut m: HashMap<&str, f64> = HashMap::new();
+    m.insert("p50", percentile_nearest_rank(&[3.25], 0.50));
+    m.insert("p999", percentile_nearest_rank(&[3.25], 0.999));
+    assert!(m.values().all(|v| *v == 3.25));
+}
