@@ -19,8 +19,8 @@
 
 use adaq::bench_support as bs;
 use adaq::coordinator::{
-    run_open_loop, run_rate_ladder, run_server, run_sweep_jobs, EvalCache, OpenLoopConfig,
-    ServerConfig, Session, ShedPolicy, SweepConfig,
+    run_degrade, run_open_loop, run_rate_ladder, run_server, run_sweep_jobs, DegradeConfig,
+    EvalCache, FaultPlan, OpenLoopConfig, Rung, ServerConfig, Session, ShedPolicy, SweepConfig,
 };
 use adaq::dataset::Dataset;
 use adaq::io::Json;
@@ -457,7 +457,13 @@ fn main() {
         for (workers, batch, deadline_us) in
             [(1usize, 1usize, 0u64), (w, 1, 0), (w, 4, 200), (w, 8, 200)]
         {
-            let cfg = ServerConfig { workers, batch, deadline_us, queue_cap: 0 };
+            let cfg = ServerConfig {
+                workers,
+                batch,
+                deadline_us,
+                queue_cap: 0,
+                fault: FaultPlan::default(),
+            };
             let r = run_server(&session, &test, &bits, n, &cfg).unwrap();
             match base_correct {
                 None => {
@@ -504,7 +510,13 @@ fn main() {
         // (one config is enough for the trajectory; invariance is
         // covered by tests/serve_mt.rs)
         let i8_session = Session::from_parts_int8(demo_artifacts(29), test.clone(), 1).unwrap();
-        let cfg = ServerConfig { workers: w, batch: 4, deadline_us: 200, queue_cap: 0 };
+        let cfg = ServerConfig {
+            workers: w,
+            batch: 4,
+            deadline_us: 200,
+            queue_cap: 0,
+            fault: FaultPlan::default(),
+        };
         let r = run_server(&i8_session, &test, &bits, n, &cfg).unwrap();
         rows.push(vec![
             format!("serve_mt {n} reqs, w{w} b4 int8"),
@@ -542,7 +554,13 @@ fn main() {
         let n = if tiny() { 200 } else { 1200 };
         let avail = std::thread::available_parallelism().map_or(1, |v| v.get()).min(16);
         let w = avail.clamp(2, 8);
-        let cfg = ServerConfig { workers: w, batch: 4, deadline_us: 200, queue_cap: 0 };
+        let cfg = ServerConfig {
+            workers: w,
+            batch: 4,
+            deadline_us: 200,
+            queue_cap: 0,
+            fault: FaultPlan::default(),
+        };
         // admission capacity = the measured closed-loop service rate
         // (pin a floor in case the serve_mt clock degenerated)
         let drain = if closed_rps_est > 1.0 { closed_rps_est } else { 500.0 };
@@ -553,6 +571,7 @@ fn main() {
             seed: 42,
             shed: ShedPolicy::RejectNew,
             slice_ms: 0,
+            live_shed: false,
         };
         let rates = [drain * 0.7, drain * 1.5, drain * 3.0];
         let curve = run_rate_ladder(&session, &test, &bits, &cfg, &base, &rates).unwrap();
@@ -595,6 +614,72 @@ fn main() {
         let r = run_open_loop(&session, &test, &bits, &cfg, &ol).unwrap();
         push_point(&r, w, &mut rows, &mut ol_json);
         json_fields.push(("serve_openloop", Json::Arr(ol_json)));
+
+        // ---- degradation controller vs pure shedding at 3x capacity:
+        //      the graceful-degradation headline. Same arrival stream,
+        //      same rung-0 capacity — the controller must retain
+        //      strictly more goodput than the reject ledger (asserted;
+        //      the ledger-level claim is machine-independent). ----
+        let rate = drain * 3.0;
+        // slice the virtual run into ~12 controller decision points so
+        // the ladder walk happens at any machine speed (the CLI default
+        // of 20 ms is the ceiling)
+        let slice_ms = ((n as f64 / rate * 1000.0) / 12.0).clamp(1.0, 20.0) as u64;
+        let cache = EvalCache::new();
+        let ladder = vec![
+            Rung::calibrated(&session, &cache, "b8", vec![8.0; 3], drain).unwrap(),
+            Rung::calibrated(&session, &cache, "b6", vec![6.0; 3], drain * 1.5).unwrap(),
+            Rung::calibrated(&session, &cache, "b4", vec![4.0; 3], drain * 2.25).unwrap(),
+        ];
+        let dc = DegradeConfig::new(ladder);
+        let ol = OpenLoopConfig {
+            rate_rps: rate,
+            shed: ShedPolicy::RejectNew,
+            slice_ms,
+            ..base
+        };
+        let deg = run_degrade(&session, &test, &cfg, &ol, &dc).unwrap();
+        let rej = run_open_loop(&session, &test, &bits, &cfg, &ol).unwrap();
+        assert_eq!(
+            deg.open.accepted + deg.open.shed_total() + deg.open.live_shed + deg.open.errored,
+            deg.open.offered,
+            "degrade accounting must close exactly"
+        );
+        assert!(!deg.switches.is_empty(), "3x overload must walk down the ladder");
+        assert!(
+            deg.open.accepted > rej.accepted,
+            "degrade must beat pure shedding at 3x capacity: {} vs {} accepted",
+            deg.open.accepted,
+            rej.accepted
+        );
+        rows.push(vec![
+            format!("serve_degrade {rate:.0} rps offered, 3-rung ladder, w{w}"),
+            format!("{:.0} rps goodput", deg.open.goodput_rps),
+            format!(
+                "{}/{} accepted ({} switches, est acc {:.4}) vs reject {}/{}",
+                deg.open.accepted,
+                deg.open.offered,
+                deg.switches.len(),
+                deg.est_accuracy,
+                rej.accepted,
+                rej.offered
+            ),
+        ]);
+        json_fields.push((
+            "serve_degrade",
+            Json::obj(vec![
+                ("degrade", deg.to_json()),
+                (
+                    "reject_baseline",
+                    Json::obj(vec![
+                        ("accepted", Json::Num(rej.accepted as f64)),
+                        ("shed", Json::Num(rej.shed_total() as f64)),
+                        ("goodput_rps", Json::Num(rej.goodput_rps)),
+                    ]),
+                ),
+                ("slice_ms", Json::Num(slice_ms as f64)),
+            ]),
+        ));
     }
 
     // ---- host-side quantizer throughput ----

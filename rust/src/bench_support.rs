@@ -11,7 +11,11 @@
 use std::path::{Path, PathBuf};
 
 use crate::coordinator::Session;
+use crate::dataset::{Dataset, IMG, NUM_CLASSES, TEST_SEED};
 use crate::measure::{calibrate_model_jobs, Calibration, SearchParams};
+use crate::model::{Manifest, ModelArtifacts, WeightStore};
+use crate::rng::{fill_normal, Pcg32};
+use crate::tensor::Tensor;
 use crate::Result;
 
 /// Artifacts root for benches.
@@ -41,6 +45,66 @@ pub fn bench_batch() -> usize {
 /// benches default to parallel.
 pub fn bench_jobs() -> usize {
     std::env::var("ADAQ_JOBS").ok().and_then(|v| v.parse().ok()).unwrap_or(0)
+}
+
+/// In-process synthetic model + data: a seeded random-weight two-layer
+/// MLP over `images` procedural shapes images. This is the artifact-free
+/// path behind `adaq serve --synthetic` and the serve-engine batteries —
+/// the fault/degrade smokes must run on a fresh checkout with no
+/// `make artifacts`. Fixed seeds make every run (and every prediction)
+/// reproducible; the weights are random, so accuracy is meaningless but
+/// determinism, accounting, and fault containment are fully exercised.
+pub fn synthetic_parts(images: usize) -> Result<(ModelArtifacts, Dataset)> {
+    const HIDDEN: usize = 16;
+    const PIXELS: usize = IMG * IMG;
+    let json = format!(
+        r#"{{
+        "model": "synthetic_mlp", "input_shape": [{IMG},{IMG},1],
+        "num_classes": {NUM_CLASSES}, "output": "fc2",
+        "num_weighted_layers": 2,
+        "total_quantizable_params": {},
+        "layers": [
+          {{"name":"flat","kind":"flatten","inputs":["input"]}},
+          {{"name":"fc1","kind":"dense","inputs":["flat"],"cin":{PIXELS},
+           "cout":{HIDDEN},"param_idx_w":1,"param_idx_b":2,"qindex":0,
+           "s_i":{}}},
+          {{"name":"relu1","kind":"relu","inputs":["fc1"]}},
+          {{"name":"fc2","kind":"dense","inputs":["relu1"],"cin":{HIDDEN},
+           "cout":{NUM_CLASSES},"param_idx_w":3,"param_idx_b":4,"qindex":1,
+           "s_i":{}}}
+        ]}}"#,
+        PIXELS * HIDDEN + HIDDEN * NUM_CLASSES,
+        PIXELS * HIDDEN,
+        HIDDEN * NUM_CLASSES,
+    );
+    let manifest = Manifest::from_json(&crate::io::Json::parse(&json)?)?;
+    let mut rng = Pcg32::new(0x0133D);
+    let scaled = |shape: &[usize], scale: f32, rng: &mut Pcg32| -> Result<Tensor> {
+        let n: usize = shape.iter().product();
+        let mut data = vec![0f32; n];
+        fill_normal(rng, &mut data);
+        for v in data.iter_mut() {
+            *v *= scale;
+        }
+        Tensor::from_vec(shape, data)
+    };
+    let params = vec![
+        scaled(&[PIXELS, HIDDEN], 1.0 / (PIXELS as f32).sqrt(), &mut rng)?,
+        scaled(&[HIDDEN], 0.1, &mut rng)?,
+        scaled(&[HIDDEN, NUM_CLASSES], 1.0 / (HIDDEN as f32).sqrt(), &mut rng)?,
+        scaled(&[NUM_CLASSES], 0.1, &mut rng)?,
+    ];
+    let named: Vec<(String, Tensor)> = ["fc1.w", "fc1.b", "fc2.w", "fc2.b"]
+        .iter()
+        .map(|s| s.to_string())
+        .zip(params)
+        .collect();
+    let artifacts = ModelArtifacts {
+        dir: PathBuf::from("<synthetic>"),
+        manifest,
+        weights: WeightStore::from_params(named),
+    };
+    Ok((artifacts, Dataset::generate(images, TEST_SEED)))
 }
 
 /// Open a session and load (or compute-and-save) its calibration.

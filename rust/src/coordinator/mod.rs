@@ -23,6 +23,14 @@
 //! process at a configured offered rate with deterministic admission
 //! control / load shedding — the overload view, swept into
 //! latency-vs-offered-load curves by [`run_rate_ladder`]).
+//!
+//! [`run_degrade`] closes the loop between the calibration tier and the
+//! serving tier: instead of shedding under overload, it walks a ladder
+//! of sweep-calibrated bit allocations ([`Rung`], hysteresis in
+//! [`DegradeConfig`]) down and back up, trading estimated accuracy for
+//! goodput on the same deterministic virtual-time ledger. [`FaultPlan`]
+//! injects seeded worker faults (panic / poisoned batch / stall) that
+//! the engine must absorb as per-request error outcomes.
 
 pub mod pool;
 mod serve;
@@ -33,8 +41,9 @@ mod sweep;
 pub use pool::JobPool;
 pub use serve::{serve_loop, ServeStats};
 pub use server::{
-    run_open_loop, run_rate_ladder, run_server, LoadCurve, OpenLoopConfig, OpenLoopReport,
-    ServeReport, ServerConfig, ShedPolicy,
+    run_degrade, run_open_loop, run_rate_ladder, run_server, DegradeConfig, DegradeReport,
+    FaultPlan, LoadCurve, OpenLoopConfig, OpenLoopReport, Rung, ServeReport, ServerConfig,
+    ShedPolicy,
 };
 pub use session::{Baseline, EvalOutput, Session};
 pub use sweep::{run_sweep, run_sweep_jobs, EvalCache, SweepConfig, SweepResult};

@@ -111,6 +111,8 @@ mod tests {
             batch_occupancy: vec![10],
             queue_depth: vec![10],
             predictions: vec![0; 10],
+            errored: 0,
+            errors: vec![],
         };
         let s = ServeStats::from_report(&r);
         assert_eq!(s.throughput_rps, 0.0, "degenerate wall time reports 0, not inf");

@@ -1,0 +1,754 @@
+//! Load-adaptive bit allocation: the degradation controller that closes
+//! the loop between the calibration tier and the serving tier.
+//!
+//! The paper's contribution is a calibrated accuracy-vs-bits knob (the
+//! layer-wise allocation of Alg. 2 / Eq. 22). Under overload the serve
+//! tier previously only had admission control — throw work away
+//! (`--shed`). This module turns the knob instead: it holds a **ladder**
+//! of calibrated allocations ([`Rung`]: a bits vector, the drain
+//! capacity the engine sustains at those bits, and the estimated
+//! accuracy from the sweep's [`EvalCache`]), watches the virtual queue
+//! per time slice, and hot-swaps the served weight set **down** a rung
+//! under sustained overload and **back up** with hysteresis when load
+//! clears — trading accuracy for goodput instead of shedding.
+//!
+//! ## Virtual-time coupling
+//!
+//! The controller runs entirely on the open-loop admission ledger
+//! (`openloop::plan_arrivals`'s virtual single-server queue), extended
+//! with per-rung service times: [`plan_degrade`] replays the seeded
+//! arrival schedule against the virtual queue, evaluates the controller
+//! at every `slice_ms` boundary of **virtual** time, and fixes — before
+//! any real request is injected — the complete rung-switch trace
+//! ([`RungSwitch`]), the per-request rung assignment (`rung_of[id]` =
+//! the rung in effect at the request's arrival instant), and the shed
+//! set. All of it is a pure function of
+//! `(seed, rate, ladder, cap, policy, slice_ms, hysteresis)`; worker
+//! count, batch size, and machine speed never enter, so the switch
+//! trace and every prediction are **bitwise identical across
+//! `--workers 1/2/4`** (`rust/tests/serve_degrade.rs`).
+//!
+//! Enforcement is per-request: each admitted request is forwarded at its
+//! assigned rung's bits (workers regroup micro-batches by rung — see
+//! `server::worker`), and the backend serves each rung from a
+//! pre-encoded `Arc` weight-set snapshot, so a swap is an `Arc` clone
+//! and no request ever observes a torn allocation.
+//!
+//! ## Hysteresis
+//!
+//! A slice is **overloaded** when the virtual queue sheds in it or its
+//! boundary depth reaches `high_water · cap`; it is **clear** when it
+//! sheds nothing and depth is at or under `low_water · cap`.
+//! `downshift_slices` consecutive overloaded slices move the controller
+//! one rung down; `upshift_slices` consecutive clear slices move it one
+//! rung up (`--upshift-slices`). Both counters reset on any switch, so
+//! the controller never flaps faster than the configured dwell.
+
+use std::collections::VecDeque;
+
+use crate::coordinator::EvalCache;
+use crate::dataset::Dataset;
+use crate::io::Json;
+use crate::rng::Pcg32;
+use crate::{Error, Result};
+
+use super::openloop::{
+    assemble_open_report, run_planned, AdmissionPlan, OpenLoopConfig, OpenLoopReport,
+    DEFAULT_ADMISSION_CAP,
+};
+use super::queue::ShedPolicy;
+use super::worker::RungTable;
+use super::{Session, ServerConfig};
+
+/// One rung of the degradation ladder: a calibrated allocation and what
+/// the serving tier gets out of it. Rung 0 is the highest-fidelity
+/// (slowest-draining) allocation; deeper rungs trade accuracy for drain
+/// capacity.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Rung {
+    /// Display name (e.g. `"b8"`).
+    pub name: String,
+    /// Per-layer bit-widths (the sweep/allocator output).
+    pub bits: Vec<f32>,
+    /// Drain capacity (req/s) the virtual-time ledger assumes while this
+    /// rung is in effect.
+    pub drain_rps: f64,
+    /// Estimated accuracy of this allocation (from the sweep's
+    /// [`EvalCache`] or a ladder file) — what the per-slice report
+    /// charges each completion with.
+    pub est_accuracy: f64,
+}
+
+impl Rung {
+    /// A rung whose `est_accuracy` is measured through the session (and
+    /// memoized in `cache` — the same cache the sweep fills, so a ladder
+    /// built from sweep output costs no extra evaluations).
+    pub fn calibrated(
+        session: &Session,
+        cache: &EvalCache,
+        name: impl Into<String>,
+        bits: Vec<f32>,
+        drain_rps: f64,
+    ) -> Result<Rung> {
+        let est_accuracy = cache.get_or_eval(session, &bits)?;
+        Ok(Rung { name: name.into(), bits, drain_rps, est_accuracy })
+    }
+
+    /// Parse one ladder-file object:
+    /// `{"name": "b8", "bits": [8,8,8], "drain_rps": 800, "accuracy": 0.93}`
+    /// (`name` defaults to `"rung"`, `accuracy` to 0).
+    pub fn from_json(j: &Json) -> Result<Rung> {
+        let bits_arr = j
+            .req("bits")?
+            .as_arr()
+            .ok_or_else(|| Error::Model("ladder rung: \"bits\" must be an array".into()))?;
+        let bits: Vec<f32> = bits_arr
+            .iter()
+            .map(|b| {
+                b.as_f64()
+                    .map(|v| v as f32)
+                    .ok_or_else(|| Error::Model("ladder rung: non-numeric bit width".into()))
+            })
+            .collect::<Result<_>>()?;
+        let drain_rps = j
+            .req("drain_rps")?
+            .as_f64()
+            .ok_or_else(|| Error::Model("ladder rung: \"drain_rps\" must be a number".into()))?;
+        Ok(Rung {
+            name: j.get("name").and_then(Json::as_str).unwrap_or("rung").to_string(),
+            bits,
+            drain_rps,
+            est_accuracy: j.get("accuracy").and_then(Json::as_f64).unwrap_or(0.0),
+        })
+    }
+
+    /// The ladder-file shape [`Rung::from_json`] reads.
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("name", Json::Str(self.name.clone())),
+            ("bits", Json::arr_f64(&self.bits.iter().map(|&b| b as f64).collect::<Vec<_>>())),
+            ("drain_rps", Json::Num(self.drain_rps)),
+            ("accuracy", Json::Num(self.est_accuracy)),
+        ])
+    }
+}
+
+/// The degradation controller's knobs: the ladder plus hysteresis.
+#[derive(Clone, Debug)]
+pub struct DegradeConfig {
+    /// Rung 0 first (highest fidelity); deeper rungs must drain faster
+    /// to be worth switching to, but the controller does not require it.
+    pub ladder: Vec<Rung>,
+    /// Consecutive overloaded slices before shifting one rung down.
+    pub downshift_slices: usize,
+    /// Consecutive clear slices before shifting one rung back up
+    /// (`--upshift-slices`; larger = more conservative recovery).
+    pub upshift_slices: usize,
+    /// Overload depth watermark as a fraction of the admission queue cap.
+    pub high_water: f64,
+    /// All-clear depth watermark as a fraction of the admission queue cap.
+    pub low_water: f64,
+}
+
+impl DegradeConfig {
+    /// Default hysteresis: downshift after 2 overloaded slices, upshift
+    /// after 3 clear ones, watermarks at 75% / 25% of the queue cap.
+    pub fn new(ladder: Vec<Rung>) -> DegradeConfig {
+        DegradeConfig {
+            ladder,
+            downshift_slices: 2,
+            upshift_slices: 3,
+            high_water: 0.75,
+            low_water: 0.25,
+        }
+    }
+
+    /// Reject malformed ladders before any engine state exists: every
+    /// rung needs `nwl` bit-widths and a positive drain capacity, the
+    /// dwell counters must be ≥ 1, and the watermarks must satisfy
+    /// `0 ≤ low ≤ high ≤ 1`.
+    pub fn validate(&self, nwl: usize) -> Result<()> {
+        if self.ladder.is_empty() {
+            return Err(Error::Model("degrade ladder must have at least one rung".into()));
+        }
+        if self.ladder.len() > u8::MAX as usize {
+            return Err(Error::Model("degrade ladder longer than 255 rungs".into()));
+        }
+        for (i, r) in self.ladder.iter().enumerate() {
+            if r.bits.len() != nwl {
+                return Err(Error::Model(format!(
+                    "ladder rung {i} ({}) has {} bit-widths, model has {nwl} weighted layers",
+                    r.name,
+                    r.bits.len()
+                )));
+            }
+            if !(r.drain_rps > 0.0) || !r.drain_rps.is_finite() {
+                return Err(Error::Model(format!(
+                    "ladder rung {i} ({}) wants a positive finite drain_rps, got {}",
+                    r.name, r.drain_rps
+                )));
+            }
+        }
+        if self.downshift_slices == 0 || self.upshift_slices == 0 {
+            return Err(Error::Model("degrade dwell counters must be ≥ 1 slice".into()));
+        }
+        if !(0.0..=1.0).contains(&self.low_water)
+            || !(0.0..=1.0).contains(&self.high_water)
+            || self.low_water > self.high_water
+        {
+            return Err(Error::Model(format!(
+                "degrade watermarks want 0 ≤ low ≤ high ≤ 1, got low={} high={}",
+                self.low_water, self.high_water
+            )));
+        }
+        Ok(())
+    }
+}
+
+/// One controller decision: at virtual instant `at_us` (always a slice
+/// boundary), the served rung moved `from → to`.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct RungSwitch {
+    /// Switch instant, µs of virtual time from the run epoch — by
+    /// construction a multiple of the slice width.
+    pub at_us: u64,
+    /// Index of the slice whose boundary triggered the switch (the
+    /// switch takes effect at the **start** of this slice).
+    pub slice: usize,
+    pub from: usize,
+    pub to: usize,
+}
+
+/// The deterministic product of [`plan_degrade`]: the admission ledger's
+/// plan plus the complete controller trace, fixed before the run starts.
+#[derive(Clone, Debug, PartialEq)]
+pub struct DegradePlan {
+    /// Arrival schedule + admission decisions (same shape the plain
+    /// open-loop mode uses).
+    pub admission: AdmissionPlan,
+    /// Rung in effect at each offered request's arrival instant — the
+    /// bits the engine serves that request with. An arrival landing
+    /// exactly on a switch boundary belongs to the **new** rung (the
+    /// boundary is processed before the arrival; regression-tested).
+    pub rung_of: Vec<u8>,
+    /// Every rung switch, in virtual-time order.
+    pub switches: Vec<RungSwitch>,
+    /// Slice width the controller evaluated at, µs.
+    pub slice_us: u64,
+}
+
+/// Replay the seeded arrival schedule against the virtual single-server
+/// queue with **per-rung service times** and the slice-boundary
+/// controller, recording every admission decision, every rung switch,
+/// and each request's rung.
+///
+/// The virtual server drains at `1e6 / ladder[rung].drain_rps` µs per
+/// request, where `rung` is the controller rung at the instant the
+/// service *starts* (a request mid-service when the controller switches
+/// keeps its service time, mirroring a real forward already in flight).
+/// All arithmetic is a fixed f64 sequence over the PCG32 stream —
+/// bitwise reproducible per tuple, scheduling-independent by
+/// construction (same argument as `plan_arrivals`).
+pub fn plan_degrade(
+    offered: usize,
+    rate_rps: f64,
+    queue_cap: usize,
+    policy: ShedPolicy,
+    seed: u64,
+    slice_ms: u64,
+    dc: &DegradeConfig,
+) -> DegradePlan {
+    assert!(rate_rps > 0.0, "offered rate must be positive");
+    assert!(!dc.ladder.is_empty(), "degrade ladder must not be empty");
+    let queue_cap = queue_cap.max(1);
+    let nrungs = dc.ladder.len();
+    let service_us: Vec<f64> = dc.ladder.iter().map(|r| 1e6 / r.drain_rps).collect();
+    let high_mark = ((dc.high_water * queue_cap as f64).ceil() as usize).max(1);
+    let low_mark = (dc.low_water * queue_cap as f64).floor() as usize;
+    let slice_us = slice_ms.max(1) * 1000;
+    let mut rng = Pcg32::new(seed);
+    let gap_mean_us = 1e6 / rate_rps;
+
+    let mut arrivals_us = Vec::with_capacity(offered);
+    let mut admitted = vec![true; offered];
+    let mut shed_ids = Vec::new();
+    let (mut shed_rejected, mut shed_dropped) = (0usize, 0usize);
+    let mut rung_of = Vec::with_capacity(offered);
+    let mut switches = Vec::new();
+
+    // virtual server state (see plan_arrivals) + controller state
+    let mut waiting: VecDeque<usize> = VecDeque::new();
+    let mut free_at = 0.0f64;
+    let mut t = 0.0f64;
+    let mut rung = 0usize;
+    let (mut over, mut clear) = (0usize, 0usize);
+    let mut sheds_in_slice = 0usize;
+    let mut next_boundary = slice_us;
+    let mut slice_idx = 0usize;
+
+    // serve waiting heads whose virtual service can start by `until`,
+    // at the service time of the rung current when each start happens
+    fn drain_until(
+        waiting: &mut VecDeque<usize>,
+        free_at: &mut f64,
+        arrivals_us: &[u64],
+        service_us: f64,
+        until: f64,
+    ) {
+        while let Some(&head) = waiting.front() {
+            let start = free_at.max(arrivals_us[head] as f64);
+            if start > until {
+                break;
+            }
+            waiting.pop_front();
+            *free_at = start + service_us;
+        }
+    }
+
+    for i in 0..offered {
+        t += rng.exponential(gap_mean_us);
+        let t_us = t.round() as u64;
+        // every slice boundary up to this arrival is a controller step;
+        // a boundary coinciding with the arrival instant runs *first*,
+        // so the arrival lands under the post-switch rung
+        while next_boundary <= t_us {
+            drain_until(&mut waiting, &mut free_at, &arrivals_us, service_us[rung], next_boundary as f64);
+            let depth = waiting.len();
+            let overloaded = depth >= high_mark || sheds_in_slice > 0;
+            let is_clear = depth <= low_mark && sheds_in_slice == 0;
+            if overloaded {
+                over += 1;
+                clear = 0;
+            } else if is_clear {
+                clear += 1;
+                over = 0;
+            } else {
+                over = 0;
+                clear = 0;
+            }
+            if over >= dc.downshift_slices && rung + 1 < nrungs {
+                switches.push(RungSwitch {
+                    at_us: next_boundary,
+                    slice: slice_idx + 1,
+                    from: rung,
+                    to: rung + 1,
+                });
+                rung += 1;
+                over = 0;
+                clear = 0;
+            } else if clear >= dc.upshift_slices && rung > 0 {
+                switches.push(RungSwitch {
+                    at_us: next_boundary,
+                    slice: slice_idx + 1,
+                    from: rung,
+                    to: rung - 1,
+                });
+                rung -= 1;
+                over = 0;
+                clear = 0;
+            }
+            sheds_in_slice = 0;
+            slice_idx += 1;
+            next_boundary += slice_us;
+        }
+        arrivals_us.push(t_us);
+        drain_until(&mut waiting, &mut free_at, &arrivals_us, service_us[rung], t);
+        rung_of.push(rung as u8);
+        if waiting.len() >= queue_cap {
+            match policy {
+                ShedPolicy::RejectNew => {
+                    admitted[i] = false;
+                    shed_ids.push(i);
+                    shed_rejected += 1;
+                }
+                ShedPolicy::DropOldest => {
+                    let old = waiting.pop_front().expect("full virtual queue has a head");
+                    admitted[old] = false;
+                    shed_ids.push(old);
+                    shed_dropped += 1;
+                    waiting.push_back(i);
+                }
+            }
+            sheds_in_slice += 1;
+        } else {
+            waiting.push_back(i);
+        }
+    }
+    DegradePlan {
+        admission: AdmissionPlan { arrivals_us, admitted, shed_ids, shed_rejected, shed_dropped },
+        rung_of,
+        switches,
+        slice_us,
+    }
+}
+
+/// One time slice of a degrade run: completions attributed to the rung
+/// each request was *served at*, and the accuracy the ladder estimates
+/// for the slice's mix.
+#[derive(Clone, Debug, PartialEq)]
+pub struct RungSlice {
+    /// Slice start, ms since the run epoch.
+    pub start_ms: u64,
+    /// `per_rung[r]` = completions in this slice served at rung `r`.
+    pub per_rung: Vec<usize>,
+    /// Ladder-estimated accuracy of this slice's completion mix
+    /// (`Σ per_rung[r] · acc[r] / Σ per_rung`, 0 when the slice is
+    /// empty — never NaN).
+    pub est_accuracy: f64,
+}
+
+impl RungSlice {
+    /// Total completions in this slice.
+    pub fn completions(&self) -> usize {
+        self.per_rung.iter().sum()
+    }
+}
+
+/// Bucket successful completions (`(request id, done_us)`) into fixed
+/// `slice_ms` windows, attributing each to `rung_of[id]` — the rung the
+/// request was actually served at, **not** the rung current when it
+/// completed. A request admitted just before a switch but drained just
+/// after it is therefore charged to its own (pre-switch) rung, which is
+/// what keeps per-slice estimated accuracy honest at switch boundaries
+/// (regression-tested in `rust/tests/serve_degrade.rs`).
+pub fn rung_slice_series(
+    slice_ms: u64,
+    ladder: &[Rung],
+    completions: &[(usize, u64)],
+    rung_of: &[u8],
+) -> Vec<RungSlice> {
+    let slice_ms = slice_ms.max(1);
+    let slice_us = slice_ms * 1000;
+    let Some(last_us) = completions.iter().map(|&(_, t)| t).max() else {
+        return Vec::new();
+    };
+    let nslices = (last_us / slice_us + 1) as usize;
+    let mut out: Vec<RungSlice> = (0..nslices)
+        .map(|i| RungSlice {
+            start_ms: i as u64 * slice_ms,
+            per_rung: vec![0; ladder.len()],
+            est_accuracy: 0.0,
+        })
+        .collect();
+    for &(id, done) in completions {
+        let s = &mut out[(done / slice_us) as usize];
+        s.per_rung[rung_of[id] as usize] += 1;
+    }
+    for s in out.iter_mut() {
+        let total = s.completions();
+        if total > 0 {
+            s.est_accuracy = s
+                .per_rung
+                .iter()
+                .zip(ladder)
+                .map(|(&c, r)| c as f64 * r.est_accuracy)
+                .sum::<f64>()
+                / total as f64;
+        }
+    }
+    out
+}
+
+/// Full report of one degrade-mode run: the open-loop report (goodput,
+/// shed, error, latency accounting over the admitted set) plus the
+/// controller trace and the per-rung / per-slice attribution.
+#[derive(Clone, Debug)]
+pub struct DegradeReport {
+    /// The run's open-loop accounting (`accepted + shed + errored ==
+    /// offered`; predictions per offered id with `-1` shed / `-2` error
+    /// sentinels).
+    pub open: OpenLoopReport,
+    /// The ladder served (rung 0 = highest fidelity).
+    pub ladder: Vec<Rung>,
+    /// Every rung switch, in virtual-time order — bitwise identical at
+    /// any worker count.
+    pub switches: Vec<RungSwitch>,
+    /// Rung each offered request was assigned at admission.
+    pub rung_of: Vec<u8>,
+    /// `rung_served[r]` = requests successfully served at rung `r`.
+    pub rung_served: Vec<usize>,
+    /// Per-slice rung occupancy + estimated accuracy.
+    pub slices: Vec<RungSlice>,
+    /// Ladder-estimated accuracy over all served requests (0 when none).
+    pub est_accuracy: f64,
+}
+
+impl DegradeReport {
+    /// One `serve_degrade` row of `BENCH_hotpath.json` (schema in
+    /// BENCH.md): run-level accounting, the switch trace, the ladder
+    /// with per-rung served counts, and the per-slice series.
+    pub fn to_json(&self) -> Json {
+        let switches: Vec<Json> = self
+            .switches
+            .iter()
+            .map(|s| {
+                Json::obj(vec![
+                    ("at_us", Json::Num(s.at_us as f64)),
+                    ("slice", Json::Num(s.slice as f64)),
+                    ("from", Json::Num(s.from as f64)),
+                    ("to", Json::Num(s.to as f64)),
+                ])
+            })
+            .collect();
+        let ladder: Vec<Json> = self
+            .ladder
+            .iter()
+            .zip(&self.rung_served)
+            .map(|(r, &served)| {
+                Json::obj(vec![
+                    ("name", Json::Str(r.name.clone())),
+                    ("drain_rps", Json::Num(r.drain_rps)),
+                    ("accuracy", Json::Num(r.est_accuracy)),
+                    ("served", Json::Num(served as f64)),
+                ])
+            })
+            .collect();
+        let slices: Vec<Json> = self
+            .slices
+            .iter()
+            .map(|s| {
+                Json::obj(vec![
+                    ("start_ms", Json::Num(s.start_ms as f64)),
+                    (
+                        "per_rung",
+                        Json::arr_f64(
+                            &s.per_rung.iter().map(|&c| c as f64).collect::<Vec<_>>(),
+                        ),
+                    ),
+                    ("est_accuracy", Json::Num(s.est_accuracy)),
+                ])
+            })
+            .collect();
+        Json::obj(vec![
+            ("rate_rps", Json::Num(self.open.offered_rate_rps)),
+            ("offered", Json::Num(self.open.offered as f64)),
+            ("accepted", Json::Num(self.open.accepted as f64)),
+            ("shed", Json::Num(self.open.shed_total() as f64)),
+            ("errored", Json::Num(self.open.errored as f64)),
+            ("live_shed", Json::Num(self.open.live_shed as f64)),
+            ("goodput_rps", Json::Num(self.open.goodput_rps)),
+            ("est_accuracy", Json::Num(self.est_accuracy)),
+            ("measured_accuracy", Json::Num(self.open.serve.accuracy())),
+            ("workers", Json::Num(self.open.serve.workers as f64)),
+            ("slice_ms", Json::Num(self.open.slice_ms as f64)),
+            ("switches", Json::Arr(switches)),
+            ("ladder", Json::Arr(ladder)),
+            ("slices", Json::Arr(slices)),
+        ])
+    }
+}
+
+/// Run the serve engine in degrade mode: plan the rung-switch trace and
+/// admissions in virtual time ([`plan_degrade`]), pre-encode every
+/// rung's weight set, then pace the admitted requests onto the real
+/// queue — each served at its assigned rung's bits.
+///
+/// `ol.drain_rps` is ignored: the ladder's per-rung `drain_rps` values
+/// *are* the capacity model (the report's `drain_rps` field carries
+/// rung 0's). Everything else (`rate_rps`, `requests`, `seed`, `shed`,
+/// `slice_ms`, `live_shed`) keeps its open-loop meaning.
+pub fn run_degrade(
+    session: &Session,
+    data: &Dataset,
+    cfg: &ServerConfig,
+    ol: &OpenLoopConfig,
+    dc: &DegradeConfig,
+) -> Result<DegradeReport> {
+    dc.validate(session.artifacts.manifest.num_weighted_layers)?;
+    if !(ol.rate_rps > 0.0) {
+        return Err(Error::Model(format!(
+            "degrade mode wants an offered rate > 0 req/s, got {}",
+            ol.rate_rps
+        )));
+    }
+    // same fixed admission cap rule as the plain open-loop mode: an
+    // explicit --queue-cap is honored, the default never inherits the
+    // engine shape
+    let admission_cap = if cfg.queue_cap > 0 { cfg.queue_cap } else { DEFAULT_ADMISSION_CAP };
+    let slice_ms = ol.effective_slice_ms();
+    let plan =
+        plan_degrade(ol.requests, ol.rate_rps, admission_cap, ol.shed, ol.seed, slice_ms, dc);
+    // pre-encode every rung's weight set before the clock starts: the
+    // swap the workers perform mid-run is then an Arc clone out of the
+    // backend's cache, never an encode — and each rung's bits vector is
+    // validated here, so workers cannot fail on a malformed rung mid-run
+    let warm = data.batch(0, 1)?;
+    for rung in &dc.ladder {
+        session.qforward_once(&warm, &rung.bits)?;
+    }
+    let rungs = RungTable {
+        rung_of: plan.rung_of.clone(),
+        bits: dc.ladder.iter().map(|r| r.bits.clone()).collect(),
+    };
+    let run = run_planned(
+        session,
+        data,
+        &dc.ladder[0].bits,
+        cfg,
+        &plan.admission,
+        ol,
+        admission_cap,
+        Some(rungs),
+    )?;
+    let open = assemble_open_report(ol, &plan.admission, dc.ladder[0].drain_rps, &run);
+    let mut rung_served = vec![0usize; dc.ladder.len()];
+    for &(id, _, _) in &run.completions {
+        rung_served[plan.rung_of[id] as usize] += 1;
+    }
+    let served: usize = rung_served.iter().sum();
+    let est_accuracy = if served > 0 {
+        rung_served
+            .iter()
+            .zip(&dc.ladder)
+            .map(|(&c, r)| c as f64 * r.est_accuracy)
+            .sum::<f64>()
+            / served as f64
+    } else {
+        0.0
+    };
+    let done: Vec<(usize, u64)> = run.completions.iter().map(|&(id, t, _)| (id, t)).collect();
+    Ok(DegradeReport {
+        open,
+        ladder: dc.ladder.clone(),
+        switches: plan.switches,
+        rung_of: plan.rung_of,
+        rung_served,
+        slices: rung_slice_series(slice_ms, &dc.ladder, &done, &plan.rung_of),
+        est_accuracy,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ladder(drains: &[f64]) -> Vec<Rung> {
+        drains
+            .iter()
+            .enumerate()
+            .map(|(i, &d)| Rung {
+                name: format!("r{i}"),
+                bits: vec![8.0 - 2.0 * i as f32, 8.0 - 2.0 * i as f32],
+                drain_rps: d,
+                est_accuracy: 0.9 - 0.1 * i as f64,
+            })
+            .collect()
+    }
+
+    #[test]
+    fn plan_is_pure_function_of_its_tuple() {
+        let dc = DegradeConfig::new(ladder(&[800.0, 1200.0, 1800.0]));
+        let mk = || plan_degrade(300, 2400.0, 8, ShedPolicy::RejectNew, 7, 20, &dc);
+        let a = mk();
+        assert_eq!(a, mk(), "same tuple → bitwise-identical plan");
+        assert_eq!(a.rung_of.len(), 300);
+        assert_eq!(a.admission.accepted() + a.admission.shed_ids.len(), 300);
+        // the schedule matches plan_arrivals' (same PCG32 stream)
+        let base = super::super::plan_arrivals(300, 2400.0, 800.0, 8, ShedPolicy::RejectNew, 7);
+        assert_eq!(a.admission.arrivals_us, base.arrivals_us);
+    }
+
+    #[test]
+    fn controller_downshifts_under_overload_and_sheds_less_than_reject() {
+        // 3x the rung-0 capacity: the controller must walk down the
+        // ladder, and the faster drains must admit strictly more than a
+        // fixed-capacity reject ledger (the degrade-vs-shed claim, at
+        // the ledger level)
+        let dc = DegradeConfig::new(ladder(&[800.0, 1200.0, 1800.0]));
+        let p = plan_degrade(300, 2400.0, 8, ShedPolicy::RejectNew, 7, 20, &dc);
+        assert!(!p.switches.is_empty(), "sustained overload must downshift");
+        assert_eq!(p.switches[0].from, 0);
+        assert_eq!(p.switches[0].to, 1, "first move is one rung down");
+        for s in &p.switches {
+            assert_eq!(s.at_us % p.slice_us, 0, "switches land on slice boundaries");
+            assert_eq!((s.from as i64 - s.to as i64).abs(), 1, "one rung at a time");
+        }
+        let deepest = p.rung_of.iter().copied().max().unwrap();
+        assert_eq!(deepest, 2, "3x overload reaches the deepest rung");
+        let base = super::super::plan_arrivals(300, 2400.0, 800.0, 8, ShedPolicy::RejectNew, 7);
+        assert!(
+            p.admission.accepted() > base.accepted(),
+            "degrade admits {} vs reject {} — must be strictly more",
+            p.admission.accepted(),
+            base.accepted()
+        );
+    }
+
+    #[test]
+    fn hysteresis_bounds_oscillation_and_recovers_when_load_clears() {
+        // rung 1 drains far above the offered rate: after a downshift
+        // the queue clears, the controller climbs back up after
+        // `upshift_slices` clear slices, overloads again, and repeats —
+        // but never flaps faster than the dwell counters allow
+        let mut dc = DegradeConfig::new(ladder(&[1000.0, 8000.0]));
+        dc.downshift_slices = 2;
+        dc.upshift_slices = 2;
+        let p = plan_degrade(400, 1500.0, 8, ShedPolicy::RejectNew, 7, 20, &dc);
+        let downs = p.switches.iter().filter(|s| s.to > s.from).count();
+        let ups = p.switches.iter().filter(|s| s.to < s.from).count();
+        assert!(downs >= 2 && ups >= 1, "{downs} down / {ups} up: must oscillate");
+        // consecutive switches are at least downshift/upshift slices apart
+        for w in p.switches.windows(2) {
+            let gap = (w[1].at_us - w[0].at_us) / p.slice_us;
+            assert!(gap >= 2, "switches {w:?} closer than the dwell");
+        }
+    }
+
+    #[test]
+    fn underload_never_switches() {
+        let dc = DegradeConfig::new(ladder(&[800.0, 1200.0]));
+        let p = plan_degrade(300, 400.0, 8, ShedPolicy::RejectNew, 7, 20, &dc);
+        assert!(p.switches.is_empty());
+        assert!(p.rung_of.iter().all(|&r| r == 0), "everything serves at full fidelity");
+        assert!(p.admission.shed_ids.is_empty());
+    }
+
+    #[test]
+    fn rung_slice_series_attributes_completions_to_the_serving_rung() {
+        let lad = ladder(&[800.0, 1600.0]);
+        // ids 0,1 on rung 0; ids 2,3 on rung 1 (switch happened between)
+        let rung_of = [0u8, 0, 1, 1];
+        // id 1 was served at rung 0 but *completes* after the switch, in
+        // slice 1 — it must still be charged to rung 0
+        let completions =
+            [(0usize, 5_000u64), (1, 25_000), (2, 25_000), (3, 45_000)];
+        let s = rung_slice_series(20, &lad, &completions, &rung_of);
+        assert_eq!(s.len(), 3);
+        assert_eq!(s[0].per_rung, vec![1, 0]);
+        assert_eq!(s[1].per_rung, vec![1, 1], "late rung-0 completion keeps its rung");
+        assert!((s[1].est_accuracy - 0.85).abs() < 1e-12, "mix of 0.9 and 0.8");
+        assert_eq!(s[2].per_rung, vec![0, 1]);
+        assert_eq!(s[2].est_accuracy, 0.8);
+        assert!(rung_slice_series(20, &lad, &[], &rung_of).is_empty());
+    }
+
+    #[test]
+    fn config_validation_rejects_malformed_ladders() {
+        let ok = DegradeConfig::new(ladder(&[800.0, 1600.0]));
+        assert!(ok.validate(2).is_ok());
+        assert!(ok.validate(3).is_err(), "bits arity must match the model");
+        assert!(DegradeConfig::new(vec![]).validate(2).is_err());
+        let mut bad = DegradeConfig::new(ladder(&[800.0, 0.0]));
+        assert!(bad.validate(2).is_err(), "non-positive drain");
+        bad = DegradeConfig::new(ladder(&[800.0]));
+        bad.upshift_slices = 0;
+        assert!(bad.validate(2).is_err(), "zero dwell");
+        bad = DegradeConfig::new(ladder(&[800.0]));
+        bad.low_water = 0.9;
+        bad.high_water = 0.5;
+        assert!(bad.validate(2).is_err(), "inverted watermarks");
+    }
+
+    #[test]
+    fn rung_json_round_trip() {
+        let r = Rung {
+            name: "b6".into(),
+            bits: vec![6.0, 6.0, 4.0],
+            drain_rps: 1200.0,
+            est_accuracy: 0.87,
+        };
+        let back = Rung::from_json(&r.to_json()).unwrap();
+        assert_eq!(back, r);
+        assert!(Rung::from_json(&Json::obj(vec![("name", Json::Str("x".into()))])).is_err());
+    }
+}

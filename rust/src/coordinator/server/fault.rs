@@ -1,0 +1,190 @@
+//! Seeded fault injection for the serve engine — the harness that proves
+//! the engine's panic-safety story instead of asserting it.
+//!
+//! A [`FaultPlan`] names concrete requests (by deterministic request id,
+//! never by wall clock or thread identity) at which the engine must
+//! misbehave:
+//!
+//! * **worker panic** — the forward answering that request panics inside
+//!   the worker body. The `catch_unwind` guard in
+//!   `server::worker` converts it into a per-request *error outcome*
+//!   (prediction sentinel `-2`, an entry in
+//!   [`ServeReport::errors`](super::ServeReport)); the worker keeps
+//!   serving and the run completes.
+//! * **poisoned batch** — the batch carrying that request fails instead
+//!   of forwarding (a stand-in for corrupt input / poisoned state); same
+//!   per-request error accounting.
+//! * **slow worker** — the batch carrying that request stalls for a
+//!   configured number of milliseconds before forwarding. No error: the
+//!   fault only stretches sojourn tails (and, in live-shed mode, can
+//!   force real queue-full sheds).
+//!
+//! Keying faults on request ids keeps the *accounting* deterministic at
+//! any `--workers`/`--batch`: whichever worker happens to pop the doomed
+//! request, the same id errors, so
+//! `accepted + shed + errored == offered` closes with the same numbers
+//! (`rust/tests/serve_degrade.rs`). The CLI reads a plan from `--fault`
+//! or the `ADAQ_FAULT` environment variable (see [`FaultPlan::parse`]).
+
+use crate::{Error, Result};
+
+/// Which requests the engine must fail on, and how. `Default` is the
+/// empty plan (no faults).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct FaultPlan {
+    /// Panic inside the worker body while answering this request id.
+    pub panic_at: Option<usize>,
+    /// Fail (poison) the batch forward answering this request id.
+    pub poison_at: Option<usize>,
+    /// Stall the worker for `.1` ms before forwarding the batch that
+    /// carries request id `.0`.
+    pub stall: Option<(usize, u64)>,
+}
+
+impl FaultPlan {
+    /// Whether this plan injects nothing.
+    pub fn is_empty(&self) -> bool {
+        self.panic_at.is_none() && self.poison_at.is_none() && self.stall.is_none()
+    }
+
+    /// Does serving `id` panic?
+    pub fn panics_at(&self, id: usize) -> bool {
+        self.panic_at == Some(id)
+    }
+
+    /// Is the batch carrying `id` poisoned?
+    pub fn poisons(&self, id: usize) -> bool {
+        self.poison_at == Some(id)
+    }
+
+    /// Requests that must fail are served in a batch of their own, so the
+    /// error outcome lands on exactly the targeted id — never on innocent
+    /// batch-mates (which would make `errored` depend on batch
+    /// composition and break the worker-count invariance of the
+    /// accounting).
+    pub(crate) fn isolates(&self, id: usize) -> bool {
+        self.panics_at(id) || self.poisons(id)
+    }
+
+    /// Stall duration (ms) owed before forwarding `id`, if any.
+    pub fn stall_ms(&self, id: usize) -> Option<u64> {
+        match self.stall {
+            Some((sid, ms)) if sid == id => Some(ms),
+            _ => None,
+        }
+    }
+
+    /// Parse a fault spec: comma-separated clauses of
+    ///
+    /// * `worker_panic` (alias `panic`) or `worker_panic@K` — panic while
+    ///   serving request `K` (default 0);
+    /// * `poison` or `poison@K` — poisoned batch at request `K`;
+    /// * `slow` or `slow@K:MS` — stall `MS` ms (default 50) before
+    ///   forwarding request `K`.
+    ///
+    /// `""` parses to the empty plan.
+    pub fn parse(spec: &str) -> Result<FaultPlan> {
+        let mut plan = FaultPlan::default();
+        for clause in spec.split(',').map(str::trim).filter(|c| !c.is_empty()) {
+            let (kind, arg) = match clause.split_once('@') {
+                Some((k, a)) => (k, Some(a)),
+                None => (clause, None),
+            };
+            let bad = |msg: String| Error::Cli(format!("fault spec {clause:?}: {msg}"));
+            let id_of = |a: Option<&str>| -> Result<usize> {
+                match a {
+                    None => Ok(0),
+                    Some(s) => s
+                        .parse::<usize>()
+                        .map_err(|e| bad(format!("bad request id {s:?} ({e})"))),
+                }
+            };
+            match kind {
+                "worker_panic" | "panic" => plan.panic_at = Some(id_of(arg)?),
+                "poison" => plan.poison_at = Some(id_of(arg)?),
+                "slow" => {
+                    let (id, ms) = match arg {
+                        None => (0, 50),
+                        Some(a) => match a.split_once(':') {
+                            Some((id, ms)) => (
+                                id.parse::<usize>()
+                                    .map_err(|e| bad(format!("bad request id {id:?} ({e})")))?,
+                                ms.parse::<u64>()
+                                    .map_err(|e| bad(format!("bad stall ms {ms:?} ({e})")))?,
+                            ),
+                            None => (id_of(Some(a))?, 50),
+                        },
+                    };
+                    plan.stall = Some((id, ms));
+                }
+                other => {
+                    return Err(Error::Cli(format!(
+                        "unknown fault kind {other:?} (worker_panic[@K] | poison[@K] | slow[@K:MS])"
+                    )))
+                }
+            }
+        }
+        Ok(plan)
+    }
+
+    /// The plan named by the `ADAQ_FAULT` environment variable (empty
+    /// plan when the variable is unset or empty).
+    pub fn from_env() -> Result<FaultPlan> {
+        match std::env::var("ADAQ_FAULT") {
+            Ok(spec) => FaultPlan::parse(&spec),
+            Err(_) => Ok(FaultPlan::default()),
+        }
+    }
+
+    /// Human-readable one-liner for reports (`"-"` for the empty plan).
+    pub fn describe(&self) -> String {
+        if self.is_empty() {
+            return "-".into();
+        }
+        let mut parts = Vec::new();
+        if let Some(id) = self.panic_at {
+            parts.push(format!("worker_panic@{id}"));
+        }
+        if let Some(id) = self.poison_at {
+            parts.push(format!("poison@{id}"));
+        }
+        if let Some((id, ms)) = self.stall {
+            parts.push(format!("slow@{id}:{ms}"));
+        }
+        parts.join(",")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_clauses_and_defaults() {
+        assert!(FaultPlan::parse("").unwrap().is_empty());
+        let p = FaultPlan::parse("worker_panic").unwrap();
+        assert_eq!(p.panic_at, Some(0));
+        let p = FaultPlan::parse("worker_panic@7,poison@3,slow@5:120").unwrap();
+        assert_eq!(p.panic_at, Some(7));
+        assert_eq!(p.poison_at, Some(3));
+        assert_eq!(p.stall, Some((5, 120)));
+        assert_eq!(p.describe(), "worker_panic@7,poison@3,slow@5:120");
+        assert_eq!(FaultPlan::parse("panic@2").unwrap().panic_at, Some(2));
+        assert_eq!(FaultPlan::parse("slow").unwrap().stall, Some((0, 50)));
+        assert_eq!(FaultPlan::parse("slow@9").unwrap().stall, Some((9, 50)));
+        assert!(FaultPlan::parse("explode").is_err());
+        assert!(FaultPlan::parse("worker_panic@x").is_err());
+        assert!(FaultPlan::parse("slow@1:z").is_err());
+    }
+
+    #[test]
+    fn targeting_predicates() {
+        let p = FaultPlan::parse("worker_panic@4,slow@2:10").unwrap();
+        assert!(p.panics_at(4) && !p.panics_at(5));
+        assert!(p.isolates(4) && !p.isolates(2), "stalls do not need isolation");
+        assert_eq!(p.stall_ms(2), Some(10));
+        assert_eq!(p.stall_ms(4), None);
+        assert!(!p.poisons(4));
+        assert_eq!(FaultPlan::default().describe(), "-");
+    }
+}

@@ -38,12 +38,30 @@
 //! determinism contract, but saturation and load shedding become
 //! measurable (latency-vs-offered-load curves, shed accounting,
 //! time-sliced queue-depth series).
+//!
+//! Two robustness layers sit on top of the open-loop harness:
+//!
+//! * [`degrade`] — instead of shedding under overload, walk down a
+//!   ladder of calibrated bit allocations (degrade quality, keep
+//!   goodput) with hysteresis, planned on the same virtual-time ledger
+//!   so the rung-switch trace is scheduling-independent.
+//! * [`FaultPlan`] — seeded fault injection (worker panic, poisoned
+//!   batch, slow worker) proving the engine's panic-safety: faults
+//!   become per-request error outcomes ([`ServeReport::errors`]), the
+//!   run always completes, and `accepted + shed + errored == offered`.
 
+pub mod degrade;
+mod fault;
 pub mod openloop;
 mod queue;
 mod stats;
 mod worker;
 
+pub use degrade::{
+    plan_degrade, run_degrade, rung_slice_series, DegradeConfig, DegradePlan, DegradeReport, Rung,
+    RungSlice, RungSwitch,
+};
+pub use fault::FaultPlan;
 pub use openloop::{
     plan_arrivals, run_open_loop, run_rate_ladder, AdmissionPlan, LoadCurve, OpenLoopConfig,
     OpenLoopReport,
@@ -73,13 +91,22 @@ pub struct ServerConfig {
     pub deadline_us: u64,
     /// Bound on pending requests; 0 = auto (`2·workers·batch`, min 4).
     pub queue_cap: usize,
+    /// Seeded fault injection ([`FaultPlan::default`] = none) — the
+    /// robustness harness behind `--fault` / `ADAQ_FAULT`.
+    pub fault: FaultPlan,
 }
 
 impl ServerConfig {
     /// `workers = 1, batch = 1`: the degenerate single-threaded engine
     /// `serve_loop` delegates to.
     pub fn sequential() -> ServerConfig {
-        ServerConfig { workers: 1, batch: 1, deadline_us: 0, queue_cap: 0 }
+        ServerConfig {
+            workers: 1,
+            batch: 1,
+            deadline_us: 0,
+            queue_cap: 0,
+            fault: FaultPlan::default(),
+        }
     }
 
     pub(crate) fn effective_queue_cap(&self) -> usize {
@@ -119,8 +146,12 @@ pub fn run_server(
                 }
             }
         })?;
-    let served: usize = tallies.iter().map(|t| t.results.len()).sum();
-    debug_assert_eq!(served, n, "every accepted request must be served exactly once");
+    let drained: usize = tallies.iter().map(|t| t.results.len() + t.errors.len()).sum();
+    debug_assert_eq!(
+        drained,
+        n,
+        "every accepted request must drain (answer or error) exactly once"
+    );
     Ok(stats::merge_report(
         tallies,
         n,
@@ -184,6 +215,8 @@ fn start_engine(
         // (bitwise identical either way; the cap only changes scheduling)
         gemm_cap: if cfg.workers > 1 { (threads / cfg.workers).max(1) } else { 0 },
         epoch: Instant::now(),
+        rungs: None,
+        fault: cfg.fault,
     };
     Ok((queue, params, timer))
 }
@@ -193,6 +226,13 @@ fn start_engine(
 /// returns, join, and surface the first worker error. Both engines run
 /// through here so shutdown, worker-panic, and error propagation cannot
 /// diverge between the closed-loop and open-loop drivers.
+///
+/// Worker panics are handled twice over: `run_worker`'s own
+/// `catch_unwind` converts them into `Err` (closing the queue first),
+/// and should a panic ever escape that guard anyway, the join below
+/// converts it into a contextual [`Error::Other`] instead of
+/// propagating the unwind into the engine — callers always get a
+/// `Result`, never a second panic.
 #[allow(clippy::too_many_arguments)]
 fn drive_engine<F>(
     session: &Session,
@@ -209,11 +249,27 @@ where
 {
     let outputs: Vec<Result<stats::WorkerTally>> = std::thread::scope(|s| {
         let handles: Vec<_> = (0..workers)
-            .map(|_| s.spawn(|| worker::run_worker(session, data, bits, queue, params)))
+            .map(|i| (i, s.spawn(|| worker::run_worker(session, data, bits, queue, params))))
             .collect();
         generator(queue);
         queue.close();
-        handles.into_iter().map(|h| h.join().expect("serve worker panicked")).collect()
+        handles
+            .into_iter()
+            .map(|(i, h)| {
+                h.join().unwrap_or_else(|payload| {
+                    // a panic that escaped run_worker's guard: the queue
+                    // may still be open — close it so surviving workers
+                    // and any re-entrant generator are released
+                    queue.close();
+                    let msg = payload
+                        .downcast_ref::<&str>()
+                        .map(|s| (*s).to_string())
+                        .or_else(|| payload.downcast_ref::<String>().cloned())
+                        .unwrap_or_else(|| "non-string panic payload".to_string());
+                    Err(Error::Other(format!("serve worker {i} panicked: {msg}")))
+                })
+            })
+            .collect()
     });
     let total_seconds = timer.seconds();
     let mut tallies = Vec::with_capacity(outputs.len());
@@ -230,9 +286,10 @@ mod tests {
     #[test]
     fn config_validation_and_auto_cap() {
         assert_eq!(ServerConfig::sequential().effective_queue_cap(), 4);
-        let cfg = ServerConfig { workers: 4, batch: 8, deadline_us: 0, queue_cap: 0 };
+        let cfg = ServerConfig { workers: 4, batch: 8, ..ServerConfig::sequential() };
         assert_eq!(cfg.effective_queue_cap(), 64);
         let pinned = ServerConfig { queue_cap: 7, ..cfg };
         assert_eq!(pinned.effective_queue_cap(), 7);
+        assert!(cfg.fault.is_empty(), "default config injects no faults");
     }
 }

@@ -36,9 +36,17 @@
 //!   absorbed) and the injection lag is also visible in
 //!   `achieved_rate_rps`; a request the ledger promised to serve is
 //!   never dropped, so predictions stay a pure function of the request
-//!   id. The queue-level [`offer`](super::RequestQueue::offer) path
-//!   (same policies, live depth) exists for callers that want
-//!   non-deterministic live shedding and is property-tested separately.
+//!   id.
+//!
+//! Under `--live-shed` a **second, real** admission layer is stacked on
+//! top of the ledger: ledger-admitted requests are injected with the
+//! non-blocking [`offer_stamped`](super::RequestQueue::offer_stamped)
+//! instead of the blocking push, so a real full queue sheds again — by
+//! actual depth, which depends on how fast `--workers N` drains. Those
+//! sheds are inherently non-deterministic and are reported in their own
+//! column (`live_shed`, [`OpenLoopReport::live_shed_ids`]) next to the
+//! ledger's deterministic ones; the accounting still closes exactly:
+//! `accepted + shed + live_shed + errored == offered`.
 //!
 //! Request `i` still asks about image `i % len`, so accepted-request
 //! predictions are the same bits the closed-loop engine would produce.
@@ -51,8 +59,9 @@ use crate::io::Json;
 use crate::rng::Pcg32;
 use crate::{Error, Result};
 
-use super::queue::{Request, ShedPolicy};
+use super::queue::{Admission, Request, ShedPolicy};
 use super::stats::{self, safe_rate, slice_series, ServeReport, SliceStat};
+use super::worker::RungTable;
 use super::{start_engine, ServerConfig, Session};
 
 /// Admission-ledger queue capacity when `--queue-cap` is not set — a
@@ -80,12 +89,19 @@ pub struct OpenLoopConfig {
     /// Width of the time-sliced goodput/queue-depth series, ms
     /// (0 → 100 ms).
     pub slice_ms: u64,
+    /// Stack real queue-full shedding on top of the ledger: inject
+    /// ledger-admitted requests with the non-blocking
+    /// [`offer_stamped`](super::RequestQueue::offer_stamped) and report
+    /// depth-triggered sheds in the `live_shed` column. Off by default —
+    /// live sheds depend on worker count and machine speed, so they sit
+    /// outside the determinism contract (that is their point).
+    pub live_shed: bool,
 }
 
 impl OpenLoopConfig {
     /// Rate `rate_rps`, `requests` offered, and the defaults the CLI
     /// uses: drain matched to rate, seed 42, reject-on-full, 100 ms
-    /// slices.
+    /// slices, ledger-only shedding.
     pub fn at_rate(rate_rps: f64, requests: usize) -> OpenLoopConfig {
         OpenLoopConfig {
             rate_rps,
@@ -94,6 +110,7 @@ impl OpenLoopConfig {
             seed: 42,
             shed: ShedPolicy::RejectNew,
             slice_ms: 0,
+            live_shed: false,
         }
     }
 
@@ -105,7 +122,7 @@ impl OpenLoopConfig {
         }
     }
 
-    fn effective_slice_ms(&self) -> u64 {
+    pub(crate) fn effective_slice_ms(&self) -> u64 {
         if self.slice_ms > 0 {
             self.slice_ms
         } else {
@@ -218,17 +235,26 @@ pub fn plan_arrivals(
 #[derive(Clone, Debug)]
 pub struct OpenLoopReport {
     /// Engine report over the **admitted** requests (`requests` =
-    /// accepted; `predictions` is indexed by offered id with `-1` for
-    /// shed ids).
+    /// successfully served; `predictions` is indexed by offered id with
+    /// `-1` for shed ids and `-2` for requests that drained as errors).
     pub serve: ServeReport,
-    /// Offered arrivals (= accepted + shed).
+    /// Offered arrivals (= accepted + shed + live_shed + errored).
     pub offered: usize,
-    /// Admitted and served requests.
+    /// Requests admitted and successfully served.
     pub accepted: usize,
     pub shed_rejected: usize,
     pub shed_dropped: usize,
     /// Shed ids in decision order (deterministic; see [`AdmissionPlan`]).
     pub shed_ids: Vec<usize>,
+    /// Requests that drained as error outcomes (injected faults, caught
+    /// worker panics) — per-id details in [`ServeReport::errors`].
+    pub errored: usize,
+    /// Requests shed by **real** queue depth under `--live-shed`
+    /// (0 when the mode is off).
+    pub live_shed: usize,
+    /// The live-shed ids, ascending. Unlike `shed_ids` these are not
+    /// deterministic — they depend on actual drain speed.
+    pub live_shed_ids: Vec<usize>,
     /// Configured offered rate.
     pub offered_rate_rps: f64,
     /// Offered arrivals / actual injection span — how close the real
@@ -298,6 +324,8 @@ impl OpenLoopReport {
             ("shed", Json::Num(self.shed_total() as f64)),
             ("shed_rejected", Json::Num(self.shed_rejected as f64)),
             ("shed_dropped", Json::Num(self.shed_dropped as f64)),
+            ("live_shed", Json::Num(self.live_shed as f64)),
+            ("errored", Json::Num(self.errored as f64)),
             ("goodput_rps", Json::Num(self.goodput_rps)),
             ("mean_depth", Json::Num(self.mean_depth)),
             ("p50_ms", Json::Num(self.serve.p50_ms)),
@@ -312,14 +340,167 @@ impl OpenLoopReport {
     }
 }
 
+/// What one planned (open-loop or degrade) engine run produced, before
+/// report assembly: the merged [`ServeReport`] plus the raw id-keyed
+/// completion stream the time-sliced series are built from.
+pub(crate) struct PlannedRun {
+    pub serve: ServeReport,
+    /// `(offered id, completion µs since epoch, sojourn ms)` per
+    /// successfully answered request, sorted by id.
+    pub completions: Vec<(usize, u64, f64)>,
+    /// Queue depth sampled at each arrival instant.
+    pub depth_samples: Vec<(u64, usize)>,
+    /// Ids shed by **real** queue depth (`live_shed` mode), ascending;
+    /// empty otherwise.
+    pub live_shed_ids: Vec<usize>,
+    /// Span from epoch to the last arrival sample, seconds.
+    pub injection_span_s: f64,
+    /// Mean sampled queue depth (0 when no samples).
+    pub mean_depth: f64,
+}
+
+/// Shared enforcement half of the open-loop and degrade drivers: start
+/// the engine, pace the plan's admitted requests onto the real queue at
+/// their arrival offsets, drain, and merge. `rungs` (degrade mode) maps
+/// each request to its bit allocation; `None` serves everything at
+/// `bits`. With `ol.live_shed` the generator offers instead of pushes,
+/// so a real full queue sheds a second time on top of the ledger.
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn run_planned(
+    session: &Session,
+    data: &Dataset,
+    bits: &[f32],
+    cfg: &ServerConfig,
+    plan: &AdmissionPlan,
+    ol: &OpenLoopConfig,
+    admission_cap: usize,
+    rungs: Option<RungTable>,
+) -> Result<PlannedRun> {
+    // the real queue must hold at least what the ledger admits: if it
+    // were smaller, the generator's blocking push would absorb queueing
+    // time invisibly (push re-stamps enqueued_at at admission) and the
+    // sojourn tails would under-report exactly the overload latency
+    // this mode exists to measure. (Under --live-shed the cap *is* the
+    // live admission limit, so real sheds trigger at the ledger's cap.)
+    let engine_cfg =
+        ServerConfig { queue_cap: admission_cap.max(cfg.effective_queue_cap()), ..*cfg };
+    let (queue, mut params, timer) = start_engine(session, data, bits, ol.requests, &engine_cfg)?;
+    params.rungs = rungs;
+    let epoch = params.epoch;
+    let mut depth_samples: Vec<(u64, usize)> = Vec::with_capacity(ol.requests);
+    let mut live_shed_ids: Vec<usize> = Vec::new();
+    // open-loop generator: sleep to each planned arrival offset, sample
+    // queue depth (Poisson arrivals see time averages), then inject or
+    // shed according to the ledger
+    let (tallies, total_seconds) =
+        super::drive_engine(session, data, bits, cfg.workers, &queue, &params, &timer, |q| {
+            for id in 0..ol.requests {
+                let target = epoch + Duration::from_micros(plan.arrivals_us[id]);
+                let now = Instant::now();
+                if target > now {
+                    std::thread::sleep(target - now);
+                }
+                depth_samples.push((epoch.elapsed().as_micros() as u64, q.depth()));
+                if !plan.admitted[id] {
+                    continue;
+                }
+                // sojourn origin = the *planned* arrival instant, kept by
+                // the stamped variants: schedule lag and back-pressure
+                // waits count against latency (no coordinated omission),
+                // unlike the closed loop's re-stamping push
+                let req = Request { id, idx: id % data.len(), enqueued_at: target };
+                if ol.live_shed {
+                    match q.offer_stamped(req, ol.shed) {
+                        Admission::Accepted => {}
+                        Admission::Rejected => live_shed_ids.push(id),
+                        Admission::Evicted(old) => live_shed_ids.push(old.id),
+                        Admission::Closed => break, // a worker died
+                    }
+                } else if !q.push_stamped(req) {
+                    break; // a worker died and closed the queue
+                }
+            }
+        })?;
+    live_shed_ids.sort_unstable();
+    // the drain contract the merge asserts: exactly the ledger-admitted
+    // ids that were not live-shed must have drained
+    let mut served = plan.admitted.clone();
+    for &id in &live_shed_ids {
+        served[id] = false;
+    }
+    let mut completions: Vec<(usize, u64, f64)> = Vec::new();
+    for t in &tallies {
+        for (i, &(id, _)) in t.results.iter().enumerate() {
+            completions.push((id, t.done_us[i], t.sojourn_ms[i]));
+        }
+    }
+    completions.sort_unstable_by_key(|&(id, _, _)| id);
+    let serve = stats::merge_report(
+        tallies,
+        ol.requests,
+        Some(&served),
+        total_seconds,
+        cfg.workers,
+        cfg.batch,
+        cfg.deadline_us,
+        |id| data.label(id % data.len()),
+    );
+    debug_assert_eq!(
+        serve.requests + serve.errored + plan.shed_ids.len() + live_shed_ids.len(),
+        ol.requests,
+        "accounting must close"
+    );
+    let injection_span_s = depth_samples.last().map_or(0.0, |&(t, _)| t as f64 / 1e6);
+    let mean_depth = if depth_samples.is_empty() {
+        0.0
+    } else {
+        depth_samples.iter().map(|&(_, d)| d as f64).sum::<f64>() / depth_samples.len() as f64
+    };
+    Ok(PlannedRun { serve, completions, depth_samples, live_shed_ids, injection_span_s, mean_depth })
+}
+
+/// Fold a [`PlannedRun`] and its [`AdmissionPlan`] into the run-level
+/// [`OpenLoopReport`] (shared by the plain open-loop driver and the
+/// degrade driver, which wraps the result with rung attribution).
+pub(crate) fn assemble_open_report(
+    ol: &OpenLoopConfig,
+    plan: &AdmissionPlan,
+    drain_rps: f64,
+    run: &PlannedRun,
+) -> OpenLoopReport {
+    let slice_ms = ol.effective_slice_ms();
+    let completions: Vec<(u64, f64)> = run.completions.iter().map(|&(_, d, s)| (d, s)).collect();
+    OpenLoopReport {
+        offered: ol.requests,
+        accepted: run.serve.requests,
+        shed_rejected: plan.shed_rejected,
+        shed_dropped: plan.shed_dropped,
+        shed_ids: plan.shed_ids.clone(),
+        errored: run.serve.errored,
+        live_shed: run.live_shed_ids.len(),
+        live_shed_ids: run.live_shed_ids.clone(),
+        offered_rate_rps: ol.rate_rps,
+        achieved_rate_rps: safe_rate(ol.requests, run.injection_span_s),
+        drain_rps,
+        goodput_rps: run.serve.throughput_rps,
+        mean_depth: run.mean_depth,
+        shed_policy: ol.shed,
+        slice_ms,
+        slices: slice_series(slice_ms, &completions, &run.depth_samples),
+        serve: run.serve.clone(),
+    }
+}
+
 /// Run the serve engine under open-loop load: plan admissions with the
 /// deterministic ledger, then pace the admitted requests onto the real
 /// queue at their arrival offsets while `cfg.workers` workers serve.
 ///
-/// Shed accounting is exact (`accepted + shed == offered`) and the shed
+/// Shed accounting is exact
+/// (`accepted + shed + live_shed + errored == offered`) and the shed
 /// set + accepted predictions are invariant across worker counts for a
 /// fixed `ol.seed` — see the module docs for why admission runs in
-/// virtual time.
+/// virtual time (and why `--live-shed`'s extra column deliberately is
+/// not).
 pub fn run_open_loop(
     session: &Session,
     data: &Dataset,
@@ -343,80 +524,8 @@ pub fn run_open_loop(
     // plan before the engine starts its clock: the O(n) schedule replay
     // must not eat into the first arrival offsets or the timed region
     let plan = plan_arrivals(ol.requests, ol.rate_rps, drain, admission_cap, ol.shed, ol.seed);
-    // the real queue must hold at least what the ledger admits: if it
-    // were smaller, the generator's blocking push would absorb queueing
-    // time invisibly (push re-stamps enqueued_at at admission) and the
-    // sojourn tails would under-report exactly the overload latency
-    // this mode exists to measure
-    let engine_cfg =
-        ServerConfig { queue_cap: admission_cap.max(cfg.effective_queue_cap()), ..*cfg };
-    let (queue, params, timer) = start_engine(session, data, bits, ol.requests, &engine_cfg)?;
-    let epoch = params.epoch;
-    let mut depth_samples: Vec<(u64, usize)> = Vec::with_capacity(ol.requests);
-    // open-loop generator: sleep to each planned arrival offset, sample
-    // queue depth (Poisson arrivals see time averages), then inject or
-    // shed according to the ledger
-    let (tallies, total_seconds) =
-        super::drive_engine(session, data, bits, cfg.workers, &queue, &params, &timer, |q| {
-            for id in 0..ol.requests {
-                let target = epoch + Duration::from_micros(plan.arrivals_us[id]);
-                let now = Instant::now();
-                if target > now {
-                    std::thread::sleep(target - now);
-                }
-                depth_samples.push((epoch.elapsed().as_micros() as u64, q.depth()));
-                if plan.admitted[id] {
-                    // sojourn origin = the *planned* arrival instant, kept
-                    // by push_stamped: schedule lag and back-pressure
-                    // waits count against latency (no coordinated
-                    // omission), unlike the closed loop's re-stamping push
-                    let accepted =
-                        q.push_stamped(Request { id, idx: id % data.len(), enqueued_at: target });
-                    if !accepted {
-                        break; // a worker died and closed the queue
-                    }
-                }
-            }
-        })?;
-    let completions: Vec<(u64, f64)> = tallies
-        .iter()
-        .flat_map(|t| t.done_us.iter().copied().zip(t.sojourn_ms.iter().copied()))
-        .collect();
-    let serve = stats::merge_report(
-        tallies,
-        ol.requests,
-        Some(&plan.admitted),
-        total_seconds,
-        cfg.workers,
-        cfg.batch,
-        cfg.deadline_us,
-        |id| data.label(id % data.len()),
-    );
-    let accepted = serve.requests;
-    debug_assert_eq!(accepted + plan.shed_ids.len(), ol.requests, "accounting must close");
-    let injection_span_s = depth_samples.last().map_or(0.0, |&(t, _)| t as f64 / 1e6);
-    let slice_ms = ol.effective_slice_ms();
-    let mean_depth = if depth_samples.is_empty() {
-        0.0
-    } else {
-        depth_samples.iter().map(|&(_, d)| d as f64).sum::<f64>() / depth_samples.len() as f64
-    };
-    Ok(OpenLoopReport {
-        offered: ol.requests,
-        accepted,
-        shed_rejected: plan.shed_rejected,
-        shed_dropped: plan.shed_dropped,
-        shed_ids: plan.shed_ids,
-        offered_rate_rps: ol.rate_rps,
-        achieved_rate_rps: safe_rate(ol.requests, injection_span_s),
-        drain_rps: drain,
-        goodput_rps: serve.throughput_rps,
-        mean_depth,
-        shed_policy: ol.shed,
-        slice_ms,
-        slices: slice_series(slice_ms, &completions, &depth_samples),
-        serve,
-    })
+    let run = run_planned(session, data, bits, cfg, &plan, ol, admission_cap, None)?;
+    Ok(assemble_open_report(ol, &plan, drain, &run))
 }
 
 /// Latency-vs-offered-load curve: one [`OpenLoopReport`] per rung of a
@@ -534,6 +643,7 @@ mod tests {
         assert_eq!(ol.effective_drain(), 750.0, "drain defaults to the offered rate");
         assert_eq!(ol.effective_slice_ms(), 100);
         assert_eq!(ol.shed, ShedPolicy::RejectNew);
+        assert!(!ol.live_shed, "live shedding is opt-in");
         let pinned = OpenLoopConfig { drain_rps: 300.0, slice_ms: 25, ..ol };
         assert_eq!(pinned.effective_drain(), 300.0);
         assert_eq!(pinned.effective_slice_ms(), 25);
@@ -549,6 +659,9 @@ mod tests {
             shed_rejected: 0,
             shed_dropped: 0,
             shed_ids: vec![],
+            errored: 0,
+            live_shed: 0,
+            live_shed_ids: vec![],
             offered_rate_rps: 100.0,
             achieved_rate_rps: 0.0,
             drain_rps: 100.0,

@@ -17,13 +17,15 @@
 //! request to admit it — and the returned [`Admission`] tells the
 //! caller exactly which request was shed, so shed accounting is exact
 //! (every offered request is counted exactly once as served or shed;
-//! property-tested in `rust/tests/proptest_invariants.rs`). Note the
-//! shipped open-loop harness does **not** shed here: its shed decisions
+//! property-tested in `rust/tests/proptest_invariants.rs`). By default
+//! the open-loop harness does **not** shed here: its shed decisions
 //! come from the deterministic virtual-time ledger
 //! (`openloop::plan_arrivals`), and its generator injects the admitted
-//! requests with the blocking `push` (see the openloop module docs);
-//! `offer` is the building block for a future live-shed mode where
-//! decisions may depend on real queue depth.
+//! requests with the blocking `push_stamped` (see the openloop module
+//! docs). Under `--live-shed` the generator instead injects with
+//! [`RequestQueue::offer_stamped`], so admission is decided by **real**
+//! queue depth — non-deterministic, reported separately from the
+//! ledger's sheds — while the planned-arrival sojourn origin is kept.
 
 use std::collections::VecDeque;
 use std::sync::{Condvar, Mutex};
@@ -189,13 +191,32 @@ impl RequestQueue {
     /// request-by-request.
     ///
     /// [`push`]: RequestQueue::push
-    pub fn offer(&self, mut req: Request, policy: ShedPolicy) -> Admission {
+    pub fn offer(&self, req: Request, policy: ShedPolicy) -> Admission {
+        self.offer_inner(req, policy, true)
+    }
+
+    /// Like [`offer`], but **preserves the caller's `enqueued_at` stamp**
+    /// — the [`push_stamped`] convention applied to non-blocking
+    /// admission. The `--live-shed` open-loop generator uses this so a
+    /// request admitted by real queue depth still measures sojourn from
+    /// its *planned* arrival instant (the coordinated-omission
+    /// correction), not from whenever the offer happened to run.
+    ///
+    /// [`offer`]: RequestQueue::offer
+    /// [`push_stamped`]: RequestQueue::push_stamped
+    pub fn offer_stamped(&self, req: Request, policy: ShedPolicy) -> Admission {
+        self.offer_inner(req, policy, false)
+    }
+
+    fn offer_inner(&self, mut req: Request, policy: ShedPolicy, restamp: bool) -> Admission {
         let mut st = self.inner.lock().unwrap();
         if st.closed {
             return Admission::Closed;
         }
-        let out = if st.buf.len() < self.cap {
+        if restamp {
             req.enqueued_at = Instant::now();
+        }
+        let out = if st.buf.len() < self.cap {
             st.buf.push_back(req);
             Admission::Accepted
         } else {
@@ -204,7 +225,6 @@ impl RequestQueue {
                 ShedPolicy::DropOldest => {
                     // cap ≥ 1, so a full queue has a head to evict
                     let evicted = st.buf.pop_front().expect("full queue has a head");
-                    req.enqueued_at = Instant::now();
                     st.buf.push_back(req);
                     Admission::Evicted(evicted)
                 }
@@ -382,6 +402,28 @@ mod tests {
         assert!(out[1].enqueued_at > stamp, "plain push re-stamps at admission");
         q.close();
         assert!(!q.push_stamped(Request { id: 2, idx: 2, enqueued_at: stamp }));
+    }
+
+    #[test]
+    fn offer_stamped_preserves_the_callers_stamp() {
+        let q = RequestQueue::new(1);
+        let stamp = Instant::now() - Duration::from_millis(50);
+        let stamped = |id| Request { id, idx: id, enqueued_at: stamp };
+        assert!(matches!(q.offer_stamped(stamped(0), ShedPolicy::RejectNew), Admission::Accepted));
+        // full queue under drop-oldest: the admitted replacement keeps
+        // its planned stamp too
+        match q.offer_stamped(stamped(1), ShedPolicy::DropOldest) {
+            Admission::Evicted(old) => assert_eq!(old.id, 0),
+            other => panic!("expected eviction, got {other:?}"),
+        }
+        let mut out = Vec::new();
+        q.pop_batch(1, Duration::ZERO, &mut out).unwrap();
+        assert_eq!(out[0].id, 1);
+        assert_eq!(out[0].enqueued_at, stamp, "offer_stamped keeps the planned-arrival origin");
+        assert!(matches!(q.offer(stamped(2), ShedPolicy::RejectNew), Admission::Accepted));
+        out.clear();
+        q.pop_batch(1, Duration::ZERO, &mut out).unwrap();
+        assert!(out[0].enqueued_at > stamp, "plain offer re-stamps at admission");
     }
 
     #[test]

@@ -37,6 +37,12 @@ pub(crate) struct WorkerTally {
     pub done_us: Vec<u64>,
     /// Forward passes executed (micro-batches served).
     pub forwards: usize,
+    /// `(request id, what failed)` for requests whose forward errored
+    /// instead of answering — injected faults (`FaultPlan`) and caught
+    /// worker panics land here. Kept out of `results`/`sojourn_ms`/
+    /// `service_ms`/`done_us` so those stay parallel and latency stats
+    /// cover real answers only.
+    pub errors: Vec<(usize, String)>,
 }
 
 impl WorkerTally {
@@ -90,7 +96,16 @@ pub struct ServeReport {
     /// counts and batch sizes (the engine's determinism contract). Under
     /// the open-loop mode this is indexed by **offered** id and holds
     /// `-1` for requests the admission controller shed (never served).
+    /// Requests that drained but **errored** (injected fault or caught
+    /// worker panic) hold `-2`.
     pub predictions: Vec<i32>,
+    /// Requests that drained as errors instead of answers (see `errors`).
+    /// These are excluded from `requests`, `correct`, and every latency
+    /// statistic: `requests + errored` = everything that drained.
+    pub errored: usize,
+    /// `(request id, what failed)` per errored request, sorted by id —
+    /// deterministic at any worker count because faults key on ids.
+    pub errors: Vec<(usize, String)>,
 }
 
 impl ServeReport {
@@ -119,7 +134,10 @@ impl ServeReport {
 /// (closed loop) means every id must drain; `Some(mask)` means exactly
 /// the `true` ids must drain — shed ids get prediction `-1` and are
 /// excluded from `requests`/`correct`, so accuracy is over **goodput**,
-/// never over work that was refused.
+/// never over work that was refused. A drained request may still be an
+/// **error** (fault injection, caught panic): it satisfies the drain
+/// contract but carries prediction `-2` and moves from `requests` into
+/// `errored`, so `requests` always means *successfully answered*.
 pub(crate) fn merge_report(
     tallies: Vec<WorkerTally>,
     n: usize,
@@ -137,11 +155,18 @@ pub(crate) fn merge_report(
     let mut occupancy = vec![0usize; batch.max(1)];
     let mut depth: Vec<usize> = Vec::new();
     let mut forwards = 0usize;
+    let mut errors: Vec<(usize, String)> = Vec::new();
     for t in tallies {
         for (id, pred) in t.results {
             debug_assert!(!seen[id], "request {id} served twice");
             seen[id] = true;
             predictions[id] = pred;
+        }
+        for (id, what) in t.errors {
+            debug_assert!(!seen[id], "request {id} both answered and errored");
+            seen[id] = true;
+            predictions[id] = -2;
+            errors.push((id, what));
         }
         sojourn.extend(t.sojourn_ms);
         service.extend(t.service_ms);
@@ -160,7 +185,9 @@ pub(crate) fn merge_report(
         seen.iter().enumerate().all(|(id, &s)| s == served.map_or(true, |m| m[id])),
         "exactly the admitted requests must drain"
     );
-    let requests = served.map_or(n, |m| m.iter().filter(|&&s| s).count());
+    errors.sort_by_key(|&(id, _)| id);
+    let drained = served.map_or(n, |m| m.iter().filter(|&&s| s).count());
+    let requests = drained - errors.len();
     let correct = predictions
         .iter()
         .enumerate()
@@ -186,6 +213,8 @@ pub(crate) fn merge_report(
         batch_occupancy: occupancy,
         queue_depth: depth,
         predictions,
+        errored: errors.len(),
+        errors,
     }
 }
 
@@ -359,6 +388,31 @@ mod tests {
         assert_eq!(r.predictions[2], -1, "shed id carries the -1 sentinel");
         assert_eq!(r.predictions[5], -1);
         assert_eq!(r.accuracy(), 1.0);
+    }
+
+    #[test]
+    fn merge_moves_errored_requests_out_of_goodput() {
+        // 4 admitted ids, id 3 drains as an error: it satisfies the
+        // drain contract but is goodput for nothing
+        let served = [true, true, false, true];
+        let mut t = WorkerTally::new(1, 4);
+        for id in [0usize, 1] {
+            t.results.push((id, (id % 3) as i32));
+            t.sojourn_ms.push(1.0);
+            t.service_ms.push(0.5);
+            t.occupancy[0] += 1;
+            t.forwards += 1;
+        }
+        t.errors.push((3, "injected worker panic".into()));
+        let r = merge_report(vec![t], 4, Some(&served), 1.0, 1, 1, 0, |id| (id % 3) as i32);
+        assert_eq!(r.requests, 2, "errored request is not goodput");
+        assert_eq!(r.errored, 1);
+        assert_eq!(r.errors, vec![(3, "injected worker panic".to_string())]);
+        assert_eq!(r.predictions[3], -2, "error sentinel");
+        assert_eq!(r.predictions[2], -1, "shed sentinel untouched");
+        assert_eq!(r.correct, 2);
+        assert_eq!(r.accuracy(), 1.0, "accuracy over answers only");
+        assert_eq!(r.throughput_rps, 2.0);
     }
 
     #[test]

@@ -1,13 +1,31 @@
 //! Serve worker: pops deadline micro-batches off the [`RequestQueue`],
-//! assembles them into one stacked input tensor, and answers them with a
-//! single batch-B quantized forward through the shared
+//! assembles them into stacked input tensors, and answers them with
+//! batch-B quantized forwards through the shared
 //! [`Session`](crate::coordinator::Session).
 //!
 //! Correctness does not depend on scheduling: the backend forwards each
 //! sample of a stacked batch bitwise-identically to a batch-1 request
 //! (fixed GEMM k-order; per-sample int8 activation grids), so a
-//! request's prediction is a pure function of its dataset index — any
-//! worker count, any batch composition, same answers.
+//! request's prediction is a pure function of its dataset index **and
+//! its assigned bit allocation** — any worker count, any batch
+//! composition, same answers.
+//!
+//! Degrade mode hands workers a [`RungTable`]: each request carries a
+//! precomputed rung (`rung_of[id]`, fixed in virtual time by
+//! `server::degrade::plan_degrade`), and a popped micro-batch is
+//! partitioned into contiguous same-rung groups, one stacked forward
+//! per group. The backend serves each rung's weights from a pre-encoded
+//! `Arc` snapshot, so mixing rungs inside one pop costs cache lookups,
+//! never re-encodes.
+//!
+//! Panic safety: every group forward runs inside `catch_unwind`. A panic
+//! (injected via [`FaultPlan`] or real) is converted into per-request
+//! *error outcomes* (`WorkerTally::errors`) for exactly the requests the
+//! doomed group carried, and the worker keeps serving — the run
+//! completes, the fault is reported, no mutex is poisoned (the queue
+//! uses no lock across a forward) and no peer deadlocks. A panic outside
+//! the serve loop is caught by [`run_worker`]'s outer guard, which
+//! closes the queue before reporting the failure.
 //!
 //! Threading composition: each worker owns one OS thread and caps its
 //! nested GEMM auto-threading at `threads / workers`
@@ -15,16 +33,28 @@
 //! never oversubscribe the machine, and tiny per-request GEMMs still run
 //! inline instead of paying spawn overhead.
 
+use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::time::{Duration, Instant};
 
 use crate::dataset::Dataset;
 use crate::tensor::{self, Tensor};
 use crate::util::{Scratch, Timer};
-use crate::Result;
+use crate::{Error, Result};
 
-use super::queue::RequestQueue;
+use super::fault::FaultPlan;
+use super::queue::{Request, RequestQueue};
 use super::stats::WorkerTally;
 use super::Session;
+
+/// Per-request bit allocations for a degrade run: `rung_of[id]` indexes
+/// `bits`. Built by `server::degrade` from the planned rung-switch
+/// trace; requests with different rungs never share a forward.
+pub(crate) struct RungTable {
+    /// Rung assigned to each offered request id (fixed at plan time).
+    pub rung_of: Vec<u8>,
+    /// Bit allocation per rung (rung 0 = highest fidelity).
+    pub bits: Vec<Vec<f32>>,
+}
 
 /// Engine parameters a worker needs (a copy of the relevant
 /// [`ServerConfig`](super::ServerConfig) fields plus derived budgets).
@@ -38,11 +68,18 @@ pub(crate) struct WorkerParams {
     /// recorded relative to this, so the open-loop mode can slice the
     /// run into fixed time windows across all workers.
     pub epoch: Instant,
+    /// Per-request rung assignments (degrade mode); `None` = every
+    /// request serves at the engine's base bits.
+    pub rungs: Option<RungTable>,
+    /// Seeded fault injection (empty plan = no faults).
+    pub fault: FaultPlan,
 }
 
-/// Run one worker until the queue shuts down. On any forward error the
-/// worker closes the queue (failing the generator fast and releasing its
-/// peers) and returns the error.
+/// Run one worker until the queue shuts down. On any forward error —
+/// or a panic that escapes the serve loop itself — the worker closes
+/// the queue (failing the generator fast and releasing its peers) and
+/// returns the error; injected/caught in-forward panics are handled
+/// inside [`serve_requests`] and do **not** end the worker.
 pub(crate) fn run_worker(
     session: &Session,
     data: &Dataset,
@@ -50,13 +87,49 @@ pub(crate) fn run_worker(
     queue: &RequestQueue,
     params: &WorkerParams,
 ) -> Result<WorkerTally> {
-    let out = serve_requests(session, data, bits, queue, params);
+    let out = catch_unwind(AssertUnwindSafe(|| serve_requests(session, data, bits, queue, params)))
+        .unwrap_or_else(|payload| {
+            Err(Error::Other(format!("serve worker panicked: {}", panic_message(&payload))))
+        });
     if out.is_err() {
         // poison-style shutdown: a dead worker must not leave the
         // generator blocked on a full queue or its peers waiting forever
         queue.close();
     }
     out
+}
+
+/// Best-effort text of a caught panic payload (`panic!` with a string
+/// or format message; anything else gets a placeholder).
+fn panic_message(payload: &(dyn std::any::Any + Send)) -> String {
+    if let Some(s) = payload.downcast_ref::<&str>() {
+        (*s).to_string()
+    } else if let Some(s) = payload.downcast_ref::<String>() {
+        s.clone()
+    } else {
+        "non-string panic payload".to_string()
+    }
+}
+
+/// Split a popped batch into contiguous forward groups: a new group
+/// starts when the assigned rung changes, and any request the fault
+/// plan targets for failure is fenced into a singleton group so its
+/// error outcome can never spill onto batch-mates (which would make the
+/// error accounting depend on batch composition).
+fn forward_groups(batch: &[Request], params: &WorkerParams) -> Vec<(usize, usize, usize)> {
+    let rung_of = |id: usize| params.rungs.as_ref().map_or(0, |rt| rt.rung_of[id] as usize);
+    let mut groups: Vec<(usize, usize, usize)> = Vec::new(); // (start, end, rung)
+    let mut prev_isolated = false;
+    for (i, req) in batch.iter().enumerate() {
+        let rung = rung_of(req.id);
+        let isolated = params.fault.isolates(req.id);
+        match groups.last_mut() {
+            Some(g) if !isolated && !prev_isolated && g.2 == rung => g.1 = i + 1,
+            _ => groups.push((i, i + 1, rung)),
+        }
+        prev_isolated = isolated;
+    }
+    groups
 }
 
 fn serve_requests(
@@ -78,28 +151,69 @@ fn serve_requests(
     let mut batch = Vec::with_capacity(params.batch);
     let mut ids = Vec::with_capacity(params.batch);
     while let Some(depth) = queue.pop_batch(params.batch, params.deadline, &mut batch) {
-        let b = batch.len();
-        tally.occupancy[b - 1] += 1;
+        tally.occupancy[batch.len() - 1] += 1;
         let dslot = tally.depth.len() - 1;
         tally.depth[depth.min(dslot)] += 1;
-        ids.clear();
-        ids.extend(batch.iter().map(|r| r.idx));
-        let mut xbuf = scratch.take_any(b * stride);
-        data.fill_images(&ids, &mut xbuf)?;
-        let x = Tensor::from_vec(&[b, h, w, c], xbuf)?;
-        let t = Timer::start();
-        let logits = session.qforward_once(&x, bits)?;
-        let service_ms = t.millis();
-        scratch.put(x.into_vec());
-        tally.forwards += 1;
-        let done_us = params.epoch.elapsed().as_micros() as u64;
-        for (i, req) in batch.iter().enumerate() {
-            let row = &logits[i * classes..(i + 1) * classes];
-            let (pred, _) = Tensor::top2(row);
-            tally.results.push((req.id, pred as i32));
-            tally.sojourn_ms.push(req.enqueued_at.elapsed().as_secs_f64() * 1e3);
-            tally.service_ms.push(service_ms);
-            tally.done_us.push(done_us);
+        for &(start, end, rung) in &forward_groups(&batch, params) {
+            let group = &batch[start..end];
+            let b = end - start;
+            // a slow-worker fault stalls the whole pop carrying its
+            // target before the forward: latency, not errors
+            if let Some(ms) = group.iter().find_map(|r| params.fault.stall_ms(r.id)) {
+                std::thread::sleep(Duration::from_millis(ms));
+            }
+            // a poisoned batch fails without forwarding (the stand-in
+            // for corrupt input); isolation makes the group a singleton
+            if let Some(req) = group.iter().find(|r| params.fault.poisons(r.id)) {
+                tally
+                    .errors
+                    .push((req.id, format!("injected poisoned batch at request {}", req.id)));
+                continue;
+            }
+            let gbits =
+                params.rungs.as_ref().map_or(bits, |rt| rt.bits[rung].as_slice());
+            ids.clear();
+            ids.extend(group.iter().map(|r| r.idx));
+            let mut xbuf = scratch.take_any(b * stride);
+            data.fill_images(&ids, &mut xbuf)?;
+            let x = Tensor::from_vec(&[b, h, w, c], xbuf)?;
+            let panic_id = group.iter().map(|r| r.id).find(|&id| params.fault.panics_at(id));
+            let t = Timer::start();
+            let forward = catch_unwind(AssertUnwindSafe(|| {
+                if let Some(id) = panic_id {
+                    panic!("injected worker panic at request {id}");
+                }
+                session.qforward_once(&x, gbits)
+            }));
+            let service_ms = t.millis();
+            let logits = match forward {
+                Ok(Ok(logits)) => logits,
+                // a real forward error is a broken engine, not a
+                // per-request outcome: fail the run (run_worker closes
+                // the queue)
+                Ok(Err(e)) => return Err(e),
+                Err(payload) => {
+                    // panic contained: exactly this group's requests
+                    // drain as error outcomes, the worker keeps serving
+                    let msg = panic_message(&payload);
+                    for req in group {
+                        tally.errors.push((req.id, format!("worker panic: {msg}")));
+                    }
+                    scratch.put(x.into_vec());
+                    continue;
+                }
+            };
+            scratch.put(x.into_vec());
+            tally.forwards += 1;
+            let done_us = params.epoch.elapsed().as_micros() as u64;
+            for (i, req) in group.iter().enumerate() {
+                let row = &logits[i * classes..(i + 1) * classes];
+                let (pred, _) = Tensor::top2(row);
+                tally.results.push((req.id, pred as i32));
+                tally.sojourn_ms.push(req.enqueued_at.elapsed().as_secs_f64() * 1e3);
+                tally.service_ms.push(service_ms);
+                tally.done_us.push(done_us);
+            }
         }
         batch.clear();
     }

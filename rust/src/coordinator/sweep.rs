@@ -101,6 +101,25 @@ impl EvalCache {
         self.accuracy.lock().unwrap().insert(Self::key(bits), acc);
     }
 
+    /// Cached accuracy for `bits`, evaluating through `session` (and
+    /// memoizing) on a miss. This is how ladder calibration
+    /// (`serve --degrade`) reuses the sweep's evaluations: a rung whose
+    /// allocation already appeared in a sweep sharing this cache costs
+    /// nothing; a fresh one costs exactly one full-dataset evaluation.
+    ///
+    /// The evaluation runs outside the cache lock, so concurrent callers
+    /// never serialize on a forward (two simultaneous misses on the same
+    /// vector may both evaluate — the results are identical, the second
+    /// insert is a no-op overwrite).
+    pub fn get_or_eval(&self, session: &Session, bits: &[f32]) -> Result<f64> {
+        if let Some(acc) = self.get(bits) {
+            return Ok(acc);
+        }
+        let acc = session.eval_qbits(bits)?.accuracy;
+        self.insert(bits, acc);
+        Ok(acc)
+    }
+
     /// Distinct bit vectors evaluated so far.
     pub fn len(&self) -> usize {
         self.accuracy.lock().unwrap().len()

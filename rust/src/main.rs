@@ -15,13 +15,13 @@
 
 use adaq::cli::Args;
 use adaq::coordinator::{
-    run_open_loop, run_rate_ladder, run_server, run_sweep_jobs, EvalCache, LoadCurve,
-    OpenLoopConfig, ServerConfig, Session, ShedPolicy, SweepConfig,
+    run_degrade, run_open_loop, run_rate_ladder, run_server, run_sweep_jobs, DegradeConfig,
+    EvalCache, FaultPlan, LoadCurve, OpenLoopConfig, Rung, ServeReport, ServerConfig, Session,
+    ShedPolicy, SweepConfig,
 };
 use adaq::dataset::Dataset;
-use adaq::measure::{
-    adversarial_stats, calibrate_model_jobs, Calibration,
-};
+use adaq::io::Json;
+use adaq::measure::{adversarial_stats, calibrate_model_jobs, Calibration};
 use adaq::model::ModelArtifacts;
 use adaq::nn::GraphExecutor;
 use adaq::quant::Allocator;
@@ -53,6 +53,19 @@ USAGE: adaq <command> [--flags]
               sheds deterministically against --drain capacity — same
               seed ⇒ same shed set at any worker count. --rates sweeps a
               rate ladder and writes the latency-vs-load curve artifact)
+             [--live-shed] (report real queue-full sheds too)
+             [--degrade --ladder r1.json,r2.json,… | --ladder B@D,B@D,…]
+             [--downshift-slices N] [--upshift-slices N] [--degrade-out P]
+             (degrade: hold a ladder of calibrated bit allocations —
+              rung files, or inline B@D = B bits everywhere at D req/s
+              drain — and hot-swap down a rung under sustained overload,
+              back up with hysteresis, instead of shedding. The
+              rung-switch trace is bitwise identical at any --workers)
+             [--fault SPEC] (or ADAQ_FAULT: inject seeded worker faults,
+              worker_panic[@K] | poison[@K] | slow[@K:MS] — panics
+              become per-request error outcomes, never crashes)
+             [--synthetic] (serve an in-process seeded random-weight MLP
+              — no artifacts needed; for smokes and CI)
   export     --model M (--bits … | --allocator A --b1 F) [--out DIR]
   figures    [--models a,b,…] (regenerate Fig. 6/8 sweeps in-process)
   selfcheck  [--models a,b,…]
@@ -370,16 +383,29 @@ fn cmd_sweep(args: &Args) -> Result<()> {
 }
 
 fn cmd_serve(args: &Args) -> Result<()> {
-    let root = artifacts_dir(args);
-    let model = args.req_flag("model")?;
-    let test = Dataset::load(&root, "test")?;
-    // --int8: answer requests through the integer (int8×int8→i32) path
-    // on the CPU backend instead of f32 fake-quant
-    let session = if args.has("int8") {
-        let artifacts = ModelArtifacts::load(&root, &model)?;
-        Session::from_parts_int8(artifacts, test.clone(), 1)?
+    // --synthetic: serve an in-process seeded random-weight MLP over the
+    // procedural dataset — the artifact-free path CI smokes run on
+    let (session, test) = if args.has("synthetic") {
+        let (artifacts, test) = adaq::bench_support::synthetic_parts(64)?;
+        let session = if args.has("int8") {
+            Session::from_parts_int8(artifacts, test.clone(), 1)?
+        } else {
+            Session::from_parts(artifacts, test.clone(), 1)?
+        };
+        (session, test)
     } else {
-        Session::open(&root, &model, 1)?
+        let root = artifacts_dir(args);
+        let model = args.req_flag("model")?;
+        let test = Dataset::load(&root, "test")?;
+        // --int8: answer requests through the integer (int8×int8→i32)
+        // path on the CPU backend instead of f32 fake-quant
+        let session = if args.has("int8") {
+            let artifacts = ModelArtifacts::load(&root, &model)?;
+            Session::from_parts_int8(artifacts, test.clone(), 1)?
+        } else {
+            Session::open(&root, &model, 1)?
+        };
+        (session, test)
     };
     let nwl = session.artifacts.manifest.num_weighted_layers;
     let bits = match args.flags.get("bits") {
@@ -387,13 +413,19 @@ fn cmd_serve(args: &Args) -> Result<()> {
         None => vec![8.0; nwl],
     };
     let n = args.usize_flag("requests", 200)?;
+    // --fault beats the ADAQ_FAULT environment variable
+    let fault = match args.flags.get("fault") {
+        Some(spec) => FaultPlan::parse(spec)?,
+        None => FaultPlan::from_env()?,
+    };
     let cfg = ServerConfig {
         workers: args.usize_flag("workers", 1)?.max(1),
         batch: args.usize_flag("batch", 1)?.max(1),
         deadline_us: args.usize_flag("deadline-us", 200)? as u64,
         queue_cap: args.usize_flag("queue-cap", 0)?,
+        fault,
     };
-    if args.has("open-loop") {
+    if args.has("open-loop") || args.has("degrade") {
         return cmd_serve_open_loop(args, &session, &test, &bits, n, &cfg);
     }
     let r = run_server(&session, &test, &bits, n, &cfg)?;
@@ -418,7 +450,22 @@ fn cmd_serve(args: &Args) -> Result<()> {
         r.batch_occupancy,
         r.queue_depth
     );
+    print_fault_outcome(&cfg.fault, &r);
     Ok(())
+}
+
+/// One line the fault smokes grep for: which fault ran and how the
+/// engine absorbed it (per-request error outcomes, not a crash).
+fn print_fault_outcome(fault: &FaultPlan, r: &ServeReport) {
+    if fault.is_empty() {
+        return;
+    }
+    let detail = r
+        .errors
+        .first()
+        .map(|(id, e)| format!("request {id}: {e}"))
+        .unwrap_or_else(|| "no request errored (stalls only stretch latency)".into());
+    println!("  fault [{}] absorbed: {} errored — {detail}", fault.describe(), r.errored);
 }
 
 /// `adaq serve --open-loop`: streaming load at a configured offered rate
@@ -457,7 +504,16 @@ fn cmd_serve_open_loop(
         seed: args.usize_flag("seed", 42)? as u64,
         shed,
         slice_ms: args.usize_flag("slice-ms", 0)? as u64,
+        live_shed: args.has("live-shed"),
     };
+    if args.has("degrade") {
+        if ladder.len() > 1 {
+            return Err(Error::Cli(
+                "--degrade and --rates conflict; degrade mode runs one offered rate".into(),
+            ));
+        }
+        return cmd_serve_degrade(args, session, test, cfg, &base);
+    }
     let curve = if ladder.len() > 1 {
         run_rate_ladder(session, test, bits, cfg, &base, &ladder)?
     } else {
@@ -466,13 +522,16 @@ fn cmd_serve_open_loop(
     for r in &curve.points {
         println!(
             "open-loop {:.0} rps offered (achieved {:.0}), drain {:.0} [{}]: \
-             {} accepted + {} shed = {} offered, goodput {:.1} rps, acc {:.4}",
+             {} accepted + {} shed + {} live-shed + {} errored = {} offered, \
+             goodput {:.1} rps, acc {:.4}",
             r.offered_rate_rps,
             r.achieved_rate_rps,
             r.drain_rps,
             r.shed_policy.name(),
             r.accepted,
             r.shed_total(),
+            r.live_shed,
+            r.errored,
             r.offered,
             r.goodput_rps,
             r.serve.accuracy(),
@@ -487,6 +546,7 @@ fn cmd_serve_open_loop(
             r.slices.len(),
             r.slice_ms,
         );
+        print_fault_outcome(&cfg.fault, &r.serve);
     }
     let artifact = args
         .flags
@@ -496,6 +556,114 @@ fn cmd_serve_open_loop(
     if let Some(path) = artifact {
         curve.to_json().write_file(&path)?;
         println!("wrote {path} ({} rate points)", curve.points.len());
+    }
+    Ok(())
+}
+
+/// Parse `--ladder`: comma-separated rungs, each either a rung .json
+/// file (see `Rung::from_json`) or an inline `B@D` spec — `B` bits on
+/// every weighted layer, drained at `D` req/s, with `est_accuracy`
+/// measured through the session (memoized, so duplicate allocations
+/// across rungs evaluate once).
+fn parse_ladder(spec: &str, session: &Session) -> Result<Vec<Rung>> {
+    let nwl = session.artifacts.manifest.num_weighted_layers;
+    let cache = EvalCache::new();
+    let mut rungs = Vec::new();
+    for entry in spec.split(',').map(str::trim).filter(|s| !s.is_empty()) {
+        if let Some((b, d)) = entry.split_once('@') {
+            let bits: f32 = b
+                .parse()
+                .map_err(|e| Error::Cli(format!("--ladder {entry:?}: bad bit-width ({e})")))?;
+            let drain: f64 = d
+                .parse()
+                .map_err(|e| Error::Cli(format!("--ladder {entry:?}: bad drain rate ({e})")))?;
+            rungs.push(Rung::calibrated(session, &cache, format!("b{b}"), vec![bits; nwl], drain)?);
+        } else {
+            rungs.push(Rung::from_json(&Json::parse_file(entry)?)?);
+        }
+    }
+    if rungs.is_empty() {
+        return Err(Error::Cli("--ladder named no rungs (want r1.json,… or B@D,…)".into()));
+    }
+    Ok(rungs)
+}
+
+/// `adaq serve --degrade`: run the degradation controller instead of
+/// pure shedding — print the switch trace and the per-slice rung
+/// occupancy table, and write the full report when `--degrade-out` asks.
+fn cmd_serve_degrade(
+    args: &Args,
+    session: &Session,
+    test: &Dataset,
+    cfg: &ServerConfig,
+    ol: &OpenLoopConfig,
+) -> Result<()> {
+    let spec = args
+        .req_flag("ladder")
+        .map_err(|_| Error::Cli("--degrade wants --ladder r1.json,r2.json,… or B@D,B@D,…".into()))?;
+    let mut dc = DegradeConfig::new(parse_ladder(&spec, session)?);
+    dc.downshift_slices = args.usize_flag("downshift-slices", dc.downshift_slices)?;
+    dc.upshift_slices = args.usize_flag("upshift-slices", dc.upshift_slices)?;
+    let r = run_degrade(session, test, cfg, ol, &dc)?;
+    println!(
+        "degrade {:.0} rps offered (achieved {:.0}), {} rungs [{}]: \
+         {} accepted + {} shed + {} live-shed + {} errored = {} offered, goodput {:.1} rps",
+        r.open.offered_rate_rps,
+        r.open.achieved_rate_rps,
+        r.ladder.len(),
+        r.open.shed_policy.name(),
+        r.open.accepted,
+        r.open.shed_total(),
+        r.open.live_shed,
+        r.open.errored,
+        r.open.offered,
+        r.open.goodput_rps,
+    );
+    println!(
+        "  est acc {:.4} (measured {:.4}), sojourn p50 {:.2} / p99 {:.2} ms, {} switches",
+        r.est_accuracy,
+        r.open.serve.accuracy(),
+        r.open.serve.p50_ms,
+        r.open.serve.p99_ms,
+        r.switches.len(),
+    );
+    for s in &r.switches {
+        let dir = if s.to > s.from { "down" } else { "up" };
+        println!(
+            "  switch @ {:>6.1} ms (slice {:>3}): rung {} → {} ({dir}, {} → {})",
+            s.at_us as f64 / 1000.0,
+            s.slice,
+            s.from,
+            s.to,
+            r.ladder[s.from].name,
+            r.ladder[s.to].name,
+        );
+    }
+    // per-slice rung occupancy + the accuracy the ladder estimates for
+    // each slice's mix — the "what fidelity did we serve when" view
+    let mut heads: Vec<String> = vec!["slice start".into()];
+    heads.extend(r.ladder.iter().map(|l| l.name.clone()));
+    heads.push("est acc".into());
+    let head_refs: Vec<&str> = heads.iter().map(String::as_str).collect();
+    let aligns = vec![Align::Right; head_refs.len()];
+    let rows: Vec<Vec<String>> = r
+        .slices
+        .iter()
+        .map(|s| {
+            let mut row = vec![format!("{} ms", s.start_ms)];
+            row.extend(s.per_rung.iter().map(|c| c.to_string()));
+            row.push(match s.completions() {
+                0 => "-".into(),
+                _ => format!("{:.4}", s.est_accuracy),
+            });
+            row
+        })
+        .collect();
+    println!("{}", markdown_table(&head_refs, &aligns, &rows));
+    print_fault_outcome(&cfg.fault, &r.open.serve);
+    if let Some(path) = args.flags.get("degrade-out") {
+        r.to_json().write_file(path)?;
+        println!("wrote {path}");
     }
     Ok(())
 }

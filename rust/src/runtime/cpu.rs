@@ -79,16 +79,21 @@ pub struct CpuBackend {
     outer_jobs: AtomicUsize,
     /// Serve requests take the integer path (see [`CpuBackend::with_int8_serving`]).
     int8_serving: bool,
-    /// Cached quantized parameter set keyed on the bits vector (serve
-    /// path). The set is behind an `Arc` so a request clones the handle
-    /// under a short lock and runs its forward **outside** the mutex —
+    /// Cached quantized parameter sets keyed on the bits vector (serve
+    /// path), most recently used last, at most [`QCACHE_CAP`] entries.
+    /// Each set is behind an `Arc` so a request clones the handle under
+    /// a short lock and runs its forward **outside** the mutex —
     /// concurrent serve workers share the cache without serializing on
-    /// it (the lock is held across requantization only when the bits
-    /// vector actually changes).
-    qcache: Mutex<Option<(Vec<f32>, Arc<Vec<(usize, Tensor)>>)>>,
-    /// Cached int8 weight set keyed on the bits vector (integer serving);
-    /// same `Arc` hand-off discipline as `qcache`.
-    qcache_int8: Mutex<Option<(Vec<f32>, Arc<Int8Set>)>>,
+    /// it (the lock is held across requantization only the first time a
+    /// bits vector is seen). Holding several pre-encoded sets at once is
+    /// what makes the degrade controller's rung hot-swap an `Arc` clone:
+    /// a ladder's allocations all stay resident, so requests on
+    /// different rungs interleave freely without re-encoding, and no
+    /// request ever observes a torn set.
+    qcache: Mutex<Vec<(Vec<f32>, Arc<Vec<(usize, Tensor)>>)>>,
+    /// Cached int8 weight sets keyed on the bits vector (integer
+    /// serving); same `Arc` hand-off and LRU discipline as `qcache`.
+    qcache_int8: Mutex<Vec<(Vec<f32>, Arc<Int8Set>)>>,
     /// Pool of scratch arenas for [`Backend::qforward_one`]: each request
     /// pops one (or builds a fresh one under contention), forwards, and
     /// pushes it back — steady-state serving allocates nothing, and N
@@ -100,6 +105,35 @@ pub struct CpuBackend {
 /// Pooled serve arenas beyond this are dropped rather than kept (bounds
 /// resident memory after a burst of concurrent workers).
 const SERVE_SCRATCH_CAP: usize = 32;
+
+/// Distinct bits vectors the serve caches keep encoded at once. Sized
+/// for a deep degradation ladder (every rung resident simultaneously)
+/// with headroom; least recently used entries are evicted beyond this.
+const QCACHE_CAP: usize = 8;
+
+/// Look up `bits` in a keyed LRU of shared weight-set handles, building
+/// (and caching) the set on a miss. Hits move the entry to the back —
+/// rung-alternating serve traffic keeps a whole ladder resident instead
+/// of thrashing one slot.
+fn qcache_get<T>(
+    cache: &Mutex<Vec<(Vec<f32>, Arc<T>)>>,
+    bits: &[f32],
+    build: impl FnOnce() -> T,
+) -> Arc<T> {
+    let mut entries = cache.lock().unwrap();
+    if let Some(pos) = entries.iter().position(|(b, _)| b.as_slice() == bits) {
+        let entry = entries.remove(pos);
+        let handle = entry.1.clone();
+        entries.push(entry);
+        return handle;
+    }
+    let handle = Arc::new(build());
+    if entries.len() >= QCACHE_CAP {
+        entries.remove(0);
+    }
+    entries.push((bits.to_vec(), handle.clone()));
+    handle
+}
 
 impl CpuBackend {
     /// Build from an in-memory manifest + parameter list + batches.
@@ -142,8 +176,8 @@ impl CpuBackend {
             threads,
             outer_jobs: AtomicUsize::new(1),
             int8_serving: false,
-            qcache: Mutex::new(None),
-            qcache_int8: Mutex::new(None),
+            qcache: Mutex::new(Vec::new()),
+            qcache_int8: Mutex::new(Vec::new()),
             serve_scratch: Mutex::new(Vec::new()),
             execs: AtomicU64::new(0),
         })
@@ -301,29 +335,18 @@ impl CpuBackend {
     }
 
     /// The (cached) quantized parameter set for `bits`, as a shared
-    /// handle the caller uses **after** dropping the cache lock. A bits
-    /// change requantizes under the lock (one writer, once per vector);
-    /// steady-state requests only clone the `Arc`.
+    /// handle the caller uses **after** dropping the cache lock. An
+    /// unseen bits vector quantizes under the lock (one writer, once per
+    /// vector); steady-state requests — including a degrade ladder
+    /// alternating between resident rungs — only clone an `Arc`.
     fn quantized_for(&self, bits: &[f32]) -> Arc<Vec<(usize, Tensor)>> {
-        let mut guard = self.qcache.lock().unwrap();
-        let hit = matches!(&*guard, Some((b, _)) if b.as_slice() == bits);
-        if !hit {
-            let q = Arc::new(self.quantize_params(bits));
-            *guard = Some((bits.to_vec(), q));
-        }
-        guard.as_ref().unwrap().1.clone()
+        qcache_get(&self.qcache, bits, || self.quantize_params(bits))
     }
 
     /// The (cached) int8 weight set for `bits` — encoded once per bits
     /// vector, handed out as a shared handle like [`CpuBackend::quantized_for`].
     fn int8_for(&self, bits: &[f32]) -> Arc<Int8Set> {
-        let mut guard = self.qcache_int8.lock().unwrap();
-        let hit = matches!(&*guard, Some((b, _)) if b.as_slice() == bits);
-        if !hit {
-            let q = Arc::new(self.quantize_params_int8(bits));
-            *guard = Some((bits.to_vec(), q));
-        }
-        guard.as_ref().unwrap().1.clone()
+        qcache_get(&self.qcache_int8, bits, || self.quantize_params_int8(bits))
     }
 
     /// Pop a serve arena from the pool (or build one under contention).
@@ -357,10 +380,12 @@ impl Backend for CpuBackend {
     fn forward_all_qbits(&self, bits: &[f32]) -> Result<Vec<Vec<f32>>> {
         self.check_bits(bits)?;
         // quantize locally instead of through the serve qcache: the
-        // cache only earns its keep on the serve path (same bits every
-        // request); a sweep evaluates each distinct vector once, and
-        // fake-quant cost is negligible against the full-dataset
-        // forward — caching here would just churn the serve entry.
+        // cache only earns its keep on the serve path (a handful of
+        // bits vectors revisited per request); a sweep evaluates each
+        // distinct vector once, and fake-quant cost is negligible
+        // against the full-dataset forward — routing a sweep's stream
+        // of one-shot vectors through the LRU would just evict the
+        // serve ladder's resident rungs.
         let q = self.quantize_params(bits);
         let refs: Vec<(usize, &Tensor)> = q.iter().map(|(pi, t)| (*pi, t)).collect();
         let eff = self.effective(&refs)?;
@@ -495,6 +520,30 @@ mod tests {
         // second call with the same bits hits the quantized-param cache
         let again = be.qforward_one(&x, &bits).unwrap();
         assert_eq!(again, one);
+    }
+
+    #[test]
+    fn qcache_keeps_a_ladder_resident_and_evicts_lru() {
+        let be = toy_backend(1);
+        let x = be.batches[0].clone();
+        // a degrade-style ladder alternating between rungs: every rung
+        // stays resident (no thrash) and answers bitwise-identically on
+        // revisit
+        let ladder = [[8.0f32, 8.0], [6.0, 6.0], [4.0, 4.0]];
+        let first: Vec<Vec<f32>> =
+            ladder.iter().map(|b| be.qforward_one(&x, b).unwrap()).collect();
+        for (b, want) in ladder.iter().zip(&first) {
+            assert_eq!(&be.qforward_one(&x, b).unwrap(), want);
+        }
+        assert_eq!(be.qcache.lock().unwrap().len(), ladder.len(), "whole ladder resident");
+        // a stream of one-shot vectors stays bounded at the cap…
+        for k in 0..QCACHE_CAP + 3 {
+            let b = 9.0 + 0.25 * k as f32;
+            be.qforward_one(&x, &[b, b]).unwrap();
+        }
+        assert_eq!(be.qcache.lock().unwrap().len(), QCACHE_CAP);
+        // …and an evicted rung rebuilds to the same bits
+        assert_eq!(&be.qforward_one(&x, &ladder[0]).unwrap(), &first[0]);
     }
 
     #[test]

@@ -152,7 +152,7 @@ fn trained_artifacts() -> ModelArtifacts {
 }
 
 fn cfg(workers: usize, batch: usize, deadline_us: u64) -> ServerConfig {
-    ServerConfig { workers, batch, deadline_us, queue_cap: 0 }
+    ServerConfig { workers, batch, deadline_us, queue_cap: 0, ..ServerConfig::sequential() }
 }
 
 #[test]

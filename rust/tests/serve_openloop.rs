@@ -19,8 +19,8 @@ use std::collections::HashMap;
 
 use adaq::coordinator::server::{plan_arrivals, slice_series};
 use adaq::coordinator::{
-    run_open_loop, run_rate_ladder, OpenLoopConfig, OpenLoopReport, ServerConfig, Session,
-    ShedPolicy,
+    run_open_loop, run_rate_ladder, FaultPlan, OpenLoopConfig, OpenLoopReport, ServerConfig,
+    Session, ShedPolicy,
 };
 use adaq::dataset::{Dataset, IMG, NUM_CLASSES, TEST_SEED};
 use adaq::io::Json;
@@ -89,7 +89,13 @@ fn artifacts() -> ModelArtifacts {
 fn cfg(workers: usize) -> ServerConfig {
     // queue_cap pinned explicitly: the test also exercises the default
     // (worker-independent) admission cap separately below
-    ServerConfig { workers, batch: 2, deadline_us: 100, queue_cap: 8 }
+    ServerConfig {
+        workers,
+        batch: 2,
+        deadline_us: 100,
+        queue_cap: 8,
+        fault: FaultPlan::default(),
+    }
 }
 
 fn overload() -> OpenLoopConfig {
@@ -100,6 +106,7 @@ fn overload() -> OpenLoopConfig {
         seed: 7,
         shed: ShedPolicy::RejectNew,
         slice_ms: 20,
+        live_shed: false,
     }
 }
 
@@ -180,7 +187,13 @@ fn default_admission_cap_is_worker_independent() {
     let ol = OpenLoopConfig { requests: 200, ..overload() };
     let mut shed_sets = Vec::new();
     for (workers, batch) in [(1usize, 2usize), (4, 2), (2, 4)] {
-        let c = ServerConfig { workers, batch, deadline_us: 0, queue_cap: 0 };
+        let c = ServerConfig {
+            workers,
+            batch,
+            deadline_us: 0,
+            queue_cap: 0,
+            fault: FaultPlan::default(),
+        };
         let r = run_open_loop(&session, &test, &bits, &c, &ol).unwrap();
         assert!(r.shed_total() > 0);
         shed_sets.push(r.shed_ids);
@@ -226,6 +239,7 @@ fn shed_accounting_far_above_capacity_both_policies() {
             seed: 11,
             shed,
             slice_ms: 10,
+            live_shed: false,
         };
         let r = run_open_loop(&session, &test, &bits, &cfg(2), &ol).unwrap();
         assert_eq!(r.accepted + r.shed_total(), r.offered, "{shed:?}");
@@ -259,6 +273,7 @@ fn rate_ladder_emits_one_point_per_rung_and_requires_drain() {
         seed: 3,
         shed: ShedPolicy::RejectNew,
         slice_ms: 20,
+        live_shed: false,
     };
     let rates = [500.0, 2000.0, 8000.0];
     let curve = run_rate_ladder(&session, &test, &bits, &cfg(2), &base, &rates).unwrap();
@@ -329,6 +344,52 @@ fn empty_window_slices_report_zeros_not_nan() {
     assert_eq!(s[1].mean_sojourn_ms, 0.0);
     assert_eq!(s[2].completions, 0);
     assert_eq!(s[3].completions, 1);
+}
+
+#[test]
+fn live_shed_accounting_closes_under_real_queue_pressure() {
+    let test = Dataset::generate(60, TEST_SEED);
+    let session = Session::from_parts(artifacts(), test.clone(), 1).unwrap();
+    let bits = [8.0f32, 8.0];
+    // the virtual ledger admits everything (absurd drain capacity); a
+    // stalled worker then overflows the *real* queue, which only
+    // --live-shed mode reports — those sheds are timing-dependent by
+    // nature, so the assertions are about accounting, not exact counts
+    let ol = OpenLoopConfig {
+        rate_rps: 4000.0,
+        drain_rps: 1e9,
+        requests: 300,
+        seed: 7,
+        shed: ShedPolicy::RejectNew,
+        slice_ms: 20,
+        live_shed: true,
+    };
+    let c = ServerConfig {
+        workers: 1,
+        batch: 2,
+        deadline_us: 0,
+        queue_cap: 8,
+        fault: FaultPlan::parse("slow@0:250").unwrap(),
+    };
+    let r = run_open_loop(&session, &test, &bits, &c, &ol).unwrap();
+    assert_eq!(r.shed_total(), 0, "the virtual ledger admitted everything");
+    assert!(r.live_shed > 0, "a stalled worker must overflow the real queue");
+    assert_eq!(r.live_shed, r.live_shed_ids.len());
+    assert_eq!(
+        r.accepted + r.shed_total() + r.live_shed + r.errored,
+        r.offered,
+        "live-shed accounting must close exactly"
+    );
+    for &id in &r.live_shed_ids {
+        assert_eq!(r.serve.predictions[id], -1, "live-shed request {id} carries the sentinel");
+    }
+    assert_eq!(r.serve.requests, r.accepted);
+    // without the flag the same pressure back-pressures the generator
+    // instead of dropping: no live sheds, everything admitted is served
+    let off = OpenLoopConfig { live_shed: false, ..ol };
+    let r2 = run_open_loop(&session, &test, &bits, &c, &off).unwrap();
+    assert_eq!(r2.live_shed, 0);
+    assert_eq!(r2.accepted + r2.shed_total() + r2.errored, r2.offered);
 }
 
 #[test]
