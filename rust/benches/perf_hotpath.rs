@@ -19,8 +19,9 @@
 
 use adaq::bench_support as bs;
 use adaq::coordinator::{
-    run_degrade, run_open_loop, run_rate_ladder, run_server, run_sweep_jobs, DegradeConfig,
-    EvalCache, FaultPlan, OpenLoopConfig, Rung, ServerConfig, Session, ShedPolicy, SweepConfig,
+    run_degrade, run_open_loop, run_rate_ladder, run_scenario, run_server, run_sweep_jobs,
+    ArrivalKind, DegradeConfig, EvalCache, FaultPlan, OpenLoopConfig, Rung, ScenarioSpec,
+    ServerConfig, Session, ShedPolicy, SweepConfig, TenantSpec,
 };
 use adaq::dataset::Dataset;
 use adaq::io::Json;
@@ -680,6 +681,91 @@ fn main() {
                 ("slice_ms", Json::Num(slice_ms as f64)),
             ]),
         ));
+
+        // ---- scenario engine: a 3-tenant mix (two steady Poisson
+        //      streams + one MMPP burster) against the measured drain
+        //      rate. Per-tenant accounting must close exactly, the
+        //      bursts must show up as shed-heavy slices next to clean
+        //      ones, and weighted admission must protect the heavy
+        //      interactive tenant (all asserted — ledger-level claims,
+        //      machine-independent). ----
+        let nt = n / 3;
+        let slice_ms = ((nt as f64 / (0.25 * drain) * 1000.0) / 12.0).clamp(1.0, 20.0) as u64;
+        let spec = ScenarioSpec {
+            name: "bench_mix".into(),
+            tenants: vec![
+                TenantSpec {
+                    weight: 4.0,
+                    slo_ms: 50.0,
+                    ..TenantSpec::poisson("interactive", drain * 0.25, nt)
+                },
+                TenantSpec {
+                    bits: Some(vec![4.0; 3]),
+                    ..TenantSpec::poisson("batch", drain * 0.25, nt)
+                },
+                TenantSpec {
+                    weight: 2.0,
+                    arrivals: ArrivalKind::Mmpp {
+                        rate_hi_rps: drain * 3.0,
+                        rate_lo_rps: drain * 0.1,
+                        mean_hi_ms: 40.0,
+                        mean_lo_ms: 120.0,
+                    },
+                    ..TenantSpec::poisson("burst", drain, nt)
+                },
+            ],
+            drain_rps: drain,
+            queue_cap: 12,
+            seed: 42,
+            slice_ms,
+            shed: ShedPolicy::RejectNew,
+        };
+        let r = run_scenario(&session, &test, &bits, &cfg, &spec, None, false).unwrap();
+        assert_eq!(
+            r.open.accepted + r.open.shed_total() + r.open.live_shed + r.open.errored,
+            r.open.offered,
+            "scenario accounting must close in total"
+        );
+        for t in &r.tenants {
+            assert!(t.closes(), "tenant {} accounting must close", t.name);
+        }
+        assert!(r.open.shed_total() > 0, "the burst tenant must overload the queue");
+        let sheddy = r
+            .plan_slices
+            .iter()
+            .filter(|s| s.shed.iter().sum::<usize>() > 0)
+            .count();
+        let clean = r
+            .plan_slices
+            .iter()
+            .filter(|s| s.offered.iter().sum::<usize>() > 0 && s.shed.iter().sum::<usize>() == 0)
+            .count();
+        assert!(
+            sheddy > 0 && clean > 0,
+            "bursty shedding must be slice-local: {sheddy} shed-heavy vs {clean} clean slices"
+        );
+        let frac = |t: &adaq::coordinator::server::TenantReport| {
+            t.shed_total() as f64 / t.offered.max(1) as f64
+        };
+        assert!(
+            frac(&r.tenants[1]) >= frac(&r.tenants[0]),
+            "weighted admission must not shed the heavy tenant harder than the light one"
+        );
+        rows.push(vec![
+            format!("serve_scenario 3-tenant mix, w{w} [{}]", spec.shed.name()),
+            format!("{:.0} rps goodput", r.open.goodput_rps),
+            format!(
+                "{}/{} accepted, {} shed; tenant shed% {:.0}/{:.0}/{:.0}; {} slices",
+                r.open.accepted,
+                r.open.offered,
+                r.open.shed_total(),
+                frac(&r.tenants[0]) * 100.0,
+                frac(&r.tenants[1]) * 100.0,
+                frac(&r.tenants[2]) * 100.0,
+                r.plan_slices.len()
+            ),
+        ]);
+        json_fields.push(("serve_scenario", r.to_json()));
     }
 
     // ---- host-side quantizer throughput ----

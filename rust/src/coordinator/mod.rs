@@ -31,6 +31,12 @@
 //! goodput on the same deterministic virtual-time ledger. [`FaultPlan`]
 //! injects seeded worker faults (panic / poisoned batch / stall) that
 //! the engine must absorb as per-request error outcomes.
+//!
+//! [`run_scenario`] generalizes the open-loop harness into a workload
+//! suite ([`ScenarioSpec`]): arrival-trace replay, seeded MMPP
+//! burst/diurnal generators, and multi-tenant mixes with weighted
+//! admission and per-tenant accounting — composing with the degrade
+//! ladder, fault injection, and int8 serving.
 
 pub mod pool;
 mod serve;
@@ -41,9 +47,9 @@ mod sweep;
 pub use pool::JobPool;
 pub use serve::{serve_loop, ServeStats};
 pub use server::{
-    run_degrade, run_open_loop, run_rate_ladder, run_server, DegradeConfig, DegradeReport,
-    FaultPlan, LoadCurve, OpenLoopConfig, OpenLoopReport, Rung, ServeReport, ServerConfig,
-    ShedPolicy,
+    run_degrade, run_open_loop, run_rate_ladder, run_scenario, run_server, ArrivalKind,
+    DegradeConfig, DegradeReport, FaultPlan, LoadCurve, OpenLoopConfig, OpenLoopReport, Rung,
+    ScenarioReport, ScenarioSpec, ServeReport, ServerConfig, ShedPolicy, TenantSpec,
 };
 pub use session::{Baseline, EvalOutput, Session};
 pub use sweep::{run_sweep, run_sweep_jobs, EvalCache, SweepConfig, SweepResult};

@@ -259,6 +259,30 @@ pub fn plan_degrade(
     dc: &DegradeConfig,
 ) -> DegradePlan {
     assert!(rate_rps > 0.0, "offered rate must be positive");
+    let mut rng = Pcg32::new(seed);
+    let gap_mean_us = 1e6 / rate_rps;
+    // same f64 accumulation the inlined loop used — the arrival stream
+    // is bitwise identical to the pre-refactor planner
+    let arrivals = (0..offered).scan(0.0f64, move |t, _| {
+        *t += rng.exponential(gap_mean_us);
+        Some(*t)
+    });
+    plan_degrade_core(arrivals, offered, queue_cap, policy, slice_ms, dc)
+}
+
+/// The degrade planner over an **explicit arrival stream** (µs offsets
+/// as f64, non-decreasing): the scenario engine feeds merged
+/// multi-tenant / MMPP / trace schedules through the same controller
+/// and virtual queue that [`plan_degrade`] wraps with a seeded Poisson
+/// stream. Exactly `offered` arrivals are consumed.
+pub(crate) fn plan_degrade_core(
+    arrivals: impl Iterator<Item = f64>,
+    offered: usize,
+    queue_cap: usize,
+    policy: ShedPolicy,
+    slice_ms: u64,
+    dc: &DegradeConfig,
+) -> DegradePlan {
     assert!(!dc.ladder.is_empty(), "degrade ladder must not be empty");
     let queue_cap = queue_cap.max(1);
     let nrungs = dc.ladder.len();
@@ -266,8 +290,7 @@ pub fn plan_degrade(
     let high_mark = ((dc.high_water * queue_cap as f64).ceil() as usize).max(1);
     let low_mark = (dc.low_water * queue_cap as f64).floor() as usize;
     let slice_us = slice_ms.max(1) * 1000;
-    let mut rng = Pcg32::new(seed);
-    let gap_mean_us = 1e6 / rate_rps;
+    let mut arrivals = arrivals.take(offered);
 
     let mut arrivals_us = Vec::with_capacity(offered);
     let mut admitted = vec![true; offered];
@@ -279,7 +302,6 @@ pub fn plan_degrade(
     // virtual server state (see plan_arrivals) + controller state
     let mut waiting: VecDeque<usize> = VecDeque::new();
     let mut free_at = 0.0f64;
-    let mut t = 0.0f64;
     let mut rung = 0usize;
     let (mut over, mut clear) = (0usize, 0usize);
     let mut sheds_in_slice = 0usize;
@@ -306,13 +328,19 @@ pub fn plan_degrade(
     }
 
     for i in 0..offered {
-        t += rng.exponential(gap_mean_us);
+        let t = arrivals.next().expect("arrival stream ended before `offered` items");
         let t_us = t.round() as u64;
         // every slice boundary up to this arrival is a controller step;
         // a boundary coinciding with the arrival instant runs *first*,
         // so the arrival lands under the post-switch rung
         while next_boundary <= t_us {
-            drain_until(&mut waiting, &mut free_at, &arrivals_us, service_us[rung], next_boundary as f64);
+            drain_until(
+                &mut waiting,
+                &mut free_at,
+                &arrivals_us,
+                service_us[rung],
+                next_boundary as f64,
+            );
             let depth = waiting.len();
             let overloaded = depth >= high_mark || sheds_in_slice > 0;
             let is_clear = depth <= low_mark && sheds_in_slice == 0;

@@ -49,11 +49,18 @@
 //!   batch, slow worker) proving the engine's panic-safety: faults
 //!   become per-request error outcomes ([`ServeReport::errors`]), the
 //!   run always completes, and `accepted + shed + errored == offered`.
+//!
+//! The [`scenario`] submodule generalizes the open-loop harness into a
+//! workload suite: trace replay, seeded MMPP burst/diurnal generators,
+//! and multi-tenant mixes with weighted admission and per-tenant
+//! accounting — committed specs under `scenarios/` reproduce named
+//! curves via `adaq serve --scenario NAME`.
 
 pub mod degrade;
 mod fault;
 pub mod openloop;
 mod queue;
+pub mod scenario;
 mod stats;
 mod worker;
 
@@ -67,6 +74,11 @@ pub use openloop::{
     OpenLoopReport,
 };
 pub use queue::{Admission, Request, RequestQueue, ShedPolicy};
+pub use scenario::{
+    gen_mmpp, gen_poisson, merged_schedule, plan_scenario, plan_slices, read_trace, run_scenario,
+    write_trace, ArrivalKind, PlanSlice, ScenarioPlan, ScenarioReport, ScenarioSpec, TenantCounts,
+    TenantReport, TenantSpec,
+};
 pub use stats::{slice_series, ServeReport, SliceStat};
 
 use std::time::{Duration, Instant};

@@ -1,0 +1,1310 @@
+//! Scenario engine: the open-loop harness generalized into a workload
+//! suite — arrival-trace replay, seeded bursty/diurnal generators, and
+//! multi-tenant mixes with weighted admission and per-tenant accounting.
+//!
+//! A fixed-rate Poisson stream (`openloop`) is one scenario. Real edge
+//! traffic is bursty, diurnal, and multi-tenant; this module describes a
+//! workload as a [`ScenarioSpec`] — several named [`TenantSpec`] arrival
+//! streams sharing one engine — and runs it through the same virtual-time
+//! admission ledger and enforcement half the open-loop mode uses
+//! (`openloop::run_planned`). Committed specs live in `scenarios/*.json`
+//! at the repo root; `adaq serve --scenario burst_2x` reproduces a named
+//! curve.
+//!
+//! ## Arrival generators
+//!
+//! Every generator is a pure function of `(spec, seed)` over the same
+//! [`Pcg32`] stream the open-loop mode draws from, so schedules are
+//! bitwise reproducible:
+//!
+//! * [`gen_poisson`] — the open-loop arrival process: i.i.d. exponential
+//!   gaps at a fixed rate.
+//! * [`gen_mmpp`] — a 2-state Markov-modulated Poisson process: the
+//!   stream dwells in a *hi* state (arrivals at `rate_hi_rps`) and a *lo*
+//!   state (`rate_lo_rps`), with exponentially distributed dwell times;
+//!   `rate_lo_rps = 0` degenerates to an **on/off-modulated Poisson**
+//!   burst generator, long dwells make it diurnal. The walk starts in the
+//!   hi state; a gap that would cross the state boundary is discarded and
+//!   redrawn in the new state (memoryless, so the process is still MMPP —
+//!   and deterministic either way).
+//! * Trace replay — [`read_trace`] feeds a recorded timestamp file
+//!   (`<µs> [tenant]` rows; see [`write_trace`]), so any run's arrivals
+//!   become a replayable artifact via `--record-trace`.
+//!
+//! ## Multi-tenant merge and weighted admission
+//!
+//! Each tenant's stream is generated from its own seed
+//! (`seed ^ GOLDEN·(index+1)`, fixed derivation) and the streams are
+//! merged into one globally ordered schedule; ties break toward the
+//! lower tenant index, so the merged order is deterministic. The ledger
+//! ([`plan_scenario`]) replays the merged schedule against the same
+//! virtual single-server queue as `plan_arrivals`, with the tenant
+//! **weight** deciding who pays under pressure:
+//!
+//! * [`ShedPolicy::RejectNew`] base — a full queue evicts the oldest
+//!   *strictly lighter* waiting request in favor of the arrival; if no
+//!   waiting request is lighter, the arrival itself is rejected. With
+//!   uniform weights this is exactly plain reject-new.
+//! * [`ShedPolicy::DropOldest`] base — a full queue evicts the oldest
+//!   waiting request whose weight is ≤ the arrival's; if every waiting
+//!   request is heavier, the arrival is rejected. With uniform weights
+//!   this is exactly plain oldest-drop.
+//!
+//! Per-tenant accounting closes exactly, per tenant and in total:
+//! `offered = accepted + shed + live_shed + errored`
+//! ([`TenantReport`]; asserted in `rust/tests/serve_scenario.rs` and
+//! property-tested in `rust/tests/proptest_invariants.rs`).
+//!
+//! ## Determinism contract
+//!
+//! Same as the open-loop mode, extended: the merged schedule, tenant
+//! assignment, admission/shed decisions, per-tenant counters, and the
+//! virtual-time [`PlanSlice`] series are pure functions of the spec —
+//! worker count, batch size, and machine speed never enter, so the whole
+//! [`ScenarioReport`] deterministic core is bitwise identical at
+//! `--workers 1/2/4` and across repeat runs. Measured fields (per-tenant
+//! sojourn percentiles, SLO hits, wall-clock slices) sit outside the
+//! contract, exactly like the open-loop report's latency columns.
+//!
+//! Per-tenant **bit allocations** ride on the degrade mode's
+//! `RungTable`: tenant `k` serves at `tenants[k].bits` (or the run's
+//! default bits), so a mix of fidelity tiers shares one engine. A
+//! scenario can instead compose with `--degrade` (one ladder ruling
+//! admission for the whole mix) — but not both, since both want the
+//! rung table.
+
+use std::collections::VecDeque;
+use std::path::{Path, PathBuf};
+
+use crate::dataset::Dataset;
+use crate::io::Json;
+use crate::rng::Pcg32;
+use crate::util::percentile_nearest_rank;
+use crate::{Error, Result};
+
+use super::degrade::{plan_degrade_core, DegradeConfig, RungSwitch};
+use super::openloop::{
+    assemble_open_report, run_planned, AdmissionPlan, OpenLoopConfig, OpenLoopReport,
+    DEFAULT_ADMISSION_CAP,
+};
+use super::queue::ShedPolicy;
+use super::worker::RungTable;
+use super::{ServerConfig, Session};
+
+/// Fixed per-tenant seed derivation: tenant `k`'s stream draws from
+/// `Pcg32::new(seed ^ GOLDEN·(k+1))`. Documented so recorded traces and
+/// regenerated schedules agree forever.
+fn tenant_seed(seed: u64, tenant_idx: usize) -> u64 {
+    seed ^ 0x9E37_79B9_7F4A_7C15u64.wrapping_mul(tenant_idx as u64 + 1)
+}
+
+/// Seeded Poisson arrival schedule: `n` arrivals at `rate_rps`, µs
+/// offsets from the epoch (same draw sequence as `plan_arrivals`).
+pub fn gen_poisson(n: usize, rate_rps: f64, seed: u64) -> Vec<u64> {
+    assert!(rate_rps > 0.0, "poisson rate must be positive");
+    let mut rng = Pcg32::new(seed);
+    let gap_mean_us = 1e6 / rate_rps;
+    let mut t = 0.0f64;
+    (0..n)
+        .map(|_| {
+            t += rng.exponential(gap_mean_us);
+            t.round() as u64
+        })
+        .collect()
+}
+
+/// Seeded 2-state MMPP arrival schedule: `n` arrivals, alternating
+/// exponentially distributed dwells in a *hi* state (`rate_hi_rps`) and
+/// a *lo* state (`rate_lo_rps`; 0 = silent ⇒ on/off-modulated Poisson).
+/// The walk starts in the hi state; an arrival gap that would cross the
+/// state boundary is discarded and redrawn under the new state's rate
+/// (memoryless). Pure f64 + PCG32 arithmetic — bitwise reproducible per
+/// `(n, rates, dwells, seed)` tuple.
+pub fn gen_mmpp(
+    n: usize,
+    rate_hi_rps: f64,
+    rate_lo_rps: f64,
+    mean_hi_ms: f64,
+    mean_lo_ms: f64,
+    seed: u64,
+) -> Vec<u64> {
+    assert!(rate_hi_rps > 0.0, "mmpp hi rate must be positive");
+    assert!(rate_lo_rps >= 0.0, "mmpp lo rate must be non-negative");
+    assert!(mean_hi_ms > 0.0 && mean_lo_ms > 0.0, "mmpp dwell means must be positive");
+    let mut rng = Pcg32::new(seed);
+    let mut t = 0.0f64; // µs
+    let mut hi = true;
+    let mut state_end = rng.exponential(mean_hi_ms * 1000.0);
+    let mut out = Vec::with_capacity(n);
+    while out.len() < n {
+        let rate = if hi { rate_hi_rps } else { rate_lo_rps };
+        if rate > 0.0 {
+            let gap = rng.exponential(1e6 / rate);
+            if t + gap <= state_end {
+                t += gap;
+                out.push(t.round() as u64);
+                continue;
+            }
+        }
+        // no arrival fits before the boundary: jump there and flip state
+        t = state_end;
+        hi = !hi;
+        let mean_us = if hi { mean_hi_ms } else { mean_lo_ms } * 1000.0;
+        state_end = t + rng.exponential(mean_us);
+    }
+    out
+}
+
+/// Read an arrival-trace file: one `<µs> [tenant]` row per arrival
+/// (blank lines and `#` comments skipped). Returns `(t_us, tenant tag)`
+/// rows; untagged rows carry `None` and match any tenant on replay.
+/// Errors name the offending line: unparsable timestamps, and
+/// non-monotonic (decreasing) timestamps, are rejected — as is a file
+/// with no arrival rows at all.
+pub fn read_trace(path: &Path) -> Result<Vec<(u64, Option<String>)>> {
+    let text = std::fs::read_to_string(path)
+        .map_err(|e| Error::Model(format!("trace {}: {e}", path.display())))?;
+    let mut rows: Vec<(u64, Option<String>)> = Vec::new();
+    for (lineno, line) in text.lines().enumerate() {
+        let line = line.trim();
+        if line.is_empty() || line.starts_with('#') {
+            continue;
+        }
+        let mut parts = line.split_whitespace();
+        let t_us: u64 = parts
+            .next()
+            .expect("non-empty line has a first token")
+            .parse()
+            .map_err(|e| {
+                Error::Model(format!(
+                    "trace {} line {}: bad timestamp ({e})",
+                    path.display(),
+                    lineno + 1
+                ))
+            })?;
+        if let Some(&(prev, _)) = rows.last() {
+            if t_us < prev {
+                return Err(Error::Model(format!(
+                    "trace {} line {}: non-monotonic timestamp {t_us} after {prev}",
+                    path.display(),
+                    lineno + 1
+                )));
+            }
+        }
+        rows.push((t_us, parts.next().map(str::to_string)));
+    }
+    if rows.is_empty() {
+        return Err(Error::Model(format!(
+            "trace {} is empty (no arrival rows)",
+            path.display()
+        )));
+    }
+    Ok(rows)
+}
+
+/// Write an arrival trace (`<µs> <tenant>` rows) in the format
+/// [`read_trace`] reads — the `--record-trace` writer, so any run's
+/// arrivals become a replayable artifact.
+pub fn write_trace(path: &Path, rows: &[(u64, &str)]) -> Result<()> {
+    let mut text = String::with_capacity(rows.len() * 16 + 64);
+    text.push_str("# adaq arrival trace v1: <microseconds> [tenant]\n");
+    for &(t_us, tenant) in rows {
+        text.push_str(&format!("{t_us} {tenant}\n"));
+    }
+    std::fs::write(path, text)?;
+    Ok(())
+}
+
+/// How one tenant's arrivals are generated.
+#[derive(Clone, Debug, PartialEq)]
+pub enum ArrivalKind {
+    /// Fixed-rate Poisson stream (the open-loop process).
+    Poisson {
+        rate_rps: f64,
+    },
+    /// 2-state MMPP burst/diurnal generator (see [`gen_mmpp`];
+    /// `rate_lo_rps = 0` = on/off-modulated Poisson).
+    Mmpp {
+        rate_hi_rps: f64,
+        rate_lo_rps: f64,
+        mean_hi_ms: f64,
+        mean_lo_ms: f64,
+    },
+    /// Replay a recorded timestamp file (see [`read_trace`]): the tenant
+    /// takes every row tagged with its name plus every untagged row.
+    Trace {
+        path: PathBuf,
+    },
+}
+
+/// One named arrival stream of a scenario: its generator, admission
+/// weight, per-tenant bit allocation, and SLO target.
+#[derive(Clone, Debug, PartialEq)]
+pub struct TenantSpec {
+    /// Tenant name (unique within the scenario; tags trace rows).
+    pub name: String,
+    /// Arrival generator.
+    pub arrivals: ArrivalKind,
+    /// Offered arrivals from this tenant. Must be ≥ 1 for generated
+    /// streams and 0 for [`ArrivalKind::Trace`] (the file decides).
+    pub requests: usize,
+    /// Admission weight: under queue pressure, heavier tenants evict
+    /// lighter ones (see the module docs). 1.0 = neutral.
+    pub weight: f64,
+    /// Per-tenant bit allocation; `None` serves the run's default bits.
+    pub bits: Option<Vec<f32>>,
+    /// Sojourn SLO target, ms (0 = no target; the per-tenant report
+    /// counts completions within it).
+    pub slo_ms: f64,
+}
+
+impl TenantSpec {
+    /// A neutral Poisson tenant (weight 1, default bits, no SLO).
+    pub fn poisson(name: impl Into<String>, rate_rps: f64, requests: usize) -> TenantSpec {
+        TenantSpec {
+            name: name.into(),
+            arrivals: ArrivalKind::Poisson { rate_rps },
+            requests,
+            weight: 1.0,
+            bits: None,
+            slo_ms: 0.0,
+        }
+    }
+
+    /// This tenant's arrival schedule (µs offsets, non-decreasing) — a
+    /// pure function of `(spec, scenario seed, tenant index)` for the
+    /// generated kinds, and of the trace file's contents for replay.
+    pub fn schedule(&self, seed: u64, tenant_idx: usize) -> Result<Vec<u64>> {
+        match &self.arrivals {
+            ArrivalKind::Poisson { rate_rps } => {
+                Ok(gen_poisson(self.requests, *rate_rps, tenant_seed(seed, tenant_idx)))
+            }
+            ArrivalKind::Mmpp { rate_hi_rps, rate_lo_rps, mean_hi_ms, mean_lo_ms } => Ok(gen_mmpp(
+                self.requests,
+                *rate_hi_rps,
+                *rate_lo_rps,
+                *mean_hi_ms,
+                *mean_lo_ms,
+                tenant_seed(seed, tenant_idx),
+            )),
+            ArrivalKind::Trace { path } => {
+                let mine: Vec<u64> = read_trace(path)?
+                    .into_iter()
+                    .filter(|(_, tag)| tag.as_deref().map_or(true, |n| n == self.name))
+                    .map(|(t, _)| t)
+                    .collect();
+                if mine.is_empty() {
+                    return Err(Error::Model(format!(
+                        "trace {} has no arrivals for tenant {:?}",
+                        path.display(),
+                        self.name
+                    )));
+                }
+                Ok(mine)
+            }
+        }
+    }
+}
+
+/// A complete workload scenario: the tenant mix plus the shared
+/// admission model (drain capacity, queue cap, shed policy, slices).
+#[derive(Clone, Debug, PartialEq)]
+pub struct ScenarioSpec {
+    /// Scenario name (reports and bench rows carry it).
+    pub name: String,
+    /// The tenant mix (1–64 streams).
+    pub tenants: Vec<TenantSpec>,
+    /// Virtual drain capacity of the shared admission ledger, req/s.
+    pub drain_rps: f64,
+    /// Admission-ledger queue capacity (0 → the open-loop default,
+    /// [`DEFAULT_ADMISSION_CAP`]).
+    pub queue_cap: usize,
+    /// Scenario seed; tenant `k` draws from the documented derived seed.
+    pub seed: u64,
+    /// Slice width for the virtual + wall-clock series, ms (0 → 100 ms).
+    pub slice_ms: u64,
+    /// Base shed policy the weighted admission generalizes.
+    pub shed: ShedPolicy,
+}
+
+impl ScenarioSpec {
+    /// Parse a scenario spec object. Relative trace paths resolve
+    /// against `base_dir` (the spec file's directory for
+    /// [`ScenarioSpec::load`]). Validates before returning, so malformed
+    /// specs fail here with a useful message, never mid-run.
+    pub fn from_json(j: &Json, base_dir: &Path) -> Result<ScenarioSpec> {
+        let name = j.get("name").and_then(Json::as_str).unwrap_or("scenario").to_string();
+        let drain_rps = j
+            .req("drain_rps")?
+            .as_f64()
+            .ok_or_else(|| Error::Model("scenario: \"drain_rps\" must be a number".into()))?;
+        let shed = match j.get("shed").and_then(Json::as_str) {
+            None => ShedPolicy::RejectNew,
+            Some(s) => ShedPolicy::parse(s).ok_or_else(|| {
+                Error::Model(format!("scenario: unknown shed policy {s:?} (reject|oldest-drop)"))
+            })?,
+        };
+        let tenants_arr = j
+            .req("tenants")?
+            .as_arr()
+            .ok_or_else(|| Error::Model("scenario: \"tenants\" must be an array".into()))?;
+        let mut tenants = Vec::with_capacity(tenants_arr.len());
+        for tj in tenants_arr {
+            tenants.push(Self::tenant_from_json(tj, base_dir)?);
+        }
+        let spec = ScenarioSpec {
+            name,
+            tenants,
+            drain_rps,
+            queue_cap: j.get("queue_cap").and_then(Json::as_usize).unwrap_or(0),
+            seed: j.get("seed").and_then(Json::as_usize).unwrap_or(42) as u64,
+            slice_ms: j.get("slice_ms").and_then(Json::as_usize).unwrap_or(0) as u64,
+            shed,
+        };
+        spec.validate()?;
+        Ok(spec)
+    }
+
+    fn tenant_from_json(j: &Json, base_dir: &Path) -> Result<TenantSpec> {
+        let name = j
+            .req("name")?
+            .as_str()
+            .ok_or_else(|| Error::Model("scenario tenant: \"name\" must be a string".into()))?
+            .to_string();
+        let ctx = |what: &str| Error::Model(format!("scenario tenant {name:?}: {what}"));
+        let aj = j.req("arrivals").map_err(|_| ctx("missing \"arrivals\" object"))?;
+        let kind = aj
+            .req("kind")?
+            .as_str()
+            .ok_or_else(|| ctx("arrivals \"kind\" must be a string"))?;
+        let num = |key: &str, default: Option<f64>| -> Result<f64> {
+            match (aj.get(key).and_then(Json::as_f64), default) {
+                (Some(v), _) => Ok(v),
+                (None, Some(d)) => Ok(d),
+                (None, None) => Err(ctx(&format!("arrivals want a numeric {key:?}"))),
+            }
+        };
+        let arrivals = match kind {
+            "poisson" => ArrivalKind::Poisson { rate_rps: num("rate_rps", None)? },
+            // "onoff" is the documented alias for the rate_lo = 0 case
+            "mmpp" | "onoff" => ArrivalKind::Mmpp {
+                rate_hi_rps: num("rate_hi_rps", None)?,
+                rate_lo_rps: num("rate_lo_rps", Some(0.0))?,
+                mean_hi_ms: num("mean_hi_ms", None)?,
+                mean_lo_ms: num("mean_lo_ms", None)?,
+            },
+            "trace" => {
+                let p = aj
+                    .req("path")?
+                    .as_str()
+                    .ok_or_else(|| ctx("trace arrivals want a \"path\" string"))?;
+                let p = PathBuf::from(p);
+                let p = if p.is_relative() { base_dir.join(p) } else { p };
+                ArrivalKind::Trace { path: p }
+            }
+            other => {
+                return Err(ctx(&format!("unknown arrival kind {other:?} (poisson|mmpp|trace)")))
+            }
+        };
+        let bits = match j.get("bits") {
+            None => None,
+            Some(b) => {
+                let arr = b.as_arr().ok_or_else(|| ctx("\"bits\" must be an array"))?;
+                Some(
+                    arr.iter()
+                        .map(|v| {
+                            v.as_f64()
+                                .map(|x| x as f32)
+                                .ok_or_else(|| ctx("non-numeric bit width"))
+                        })
+                        .collect::<Result<Vec<f32>>>()?,
+                )
+            }
+        };
+        Ok(TenantSpec {
+            requests: j.get("requests").and_then(Json::as_usize).unwrap_or(0),
+            weight: j.get("weight").and_then(Json::as_f64).unwrap_or(1.0),
+            slo_ms: j.get("slo_ms").and_then(Json::as_f64).unwrap_or(0.0),
+            name,
+            arrivals,
+            bits,
+        })
+    }
+
+    /// Load and validate a spec file; relative trace paths resolve
+    /// against the spec file's directory.
+    pub fn load(path: impl AsRef<Path>) -> Result<ScenarioSpec> {
+        let path = path.as_ref();
+        let base = path.parent().filter(|p| !p.as_os_str().is_empty());
+        ScenarioSpec::from_json(&Json::parse_file(path)?, base.unwrap_or(Path::new(".")))
+    }
+
+    /// Reject malformed specs with a message naming the offending field
+    /// — empty tenant lists, duplicate names, zero/negative rates or
+    /// weights, non-positive dwells, and generated streams with no
+    /// request budget all fail here, before any engine state exists.
+    pub fn validate(&self) -> Result<()> {
+        if self.tenants.is_empty() {
+            return Err(Error::Model("scenario wants at least one tenant".into()));
+        }
+        if self.tenants.len() > 64 {
+            return Err(Error::Model(format!(
+                "scenario has {} tenants; the engine caps the mix at 64",
+                self.tenants.len()
+            )));
+        }
+        if !(self.drain_rps > 0.0) || !self.drain_rps.is_finite() {
+            return Err(Error::Model(format!(
+                "scenario wants a positive finite drain_rps, got {}",
+                self.drain_rps
+            )));
+        }
+        for (i, t) in self.tenants.iter().enumerate() {
+            let ctx = |what: String| Error::Model(format!("scenario tenant {:?}: {what}", t.name));
+            if t.name.is_empty() {
+                return Err(Error::Model(format!("scenario tenant {i} has an empty name")));
+            }
+            if self.tenants[..i].iter().any(|o| o.name == t.name) {
+                return Err(Error::Model(format!("duplicate scenario tenant name {:?}", t.name)));
+            }
+            if !(t.weight > 0.0) || !t.weight.is_finite() {
+                return Err(ctx(format!("weight must be positive and finite, got {}", t.weight)));
+            }
+            if !(t.slo_ms >= 0.0) || !t.slo_ms.is_finite() {
+                return Err(ctx(format!("slo_ms must be ≥ 0 and finite, got {}", t.slo_ms)));
+            }
+            let positive = |key: &str, v: f64| -> Result<()> {
+                if !(v > 0.0) || !v.is_finite() {
+                    return Err(ctx(format!("{key} must be positive and finite, got {v}")));
+                }
+                Ok(())
+            };
+            match &t.arrivals {
+                ArrivalKind::Poisson { rate_rps } => {
+                    positive("rate_rps", *rate_rps)?;
+                    if t.requests == 0 {
+                        return Err(ctx("poisson arrivals want requests ≥ 1".into()));
+                    }
+                }
+                ArrivalKind::Mmpp { rate_hi_rps, rate_lo_rps, mean_hi_ms, mean_lo_ms } => {
+                    positive("rate_hi_rps", *rate_hi_rps)?;
+                    if !(*rate_lo_rps >= 0.0) || !rate_lo_rps.is_finite() {
+                        return Err(ctx(format!(
+                            "rate_lo_rps must be ≥ 0 and finite, got {rate_lo_rps}"
+                        )));
+                    }
+                    positive("mean_hi_ms", *mean_hi_ms)?;
+                    positive("mean_lo_ms", *mean_lo_ms)?;
+                    if t.requests == 0 {
+                        return Err(ctx("mmpp arrivals want requests ≥ 1".into()));
+                    }
+                }
+                ArrivalKind::Trace { .. } => {
+                    if t.requests != 0 {
+                        return Err(ctx(
+                            "trace tenants take their request count from the file; \
+                             set requests to 0"
+                                .into(),
+                        ));
+                    }
+                }
+            }
+        }
+        Ok(())
+    }
+
+    fn effective_cap(&self) -> usize {
+        if self.queue_cap > 0 {
+            self.queue_cap
+        } else {
+            DEFAULT_ADMISSION_CAP
+        }
+    }
+
+    fn effective_slice_ms(&self) -> u64 {
+        if self.slice_ms > 0 {
+            self.slice_ms
+        } else {
+            100
+        }
+    }
+}
+
+/// Generate every tenant's stream and merge into one globally ordered
+/// schedule. Returns `(arrivals_us, tenant_of)` — non-decreasing, ties
+/// broken toward the lower tenant index (deterministic merge order).
+pub fn merged_schedule(spec: &ScenarioSpec) -> Result<(Vec<u64>, Vec<u8>)> {
+    let mut streams: Vec<Vec<u64>> = Vec::with_capacity(spec.tenants.len());
+    for (idx, t) in spec.tenants.iter().enumerate() {
+        streams.push(t.schedule(spec.seed, idx)?);
+    }
+    let total: usize = streams.iter().map(Vec::len).sum();
+    let mut pos = vec![0usize; streams.len()];
+    let mut arrivals_us = Vec::with_capacity(total);
+    let mut tenant_of = Vec::with_capacity(total);
+    for _ in 0..total {
+        let mut best: Option<usize> = None;
+        for (k, s) in streams.iter().enumerate() {
+            if pos[k] < s.len() && best.map_or(true, |b| s[pos[k]] < streams[b][pos[b]]) {
+                best = Some(k);
+            }
+        }
+        let k = best.expect("merge pops exactly `total` arrivals");
+        arrivals_us.push(streams[k][pos[k]]);
+        tenant_of.push(k as u8);
+        pos[k] += 1;
+    }
+    Ok((arrivals_us, tenant_of))
+}
+
+/// Ledger-level per-tenant accounting (virtual time): what the
+/// admission plan offered, admitted, and shed for one tenant.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct TenantCounts {
+    pub offered: usize,
+    /// Ledger-admitted (includes requests that later error or live-shed).
+    pub admitted: usize,
+    /// Arrivals the full queue rejected outright.
+    pub shed_rejected: usize,
+    /// Waiting requests evicted in favor of a heavier (or, under
+    /// oldest-drop, any ≥-weight) arrival.
+    pub shed_evicted: usize,
+}
+
+/// The deterministic product of [`plan_scenario`]: the merged admission
+/// plan, the tenant assignment, and per-tenant ledger counts.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ScenarioPlan {
+    /// Merged arrival schedule + admission decisions (same shape the
+    /// open-loop enforcement half consumes).
+    pub admission: AdmissionPlan,
+    /// Tenant index per offered request id.
+    pub tenant_of: Vec<u8>,
+    /// Per-tenant ledger accounting
+    /// (`offered = admitted + shed_rejected + shed_evicted`, exact).
+    pub counts: Vec<TenantCounts>,
+}
+
+/// Replay the merged schedule against the virtual single-server queue
+/// (service time `1e6 / drain_rps` µs, capacity `queue_cap` waiting
+/// slots) with **tenant-weighted admission** (see the module docs).
+/// Pure function of the spec (plus trace file contents): bitwise
+/// reproducible, scheduling-independent by construction.
+pub fn plan_scenario(spec: &ScenarioSpec) -> Result<ScenarioPlan> {
+    spec.validate()?;
+    let (arrivals_us, tenant_of) = merged_schedule(spec)?;
+    let total = arrivals_us.len();
+    let queue_cap = spec.effective_cap().max(1);
+    let service_us = 1e6 / spec.drain_rps;
+    let weights: Vec<f64> = spec.tenants.iter().map(|t| t.weight).collect();
+    let wt = |id: usize| weights[tenant_of[id] as usize];
+
+    let mut admitted = vec![true; total];
+    let mut shed_ids = Vec::new();
+    let (mut shed_rejected, mut shed_dropped) = (0usize, 0usize);
+    let mut counts = vec![TenantCounts::default(); spec.tenants.len()];
+    let mut waiting: VecDeque<usize> = VecDeque::new();
+    let mut free_at = 0.0f64;
+    for i in 0..total {
+        let t = arrivals_us[i] as f64;
+        counts[tenant_of[i] as usize].offered += 1;
+        // virtual service up to this arrival (same replay as
+        // plan_arrivals: the server takes the head whenever free)
+        while let Some(&head) = waiting.front() {
+            let start = free_at.max(arrivals_us[head] as f64);
+            if start > t {
+                break;
+            }
+            waiting.pop_front();
+            free_at = start + service_us;
+        }
+        if waiting.len() >= queue_cap {
+            let w_arr = wt(i);
+            let victim = match spec.shed {
+                // evict the oldest strictly lighter request, if any
+                ShedPolicy::RejectNew => {
+                    let min_w = waiting.iter().map(|&id| wt(id)).fold(f64::INFINITY, f64::min);
+                    if min_w < w_arr {
+                        waiting.iter().position(|&id| wt(id) == min_w)
+                    } else {
+                        None
+                    }
+                }
+                // evict the oldest request not heavier than the arrival
+                ShedPolicy::DropOldest => waiting.iter().position(|&id| wt(id) <= w_arr),
+            };
+            match victim {
+                Some(pos) => {
+                    let old = waiting.remove(pos).expect("victim position is in bounds");
+                    admitted[old] = false;
+                    shed_ids.push(old);
+                    shed_dropped += 1;
+                    counts[tenant_of[old] as usize].shed_evicted += 1;
+                    waiting.push_back(i);
+                }
+                None => {
+                    admitted[i] = false;
+                    shed_ids.push(i);
+                    shed_rejected += 1;
+                    counts[tenant_of[i] as usize].shed_rejected += 1;
+                }
+            }
+        } else {
+            waiting.push_back(i);
+        }
+    }
+    for i in 0..total {
+        if admitted[i] {
+            counts[tenant_of[i] as usize].admitted += 1;
+        }
+    }
+    Ok(ScenarioPlan {
+        admission: AdmissionPlan { arrivals_us, admitted, shed_ids, shed_rejected, shed_dropped },
+        tenant_of,
+        counts,
+    })
+}
+
+/// Per-tenant ledger counts recovered from a finished admission plan —
+/// used when a degrade ladder rules admission (plain policy, so every
+/// shed is classified by `policy`, not by eviction).
+fn counts_from_plan(
+    admission: &AdmissionPlan,
+    tenant_of: &[u8],
+    ntenants: usize,
+    policy: ShedPolicy,
+) -> Vec<TenantCounts> {
+    let mut counts = vec![TenantCounts::default(); ntenants];
+    for (i, &k) in tenant_of.iter().enumerate() {
+        let c = &mut counts[k as usize];
+        c.offered += 1;
+        if admission.admitted[i] {
+            c.admitted += 1;
+        } else {
+            match policy {
+                ShedPolicy::RejectNew => c.shed_rejected += 1,
+                ShedPolicy::DropOldest => c.shed_evicted += 1,
+            }
+        }
+    }
+    counts
+}
+
+/// One **virtual-time** slice of a scenario plan: per-tenant offered /
+/// admitted / shed counts for arrivals landing in the window. A shed
+/// request counts in the slice of its *own arrival* (well defined for
+/// both rejection and eviction). Pure function of the plan, so the
+/// series is part of the deterministic core — unlike the wall-clock
+/// [`SliceStat`](super::SliceStat) series riding in the open report.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct PlanSlice {
+    /// Slice start, ms of virtual time from the run epoch.
+    pub start_ms: u64,
+    /// `offered[k]` = tenant-`k` arrivals in this window.
+    pub offered: Vec<usize>,
+    /// `admitted[k]` = of those, how many the ledger admitted.
+    pub admitted: Vec<usize>,
+    /// `shed[k]` = tenant-`k` arrivals from this window that were shed
+    /// (by rejection at arrival, or eviction later).
+    pub shed: Vec<usize>,
+}
+
+/// Bucket a plan's arrivals into fixed `slice_ms` windows of virtual
+/// time, per tenant (see [`PlanSlice`]). Empty input → empty series.
+pub fn plan_slices(
+    slice_ms: u64,
+    arrivals_us: &[u64],
+    admitted: &[bool],
+    tenant_of: &[u8],
+    ntenants: usize,
+) -> Vec<PlanSlice> {
+    let slice_ms = slice_ms.max(1);
+    let slice_us = slice_ms * 1000;
+    let Some(&last_us) = arrivals_us.last() else {
+        return Vec::new();
+    };
+    let nslices = (last_us / slice_us + 1) as usize;
+    let mut out: Vec<PlanSlice> = (0..nslices)
+        .map(|i| PlanSlice {
+            start_ms: i as u64 * slice_ms,
+            offered: vec![0; ntenants],
+            admitted: vec![0; ntenants],
+            shed: vec![0; ntenants],
+        })
+        .collect();
+    for (i, &t) in arrivals_us.iter().enumerate() {
+        let s = &mut out[(t / slice_us) as usize];
+        let k = tenant_of[i] as usize;
+        s.offered[k] += 1;
+        if admitted[i] {
+            s.admitted[k] += 1;
+        } else {
+            s.shed[k] += 1;
+        }
+    }
+    out
+}
+
+/// Per-tenant accounting of one scenario run. The counter fields
+/// ([`TenantReport::counters`]) are deterministic at any worker count;
+/// the latency/SLO fields are measured and are not.
+#[derive(Clone, Debug)]
+pub struct TenantReport {
+    pub name: String,
+    pub weight: f64,
+    pub slo_ms: f64,
+    /// Arrivals this tenant offered.
+    pub offered: usize,
+    /// Requests admitted **and successfully answered**.
+    pub accepted: usize,
+    /// Ledger sheds: rejected at arrival / evicted while waiting.
+    pub shed_rejected: usize,
+    pub shed_evicted: usize,
+    /// Real queue-full sheds under `--live-shed` (non-deterministic).
+    pub live_shed: usize,
+    /// Requests that drained as error outcomes (injected faults).
+    pub errored: usize,
+    /// Correct answers among `accepted` (deterministic — predictions
+    /// are a pure function of the request id and bits).
+    pub correct: usize,
+    /// Completions within `slo_ms` (= `accepted` when no target is set).
+    pub slo_met: usize,
+    /// Measured sojourn percentiles over this tenant's completions, ms
+    /// (0 when the tenant had none).
+    pub p50_ms: f64,
+    pub p99_ms: f64,
+}
+
+impl TenantReport {
+    /// Total ledger sheds.
+    pub fn shed_total(&self) -> usize {
+        self.shed_rejected + self.shed_evicted
+    }
+
+    /// The exact accounting identity, per tenant:
+    /// `offered = accepted + shed + live_shed + errored`.
+    pub fn closes(&self) -> bool {
+        self.offered == self.accepted + self.shed_total() + self.live_shed + self.errored
+    }
+
+    /// The deterministic counter core — what the determinism battery
+    /// compares bitwise across worker counts and repeat runs:
+    /// `(offered, accepted, shed_rejected, shed_evicted, errored,
+    /// correct)`. Excludes `live_shed` (real-depth sheds) and every
+    /// measured latency field.
+    pub fn counters(&self) -> (usize, usize, usize, usize, usize, usize) {
+        (
+            self.offered,
+            self.accepted,
+            self.shed_rejected,
+            self.shed_evicted,
+            self.errored,
+            self.correct,
+        )
+    }
+}
+
+/// Full report of one scenario run: the open-loop aggregate report over
+/// the merged stream, per-tenant accounting, the virtual-time slice
+/// series, the merged schedule (for `--record-trace`), and the rung
+/// switch trace when a degrade ladder composed.
+#[derive(Clone, Debug)]
+pub struct ScenarioReport {
+    /// Scenario name (from the spec).
+    pub name: String,
+    /// Aggregate open-loop accounting over the merged stream
+    /// (`offered = accepted + shed + live_shed + errored`, exact).
+    pub open: OpenLoopReport,
+    /// Per-tenant accounting; identities close per tenant too.
+    pub tenants: Vec<TenantReport>,
+    /// The merged arrival schedule (µs) — with `tenant_of`, exactly the
+    /// rows [`ScenarioReport::record_trace`] writes.
+    pub arrivals_us: Vec<u64>,
+    /// Tenant index per offered request id.
+    pub tenant_of: Vec<u8>,
+    /// Virtual-time per-tenant slice series (deterministic core).
+    pub plan_slices: Vec<PlanSlice>,
+    /// Rung switches, when `--degrade` composed (empty otherwise).
+    pub switches: Vec<RungSwitch>,
+}
+
+impl ScenarioReport {
+    /// Write this run's merged arrival schedule as a replayable trace
+    /// file (`--record-trace`): replaying it through a trace-kind
+    /// scenario with the same tenants and admission model reproduces
+    /// the same deterministic core bitwise
+    /// (regression-tested in `rust/tests/serve_scenario.rs`).
+    pub fn record_trace(&self, path: &Path) -> Result<()> {
+        let rows: Vec<(u64, &str)> = self
+            .arrivals_us
+            .iter()
+            .zip(&self.tenant_of)
+            .map(|(&t, &k)| (t, self.tenants[k as usize].name.as_str()))
+            .collect();
+        write_trace(path, &rows)
+    }
+
+    /// One `serve_scenario` row of `BENCH_hotpath.json` (schema in
+    /// BENCH.md): aggregate accounting, the per-tenant table, and the
+    /// virtual-time slice series.
+    pub fn to_json(&self) -> Json {
+        let tenants: Vec<Json> = self
+            .tenants
+            .iter()
+            .map(|t| {
+                Json::obj(vec![
+                    ("name", Json::Str(t.name.clone())),
+                    ("weight", Json::Num(t.weight)),
+                    ("slo_ms", Json::Num(t.slo_ms)),
+                    ("offered", Json::Num(t.offered as f64)),
+                    ("accepted", Json::Num(t.accepted as f64)),
+                    ("shed_rejected", Json::Num(t.shed_rejected as f64)),
+                    ("shed_evicted", Json::Num(t.shed_evicted as f64)),
+                    ("live_shed", Json::Num(t.live_shed as f64)),
+                    ("errored", Json::Num(t.errored as f64)),
+                    ("correct", Json::Num(t.correct as f64)),
+                    ("slo_met", Json::Num(t.slo_met as f64)),
+                    ("p50_ms", Json::Num(t.p50_ms)),
+                    ("p99_ms", Json::Num(t.p99_ms)),
+                ])
+            })
+            .collect();
+        let slices: Vec<Json> = self
+            .plan_slices
+            .iter()
+            .map(|s| {
+                let n = |v: &[usize]| {
+                    Json::arr_f64(&v.iter().map(|&c| c as f64).collect::<Vec<_>>())
+                };
+                Json::obj(vec![
+                    ("start_ms", Json::Num(s.start_ms as f64)),
+                    ("offered", n(&s.offered)),
+                    ("admitted", n(&s.admitted)),
+                    ("shed", n(&s.shed)),
+                ])
+            })
+            .collect();
+        Json::obj(vec![
+            ("name", Json::Str(self.name.clone())),
+            ("offered", Json::Num(self.open.offered as f64)),
+            ("accepted", Json::Num(self.open.accepted as f64)),
+            ("shed", Json::Num(self.open.shed_total() as f64)),
+            ("live_shed", Json::Num(self.open.live_shed as f64)),
+            ("errored", Json::Num(self.open.errored as f64)),
+            ("goodput_rps", Json::Num(self.open.goodput_rps)),
+            ("p50_ms", Json::Num(self.open.serve.p50_ms)),
+            ("p99_ms", Json::Num(self.open.serve.p99_ms)),
+            ("accuracy", Json::Num(self.open.serve.accuracy())),
+            ("workers", Json::Num(self.open.serve.workers as f64)),
+            ("slice_ms", Json::Num(self.open.slice_ms as f64)),
+            ("switches", Json::Num(self.switches.len() as f64)),
+            ("tenants", Json::Arr(tenants)),
+            ("plan_slices", Json::Arr(slices)),
+        ])
+    }
+}
+
+/// Everything the plan phase fixes before the engine clock starts.
+struct PreparedScenario {
+    admission: AdmissionPlan,
+    tenant_of: Vec<u8>,
+    counts: Vec<TenantCounts>,
+    switches: Vec<RungSwitch>,
+    rungs: Option<RungTable>,
+    base_bits: Vec<f32>,
+    drain_rps: f64,
+}
+
+/// Run the serve engine under a scenario: plan the merged schedule and
+/// every admission decision in virtual time, then pace the admitted
+/// requests onto the real queue while `cfg.workers` workers serve —
+/// each request at its tenant's bits (or the ladder's rung when a
+/// [`DegradeConfig`] composes; per-tenant bits and a ladder are
+/// mutually exclusive). `live_shed` stacks real queue-full shedding on
+/// top, exactly as in the open-loop mode.
+pub fn run_scenario(
+    session: &Session,
+    data: &Dataset,
+    default_bits: &[f32],
+    cfg: &ServerConfig,
+    spec: &ScenarioSpec,
+    dc: Option<&DegradeConfig>,
+    live_shed: bool,
+) -> Result<ScenarioReport> {
+    spec.validate()?;
+    let nwl = session.artifacts.manifest.num_weighted_layers;
+    for t in &spec.tenants {
+        if let Some(b) = &t.bits {
+            if b.len() != nwl {
+                return Err(Error::Model(format!(
+                    "scenario tenant {:?} has {} bit-widths, but the model has {nwl} \
+                     weighted layers",
+                    t.name,
+                    b.len()
+                )));
+            }
+        }
+    }
+    let nt = spec.tenants.len();
+    let cap = spec.effective_cap();
+    let slice_ms = spec.effective_slice_ms();
+    let warm = data.batch(0, 1)?;
+
+    let p = if let Some(dcfg) = dc {
+        if spec.tenants.iter().any(|t| t.bits.is_some()) {
+            return Err(Error::Model(
+                "scenario: per-tenant bit allocations and a degrade ladder both claim \
+                 the rung table; drop one of them"
+                    .into(),
+            ));
+        }
+        dcfg.validate(nwl)?;
+        let (arrivals, tenant_of) = merged_schedule(spec)?;
+        let offered = arrivals.len();
+        let plan = plan_degrade_core(
+            arrivals.iter().map(|&u| u as f64),
+            offered,
+            cap,
+            spec.shed,
+            slice_ms,
+            dcfg,
+        );
+        for rung in &dcfg.ladder {
+            session.qforward_once(&warm, &rung.bits)?;
+        }
+        let counts = counts_from_plan(&plan.admission, &tenant_of, nt, spec.shed);
+        PreparedScenario {
+            admission: plan.admission,
+            tenant_of,
+            counts,
+            switches: plan.switches,
+            rungs: Some(RungTable {
+                rung_of: plan.rung_of,
+                bits: dcfg.ladder.iter().map(|r| r.bits.clone()).collect(),
+            }),
+            base_bits: dcfg.ladder[0].bits.clone(),
+            drain_rps: dcfg.ladder[0].drain_rps,
+        }
+    } else {
+        let plan = plan_scenario(spec)?;
+        // per-tenant fidelity rides on the rung table: rung k = tenant
+        // k's bits (default bits when the tenant sets none)
+        let rungs = if spec.tenants.iter().any(|t| t.bits.is_some()) {
+            let bits: Vec<Vec<f32>> = spec
+                .tenants
+                .iter()
+                .map(|t| t.bits.clone().unwrap_or_else(|| default_bits.to_vec()))
+                .collect();
+            for b in &bits {
+                session.qforward_once(&warm, b)?;
+            }
+            Some(RungTable { rung_of: plan.tenant_of.clone(), bits })
+        } else {
+            None
+        };
+        PreparedScenario {
+            admission: plan.admission,
+            tenant_of: plan.tenant_of,
+            counts: plan.counts,
+            switches: Vec::new(),
+            rungs,
+            base_bits: default_bits.to_vec(),
+            drain_rps: spec.drain_rps,
+        }
+    };
+
+    let total = p.admission.arrivals_us.len();
+    let last_us = p.admission.arrivals_us.last().copied().unwrap_or(0);
+    // nominal offered rate for the report — display only, the schedule
+    // is already fixed
+    let nominal_rate = if last_us > 0 { total as f64 * 1e6 / last_us as f64 } else { 1.0 };
+    let ol = OpenLoopConfig {
+        rate_rps: nominal_rate,
+        drain_rps: p.drain_rps,
+        requests: total,
+        seed: spec.seed,
+        shed: spec.shed,
+        slice_ms: spec.slice_ms,
+        live_shed,
+    };
+    let run = run_planned(session, data, &p.base_bits, cfg, &p.admission, &ol, cap, p.rungs)?;
+    let open = assemble_open_report(&ol, &p.admission, p.drain_rps, &run);
+
+    // per-tenant measured assembly: completions, errors, and live sheds
+    // are id-keyed, so attribution is scheduling-independent
+    let mut sojourns: Vec<Vec<f64>> = vec![Vec::new(); nt];
+    let mut accepted = vec![0usize; nt];
+    let mut slo_met = vec![0usize; nt];
+    let mut correct = vec![0usize; nt];
+    for &(id, _, soj) in &run.completions {
+        let k = p.tenant_of[id] as usize;
+        accepted[k] += 1;
+        sojourns[k].push(soj);
+        let slo = spec.tenants[k].slo_ms;
+        if slo <= 0.0 || soj <= slo {
+            slo_met[k] += 1;
+        }
+        if open.serve.predictions[id] == data.label(id % data.len()) {
+            correct[k] += 1;
+        }
+    }
+    let mut live = vec![0usize; nt];
+    for &id in &run.live_shed_ids {
+        live[p.tenant_of[id] as usize] += 1;
+    }
+    let mut errored = vec![0usize; nt];
+    for (id, _) in &open.serve.errors {
+        errored[p.tenant_of[*id] as usize] += 1;
+    }
+    let tenants: Vec<TenantReport> = (0..nt)
+        .map(|k| {
+            sojourns[k].sort_by(f64::total_cmp);
+            let pct = |q: f64| {
+                if sojourns[k].is_empty() {
+                    0.0
+                } else {
+                    percentile_nearest_rank(&sojourns[k], q)
+                }
+            };
+            TenantReport {
+                name: spec.tenants[k].name.clone(),
+                weight: spec.tenants[k].weight,
+                slo_ms: spec.tenants[k].slo_ms,
+                offered: p.counts[k].offered,
+                accepted: accepted[k],
+                shed_rejected: p.counts[k].shed_rejected,
+                shed_evicted: p.counts[k].shed_evicted,
+                live_shed: live[k],
+                errored: errored[k],
+                correct: correct[k],
+                slo_met: slo_met[k],
+                p50_ms: pct(0.50),
+                p99_ms: pct(0.99),
+            }
+        })
+        .collect();
+    debug_assert!(
+        tenants.iter().all(TenantReport::closes),
+        "per-tenant accounting must close exactly"
+    );
+    let slices =
+        plan_slices(slice_ms, &p.admission.arrivals_us, &p.admission.admitted, &p.tenant_of, nt);
+    Ok(ScenarioReport {
+        name: spec.name.clone(),
+        open,
+        tenants,
+        arrivals_us: p.admission.arrivals_us,
+        tenant_of: p.tenant_of,
+        plan_slices: slices,
+        switches: p.switches,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn two_tenant_spec() -> ScenarioSpec {
+        ScenarioSpec {
+            name: "unit".into(),
+            tenants: vec![
+                TenantSpec { weight: 4.0, ..TenantSpec::poisson("heavy", 1500.0, 150) },
+                TenantSpec::poisson("light", 1500.0, 150),
+            ],
+            drain_rps: 1000.0,
+            queue_cap: 4,
+            seed: 9,
+            slice_ms: 20,
+            shed: ShedPolicy::RejectNew,
+        }
+    }
+
+    #[test]
+    fn generators_are_deterministic_and_monotone() {
+        let a = gen_poisson(300, 1200.0, 7);
+        assert_eq!(a, gen_poisson(300, 1200.0, 7), "same tuple → same schedule");
+        assert_ne!(a, gen_poisson(300, 1200.0, 8), "seed moves the schedule");
+        assert!(a.windows(2).all(|w| w[0] <= w[1]), "time flows forward");
+        let m = gen_mmpp(300, 2000.0, 100.0, 40.0, 60.0, 7);
+        assert_eq!(m, gen_mmpp(300, 2000.0, 100.0, 40.0, 60.0, 7));
+        assert!(m.windows(2).all(|w| w[0] <= w[1]));
+        // on/off (rate_lo = 0) still emits n arrivals, in bursts
+        let b = gen_mmpp(200, 2000.0, 0.0, 30.0, 70.0, 3);
+        assert_eq!(b.len(), 200);
+        assert!(b.windows(2).all(|w| w[0] <= w[1]));
+    }
+
+    #[test]
+    fn mmpp_bursts_are_denser_than_the_poisson_mean() {
+        // an on/off stream packs the same arrivals into the on-dwells,
+        // so the median gap is far below the overall mean gap
+        let b = gen_mmpp(500, 4000.0, 0.0, 25.0, 75.0, 11);
+        let mut gaps: Vec<u64> = b.windows(2).map(|w| w[1] - w[0]).collect();
+        gaps.sort_unstable();
+        let median = gaps[gaps.len() / 2] as f64;
+        let mean = (b[b.len() - 1] - b[0]) as f64 / (b.len() - 1) as f64;
+        assert!(
+            median < mean * 0.6,
+            "bursty stream should have median gap ≪ mean gap: {median} vs {mean}"
+        );
+    }
+
+    #[test]
+    fn weighted_admission_favors_heavy_tenants_and_closes() {
+        let spec = two_tenant_spec();
+        let p = plan_scenario(&spec).unwrap();
+        assert_eq!(p, plan_scenario(&spec).unwrap(), "plan is a pure function of the spec");
+        let total: usize = p.counts.iter().map(|c| c.offered).sum();
+        assert_eq!(total, 300);
+        for c in &p.counts {
+            assert_eq!(c.offered, c.admitted + c.shed_rejected + c.shed_evicted, "{c:?}");
+        }
+        let shed = |c: &TenantCounts| (c.shed_rejected + c.shed_evicted) as f64 / c.offered as f64;
+        assert!(
+            shed(&p.counts[1]) > shed(&p.counts[0]),
+            "3x overload: the light tenant must pay more ({:?})",
+            p.counts
+        );
+        // uniform weights reduce to plain reject-new: nobody is evicted
+        let mut flat = spec.clone();
+        flat.tenants[0].weight = 1.0;
+        let q = plan_scenario(&flat).unwrap();
+        assert_eq!(q.admission.shed_dropped, 0, "equal weights never evict under reject-new");
+        assert!(q.admission.shed_rejected > 0);
+    }
+
+    #[test]
+    fn merged_schedule_is_sorted_with_stable_ties() {
+        let spec = two_tenant_spec();
+        let (arr, ten) = merged_schedule(&spec).unwrap();
+        assert_eq!(arr.len(), 300);
+        assert!(arr.windows(2).all(|w| w[0] <= w[1]));
+        assert_eq!(ten.iter().filter(|&&k| k == 0).count(), 150);
+        // both streams interleave rather than concatenate
+        assert!(ten.windows(2).any(|w| w[0] != w[1]));
+    }
+
+    #[test]
+    fn plan_slices_bucket_per_tenant_and_guard_empty() {
+        let arrivals = [5_000u64, 15_000, 25_000, 45_000];
+        let admitted = [true, false, true, true];
+        let tenant_of = [0u8, 1, 0, 1];
+        let s = plan_slices(20, &arrivals, &admitted, &tenant_of, 2);
+        assert_eq!(s.len(), 3);
+        assert_eq!(s[0].offered, vec![1, 1]);
+        assert_eq!(s[0].admitted, vec![1, 0]);
+        assert_eq!(s[0].shed, vec![0, 1]);
+        assert_eq!(s[1].offered, vec![1, 0]);
+        assert_eq!(s[2].offered, vec![0, 1]);
+        assert!(plan_slices(20, &[], &[], &[], 2).is_empty());
+    }
+
+    #[test]
+    fn trace_round_trips_and_rejects_malformed_files() {
+        let dir = std::env::temp_dir();
+        let p = dir.join("adaq_scenario_unit_trace.txt");
+        write_trace(&p, &[(10, "a"), (20, "b"), (20, "a")]).unwrap();
+        let rows = read_trace(&p).unwrap();
+        assert_eq!(
+            rows,
+            vec![
+                (10, Some("a".to_string())),
+                (20, Some("b".to_string())),
+                (20, Some("a".to_string()))
+            ]
+        );
+        // empty file
+        std::fs::write(&p, "# header only\n\n").unwrap();
+        let e = read_trace(&p).unwrap_err().to_string();
+        assert!(e.contains("empty"), "{e}");
+        // non-monotonic
+        std::fs::write(&p, "30 a\n20 a\n").unwrap();
+        let e = read_trace(&p).unwrap_err().to_string();
+        assert!(e.contains("non-monotonic") && e.contains("line 2"), "{e}");
+        // unparsable timestamp
+        std::fs::write(&p, "abc a\n").unwrap();
+        let e = read_trace(&p).unwrap_err().to_string();
+        assert!(e.contains("bad timestamp"), "{e}");
+        let _ = std::fs::remove_file(&p);
+    }
+
+    #[test]
+    fn spec_validation_names_the_offending_field() {
+        let base = two_tenant_spec();
+        let check = |mutate: &dyn Fn(&mut ScenarioSpec), needle: &str| {
+            let mut s = base.clone();
+            mutate(&mut s);
+            let e = s.validate().unwrap_err().to_string();
+            assert!(e.contains(needle), "wanted {needle:?} in {e:?}");
+        };
+        check(&|s| s.tenants.clear(), "at least one tenant");
+        check(&|s| s.drain_rps = 0.0, "drain_rps");
+        check(&|s| s.tenants[1].name = "heavy".into(), "duplicate");
+        check(&|s| s.tenants[0].weight = 0.0, "weight");
+        check(&|s| s.tenants[0].slo_ms = f64::NAN, "slo_ms");
+        check(&|s| s.tenants[0].arrivals = ArrivalKind::Poisson { rate_rps: 0.0 }, "rate_rps");
+        check(&|s| s.tenants[0].requests = 0, "requests ≥ 1");
+        check(
+            &|s| {
+                s.tenants[0].arrivals = ArrivalKind::Mmpp {
+                    rate_hi_rps: 1000.0,
+                    rate_lo_rps: -1.0,
+                    mean_hi_ms: 10.0,
+                    mean_lo_ms: 10.0,
+                }
+            },
+            "rate_lo_rps",
+        );
+        check(
+            &|s| {
+                s.tenants[0].arrivals = ArrivalKind::Trace { path: PathBuf::from("x.trace") };
+            },
+            "requests to 0",
+        );
+    }
+
+    #[test]
+    fn spec_json_parsing_resolves_paths_and_rejects_unknown_kinds() {
+        let j = Json::parse(
+            r#"{"name":"t","drain_rps":800,"seed":5,"slice_ms":10,
+                "tenants":[{"name":"a","requests":10,
+                            "arrivals":{"kind":"poisson","rate_rps":500}},
+                           {"name":"b","weight":2.5,"slo_ms":40,"bits":[6,6],
+                            "requests":10,
+                            "arrivals":{"kind":"onoff","rate_hi_rps":2000,
+                                        "mean_hi_ms":20,"mean_lo_ms":30}}]}"#,
+        )
+        .unwrap();
+        let s = ScenarioSpec::from_json(&j, Path::new("/base")).unwrap();
+        assert_eq!(s.name, "t");
+        assert_eq!(s.tenants.len(), 2);
+        assert_eq!(s.tenants[1].weight, 2.5);
+        assert_eq!(s.tenants[1].bits, Some(vec![6.0, 6.0]));
+        assert!(matches!(
+            s.tenants[1].arrivals,
+            ArrivalKind::Mmpp { rate_lo_rps, .. } if rate_lo_rps == 0.0
+        ));
+        let bad = Json::parse(
+            r#"{"name":"t","drain_rps":800,
+                "tenants":[{"name":"a","requests":1,
+                            "arrivals":{"kind":"fractal","rate_rps":1}}]}"#,
+        )
+        .unwrap();
+        let e = ScenarioSpec::from_json(&bad, Path::new(".")).unwrap_err().to_string();
+        assert!(e.contains("unknown arrival kind"), "{e}");
+        // relative trace path resolves against base_dir
+        let tr = Json::parse(
+            r#"{"name":"t","drain_rps":800,
+                "tenants":[{"name":"a",
+                            "arrivals":{"kind":"trace","path":"sample.trace"}}]}"#,
+        )
+        .unwrap();
+        let s = ScenarioSpec::from_json(&tr, Path::new("/base")).unwrap();
+        match &s.tenants[0].arrivals {
+            ArrivalKind::Trace { path } => {
+                assert_eq!(path, &PathBuf::from("/base/sample.trace"))
+            }
+            other => panic!("expected trace arrivals, got {other:?}"),
+        }
+    }
+}

@@ -15,9 +15,9 @@
 
 use adaq::cli::Args;
 use adaq::coordinator::{
-    run_degrade, run_open_loop, run_rate_ladder, run_server, run_sweep_jobs, DegradeConfig,
-    EvalCache, FaultPlan, LoadCurve, OpenLoopConfig, Rung, ServeReport, ServerConfig, Session,
-    ShedPolicy, SweepConfig,
+    run_degrade, run_open_loop, run_rate_ladder, run_scenario, run_server, run_sweep_jobs,
+    DegradeConfig, EvalCache, FaultPlan, LoadCurve, OpenLoopConfig, Rung, ScenarioSpec,
+    ServeReport, ServerConfig, Session, ShedPolicy, SweepConfig,
 };
 use adaq::dataset::Dataset;
 use adaq::io::Json;
@@ -61,6 +61,13 @@ USAGE: adaq <command> [--flags]
               drain — and hot-swap down a rung under sustained overload,
               back up with hysteresis, instead of shedding. The
               rung-switch trace is bitwise identical at any --workers)
+             [--scenario NAME|PATH] [--scenario-out P] [--record-trace P]
+             (scenario: run a committed workload spec from scenarios/ —
+              trace replay, MMPP burst/diurnal generators, multi-tenant
+              mixes with weighted admission and per-tenant accounting;
+              composes with --degrade/--fault/--int8/--live-shed.
+              --record-trace also works with --open-loop --rate R and
+              writes this run's arrival schedule as a replayable trace)
              [--fault SPEC] (or ADAQ_FAULT: inject seeded worker faults,
               worker_panic[@K] | poison[@K] | slow[@K:MS] — panics
               become per-request error outcomes, never crashes)
@@ -425,6 +432,9 @@ fn cmd_serve(args: &Args) -> Result<()> {
         queue_cap: args.usize_flag("queue-cap", 0)?,
         fault,
     };
+    if args.flags.contains_key("scenario") {
+        return cmd_serve_scenario(args, &session, &test, &bits, &cfg);
+    }
     if args.has("open-loop") || args.has("degrade") {
         return cmd_serve_open_loop(args, &session, &test, &bits, n, &cfg);
     }
@@ -557,6 +567,24 @@ fn cmd_serve_open_loop(
         curve.to_json().write_file(&path)?;
         println!("wrote {path} ({} rate points)", curve.points.len());
     }
+    if let Some(path) = args.flags.get("record-trace") {
+        if ladder.len() > 1 {
+            return Err(Error::Cli(
+                "--record-trace records one run's arrivals; drop --rates".into(),
+            ));
+        }
+        // the plan is deterministic, so recomputing it reproduces exactly
+        // the schedule the run just injected
+        use adaq::coordinator::server::{
+            openloop::DEFAULT_ADMISSION_CAP, plan_arrivals, write_trace,
+        };
+        let drain = if base.drain_rps > 0.0 { base.drain_rps } else { base.rate_rps };
+        let cap = if cfg.queue_cap > 0 { cfg.queue_cap } else { DEFAULT_ADMISSION_CAP };
+        let plan = plan_arrivals(n, base.rate_rps, drain, cap, shed, base.seed);
+        let rows: Vec<(u64, &str)> = plan.arrivals_us.iter().map(|&t| (t, "default")).collect();
+        write_trace(std::path::Path::new(path.as_str()), &rows)?;
+        println!("wrote {path} ({} arrivals)", rows.len());
+    }
     Ok(())
 }
 
@@ -662,6 +690,129 @@ fn cmd_serve_degrade(
     println!("{}", markdown_table(&head_refs, &aligns, &rows));
     print_fault_outcome(&cfg.fault, &r.open.serve);
     if let Some(path) = args.flags.get("degrade-out") {
+        r.to_json().write_file(path)?;
+        println!("wrote {path}");
+    }
+    Ok(())
+}
+
+/// Resolve `--scenario`: an existing file path wins; otherwise the name
+/// looks up a committed spec under `scenarios/` (relative to the cwd).
+fn resolve_scenario(spec: &str) -> Result<PathBuf> {
+    let direct = PathBuf::from(spec);
+    if direct.is_file() {
+        return Ok(direct);
+    }
+    let named = PathBuf::from("scenarios").join(format!("{spec}.json"));
+    if named.is_file() {
+        return Ok(named);
+    }
+    Err(Error::Cli(format!(
+        "--scenario {spec:?}: neither {} nor {} exists",
+        direct.display(),
+        named.display()
+    )))
+}
+
+/// `adaq serve --scenario`: run a committed workload spec — multi-tenant
+/// mixes, MMPP bursts, trace replay — and print per-tenant accounting;
+/// composes with `--degrade` (one ladder ruling the mix), `--fault`,
+/// `--int8`, and `--live-shed`.
+fn cmd_serve_scenario(
+    args: &Args,
+    session: &Session,
+    test: &Dataset,
+    bits: &[f32],
+    cfg: &ServerConfig,
+) -> Result<()> {
+    for conflict in ["open-loop", "rate", "rates"] {
+        if args.flags.contains_key(conflict) {
+            return Err(Error::Cli(format!(
+                "--scenario and --{conflict} conflict; the spec file fixes the load shape"
+            )));
+        }
+    }
+    let path = resolve_scenario(&args.req_flag("scenario")?)?;
+    let spec = ScenarioSpec::load(&path)?;
+    let dc = if args.has("degrade") {
+        let ladder = args
+            .req_flag("ladder")
+            .map_err(|_| Error::Cli("--degrade wants --ladder r1.json,… or B@D,B@D,…".into()))?;
+        let mut dc = DegradeConfig::new(parse_ladder(&ladder, session)?);
+        dc.downshift_slices = args.usize_flag("downshift-slices", dc.downshift_slices)?;
+        dc.upshift_slices = args.usize_flag("upshift-slices", dc.upshift_slices)?;
+        Some(dc)
+    } else {
+        None
+    };
+    let r = run_scenario(session, test, bits, cfg, &spec, dc.as_ref(), args.has("live-shed"))?;
+    println!(
+        "scenario {} ({} tenants, drain {:.0} rps [{}]): \
+         {} accepted + {} shed + {} live-shed + {} errored = {} offered, \
+         goodput {:.1} rps, acc {:.4}",
+        r.name,
+        r.tenants.len(),
+        r.open.drain_rps,
+        r.open.shed_policy.name(),
+        r.open.accepted,
+        r.open.shed_total(),
+        r.open.live_shed,
+        r.open.errored,
+        r.open.offered,
+        r.open.goodput_rps,
+        r.open.serve.accuracy(),
+    );
+    println!(
+        "  sojourn p50 {:.2} / p99 {:.2} ms, mean queue depth {:.2}, {} virtual slices × {} ms",
+        r.open.serve.p50_ms,
+        r.open.serve.p99_ms,
+        r.open.mean_depth,
+        r.plan_slices.len(),
+        r.open.slice_ms,
+    );
+    let heads = [
+        "tenant", "weight", "slo ms", "offered", "accepted", "rejected", "evicted", "live-shed",
+        "errored", "slo met", "p50 ms", "p99 ms",
+    ];
+    let aligns: Vec<Align> =
+        std::iter::once(Align::Left).chain(std::iter::repeat(Align::Right).take(11)).collect();
+    let rows: Vec<Vec<String>> = r
+        .tenants
+        .iter()
+        .map(|t| {
+            vec![
+                t.name.clone(),
+                format!("{:.1}", t.weight),
+                if t.slo_ms > 0.0 { format!("{:.0}", t.slo_ms) } else { "-".into() },
+                t.offered.to_string(),
+                t.accepted.to_string(),
+                t.shed_rejected.to_string(),
+                t.shed_evicted.to_string(),
+                t.live_shed.to_string(),
+                t.errored.to_string(),
+                t.slo_met.to_string(),
+                format!("{:.2}", t.p50_ms),
+                format!("{:.2}", t.p99_ms),
+            ]
+        })
+        .collect();
+    println!("{}", markdown_table(&heads, &aligns, &rows));
+    for s in &r.switches {
+        let dir = if s.to > s.from { "down" } else { "up" };
+        println!(
+            "  switch @ {:>6.1} ms (slice {:>3}): rung {} → {} ({dir})",
+            s.at_us as f64 / 1000.0,
+            s.slice,
+            s.from,
+            s.to,
+        );
+    }
+    print_fault_outcome(&cfg.fault, &r.open.serve);
+    if let Some(path) = args.flags.get("record-trace") {
+        r.record_trace(std::path::Path::new(path.as_str()))?;
+        println!("wrote {path} ({} arrivals)", r.arrivals_us.len());
+    }
+    if let Some(path) = args.flags.get("scenario-out") {
         r.to_json().write_file(path)?;
         println!("wrote {path}");
     }

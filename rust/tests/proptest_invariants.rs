@@ -14,7 +14,13 @@
 //! * serve-queue admission control: reject-on-full never exceeds the
 //!   cap, oldest-drop preserves FIFO order of survivors, `close()`
 //!   drains every accepted request, and `accepted + shed == offered`
-//!   closes exactly under random offer/pop interleavings.
+//!   closes exactly under random offer/pop interleavings;
+//! * scenario generators: Poisson/MMPP schedules are bitwise identical
+//!   across repeated generation for arbitrary seeds/rates/duty cycles
+//!   and non-decreasing in time;
+//! * scenario ledger: per-tenant accounting identities close exactly
+//!   (`offered = admitted + shed`, per tenant and in total) for random
+//!   multi-tenant mixes under both weighted shed policies.
 
 use adaq::io::json::Json;
 use adaq::io::tnsr::{read_tnsr, write_tnsr, TnsrValue};
@@ -338,6 +344,115 @@ fn prop_queue_shed_policies() {
         }
         assert!(model.is_empty(), "seed {seed}: close() left accepted requests behind");
         assert_eq!(served + shed, offered, "seed {seed}: accounting must close");
+    }
+}
+
+#[test]
+fn prop_scenario_generators_bitwise_reproducible() {
+    use adaq::coordinator::server::{gen_mmpp, gen_poisson};
+    for seed in 800..800 + CASES {
+        let mut rng = Pcg32::new(seed);
+        let n = 50 + rng.below(300) as usize;
+        let rate = 100.0 + rng.uniform(0.0, 4000.0) as f64;
+        let p = gen_poisson(n, rate, seed);
+        assert_eq!(p, gen_poisson(n, rate, seed), "seed {seed}: poisson regeneration moved");
+        assert_eq!(p.len(), n, "seed {seed}");
+        assert!(p.windows(2).all(|w| w[0] <= w[1]), "seed {seed}: time went backwards");
+        // a prefix of a longer schedule is the schedule itself — the
+        // stream draws one gap per arrival, nothing else
+        assert_eq!(gen_poisson(n / 2, rate, seed), p[..n / 2], "seed {seed}: prefix moved");
+
+        let hi = 200.0 + rng.uniform(0.0, 5000.0) as f64;
+        // duty cycle sweeps the whole [silent .. always-on] range
+        let lo = hi * rng.uniform(0.0, 1.0) as f64 * (rng.below(2) as f64);
+        let dwell_hi = 1.0 + rng.uniform(0.0, 200.0) as f64;
+        let dwell_lo = 1.0 + rng.uniform(0.0, 200.0) as f64;
+        let m = gen_mmpp(n, hi, lo, dwell_hi, dwell_lo, seed);
+        assert_eq!(
+            m,
+            gen_mmpp(n, hi, lo, dwell_hi, dwell_lo, seed),
+            "seed {seed}: mmpp regeneration moved (hi {hi} lo {lo} dwells {dwell_hi}/{dwell_lo})"
+        );
+        assert_eq!(m.len(), n, "seed {seed}: mmpp must emit exactly n arrivals");
+        assert!(m.windows(2).all(|w| w[0] <= w[1]), "seed {seed}: mmpp time went backwards");
+        // a different seed moves the schedule (same tuple otherwise)
+        assert_ne!(m, gen_mmpp(n, hi, lo, dwell_hi, dwell_lo, seed + 1), "seed {seed}");
+    }
+}
+
+#[test]
+fn prop_scenario_ledger_accounting_closes_per_tenant() {
+    use adaq::coordinator::server::{plan_scenario, ShedPolicy};
+    use adaq::coordinator::{ArrivalKind, ScenarioSpec, TenantSpec};
+    for seed in 900..900 + CASES {
+        let mut rng = Pcg32::new(seed);
+        let nt = 1 + rng.below(3) as usize;
+        let tenants: Vec<TenantSpec> = (0..nt)
+            .map(|k| {
+                let requests = 20 + rng.below(150) as usize;
+                let arrivals = if rng.below(2) == 0 {
+                    ArrivalKind::Poisson { rate_rps: 200.0 + rng.uniform(0.0, 3000.0) as f64 }
+                } else {
+                    ArrivalKind::Mmpp {
+                        rate_hi_rps: 500.0 + rng.uniform(0.0, 4000.0) as f64,
+                        rate_lo_rps: rng.uniform(0.0, 400.0) as f64,
+                        mean_hi_ms: 5.0 + rng.uniform(0.0, 80.0) as f64,
+                        mean_lo_ms: 5.0 + rng.uniform(0.0, 80.0) as f64,
+                    }
+                };
+                TenantSpec {
+                    name: format!("t{k}"),
+                    arrivals,
+                    requests,
+                    weight: (1 + rng.below(8)) as f64,
+                    bits: None,
+                    slo_ms: 0.0,
+                }
+            })
+            .collect();
+        let spec = ScenarioSpec {
+            name: format!("prop{seed}"),
+            tenants,
+            drain_rps: 300.0 + rng.uniform(0.0, 2000.0) as f64,
+            queue_cap: 1 + rng.below(24) as usize,
+            seed,
+            slice_ms: 1 + rng.below(50) as u64,
+            shed: if rng.below(2) == 0 { ShedPolicy::RejectNew } else { ShedPolicy::DropOldest },
+        };
+        let p = plan_scenario(&spec).unwrap();
+        assert_eq!(p, plan_scenario(&spec).unwrap(), "seed {seed}: plan regeneration moved");
+        let total: usize = spec.tenants.iter().map(|t| t.requests).sum();
+        assert_eq!(p.admission.arrivals_us.len(), total, "seed {seed}");
+        // per-tenant identity: offered = admitted + rejected + evicted
+        let (mut off, mut adm, mut rej, mut evi) = (0usize, 0usize, 0usize, 0usize);
+        for (k, c) in p.counts.iter().enumerate() {
+            assert_eq!(
+                c.offered,
+                c.admitted + c.shed_rejected + c.shed_evicted,
+                "seed {seed}: tenant {k} identity broke: {c:?}"
+            );
+            assert_eq!(
+                c.offered,
+                p.tenant_of.iter().filter(|&&t| t as usize == k).count(),
+                "seed {seed}: tenant {k} offered vs assignment"
+            );
+            off += c.offered;
+            adm += c.admitted;
+            rej += c.shed_rejected;
+            evi += c.shed_evicted;
+        }
+        assert_eq!(off, total, "seed {seed}: totals");
+        assert_eq!(adm, p.admission.accepted(), "seed {seed}");
+        assert_eq!(rej, p.admission.shed_rejected, "seed {seed}");
+        assert_eq!(evi, p.admission.shed_dropped, "seed {seed}");
+        // shed ids are unique and every shed id is marked not-admitted
+        let mut ids = p.admission.shed_ids.clone();
+        ids.sort_unstable();
+        ids.dedup();
+        assert_eq!(ids.len(), p.admission.shed_ids.len(), "seed {seed}: duplicate shed id");
+        for &id in &ids {
+            assert!(!p.admission.admitted[id], "seed {seed}: shed id {id} marked admitted");
+        }
     }
 }
 

@@ -201,6 +201,47 @@ fn closed_loop_faults_error_per_request_not_per_run() {
 }
 
 #[test]
+fn int8_degrade_absorbs_every_fault_kind_with_unchanged_rung_trace() {
+    // ROADMAP carried item: fault-plan coverage for the degrade path
+    // under --int8 — each fault kind is absorbed as per-request error
+    // outcomes with exact accounting, and the virtual-time plan (rung
+    // trace, switch trace, shed set) never moves: faults live entirely
+    // in the enforcement half
+    let (arts, data) = synthetic_parts(80).unwrap();
+    let session = Session::from_parts_int8(arts, data.clone(), 1).unwrap();
+    let dc = DegradeConfig::new(ladder());
+    let clean = run_degrade(&session, &data, &cfg(2, FaultPlan::default()), &overload(), &dc)
+        .unwrap();
+    assert_eq!(clean.open.errored, 0);
+    assert!(!clean.switches.is_empty(), "3x overload must switch on the int8 path too");
+    for (spec, expect_errors) in
+        [("worker_panic@0", 1usize), ("poison@0", 1), ("slow@0:20", 0)]
+    {
+        let fault = FaultPlan::parse(spec).unwrap();
+        let r = run_degrade(&session, &data, &cfg(2, fault), &overload(), &dc).unwrap();
+        assert_eq!(r.open.errored, expect_errors, "{spec}: error count");
+        assert_eq!(
+            r.open.accepted + r.open.shed_total() + r.open.live_shed + r.open.errored,
+            r.open.offered,
+            "{spec}: accounting must close exactly"
+        );
+        assert_eq!(r.switches, clean.switches, "{spec}: switch trace moved");
+        assert_eq!(r.rung_of, clean.rung_of, "{spec}: rung assignment moved");
+        assert_eq!(r.open.shed_ids, clean.open.shed_ids, "{spec}: shed set moved");
+        if expect_errors == 1 {
+            assert_eq!(r.open.serve.predictions[0], -2, "{spec}: errored carries -2");
+            // request 0 errors instead of completing; everything else
+            // answers exactly as the clean run did
+            for (id, &pred) in r.open.serve.predictions.iter().enumerate().skip(1) {
+                assert_eq!(pred, clean.open.serve.predictions[id], "{spec}: request {id}");
+            }
+        } else {
+            assert_eq!(r.open.serve.predictions, clean.open.serve.predictions, "{spec}");
+        }
+    }
+}
+
+#[test]
 fn rung_switch_on_slice_boundary_attributes_arrivals_to_the_new_rung() {
     // 1) the plan's rung assignment is exactly the timeline the switch
     //    trace describes, with `at_us <= t` — an arrival at the switch

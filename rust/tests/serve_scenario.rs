@@ -1,0 +1,386 @@
+//! Scenario-engine battery (artifact-free, on the shared synthetic MLP
+//! from `bench_support::synthetic_parts`):
+//!
+//! * **Committed specs replay deterministically**: for every spec under
+//!   `scenarios/`, the report's deterministic core — per-tenant
+//!   counters, shed set, predictions, merged schedule, tenant
+//!   assignment, virtual-time slice series, switch trace — is bitwise
+//!   identical at `workers ∈ {1, 2, 4}` and across repeat runs;
+//! * **Trace round-trip**: `--record-trace` of a generated run, replayed
+//!   through trace-kind tenants, reproduces the same core bitwise;
+//! * **Weighted admission** favors heavy tenants at the ledger level and
+//!   reduces to the plain policies at uniform weights;
+//! * **Spec validation**: malformed specs (zero rates, duplicate
+//!   tenants, unknown kinds, empty or non-monotonic traces) return
+//!   `Err` with a message naming the problem — never a panic;
+//! * **Composition**: `--fault` errors exactly the targeted request with
+//!   per-tenant attribution, `--int8` serves the mix deterministically,
+//!   and `--degrade` walks its ladder on the merged schedule (per-tenant
+//!   bits and a ladder are mutually exclusive).
+
+use std::path::{Path, PathBuf};
+
+use adaq::bench_support::synthetic_parts;
+use adaq::coordinator::server::{plan_scenario, ScenarioReport};
+use adaq::coordinator::{
+    run_scenario, ArrivalKind, DegradeConfig, FaultPlan, Rung, ScenarioSpec, ServerConfig,
+    Session, ShedPolicy, TenantSpec,
+};
+use adaq::io::Json;
+
+fn scenarios_dir() -> PathBuf {
+    Path::new(env!("CARGO_MANIFEST_DIR")).parent().unwrap().join("scenarios")
+}
+
+fn cfg(workers: usize, fault: FaultPlan) -> ServerConfig {
+    ServerConfig { workers, batch: 2, deadline_us: 100, queue_cap: 8, fault }
+}
+
+fn session_and_data() -> (Session, adaq::dataset::Dataset) {
+    let (arts, data) = synthetic_parts(100).unwrap();
+    let session = Session::from_parts(arts, data.clone(), 1).unwrap();
+    (session, data)
+}
+
+/// The report fields under the determinism contract, cloned for
+/// comparison: everything the virtual-time plan fixes plus the id-keyed
+/// prediction vector (measured latency fields deliberately excluded).
+#[allow(clippy::type_complexity)]
+fn core(
+    r: &ScenarioReport,
+) -> (
+    Vec<(usize, usize, usize, usize, usize, usize)>,
+    Vec<usize>,
+    Vec<i32>,
+    Vec<u64>,
+    Vec<u8>,
+    usize,
+    usize,
+) {
+    (
+        r.tenants.iter().map(|t| t.counters()).collect(),
+        r.open.shed_ids.clone(),
+        r.open.serve.predictions.clone(),
+        r.arrivals_us.clone(),
+        r.tenant_of.clone(),
+        r.plan_slices.len(),
+        r.switches.len(),
+    )
+}
+
+fn assert_spec_replays_deterministically(name: &str) {
+    let spec = ScenarioSpec::load(scenarios_dir().join(format!("{name}.json"))).unwrap();
+    let (session, data) = session_and_data();
+    let bits = [8.0f32, 8.0];
+    let mut base: Option<ScenarioReport> = None;
+    for workers in [1usize, 2, 4] {
+        let r = run_scenario(
+            &session,
+            &data,
+            &bits,
+            &cfg(workers, FaultPlan::default()),
+            &spec,
+            None,
+            false,
+        )
+        .unwrap();
+        assert_eq!(
+            r.open.accepted + r.open.shed_total() + r.open.live_shed + r.open.errored,
+            r.open.offered,
+            "{name} w{workers}: total accounting closes"
+        );
+        for t in &r.tenants {
+            assert!(t.closes(), "{name} w{workers}: tenant {} accounting closes", t.name);
+        }
+        match &base {
+            None => base = Some(r),
+            Some(b) => {
+                assert_eq!(core(&r), core(b), "{name} w{workers}: deterministic core moved");
+                assert_eq!(r.plan_slices, b.plan_slices, "{name} w{workers}: slice series");
+                assert_eq!(r.switches, b.switches, "{name} w{workers}: switch trace");
+            }
+        }
+    }
+    // a repeat run at one worker count is bitwise identical too
+    let again =
+        run_scenario(&session, &data, &bits, &cfg(2, FaultPlan::default()), &spec, None, false)
+            .unwrap();
+    let b = base.unwrap();
+    assert_eq!(core(&again), core(&b), "{name}: repeat run moved");
+    assert_eq!(again.plan_slices, b.plan_slices);
+}
+
+#[test]
+fn burst_2x_spec_replays_deterministically() {
+    assert_spec_replays_deterministically("burst_2x");
+}
+
+#[test]
+fn diurnal_spec_replays_deterministically() {
+    assert_spec_replays_deterministically("diurnal");
+}
+
+#[test]
+fn multi_tenant_spec_replays_deterministically() {
+    assert_spec_replays_deterministically("multi_tenant");
+}
+
+#[test]
+fn replay_sample_spec_replays_deterministically() {
+    assert_spec_replays_deterministically("replay_sample");
+}
+
+#[test]
+fn burst_spec_sheds_in_bursts_not_uniformly() {
+    // the point of the MMPP generator: shedding concentrates in the
+    // on-bursts, so the virtual-time slice series shows both clean and
+    // shedding windows
+    let spec = ScenarioSpec::load(scenarios_dir().join("burst_2x.json")).unwrap();
+    let p = plan_scenario(&spec).unwrap();
+    assert!(p.admission.shed_rejected > 0, "burst_2x must overload its drain");
+    let slices = adaq::coordinator::server::plan_slices(
+        spec.slice_ms,
+        &p.admission.arrivals_us,
+        &p.admission.admitted,
+        &p.tenant_of,
+        spec.tenants.len(),
+    );
+    let shedding = slices.iter().filter(|s| s.shed.iter().sum::<usize>() > 0).count();
+    let clean = slices.iter().filter(|s| s.shed.iter().sum::<usize>() == 0).count();
+    assert!(
+        shedding > 0 && clean > 0,
+        "burst shedding must be intermittent: {shedding} shedding / {clean} clean slices"
+    );
+}
+
+#[test]
+fn recorded_trace_replays_bitwise_identically() {
+    // record a weighted multi-tenant run's arrivals, replay the file
+    // through trace-kind tenants, and the whole deterministic core —
+    // shed sets, predictions, per-slice series — must match bitwise
+    let spec = ScenarioSpec::load(scenarios_dir().join("multi_tenant.json")).unwrap();
+    let (session, data) = session_and_data();
+    let bits = [8.0f32, 8.0];
+    let r = run_scenario(&session, &data, &bits, &cfg(2, FaultPlan::default()), &spec, None, false)
+        .unwrap();
+    let trace = std::env::temp_dir().join("adaq_test_roundtrip.trace");
+    r.record_trace(&trace).unwrap();
+
+    let mut replay = spec.clone();
+    replay.name = "multi_tenant_replay".into();
+    for t in &mut replay.tenants {
+        t.arrivals = ArrivalKind::Trace { path: trace.clone() };
+        t.requests = 0;
+    }
+    let r2 =
+        run_scenario(&session, &data, &bits, &cfg(2, FaultPlan::default()), &replay, None, false)
+            .unwrap();
+    assert_eq!(core(&r2), core(&r), "replayed run diverged from the generating run");
+    assert_eq!(r2.plan_slices, r.plan_slices, "slice series diverged");
+    let _ = std::fs::remove_file(&trace);
+}
+
+#[test]
+fn weighted_admission_protects_heavy_tenants() {
+    let spec = ScenarioSpec::load(scenarios_dir().join("multi_tenant.json")).unwrap();
+    let p = plan_scenario(&spec).unwrap();
+    let shed_frac = |k: usize| {
+        let c = &p.counts[k];
+        (c.shed_rejected + c.shed_evicted) as f64 / c.offered as f64
+    };
+    // tenant 0 = interactive (weight 4), tenant 1 = batch (weight 1)
+    assert!(
+        shed_frac(0) < shed_frac(1),
+        "the heavy tenant must shed less: interactive {} vs batch {}",
+        shed_frac(0),
+        shed_frac(1)
+    );
+    // uniform weights reduce to the plain policy: reject-new never evicts
+    let mut flat = spec.clone();
+    for t in &mut flat.tenants {
+        t.weight = 1.0;
+    }
+    let q = plan_scenario(&flat).unwrap();
+    assert_eq!(q.admission.shed_dropped, 0, "uniform weights must not evict under reject-new");
+}
+
+#[test]
+fn malformed_specs_err_with_useful_messages() {
+    let parse = |src: &str| {
+        ScenarioSpec::from_json(&Json::parse(src).unwrap(), Path::new("."))
+            .unwrap_err()
+            .to_string()
+    };
+    let zero_rate = parse(
+        r#"{"drain_rps":800,"tenants":[{"name":"a","requests":10,
+            "arrivals":{"kind":"poisson","rate_rps":0}}]}"#,
+    );
+    assert!(zero_rate.contains("rate_rps"), "{zero_rate}");
+    let empty = parse(r#"{"drain_rps":800,"tenants":[]}"#);
+    assert!(empty.contains("at least one tenant"), "{empty}");
+    let dup = parse(
+        r#"{"drain_rps":800,"tenants":[
+            {"name":"a","requests":1,"arrivals":{"kind":"poisson","rate_rps":1}},
+            {"name":"a","requests":1,"arrivals":{"kind":"poisson","rate_rps":1}}]}"#,
+    );
+    assert!(dup.contains("duplicate"), "{dup}");
+    let kind = parse(
+        r#"{"drain_rps":800,"tenants":[{"name":"a","requests":1,
+            "arrivals":{"kind":"zipf","rate_rps":1}}]}"#,
+    );
+    assert!(kind.contains("unknown arrival kind"), "{kind}");
+    let shed = parse(
+        r#"{"drain_rps":800,"shed":"coinflip","tenants":[{"name":"a","requests":1,
+            "arrivals":{"kind":"poisson","rate_rps":1}}]}"#,
+    );
+    assert!(shed.contains("unknown shed policy"), "{shed}");
+    let trace_n = parse(
+        r#"{"drain_rps":800,"tenants":[{"name":"a","requests":5,
+            "arrivals":{"kind":"trace","path":"x.trace"}}]}"#,
+    );
+    assert!(trace_n.contains("requests to 0"), "{trace_n}");
+}
+
+#[test]
+fn bad_trace_files_err_instead_of_panicking() {
+    let dir = std::env::temp_dir();
+    let mk_spec = |path: &Path| ScenarioSpec {
+        name: "t".into(),
+        tenants: vec![TenantSpec {
+            name: "a".into(),
+            arrivals: ArrivalKind::Trace { path: path.to_path_buf() },
+            requests: 0,
+            weight: 1.0,
+            bits: None,
+            slo_ms: 0.0,
+        }],
+        drain_rps: 800.0,
+        queue_cap: 8,
+        seed: 1,
+        slice_ms: 10,
+        shed: ShedPolicy::RejectNew,
+    };
+    let p = dir.join("adaq_test_empty.trace");
+    std::fs::write(&p, "# only a header\n").unwrap();
+    let e = plan_scenario(&mk_spec(&p)).unwrap_err().to_string();
+    assert!(e.contains("empty"), "{e}");
+    let p2 = dir.join("adaq_test_nonmono.trace");
+    std::fs::write(&p2, "500 a\n300 a\n").unwrap();
+    let e = plan_scenario(&mk_spec(&p2)).unwrap_err().to_string();
+    assert!(e.contains("non-monotonic"), "{e}");
+    let p3 = dir.join("adaq_test_missing.trace");
+    let _ = std::fs::remove_file(&p3);
+    assert!(plan_scenario(&mk_spec(&p3)).is_err(), "missing trace file must err");
+    let _ = std::fs::remove_file(&p);
+    let _ = std::fs::remove_file(&p2);
+}
+
+#[test]
+fn tenant_bits_arity_must_match_the_model() {
+    let (session, data) = session_and_data();
+    let mut spec = ScenarioSpec::load(scenarios_dir().join("multi_tenant.json")).unwrap();
+    spec.tenants[1].bits = Some(vec![4.0, 4.0, 4.0]); // model has 2 weighted layers
+    let e = run_scenario(
+        &session,
+        &data,
+        &[8.0, 8.0],
+        &cfg(1, FaultPlan::default()),
+        &spec,
+        None,
+        false,
+    )
+    .unwrap_err()
+    .to_string();
+    assert!(e.contains("weighted layers"), "{e}");
+}
+
+#[test]
+fn faults_compose_with_scenarios_and_attribute_per_tenant() {
+    let spec = ScenarioSpec::load(scenarios_dir().join("burst_2x.json")).unwrap();
+    let (session, data) = session_and_data();
+    let bits = [8.0f32, 8.0];
+    // request 0 is the first arrival into an empty queue — always
+    // admitted, so the panic fires in every configuration
+    let fault = FaultPlan::parse("worker_panic@0").unwrap();
+    let mut base: Option<ScenarioReport> = None;
+    for workers in [1usize, 2, 4] {
+        let r =
+            run_scenario(&session, &data, &bits, &cfg(workers, fault), &spec, None, false).unwrap();
+        assert_eq!(r.open.errored, 1, "w{workers}: exactly the targeted request errors");
+        assert_eq!(r.tenants[0].errored, 1, "w{workers}: the error lands on its tenant");
+        assert!(r.tenants[0].closes(), "w{workers}: tenant accounting closes around the error");
+        assert_eq!(r.open.serve.predictions[0], -2, "w{workers}: errored carries -2");
+        match &base {
+            None => base = Some(r),
+            Some(b) => assert_eq!(core(&r), core(b), "w{workers}: fault run core moved"),
+        }
+    }
+}
+
+#[test]
+fn int8_scenario_serving_is_deterministic() {
+    let spec = ScenarioSpec::load(scenarios_dir().join("multi_tenant.json")).unwrap();
+    let (arts, data) = synthetic_parts(100).unwrap();
+    let session = Session::from_parts_int8(arts, data.clone(), 1).unwrap();
+    let bits = [8.0f32, 8.0];
+    let a = run_scenario(&session, &data, &bits, &cfg(1, FaultPlan::default()), &spec, None, false)
+        .unwrap();
+    let b = run_scenario(&session, &data, &bits, &cfg(4, FaultPlan::default()), &spec, None, false)
+        .unwrap();
+    assert_eq!(core(&a), core(&b), "int8 scenario core moved across worker counts");
+    assert!(a.tenants.iter().all(|t| t.closes()));
+}
+
+#[test]
+fn degrade_ladder_composes_with_a_burst_scenario() {
+    let ladder = vec![
+        Rung { name: "b8".into(), bits: vec![8.0, 8.0], drain_rps: 800.0, est_accuracy: 0.9 },
+        Rung { name: "b6".into(), bits: vec![6.0, 6.0], drain_rps: 1200.0, est_accuracy: 0.8 },
+        Rung { name: "b4".into(), bits: vec![4.0, 4.0], drain_rps: 1800.0, est_accuracy: 0.7 },
+    ];
+    let dc = DegradeConfig::new(ladder);
+    let spec = ScenarioSpec::load(scenarios_dir().join("burst_2x.json")).unwrap();
+    let (session, data) = session_and_data();
+    let bits = [8.0f32, 8.0];
+    let a = run_scenario(
+        &session,
+        &data,
+        &bits,
+        &cfg(1, FaultPlan::default()),
+        &spec,
+        Some(&dc),
+        false,
+    )
+    .unwrap();
+    // the 2.5x on-burst overloads rung 0, so the controller must walk
+    // down during bursts (and the trace is scheduling-independent)
+    assert!(!a.switches.is_empty(), "burst must trigger rung switches");
+    assert!(a.tenants.iter().all(|t| t.closes()));
+    let b = run_scenario(
+        &session,
+        &data,
+        &bits,
+        &cfg(4, FaultPlan::default()),
+        &spec,
+        Some(&dc),
+        false,
+    )
+    .unwrap();
+    assert_eq!(a.switches, b.switches, "switch trace moved across worker counts");
+    assert_eq!(core(&a), core(&b), "degrade-composed core moved");
+
+    // per-tenant bit allocations and a ladder both claim the rung table
+    let mixed = ScenarioSpec::load(scenarios_dir().join("multi_tenant.json")).unwrap();
+    let e = run_scenario(
+        &session,
+        &data,
+        &bits,
+        &cfg(1, FaultPlan::default()),
+        &mixed,
+        Some(&dc),
+        false,
+    )
+    .unwrap_err()
+    .to_string();
+    assert!(e.contains("rung table"), "{e}");
+}
