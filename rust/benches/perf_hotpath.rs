@@ -33,7 +33,8 @@ use adaq::report::{markdown_table, Align};
 use adaq::rng::{fill_normal, Pcg32};
 use adaq::runtime::{Backend, CpuBackend};
 use adaq::tensor::{
-    gemm_i8_packed, matmul_reference, matmul_sparse_lhs, matmul_threaded, pack_i8, Tensor,
+    active_kernel, gemm_i8_packed, gemm_i8_packed_with_kernel, matmul_into_with_kernel,
+    matmul_reference, matmul_sparse_lhs, matmul_threaded, pack_i8, Tensor,
 };
 use adaq::util::{Scratch, Timer};
 
@@ -135,6 +136,14 @@ fn main() {
         let seed_s = time_n(3, || {
             let _ = matmul_reference(&a, &b).unwrap();
         });
+        // forced-scalar single-thread: the dispatch-independent baseline
+        // the SIMD kernel speedup is measured against
+        let mut sc_out = vec![0f32; dim * dim];
+        let scalar_s = time_n(3, || {
+            sc_out.fill(0.0);
+            matmul_into_with_kernel("scalar", a.data(), b.data(), dim, dim, dim, &mut sc_out, 1)
+                .unwrap();
+        });
         let one_s = time_n(3, || {
             let _ = matmul_threaded(&a, &b, 1).unwrap();
         });
@@ -142,19 +151,25 @@ fn main() {
             let _ = matmul_threaded(&a, &b, 0).unwrap();
         });
         let gflops = |s: f64| 2.0 * (dim * dim * dim) as f64 / s / 1e9;
-        let threads = std::thread::available_parallelism().map_or(1, |v| v.get()).min(16);
+        let threads = std::thread::available_parallelism().map_or(1, |v| v.get());
+        let kernel = active_kernel();
         rows.push(vec![
             format!("GEMM {dim}³ seed ikj loop"),
             format!("{:.1} ms", seed_s * 1e3),
             format!("{:.2} GFLOP/s", gflops(seed_s)),
         ]);
         rows.push(vec![
-            format!("GEMM {dim}³ blocked 1 thread"),
-            format!("{:.1} ms", one_s * 1e3),
-            format!("{:.2} GFLOP/s — {:.2}x vs seed", gflops(one_s), seed_s / one_s),
+            format!("GEMM {dim}³ scalar kernel 1 thread"),
+            format!("{:.1} ms", scalar_s * 1e3),
+            format!("{:.2} GFLOP/s — {:.2}x vs seed", gflops(scalar_s), seed_s / scalar_s),
         ]);
         rows.push(vec![
-            format!("GEMM {dim}³ blocked {threads} threads"),
+            format!("GEMM {dim}³ {kernel} kernel 1 thread"),
+            format!("{:.1} ms", one_s * 1e3),
+            format!("{:.2} GFLOP/s — {:.2}x vs scalar", gflops(one_s), scalar_s / one_s),
+        ]);
+        rows.push(vec![
+            format!("GEMM {dim}³ {kernel} kernel {threads} threads"),
             format!("{:.1} ms", mt_s * 1e3),
             format!("{:.2} GFLOP/s — {:.2}x vs seed", gflops(mt_s), seed_s / mt_s),
         ]);
@@ -162,12 +177,15 @@ fn main() {
             ("m", Json::Num(dim as f64)),
             ("n", Json::Num(dim as f64)),
             ("k", Json::Num(dim as f64)),
+            ("kernel", Json::Str(kernel.to_string())),
             ("seed_ikj_ms", Json::Num(seed_s * 1e3)),
+            ("scalar_1t_ms", Json::Num(scalar_s * 1e3)),
             ("blocked_1t_ms", Json::Num(one_s * 1e3)),
             ("blocked_mt_ms", Json::Num(mt_s * 1e3)),
             ("threads", Json::Num(threads as f64)),
             ("speedup_1t", Json::Num(seed_s / one_s)),
             ("speedup_mt", Json::Num(seed_s / mt_s)),
+            ("speedup_1t_vs_scalar", Json::Num(scalar_s / one_s)),
         ]);
     }
     json_fields.push(("gemm_512", gemm_json));
@@ -182,17 +200,26 @@ fn main() {
         // measure the steady-state (pre-packed) kernel
         let packed = pack_i8(&b, dim, dim);
         let mut out = vec![0i32; dim * dim];
+        let scalar_s = time_n(3, || {
+            gemm_i8_packed_with_kernel("scalar", &a, &packed, dim, &mut out, 1).unwrap()
+        });
         let one_s = time_n(3, || gemm_i8_packed(&a, &packed, dim, &mut out, 1));
         let mt_s = time_n(5, || gemm_i8_packed(&a, &packed, dim, &mut out, 0));
         let gops = |s: f64| 2.0 * (dim * dim * dim) as f64 / s / 1e9;
-        let threads = std::thread::available_parallelism().map_or(1, |v| v.get()).min(16);
+        let threads = std::thread::available_parallelism().map_or(1, |v| v.get());
+        let kernel = active_kernel();
         rows.push(vec![
-            format!("int8 GEMM {dim}³ packed 1 thread"),
-            format!("{:.1} ms", one_s * 1e3),
-            format!("{:.2} GOP/s", gops(one_s)),
+            format!("int8 GEMM {dim}³ scalar kernel 1 thread"),
+            format!("{:.1} ms", scalar_s * 1e3),
+            format!("{:.2} GOP/s", gops(scalar_s)),
         ]);
         rows.push(vec![
-            format!("int8 GEMM {dim}³ packed {threads} threads"),
+            format!("int8 GEMM {dim}³ {kernel} kernel 1 thread"),
+            format!("{:.1} ms", one_s * 1e3),
+            format!("{:.2} GOP/s — {:.2}x vs scalar", gops(one_s), scalar_s / one_s),
+        ]);
+        rows.push(vec![
+            format!("int8 GEMM {dim}³ {kernel} kernel {threads} threads"),
             format!("{:.1} ms", mt_s * 1e3),
             format!("{:.2} GOP/s", gops(mt_s)),
         ]);
@@ -200,10 +227,13 @@ fn main() {
             "gemm_512_int8",
             Json::obj(vec![
                 ("dim", Json::Num(dim as f64)),
+                ("kernel", Json::Str(kernel.to_string())),
+                ("scalar_1t_ms", Json::Num(scalar_s * 1e3)),
                 ("packed_1t_ms", Json::Num(one_s * 1e3)),
                 ("packed_mt_ms", Json::Num(mt_s * 1e3)),
                 ("gops_mt", Json::Num(gops(mt_s))),
                 ("threads", Json::Num(threads as f64)),
+                ("speedup_1t_vs_scalar", Json::Num(scalar_s / one_s)),
             ]),
         ));
     }

@@ -21,7 +21,7 @@
 //!
 //! | module | role |
 //! |---|---|
-//! | [`tensor`] | minimal dense f32/i32 tensors + the blocked f32 and int8×int8→i32 GEMMs |
+//! | [`tensor`] | minimal dense f32/i32 tensors + the blocked f32 and int8×int8→i32 GEMMs (runtime-dispatched scalar/AVX2/NEON microkernels) |
 //! | [`rng`] | PCG32/PCG64 deterministic RNG (bit-compatible with `python/compile/pcg.py`) |
 //! | [`io`] | TNSR container, JSON, CSV |
 //! | [`nn`] | pure-Rust CNN inference substrate: `GraphPlan` analysis + f32 and int8 forward paths |

@@ -19,7 +19,7 @@
 //! (`coordinator::server`) is built on.
 
 use crate::quant::{AffineI8, QuantRange};
-use crate::tensor::{gemm_i8_packed, matmul_into, pack_i8, PackedI8, Tensor};
+use crate::tensor::{gemm_i8_packed_scratch, matmul_into_scratch, pack_i8, PackedI8, Tensor};
 use crate::util::Scratch;
 use crate::{Error, Result};
 
@@ -127,7 +127,7 @@ pub fn conv2d_fused(
     let kkc = k * k * cin;
     let mut out = scratch.take(rows * cout);
     // HWIO kernel memory is already the row-major [k·k·cin, cout] matrix.
-    matmul_into(patches.data(), w.data(), rows, kkc, cout, &mut out);
+    matmul_into_scratch(patches.data(), w.data(), rows, kkc, cout, &mut out, scratch);
     scratch.put(patches.into_vec());
     bias_act_inplace(&mut out, bias.data(), relu);
     Tensor::from_vec(&[n, oh, ow, cout], out)
@@ -160,7 +160,7 @@ pub fn dense_fused(
         return Err(Error::Shape(format!("dense bias {} vs cout {cout}", bias.len())));
     }
     let mut out = scratch.take(n * cout);
-    matmul_into(x.data(), w.data(), n, cin, cout, &mut out);
+    matmul_into_scratch(x.data(), w.data(), n, cin, cout, &mut out, scratch);
     bias_act_inplace(&mut out, bias.data(), relu);
     Tensor::from_vec(&[n, cout], out)
 }
@@ -463,7 +463,7 @@ fn int8_matmul_requant(
     let mut scales = scratch.take_any(2 * groups);
     quantize_act(lhs, kdim, groups, &mut xq, &mut rsum, &mut scales);
     let mut acc = scratch.take_i32(rows * cols);
-    gemm_i8_packed(&xq, &qw.packed, rows, &mut acc, 0);
+    gemm_i8_packed_scratch(&xq, &qw.packed, rows, &mut acc, scratch);
     let mut out = scratch.take_any(rows * cols);
     let mut colc = scratch.take_any(cols);
     requant_bias_act(&acc, &rsum, &scales, qw, kdim, bias.data(), relu, &mut out, &mut colc);

@@ -17,6 +17,14 @@
 //! the budget-exhausted inline path), so job-level × batch-level × GEMM
 //! threads never oversubscribe the machine.
 //!
+//! The GEMM itself is runtime-dispatched (`tensor::active_kernel`):
+//! AVX2/FMA or NEON microkernels where the host supports them, portable
+//! scalar otherwise, chosen once per process. All the invariants above
+//! are *per kernel* — a process never mixes kernels, so logits stay
+//! bitwise reproducible across thread counts and batch splits on any
+//! host; the int8 serving GEMM is additionally bit-exact across kernels
+//! (integer math), so int8 serve outputs are host-independent.
+//!
 //! Serve path: the [`GraphPlan`] (use counts, fusion tables, resolved
 //! edges) is computed **once** in [`CpuBackend::new`] and shared by every
 //! forward — requests never rebuild the analysis. [`Backend::qforward_one`]

@@ -1,0 +1,133 @@
+//! Runtime kernel selection for the GEMMs.
+//!
+//! The best kernel for the host is picked **once per process** (a
+//! `OnceLock`): AVX2/FMA on x86-64 when `is_x86_feature_detected!` says
+//! so, NEON on aarch64 (baseline there), the portable scalar kernel
+//! everywhere else. `ADAQ_FORCE_SCALAR=1` pins the scalar kernel — the CI
+//! forced-scalar leg keeps the fallback green on SIMD hosts.
+//!
+//! Per-process selection is part of the determinism story: a process
+//! never mixes kernels for the same GEMM, so the f32 contract ("bitwise
+//! invariant across thread count and batch split *within* a kernel")
+//! holds for everything a serve process emits. The int8 kernels are
+//! bit-exact across *all* kernels (integer math), so cached int8 results
+//! survive even a kernel change between runs.
+//!
+//! Tests and benches address kernels explicitly through
+//! [`crate::tensor::matmul_into_with_kernel`] /
+//! [`crate::tensor::gemm_i8_packed_with_kernel`] instead of mutating the
+//! process-wide choice — a global override would race across cargo's
+//! in-process test threads mid-bitwise-comparison.
+
+use std::sync::OnceLock;
+
+#[cfg(target_arch = "x86_64")]
+use super::kernel::avx2;
+#[cfg(target_arch = "aarch64")]
+use super::kernel::neon;
+use super::kernel::scalar;
+use super::pack::PackedI8;
+
+/// f32 row-range kernel: `c[rows r0..r1] += a · b_packed`; the trailing
+/// buffer is the kernel's reusable A-pack scratch.
+pub(crate) type F32RowsFn =
+    fn(&[f32], &[f32], &mut [f32], usize, usize, usize, usize, &mut Vec<f32>);
+/// int8 row-range kernel: `c[rows r0..r1] = a · b` (fully overwritten).
+pub(crate) type I8RowsFn = fn(&[i8], &PackedI8, &mut [i32], usize, usize, &mut Vec<i8>);
+
+/// One dispatchable kernel pair (f32 + int8) and its tile geometry.
+pub(crate) struct GemmKernel {
+    pub(crate) name: &'static str,
+    /// f32 row-tile height — threaded row chunks align to this.
+    pub(crate) mr_f32: usize,
+    /// int8 row-tile height.
+    pub(crate) mr_i8: usize,
+    pub(crate) f32_rows: F32RowsFn,
+    pub(crate) i8_rows: I8RowsFn,
+}
+
+static SCALAR: GemmKernel = GemmKernel {
+    name: "scalar",
+    mr_f32: scalar::MR_F32,
+    mr_i8: scalar::MR_I8,
+    f32_rows: scalar::gemm_rows,
+    i8_rows: scalar::gemm_i8_rows,
+};
+
+#[cfg(target_arch = "x86_64")]
+static AVX2: GemmKernel = GemmKernel {
+    name: "avx2",
+    mr_f32: avx2::MR_F32,
+    mr_i8: avx2::MR_I8,
+    f32_rows: avx2::gemm_rows,
+    i8_rows: avx2::gemm_i8_rows,
+};
+
+#[cfg(target_arch = "aarch64")]
+static NEON: GemmKernel = GemmKernel {
+    name: "neon",
+    mr_f32: neon::MR_F32,
+    mr_i8: neon::MR_I8,
+    f32_rows: neon::gemm_rows,
+    i8_rows: neon::gemm_i8_rows,
+};
+
+fn force_scalar() -> bool {
+    std::env::var("ADAQ_FORCE_SCALAR").map_or(false, |v| !v.is_empty() && v != "0")
+}
+
+/// Best kernel the host supports (ignores the env override).
+#[allow(unreachable_code)]
+fn detect_best() -> &'static GemmKernel {
+    #[cfg(target_arch = "x86_64")]
+    {
+        if is_x86_feature_detected!("avx2") && is_x86_feature_detected!("fma") {
+            return &AVX2;
+        }
+    }
+    #[cfg(target_arch = "aarch64")]
+    {
+        return &NEON;
+    }
+    &SCALAR
+}
+
+/// The process-wide kernel, selected once on first use.
+pub(crate) fn active() -> &'static GemmKernel {
+    static ACTIVE: OnceLock<&'static GemmKernel> = OnceLock::new();
+    ACTIVE.get_or_init(|| if force_scalar() { &SCALAR } else { detect_best() })
+}
+
+/// Every kernel usable on this host, scalar (the reference) first.
+pub(crate) fn available() -> Vec<&'static GemmKernel> {
+    #[allow(unused_mut)]
+    let mut v = vec![&SCALAR];
+    #[cfg(target_arch = "x86_64")]
+    if is_x86_feature_detected!("avx2") && is_x86_feature_detected!("fma") {
+        v.push(&AVX2);
+    }
+    #[cfg(target_arch = "aarch64")]
+    v.push(&NEON);
+    v
+}
+
+/// Look up a host-usable kernel by name.
+pub(crate) fn by_name(name: &str) -> Option<&'static GemmKernel> {
+    available().into_iter().find(|k| k.name == name)
+}
+
+/// Name of the kernel the process-wide dispatch selected (`"scalar"`,
+/// `"avx2"` or `"neon"`): CPU capability at first use, overridden to
+/// `"scalar"` by `ADAQ_FORCE_SCALAR=1`. Benches tag their JSON rows with
+/// this so perf trajectories compare like with like.
+pub fn active_kernel() -> &'static str {
+    active().name
+}
+
+/// Names of every kernel usable on this host — `"scalar"` always (and
+/// first: it is the reference the others are tested against), plus
+/// `"avx2"`/`"neon"` when the CPU supports them. The per-kernel test
+/// batteries iterate over this.
+pub fn kernel_names() -> Vec<&'static str> {
+    available().iter().map(|k| k.name).collect()
+}

@@ -1,0 +1,198 @@
+//! AVX2/FMA microkernels (x86-64, runtime-detected by the dispatcher).
+//!
+//! **f32** — an 8×8 register tile: eight ymm accumulators, one per A row,
+//! each updated with a broadcast-A × panel-row FMA per k-step. Eight
+//! independent accumulation chains keep both FMA ports busy across the
+//! ~4-cycle FMA latency. A is packed per row-panel
+//! (`pack_a_panel`), so each k-step broadcasts all MR values from one
+//! cache line. FMA contracts multiply-add into a single rounding — the
+//! results differ from the scalar kernel in the last ulp — but the
+//! per-element k-order is fixed exactly like the scalar kernel (ascending
+//! p within KC blocks, blocks ascending), so results are bitwise
+//! reproducible across thread counts and batch splits *within* this
+//! kernel.
+//!
+//! **int8** — exact widening multiply over k-pairs. The classic
+//! `pmaddubsw` u8×s8 path *saturates* its i16 pair-sums for full-range
+//! inputs (e.g. (−128)·(−128) + (−128)·(−128) = 32768 > i16::MAX), which
+//! would break the bit-exactness contract against the scalar kernel.
+//! Instead both operands are sign-extended to i16 and multiplied with
+//! `pmaddwd` (`_mm256_madd_epi16`): i16×i16 products summed pairwise into
+//! i32 are exact for every input, so this kernel is bit-identical to
+//! `scalar::gemm_i8_rows` — integer addition is associative, the pair
+//! regrouping changes nothing.
+
+use core::arch::x86_64::*;
+
+use crate::tensor::pack::{self, PackedI8, KC, NR};
+
+/// f32 microkernel row tile (8 ymm accumulators).
+pub(crate) const MR_F32: usize = 8;
+/// int8 microkernel row tile.
+pub(crate) const MR_I8: usize = 4;
+
+/// Compute C rows [r0, r1): `c += a · b_packed`. `c` holds exactly those
+/// rows and must be zeroed; `apack` is the reusable A-panel buffer.
+///
+/// Safety contract (checked by the dispatcher, not here): only selected
+/// after `is_x86_feature_detected!("avx2")` and `("fma")` both pass.
+pub(crate) fn gemm_rows(
+    a: &[f32],
+    packed: &[f32],
+    c: &mut [f32],
+    r0: usize,
+    r1: usize,
+    k: usize,
+    n: usize,
+    apack: &mut Vec<f32>,
+) {
+    unsafe { gemm_rows_impl(a, packed, c, r0, r1, k, n, apack) }
+}
+
+#[target_feature(enable = "avx2", enable = "fma")]
+unsafe fn gemm_rows_impl(
+    a: &[f32],
+    packed: &[f32],
+    c: &mut [f32],
+    r0: usize,
+    r1: usize,
+    k: usize,
+    n: usize,
+    apack: &mut Vec<f32>,
+) {
+    let npanels = n.div_ceil(NR);
+    let mut i = r0;
+    while i < r1 {
+        let mr = MR_F32.min(r1 - i);
+        // pack this row-panel of A k-major (edge rows zero-padded): the
+        // kernel always computes a full 8-row tile, writes back `mr`
+        pack::pack_a_panel(a, i, mr, k, MR_F32, apack);
+        let mut pc = 0;
+        while pc < k {
+            let kc = KC.min(k - pc);
+            let apanel = &apack[pc * MR_F32..(pc + kc) * MR_F32];
+            for jp in 0..npanels {
+                let j0 = jp * NR;
+                let nr = NR.min(n - j0);
+                let panel = &packed[jp * k * NR + pc * NR..jp * k * NR + (pc + kc) * NR];
+                let mut acc = [_mm256_setzero_ps(); MR_F32];
+                let mut ap = apanel.as_ptr();
+                let mut bp = panel.as_ptr();
+                for _ in 0..kc {
+                    let bv = _mm256_loadu_ps(bp);
+                    acc[0] = _mm256_fmadd_ps(_mm256_set1_ps(*ap), bv, acc[0]);
+                    acc[1] = _mm256_fmadd_ps(_mm256_set1_ps(*ap.add(1)), bv, acc[1]);
+                    acc[2] = _mm256_fmadd_ps(_mm256_set1_ps(*ap.add(2)), bv, acc[2]);
+                    acc[3] = _mm256_fmadd_ps(_mm256_set1_ps(*ap.add(3)), bv, acc[3]);
+                    acc[4] = _mm256_fmadd_ps(_mm256_set1_ps(*ap.add(4)), bv, acc[4]);
+                    acc[5] = _mm256_fmadd_ps(_mm256_set1_ps(*ap.add(5)), bv, acc[5]);
+                    acc[6] = _mm256_fmadd_ps(_mm256_set1_ps(*ap.add(6)), bv, acc[6]);
+                    acc[7] = _mm256_fmadd_ps(_mm256_set1_ps(*ap.add(7)), bv, acc[7]);
+                    ap = ap.add(MR_F32);
+                    bp = bp.add(NR);
+                }
+                if nr == NR {
+                    for (r, &av) in acc.iter().enumerate().take(mr) {
+                        let cp = c.as_mut_ptr().add((i + r - r0) * n + j0);
+                        _mm256_storeu_ps(cp, _mm256_add_ps(_mm256_loadu_ps(cp), av));
+                    }
+                } else {
+                    let mut tmp = [0f32; NR];
+                    for (r, &av) in acc.iter().enumerate().take(mr) {
+                        _mm256_storeu_ps(tmp.as_mut_ptr(), av);
+                        let off = (i + r - r0) * n + j0;
+                        for j in 0..nr {
+                            c[off + j] += tmp[j];
+                        }
+                    }
+                }
+            }
+            pc += kc;
+        }
+        i += mr;
+    }
+}
+
+/// int8×int8→i32 rows [r0, r1); `c` is fully overwritten. Bit-exact
+/// against the scalar kernel by construction (see module docs).
+///
+/// Safety contract: only selected after `is_x86_feature_detected!("avx2")`.
+pub(crate) fn gemm_i8_rows(
+    a: &[i8],
+    b: &PackedI8,
+    c: &mut [i32],
+    r0: usize,
+    r1: usize,
+    apack: &mut Vec<i8>,
+) {
+    unsafe { gemm_i8_rows_impl(a, b, c, r0, r1, apack) }
+}
+
+#[target_feature(enable = "avx2")]
+unsafe fn gemm_i8_rows_impl(
+    a: &[i8],
+    b: &PackedI8,
+    c: &mut [i32],
+    r0: usize,
+    r1: usize,
+    apack: &mut Vec<i8>,
+) {
+    let (k, n, ks) = (b.k, b.n, b.kstride);
+    let packed = &b.panels[..];
+    let npanels = n.div_ceil(NR);
+    // kstride is even and rows k..kstride are zero, so every panel is
+    // whole k-pairs: the ×0 pad terms keep odd k exact with no tail load
+    let kp = ks / 2;
+    let mut i = r0;
+    while i < r1 {
+        let mr = MR_I8.min(r1 - i);
+        pack::pack_a_i8_panel(a, i, mr, k, MR_I8, apack);
+        for jp in 0..npanels {
+            let j0 = jp * NR;
+            let nr = NR.min(n - j0);
+            let panel = &packed[jp * ks * NR..(jp + 1) * ks * NR];
+            let mut acc = [_mm256_setzero_si256(); MR_I8];
+            let mut ap = apack.as_ptr();
+            let mut bp = panel.as_ptr();
+            for _ in 0..kp {
+                // [b_p | b_{p+1}] (2×NR bytes) → per-column pair
+                // interleave → sign-extend to 16×i16
+                let bytes = _mm_loadu_si128(bp as *const __m128i);
+                let inter = _mm_unpacklo_epi8(bytes, _mm_srli_si128(bytes, 8));
+                let bv = _mm256_cvtepi8_epi16(inter);
+                // per row: both pair values as adjacent i16s in every i32
+                // lane; pmaddwd then yields b_p[j]·a_p + b_{p+1}[j]·a_{p+1}
+                let mut aprs = [0i32; MR_I8];
+                for (r, apr) in aprs.iter_mut().enumerate() {
+                    let a0 = *ap.add(r * 2) as i16 as u16 as u32;
+                    let a1 = *ap.add(r * 2 + 1) as i16 as u16 as u32;
+                    *apr = (a0 | (a1 << 16)) as i32;
+                }
+                let av0 = _mm256_set1_epi32(aprs[0]);
+                let av1 = _mm256_set1_epi32(aprs[1]);
+                let av2 = _mm256_set1_epi32(aprs[2]);
+                let av3 = _mm256_set1_epi32(aprs[3]);
+                acc[0] = _mm256_add_epi32(acc[0], _mm256_madd_epi16(bv, av0));
+                acc[1] = _mm256_add_epi32(acc[1], _mm256_madd_epi16(bv, av1));
+                acc[2] = _mm256_add_epi32(acc[2], _mm256_madd_epi16(bv, av2));
+                acc[3] = _mm256_add_epi32(acc[3], _mm256_madd_epi16(bv, av3));
+                ap = ap.add(MR_I8 * 2);
+                bp = bp.add(NR * 2);
+            }
+            if nr == NR {
+                for (r, &av) in acc.iter().enumerate().take(mr) {
+                    let cp = c.as_mut_ptr().add((i + r - r0) * n + j0);
+                    _mm256_storeu_si256(cp as *mut __m256i, av);
+                }
+            } else {
+                let mut tmp = [0i32; NR];
+                for (r, &av) in acc.iter().enumerate().take(mr) {
+                    _mm256_storeu_si256(tmp.as_mut_ptr() as *mut __m256i, av);
+                    let off = (i + r - r0) * n + j0;
+                    c[off..off + nr].copy_from_slice(&tmp[..nr]);
+                }
+            }
+        }
+        i += mr;
+    }
+}

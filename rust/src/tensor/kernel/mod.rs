@@ -1,0 +1,9 @@
+//! GEMM microkernels. One module per instruction set; all consume the
+//! shared packed-panel formats from [`crate::tensor::pack`] and are
+//! selected at runtime by [`crate::tensor::dispatch`].
+
+#[cfg(target_arch = "x86_64")]
+pub(crate) mod avx2;
+#[cfg(target_arch = "aarch64")]
+pub(crate) mod neon;
+pub(crate) mod scalar;

@@ -1,0 +1,178 @@
+//! NEON microkernels (aarch64 — NEON is baseline there, so no runtime
+//! feature probe is needed; the dispatcher selects this unconditionally
+//! unless `ADAQ_FORCE_SCALAR=1`).
+//!
+//! **f32** — a 4×8 tile held in eight q-register accumulators (4 rows ×
+//! 2 half-panels), updated with `vfmaq_f32` broadcast FMAs from a packed
+//! A panel. Like the AVX2 kernel: FMA rounding differs from scalar, but
+//! the fixed k-order keeps results bitwise reproducible across thread
+//! counts within this kernel.
+//!
+//! **int8** — exact widening multiply over k-pairs: `vmull_s8` widens
+//! i8×i8 products to i16, and `vpadalq_s16` sums adjacent pairs into the
+//! i32 accumulators *in wide precision*. Summing the pair in i16 first
+//! would overflow ((−128)·(−128) + (−128)·(−128) = 32768 > i16::MAX);
+//! the pairwise widening accumulate keeps every input exact, so this
+//! kernel is bit-identical to `scalar::gemm_i8_rows`.
+
+use core::arch::aarch64::*;
+
+use crate::tensor::pack::{self, PackedI8, KC, NR};
+
+/// f32 microkernel row tile.
+pub(crate) const MR_F32: usize = 4;
+/// int8 microkernel row tile.
+pub(crate) const MR_I8: usize = 4;
+
+/// Compute C rows [r0, r1): `c += a · b_packed`. `c` holds exactly those
+/// rows and must be zeroed; `apack` is the reusable A-panel buffer.
+pub(crate) fn gemm_rows(
+    a: &[f32],
+    packed: &[f32],
+    c: &mut [f32],
+    r0: usize,
+    r1: usize,
+    k: usize,
+    n: usize,
+    apack: &mut Vec<f32>,
+) {
+    unsafe { gemm_rows_impl(a, packed, c, r0, r1, k, n, apack) }
+}
+
+#[target_feature(enable = "neon")]
+unsafe fn gemm_rows_impl(
+    a: &[f32],
+    packed: &[f32],
+    c: &mut [f32],
+    r0: usize,
+    r1: usize,
+    k: usize,
+    n: usize,
+    apack: &mut Vec<f32>,
+) {
+    let npanels = n.div_ceil(NR);
+    let mut i = r0;
+    while i < r1 {
+        let mr = MR_F32.min(r1 - i);
+        pack::pack_a_panel(a, i, mr, k, MR_F32, apack);
+        let mut pc = 0;
+        while pc < k {
+            let kc = KC.min(k - pc);
+            let apanel = &apack[pc * MR_F32..(pc + kc) * MR_F32];
+            for jp in 0..npanels {
+                let j0 = jp * NR;
+                let nr = NR.min(n - j0);
+                let panel = &packed[jp * k * NR + pc * NR..jp * k * NR + (pc + kc) * NR];
+                let mut acc = [[vdupq_n_f32(0.0); 2]; MR_F32];
+                let mut ap = apanel.as_ptr();
+                let mut bp = panel.as_ptr();
+                for _ in 0..kc {
+                    let b0 = vld1q_f32(bp);
+                    let b1 = vld1q_f32(bp.add(4));
+                    for (r, accr) in acc.iter_mut().enumerate() {
+                        let av = vdupq_n_f32(*ap.add(r));
+                        accr[0] = vfmaq_f32(accr[0], b0, av);
+                        accr[1] = vfmaq_f32(accr[1], b1, av);
+                    }
+                    ap = ap.add(MR_F32);
+                    bp = bp.add(NR);
+                }
+                if nr == NR {
+                    for (r, accr) in acc.iter().enumerate().take(mr) {
+                        let cp = c.as_mut_ptr().add((i + r - r0) * n + j0);
+                        vst1q_f32(cp, vaddq_f32(vld1q_f32(cp), accr[0]));
+                        let cp4 = cp.add(4);
+                        vst1q_f32(cp4, vaddq_f32(vld1q_f32(cp4), accr[1]));
+                    }
+                } else {
+                    let mut tmp = [0f32; NR];
+                    for (r, accr) in acc.iter().enumerate().take(mr) {
+                        vst1q_f32(tmp.as_mut_ptr(), accr[0]);
+                        vst1q_f32(tmp.as_mut_ptr().add(4), accr[1]);
+                        let off = (i + r - r0) * n + j0;
+                        for j in 0..nr {
+                            c[off + j] += tmp[j];
+                        }
+                    }
+                }
+            }
+            pc += kc;
+        }
+        i += mr;
+    }
+}
+
+/// int8×int8→i32 rows [r0, r1); `c` is fully overwritten. Bit-exact
+/// against the scalar kernel by construction (see module docs).
+pub(crate) fn gemm_i8_rows(
+    a: &[i8],
+    b: &PackedI8,
+    c: &mut [i32],
+    r0: usize,
+    r1: usize,
+    apack: &mut Vec<i8>,
+) {
+    unsafe { gemm_i8_rows_impl(a, b, c, r0, r1, apack) }
+}
+
+#[target_feature(enable = "neon")]
+unsafe fn gemm_i8_rows_impl(
+    a: &[i8],
+    b: &PackedI8,
+    c: &mut [i32],
+    r0: usize,
+    r1: usize,
+    apack: &mut Vec<i8>,
+) {
+    let (k, n, ks) = (b.k, b.n, b.kstride);
+    let packed = &b.panels[..];
+    let npanels = n.div_ceil(NR);
+    // kstride is even with zero pad rows: whole k-pairs, no tail load
+    let kp = ks / 2;
+    let mut i = r0;
+    while i < r1 {
+        let mr = MR_I8.min(r1 - i);
+        pack::pack_a_i8_panel(a, i, mr, k, MR_I8, apack);
+        for jp in 0..npanels {
+            let j0 = jp * NR;
+            let nr = NR.min(n - j0);
+            let panel = &packed[jp * ks * NR..(jp + 1) * ks * NR];
+            // acc[r][h]: i32 lanes for columns h*4 .. h*4+4
+            let mut acc = [[vdupq_n_s32(0); 2]; MR_I8];
+            let mut ap = apack.as_ptr();
+            let mut bp = panel.as_ptr();
+            for _ in 0..kp {
+                // [b_p | b_{p+1}] (2×NR bytes) → per-column pair zip:
+                // zip.0 = [b_p[0], b_{p+1}[0], …, b_p[3], b_{p+1}[3]]
+                let bytes = vld1q_s8(bp);
+                let zip = vzip_s8(vget_low_s8(bytes), vget_high_s8(bytes));
+                for (r, accr) in acc.iter_mut().enumerate() {
+                    // [a_p, a_{p+1}] repeated in every i16 lane
+                    let pair =
+                        i16::from_le_bytes([*ap.add(r * 2) as u8, *ap.add(r * 2 + 1) as u8]);
+                    let av = vreinterpret_s8_s16(vdup_n_s16(pair));
+                    accr[0] = vpadalq_s16(accr[0], vmull_s8(zip.0, av));
+                    accr[1] = vpadalq_s16(accr[1], vmull_s8(zip.1, av));
+                }
+                ap = ap.add(MR_I8 * 2);
+                bp = bp.add(NR * 2);
+            }
+            if nr == NR {
+                for (r, accr) in acc.iter().enumerate().take(mr) {
+                    let cp = c.as_mut_ptr().add((i + r - r0) * n + j0);
+                    vst1q_s32(cp, accr[0]);
+                    vst1q_s32(cp.add(4), accr[1]);
+                }
+            } else {
+                let mut tmp = [0i32; NR];
+                for (r, accr) in acc.iter().enumerate().take(mr) {
+                    vst1q_s32(tmp.as_mut_ptr(), accr[0]);
+                    vst1q_s32(tmp.as_mut_ptr().add(4), accr[1]);
+                    let off = (i + r - r0) * n + j0;
+                    c[off..off + nr].copy_from_slice(&tmp[..nr]);
+                }
+            }
+        }
+        i += mr;
+    }
+}

@@ -1,0 +1,114 @@
+//! Portable scalar microkernels — the dispatch fallback on hosts without
+//! AVX2/NEON (`ADAQ_FORCE_SCALAR=1` forces them everywhere) and the
+//! correctness reference the SIMD kernels are tested against: the int8
+//! SIMD kernels must match `gemm_i8_rows` **bit-exactly**, the f32 ones
+//! within tolerance (FMA contraction rounds differently).
+//!
+//! These are the seed's kernels unchanged: MR×NR register-tiled, no
+//! explicit intrinsics, relying on the autovectorizer (the release
+//! profile keeps `codegen-units = 1` so the whole loop nest is visible to
+//! it). They read A directly — at MR=4 the strided loads are four
+//! sequential streams, which the prefetcher handles; the SIMD kernels pack
+//! A instead to feed their broadcast loads from one cache line.
+
+use crate::tensor::pack::{PackedI8, KC, NR};
+
+/// f32 microkernel row tile.
+pub(crate) const MR_F32: usize = 4;
+/// int8 microkernel row tile.
+pub(crate) const MR_I8: usize = 4;
+
+/// Compute C rows [r0, r1) from A and packed B: `c += a · b_packed`.
+/// `c` holds exactly those rows (row r0 of the full matrix is row 0 of
+/// `c`) and must be zeroed. `_apack` is unused — this kernel reads A in
+/// place.
+pub(crate) fn gemm_rows(
+    a: &[f32],
+    packed: &[f32],
+    c: &mut [f32],
+    r0: usize,
+    r1: usize,
+    k: usize,
+    n: usize,
+    _apack: &mut Vec<f32>,
+) {
+    let npanels = n.div_ceil(NR);
+    let mut i = r0;
+    while i < r1 {
+        let mr = MR_F32.min(r1 - i);
+        let mut pc = 0;
+        while pc < k {
+            let kc = KC.min(k - pc);
+            for jp in 0..npanels {
+                let j0 = jp * NR;
+                let nr = NR.min(n - j0);
+                let panel = &packed[jp * k * NR + pc * NR..jp * k * NR + (pc + kc) * NR];
+                // register-tiled MR×NR accumulator block
+                let mut acc = [[0f32; NR]; MR_F32];
+                for p in 0..kc {
+                    let brow = &panel[p * NR..p * NR + NR];
+                    for r in 0..mr {
+                        let av = a[(i + r) * k + pc + p];
+                        let accr = &mut acc[r];
+                        for j in 0..NR {
+                            accr[j] += av * brow[j];
+                        }
+                    }
+                }
+                for r in 0..mr {
+                    let off = (i + r - r0) * n + j0;
+                    let crow = &mut c[off..off + nr];
+                    for (cv, &av) in crow.iter_mut().zip(&acc[r][..nr]) {
+                        *cv += av;
+                    }
+                }
+            }
+            pc += kc;
+        }
+        i += mr;
+    }
+}
+
+/// int8×int8→i32 GEMM rows [r0, r1) from A and a packed B. `c` holds
+/// exactly those rows and is fully overwritten (no zeroing needed).
+/// `_apack` is unused — this kernel reads A in place.
+pub(crate) fn gemm_i8_rows(
+    a: &[i8],
+    b: &PackedI8,
+    c: &mut [i32],
+    r0: usize,
+    r1: usize,
+    _apack: &mut Vec<i8>,
+) {
+    let (k, n, ks) = (b.k, b.n, b.kstride);
+    let packed = &b.panels[..];
+    let npanels = n.div_ceil(NR);
+    let mut i = r0;
+    while i < r1 {
+        let mr = MR_I8.min(r1 - i);
+        for jp in 0..npanels {
+            let j0 = jp * NR;
+            let nr = NR.min(n - j0);
+            // panel rows k..kstride are zero padding; this kernel never
+            // reads them, the pair-based SIMD kernels do (×0, exact)
+            let panel = &packed[jp * ks * NR..jp * ks * NR + k * NR];
+            // register-tiled MR×NR i32 accumulator block over the full k
+            let mut acc = [[0i32; NR]; MR_I8];
+            for p in 0..k {
+                let brow = &panel[p * NR..p * NR + NR];
+                for r in 0..mr {
+                    let av = a[(i + r) * k + p] as i32;
+                    let accr = &mut acc[r];
+                    for j in 0..NR {
+                        accr[j] += av * brow[j] as i32;
+                    }
+                }
+            }
+            for r in 0..mr {
+                let off = (i + r - r0) * n + j0;
+                c[off..off + nr].copy_from_slice(&acc[r][..nr]);
+            }
+        }
+        i += mr;
+    }
+}

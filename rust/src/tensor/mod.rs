@@ -4,8 +4,30 @@
 //! through PJRT (L1/L2 artifacts) or the [`crate::nn`] substrate; this
 //! module provides shapes, storage, reductions and the GEMM that `nn`
 //! builds its conv on.
+//!
+//! The GEMM itself is a small module family (ARCHITECTURE.md §Compute
+//! kernels):
+//!
+//! * [`pack`](self) — shared packed-panel formats (NR-wide B panels,
+//!   per-row-panel A packs, [`PackedI8`]);
+//! * `kernel::{scalar, avx2, neon}` — MR×NR microkernels per instruction
+//!   set, scalar being the portable fallback and correctness reference;
+//! * `dispatch` — picks the best kernel once per process
+//!   ([`active_kernel`], forced portable via `ADAQ_FORCE_SCALAR=1`);
+//! * this file — the public API: drivers that pack, split rows across
+//!   `std::thread::scope` threads, and call the dispatched kernel.
 
 use crate::{Error, Result};
+
+mod dispatch;
+mod kernel;
+mod pack;
+
+pub use dispatch::{active_kernel, kernel_names};
+pub use pack::{pack_i8, PackedI8};
+
+use dispatch::GemmKernel;
+use pack::{pack_b, packed_b_len};
 
 /// Dense row-major f32 tensor.
 #[derive(Clone, Debug, PartialEq)]
@@ -236,26 +258,22 @@ impl IntTensor {
 // GEMM — the compute core under `nn::conv2d` (im2col) and `nn::dense`.
 //
 // [`matmul`] is a cache-blocked, register-tiled implementation: B is packed
-// into NR-wide column panels once, the inner kernel keeps an MR×NR
+// into NR-wide column panels once, the runtime-dispatched microkernel
+// (scalar / AVX2+FMA / NEON — see [`active_kernel`]) keeps an MR×NR
 // accumulator block in registers, and row blocks are distributed across
 // `std::thread::scope` threads. Per output element the k-summation order is
 // fixed (ascending p within KC blocks, blocks in ascending order) and does
-// not depend on the thread count, so threaded and single-threaded runs
-// agree **bitwise** — the cross-backend tests rely on that.
+// not depend on the thread count, batch split or row position, so threaded
+// and single-threaded runs agree **bitwise** within a kernel — the
+// cross-backend and serve determinism tests rely on that. Numbers differ
+// *between* kernels (FMA contraction); the int8 GEMM below is bit-exact
+// across all kernels.
 //
 // [`matmul_sparse_lhs`] keeps the seed's `if av == 0.0 { continue; }`
 // skip for genuinely sparse left operands (post-ReLU activations); the
 // branch was removed from the dense kernel because on dense weights it
 // defeats branch prediction and blocks vectorization of the inner loop.
 // ---------------------------------------------------------------------------
-
-/// Microkernel row tile.
-const MR: usize = 4;
-/// Microkernel column tile (one packed B panel).
-const NR: usize = 8;
-/// k-dimension block: one A row slab of KC f32 stays in L1 while a packed
-/// B panel streams through.
-const KC: usize = 256;
 
 use std::cell::Cell;
 
@@ -275,6 +293,11 @@ thread_local! {
     /// steady-state hot path (same weight shapes every batch/probe) does
     /// not allocate per multiply.
     static PACK_BUF: Cell<Vec<f32>> = Cell::new(Vec::new());
+    /// Per-thread A-panel buffer for the f32 SIMD kernels (one MR×k
+    /// panel), same recycling story as `PACK_BUF`.
+    static APACK_BUF: Cell<Vec<f32>> = Cell::new(Vec::new());
+    /// Per-thread A-panel buffer for the int8 SIMD kernels.
+    static APACK_I8_BUF: Cell<Vec<i8>> = Cell::new(Vec::new());
 }
 
 /// Force the GEMM thread count on the *calling thread* (0 restores auto).
@@ -301,89 +324,85 @@ pub fn gemm_thread_cap() -> usize {
     GEMM_THREAD_CAP.with(|c| c.get())
 }
 
+/// Process-wide ceiling on auto-picked GEMM threads from
+/// `ADAQ_GEMM_MAX_THREADS` (read once; unset, 0 or unparsable =
+/// uncapped). Replaces the old hardcoded `.min(16)`: big machines use
+/// every core by default, and deployments that want the old behavior set
+/// the variable. The per-thread [`set_gemm_thread_cap`] composes on top.
+fn gemm_max_threads() -> usize {
+    static CAP: std::sync::OnceLock<usize> = std::sync::OnceLock::new();
+    *CAP.get_or_init(|| {
+        std::env::var("ADAQ_GEMM_MAX_THREADS")
+            .ok()
+            .and_then(|v| v.parse::<usize>().ok())
+            .filter(|&v| v > 0)
+            .unwrap_or(usize::MAX)
+    })
+}
+
 /// Threads to use for an m×k·k×n product: the thread-local override if
-/// set, else all cores (bounded by the thread-local cap) for products
-/// big enough to amortize the spawns.
+/// set, else all cores (bounded by `ADAQ_GEMM_MAX_THREADS` and the
+/// thread-local cap) for products big enough to amortize the spawns.
 fn gemm_auto_threads(m: usize, n: usize, k: usize) -> usize {
     let forced = GEMM_THREADS.with(|c| c.get());
     if forced != 0 {
         return forced;
     }
     let flops = m.saturating_mul(n).saturating_mul(k);
-    if flops < (1 << 22) || m < 2 * MR {
+    if flops < (1 << 22) || m < 2 * kernel::scalar::MR_F32 {
         return 1;
     }
-    let auto = std::thread::available_parallelism().map_or(1, |v| v.get()).min(16);
+    let auto = std::thread::available_parallelism()
+        .map_or(1, |v| v.get())
+        .min(gemm_max_threads());
     match GEMM_THREAD_CAP.with(|c| c.get()) {
         0 => auto,
         cap => auto.min(cap),
     }
 }
 
-/// Pack B (k×n row-major) into NR-wide column panels, zero-padded on the
-/// right edge: `packed[jp][p][0..NR] = b[p][jp*NR .. jp*NR+NR]`.
-/// The buffer is caller-provided (resized and re-zeroed here) so the hot
-/// path can recycle it across calls.
-fn pack_b(b: &[f32], k: usize, n: usize, packed: &mut Vec<f32>) {
-    let npanels = n.div_ceil(NR);
-    packed.clear();
-    packed.resize(npanels * k * NR, 0.0);
-    for jp in 0..npanels {
-        let j0 = jp * NR;
-        let w = NR.min(n - j0);
-        let base = jp * k * NR;
-        for p in 0..k {
-            let src = p * n + j0;
-            packed[base + p * NR..base + p * NR + w].copy_from_slice(&b[src..src + w]);
-        }
-    }
-}
-
-/// Compute C rows [r0, r1) from A and packed B. `c` holds exactly those
-/// rows (row r0 of the full matrix is row 0 of `c`) and must be zeroed.
-fn gemm_rows(
+/// Shared f32 driver: pack B, then run the kernel inline or across
+/// MR-aligned row chunks. The split never changes the per-element
+/// accumulation order, only who computes which rows.
+fn matmul_into_kern(
     a: &[f32],
-    packed: &[f32],
-    c: &mut [f32],
-    r0: usize,
-    r1: usize,
+    b: &[f32],
+    m: usize,
     k: usize,
     n: usize,
+    out: &mut [f32],
+    threads: usize,
+    kern: &'static GemmKernel,
+    packed: &mut Vec<f32>,
+    apack: &mut Vec<f32>,
 ) {
-    let npanels = n.div_ceil(NR);
-    let mut i = r0;
-    while i < r1 {
-        let mr = MR.min(r1 - i);
-        let mut pc = 0;
-        while pc < k {
-            let kc = KC.min(k - pc);
-            for jp in 0..npanels {
-                let j0 = jp * NR;
-                let nr = NR.min(n - j0);
-                let panel = &packed[jp * k * NR + pc * NR..jp * k * NR + (pc + kc) * NR];
-                // register-tiled MR×NR accumulator block
-                let mut acc = [[0f32; NR]; MR];
-                for p in 0..kc {
-                    let brow = &panel[p * NR..p * NR + NR];
-                    for r in 0..mr {
-                        let av = a[(i + r) * k + pc + p];
-                        let accr = &mut acc[r];
-                        for j in 0..NR {
-                            accr[j] += av * brow[j];
-                        }
-                    }
-                }
-                for r in 0..mr {
-                    let off = (i + r - r0) * n + j0;
-                    let crow = &mut c[off..off + nr];
-                    for (cv, &av) in crow.iter_mut().zip(&acc[r][..nr]) {
-                        *cv += av;
-                    }
-                }
+    assert_eq!(a.len(), m * k, "lhs size");
+    assert_eq!(b.len(), k * n, "rhs size");
+    assert_eq!(out.len(), m * n, "out size");
+    if m == 0 || n == 0 || k == 0 {
+        return;
+    }
+    let threads = if threads == 0 { gemm_auto_threads(m, n, k) } else { threads };
+    pack_b(b, k, n, packed);
+    let mr = kern.mr_f32;
+    if threads <= 1 || m < 2 * mr {
+        (kern.f32_rows)(a, packed, out, 0, m, k, n, apack);
+    } else {
+        let rows_per = m.div_ceil(threads).div_ceil(mr) * mr;
+        let packed: &[f32] = packed;
+        std::thread::scope(|s| {
+            for (ci, chunk) in out.chunks_mut(rows_per * n).enumerate() {
+                let r0 = ci * rows_per;
+                let r1 = (r0 + rows_per).min(m);
+                s.spawn(move || {
+                    // fresh per-spawn A-pack buffer: scoped threads are
+                    // short-lived, one MR×k grow per spawn is noise next
+                    // to the row chunk it packs
+                    let mut apack = Vec::new();
+                    (kern.f32_rows)(a, packed, chunk, r0, r1, k, n, &mut apack);
+                });
             }
-            pc += kc;
-        }
-        i += mr;
+        });
     }
 }
 
@@ -403,33 +422,58 @@ pub fn matmul_into_threaded(
     out: &mut [f32],
     threads: usize,
 ) {
-    assert_eq!(a.len(), m * k, "lhs size");
-    assert_eq!(b.len(), k * n, "rhs size");
-    assert_eq!(out.len(), m * n, "out size");
-    if m == 0 || n == 0 || k == 0 {
-        return;
-    }
-    let threads = if threads == 0 { gemm_auto_threads(m, n, k) } else { threads };
-    // take the per-thread pack buffer out, pack into it, put it back —
-    // steady-state GEMMs (same shapes every batch) allocate nothing
+    // take the per-thread pack buffers out, pack into them, put them
+    // back — steady-state GEMMs (same shapes every batch) allocate nothing
     let mut packed = PACK_BUF.with(|c| c.take());
-    pack_b(b, k, n, &mut packed);
-    if threads <= 1 || m < 2 * MR {
-        gemm_rows(a, &packed, out, 0, m, k, n);
-    } else {
-        // contiguous MR-aligned row chunks; the split never changes the
-        // per-element accumulation order, only who computes which rows.
-        let rows_per = m.div_ceil(threads).div_ceil(MR) * MR;
-        std::thread::scope(|s| {
-            for (ci, chunk) in out.chunks_mut(rows_per * n).enumerate() {
-                let r0 = ci * rows_per;
-                let r1 = (r0 + rows_per).min(m);
-                let packed = &packed;
-                s.spawn(move || gemm_rows(a, packed, chunk, r0, r1, k, n));
-            }
-        });
-    }
+    let mut apack = APACK_BUF.with(|c| c.take());
+    matmul_into_kern(a, b, m, k, n, out, threads, dispatch::active(), &mut packed, &mut apack);
     PACK_BUF.with(|c| c.set(packed));
+    APACK_BUF.with(|c| c.set(apack));
+}
+
+/// [`matmul_into`] drawing its pack buffers from a [`crate::util::Scratch`]
+/// arena instead of the thread-locals — the `nn` fused ops route their
+/// per-evaluation scratch through this so the A/B panel buffers live in
+/// the same recycled pool as the im2col patches and activations.
+pub fn matmul_into_scratch(
+    a: &[f32],
+    b: &[f32],
+    m: usize,
+    k: usize,
+    n: usize,
+    out: &mut [f32],
+    scratch: &mut crate::util::Scratch,
+) {
+    let kern = dispatch::active();
+    // both buffers are fully written before use (pack_b zeroes only edge
+    // padding; pack_a_panel writes every slot), so stale contents are fine
+    let mut packed = scratch.take_any(packed_b_len(k, n));
+    let mut apack = scratch.take_any(kern.mr_f32 * k);
+    matmul_into_kern(a, b, m, k, n, out, 0, kern, &mut packed, &mut apack);
+    scratch.put(packed);
+    scratch.put(apack);
+}
+
+/// [`matmul_into`] pinned to a named kernel from [`kernel_names`] — the
+/// per-kernel test/bench surface. Unlike a process-global override this
+/// cannot race across in-process test threads. Errors on a kernel this
+/// host cannot run.
+pub fn matmul_into_with_kernel(
+    kernel: &str,
+    a: &[f32],
+    b: &[f32],
+    m: usize,
+    k: usize,
+    n: usize,
+    out: &mut [f32],
+    threads: usize,
+) -> Result<()> {
+    let kern = dispatch::by_name(kernel)
+        .ok_or_else(|| Error::Other(format!("unknown or unavailable GEMM kernel {kernel:?}")))?;
+    let mut packed = Vec::new();
+    let mut apack = Vec::new();
+    matmul_into_kern(a, b, m, k, n, out, threads, kern, &mut packed, &mut apack);
+    Ok(())
 }
 
 /// C = A(m×k) · B(k×n): cache-blocked, register-tiled, multithreaded.
@@ -490,99 +534,45 @@ pub fn matmul_sparse_lhs(a: &Tensor, b: &Tensor) -> Result<Tensor> {
 // int8 GEMM — the integer serving kernel under `nn::dense_int8_fused` /
 // `nn::conv2d_int8_fused`.
 //
-// Same structure as the f32 kernel above: B is packed once into NR-wide
+// Same structure as the f32 GEMM above: B is packed once into NR-wide
 // column panels ([`pack_i8`] → [`PackedI8`], cached per quantized layer so
 // the serve path never re-packs weights), and an MR×NR block of **i32**
 // accumulators is kept in registers. Unlike the f32 kernel there is no KC
 // split: the accumulator block holds the full k-sum for one panel and is
 // *stored* (not accumulated) on write-back, so the output buffer does not
 // need to be zeroed. Integer accumulation is exact, so results are
-// bitwise identical for every thread count and association order.
+// bitwise identical for every thread count, association order — and every
+// kernel: the SIMD paths regroup the sum in pairs, which integer
+// associativity makes bit-exact against the scalar kernel.
 //
 // Overflow headroom: |Σ a·b| ≤ 128·128·k (worst case (−128)·(−128)),
-// which fits i32 for k ≤ i32::MAX/16384 = 131 071 — far above any
-// reduction dimension in this repo (debug-asserted in
-// [`gemm_i8_packed`]).
+// which fits i32 for k ≤ [`I8_GEMM_MAX_K`] — far above any reduction
+// dimension in this repo (checked at runtime in [`gemm_i8_packed`]).
 // ---------------------------------------------------------------------------
 
-/// B matrix packed into NR-wide int8 column panels, ready for
-/// [`gemm_i8_packed`]. Quantized layers build this once per bit-vector
-/// and reuse it across serve requests.
-#[derive(Clone, Debug, PartialEq)]
-pub struct PackedI8 {
-    panels: Vec<i8>,
-    k: usize,
-    n: usize,
-}
+/// Largest reduction dimension the int8 GEMM accepts: |Σ a·b| ≤ 128·128·k
+/// must fit in the i32 accumulators, so k ≤ i32::MAX / 16384 = 131 071.
+pub const I8_GEMM_MAX_K: usize = 131_071;
 
-impl PackedI8 {
-    pub fn k(&self) -> usize {
-        self.k
-    }
-
-    pub fn n(&self) -> usize {
-        self.n
-    }
-}
-
-/// Pack an int8 B (k×n row-major) into NR-wide column panels, zero-padded
-/// on the right edge — the i8 twin of the f32 `pack_b`.
-pub fn pack_i8(b: &[i8], k: usize, n: usize) -> PackedI8 {
-    assert_eq!(b.len(), k * n, "rhs size");
-    let npanels = n.div_ceil(NR);
-    let mut panels = vec![0i8; npanels * k * NR];
-    for jp in 0..npanels {
-        let j0 = jp * NR;
-        let w = NR.min(n - j0);
-        let base = jp * k * NR;
-        for p in 0..k {
-            let src = p * n + j0;
-            panels[base + p * NR..base + p * NR + w].copy_from_slice(&b[src..src + w]);
-        }
-    }
-    PackedI8 { panels, k, n }
-}
-
-/// int8×int8→i32 GEMM rows [r0, r1) from A and a packed B. `c` holds
-/// exactly those rows and is fully overwritten (no zeroing needed).
-fn gemm_i8_rows(a: &[i8], packed: &[i8], c: &mut [i32], r0: usize, r1: usize, k: usize, n: usize) {
-    let npanels = n.div_ceil(NR);
-    let mut i = r0;
-    while i < r1 {
-        let mr = MR.min(r1 - i);
-        for jp in 0..npanels {
-            let j0 = jp * NR;
-            let nr = NR.min(n - j0);
-            let panel = &packed[jp * k * NR..(jp + 1) * k * NR];
-            // register-tiled MR×NR i32 accumulator block over the full k
-            let mut acc = [[0i32; NR]; MR];
-            for p in 0..k {
-                let brow = &panel[p * NR..p * NR + NR];
-                for r in 0..mr {
-                    let av = a[(i + r) * k + p] as i32;
-                    let accr = &mut acc[r];
-                    for j in 0..NR {
-                        accr[j] += av * brow[j] as i32;
-                    }
-                }
-            }
-            for r in 0..mr {
-                let off = (i + r - r0) * n + j0;
-                c[off..off + nr].copy_from_slice(&acc[r][..nr]);
-            }
-        }
-        i += mr;
-    }
-}
-
-/// `out[m×n] = a[m×k] · b_packed[k×n]` in int8×int8→i32. `out` is fully
-/// overwritten (stale contents are fine). `threads == 0` picks
-/// automatically, honoring [`set_gemm_threads`] like the f32 kernel.
-pub fn gemm_i8_packed(a: &[i8], b: &PackedI8, m: usize, out: &mut [i32], threads: usize) {
-    let (k, n) = (b.k, b.n);
+/// Shared int8 driver: run the kernel inline or across MR-aligned row
+/// chunks. Exact integer math — identical output for any split.
+fn gemm_i8_kern(
+    a: &[i8],
+    b: &PackedI8,
+    m: usize,
+    out: &mut [i32],
+    threads: usize,
+    kern: &'static GemmKernel,
+    apack: &mut Vec<i8>,
+) {
+    let (k, n) = (b.k(), b.n());
     assert_eq!(a.len(), m * k, "lhs size");
     assert_eq!(out.len(), m * n, "out size");
-    debug_assert!(k <= 131_071, "int8 GEMM k={k} risks i32 overflow");
+    assert!(
+        k <= I8_GEMM_MAX_K,
+        "int8 GEMM k={k} exceeds the i32 overflow bound k <= {I8_GEMM_MAX_K} \
+         (|sum a*b| <= 128*128*k must fit in i32)"
+    );
     if m == 0 || n == 0 {
         return;
     }
@@ -591,19 +581,67 @@ pub fn gemm_i8_packed(a: &[i8], b: &PackedI8, m: usize, out: &mut [i32], threads
         return;
     }
     let threads = if threads == 0 { gemm_auto_threads(m, n, k) } else { threads };
-    if threads <= 1 || m < 2 * MR {
-        gemm_i8_rows(a, &b.panels, out, 0, m, k, n);
+    let mr = kern.mr_i8;
+    if threads <= 1 || m < 2 * mr {
+        (kern.i8_rows)(a, b, out, 0, m, apack);
         return;
     }
-    let rows_per = m.div_ceil(threads).div_ceil(MR) * MR;
+    let rows_per = m.div_ceil(threads).div_ceil(mr) * mr;
     std::thread::scope(|s| {
         for (ci, chunk) in out.chunks_mut(rows_per * n).enumerate() {
             let r0 = ci * rows_per;
             let r1 = (r0 + rows_per).min(m);
-            let panels = &b.panels;
-            s.spawn(move || gemm_i8_rows(a, panels, chunk, r0, r1, k, n));
+            s.spawn(move || {
+                let mut apack = Vec::new();
+                (kern.i8_rows)(a, b, chunk, r0, r1, &mut apack);
+            });
         }
     });
+}
+
+/// `out[m×n] = a[m×k] · b_packed[k×n]` in int8×int8→i32. `out` is fully
+/// overwritten (stale contents are fine). `threads == 0` picks
+/// automatically, honoring [`set_gemm_threads`] like the f32 kernel.
+///
+/// Panics if `b.k()` exceeds [`I8_GEMM_MAX_K`] (i32 accumulator overflow
+/// would silently corrupt results — checked in release builds too).
+pub fn gemm_i8_packed(a: &[i8], b: &PackedI8, m: usize, out: &mut [i32], threads: usize) {
+    let mut apack = APACK_I8_BUF.with(|c| c.take());
+    gemm_i8_kern(a, b, m, out, threads, dispatch::active(), &mut apack);
+    APACK_I8_BUF.with(|c| c.set(apack));
+}
+
+/// [`gemm_i8_packed`] drawing the A-panel buffer from a
+/// [`crate::util::Scratch`] arena — the int8 serve path routes its
+/// per-request scratch through this.
+pub fn gemm_i8_packed_scratch(
+    a: &[i8],
+    b: &PackedI8,
+    m: usize,
+    out: &mut [i32],
+    scratch: &mut crate::util::Scratch,
+) {
+    let kern = dispatch::active();
+    let mut apack = scratch.take_i8(kern.mr_i8 * (b.k() + 1));
+    gemm_i8_kern(a, b, m, out, 0, kern, &mut apack);
+    scratch.put_i8(apack);
+}
+
+/// [`gemm_i8_packed`] pinned to a named kernel from [`kernel_names`] —
+/// the per-kernel test/bench surface (bit-exactness battery).
+pub fn gemm_i8_packed_with_kernel(
+    kernel: &str,
+    a: &[i8],
+    b: &PackedI8,
+    m: usize,
+    out: &mut [i32],
+    threads: usize,
+) -> Result<()> {
+    let kern = dispatch::by_name(kernel)
+        .ok_or_else(|| Error::Other(format!("unknown or unavailable GEMM kernel {kernel:?}")))?;
+    let mut apack = Vec::new();
+    gemm_i8_kern(a, b, m, out, threads, kern, &mut apack);
+    Ok(())
 }
 
 /// Convenience int8 GEMM that packs B per call — benches and tests; the
@@ -678,7 +716,7 @@ mod tests {
 
     #[test]
     fn blocked_matches_reference_on_ragged_shape() {
-        // 5×7 · 7×9 — nothing divides the 4×8 tile
+        // 5×7 · 7×9 — nothing divides the microkernel tiles
         let a = Tensor::from_vec(&[5, 7], (0..35).map(|v| (v as f32) * 0.37 - 6.0).collect())
             .unwrap();
         let b = Tensor::from_vec(&[7, 9], (0..63).map(|v| (v as f32) * 0.11 - 3.0).collect())
@@ -698,6 +736,65 @@ mod tests {
         let four = matmul_threaded(&a, &b, 4).unwrap();
         for (x, y) in one.data().iter().zip(four.data()) {
             assert_eq!(x.to_bits(), y.to_bits());
+        }
+    }
+
+    #[test]
+    fn dispatch_reports_a_known_kernel() {
+        let names = kernel_names();
+        assert_eq!(names[0], "scalar", "scalar is always available and listed first");
+        let active = active_kernel();
+        assert!(names.contains(&active), "active kernel {active} not in {names:?}");
+        // the with_kernel surface accepts every listed kernel and rejects
+        // unknown names
+        let a = Tensor::from_vec(&[3, 5], (0..15).map(|v| v as f32).collect()).unwrap();
+        let b = Tensor::from_vec(&[5, 4], (0..20).map(|v| v as f32).collect()).unwrap();
+        let reference = matmul_reference(&a, &b).unwrap();
+        for name in &names {
+            let mut out = vec![0f32; 12];
+            matmul_into_with_kernel(name, a.data(), b.data(), 3, 5, 4, &mut out, 1).unwrap();
+            for (x, y) in out.iter().zip(reference.data()) {
+                assert!((x - y).abs() <= 1e-4 * (1.0 + y.abs()), "{name}: {x} vs {y}");
+            }
+        }
+        let mut out = vec![0f32; 12];
+        let bad = matmul_into_with_kernel("avx512", a.data(), b.data(), 3, 5, 4, &mut out, 1);
+        assert!(bad.is_err());
+    }
+
+    #[test]
+    fn pack_buffer_reuse_keeps_edge_panels_clean() {
+        // pack_b no longer re-zeroes the whole buffer: a wide product
+        // followed by a narrower ragged one on the same thread reuses the
+        // pack buffer — stale panel data must not leak into the edge pad
+        let mut rng_vals = (0..).map(|v| ((v * 37) % 19) as f32 - 9.0);
+        let wide_a: Vec<f32> = (&mut rng_vals).take(4 * 40).collect();
+        let wide_b: Vec<f32> = (&mut rng_vals).take(40 * 40).collect();
+        let mut wide_out = vec![0f32; 4 * 40];
+        matmul_into(&wide_a, &wide_b, 4, 40, 40, &mut wide_out);
+        let a = Tensor::from_vec(&[5, 7], (&mut rng_vals).take(35).collect()).unwrap();
+        let b = Tensor::from_vec(&[7, 9], (&mut rng_vals).take(63).collect()).unwrap();
+        let narrow = matmul(&a, &b).unwrap();
+        let reference = matmul_reference(&a, &b).unwrap();
+        for (x, y) in narrow.data().iter().zip(reference.data()) {
+            assert!((x - y).abs() <= 1e-4 * (1.0 + y.abs()), "{x} vs {y}");
+        }
+    }
+
+    #[test]
+    fn matmul_scratch_matches_thread_local_path() {
+        let mut scratch = crate::util::Scratch::new();
+        let a: Vec<f32> = (0..9 * 11).map(|v| (v as f32).sin()).collect();
+        let b: Vec<f32> = (0..11 * 6).map(|v| (v as f32).cos()).collect();
+        let mut plain = vec![0f32; 9 * 6];
+        matmul_into(&a, &b, 9, 11, 6, &mut plain);
+        // twice through the same scratch: second call reuses pooled bufs
+        for _ in 0..2 {
+            let mut out = vec![0f32; 9 * 6];
+            matmul_into_scratch(&a, &b, 9, 11, 6, &mut out, &mut scratch);
+            for (x, y) in out.iter().zip(&plain) {
+                assert_eq!(x.to_bits(), y.to_bits());
+            }
         }
     }
 
@@ -740,7 +837,8 @@ mod tests {
 
     #[test]
     fn int8_blocked_matches_reference_on_ragged_shapes() {
-        // nothing divides the 4×8 tile on any of these
+        // nothing divides the microkernel tile on any of these; odd k
+        // exercises the SIMD kernels' zero-padded k-pair path
         for &(m, k, n) in &[(5usize, 7usize, 9usize), (1, 13, 4), (17, 33, 23), (8, 8, 8)] {
             let a = randi8(m * k, (m * 1000 + k) as u64);
             let b = randi8(k * n, (k * 1000 + n) as u64);
@@ -766,6 +864,22 @@ mod tests {
     }
 
     #[test]
+    fn int8_scratch_matches_thread_local_path() {
+        let (m, k, n) = (9usize, 15usize, 10usize);
+        let a = randi8(m * k, 7);
+        let b = randi8(k * n, 8);
+        let packed = pack_i8(&b, k, n);
+        let mut plain = vec![0i32; m * n];
+        gemm_i8_packed(&a, &packed, m, &mut plain, 0);
+        let mut scratch = crate::util::Scratch::new();
+        for _ in 0..2 {
+            let mut out = vec![999i32; m * n];
+            gemm_i8_packed_scratch(&a, &packed, m, &mut out, &mut scratch);
+            assert_eq!(out, plain);
+        }
+    }
+
+    #[test]
     fn int8_overwrites_stale_output() {
         // gemm_i8_packed stores (doesn't accumulate): stale contents must
         // not leak through
@@ -788,6 +902,16 @@ mod tests {
     }
 
     #[test]
+    #[should_panic(expected = "overflow bound")]
+    fn int8_rejects_overflow_prone_k_in_release_too() {
+        let k = I8_GEMM_MAX_K + 1;
+        let a = vec![0i8; k];
+        let b = pack_i8(&vec![0i8; k], k, 1);
+        let mut out = vec![0i32; 1];
+        gemm_i8_packed(&a, &b, 1, &mut out, 1);
+    }
+
+    #[test]
     fn gemm_thread_cap_bounds_auto_only() {
         // the cap bounds auto-threading but never forces threading onto
         // tiny products, and a hard override wins over the cap
@@ -802,6 +926,10 @@ mod tests {
         set_gemm_threads(0);
         set_gemm_thread_cap(0);
         assert_eq!(gemm_thread_cap(), 0);
+        // uncapped auto is bounded by the machine (and the env ceiling)
+        let auto = gemm_auto_threads(1024, 1024, 1024);
+        let cores = std::thread::available_parallelism().map_or(1, |v| v.get());
+        assert!(auto >= 1 && auto <= cores);
         // capped runs stay bitwise identical — only scheduling changes
         let a = Tensor::from_vec(&[33, 21], (0..693).map(|v| (v as f32).sin()).collect()).unwrap();
         let b = Tensor::from_vec(&[21, 17], (0..357).map(|v| (v as f32).cos()).collect()).unwrap();

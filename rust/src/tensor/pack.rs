@@ -1,0 +1,171 @@
+//! Panel packing for the GEMM microkernels.
+//!
+//! Both GEMMs share one B layout: NR-wide column panels, k-major inside a
+//! panel (`packed[jp][p][0..NR] = b[p][jp*NR .. jp*NR+NR]`), zero-padded
+//! on the right edge. Every kernel (scalar, AVX2, NEON) consumes this
+//! format, so a [`PackedI8`] built once per quantized layer serves
+//! whatever kernel the dispatch picks at runtime.
+//!
+//! A is packed too, but per row-panel inside the SIMD kernels rather than
+//! up front: one MR×k panel (`apack[p*mr + r]`) is a few KiB, stays L1-hot
+//! while it is consumed, and lets the microkernel broadcast all MR values
+//! of a k-step from one cache line instead of MR strided `a[(i+r)*k + p]`
+//! loads. Edge panels are zero-row padded so kernels always compute a full
+//! MR tile and only write back the real rows.
+
+/// Microkernel column tile (one packed B panel).
+pub(crate) const NR: usize = 8;
+/// k-dimension block for the f32 kernels: one A panel slab of KC stays in
+/// L1 while a packed B panel streams through.
+pub(crate) const KC: usize = 256;
+
+/// Length of the packed-B buffer for a k×n matrix.
+pub(crate) fn packed_b_len(k: usize, n: usize) -> usize {
+    n.div_ceil(NR) * k * NR
+}
+
+/// Pack B (k×n row-major) into NR-wide column panels. The buffer is
+/// caller-provided and may hold stale data: interior panels are copy-only,
+/// and only the right-edge panel's `NR - w` padding lanes are zeroed —
+/// no full-buffer re-zero per call.
+pub(crate) fn pack_b(b: &[f32], k: usize, n: usize, packed: &mut Vec<f32>) {
+    let npanels = n.div_ceil(NR);
+    let need = npanels * k * NR;
+    if packed.len() < need {
+        packed.resize(need, 0.0);
+    } else {
+        packed.truncate(need);
+    }
+    for jp in 0..npanels {
+        let j0 = jp * NR;
+        let w = NR.min(n - j0);
+        let base = jp * k * NR;
+        for p in 0..k {
+            let src = p * n + j0;
+            let dst = base + p * NR;
+            packed[dst..dst + w].copy_from_slice(&b[src..src + w]);
+            // stale contents from a recycled buffer must not leak into
+            // the padding lanes of the edge panel
+            packed[dst + w..dst + NR].fill(0.0);
+        }
+    }
+}
+
+/// Pack `rows` rows of A (m×k row-major) starting at row `i0` into one
+/// k-major register panel: `apack[p*mr + r] = a[(i0+r)*k + p]`, rows
+/// `rows..mr` zero-filled. Every slot is written, so the buffer may hold
+/// stale data.
+pub(crate) fn pack_a_panel(
+    a: &[f32],
+    i0: usize,
+    rows: usize,
+    k: usize,
+    mr: usize,
+    apack: &mut Vec<f32>,
+) {
+    debug_assert!(rows >= 1 && rows <= mr);
+    let need = k * mr;
+    if apack.len() < need {
+        apack.resize(need, 0.0);
+    } else {
+        apack.truncate(need);
+    }
+    for r in 0..rows {
+        let row = &a[(i0 + r) * k..(i0 + r + 1) * k];
+        for (p, &v) in row.iter().enumerate() {
+            apack[p * mr + r] = v;
+        }
+    }
+    for r in rows..mr {
+        for p in 0..k {
+            apack[p * mr + r] = 0.0;
+        }
+    }
+}
+
+/// Pack `rows` rows of int8 A starting at `i0` into a pair-interleaved
+/// k-major panel: `apack[p2*mr*2 + r*2 + d] = a[(i0+r)*k + 2*p2 + d]`,
+/// zero-padded past k (odd k) and past `rows`. Pads to the same even-k
+/// boundary as [`PackedI8`], so the widening-multiply kernels consume
+/// whole (a, b) k-pairs with no tail case; the pad terms multiply by zero
+/// and keep the result bit-exact.
+pub(crate) fn pack_a_i8_panel(
+    a: &[i8],
+    i0: usize,
+    rows: usize,
+    k: usize,
+    mr: usize,
+    apack: &mut Vec<i8>,
+) {
+    debug_assert!(rows >= 1 && rows <= mr);
+    let kp = k.div_ceil(2);
+    let need = kp * mr * 2;
+    if apack.len() < need {
+        apack.resize(need, 0);
+    } else {
+        apack.truncate(need);
+    }
+    for r in 0..rows {
+        let row = &a[(i0 + r) * k..(i0 + r + 1) * k];
+        for p2 in 0..k / 2 {
+            apack[p2 * mr * 2 + r * 2] = row[2 * p2];
+            apack[p2 * mr * 2 + r * 2 + 1] = row[2 * p2 + 1];
+        }
+        if k % 2 == 1 {
+            apack[(kp - 1) * mr * 2 + r * 2] = row[k - 1];
+            apack[(kp - 1) * mr * 2 + r * 2 + 1] = 0;
+        }
+    }
+    for r in rows..mr {
+        for p2 in 0..kp {
+            apack[p2 * mr * 2 + r * 2] = 0;
+            apack[p2 * mr * 2 + r * 2 + 1] = 0;
+        }
+    }
+}
+
+/// B matrix packed into NR-wide int8 column panels, ready for
+/// [`crate::tensor::gemm_i8_packed`]. Quantized layers build this once per
+/// bit-vector and reuse it across serve requests — the layout is
+/// kernel-independent, so a cached pack works under whatever kernel the
+/// runtime dispatch selects.
+#[derive(Clone, Debug, PartialEq)]
+pub struct PackedI8 {
+    pub(crate) panels: Vec<i8>,
+    pub(crate) k: usize,
+    /// Panel row stride: k rounded up to even, rows `k..kstride` zero.
+    /// Lets the SIMD kernels read whole 2×NR k-pair blocks without a
+    /// bounds-straddling tail load on odd k.
+    pub(crate) kstride: usize,
+    pub(crate) n: usize,
+}
+
+impl PackedI8 {
+    pub fn k(&self) -> usize {
+        self.k
+    }
+
+    pub fn n(&self) -> usize {
+        self.n
+    }
+}
+
+/// Pack an int8 B (k×n row-major) into NR-wide column panels, zero-padded
+/// on the right edge and to an even number of k rows — the i8 twin of the
+/// f32 `pack_b`.
+pub fn pack_i8(b: &[i8], k: usize, n: usize) -> PackedI8 {
+    assert_eq!(b.len(), k * n, "rhs size");
+    let npanels = n.div_ceil(NR);
+    let kstride = k + (k & 1);
+    let mut panels = vec![0i8; npanels * kstride * NR];
+    for jp in 0..npanels {
+        let j0 = jp * NR;
+        let w = NR.min(n - j0);
+        let base = jp * kstride * NR;
+        for p in 0..k {
+            let src = p * n + j0;
+            panels[base + p * NR..base + p * NR + w].copy_from_slice(&b[src..src + w]);
+        }
+    }
+    PackedI8 { panels, k, kstride, n }
+}

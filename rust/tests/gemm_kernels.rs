@@ -1,0 +1,291 @@
+//! Per-kernel battery for the runtime-dispatched GEMM microkernels
+//! (in-repo mini-proptest style: PCG-driven cases, failing seed reported
+//! on assertion).
+//!
+//! Every kernel `kernel_names()` reports usable on this host is driven
+//! through the explicit `*_with_kernel` entry points — the process-wide
+//! dispatch is never mutated (a global override would race across cargo's
+//! in-process test threads):
+//!
+//! * **f32**: every kernel ≡ naive ikj reference within 1e-4 relative on
+//!   ragged shapes straddling every MR/NR/KC tile edge, and bitwise
+//!   invariant across thread counts *within* the kernel;
+//! * **int8**: every kernel **bit-exact** against the scalar kernel (and
+//!   the naive reference) on full-range inputs including the
+//!   (−128)·(−128) pair sums that saturate a `pmaddubsw`-style path, odd
+//!   k (the zero-padded k-pair tail), and every thread count;
+//! * pack-buffer recycling across shape changes leaks no stale data;
+//! * the k > `I8_GEMM_MAX_K` overflow guard fires in release builds.
+
+use adaq::rng::{fill_normal, Pcg32};
+use adaq::tensor::{
+    active_kernel, gemm_i8_packed_with_kernel, kernel_names, matmul_i8_reference,
+    matmul_into_with_kernel, matmul_reference, pack_i8, Tensor, I8_GEMM_MAX_K,
+};
+
+fn rand_mat(rng: &mut Pcg32, m: usize, n: usize) -> Tensor {
+    let mut data = vec![0f32; m * n];
+    fill_normal(rng, &mut data);
+    Tensor::from_vec(&[m, n], data).unwrap()
+}
+
+fn rand_i8(rng: &mut Pcg32, len: usize) -> Vec<i8> {
+    (0..len).map(|_| (rng.next_u32() >> 24) as u8 as i8).collect()
+}
+
+/// Shapes straddling the tile edges of every kernel: MR ∈ {4, 8},
+/// NR = 8, KC = 256, plus odd k for the int8 k-pair path.
+const EDGE_SHAPES: [(usize, usize, usize); 14] = [
+    (1, 1, 1),
+    (1, 13, 4),
+    (4, 8, 8),
+    (5, 7, 9),
+    (7, 16, 8),
+    (8, 8, 8),
+    (8, 255, 16),
+    (9, 256, 17),
+    (13, 257, 9),
+    (16, 32, 24),
+    (17, 33, 23),
+    (23, 31, 1),
+    (24, 2, 40),
+    (3, 511, 11),
+];
+
+#[test]
+fn active_kernel_is_listed_and_scalar_always_available() {
+    let names = kernel_names();
+    assert_eq!(names[0], "scalar");
+    assert!(names.contains(&active_kernel()));
+    // ADAQ_FORCE_SCALAR pins dispatch to the scalar kernel; when CI sets
+    // it, the active kernel must actually be scalar
+    if std::env::var("ADAQ_FORCE_SCALAR").map_or(false, |v| !v.is_empty() && v != "0") {
+        assert_eq!(active_kernel(), "scalar");
+    }
+}
+
+#[test]
+fn unknown_kernel_name_errors() {
+    let a = vec![0f32; 4];
+    let b = vec![0f32; 4];
+    let mut out = vec![0f32; 4];
+    assert!(matmul_into_with_kernel("sse9", &a, &b, 2, 2, 2, &mut out, 1).is_err());
+    let bp = pack_i8(&[0i8; 4], 2, 2);
+    let mut iout = vec![0i32; 4];
+    assert!(gemm_i8_packed_with_kernel("sse9", &[0i8; 4], &bp, 2, &mut iout, 1).is_err());
+}
+
+#[test]
+fn f32_every_kernel_matches_reference_on_edge_shapes() {
+    for kernel in kernel_names() {
+        for (ci, &(m, k, n)) in EDGE_SHAPES.iter().enumerate() {
+            let mut rng = Pcg32::new(4000 + ci as u64);
+            let a = rand_mat(&mut rng, m, k);
+            let b = rand_mat(&mut rng, k, n);
+            let reference = matmul_reference(&a, &b).unwrap();
+            let mut out = vec![0f32; m * n];
+            matmul_into_with_kernel(kernel, a.data(), b.data(), m, k, n, &mut out, 1).unwrap();
+            for (i, (x, y)) in out.iter().zip(reference.data()).enumerate() {
+                assert!(
+                    (x - y).abs() <= 1e-4 * (1.0 + y.abs()),
+                    "{kernel} {m}x{k}x{n} element {i}: {x} vs {y}"
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn prop_f32_every_kernel_matches_reference_random_shapes() {
+    for kernel in kernel_names() {
+        for seed in 0..40u64 {
+            let mut rng = Pcg32::new(0xF32 + seed);
+            let m = 1 + rng.below(48) as usize;
+            let k = 1 + rng.below(48) as usize;
+            let n = 1 + rng.below(48) as usize;
+            let a = rand_mat(&mut rng, m, k);
+            let b = rand_mat(&mut rng, k, n);
+            let reference = matmul_reference(&a, &b).unwrap();
+            let mut out = vec![0f32; m * n];
+            matmul_into_with_kernel(kernel, a.data(), b.data(), m, k, n, &mut out, 1).unwrap();
+            for (i, (x, y)) in out.iter().zip(reference.data()).enumerate() {
+                assert!(
+                    (x - y).abs() <= 1e-4 * (1.0 + y.abs()),
+                    "{kernel} seed {seed} ({m}x{k}x{n}) element {i}: {x} vs {y}"
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn prop_f32_every_kernel_thread_count_invariant_bitwise() {
+    // the fixed per-element k-order makes results bitwise identical for
+    // any thread count *within* a kernel — the serve determinism contract
+    for kernel in kernel_names() {
+        for seed in 0..8u64 {
+            let mut rng = Pcg32::new(0xB17 + seed);
+            let m = 5 + rng.below(90) as usize;
+            let k = 5 + rng.below(90) as usize;
+            let n = 5 + rng.below(90) as usize;
+            let a = rand_mat(&mut rng, m, k);
+            let b = rand_mat(&mut rng, k, n);
+            let mut single = vec![0f32; m * n];
+            matmul_into_with_kernel(kernel, a.data(), b.data(), m, k, n, &mut single, 1).unwrap();
+            for threads in [2usize, 3, 4, 8] {
+                let mut multi = vec![0f32; m * n];
+                matmul_into_with_kernel(kernel, a.data(), b.data(), m, k, n, &mut multi, threads)
+                    .unwrap();
+                for (i, (x, y)) in single.iter().zip(&multi).enumerate() {
+                    assert_eq!(
+                        x.to_bits(),
+                        y.to_bits(),
+                        "{kernel} seed {seed} threads {threads} element {i}: {x} vs {y}"
+                    );
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn f32_batch_split_invariant_bitwise_per_kernel() {
+    // row i of a batch-m product is bitwise identical to the same row
+    // computed in a smaller batch: the A-panel zero-padding keeps edge
+    // tiles on the same per-element operation sequence
+    let (m, k, n) = (11usize, 37usize, 19usize);
+    let mut rng = Pcg32::new(0xBA7C);
+    let a = rand_mat(&mut rng, m, k);
+    let b = rand_mat(&mut rng, k, n);
+    for kernel in kernel_names() {
+        let mut full = vec![0f32; m * n];
+        matmul_into_with_kernel(kernel, a.data(), b.data(), m, k, n, &mut full, 1).unwrap();
+        for i in 0..m {
+            let mut row = vec![0f32; n];
+            matmul_into_with_kernel(kernel, a.row(i), b.data(), 1, k, n, &mut row, 1).unwrap();
+            for (j, (x, y)) in row.iter().zip(&full[i * n..(i + 1) * n]).enumerate() {
+                assert_eq!(x.to_bits(), y.to_bits(), "{kernel} row {i} col {j}: {x} vs {y}");
+            }
+        }
+    }
+}
+
+#[test]
+fn int8_every_kernel_bit_exact_vs_scalar_and_reference() {
+    for kernel in kernel_names() {
+        for (ci, &(m, k, n)) in EDGE_SHAPES.iter().enumerate() {
+            let mut rng = Pcg32::new(8000 + ci as u64);
+            let a = rand_i8(&mut rng, m * k);
+            let b = rand_i8(&mut rng, k * n);
+            let mut reference = vec![0i32; m * n];
+            matmul_i8_reference(&a, &b, m, k, n, &mut reference);
+            let packed = pack_i8(&b, k, n);
+            let mut scalar = vec![0i32; m * n];
+            gemm_i8_packed_with_kernel("scalar", &a, &packed, m, &mut scalar, 1).unwrap();
+            assert_eq!(scalar, reference, "scalar vs reference {m}x{k}x{n}");
+            let mut out = vec![7i32; m * n]; // stale: kernels store, not +=
+            gemm_i8_packed_with_kernel(kernel, &a, &packed, m, &mut out, 1).unwrap();
+            assert_eq!(out, scalar, "{kernel} vs scalar {m}x{k}x{n}");
+        }
+    }
+}
+
+#[test]
+fn int8_extreme_pair_sums_bit_exact_per_kernel() {
+    // (−128)·(−128) + (−128)·(−128) = 32768 overflows an i16 pair sum —
+    // the exact trap a saturating pmaddubsw-style path falls into; the
+    // shipped kernels must widen before summing
+    let (m, n) = (5usize, 9usize);
+    for k in [2usize, 3, 64, 65] {
+        let a = vec![-128i8; m * k];
+        for bval in [-128i8, 127] {
+            let b = vec![bval; k * n];
+            let mut reference = vec![0i32; m * n];
+            matmul_i8_reference(&a, &b, m, k, n, &mut reference);
+            let packed = pack_i8(&b, k, n);
+            for kernel in kernel_names() {
+                let mut out = vec![0i32; m * n];
+                gemm_i8_packed_with_kernel(kernel, &a, &packed, m, &mut out, 1).unwrap();
+                assert_eq!(out, reference, "{kernel} k={k} b={bval}");
+            }
+        }
+    }
+}
+
+#[test]
+fn prop_int8_every_kernel_thread_count_invariant() {
+    for kernel in kernel_names() {
+        for seed in 0..8u64 {
+            let mut rng = Pcg32::new(0x18 + seed);
+            let m = 5 + rng.below(60) as usize;
+            let k = 5 + rng.below(60) as usize;
+            let n = 5 + rng.below(60) as usize;
+            let a = rand_i8(&mut rng, m * k);
+            let b = rand_i8(&mut rng, k * n);
+            let packed = pack_i8(&b, k, n);
+            let mut single = vec![0i32; m * n];
+            gemm_i8_packed_with_kernel(kernel, &a, &packed, m, &mut single, 1).unwrap();
+            for threads in [2usize, 3, 4, 8] {
+                let mut multi = vec![0i32; m * n];
+                gemm_i8_packed_with_kernel(kernel, &a, &packed, m, &mut multi, threads).unwrap();
+                assert_eq!(multi, single, "{kernel} seed {seed} threads {threads}");
+            }
+        }
+    }
+}
+
+#[test]
+fn dispatched_path_agrees_with_its_named_kernel() {
+    // the implicit entry points (matmul / gemm_i8_packed) must route to
+    // exactly the kernel active_kernel() reports
+    let (m, k, n) = (13usize, 29usize, 21usize);
+    let mut rng = Pcg32::new(0xD15);
+    let a = rand_mat(&mut rng, m, k);
+    let b = rand_mat(&mut rng, k, n);
+    let implicit = adaq::tensor::matmul_threaded(&a, &b, 1).unwrap();
+    let mut named = vec![0f32; m * n];
+    matmul_into_with_kernel(active_kernel(), a.data(), b.data(), m, k, n, &mut named, 1).unwrap();
+    for (x, y) in implicit.data().iter().zip(&named) {
+        assert_eq!(x.to_bits(), y.to_bits());
+    }
+    let ai = rand_i8(&mut rng, m * k);
+    let bi = rand_i8(&mut rng, k * n);
+    let packed = pack_i8(&bi, k, n);
+    let mut imp = vec![0i32; m * n];
+    adaq::tensor::gemm_i8_packed(&ai, &packed, m, &mut imp, 1);
+    let mut nam = vec![0i32; m * n];
+    gemm_i8_packed_with_kernel(active_kernel(), &ai, &packed, m, &mut nam, 1).unwrap();
+    assert_eq!(imp, nam);
+}
+
+#[test]
+fn pack_buffer_recycling_across_shrinking_shapes() {
+    // thread-local pack buffers are reused across calls: a big product
+    // followed by smaller ragged ones must not see stale panel data
+    let mut rng = Pcg32::new(0x9E);
+    let a = rand_mat(&mut rng, 16, 64);
+    let b = rand_mat(&mut rng, 64, 40);
+    let _ = adaq::tensor::matmul(&a, &b).unwrap();
+    for &(m, k, n) in &[(5usize, 7usize, 9usize), (1, 3, 2), (9, 33, 15)] {
+        let a = rand_mat(&mut rng, m, k);
+        let b = rand_mat(&mut rng, k, n);
+        let got = adaq::tensor::matmul(&a, &b).unwrap();
+        let reference = matmul_reference(&a, &b).unwrap();
+        for (i, (x, y)) in got.data().iter().zip(reference.data()).enumerate() {
+            assert!(
+                (x - y).abs() <= 1e-4 * (1.0 + y.abs()),
+                "{m}x{k}x{n} element {i}: {x} vs {y}"
+            );
+        }
+    }
+}
+
+#[test]
+#[should_panic(expected = "overflow bound")]
+fn int8_k_overflow_guard_fires_in_release() {
+    let k = I8_GEMM_MAX_K + 1;
+    let a = vec![0i8; k];
+    let b = pack_i8(&vec![0i8; k], k, 1);
+    let mut out = vec![0i32; 1];
+    adaq::tensor::gemm_i8_packed(&a, &b, 1, &mut out, 1);
+}
