@@ -510,11 +510,13 @@ fn main() {
                 format!("serve_mt {n} reqs, w{workers} b{batch} d{deadline_us}µs"),
                 format!("{:.0} req/s", r.throughput_rps),
                 format!(
-                    "{:.2}x vs w1 b1; mean batch {:.2}; sojourn p50/p99 {:.2}/{:.2} ms",
+                    "{:.2}x vs w1 b1; mean batch {:.2}; sojourn p50/p99/p99.9 \
+                     {:.2}/{:.2}/{:.2} ms",
                     if base_rps > 0.0 { r.throughput_rps / base_rps } else { 0.0 },
                     r.mean_batch_occupancy(),
                     r.p50_ms,
-                    r.p99_ms
+                    r.p99_ms,
+                    r.p999_ms
                 ),
             ]);
             serve_json.push(Json::obj(vec![
@@ -532,6 +534,7 @@ fn main() {
                 ("p99_ms", Json::Num(r.p99_ms)),
                 ("p999_ms", Json::Num(r.p999_ms)),
                 ("service_p50_ms", Json::Num(r.service_p50_ms)),
+                ("service_p999_ms", Json::Num(r.service_p999_ms)),
                 ("mean_batch", Json::Num(r.mean_batch_occupancy())),
                 ("forwards", Json::Num(r.forwards as f64)),
                 ("correct", Json::Num(r.correct as f64)),
@@ -572,6 +575,57 @@ fn main() {
         ]));
         json_fields.push(("serve_mt", Json::Arr(serve_json)));
         closed_rps_est = base_rps;
+    }
+
+    // ---- observability overhead: the same serve config with the flight
+    //      recorder + metrics hub on (the default) vs globally disabled.
+    //      The recorder is always-on in production, so this row IS the
+    //      perf trajectory guard: BENCH.md documents a ≤3% budget. ----
+    {
+        let test = Dataset::generate(if tiny() { 128 } else { 512 }, 20260731);
+        let session = Session::from_parts(demo_artifacts(29), test.clone(), 1).unwrap();
+        let bits = vec![8.0f32; 3];
+        let n = if tiny() { 300 } else { 2000 };
+        let avail = std::thread::available_parallelism().map_or(1, |v| v.get()).min(16);
+        let w = avail.clamp(2, 8);
+        let cfg = ServerConfig {
+            workers: w,
+            batch: 4,
+            deadline_us: 200,
+            queue_cap: 0,
+            fault: FaultPlan::default(),
+        };
+        let run = || {
+            let t = Timer::start();
+            let r = run_server(&session, &test, &bits, n, &cfg).unwrap();
+            (r, t.seconds())
+        };
+        let _ = run(); // warm the quantized-parameter cache
+        let (r_on, s_on) = run();
+        let (r_off, s_off) = bs::with_obs_disabled(&run);
+        assert_eq!(r_on.correct, r_off.correct, "obs must not change predictions");
+        let rps_on = n as f64 / s_on;
+        let rps_off = n as f64 / s_off;
+        let overhead_pct = (s_on / s_off - 1.0) * 100.0;
+        rows.push(vec![
+            format!("obs_overhead serve {n} reqs, w{w} b4"),
+            format!("{overhead_pct:+.1}%"),
+            format!(
+                "{rps_on:.0} rps on vs {rps_off:.0} rps off; {} events recorded",
+                r_on.telemetry.events.len()
+            ),
+        ]);
+        json_fields.push((
+            "obs_overhead",
+            Json::obj(vec![
+                ("requests", Json::Num(n as f64)),
+                ("workers", Json::Num(w as f64)),
+                ("rps_on", Json::Num(rps_on)),
+                ("rps_off", Json::Num(rps_off)),
+                ("overhead_pct", Json::Num(overhead_pct)),
+                ("events", Json::Num(r_on.telemetry.events.len() as f64)),
+            ]),
+        ));
     }
 
     // ---- open-loop serve: offered-rate ladder with deterministic

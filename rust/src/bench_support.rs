@@ -271,6 +271,20 @@ pub fn run_figure_sweep(bench: &str, conv_only: bool, title: &str) {
     write_report(bench, &report);
 }
 
+/// Run `f` with the observability layer (`crate::obs`) globally disabled,
+/// restoring the enabled state afterwards — the `obs_overhead` bench leg
+/// measures the recorder's cost by running the same serve config with and
+/// without instrumentation. Not panic-safe (a panicking `f` leaves obs
+/// off), which is fine for benches; tests that need obs stay in their own
+/// processes (integration test binaries) so no cross-test interference.
+pub fn with_obs_disabled<T>(f: impl FnOnce() -> T) -> T {
+    let was = crate::obs::enabled();
+    crate::obs::set_enabled(false);
+    let out = f();
+    crate::obs::set_enabled(was);
+    out
+}
+
 /// Skip-or-panic guard: figure benches need artifacts; when they are
 /// missing (fresh checkout, no `make artifacts`) we skip gracefully so
 /// `cargo bench` stays runnable everywhere.

@@ -25,9 +25,15 @@
 //! vary by an order of magnitude between a 3×3×1 stem conv and an FC
 //! layer.
 
-use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
 
-use crate::util::Scratch;
+use crate::obs::{self, hub, EventKind};
+use crate::util::{Scratch, Timer};
+
+/// Per-job `probe` span events are only worth their ring slots for
+/// coarse-grained runs (layer calibrations, sweep points); beyond this
+/// job count only the aggregate counters are kept.
+const PROBE_EVENT_MAX: usize = 64;
 
 /// A fixed-size pool of scoped worker threads executing indexed jobs.
 ///
@@ -69,9 +75,30 @@ impl JobPool {
         F: Fn(usize, &mut Scratch) -> T + Sync,
     {
         let workers = self.jobs.min(n).max(1);
+        let obs_on = obs::enabled();
+        // per-job probe span, gated so the disabled path stays a plain
+        // function call (one timer + one side event per job otherwise)
+        let probed = |i: usize, scratch: &mut Scratch, probe_us: &AtomicU64| -> T {
+            if !obs_on {
+                return f(i, scratch);
+            }
+            let t = Timer::start();
+            let v = f(i, scratch);
+            let us = (t.seconds() * 1e6) as u64;
+            probe_us.fetch_add(us, Ordering::Relaxed);
+            if n <= PROBE_EVENT_MAX {
+                hub().side_event(EventKind::Probe, i as u64, us, 0);
+            }
+            v
+        };
+        let probe_us = AtomicU64::new(0);
         if workers <= 1 {
             let mut scratch = Scratch::new();
-            return (0..n).map(|i| f(i, &mut scratch)).collect();
+            let out = (0..n).map(|i| probed(i, &mut scratch, &probe_us)).collect();
+            if obs_on && n > 0 {
+                hub().note_pool_run(n as u64, 0, probe_us.into_inner());
+            }
+            return out;
         }
         let next = AtomicUsize::new(0);
         let parts: Vec<Vec<(usize, T)>> = std::thread::scope(|s| {
@@ -85,7 +112,7 @@ impl JobPool {
                             if i >= n {
                                 break;
                             }
-                            done.push((i, f(i, &mut scratch)));
+                            done.push((i, probed(i, &mut scratch, &probe_us)));
                         }
                         done
                     })
@@ -96,6 +123,12 @@ impl JobPool {
                 .map(|h| h.join().expect("pool worker panicked"))
                 .collect()
         });
+        if obs_on {
+            // a worker that never won the atomic race to a job index ran
+            // zero jobs — the steal/idle gauge the bench watches
+            let idle = parts.iter().filter(|p| p.is_empty()).count();
+            hub().note_pool_run(n as u64, idle as u64, probe_us.into_inner());
+        }
         // reassemble by job index — scheduling order never leaks out
         let mut slots: Vec<Option<T>> = (0..n).map(|_| None).collect();
         for part in parts {

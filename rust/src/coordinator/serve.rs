@@ -103,6 +103,7 @@ mod tests {
             p999_ms: 0.2,
             service_p50_ms: 0.05,
             service_p99_ms: 0.15,
+            service_p999_ms: 0.15,
             throughput_rps: 0.0,
             workers: 1,
             batch: 1,
@@ -113,6 +114,7 @@ mod tests {
             predictions: vec![0; 10],
             errored: 0,
             errors: vec![],
+            telemetry: Default::default(),
         };
         let s = ServeStats::from_report(&r);
         assert_eq!(s.throughput_rps, 0.0, "degenerate wall time reports 0, not inf");

@@ -618,7 +618,28 @@ pub fn run_degrade(
         admission_cap,
         Some(rungs),
     )?;
-    let open = assemble_open_report(ol, &plan.admission, dc.ladder[0].drain_rps, &run);
+    let mut open = assemble_open_report(ol, &plan.admission, dc.ladder[0].drain_rps, &run);
+    // the planned rung-switch trace is deterministic (virtual time): fold
+    // it into the flight recorder + the Det half of the metrics registry
+    let switch_events: Vec<crate::obs::Event> = plan
+        .switches
+        .iter()
+        .map(|s| crate::obs::Event {
+            kind: crate::obs::EventKind::RungSwitch,
+            id: crate::obs::NO_ID,
+            virtual_us: s.at_us,
+            wall_us: 0,
+            worker: crate::obs::DRIVER_WORKER,
+            a: s.from as u64,
+            b: s.to as u64,
+        })
+        .collect();
+    open.serve.telemetry.push_events(switch_events);
+    open.serve.telemetry.metrics.inc(
+        "rung_switches",
+        crate::obs::Domain::Det,
+        plan.switches.len() as u64,
+    );
     let mut rung_served = vec![0usize; dc.ladder.len()];
     for &(id, _, _) in &run.completions {
         rung_served[plan.rung_of[id] as usize] += 1;

@@ -84,6 +84,7 @@ pub use stats::{slice_series, ServeReport, SliceStat};
 use std::time::{Duration, Instant};
 
 use crate::dataset::Dataset;
+use crate::obs::{self, Domain, Event, EventKind, ObsClock, ObsSeed, DRIVER_WORKER};
 use crate::util::Timer;
 use crate::{Error, Result};
 
@@ -145,16 +146,41 @@ pub fn run_server(
     n: usize,
     cfg: &ServerConfig,
 ) -> Result<ServeReport> {
-    let (queue, params, timer) = start_engine(session, data, bits, n, cfg)?;
+    let (queue, params, timer, mut seed) = start_engine(session, data, bits, n, cfg)?;
+    let clock = params.clock.clone();
+    let driver = &mut seed.driver;
     // closed-loop load generator on this thread: push blocks while the
     // queue is full, so offered load tracks the service rate
     let (tallies, total_seconds) =
         drive_engine(session, data, bits, cfg.workers, &queue, &params, &timer, |q| {
+            let obs_on = obs::enabled();
             for id in 0..n {
-                let accepted =
-                    q.push(Request { id, idx: id % data.len(), enqueued_at: Instant::now() });
+                let idx = id % data.len();
+                if obs_on {
+                    driver.record(Event {
+                        kind: EventKind::Enqueue,
+                        id: id as u64,
+                        virtual_us: clock.virtual_us(id),
+                        wall_us: clock.wall_us(),
+                        worker: DRIVER_WORKER,
+                        a: idx as u64,
+                        b: 0,
+                    });
+                }
+                let accepted = q.push(Request { id, idx, enqueued_at: Instant::now() });
                 if !accepted {
                     break; // a worker died and closed the queue
+                }
+                if obs_on {
+                    driver.record(Event {
+                        kind: EventKind::Admit,
+                        id: id as u64,
+                        virtual_us: clock.virtual_us(id),
+                        wall_us: clock.wall_us(),
+                        worker: DRIVER_WORKER,
+                        a: 0,
+                        b: 0,
+                    });
                 }
             }
         })?;
@@ -164,7 +190,8 @@ pub fn run_server(
         n,
         "every accepted request must drain (answer or error) exactly once"
     );
-    Ok(stats::merge_report(
+    let high_water = queue.high_water();
+    let mut report = stats::merge_report(
         tallies,
         n,
         None,
@@ -173,23 +200,27 @@ pub fn run_server(
         cfg.batch,
         cfg.deadline_us,
         |id| data.label(id % data.len()),
-    ))
+        seed,
+    );
+    report.telemetry.metrics.set_gauge("queue_high_water", Domain::Wall, high_water as f64);
+    Ok(report)
 }
 
 /// Shared engine front door for the closed-loop ([`run_server`]) and
 /// open-loop ([`openloop::run_open_loop`]) drivers: validate the config,
 /// warm the session (also validating `bits` once, so workers cannot fail
 /// on malformed input mid-run), and hand back the queue + worker params +
-/// started run clock. The returned `WorkerParams::epoch` is the instant
-/// the clock started — open-loop arrival offsets and worker completion
-/// timestamps are both measured from it.
+/// started run clock + the run's observability seed (driver event ring +
+/// hub-counter snapshot). The returned `WorkerParams::clock` carries the
+/// epoch the run clock started at — open-loop arrival offsets and worker
+/// completion timestamps are both measured from it.
 fn start_engine(
     session: &Session,
     data: &Dataset,
     bits: &[f32],
     n: usize,
     cfg: &ServerConfig,
-) -> Result<(RequestQueue, worker::WorkerParams, Timer)> {
+) -> Result<(RequestQueue, worker::WorkerParams, Timer, ObsSeed)> {
     if cfg.workers == 0 || cfg.batch == 0 {
         return Err(Error::Model(format!(
             "serve engine wants workers ≥ 1 and batch ≥ 1, got workers={} batch={}",
@@ -220,17 +251,18 @@ fn start_engine(
     let queue = RequestQueue::new(cfg.effective_queue_cap());
     let threads = std::thread::available_parallelism().map_or(1, |v| v.get()).min(16);
     let timer = Timer::start();
+    let seed = ObsSeed::default();
     let params = worker::WorkerParams {
         batch: cfg.batch,
         deadline: Duration::from_micros(cfg.deadline_us),
         // single-worker engines keep the backend's native GEMM behavior
         // (bitwise identical either way; the cap only changes scheduling)
         gemm_cap: if cfg.workers > 1 { (threads / cfg.workers).max(1) } else { 0 },
-        epoch: Instant::now(),
+        clock: ObsClock::logical(),
         rungs: None,
         fault: cfg.fault,
     };
-    Ok((queue, params, timer))
+    Ok((queue, params, timer, seed))
 }
 
 /// Shared engine back half: spawn the workers, run `generator` on the
@@ -261,7 +293,10 @@ where
 {
     let outputs: Vec<Result<stats::WorkerTally>> = std::thread::scope(|s| {
         let handles: Vec<_> = (0..workers)
-            .map(|i| (i, s.spawn(|| worker::run_worker(session, data, bits, queue, params))))
+            .map(|i| {
+                let w = i as u32;
+                (i, s.spawn(move || worker::run_worker(session, data, bits, queue, params, w)))
+            })
             .collect();
         generator(queue);
         queue.close();

@@ -52,10 +52,12 @@
 //! predictions are the same bits the closed-loop engine would produce.
 
 use std::collections::VecDeque;
+use std::sync::Arc;
 use std::time::{Duration, Instant};
 
 use crate::dataset::Dataset;
 use crate::io::Json;
+use crate::obs::{self, Domain, Event, EventKind, DRIVER_WORKER};
 use crate::rng::Pcg32;
 use crate::{Error, Result};
 
@@ -331,6 +333,7 @@ impl OpenLoopReport {
             ("p50_ms", Json::Num(self.serve.p50_ms)),
             ("p99_ms", Json::Num(self.serve.p99_ms)),
             ("p999_ms", Json::Num(self.serve.p999_ms)),
+            ("service_p999_ms", Json::Num(self.serve.service_p999_ms)),
             ("accuracy", Json::Num(self.serve.accuracy())),
             ("workers", Json::Num(self.serve.workers as f64)),
             ("batch", Json::Num(self.serve.batch as f64)),
@@ -384,9 +387,21 @@ pub(crate) fn run_planned(
     // live admission limit, so real sheds trigger at the ledger's cap.)
     let engine_cfg =
         ServerConfig { queue_cap: admission_cap.max(cfg.effective_queue_cap()), ..*cfg };
-    let (queue, mut params, timer) = start_engine(session, data, bits, ol.requests, &engine_cfg)?;
+    let (queue, mut params, timer, mut seed) =
+        start_engine(session, data, bits, ol.requests, &engine_cfg)?;
     params.rungs = rungs;
-    let epoch = params.epoch;
+    // virtual time = the admission ledger: every flight-recorder event
+    // of this run is stamped with its planned arrival offset
+    params.clock.set_ledger(Arc::new(plan.arrivals_us.clone()));
+    let clock = params.clock.clone();
+    let epoch = clock.epoch();
+    let driver = &mut seed.driver;
+    // planned sheds all carry the policy's payload code; live sheds
+    // (real queue depth, --live-shed) carry 2 = wall domain
+    let planned_shed_b = match ol.shed {
+        super::ShedPolicy::RejectNew => 0u64,
+        super::ShedPolicy::DropOldest => 1u64,
+    };
     let mut depth_samples: Vec<(u64, usize)> = Vec::with_capacity(ol.requests);
     let mut live_shed_ids: Vec<usize> = Vec::new();
     // open-loop generator: sleep to each planned arrival offset, sample
@@ -394,6 +409,16 @@ pub(crate) fn run_planned(
     // shed according to the ledger
     let (tallies, total_seconds) =
         super::drive_engine(session, data, bits, cfg.workers, &queue, &params, &timer, |q| {
+            let obs_on = obs::enabled();
+            let ev = |kind: EventKind, id: usize, wall_us: u64, a: u64, b: u64| Event {
+                kind,
+                id: id as u64,
+                virtual_us: clock.virtual_us(id),
+                wall_us,
+                worker: DRIVER_WORKER,
+                a,
+                b,
+            };
             for id in 0..ol.requests {
                 let target = epoch + Duration::from_micros(plan.arrivals_us[id]);
                 let now = Instant::now();
@@ -401,7 +426,23 @@ pub(crate) fn run_planned(
                     std::thread::sleep(target - now);
                 }
                 depth_samples.push((epoch.elapsed().as_micros() as u64, q.depth()));
+                if obs_on {
+                    driver.record(ev(
+                        EventKind::Enqueue,
+                        id,
+                        clock.wall_us(),
+                        (id % data.len()) as u64,
+                        0,
+                    ));
+                }
                 if !plan.admitted[id] {
+                    driver.record(ev(
+                        EventKind::Shed,
+                        id,
+                        if obs_on { clock.wall_us() } else { 0 },
+                        0,
+                        planned_shed_b,
+                    ));
                     continue;
                 }
                 // sojourn origin = the *planned* arrival instant, kept by
@@ -410,13 +451,35 @@ pub(crate) fn run_planned(
                 // unlike the closed loop's re-stamping push
                 let req = Request { id, idx: id % data.len(), enqueued_at: target };
                 if ol.live_shed {
+                    let live = |shed_id: usize| ev(EventKind::Shed, shed_id, clock.wall_us(), 0, 2);
                     match q.offer_stamped(req, ol.shed) {
-                        Admission::Accepted => {}
-                        Admission::Rejected => live_shed_ids.push(id),
-                        Admission::Evicted(old) => live_shed_ids.push(old.id),
+                        Admission::Accepted => {
+                            if obs_on {
+                                driver.record(ev(EventKind::Admit, id, clock.wall_us(), 0, 0));
+                            }
+                        }
+                        Admission::Rejected => {
+                            live_shed_ids.push(id);
+                            if obs_on {
+                                driver.record(live(id));
+                            }
+                        }
+                        Admission::Evicted(old) => {
+                            live_shed_ids.push(old.id);
+                            if obs_on {
+                                // the evicted head sheds; the arrival itself
+                                // was admitted in its place
+                                driver.record(live(old.id));
+                                driver.record(ev(EventKind::Admit, id, clock.wall_us(), 0, 0));
+                            }
+                        }
                         Admission::Closed => break, // a worker died
                     }
-                } else if !q.push_stamped(req) {
+                } else if q.push_stamped(req) {
+                    if obs_on {
+                        driver.record(ev(EventKind::Admit, id, clock.wall_us(), 0, 0));
+                    }
+                } else {
                     break; // a worker died and closed the queue
                 }
             }
@@ -435,7 +498,8 @@ pub(crate) fn run_planned(
         }
     }
     completions.sort_unstable_by_key(|&(id, _, _)| id);
-    let serve = stats::merge_report(
+    let high_water = queue.high_water();
+    let mut serve = stats::merge_report(
         tallies,
         ol.requests,
         Some(&served),
@@ -444,7 +508,12 @@ pub(crate) fn run_planned(
         cfg.batch,
         cfg.deadline_us,
         |id| data.label(id % data.len()),
+        seed,
     );
+    serve.telemetry.metrics.set_gauge("queue_high_water", Domain::Wall, high_water as f64);
+    // live sheds sit outside the determinism contract by design: wall
+    // domain, own counter (also folded into `requests_shed` above)
+    serve.telemetry.metrics.inc("requests_live_shed", Domain::Wall, live_shed_ids.len() as u64);
     debug_assert_eq!(
         serve.requests + serve.errored + plan.shed_ids.len() + live_shed_ids.len(),
         ol.requests,
@@ -651,7 +720,8 @@ mod tests {
 
     #[test]
     fn report_shed_helpers_guard_degenerate_counts() {
-        let serve = stats::merge_report(vec![], 0, None, 0.0, 1, 1, 0, |_| 0);
+        let seed = crate::obs::ObsSeed::default();
+        let serve = stats::merge_report(vec![], 0, None, 0.0, 1, 1, 0, |_| 0, seed);
         let r = OpenLoopReport {
             serve,
             offered: 0,

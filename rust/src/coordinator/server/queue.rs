@@ -28,6 +28,7 @@
 //! ledger's sheds — while the planned-arrival sojourn origin is kept.
 
 use std::collections::VecDeque;
+use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::{Condvar, Mutex};
 use std::time::{Duration, Instant};
 
@@ -115,6 +116,8 @@ pub struct RequestQueue {
     cap: usize,
     not_empty: Condvar,
     not_full: Condvar,
+    /// Deepest the queue has ever been (telemetry gauge; wall domain).
+    high_water: AtomicUsize,
 }
 
 impl RequestQueue {
@@ -126,12 +129,19 @@ impl RequestQueue {
             cap,
             not_empty: Condvar::new(),
             not_full: Condvar::new(),
+            high_water: AtomicUsize::new(0),
         }
     }
 
     /// The queue's capacity (depth histograms are sized by this).
     pub fn capacity(&self) -> usize {
         self.cap
+    }
+
+    /// The deepest the queue has been since construction (wall domain —
+    /// depends on real scheduling, no determinism contract).
+    pub fn high_water(&self) -> usize {
+        self.high_water.load(Ordering::Relaxed)
     }
 
     /// Current depth (pending requests) — a snapshot, for stats only.
@@ -178,6 +188,7 @@ impl RequestQueue {
             req.enqueued_at = Instant::now();
         }
         st.buf.push_back(req);
+        self.high_water.fetch_max(st.buf.len(), Ordering::Relaxed);
         drop(st);
         self.not_empty.notify_all();
         true
@@ -218,6 +229,7 @@ impl RequestQueue {
         }
         let out = if st.buf.len() < self.cap {
             st.buf.push_back(req);
+            self.high_water.fetch_max(st.buf.len(), Ordering::Relaxed);
             Admission::Accepted
         } else {
             match policy {

@@ -1028,7 +1028,43 @@ pub fn run_scenario(
         live_shed,
     };
     let run = run_planned(session, data, &p.base_bits, cfg, &p.admission, &ol, cap, p.rungs)?;
-    let open = assemble_open_report(&ol, &p.admission, p.drain_rps, &run);
+    let mut open = assemble_open_report(&ol, &p.admission, p.drain_rps, &run);
+
+    // deterministic telemetry: the planned rung-switch trace (when a
+    // ladder composes) and per-tenant ledger accounting, all virtual time
+    let switch_events: Vec<crate::obs::Event> = p
+        .switches
+        .iter()
+        .map(|s| crate::obs::Event {
+            kind: crate::obs::EventKind::RungSwitch,
+            id: crate::obs::NO_ID,
+            virtual_us: s.at_us,
+            wall_us: 0,
+            worker: crate::obs::DRIVER_WORKER,
+            a: s.from as u64,
+            b: s.to as u64,
+        })
+        .collect();
+    if !switch_events.is_empty() {
+        open.serve.telemetry.push_events(switch_events);
+        open.serve.telemetry.metrics.inc(
+            "rung_switches",
+            crate::obs::Domain::Det,
+            p.switches.len() as u64,
+        );
+    }
+    let m = &mut open.serve.telemetry.metrics;
+    for (k, c) in p.counts.iter().enumerate() {
+        // metric-name-safe tenant tag (Prometheus: [a-zA-Z0-9_] only)
+        let tag: String = spec.tenants[k]
+            .name
+            .chars()
+            .map(|ch| if ch.is_ascii_alphanumeric() { ch.to_ascii_lowercase() } else { '_' })
+            .collect();
+        m.inc(&format!("tenant_offered_{tag}"), crate::obs::Domain::Det, c.offered as u64);
+        let shed = (c.shed_rejected + c.shed_evicted) as u64;
+        m.inc(&format!("tenant_shed_{tag}"), crate::obs::Domain::Det, shed);
+    }
 
     // per-tenant measured assembly: completions, errors, and live sheds
     // are id-keyed, so attribution is scheduling-independent

@@ -1,7 +1,15 @@
 //! Serve-engine statistics: per-worker tallies merged into one
 //! [`ServeReport`] — tail latencies (sojourn **and** service), queue
-//! congestion, and batch-occupancy histograms.
+//! congestion, batch-occupancy histograms, and the run's merged
+//! telemetry (flight-recorder trace + metrics registry, `crate::obs`).
 
+use std::collections::BTreeMap;
+
+use crate::io::Json;
+use crate::obs::{
+    hub, merge_events, Domain, Event, EventRing, Hist, HubSnapshot, ObsSeed, RunTelemetry,
+    StageAcc,
+};
 use crate::util::percentile_nearest_rank;
 
 /// Rate `n / seconds`, or 0 when the denominator is degenerate — very
@@ -43,6 +51,15 @@ pub(crate) struct WorkerTally {
     /// `service_ms`/`done_us` so those stay parallel and latency stats
     /// cover real answers only.
     pub errors: Vec<(usize, String)>,
+    /// This worker's flight-recorder ring (batch/forward/complete/fault
+    /// events) — drained and merged deterministically at report time.
+    pub ring: EventRing,
+    /// Stage timing (`queue_wait → batch_assembly → forward →
+    /// writeback`) accumulated by this worker. Wall domain.
+    pub stages: StageAcc,
+    /// Requests served per rung index (deterministic: the rung of a
+    /// request is a pure function of its id).
+    pub rung_served: BTreeMap<u32, u64>,
 }
 
 impl WorkerTally {
@@ -76,6 +93,7 @@ pub struct ServeReport {
     /// Service percentiles (ms): the answering forward pass.
     pub service_p50_ms: f64,
     pub service_p99_ms: f64,
+    pub service_p999_ms: f64,
     /// Requests per second over the whole run (0 on a degenerate clock).
     pub throughput_rps: f64,
     /// Engine configuration the run used.
@@ -106,6 +124,10 @@ pub struct ServeReport {
     /// `(request id, what failed)` per errored request, sorted by id —
     /// deterministic at any worker count because faults key on ids.
     pub errors: Vec<(usize, String)>,
+    /// The run's merged telemetry: flight-recorder trace, stage timing,
+    /// and metrics registry (see `crate::obs` for the clock-domain
+    /// contract).
+    pub telemetry: RunTelemetry,
 }
 
 impl ServeReport {
@@ -123,6 +145,32 @@ impl ServeReport {
             return 0.0;
         }
         self.requests as f64 / self.forwards as f64
+    }
+
+    /// The report's headline numbers as JSON (percentiles in ms,
+    /// including the full sojourn **and** service tails) plus trace
+    /// size/overflow accounting.
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("requests", Json::Num(self.requests as f64)),
+            ("correct", Json::Num(self.correct as f64)),
+            ("accuracy", Json::Num(self.accuracy())),
+            ("total_seconds", Json::Num(self.total_seconds)),
+            ("throughput_rps", Json::Num(self.throughput_rps)),
+            ("p50_ms", Json::Num(self.p50_ms)),
+            ("p99_ms", Json::Num(self.p99_ms)),
+            ("p999_ms", Json::Num(self.p999_ms)),
+            ("service_p50_ms", Json::Num(self.service_p50_ms)),
+            ("service_p99_ms", Json::Num(self.service_p99_ms)),
+            ("service_p999_ms", Json::Num(self.service_p999_ms)),
+            ("workers", Json::Num(self.workers as f64)),
+            ("batch", Json::Num(self.batch as f64)),
+            ("deadline_us", Json::Num(self.deadline_us as f64)),
+            ("forwards", Json::Num(self.forwards as f64)),
+            ("errored", Json::Num(self.errored as f64)),
+            ("events", Json::Num(self.telemetry.events.len() as f64)),
+            ("events_dropped", Json::Num(self.telemetry.dropped as f64)),
+        ])
     }
 }
 
@@ -147,6 +195,7 @@ pub(crate) fn merge_report(
     batch: usize,
     deadline_us: u64,
     labels: impl Fn(usize) -> i32,
+    obs: ObsSeed,
 ) -> ServeReport {
     let mut predictions = vec![-1i32; n];
     let mut seen = vec![false; n];
@@ -156,7 +205,16 @@ pub(crate) fn merge_report(
     let mut depth: Vec<usize> = Vec::new();
     let mut forwards = 0usize;
     let mut errors: Vec<(usize, String)> = Vec::new();
+    let mut telemetry = RunTelemetry::default();
+    let mut event_parts: Vec<Vec<Event>> = Vec::new();
     for t in tallies {
+        let (events, dropped) = t.ring.into_parts();
+        event_parts.push(events);
+        telemetry.dropped += dropped;
+        telemetry.stages.merge(&t.stages);
+        for (rung, count) in t.rung_served {
+            telemetry.metrics.inc(&format!("rung_served_{rung}"), Domain::Det, count);
+        }
         for (id, pred) in t.results {
             debug_assert!(!seen[id], "request {id} served twice");
             seen[id] = true;
@@ -196,6 +254,71 @@ pub(crate) fn merge_report(
     sojourn.sort_by(f64::total_cmp);
     service.sort_by(f64::total_cmp);
     let pct = |v: &[f64], p: f64| percentile_nearest_rank(v, p);
+
+    // fold the driver ring + the hub's side events into the trace, then
+    // merge by the deterministic key
+    let (driver_events, driver_dropped) = obs.driver.into_parts();
+    event_parts.push(driver_events);
+    telemetry.dropped += driver_dropped;
+    let (side_events, side_dropped) = hub().drain_side();
+    event_parts.push(side_events);
+    telemetry.dropped += side_dropped;
+    telemetry.events = merge_events(event_parts);
+
+    // deterministic request accounting (invariant across --workers; the
+    // shed counter includes live sheds only under --live-shed, which
+    // voids the determinism contract by documented design)
+    let m = &mut telemetry.metrics;
+    m.inc("requests_offered", Domain::Det, n as u64);
+    m.inc("requests_completed", Domain::Det, requests as u64);
+    m.inc("requests_errored", Domain::Det, errors.len() as u64);
+    m.inc("requests_shed", Domain::Det, (n - drained) as u64);
+
+    // wall-domain measurements
+    m.inc("forwards", Domain::Wall, forwards as u64);
+    m.inc("events_dropped", Domain::Wall, telemetry.dropped);
+    m.set_gauge("workers", Domain::Wall, workers as f64);
+    m.set_gauge("throughput_rps", Domain::Wall, safe_rate(requests, total_seconds));
+    let occ_sum: u64 = occupancy.iter().enumerate().map(|(i, &c)| (i as u64 + 1) * c as u64).sum();
+    let mut occ_counts: Vec<u64> = occupancy.iter().map(|&c| c as u64).collect();
+    occ_counts.push(0); // +Inf bucket: occupancy never exceeds `batch`
+    m.put_hist(
+        "batch_occupancy",
+        Domain::Wall,
+        Hist::from_counts((1..=occupancy.len() as u64).collect(), occ_counts, occ_sum),
+    );
+    if !depth.is_empty() {
+        let depth_sum: u64 = depth.iter().enumerate().map(|(d, &c)| d as u64 * c as u64).sum();
+        let mut depth_counts: Vec<u64> = depth.iter().map(|&c| c as u64).collect();
+        depth_counts.push(0); // +Inf bucket: the last real bucket already clamps
+        m.put_hist(
+            "queue_depth",
+            Domain::Wall,
+            Hist::from_counts((0..depth.len() as u64).collect(), depth_counts, depth_sum),
+        );
+    }
+    // sorted above, so the series content is order-deterministic too
+    m.extend_series("sojourn_ms", Domain::Wall, &sojourn);
+    m.extend_series("service_ms", Domain::Wall, &service);
+
+    // per-run deltas of the process-global hub counters (wall domain:
+    // concurrent runs in one process interleave)
+    let d = HubSnapshot::capture().since(&obs.hub_start);
+    for (name, v) in [
+        ("gemm_forwards", d.gemm_forwards),
+        ("requant_builds", d.requant_builds),
+        ("requant_us", d.requant_us),
+        ("int8_encodes", d.int8_encodes),
+        ("evalcache_hits", d.evalcache_hits),
+        ("evalcache_misses", d.evalcache_misses),
+        ("pool_runs", d.pool_runs),
+        ("pool_jobs", d.pool_jobs),
+        ("pool_idle_workers", d.pool_idle_workers),
+        ("pool_probe_us", d.pool_probe_us),
+    ] {
+        m.inc(name, Domain::Wall, v);
+    }
+
     ServeReport {
         requests,
         correct,
@@ -205,6 +328,7 @@ pub(crate) fn merge_report(
         p999_ms: pct(&sojourn, 0.999),
         service_p50_ms: pct(&service, 0.50),
         service_p99_ms: pct(&service, 0.99),
+        service_p999_ms: pct(&service, 0.999),
         throughput_rps: safe_rate(requests, total_seconds),
         workers,
         batch,
@@ -215,6 +339,7 @@ pub(crate) fn merge_report(
         predictions,
         errored: errors.len(),
         errors,
+        telemetry,
     }
 }
 
@@ -344,7 +469,7 @@ mod tests {
                     t
                 })
                 .collect();
-            merge_report(tallies, 6, None, 2.0, 2, 2, 0, |id| (id % 3) as i32)
+            merge_report(tallies, 6, None, 2.0, 2, 2, 0, |id| (id % 3) as i32, ObsSeed::default())
         };
         let a = mk(vec![vec![0, 1, 2], vec![3, 4, 5]]);
         let b = mk(vec![vec![5, 1, 3], vec![4, 0, 2]]);
@@ -359,7 +484,7 @@ mod tests {
 
     #[test]
     fn degenerate_report_guards() {
-        let r = merge_report(vec![], 0, None, 0.0, 1, 1, 0, |_| 0);
+        let r = merge_report(vec![], 0, None, 0.0, 1, 1, 0, |_| 0, ObsSeed::default());
         assert_eq!(r.accuracy(), 0.0, "no requests → 0, not NaN");
         assert_eq!(r.throughput_rps, 0.0, "zero wall time → 0, not inf");
         assert_eq!(r.mean_batch_occupancy(), 0.0);
@@ -380,7 +505,8 @@ mod tests {
             t.occupancy[0] += 1;
             t.forwards += 1;
         }
-        let r = merge_report(vec![t], 6, Some(&served), 2.0, 1, 1, 0, |id| (id % 3) as i32);
+        let labels = |id: usize| (id % 3) as i32;
+        let r = merge_report(vec![t], 6, Some(&served), 2.0, 1, 1, 0, labels, ObsSeed::default());
         assert_eq!(r.requests, 4, "requests = admitted, not offered");
         assert_eq!(r.correct, 4);
         assert_eq!(r.throughput_rps, 2.0, "rate over admitted requests");
@@ -404,7 +530,8 @@ mod tests {
             t.forwards += 1;
         }
         t.errors.push((3, "injected worker panic".into()));
-        let r = merge_report(vec![t], 4, Some(&served), 1.0, 1, 1, 0, |id| (id % 3) as i32);
+        let labels = |id: usize| (id % 3) as i32;
+        let r = merge_report(vec![t], 4, Some(&served), 1.0, 1, 1, 0, labels, ObsSeed::default());
         assert_eq!(r.requests, 2, "errored request is not goodput");
         assert_eq!(r.errored, 1);
         assert_eq!(r.errors, vec![(3, "injected worker panic".to_string())]);

@@ -34,9 +34,10 @@
 //! inline instead of paying spawn overhead.
 
 use std::panic::{catch_unwind, AssertUnwindSafe};
-use std::time::{Duration, Instant};
+use std::time::Duration;
 
 use crate::dataset::Dataset;
+use crate::obs::{self, Event, EventKind, ObsClock, Stage, StageClock};
 use crate::tensor::{self, Tensor};
 use crate::util::{Scratch, Timer};
 use crate::{Error, Result};
@@ -64,10 +65,12 @@ pub(crate) struct WorkerParams {
     /// GEMM auto-thread cap for this worker (0 = uncapped, single-worker
     /// engines keep the backend's existing auto behavior).
     pub gemm_cap: usize,
-    /// Run epoch — completion timestamps (`WorkerTally::done_us`) are
-    /// recorded relative to this, so the open-loop mode can slice the
-    /// run into fixed time windows across all workers.
-    pub epoch: Instant,
+    /// The run's two-domain clock. Its wall epoch anchors completion
+    /// timestamps (`WorkerTally::done_us`) and open-loop time slices in
+    /// **both** serve modes; its virtual side stamps the deterministic
+    /// half of every flight-recorder event (the admission ledger on the
+    /// open-loop path, the request id on the closed-loop path).
+    pub clock: ObsClock,
     /// Per-request rung assignments (degrade mode); `None` = every
     /// request serves at the engine's base bits.
     pub rungs: Option<RungTable>,
@@ -86,11 +89,13 @@ pub(crate) fn run_worker(
     bits: &[f32],
     queue: &RequestQueue,
     params: &WorkerParams,
+    widx: u32,
 ) -> Result<WorkerTally> {
-    let out = catch_unwind(AssertUnwindSafe(|| serve_requests(session, data, bits, queue, params)))
-        .unwrap_or_else(|payload| {
-            Err(Error::Other(format!("serve worker panicked: {}", panic_message(&payload))))
-        });
+    let out =
+        catch_unwind(AssertUnwindSafe(|| serve_requests(session, data, bits, queue, params, widx)))
+            .unwrap_or_else(|payload| {
+                Err(Error::Other(format!("serve worker panicked: {}", panic_message(&payload))))
+            });
     if out.is_err() {
         // poison-style shutdown: a dead worker must not leave the
         // generator blocked on a full queue or its peers waiting forever
@@ -138,6 +143,7 @@ fn serve_requests(
     bits: &[f32],
     queue: &RequestQueue,
     params: &WorkerParams,
+    widx: u32,
 ) -> Result<WorkerTally> {
     if params.gemm_cap > 0 {
         tensor::set_gemm_thread_cap(params.gemm_cap);
@@ -150,33 +156,77 @@ fn serve_requests(
     let mut scratch = Scratch::new();
     let mut batch = Vec::with_capacity(params.batch);
     let mut ids = Vec::with_capacity(params.batch);
+    let obs_on = obs::enabled();
+    let ev = |kind: EventKind, id: usize, virtual_us: u64, wall_us: u64, a: u64, b: u64| Event {
+        kind,
+        id: id as u64,
+        virtual_us,
+        wall_us,
+        worker: widx,
+        a,
+        b,
+    };
+    let mut sclock = StageClock::start();
     while let Some(depth) = queue.pop_batch(params.batch, params.deadline, &mut batch) {
         tally.occupancy[batch.len() - 1] += 1;
         let dslot = tally.depth.len() - 1;
         tally.depth[depth.min(dslot)] += 1;
+        if obs_on {
+            sclock.lap(&mut tally.stages, Stage::QueueWait);
+            let first = batch[0].id;
+            tally.ring.record(ev(
+                EventKind::BatchForm,
+                first,
+                params.clock.virtual_us(first),
+                params.clock.wall_us(),
+                batch.len() as u64,
+                depth as u64,
+            ));
+        }
         for &(start, end, rung) in &forward_groups(&batch, params) {
             let group = &batch[start..end];
             let b = end - start;
-            // a slow-worker fault stalls the whole pop carrying its
-            // target before the forward: latency, not errors
-            if let Some(ms) = group.iter().find_map(|r| params.fault.stall_ms(r.id)) {
-                std::thread::sleep(Duration::from_millis(ms));
-            }
             // a poisoned batch fails without forwarding (the stand-in
             // for corrupt input); isolation makes the group a singleton
             if let Some(req) = group.iter().find(|r| params.fault.poisons(r.id)) {
                 tally
                     .errors
                     .push((req.id, format!("injected poisoned batch at request {}", req.id)));
+                tally.ring.record(ev(
+                    EventKind::FaultAbsorbed,
+                    req.id,
+                    params.clock.virtual_us(req.id),
+                    if obs_on { params.clock.wall_us() } else { 0 },
+                    1,
+                    0,
+                ));
                 continue;
             }
-            let gbits =
-                params.rungs.as_ref().map_or(bits, |rt| rt.bits[rung].as_slice());
+            let gbits = params.rungs.as_ref().map_or(bits, |rt| rt.bits[rung].as_slice());
             ids.clear();
             ids.extend(group.iter().map(|r| r.idx));
             let mut xbuf = scratch.take_any(b * stride);
             data.fill_images(&ids, &mut xbuf)?;
             let x = Tensor::from_vec(&[b, h, w, c], xbuf)?;
+            if obs_on {
+                sclock.lap(&mut tally.stages, Stage::BatchAssembly);
+                tally.ring.record(ev(
+                    EventKind::ForwardStart,
+                    group[0].id,
+                    params.clock.virtual_us(group[0].id),
+                    params.clock.wall_us(),
+                    b as u64,
+                    rung as u64,
+                ));
+            }
+            let span = Timer::start();
+            // a slow-worker fault stalls the whole group carrying its
+            // target *inside* the forward span (latency, not errors): the
+            // injected delay shows up in the `forward_end` span payload
+            // while `service_ms` keeps measuring the forward alone
+            if let Some(ms) = group.iter().find_map(|r| params.fault.stall_ms(r.id)) {
+                std::thread::sleep(Duration::from_millis(ms));
+            }
             let panic_id = group.iter().map(|r| r.id).find(|&id| params.fault.panics_at(id));
             let t = Timer::start();
             let forward = catch_unwind(AssertUnwindSafe(|| {
@@ -186,6 +236,18 @@ fn serve_requests(
                 session.qforward_once(&x, gbits)
             }));
             let service_ms = t.millis();
+            if obs_on {
+                let span_us = (span.seconds() * 1e6) as u64;
+                tally.ring.record(ev(
+                    EventKind::ForwardEnd,
+                    group[0].id,
+                    params.clock.virtual_us(group[0].id),
+                    params.clock.wall_us(),
+                    span_us,
+                    rung as u64,
+                ));
+                sclock.lap(&mut tally.stages, Stage::Forward);
+            }
             let logits = match forward {
                 Ok(Ok(logits)) => logits,
                 // a real forward error is a broken engine, not a
@@ -198,6 +260,14 @@ fn serve_requests(
                     let msg = panic_message(&payload);
                     for req in group {
                         tally.errors.push((req.id, format!("worker panic: {msg}")));
+                        tally.ring.record(ev(
+                            EventKind::FaultAbsorbed,
+                            req.id,
+                            params.clock.virtual_us(req.id),
+                            if obs_on { params.clock.wall_us() } else { 0 },
+                            0,
+                            0,
+                        ));
                     }
                     scratch.put(x.into_vec());
                     continue;
@@ -205,7 +275,7 @@ fn serve_requests(
             };
             scratch.put(x.into_vec());
             tally.forwards += 1;
-            let done_us = params.epoch.elapsed().as_micros() as u64;
+            let done_us = params.clock.wall_us();
             for (i, req) in group.iter().enumerate() {
                 let row = &logits[i * classes..(i + 1) * classes];
                 let (pred, _) = Tensor::top2(row);
@@ -213,6 +283,18 @@ fn serve_requests(
                 tally.sojourn_ms.push(req.enqueued_at.elapsed().as_secs_f64() * 1e3);
                 tally.service_ms.push(service_ms);
                 tally.done_us.push(done_us);
+                tally.ring.record(ev(
+                    EventKind::Complete,
+                    req.id,
+                    params.clock.virtual_us(req.id),
+                    done_us,
+                    pred as u64,
+                    rung as u64,
+                ));
+            }
+            *tally.rung_served.entry(rung as u32).or_insert(0) += b as u64;
+            if obs_on {
+                sclock.lap(&mut tally.stages, Stage::Writeback);
             }
         }
         batch.clear();

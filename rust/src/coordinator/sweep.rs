@@ -16,8 +16,10 @@
 //! thread-count-invariant, so a cached accuracy equals a re-measured one.
 
 use std::collections::{HashMap, HashSet};
+use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Mutex;
 
+use crate::obs::hub;
 use crate::quant::{
     enumerate_roundings, pareto_frontier, Allocation, Allocator, LayerStats, SweepPoint,
 };
@@ -72,13 +74,19 @@ impl SweepConfig {
 /// are only reusable against the same weights and data. Share it across
 /// allocators and threshold ladders of that session — duplicate
 /// allocations then trigger exactly one backend evaluation each
-/// (assertable via [`Session::execs`]).
+/// (assertable via [`EvalCache::hits`] / [`EvalCache::misses`]).
 ///
 /// Internally a mutex-guarded map; lookups are a hash of ≤ #layers f32
 /// bit patterns, negligible against a full-dataset forward.
 #[derive(Debug, Default)]
 pub struct EvalCache {
     accuracy: Mutex<HashMap<Vec<u32>, f64>>,
+    /// Lookups resolved without a backend evaluation (memoized result or
+    /// an in-flight duplicate within one sweep batch).
+    hits: AtomicU64,
+    /// Evaluations admitted — equals [`EvalCache::len`] when no two
+    /// callers race on the same vector.
+    misses: AtomicU64,
 }
 
 impl EvalCache {
@@ -113,11 +121,31 @@ impl EvalCache {
     /// insert is a no-op overwrite).
     pub fn get_or_eval(&self, session: &Session, bits: &[f32]) -> Result<f64> {
         if let Some(acc) = self.get(bits) {
+            self.note(true);
             return Ok(acc);
         }
+        self.note(false);
         let acc = session.eval_qbits(bits)?.accuracy;
         self.insert(bits, acc);
         Ok(acc)
+    }
+
+    /// Count one lookup outcome, mirrored into the observability hub
+    /// (`evalcache_hits` / `evalcache_misses` — `crate::obs`).
+    fn note(&self, hit: bool) {
+        let ctr = if hit { &self.hits } else { &self.misses };
+        ctr.fetch_add(1, Ordering::Relaxed);
+        hub().note_evalcache(hit);
+    }
+
+    /// Lookups served without a backend evaluation so far.
+    pub fn hits(&self) -> u64 {
+        self.hits.load(Ordering::Relaxed)
+    }
+
+    /// Evaluations admitted so far (== [`EvalCache::len`] absent races).
+    pub fn misses(&self) -> u64 {
+        self.misses.load(Ordering::Relaxed)
     }
 
     /// Distinct bit vectors evaluated so far.
@@ -187,7 +215,12 @@ pub fn run_sweep_jobs(
     let mut pending: Vec<&[f32]> = Vec::new();
     for (_, _, bits) in &candidates {
         if cache.get(bits).is_none() && seen.insert(EvalCache::key(bits)) {
+            cache.note(false);
             pending.push(bits);
+        } else {
+            // memoized earlier, or a duplicate within this batch that the
+            // single pending evaluation will answer
+            cache.note(true);
         }
     }
 

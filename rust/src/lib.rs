@@ -31,6 +31,7 @@
 //! | [`quant`] | uniform quantizer, noise model, bit-width allocators (adaptive / SQNR / equal) |
 //! | [`measure`] | adversarial margin, t_i robustness calibration, p_i estimation, linearity/additivity probes |
 //! | [`coordinator`] | experiment engine: job planning, thread-pooled evaluation, sweeps, concurrent serve engine |
+//! | [`obs`] | observability: flight recorder, metrics registry, stage spans, trace/Prometheus exporters |
 //! | [`report`] | ascii plots, markdown/CSV tables |
 //! | [`cli`] | hand-rolled argument parser + subcommands |
 
@@ -43,6 +44,7 @@ pub mod io;
 pub mod measure;
 pub mod model;
 pub mod nn;
+pub mod obs;
 pub mod quant;
 pub mod report;
 pub mod rng;

@@ -71,6 +71,13 @@ USAGE: adaq <command> [--flags]
              [--fault SPEC] (or ADAQ_FAULT: inject seeded worker faults,
               worker_panic[@K] | poison[@K] | slow[@K:MS] — panics
               become per-request error outcomes, never crashes)
+             [--trace-out P] [--metrics-out P]
+             (telemetry: every serve run records a flight-recorder event
+              trace and a metrics registry — --trace-out writes the
+              merged trace as JSONL, --metrics-out writes Prometheus
+              text, and a summary table always prints. The deterministic
+              projection of both is bitwise identical at any --workers;
+              single-run only, conflicts with --rates)
              [--synthetic] (serve an in-process seeded random-weight MLP
               — no artifacts needed; for smokes and CI)
   export     --model M (--bits … | --allocator A --b1 F) [--out DIR]
@@ -450,8 +457,9 @@ fn cmd_serve(args: &Args) -> Result<()> {
         r.throughput_rps,
     );
     println!(
-        "  sojourn p50 {:.2} / p99 {:.2} / p99.9 {:.2} ms, service p50 {:.2} / p99 {:.2} ms",
-        r.p50_ms, r.p99_ms, r.p999_ms, r.service_p50_ms, r.service_p99_ms
+        "  sojourn p50 {:.2} / p99 {:.2} / p99.9 {:.2} ms, \
+         service p50 {:.2} / p99 {:.2} / p99.9 {:.2} ms",
+        r.p50_ms, r.p99_ms, r.p999_ms, r.service_p50_ms, r.service_p99_ms, r.service_p999_ms
     );
     println!(
         "  {} forwards, mean batch {:.2}, occupancy {:?}, queue depth {:?}",
@@ -461,6 +469,25 @@ fn cmd_serve(args: &Args) -> Result<()> {
         r.queue_depth
     );
     print_fault_outcome(&cfg.fault, &r);
+    emit_telemetry(args, &r)?;
+    Ok(())
+}
+
+/// Shared telemetry tail of every serve path: write the merged trace
+/// (`--trace-out`, one JSON event per line) and the Prometheus text
+/// exposition (`--metrics-out`, text format 0.0.4), then print the
+/// always-on human summary table.
+fn emit_telemetry(args: &Args, r: &ServeReport) -> Result<()> {
+    if let Some(path) = args.flags.get("trace-out") {
+        adaq::obs::write_trace_jsonl(path, &r.telemetry.events)?;
+        let (n, dropped) = (r.telemetry.events.len(), r.telemetry.dropped);
+        println!("wrote {path} ({n} events, {dropped} dropped)");
+    }
+    if let Some(path) = args.flags.get("metrics-out") {
+        std::fs::write(path, adaq::obs::prometheus_text(&r.telemetry))?;
+        println!("wrote {path}");
+    }
+    println!("{}", r.telemetry.summary());
     Ok(())
 }
 
@@ -557,6 +584,20 @@ fn cmd_serve_open_loop(
             r.slice_ms,
         );
         print_fault_outcome(&cfg.fault, &r.serve);
+    }
+    if curve.points.len() > 1 {
+        // a ladder runs several engines back to back; per-run telemetry
+        // exports would overwrite each other (same precedent as
+        // --record-trace below)
+        for f in ["trace-out", "metrics-out"] {
+            if args.flags.contains_key(f) {
+                return Err(Error::Cli(format!(
+                    "--{f} exports one run's telemetry; drop --rates"
+                )));
+            }
+        }
+    } else {
+        emit_telemetry(args, &curve.points[0].serve)?;
     }
     let artifact = args
         .flags
@@ -689,6 +730,7 @@ fn cmd_serve_degrade(
         .collect();
     println!("{}", markdown_table(&head_refs, &aligns, &rows));
     print_fault_outcome(&cfg.fault, &r.open.serve);
+    emit_telemetry(args, &r.open.serve)?;
     if let Some(path) = args.flags.get("degrade-out") {
         r.to_json().write_file(path)?;
         println!("wrote {path}");
@@ -808,6 +850,7 @@ fn cmd_serve_scenario(
         );
     }
     print_fault_outcome(&cfg.fault, &r.open.serve);
+    emit_telemetry(args, &r.open.serve)?;
     if let Some(path) = args.flags.get("record-trace") {
         r.record_trace(std::path::Path::new(path.as_str()))?;
         println!("wrote {path} ({} arrivals)", r.arrivals_us.len());

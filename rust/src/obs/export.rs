@@ -1,0 +1,234 @@
+//! Exporters: JSONL trace (`--trace-out`), Prometheus text exposition
+//! v0.0.4 (`--metrics-out`), and the human summary table appended to
+//! `adaq serve` output.
+
+use std::path::Path;
+
+use super::metrics::Domain;
+use super::recorder::{Event, DRIVER_WORKER, NO_ID, NO_VIRTUAL};
+use super::span::STAGES;
+use super::RunTelemetry;
+use crate::io::Json;
+use crate::report::{markdown_table, Align};
+use crate::Result;
+
+/// Sentinel-aware signed view of a u64 event field (`u64::MAX` → `-1`).
+fn num64(v: u64, sentinel: u64) -> Json {
+    if v == sentinel {
+        Json::Num(-1.0)
+    } else {
+        Json::Num(v as f64)
+    }
+}
+
+/// One event as a JSON object — the JSONL trace schema
+/// (ARCHITECTURE.md §Observability): `kind` (string), `id`,
+/// `virtual_us`, `wall_us`, `worker`, `a`, `b` (numbers, `-1` for
+/// not-applicable sentinels), `det` (bool: whether the event is in the
+/// deterministic projection).
+pub fn event_to_json(e: &Event) -> Json {
+    Json::obj(vec![
+        ("kind", Json::Str(e.kind.name().to_string())),
+        ("id", num64(e.id, NO_ID)),
+        ("virtual_us", num64(e.virtual_us, NO_VIRTUAL)),
+        ("wall_us", Json::Num(e.wall_us as f64)),
+        ("worker", num64(u64::from(e.worker), u64::from(DRIVER_WORKER))),
+        ("a", Json::Num(e.a as f64)),
+        ("b", Json::Num(e.b as f64)),
+        ("det", Json::Bool(e.is_deterministic())),
+    ])
+}
+
+/// Write the merged trace as JSONL: one compact JSON object per line, in
+/// merge order (sorted by the deterministic key).
+pub fn write_trace_jsonl(path: impl AsRef<Path>, events: &[Event]) -> Result<()> {
+    let mut out = String::new();
+    for e in events {
+        out.push_str(&event_to_json(e).to_string());
+        out.push('\n');
+    }
+    std::fs::write(path, out)?;
+    Ok(())
+}
+
+fn prom_line(out: &mut String, name: &str, labels: &str, v: f64) {
+    if labels.is_empty() {
+        out.push_str(&format!("adaq_{name} {v}\n"));
+    } else {
+        out.push_str(&format!("adaq_{name}{{{labels}}} {v}\n"));
+    }
+}
+
+/// Render the run's telemetry in the Prometheus text exposition format
+/// (v0.0.4): registry counters/gauges as-is, histograms with cumulative
+/// `_bucket{le=…}` lines, series as summaries with nearest-rank
+/// `quantile="0.5"/"0.99"/"0.999"` lines, stage timing as labelled
+/// counters, and per-kind event counts.
+pub fn prometheus_text(t: &RunTelemetry) -> String {
+    let mut out = String::new();
+    for (name, _, v) in t.metrics.counters() {
+        out.push_str(&format!("# TYPE adaq_{name} counter\n"));
+        prom_line(&mut out, name, "", v as f64);
+    }
+    for (name, _, v) in t.metrics.gauges() {
+        out.push_str(&format!("# TYPE adaq_{name} gauge\n"));
+        prom_line(&mut out, name, "", v);
+    }
+    for (name, _, h) in t.metrics.hists() {
+        out.push_str(&format!("# TYPE adaq_{name} histogram\n"));
+        let mut cum = 0u64;
+        for (bound, c) in h.bounds().iter().zip(h.counts()) {
+            cum += c;
+            prom_line(&mut out, &format!("{name}_bucket"), &format!("le=\"{bound}\""), cum as f64);
+        }
+        prom_line(&mut out, &format!("{name}_bucket"), "le=\"+Inf\"", h.count() as f64);
+        prom_line(&mut out, &format!("{name}_sum"), "", h.sum() as f64);
+        prom_line(&mut out, &format!("{name}_count"), "", h.count() as f64);
+    }
+    for (name, _, values) in t.metrics.series() {
+        out.push_str(&format!("# TYPE adaq_{name} summary\n"));
+        if !values.is_empty() {
+            for q in [0.5, 0.99, 0.999] {
+                let v = t.metrics.series_percentile(name, q);
+                prom_line(&mut out, name, &format!("quantile=\"{q}\""), v);
+            }
+        }
+        prom_line(&mut out, &format!("{name}_sum"), "", values.iter().sum());
+        prom_line(&mut out, &format!("{name}_count"), "", values.len() as f64);
+    }
+    out.push_str("# TYPE adaq_stage_us counter\n");
+    for s in STAGES {
+        let labels = format!("stage=\"{}\"", s.name());
+        prom_line(&mut out, "stage_us", &labels, t.stages.total_us(s) as f64);
+    }
+    out.push_str("# TYPE adaq_stage_laps counter\n");
+    for s in STAGES {
+        let labels = format!("stage=\"{}\"", s.name());
+        prom_line(&mut out, "stage_laps", &labels, t.stages.laps(s) as f64);
+    }
+    out.push_str("# TYPE adaq_events counter\n");
+    for (kind, n) in t.kind_counts() {
+        prom_line(&mut out, "events", &format!("kind=\"{kind}\""), n as f64);
+    }
+    out.push_str("# TYPE adaq_events_dropped counter\n");
+    prom_line(&mut out, "events_dropped", "", t.dropped as f64);
+    out
+}
+
+/// The human telemetry summary appended to `adaq serve` output: stage
+/// time shares, per-kind event counts, and the key registry counters.
+pub fn summary_table(t: &RunTelemetry) -> String {
+    let mut rows: Vec<Vec<String>> = Vec::new();
+    let grand = t.stages.grand_total_us().max(1);
+    for s in STAGES {
+        let share = 100.0 * t.stages.total_us(s) as f64 / grand as f64;
+        rows.push(vec![
+            format!("stage {}", s.name()),
+            format!("{} µs", t.stages.total_us(s)),
+            format!("{share:.1}% of worker time, {} laps", t.stages.laps(s)),
+        ]);
+    }
+    for (kind, n) in t.kind_counts() {
+        rows.push(vec![format!("events {kind}"), n.to_string(), String::new()]);
+    }
+    if t.dropped > 0 {
+        rows.push(vec!["events dropped".into(), t.dropped.to_string(), "ring overflow".into()]);
+    }
+    for (name, domain, v) in t.metrics.counters() {
+        let tag = match domain {
+            Domain::Det => "deterministic",
+            Domain::Wall => "wall-clock",
+        };
+        rows.push(vec![name.to_string(), v.to_string(), tag.into()]);
+    }
+    markdown_table(
+        &["telemetry", "value", "notes"],
+        &[Align::Left, Align::Right, Align::Left],
+        &rows,
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::obs::metrics::Hist;
+    use crate::obs::recorder::EventKind;
+    use crate::obs::Stage;
+
+    fn ev(kind: EventKind, wall_us: u64, worker: u32, a: u64) -> Event {
+        Event { kind, id: 0, virtual_us: 0, wall_us, worker, a, b: 0 }
+    }
+
+    fn sample() -> RunTelemetry {
+        let mut t = RunTelemetry::default();
+        t.push_events(vec![
+            ev(EventKind::Enqueue, 3, DRIVER_WORKER, 0),
+            ev(EventKind::Complete, 90, 0, 4),
+        ]);
+        t.metrics.inc("requests_completed", Domain::Det, 1);
+        t.metrics.set_gauge("queue_high_water", Domain::Wall, 3.0);
+        t.metrics.put_hist("queue_depth", Domain::Wall, {
+            let mut h = Hist::new(&[0, 1, 2]);
+            h.observe(1);
+            h
+        });
+        t.metrics.extend_series("sojourn_ms", Domain::Wall, &[0.5, 1.5]);
+        t.stages.add(Stage::Forward, 80);
+        t
+    }
+
+    #[test]
+    fn trace_lines_round_trip_through_the_parser() {
+        let t = sample();
+        let mut text = String::new();
+        for e in &t.events {
+            text.push_str(&event_to_json(e).to_string());
+            text.push('\n');
+        }
+        for line in text.lines() {
+            let v = Json::parse(line).expect("every trace line is valid JSON");
+            for key in ["kind", "id", "virtual_us", "wall_us", "worker", "a", "b", "det"] {
+                assert!(matches!(&v, Json::Obj(m) if m.contains_key(key)), "missing {key}");
+            }
+        }
+    }
+
+    #[test]
+    fn sentinels_export_as_minus_one() {
+        let e = Event {
+            kind: EventKind::RungSwitch,
+            id: NO_ID,
+            virtual_us: 5,
+            wall_us: 9,
+            worker: DRIVER_WORKER,
+            a: 0,
+            b: 1,
+        };
+        let s = event_to_json(&e).to_string();
+        assert!(s.contains("\"id\":-1"), "{s}");
+        assert!(s.contains("\"worker\":-1"), "{s}");
+    }
+
+    #[test]
+    fn prometheus_exposition_is_line_formatted() {
+        let text = prometheus_text(&sample());
+        assert!(text.contains("# TYPE adaq_requests_completed counter"));
+        assert!(text.contains("adaq_requests_completed 1"));
+        assert!(text.contains("adaq_queue_depth_bucket{le=\"+Inf\"} 1"));
+        assert!(text.contains("adaq_sojourn_ms{quantile=\"0.99\"}"));
+        assert!(text.contains("adaq_stage_us{stage=\"forward\"} 80"));
+        for line in text.lines().filter(|l| !l.starts_with('#') && !l.is_empty()) {
+            let (name_part, value) = line.rsplit_once(' ').expect("name value");
+            assert!(name_part.starts_with("adaq_"), "bad metric name: {line}");
+            assert!(value.parse::<f64>().is_ok(), "bad value: {line}");
+        }
+    }
+
+    #[test]
+    fn summary_table_mentions_stages_and_counters() {
+        let table = summary_table(&sample());
+        assert!(table.contains("stage forward"));
+        assert!(table.contains("events complete"));
+        assert!(table.contains("requests_completed"));
+    }
+}

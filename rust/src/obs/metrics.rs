@@ -1,0 +1,272 @@
+//! Metrics registry: named counters, gauges, fixed-bucket histograms and
+//! raw-value series with snapshot-and-merge semantics.
+//!
+//! Every entry is tagged with a clock [`Domain`]: `Det` entries are pure
+//! functions of the run's inputs (request counts, per-rung served,
+//! planned sheds) and must merge to identical values at any `--workers`;
+//! `Wall` entries are measured (latencies, queue depths, throughput) and
+//! carry no stability contract. [`MetricsRegistry::det_snapshot`] renders
+//! only the `Det` half — the string the determinism tests compare
+//! byte-for-byte.
+
+use std::collections::BTreeMap;
+
+use crate::util::percentile_nearest_rank;
+
+/// Which clock domain a metric lives in (see module docs).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Domain {
+    /// Deterministic: invariant across worker count and wall time.
+    Det,
+    /// Measured: wall-clock dependent, no cross-run stability contract.
+    Wall,
+}
+
+/// Fixed-bucket histogram: `counts[i]` holds values `v ≤ bounds[i]`
+/// (exclusive of the previous bound); the final slot is the `+Inf`
+/// overflow bucket. `sum` accumulates raw values for mean recovery.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct Hist {
+    bounds: Vec<u64>,
+    counts: Vec<u64>,
+    sum: u64,
+}
+
+impl Hist {
+    /// An empty histogram over ascending `bounds` (plus implicit `+Inf`).
+    pub fn new(bounds: &[u64]) -> Hist {
+        debug_assert!(bounds.windows(2).all(|w| w[0] < w[1]), "bounds must ascend");
+        Hist { bounds: bounds.to_vec(), counts: vec![0; bounds.len() + 1], sum: 0 }
+    }
+
+    /// Adopt precomputed per-bucket counts (`counts.len()` must be
+    /// `bounds.len() + 1`) — the serve tallies already count occupancy
+    /// and depth by exact value.
+    pub fn from_counts(bounds: Vec<u64>, counts: Vec<u64>, sum: u64) -> Hist {
+        debug_assert_eq!(counts.len(), bounds.len() + 1);
+        Hist { bounds, counts, sum }
+    }
+
+    /// Count one value into its bucket.
+    pub fn observe(&mut self, v: u64) {
+        let i = self.bounds.iter().position(|&b| v <= b).unwrap_or(self.bounds.len());
+        self.counts[i] += 1;
+        self.sum += v;
+    }
+
+    /// Add another histogram's counts (bucket bounds must match — they
+    /// do by construction, every worker builds from the same config).
+    pub fn merge(&mut self, other: &Hist) {
+        debug_assert_eq!(self.bounds, other.bounds, "histogram bounds must match to merge");
+        for (c, o) in self.counts.iter_mut().zip(&other.counts) {
+            *c += o;
+        }
+        self.sum += other.sum;
+    }
+
+    /// The bucket upper bounds (without the implicit `+Inf`).
+    pub fn bounds(&self) -> &[u64] {
+        &self.bounds
+    }
+
+    /// Per-bucket counts (last slot = `+Inf` overflow).
+    pub fn counts(&self) -> &[u64] {
+        &self.counts
+    }
+
+    /// Total observations.
+    pub fn count(&self) -> u64 {
+        self.counts.iter().sum()
+    }
+
+    /// Sum of observed values.
+    pub fn sum(&self) -> u64 {
+        self.sum
+    }
+}
+
+/// Named metrics with merge semantics: counters add, gauges keep the
+/// max, histograms add bucket-wise, series concatenate. `BTreeMap`
+/// storage makes every iteration order (and therefore every rendering)
+/// independent of insertion order.
+#[derive(Clone, Debug, Default)]
+pub struct MetricsRegistry {
+    counters: BTreeMap<String, (Domain, u64)>,
+    gauges: BTreeMap<String, (Domain, f64)>,
+    hists: BTreeMap<String, (Domain, Hist)>,
+    series: BTreeMap<String, (Domain, Vec<f64>)>,
+}
+
+impl MetricsRegistry {
+    /// An empty registry.
+    pub fn new() -> MetricsRegistry {
+        MetricsRegistry::default()
+    }
+
+    /// Add `by` to counter `name` (created at 0 on first touch).
+    pub fn inc(&mut self, name: &str, domain: Domain, by: u64) {
+        self.counters.entry(name.to_string()).or_insert((domain, 0)).1 += by;
+    }
+
+    /// Set gauge `name`; merging keeps the maximum across workers.
+    pub fn set_gauge(&mut self, name: &str, domain: Domain, v: f64) {
+        let e = self.gauges.entry(name.to_string()).or_insert((domain, v));
+        e.1 = e.1.max(v);
+    }
+
+    /// Install a histogram under `name`, merging into any existing one.
+    pub fn put_hist(&mut self, name: &str, domain: Domain, h: Hist) {
+        match self.hists.entry(name.to_string()) {
+            std::collections::btree_map::Entry::Vacant(e) => {
+                e.insert((domain, h));
+            }
+            std::collections::btree_map::Entry::Occupied(mut e) => e.get_mut().1.merge(&h),
+        }
+    }
+
+    /// Append raw values to series `name` (percentiles computed at
+    /// export time through `util::percentile_nearest_rank`).
+    pub fn extend_series(&mut self, name: &str, domain: Domain, values: &[f64]) {
+        self.series
+            .entry(name.to_string())
+            .or_insert((domain, Vec::new()))
+            .1
+            .extend_from_slice(values);
+    }
+
+    /// Fold another registry in (counters add, gauges max, histograms
+    /// merge, series concatenate).
+    pub fn merge(&mut self, other: &MetricsRegistry) {
+        for (k, (d, v)) in &other.counters {
+            self.inc(k, *d, *v);
+        }
+        for (k, (d, v)) in &other.gauges {
+            self.set_gauge(k, *d, *v);
+        }
+        for (k, (d, h)) in &other.hists {
+            self.put_hist(k, *d, h.clone());
+        }
+        for (k, (d, v)) in &other.series {
+            self.extend_series(k, *d, v);
+        }
+    }
+
+    /// Counter value (0 when absent).
+    pub fn counter(&self, name: &str) -> u64 {
+        self.counters.get(name).map_or(0, |(_, v)| *v)
+    }
+
+    /// Gauge value, if set.
+    pub fn gauge(&self, name: &str) -> Option<f64> {
+        self.gauges.get(name).map(|(_, v)| *v)
+    }
+
+    /// Iterate counters as `(name, domain, value)` in name order.
+    pub fn counters(&self) -> impl Iterator<Item = (&str, Domain, u64)> {
+        self.counters.iter().map(|(k, (d, v))| (k.as_str(), *d, *v))
+    }
+
+    /// Iterate gauges as `(name, domain, value)` in name order.
+    pub fn gauges(&self) -> impl Iterator<Item = (&str, Domain, f64)> {
+        self.gauges.iter().map(|(k, (d, v))| (k.as_str(), *d, *v))
+    }
+
+    /// Iterate histograms as `(name, domain, hist)` in name order.
+    pub fn hists(&self) -> impl Iterator<Item = (&str, Domain, &Hist)> {
+        self.hists.iter().map(|(k, (d, h))| (k.as_str(), *d, h))
+    }
+
+    /// Iterate series as `(name, domain, values)` in name order.
+    pub fn series(&self) -> impl Iterator<Item = (&str, Domain, &[f64])> {
+        self.series.iter().map(|(k, (d, v))| (k.as_str(), *d, v.as_slice()))
+    }
+
+    /// Nearest-rank percentile of series `name` (`NaN` when absent or
+    /// empty). Sorts a copy; export-time only, never on the hot path.
+    pub fn series_percentile(&self, name: &str, p: f64) -> f64 {
+        match self.series.get(name) {
+            Some((_, v)) if !v.is_empty() => {
+                let mut sorted = v.clone();
+                sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+                percentile_nearest_rank(&sorted, p)
+            }
+            _ => f64::NAN,
+        }
+    }
+
+    /// Render the deterministic half only — counters, gauges, and
+    /// histograms tagged [`Domain::Det`], one line each in name order.
+    /// Byte-identical across worker counts for the same workload; the
+    /// determinism batteries compare this string directly.
+    pub fn det_snapshot(&self) -> String {
+        let mut out = String::new();
+        for (k, d, v) in self.counters() {
+            if d == Domain::Det {
+                out.push_str(&format!("counter {k} {v}\n"));
+            }
+        }
+        for (k, d, v) in self.gauges() {
+            if d == Domain::Det {
+                out.push_str(&format!("gauge {k} {v}\n"));
+            }
+        }
+        for (k, d, h) in self.hists() {
+            if d == Domain::Det {
+                out.push_str(&format!("hist {k} {:?} sum {}\n", h.counts(), h.sum()));
+            }
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn hist_buckets_and_merge() {
+        let mut a = Hist::new(&[10, 100]);
+        a.observe(5);
+        a.observe(10); // boundary is inclusive
+        a.observe(50);
+        a.observe(1000); // overflow
+        assert_eq!(a.counts(), &[2, 1, 1]);
+        assert_eq!(a.sum(), 1065);
+        let mut b = Hist::new(&[10, 100]);
+        b.observe(7);
+        a.merge(&b);
+        assert_eq!(a.counts(), &[3, 1, 1]);
+        assert_eq!(a.count(), 5);
+    }
+
+    #[test]
+    fn merge_semantics_per_kind() {
+        let mut a = MetricsRegistry::new();
+        a.inc("reqs", Domain::Det, 3);
+        a.set_gauge("depth_hw", Domain::Wall, 4.0);
+        a.extend_series("lat", Domain::Wall, &[1.0, 3.0]);
+        let mut b = MetricsRegistry::new();
+        b.inc("reqs", Domain::Det, 2);
+        b.set_gauge("depth_hw", Domain::Wall, 7.0);
+        b.extend_series("lat", Domain::Wall, &[2.0]);
+        a.merge(&b);
+        assert_eq!(a.counter("reqs"), 5);
+        assert_eq!(a.gauge("depth_hw"), Some(7.0));
+        assert_eq!(a.series_percentile("lat", 1.0), 3.0);
+        assert!(a.series_percentile("missing", 0.5).is_nan());
+    }
+
+    #[test]
+    fn det_snapshot_is_order_independent_and_wall_free() {
+        let mut a = MetricsRegistry::new();
+        a.inc("z_completed", Domain::Det, 10);
+        a.inc("a_offered", Domain::Det, 12);
+        a.inc("throughput_noise", Domain::Wall, 999);
+        let mut b = MetricsRegistry::new();
+        b.inc("a_offered", Domain::Det, 12);
+        b.inc("z_completed", Domain::Det, 10);
+        b.inc("throughput_noise", Domain::Wall, 5);
+        assert_eq!(a.det_snapshot(), b.det_snapshot());
+        assert!(!a.det_snapshot().contains("throughput_noise"));
+    }
+}

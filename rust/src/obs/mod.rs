@@ -1,0 +1,208 @@
+//! Observability: flight recorder, metrics registry, stage spans, and
+//! exporters for the serving and calibration tiers.
+//!
+//! Dependency-light by construction (std only): events are fixed-size
+//! [`Event`] records in preallocated per-worker [`EventRing`]s, metrics
+//! live in a [`MetricsRegistry`] with snapshot-and-merge semantics, and
+//! stage timing is a pair of arrays per worker. Recording is **on by
+//! default** and costs one atomic load per event when disabled.
+//!
+//! ## Clock domains
+//!
+//! The engine's determinism contract (predictions, shed sets, switch
+//! traces bitwise invariant across `--workers`) extends to telemetry by
+//! splitting every timestamp into two explicit domains:
+//!
+//! * **virtual** — [`ObsClock::virtual_us`]: the admission ledger's
+//!   planned arrival time (open-loop), or the request id (closed-loop).
+//!   A pure function of the run's inputs.
+//! * **wall** — [`ObsClock::wall_us`]: measured µs since the engine
+//!   epoch. Never deterministic.
+//!
+//! Deterministic-projection events (`enqueue`, `admit`, planned `shed`,
+//! `rung_switch`, `fault_absorbed`, `complete`) carry meaningful
+//! `virtual_us` and deterministic payloads; the merged trace filtered to
+//! that projection ([`RunTelemetry::det_projection`]) and the `Det`-half
+//! metrics snapshot ([`RunTelemetry::det_snapshot`]) are byte-identical
+//! at any worker count. Caveat: `--live-shed` makes completion-derived
+//! metrics depend on live queue timing, so live sheds are stamped into
+//! the wall domain (`shed` with `b == 2`) and excluded.
+//!
+//! Exporters: [`write_trace_jsonl`] (`--trace-out`), [`prometheus_text`]
+//! (`--metrics-out`), [`summary_table`] (appended to `adaq serve`
+//! output). Schema details: ARCHITECTURE.md §Observability.
+
+pub mod export;
+pub mod metrics;
+pub mod recorder;
+pub mod span;
+
+use std::collections::BTreeMap;
+use std::sync::Arc;
+use std::time::Instant;
+
+pub use export::{event_to_json, prometheus_text, summary_table, write_trace_jsonl};
+pub use metrics::{Domain, Hist, MetricsRegistry};
+pub use recorder::{
+    det_projection, enabled, hub, merge_events, set_enabled, Event, EventKind, EventRing,
+    HubSnapshot, ObsHub, DEFAULT_RING_CAP, DRIVER_WORKER, NO_ID, NO_VIRTUAL,
+};
+pub use span::{Stage, StageAcc, StageClock, STAGES};
+
+/// The virtual-time source backing [`ObsClock::virtual_us`].
+#[derive(Clone, Debug)]
+enum VirtualClock {
+    /// Closed loop: requests are generated back-to-back; the id itself
+    /// is the deterministic order (and "time").
+    Logical,
+    /// Open loop: the admission plan's arrival ledger, indexed by id.
+    Ledger(Arc<Vec<u64>>),
+}
+
+/// The engine's two-domain clock: one wall epoch (`Instant`) plus a
+/// virtual-time source. Cloned freely (the ledger is shared by `Arc`);
+/// every worker and the driver stamp events through the same epoch.
+#[derive(Clone, Debug)]
+pub struct ObsClock {
+    epoch: Instant,
+    virt: VirtualClock,
+}
+
+impl ObsClock {
+    /// A closed-loop clock: epoch = now, virtual time = request id.
+    pub fn logical() -> ObsClock {
+        ObsClock { epoch: Instant::now(), virt: VirtualClock::Logical }
+    }
+
+    /// The wall epoch (open-loop generators pace arrivals against it).
+    pub fn epoch(&self) -> Instant {
+        self.epoch
+    }
+
+    /// Measured µs since the epoch. Wall domain.
+    pub fn wall_us(&self) -> u64 {
+        self.epoch.elapsed().as_micros() as u64
+    }
+
+    /// Deterministic timestamp for request `id` (see module docs).
+    pub fn virtual_us(&self, id: usize) -> u64 {
+        match &self.virt {
+            VirtualClock::Logical => id as u64,
+            VirtualClock::Ledger(arrivals) => arrivals.get(id).copied().unwrap_or(id as u64),
+        }
+    }
+
+    /// Switch to open-loop virtual time: the admission plan's arrival
+    /// ledger (µs offsets, indexed by request id).
+    pub fn set_ledger(&mut self, arrivals_us: Arc<Vec<u64>>) {
+        self.virt = VirtualClock::Ledger(arrivals_us);
+    }
+}
+
+/// Per-run observability state created at engine start: the driver
+/// thread's event ring and the hub-counter snapshot that turns global
+/// totals into this run's deltas at merge time.
+#[derive(Debug)]
+pub struct ObsSeed {
+    /// Ring for events the request generator / admission controller
+    /// records (enqueue, admit, shed).
+    pub driver: EventRing,
+    /// Hub counters at engine start (`merge_report` subtracts).
+    pub hub_start: HubSnapshot,
+}
+
+impl Default for ObsSeed {
+    fn default() -> Self {
+        ObsSeed { driver: EventRing::default(), hub_start: HubSnapshot::capture() }
+    }
+}
+
+/// A run's merged telemetry: the event trace (sorted by the
+/// deterministic merge key), ring-overflow count, summed stage timing,
+/// and the merged metrics registry. Embedded in `ServeReport`.
+#[derive(Clone, Debug, Default)]
+pub struct RunTelemetry {
+    /// Merged trace, sorted by `(virtual_us, id, kind, a, b)`.
+    pub events: Vec<Event>,
+    /// Events lost to ring overflow (0 ⇒ the trace is complete and the
+    /// deterministic projection is bitwise stable).
+    pub dropped: u64,
+    /// Stage timing summed across workers. Wall domain.
+    pub stages: StageAcc,
+    /// Merged named metrics.
+    pub metrics: MetricsRegistry,
+}
+
+impl RunTelemetry {
+    /// Add events and restore merge order.
+    pub fn push_events(&mut self, events: Vec<Event>) {
+        let existing = std::mem::take(&mut self.events);
+        self.events = merge_events(vec![existing, events]);
+    }
+
+    /// The deterministic projection of the trace as JSONL (see
+    /// [`det_projection`]): byte-identical at any `--workers`.
+    pub fn det_projection(&self) -> String {
+        det_projection(&self.events)
+    }
+
+    /// The deterministic half of the metrics registry, rendered: the
+    /// string the determinism batteries compare byte-for-byte.
+    pub fn det_snapshot(&self) -> String {
+        self.metrics.det_snapshot()
+    }
+
+    /// Event counts per kind (name order).
+    pub fn kind_counts(&self) -> BTreeMap<&'static str, u64> {
+        let mut counts = BTreeMap::new();
+        for e in &self.events {
+            *counts.entry(e.kind.name()).or_insert(0) += 1;
+        }
+        counts
+    }
+
+    /// The human summary table (see [`summary_table`]).
+    pub fn summary(&self) -> String {
+        summary_table(self)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn logical_clock_virtual_time_is_the_id() {
+        let c = ObsClock::logical();
+        assert_eq!(c.virtual_us(0), 0);
+        assert_eq!(c.virtual_us(17), 17);
+    }
+
+    #[test]
+    fn ledger_clock_reads_the_admission_plan() {
+        let mut c = ObsClock::logical();
+        c.set_ledger(Arc::new(vec![100, 250, 400]));
+        assert_eq!(c.virtual_us(1), 250);
+        // out-of-range ids fall back to the logical clock
+        assert_eq!(c.virtual_us(9), 9);
+    }
+
+    #[test]
+    fn telemetry_push_events_keeps_merge_order() {
+        let mk = |id: u64, v: u64| Event {
+            kind: EventKind::Complete,
+            id,
+            virtual_us: v,
+            wall_us: 0,
+            worker: 0,
+            a: 0,
+            b: 0,
+        };
+        let mut t = RunTelemetry::default();
+        t.push_events(vec![mk(5, 50)]);
+        t.push_events(vec![mk(1, 10), mk(9, 90)]);
+        let ids: Vec<u64> = t.events.iter().map(|e| e.id).collect();
+        assert_eq!(ids, vec![1, 5, 9]);
+        assert_eq!(t.kind_counts()["complete"], 3);
+    }
+}

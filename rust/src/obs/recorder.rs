@@ -1,0 +1,488 @@
+//! Flight recorder: bounded per-worker rings of typed [`Event`]s plus the
+//! process-global [`ObsHub`] of always-on counters.
+//!
+//! Every event carries **two timestamps** (ARCHITECTURE.md §Observability):
+//!
+//! * `virtual_us` — the deterministic clock: the admission ledger's planned
+//!   arrival time on the open-loop path, the request id itself on the
+//!   closed-loop path, and `NO_VIRTUAL` for events that have no
+//!   deterministic time (hub side events).
+//! * `wall_us` — microseconds since the engine epoch, measured. Never
+//!   deterministic; excluded from every bitwise-stability contract.
+//!
+//! Recording costs one atomic load (the global enable flag) plus a bounds
+//! check and a 48-byte store into a preallocated buffer — nothing on the
+//! hot path allocates.
+
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Mutex, OnceLock};
+use std::time::Instant;
+
+/// Sentinel id for events not tied to one request (rung switches, requant
+/// builds). Exported as `-1` in the JSONL trace.
+pub const NO_ID: u64 = u64::MAX;
+
+/// Sentinel `virtual_us` for events with no deterministic timestamp.
+/// Exported as `-1`; sorts such events after every timestamped one.
+pub const NO_VIRTUAL: u64 = u64::MAX;
+
+/// Worker index used by events the driver thread (request generator /
+/// admission controller) records. Exported as `-1`.
+pub const DRIVER_WORKER: u32 = u32::MAX;
+
+/// Default per-ring capacity (events). At ~48 bytes per event a full ring
+/// is under 1 MiB per worker.
+pub const DEFAULT_RING_CAP: usize = 16_384;
+
+/// Capacity of the hub's shared side ring (low-frequency events recorded
+/// outside the serve workers: requant builds, calibration probes).
+pub const SIDE_RING_CAP: usize = 4_096;
+
+/// What happened. Declaration order is the tiebreak order when two events
+/// share a `(virtual_us, id)` key, so it follows request lifecycle:
+/// enqueue → admit/shed → batch → forward → fault/complete.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord)]
+pub enum EventKind {
+    /// A request entered the system. `a` = dataset index.
+    Enqueue,
+    /// The admission controller accepted the request.
+    Admit,
+    /// The request was shed. `b` = reason: 0 planned reject, 1 planned
+    /// drop-oldest eviction, 2 live shed (wall-clock domain).
+    Shed,
+    /// A worker popped a batch. `id` = first request id, `a` = batch
+    /// size, `b` = queue depth left behind.
+    BatchForm,
+    /// A forward group starts. `id` = first request id, `a` = group
+    /// size, `b` = rung index.
+    ForwardStart,
+    /// A forward group finished. `id` = first request id, `a` = span µs
+    /// (includes any injected stall), `b` = rung index.
+    ForwardEnd,
+    /// A quantized weight set was built. `a` = build µs, `b` = 1 for an
+    /// int8 encode, 0 for f32 fake-quant.
+    Requant,
+    /// The degradation controller switched rungs. `virtual_us` = switch
+    /// time on the virtual clock, `a` = from rung, `b` = to rung.
+    RungSwitch,
+    /// An injected fault was absorbed as a per-request error.
+    /// `a` = fault class: 0 worker panic, 1 poison pill.
+    FaultAbsorbed,
+    /// A request completed. `a` = predicted class, `b` = rung index.
+    Complete,
+    /// A calibration/sweep job ran on the [`crate::coordinator::JobPool`].
+    /// `id` = job index, `a` = span µs.
+    Probe,
+}
+
+impl EventKind {
+    /// Stable snake_case name used in the JSONL trace schema.
+    pub fn name(self) -> &'static str {
+        match self {
+            EventKind::Enqueue => "enqueue",
+            EventKind::Admit => "admit",
+            EventKind::Shed => "shed",
+            EventKind::BatchForm => "batch_form",
+            EventKind::ForwardStart => "forward_start",
+            EventKind::ForwardEnd => "forward_end",
+            EventKind::Requant => "requant",
+            EventKind::RungSwitch => "rung_switch",
+            EventKind::FaultAbsorbed => "fault_absorbed",
+            EventKind::Complete => "complete",
+            EventKind::Probe => "probe",
+        }
+    }
+}
+
+/// One recorded event. `Copy` and fixed-size so rings preallocate.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Event {
+    /// What happened.
+    pub kind: EventKind,
+    /// Request id, or [`NO_ID`].
+    pub id: u64,
+    /// Deterministic timestamp (see module docs), or [`NO_VIRTUAL`].
+    pub virtual_us: u64,
+    /// Measured µs since the engine epoch. Wall-clock domain, always.
+    pub wall_us: u64,
+    /// Recording worker index, or [`DRIVER_WORKER`].
+    pub worker: u32,
+    /// Kind-specific payload (see [`EventKind`]).
+    pub a: u64,
+    /// Kind-specific payload (see [`EventKind`]).
+    pub b: u64,
+}
+
+impl Event {
+    /// Whether every field of the **deterministic projection**
+    /// (`kind`, `id`, `virtual_us`, `a`, `b`) is a pure function of the
+    /// run's inputs — invariant across `--workers`, batching, and wall
+    /// time. Live sheds (`Shed` with `b == 2`) are excluded: they depend
+    /// on real queue timing.
+    pub fn is_deterministic(&self) -> bool {
+        match self.kind {
+            EventKind::Enqueue
+            | EventKind::Admit
+            | EventKind::RungSwitch
+            | EventKind::FaultAbsorbed
+            | EventKind::Complete => true,
+            EventKind::Shed => self.b != 2,
+            _ => false,
+        }
+    }
+
+    /// The merge sort key: deterministic fields only, so the relative
+    /// order of deterministic events never depends on wall time.
+    fn key(&self) -> (u64, u64, EventKind, u64, u64) {
+        (self.virtual_us, self.id, self.kind, self.a, self.b)
+    }
+}
+
+/// Bounded, preallocated event buffer owned by one thread (one serve
+/// worker, or the driver). Capacity is fixed up front; once full, further
+/// events are counted in `dropped` instead of recorded, so the trace
+/// keeps a deterministic *prefix* under overflow (the bitwise-stability
+/// guarantee holds whenever `dropped == 0`).
+#[derive(Clone, Debug)]
+pub struct EventRing {
+    buf: Vec<Event>,
+    cap: usize,
+    dropped: u64,
+}
+
+impl EventRing {
+    /// A ring holding up to `cap` events (allocated now, never after).
+    pub fn new(cap: usize) -> EventRing {
+        EventRing { buf: Vec::with_capacity(cap), cap, dropped: 0 }
+    }
+
+    /// Record one event. A no-op (one atomic load) when observability is
+    /// globally disabled; counts instead of storing once full.
+    #[inline]
+    pub fn record(&mut self, ev: Event) {
+        if !enabled() {
+            return;
+        }
+        if self.buf.len() < self.cap {
+            self.buf.push(ev);
+        } else {
+            self.dropped += 1;
+        }
+    }
+
+    /// Events recorded so far, in insertion order.
+    pub fn events(&self) -> &[Event] {
+        &self.buf
+    }
+
+    /// Events that did not fit.
+    pub fn dropped(&self) -> u64 {
+        self.dropped
+    }
+
+    /// Consume the ring into its event list + drop count.
+    pub fn into_parts(self) -> (Vec<Event>, u64) {
+        (self.buf, self.dropped)
+    }
+}
+
+impl Default for EventRing {
+    fn default() -> Self {
+        EventRing::new(DEFAULT_RING_CAP)
+    }
+}
+
+/// Merge per-thread event lists into one trace, sorted by the
+/// deterministic key `(virtual_us, id, kind, a, b)`. The sort never reads
+/// `wall_us` or `worker`, so the merged order of deterministic events is
+/// bitwise identical at any worker count.
+pub fn merge_events(parts: Vec<Vec<Event>>) -> Vec<Event> {
+    let mut all: Vec<Event> = parts.into_iter().flatten().collect();
+    all.sort_by_key(|e| e.key());
+    all
+}
+
+/// Render the deterministic projection of a merged trace: one compact
+/// JSON line per deterministic event, deterministic fields only. Two runs
+/// of the same workload agree byte-for-byte on this string regardless of
+/// `--workers` (the contract `tests/obs_trace.rs` pins).
+pub fn det_projection(events: &[Event]) -> String {
+    let mut out = String::new();
+    for e in events.iter().filter(|e| e.is_deterministic()) {
+        out.push_str(&format!(
+            "{{\"kind\":\"{}\",\"id\":{},\"virtual_us\":{},\"a\":{},\"b\":{}}}\n",
+            e.kind.name(),
+            e.id,
+            e.virtual_us,
+            e.a,
+            e.b
+        ));
+    }
+    out
+}
+
+/// Process-global observability hub: the master enable flag, always-on
+/// counters incremented from the runtime/coordinator tiers (backend
+/// forwards, requant builds, `EvalCache` and `JobPool` accounting), and a
+/// small shared ring for low-frequency side events. Everything here is in
+/// the **wall-clock domain**: counters are process-global (concurrent
+/// runs in one process — e.g. the test harness — interleave), so runs
+/// snapshot the hub at start and report deltas.
+pub struct ObsHub {
+    enabled: AtomicBool,
+    epoch: Instant,
+    gemm_forwards: AtomicU64,
+    requant_builds: AtomicU64,
+    requant_us: AtomicU64,
+    int8_encodes: AtomicU64,
+    evalcache_hits: AtomicU64,
+    evalcache_misses: AtomicU64,
+    pool_runs: AtomicU64,
+    pool_jobs: AtomicU64,
+    pool_idle_workers: AtomicU64,
+    pool_probe_us: AtomicU64,
+    side: Mutex<EventRing>,
+}
+
+static HUB: OnceLock<ObsHub> = OnceLock::new();
+
+/// The process-global hub (created on first use; enabled by default).
+pub fn hub() -> &'static ObsHub {
+    HUB.get_or_init(|| ObsHub {
+        enabled: AtomicBool::new(true),
+        epoch: Instant::now(),
+        gemm_forwards: AtomicU64::new(0),
+        requant_builds: AtomicU64::new(0),
+        requant_us: AtomicU64::new(0),
+        int8_encodes: AtomicU64::new(0),
+        evalcache_hits: AtomicU64::new(0),
+        evalcache_misses: AtomicU64::new(0),
+        pool_runs: AtomicU64::new(0),
+        pool_jobs: AtomicU64::new(0),
+        pool_idle_workers: AtomicU64::new(0),
+        pool_probe_us: AtomicU64::new(0),
+        side: Mutex::new(EventRing::new(SIDE_RING_CAP)),
+    })
+}
+
+/// Whether recording is on (the one atomic every record pays).
+#[inline]
+pub fn enabled() -> bool {
+    hub().enabled.load(Ordering::Relaxed)
+}
+
+/// Globally enable/disable recording (the `obs_overhead` bench's off leg;
+/// recording is on by default).
+pub fn set_enabled(on: bool) {
+    hub().enabled.store(on, Ordering::Relaxed);
+}
+
+impl ObsHub {
+    /// Count backend forward passes (`n` = batches executed).
+    pub fn note_forwards(&self, n: u64) {
+        if enabled() {
+            self.gemm_forwards.fetch_add(n, Ordering::Relaxed);
+        }
+    }
+
+    /// Count one quantized-weight-set build taking `us` µs; `int8` marks
+    /// the integer encode path. Also records a `Requant` side event.
+    pub fn note_requant(&self, us: u64, int8: bool) {
+        if !enabled() {
+            return;
+        }
+        self.requant_builds.fetch_add(1, Ordering::Relaxed);
+        self.requant_us.fetch_add(us, Ordering::Relaxed);
+        if int8 {
+            self.int8_encodes.fetch_add(1, Ordering::Relaxed);
+        }
+        self.side_event(EventKind::Requant, NO_ID, us, u64::from(int8));
+    }
+
+    /// Count one `EvalCache` lookup outcome.
+    pub fn note_evalcache(&self, hit: bool) {
+        if !enabled() {
+            return;
+        }
+        let ctr = if hit { &self.evalcache_hits } else { &self.evalcache_misses };
+        ctr.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Account one `JobPool::run`: how many jobs it dispatched, how many
+    /// spawned workers never got a job (idle), and the summed per-job
+    /// probe time.
+    pub fn note_pool_run(&self, jobs: u64, idle_workers: u64, probe_us: u64) {
+        if !enabled() {
+            return;
+        }
+        self.pool_runs.fetch_add(1, Ordering::Relaxed);
+        self.pool_jobs.fetch_add(jobs, Ordering::Relaxed);
+        self.pool_idle_workers.fetch_add(idle_workers, Ordering::Relaxed);
+        self.pool_probe_us.fetch_add(probe_us, Ordering::Relaxed);
+    }
+
+    /// Record a low-frequency event into the shared side ring, stamped
+    /// with the hub epoch (wall-clock domain, no deterministic time).
+    pub fn side_event(&self, kind: EventKind, id: u64, a: u64, b: u64) {
+        if !enabled() {
+            return;
+        }
+        let wall_us = self.epoch.elapsed().as_micros() as u64;
+        self.side.lock().unwrap().record(Event {
+            kind,
+            id,
+            virtual_us: NO_VIRTUAL,
+            wall_us,
+            worker: DRIVER_WORKER,
+            a,
+            b,
+        });
+    }
+
+    /// Take (and clear) the side ring's contents: `(events, dropped)`.
+    /// Concurrent runs race for side events; deterministic projections
+    /// are unaffected (side-event kinds are all wall-domain).
+    pub fn drain_side(&self) -> (Vec<Event>, u64) {
+        let mut ring = self.side.lock().unwrap();
+        std::mem::replace(&mut *ring, EventRing::new(SIDE_RING_CAP)).into_parts()
+    }
+}
+
+/// Point-in-time copy of the hub counters. Runs capture one at start and
+/// subtract at report time, turning process-global totals into per-run
+/// deltas (approximate under concurrent runs — wall domain by contract).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct HubSnapshot {
+    /// Backend forward passes (batches) executed.
+    pub gemm_forwards: u64,
+    /// Quantized weight sets built.
+    pub requant_builds: u64,
+    /// Total µs spent building quantized weight sets.
+    pub requant_us: u64,
+    /// Int8 weight-set encodes (subset of `requant_builds`).
+    pub int8_encodes: u64,
+    /// `EvalCache` lookups served from memory.
+    pub evalcache_hits: u64,
+    /// `EvalCache` lookups that cost a backend evaluation.
+    pub evalcache_misses: u64,
+    /// `JobPool::run` invocations.
+    pub pool_runs: u64,
+    /// Jobs dispatched across all pool runs.
+    pub pool_jobs: u64,
+    /// Spawned pool workers that never received a job.
+    pub pool_idle_workers: u64,
+    /// Summed per-job probe µs across all pool runs.
+    pub pool_probe_us: u64,
+}
+
+impl HubSnapshot {
+    /// Read every hub counter now.
+    pub fn capture() -> HubSnapshot {
+        let h = hub();
+        HubSnapshot {
+            gemm_forwards: h.gemm_forwards.load(Ordering::Relaxed),
+            requant_builds: h.requant_builds.load(Ordering::Relaxed),
+            requant_us: h.requant_us.load(Ordering::Relaxed),
+            int8_encodes: h.int8_encodes.load(Ordering::Relaxed),
+            evalcache_hits: h.evalcache_hits.load(Ordering::Relaxed),
+            evalcache_misses: h.evalcache_misses.load(Ordering::Relaxed),
+            pool_runs: h.pool_runs.load(Ordering::Relaxed),
+            pool_jobs: h.pool_jobs.load(Ordering::Relaxed),
+            pool_idle_workers: h.pool_idle_workers.load(Ordering::Relaxed),
+            pool_probe_us: h.pool_probe_us.load(Ordering::Relaxed),
+        }
+    }
+
+    /// Counter growth since `earlier` (saturating, field by field).
+    pub fn since(&self, earlier: &HubSnapshot) -> HubSnapshot {
+        HubSnapshot {
+            gemm_forwards: self.gemm_forwards.saturating_sub(earlier.gemm_forwards),
+            requant_builds: self.requant_builds.saturating_sub(earlier.requant_builds),
+            requant_us: self.requant_us.saturating_sub(earlier.requant_us),
+            int8_encodes: self.int8_encodes.saturating_sub(earlier.int8_encodes),
+            evalcache_hits: self.evalcache_hits.saturating_sub(earlier.evalcache_hits),
+            evalcache_misses: self.evalcache_misses.saturating_sub(earlier.evalcache_misses),
+            pool_runs: self.pool_runs.saturating_sub(earlier.pool_runs),
+            pool_jobs: self.pool_jobs.saturating_sub(earlier.pool_jobs),
+            pool_idle_workers: self.pool_idle_workers.saturating_sub(earlier.pool_idle_workers),
+            pool_probe_us: self.pool_probe_us.saturating_sub(earlier.pool_probe_us),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ev(kind: EventKind, id: u64, virtual_us: u64, a: u64, b: u64) -> Event {
+        Event { kind, id, virtual_us, wall_us: 999, worker: 0, a, b }
+    }
+
+    #[test]
+    fn ring_bounds_and_counts_drops() {
+        let mut r = EventRing::new(2);
+        for i in 0..5 {
+            r.record(ev(EventKind::Enqueue, i, i, 0, 0));
+        }
+        assert_eq!(r.events().len(), 2);
+        assert_eq!(r.dropped(), 3);
+        // the kept prefix is the first two events, in insertion order
+        assert_eq!(r.events()[0].id, 0);
+        assert_eq!(r.events()[1].id, 1);
+    }
+
+    #[test]
+    fn merge_orders_by_deterministic_key_only() {
+        // same events split across two "workers" with different wall
+        // stamps must merge into the same order
+        let a = vec![ev(EventKind::Complete, 3, 30, 1, 0), ev(EventKind::Enqueue, 1, 10, 0, 0)];
+        let b = vec![ev(EventKind::Enqueue, 0, 5, 0, 0), ev(EventKind::Admit, 1, 10, 0, 0)];
+        let merged = merge_events(vec![a.clone(), b.clone()]);
+        let swapped = merge_events(vec![b, a]);
+        assert_eq!(merged, swapped);
+        let ids: Vec<u64> = merged.iter().map(|e| e.id).collect();
+        assert_eq!(ids, vec![0, 1, 1, 3]);
+        // same (virtual_us, id): Enqueue sorts before Admit (lifecycle order)
+        assert_eq!(merged[1].kind, EventKind::Enqueue);
+        assert_eq!(merged[2].kind, EventKind::Admit);
+    }
+
+    #[test]
+    fn det_projection_excludes_wall_domain_events() {
+        let events = vec![
+            ev(EventKind::Enqueue, 0, 0, 7, 0),
+            ev(EventKind::BatchForm, 0, 0, 4, 2),
+            ev(EventKind::Shed, 1, 1, 0, 2), // live shed: wall domain
+            ev(EventKind::Shed, 2, 2, 0, 0), // planned shed: deterministic
+            ev(EventKind::Complete, 0, 0, 3, 1),
+        ];
+        let proj = det_projection(&events);
+        assert_eq!(proj.lines().count(), 3);
+        assert!(proj.contains("\"kind\":\"enqueue\""));
+        assert!(proj.contains("\"kind\":\"complete\""));
+        assert!(!proj.contains("batch_form"));
+        assert!(!proj.contains("\"id\":1"), "live shed must be excluded");
+        assert!(proj.contains("\"id\":2"), "planned shed must be included");
+    }
+
+    #[test]
+    fn hub_snapshot_deltas() {
+        let before = HubSnapshot::capture();
+        hub().note_forwards(3);
+        hub().note_evalcache(true);
+        let delta = HubSnapshot::capture().since(&before);
+        assert!(delta.gemm_forwards >= 3);
+        assert!(delta.evalcache_hits >= 1);
+    }
+
+    #[test]
+    fn disabled_recording_is_a_noop() {
+        // note: tests share the process-global flag; restore it promptly
+        set_enabled(false);
+        let mut r = EventRing::new(4);
+        r.record(ev(EventKind::Enqueue, 0, 0, 0, 0));
+        set_enabled(true);
+        assert!(r.events().is_empty());
+        assert_eq!(r.dropped(), 0);
+    }
+}

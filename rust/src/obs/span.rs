@@ -1,0 +1,142 @@
+//! Span-tagged stage timing for the serve worker loop.
+//!
+//! Each worker's iteration is split into four stages —
+//! `queue_wait → batch_assembly → forward → writeback` — and a
+//! [`StageClock`] attributes the wall time between laps to the stage
+//! that just finished. Accumulators are plain per-worker arrays (no
+//! sharing, no allocation); `merge_report` sums them across workers.
+//! All stage timing is wall-clock domain.
+
+use std::time::Instant;
+
+/// The serve worker's pipeline stages, in execution order.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Stage {
+    /// Blocked in `RequestQueue::pop_batch` waiting for work.
+    QueueWait,
+    /// Gathering inputs: group split, image fill, tensor build.
+    BatchAssembly,
+    /// The quantized forward pass (includes any injected stall).
+    Forward,
+    /// Argmax, tallies, and event recording after the forward.
+    Writeback,
+}
+
+/// Every stage, in order (for iteration and display).
+pub const STAGES: [Stage; 4] =
+    [Stage::QueueWait, Stage::BatchAssembly, Stage::Forward, Stage::Writeback];
+
+impl Stage {
+    /// Stable snake_case name (metric label).
+    pub fn name(self) -> &'static str {
+        match self {
+            Stage::QueueWait => "queue_wait",
+            Stage::BatchAssembly => "batch_assembly",
+            Stage::Forward => "forward",
+            Stage::Writeback => "writeback",
+        }
+    }
+
+    fn index(self) -> usize {
+        match self {
+            Stage::QueueWait => 0,
+            Stage::BatchAssembly => 1,
+            Stage::Forward => 2,
+            Stage::Writeback => 3,
+        }
+    }
+}
+
+/// Per-worker accumulated stage time: total µs and lap count per stage.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct StageAcc {
+    total_us: [u64; 4],
+    laps: [u64; 4],
+}
+
+impl StageAcc {
+    /// Attribute `us` microseconds to `stage`.
+    pub fn add(&mut self, stage: Stage, us: u64) {
+        self.total_us[stage.index()] += us;
+        self.laps[stage.index()] += 1;
+    }
+
+    /// Sum another worker's accumulator in.
+    pub fn merge(&mut self, other: &StageAcc) {
+        for i in 0..4 {
+            self.total_us[i] += other.total_us[i];
+            self.laps[i] += other.laps[i];
+        }
+    }
+
+    /// Total µs attributed to `stage`.
+    pub fn total_us(&self, stage: Stage) -> u64 {
+        self.total_us[stage.index()]
+    }
+
+    /// Number of laps attributed to `stage`.
+    pub fn laps(&self, stage: Stage) -> u64 {
+        self.laps[stage.index()]
+    }
+
+    /// Grand total µs across all stages.
+    pub fn grand_total_us(&self) -> u64 {
+        self.total_us.iter().sum()
+    }
+}
+
+/// Lap timer: [`StageClock::lap`] charges the time since the previous
+/// lap (or construction) to the stage that just completed, then rearms.
+#[derive(Debug)]
+pub struct StageClock {
+    last: Instant,
+}
+
+impl StageClock {
+    /// Start timing now.
+    pub fn start() -> StageClock {
+        StageClock { last: Instant::now() }
+    }
+
+    /// Charge the elapsed time to `stage` and rearm for the next lap.
+    pub fn lap(&mut self, acc: &mut StageAcc, stage: Stage) {
+        let now = Instant::now();
+        acc.add(stage, now.duration_since(self.last).as_micros() as u64);
+        self.last = now;
+    }
+
+    /// Rearm without charging anything (recorder-off fast path keeps the
+    /// clock honest so a later lap doesn't inherit skipped time).
+    pub fn reset(&mut self) {
+        self.last = Instant::now();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn laps_accumulate_and_merge() {
+        let mut acc = StageAcc::default();
+        let mut clock = StageClock::start();
+        clock.lap(&mut acc, Stage::QueueWait);
+        clock.lap(&mut acc, Stage::Forward);
+        clock.lap(&mut acc, Stage::Forward);
+        assert_eq!(acc.laps(Stage::QueueWait), 1);
+        assert_eq!(acc.laps(Stage::Forward), 2);
+        assert_eq!(acc.laps(Stage::Writeback), 0);
+        let mut other = StageAcc::default();
+        other.add(Stage::Writeback, 42);
+        acc.merge(&other);
+        assert_eq!(acc.laps(Stage::Writeback), 1);
+        assert_eq!(acc.total_us(Stage::Writeback), 42);
+        assert!(acc.grand_total_us() >= 42);
+    }
+
+    #[test]
+    fn stage_names_are_stable() {
+        let names: Vec<&str> = STAGES.iter().map(|s| s.name()).collect();
+        assert_eq!(names, ["queue_wait", "batch_assembly", "forward", "writeback"]);
+    }
+}

@@ -49,9 +49,10 @@ use std::sync::{Arc, Mutex};
 use crate::dataset::Dataset;
 use crate::model::{Manifest, ModelArtifacts};
 use crate::nn::{GraphPlan, QuantWeight};
+use crate::obs::hub;
 use crate::quant::fake_quant;
 use crate::tensor::{self, Tensor};
-use crate::util::Scratch;
+use crate::util::{Scratch, Timer};
 use crate::{Error, Result};
 
 use super::Backend;
@@ -257,6 +258,7 @@ impl CpuBackend {
     fn forward_batches(&self, eff: &[&Tensor]) -> Result<Vec<Vec<f32>>> {
         let nb = self.batches.len();
         self.execs.fetch_add(nb as u64, Ordering::Relaxed);
+        hub().note_forwards(nb as u64);
         let outer = self.outer_jobs.load(Ordering::Relaxed).max(1);
         let threads = (self.threads / outer).max(1).min(nb);
         if threads <= 1 {
@@ -318,11 +320,15 @@ impl CpuBackend {
     /// Host-side fake-quant of every weighted layer at its bit-width —
     /// the same quantizer the Pallas `qforward` kernel applies on-device.
     fn quantize_params(&self, bits: &[f32]) -> Vec<(usize, Tensor)> {
-        self.qparam
+        let t = Timer::start();
+        let q: Vec<(usize, Tensor)> = self
+            .qparam
             .iter()
             .zip(bits)
             .map(|(&pi, &b)| (pi, fake_quant(&self.params[pi], b)))
-            .collect()
+            .collect();
+        hub().note_requant((t.seconds() * 1e6) as u64, false);
+        q
     }
 
     /// Encode every weighted layer for the integer path: int8 codes for
@@ -330,6 +336,7 @@ impl CpuBackend {
     /// for the rest (`<= 0` stays fp32 pass-through, matching the
     /// fake-quant convention).
     fn quantize_params_int8(&self, bits: &[f32]) -> Int8Set {
+        let t = Timer::start();
         let mut qweights: Vec<Option<QuantWeight>> = (0..self.plan.len()).map(|_| None).collect();
         let mut fallbacks = Vec::new();
         for ((&pi, &li), &b) in self.qparam.iter().zip(&self.qlayer).zip(bits) {
@@ -339,6 +346,7 @@ impl CpuBackend {
                 None => {} // fp32 pass-through
             }
         }
+        hub().note_requant((t.seconds() * 1e6) as u64, true);
         Int8Set { qweights, fallbacks }
     }
 
@@ -403,6 +411,7 @@ impl Backend for CpuBackend {
     fn qforward_one(&self, x: &Tensor, bits: &[f32]) -> Result<Vec<f32>> {
         self.check_bits(bits)?;
         self.execs.fetch_add(1, Ordering::Relaxed);
+        hub().note_forwards(1);
         // clone the cached-set handle under a short lock, pop a private
         // scratch arena, then forward with no lock held — concurrent
         // serve workers only contend on the two brief pool/cache locks

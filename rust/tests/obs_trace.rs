@@ -1,0 +1,109 @@
+//! Flight-recorder battery (artifact-free, on the shared synthetic MLP
+//! from `bench_support::synthetic_parts`):
+//!
+//! * the merged trace of a closed-loop serve run is complete (no ring
+//!   overflow at these sizes) and its **deterministic projection** plus
+//!   the deterministic metrics snapshot are bitwise identical at
+//!   `workers ∈ {1, 2, 4}` and across repeat runs;
+//! * the JSONL exporter writes exactly one parseable object per event,
+//!   in merge order;
+//! * an injected `--fault slow@K:MS` stall surfaces in the forward span
+//!   of the trace (`forward_end.a` carries the span microseconds).
+
+use adaq::bench_support::synthetic_parts;
+use adaq::coordinator::{run_server, FaultPlan, ServerConfig, Session};
+use adaq::io::Json;
+use adaq::obs::{event_to_json, write_trace_jsonl, EventKind};
+
+fn session_and_data() -> (Session, adaq::dataset::Dataset) {
+    let (arts, data) = synthetic_parts(80).unwrap();
+    let session = Session::from_parts(arts, data.clone(), 1).unwrap();
+    (session, data)
+}
+
+fn cfg(workers: usize, batch: usize, fault: FaultPlan) -> ServerConfig {
+    ServerConfig { workers, batch, deadline_us: 100, queue_cap: 0, fault }
+}
+
+#[test]
+fn closed_loop_trace_projection_is_worker_count_invariant() {
+    let (session, data) = session_and_data();
+    let bits = [8.0f32, 8.0];
+    let n = 120;
+    let mut base: Option<(String, String)> = None;
+    for workers in [1usize, 2, 4] {
+        let r =
+            run_server(&session, &data, &bits, n, &cfg(workers, 2, FaultPlan::default())).unwrap();
+        assert_eq!(r.telemetry.dropped, 0, "w{workers}: no ring overflow at this size");
+        let completes =
+            r.telemetry.events.iter().filter(|e| e.kind == EventKind::Complete).count();
+        assert_eq!(completes, n, "w{workers}: one Complete event per request");
+        let proj = r.telemetry.det_projection();
+        let snap = r.telemetry.det_snapshot();
+        assert!(!proj.is_empty(), "w{workers}: the det projection must not be empty");
+        assert!(snap.contains("requests_completed"), "w{workers}: {snap}");
+        match &base {
+            None => base = Some((proj, snap)),
+            Some((bp, bs)) => {
+                assert_eq!(&proj, bp, "w{workers}: det trace projection moved");
+                assert_eq!(&snap, bs, "w{workers}: det metrics snapshot moved");
+            }
+        }
+    }
+    // a repeat run at one worker count is bitwise identical too
+    let again = run_server(&session, &data, &bits, n, &cfg(2, 2, FaultPlan::default())).unwrap();
+    let (bp, bs) = base.unwrap();
+    assert_eq!(again.telemetry.det_projection(), bp, "repeat run: det trace projection moved");
+    assert_eq!(again.telemetry.det_snapshot(), bs, "repeat run: det metrics snapshot moved");
+}
+
+#[test]
+fn trace_jsonl_export_round_trips() {
+    let (session, data) = session_and_data();
+    let bits = [8.0f32, 8.0];
+    let r = run_server(&session, &data, &bits, 60, &cfg(2, 2, FaultPlan::default())).unwrap();
+    let path = std::env::temp_dir().join("adaq_test_obs_trace.jsonl");
+    write_trace_jsonl(&path, &r.telemetry.events).unwrap();
+    let text = std::fs::read_to_string(&path).unwrap();
+    let lines: Vec<&str> = text.lines().collect();
+    assert_eq!(lines.len(), r.telemetry.events.len(), "one line per event");
+    for (line, e) in lines.iter().zip(&r.telemetry.events) {
+        assert_eq!(*line, event_to_json(e).to_string(), "line must be the event's JSON");
+        let v = Json::parse(line).expect("every trace line parses as JSON");
+        for key in ["kind", "id", "virtual_us", "wall_us", "worker", "a", "b", "det"] {
+            assert!(matches!(&v, Json::Obj(m) if m.contains_key(key)), "missing key {key}");
+        }
+    }
+    let _ = std::fs::remove_file(&path);
+}
+
+#[test]
+fn slow_fault_shows_in_the_forward_span() {
+    let (session, data) = session_and_data();
+    let bits = [8.0f32, 8.0];
+    let fault = FaultPlan::parse("slow@3:60").unwrap();
+    let r = run_server(&session, &data, &bits, 12, &cfg(1, 1, fault)).unwrap();
+    assert_eq!(r.errored, 0, "a slow fault delays, it never errors");
+    // at w1 b1 every forward group is a single request, so the stalled
+    // request's span is the ForwardEnd event with its id
+    let span = r
+        .telemetry
+        .events
+        .iter()
+        .find(|e| e.kind == EventKind::ForwardEnd && e.id == 3)
+        .expect("request 3's forward span must be recorded");
+    assert!(
+        span.a >= 60_000,
+        "the injected 60 ms stall must appear inside the forward span, got {} µs",
+        span.a
+    );
+    // the stall must not leak into the service-latency ledger's
+    // Complete events (service time excludes the injected delay)
+    let done = r
+        .telemetry
+        .events
+        .iter()
+        .find(|e| e.kind == EventKind::Complete && e.id == 3)
+        .expect("request 3 completes");
+    assert_eq!(done.b, 0, "single-rung closed loop serves rung 0");
+}

@@ -2,8 +2,9 @@
 //! (`calibrate_model_jobs`) and the cached/pooled sweep must be
 //! **byte-identical** to their sequential counterparts on a trained
 //! model — the `--jobs N` contract. Also covers the sweep eval cache's
-//! "one backend evaluation per distinct allocation" guarantee via
-//! `Session::execs`.
+//! "one backend evaluation per distinct allocation" guarantee via the
+//! cache's own hit/miss counters (mirrored into the `adaq::obs` hub as
+//! `evalcache_hits` / `evalcache_misses`).
 
 use std::sync::OnceLock;
 
@@ -213,26 +214,33 @@ fn pooled_cached_sweep_matches_sequential_and_evaluates_each_allocation_once() {
     }
     assert_eq!(seq.frontier.len(), par.frontier.len());
 
-    // cache hit accounting: each distinct allocation evaluated exactly
-    // once — a re-run over the warm cache issues zero backend evaluations
+    // cache accounting via its hit/miss counters: each distinct
+    // allocation was admitted for evaluation exactly once, and a re-run
+    // over the warm cache admits nothing — every point lands as a hit
     let unique = cache.len();
     assert!(unique <= seq.points.len());
-    let before = session.execs();
+    assert_eq!(cache.misses(), unique as u64, "misses == distinct allocations evaluated");
+    let (hits0, misses0) = (cache.hits(), cache.misses());
     let again = run_sweep_jobs(&session, Allocator::Adaptive, &stats, &cfg, 1, &cache).unwrap();
-    assert_eq!(session.execs(), before, "warm cache must not re-evaluate");
+    assert_eq!(cache.misses(), misses0, "warm cache must not re-evaluate");
+    assert_eq!(
+        cache.hits() - hits0,
+        again.points.len() as u64,
+        "every warm-cache point must resolve as a cache hit"
+    );
     for (a, b) in par.points.iter().zip(&again.points) {
         assert_eq!(a.accuracy.to_bits(), b.accuracy.to_bits());
     }
 
     // across allocators, only genuinely new allocations cost evaluations:
-    // execs grow by (new unique allocations) × (batches per evaluation)
-    let before = session.execs();
+    // misses grow by exactly the count of new distinct bit vectors
+    let misses1 = cache.misses();
     let _ = run_sweep_jobs(&session, Allocator::Equal, &stats, &cfg, 2, &cache).unwrap();
     let new_unique = cache.len() - unique;
     assert_eq!(
-        session.execs() - before,
-        (new_unique * session.num_batches()) as u64,
-        "each new allocation must cost exactly one full-dataset evaluation"
+        cache.misses() - misses1,
+        new_unique as u64,
+        "each new allocation must cost exactly one backend evaluation"
     );
 
     // a memoized accuracy equals a from-scratch evaluation of the same

@@ -4,8 +4,10 @@
 //! * **Committed specs replay deterministically**: for every spec under
 //!   `scenarios/`, the report's deterministic core — per-tenant
 //!   counters, shed set, predictions, merged schedule, tenant
-//!   assignment, virtual-time slice series, switch trace — is bitwise
-//!   identical at `workers ∈ {1, 2, 4}` and across repeat runs;
+//!   assignment, virtual-time slice series, switch trace, and the
+//!   flight recorder's deterministic trace projection + metrics
+//!   snapshot (`adaq::obs`) — is bitwise identical at
+//!   `workers ∈ {1, 2, 4}` and across repeat runs;
 //! * **Trace round-trip**: `--record-trace` of a generated run, replayed
 //!   through trace-kind tenants, reproduces the same core bitwise;
 //! * **Weighted admission** favors heavy tenants at the ledger level and
@@ -98,6 +100,17 @@ fn assert_spec_replays_deterministically(name: &str) {
                 assert_eq!(core(&r), core(b), "{name} w{workers}: deterministic core moved");
                 assert_eq!(r.plan_slices, b.plan_slices, "{name} w{workers}: slice series");
                 assert_eq!(r.switches, b.switches, "{name} w{workers}: switch trace");
+                let (t, bt) = (&r.open.serve.telemetry, &b.open.serve.telemetry);
+                assert_eq!(
+                    t.det_projection(),
+                    bt.det_projection(),
+                    "{name} w{workers}: det trace projection moved"
+                );
+                assert_eq!(
+                    t.det_snapshot(),
+                    bt.det_snapshot(),
+                    "{name} w{workers}: det metrics snapshot moved"
+                );
             }
         }
     }
@@ -108,6 +121,9 @@ fn assert_spec_replays_deterministically(name: &str) {
     let b = base.unwrap();
     assert_eq!(core(&again), core(&b), "{name}: repeat run moved");
     assert_eq!(again.plan_slices, b.plan_slices);
+    let (t, bt) = (&again.open.serve.telemetry, &b.open.serve.telemetry);
+    assert_eq!(t.det_projection(), bt.det_projection(), "{name}: repeat det projection moved");
+    assert_eq!(t.det_snapshot(), bt.det_snapshot(), "{name}: repeat det snapshot moved");
 }
 
 #[test]
