@@ -39,12 +39,14 @@
 //! ladder, fault injection, and int8 serving.
 
 pub mod pool;
+pub mod registry;
 mod serve;
 pub mod server;
 mod session;
 mod sweep;
 
 pub use pool::JobPool;
+pub use registry::{ModelEntry, ModelVersion, Registry};
 pub use serve::{serve_loop, ServeStats};
 pub use server::{
     run_degrade, run_open_loop, run_rate_ladder, run_scenario, run_server, ArrivalKind,

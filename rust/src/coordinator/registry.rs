@@ -1,0 +1,336 @@
+//! Named, versioned model registry for the serving tier.
+//!
+//! A [`Registry`] owns one [`Session`] per model plus that model's ladder
+//! of **versions** — calibrated bit allocations, each a plain bits
+//! vector. Serving traffic names models with the alias grammar
+//!
+//! * `mnist` — the model's **active** version (the hot-swap pointer),
+//! * `mnist@latest` — the highest version number loaded,
+//! * `mnist@v3` — version 3 exactly,
+//!
+//! and admission resolves the alias **once**, packing the result into the
+//! request's [`route`](super::server::Request::route). Everything after
+//! admission keys on the pinned route, which is what makes
+//! [`Registry::activate`] an atomic hot-swap: the active pointer is an
+//! `AtomicUsize`, in-flight requests keep the version they were admitted
+//! under, new requests resolve to the new one, and no request is ever
+//! dropped or torn between allocations — the swap itself is one `store`.
+//! The per-version quantized weight sets stay resident in the backend's
+//! serve cache (sized here via [`Session::set_qcache_capacity`] to
+//! models × versions), so a swap costs a cache lookup, never a re-encode.
+//!
+//! Routes are `u32`s packing `(model index + 1) << 16 | version index`.
+//! The `+ 1` keeps route `0` reserved as the engines' "no registry"
+//! sentinel ([`Request::new`](super::server::Request::new) zeroes it), so
+//! a registry route is never confused with legacy traffic.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+
+use crate::coordinator::Session;
+use crate::{Error, Result};
+
+/// One calibrated allocation of a model.
+pub struct ModelVersion {
+    /// Version number (the `3` in `mnist@v3`). Unique per model.
+    pub version: u32,
+    /// Per-weighted-layer bit-widths this version serves at.
+    pub bits: Vec<f32>,
+}
+
+/// One named model: its evaluation session plus the version ladder.
+pub struct ModelEntry {
+    name: String,
+    session: Session,
+    /// Sorted by `version` ascending; `@latest` is the last entry.
+    versions: Vec<ModelVersion>,
+    /// Index into `versions` that bare-name traffic resolves to.
+    active: AtomicUsize,
+}
+
+impl ModelEntry {
+    pub fn name(&self) -> &str {
+        &self.name
+    }
+
+    pub fn session(&self) -> &Session {
+        &self.session
+    }
+
+    pub fn versions(&self) -> &[ModelVersion] {
+        &self.versions
+    }
+
+    /// The version number bare-name traffic currently resolves to.
+    pub fn active_version(&self) -> u32 {
+        self.versions[self.active.load(Ordering::Acquire)].version
+    }
+}
+
+/// Routing table from model names to sessions + versioned allocations.
+/// Shared read-only across the worker pool (`&Registry` / `Arc<Registry>`);
+/// the only mutable state is each model's active pointer, which is
+/// atomic — see the module docs for the hot-swap contract.
+#[derive(Default)]
+pub struct Registry {
+    models: Vec<ModelEntry>,
+}
+
+/// Cap on models and on versions per model (route packing is 16+16 bit).
+const ROUTE_SPACE: usize = u16::MAX as usize;
+
+impl Registry {
+    pub fn new() -> Registry {
+        Registry::default()
+    }
+
+    /// Register a model under `name` with its version ladder
+    /// (`(version number, bits)` pairs; order free, numbers unique).
+    /// The last-activated semantics start at `@latest`. Also resizes
+    /// every session's serve cache to models × max-versions so the whole
+    /// registry's encoded weight sets stay resident at once.
+    pub fn add_model(
+        &mut self,
+        name: &str,
+        session: Session,
+        versions: Vec<(u32, Vec<f32>)>,
+    ) -> Result<()> {
+        if name.is_empty() || name.contains('@') {
+            return Err(Error::Model(format!(
+                "model name {name:?} must be non-empty and must not contain '@'"
+            )));
+        }
+        if self.models.iter().any(|m| m.name == name) {
+            return Err(Error::Model(format!("model {name:?} already registered")));
+        }
+        if versions.is_empty() {
+            return Err(Error::Model(format!("model {name:?} needs at least one version")));
+        }
+        if self.models.len() + 1 > ROUTE_SPACE || versions.len() > ROUTE_SPACE {
+            return Err(Error::Model("registry exceeds the 16-bit route space".into()));
+        }
+        let nwl = session.artifacts.manifest.num_weighted_layers;
+        let mut vs: Vec<ModelVersion> = Vec::with_capacity(versions.len());
+        for (version, bits) in versions {
+            if bits.len() != nwl {
+                return Err(Error::Model(format!(
+                    "{name}@v{version}: bits vector has {} entries, model has {nwl} \
+                     weighted layers",
+                    bits.len()
+                )));
+            }
+            if vs.iter().any(|v| v.version == version) {
+                return Err(Error::Model(format!("{name}: duplicate version v{version}")));
+            }
+            vs.push(ModelVersion { version, bits });
+        }
+        vs.sort_by_key(|v| v.version);
+        let active = AtomicUsize::new(vs.len() - 1);
+        self.models.push(ModelEntry { name: name.to_string(), session, versions: vs, active });
+        self.resize_qcaches();
+        Ok(())
+    }
+
+    /// Size every session's serve cache for the whole registry
+    /// (models × max versions per model): a round-robin over every
+    /// (model, version) pair must keep all encoded sets resident — the
+    /// fixed single-ladder default silently thrashes under multi-model
+    /// traffic (visible as the `qcache_evictions` obs counter climbing).
+    fn resize_qcaches(&self) {
+        let max_versions = self.models.iter().map(|m| m.versions.len()).max().unwrap_or(0);
+        let cap = self.models.len() * max_versions;
+        for m in &self.models {
+            m.session.set_qcache_capacity(cap);
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.models.is_empty()
+    }
+
+    pub fn models(&self) -> &[ModelEntry] {
+        &self.models
+    }
+
+    fn model_named(&self, name: &str) -> Result<(usize, &ModelEntry)> {
+        self.models
+            .iter()
+            .enumerate()
+            .find(|(_, m)| m.name == name)
+            .ok_or_else(|| Error::Model(format!("unknown model {name:?}")))
+    }
+
+    /// Resolve an alias (`name`, `name@latest`, `name@vN`) to a pinned
+    /// route. Resolution happens once, at admission: the returned route
+    /// names one `(model, version)` pair forever after, so a concurrent
+    /// [`Registry::activate`] never retargets an in-flight request.
+    pub fn resolve(&self, spec: &str) -> Result<u32> {
+        let (name, tag) = match spec.split_once('@') {
+            Some((n, t)) => (n, Some(t)),
+            None => (spec, None),
+        };
+        let (mi, entry) = self.model_named(name)?;
+        let vi = match tag {
+            None => entry.active.load(Ordering::Acquire),
+            Some("latest") => entry.versions.len() - 1,
+            Some(t) => {
+                let v: u32 = t
+                    .strip_prefix('v')
+                    .and_then(|d| d.parse().ok())
+                    .ok_or_else(|| {
+                        Error::Model(format!(
+                            "bad version tag {t:?} in {spec:?} (want latest or vN)"
+                        ))
+                    })?;
+                entry
+                    .versions
+                    .iter()
+                    .position(|mv| mv.version == v)
+                    .ok_or_else(|| Error::Model(format!("{name} has no version v{v}")))?
+            }
+        };
+        Ok(pack_route(mi, vi))
+    }
+
+    /// The session + bits a pinned route serves with. Workers call this
+    /// per forward group; it is two index loads, no locks.
+    pub fn resolve_route(&self, route: u32) -> Result<(&Session, &[f32])> {
+        let (mi, vi) = unpack_route(route)
+            .ok_or_else(|| Error::Model("route 0 carries no registry target".into()))?;
+        let entry = self
+            .models
+            .get(mi)
+            .ok_or_else(|| Error::Model(format!("route names unknown model index {mi}")))?;
+        let mv = entry
+            .versions
+            .get(vi)
+            .ok_or_else(|| Error::Model(format!("route names unknown version index {vi}")))?;
+        Ok((&entry.session, &mv.bits))
+    }
+
+    /// Human label of a pinned route (`mnist@v3`), for responses/stats.
+    pub fn route_label(&self, route: u32) -> String {
+        match unpack_route(route).and_then(|(mi, vi)| {
+            let m = self.models.get(mi)?;
+            Some(format!("{}@v{}", m.name, m.versions.get(vi)?.version))
+        }) {
+            Some(label) => label,
+            None => format!("route:{route}"),
+        }
+    }
+
+    /// The version number bare-name traffic on `name` currently
+    /// resolves to.
+    pub fn active_of(&self, name: &str) -> Result<u32> {
+        Ok(self.model_named(name)?.1.active_version())
+    }
+
+    /// Atomically repoint bare-name traffic at `version` — the hot swap.
+    /// One release-store: requests admitted before keep their pinned
+    /// route, requests admitted after resolve to the new version, and
+    /// since every version's weight set is cache-resident the swap never
+    /// stalls a forward. Returns the previously active version number.
+    pub fn activate(&self, name: &str, version: u32) -> Result<u32> {
+        let (_, entry) = self.model_named(name)?;
+        let vi = entry
+            .versions
+            .iter()
+            .position(|mv| mv.version == version)
+            .ok_or_else(|| Error::Model(format!("{name} has no version v{version}")))?;
+        let prev = entry.active.swap(vi, Ordering::AcqRel);
+        Ok(entry.versions[prev].version)
+    }
+}
+
+fn pack_route(model: usize, version: usize) -> u32 {
+    ((model as u32 + 1) << 16) | version as u32
+}
+
+fn unpack_route(route: u32) -> Option<(usize, usize)> {
+    let m = route >> 16;
+    if m == 0 {
+        return None;
+    }
+    Some((m as usize - 1, (route & 0xFFFF) as usize))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::bench_support::synthetic_parts;
+
+    fn synthetic_session() -> Session {
+        let (artifacts, test) = synthetic_parts(16).unwrap();
+        Session::from_parts(artifacts, test, 4).unwrap()
+    }
+
+    fn two_model_registry() -> Registry {
+        let mut reg = Registry::new();
+        reg.add_model(
+            "mnist",
+            synthetic_session(),
+            vec![(1, vec![8.0, 8.0]), (3, vec![4.0, 4.0]), (2, vec![6.0, 6.0])],
+        )
+        .unwrap();
+        reg.add_model("fraud", synthetic_session(), vec![(7, vec![5.0, 5.0])]).unwrap();
+        reg
+    }
+
+    #[test]
+    fn alias_resolution_and_route_pinning() {
+        let reg = two_model_registry();
+        // bare name starts at latest (v3, despite insertion order)
+        assert_eq!(reg.active_of("mnist").unwrap(), 3);
+        let bare = reg.resolve("mnist").unwrap();
+        let latest = reg.resolve("mnist@latest").unwrap();
+        let v3 = reg.resolve("mnist@v3").unwrap();
+        assert_eq!(bare, latest);
+        assert_eq!(latest, v3);
+        assert_eq!(reg.route_label(v3), "mnist@v3");
+        let v1 = reg.resolve("mnist@v1").unwrap();
+        assert_ne!(v1, v3);
+        let (_, bits) = reg.resolve_route(v1).unwrap();
+        assert_eq!(bits, &[8.0, 8.0]);
+        // second model routes never collide with the first's
+        let fraud = reg.resolve("fraud").unwrap();
+        assert_eq!(reg.route_label(fraud), "fraud@v7");
+        assert_ne!(fraud >> 16, v3 >> 16);
+        // errors
+        assert!(reg.resolve("nope").is_err());
+        assert!(reg.resolve("mnist@v9").is_err());
+        assert!(reg.resolve("mnist@banana").is_err());
+        assert!(reg.resolve_route(0).is_err(), "route 0 is the no-registry sentinel");
+    }
+
+    #[test]
+    fn activate_swaps_new_traffic_and_pins_old_routes() {
+        let reg = two_model_registry();
+        let before = reg.resolve("mnist").unwrap();
+        assert_eq!(reg.route_label(before), "mnist@v3");
+        let prev = reg.activate("mnist", 1).unwrap();
+        assert_eq!(prev, 3);
+        // new bare-name traffic sees v1; the pinned route still serves v3
+        assert_eq!(reg.route_label(reg.resolve("mnist").unwrap()), "mnist@v1");
+        let (_, bits) = reg.resolve_route(before).unwrap();
+        assert_eq!(bits, &[4.0, 4.0], "pinned route keeps its version across a swap");
+        assert!(reg.activate("mnist", 9).is_err());
+        assert!(reg.activate("nope", 1).is_err());
+    }
+
+    #[test]
+    fn add_model_validates() {
+        let mut reg = Registry::new();
+        assert!(reg.add_model("a@b", synthetic_session(), vec![(1, vec![8.0, 8.0])]).is_err());
+        assert!(reg.add_model("m", synthetic_session(), vec![]).is_err());
+        // synthetic model has 2 weighted layers: a 3-entry bits vector is rejected
+        assert!(reg
+            .add_model("m", synthetic_session(), vec![(1, vec![8.0, 8.0, 8.0])])
+            .is_err());
+        assert!(reg
+            .add_model("m", synthetic_session(), vec![(1, vec![8.0, 8.0]), (1, vec![6.0, 6.0])])
+            .is_err());
+        reg.add_model("m", synthetic_session(), vec![(1, vec![8.0, 8.0])]).unwrap();
+        assert!(reg
+            .add_model("m", synthetic_session(), vec![(2, vec![8.0, 8.0])])
+            .is_err(), "duplicate name");
+    }
+}

@@ -1,0 +1,595 @@
+//! HTTP front door: a dependency-light HTTP/1.1 + JSON listener that
+//! feeds external predict traffic into the existing serve engine — the
+//! same bounded [`RequestQueue`], deadline micro-batcher, and scoped
+//! worker pool every in-process driver uses — routed across the models
+//! of a [`Registry`](crate::coordinator::Registry).
+//!
+//! ```text
+//!   TCP clients ──► accept loop (engine driver thread)
+//!        │               │ spawns one handler thread per connection
+//!        ▼               ▼
+//!   handler: parse JSON ► Registry::resolve (alias → pinned route)
+//!        │               ► RequestQueue::offer (admission = shed point)
+//!        │               ► CompletionBoard::wait(id)
+//!        ▼
+//!   workers: pop_batch ► per-route (Session, bits) ► post(id, outcome)
+//! ```
+//!
+//! **Wire protocol** (all bodies JSON, responses `Connection: close`):
+//!
+//! * `POST /v1/predict` `{"index": N, "model": "mnist@v3", "client": "a"}`
+//!   → `{"id": …, "prediction": …, "model": "mnist@v3"}`. `index` is a
+//!   test-set row; `model` accepts the full alias grammar and defaults
+//!   to the registry's first model; `client` keys per-client accounting.
+//! * `GET /v1/models` → names, version ladders, active pointers.
+//! * `GET /v1/stats` → per-client accounting counters so far.
+//! * `POST /v1/models/activate` `{"model": "mnist", "version": 2}` —
+//!   atomic hot-swap of the bare-name target (in-flight requests keep
+//!   their admission-pinned route; nothing is dropped).
+//! * `POST /admin/shutdown` — graceful drain: new predicts get 503, the
+//!   accept loop exits, the queue closes, workers drain every admitted
+//!   request, every waiting client gets its answer.
+//!
+//! **Accounting identity.** Every well-formed predict request lands in
+//! exactly one of four buckets, per client and in total:
+//! `offered = accepted + shed + live_shed + errored` — the same identity
+//! the open-loop harness reports, extended to socket traffic. `shed` is
+//! a full-queue rejection (or an offer against a draining engine),
+//! `live_shed` a [`ShedPolicy::DropOldest`] eviction of an
+//! already-admitted request, `errored` a request that drained as an
+//! error outcome (injected fault, worker panic). Malformed requests
+//! (bad JSON, unknown model, out-of-range index) are refused with 4xx
+//! before admission and never enter the ledger.
+//!
+//! **Graceful drain** reuses [`RequestQueue::close`] semantics end to
+//! end: the driver thread *is* the engine's generator (see
+//! [`super::drive_engine`]), so when the accept loop returns, the
+//! engine closes the queue, workers drain what was admitted, and the
+//! [`CompletionBoard`] releases every blocked handler. No new mutex
+//! discipline was added for shutdown — it is the same close-then-join
+//! path every other driver exercises.
+
+use std::collections::{BTreeMap, HashMap};
+use std::io::{Read, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::{Duration, Instant};
+
+use crate::coordinator::Registry;
+use crate::dataset::Dataset;
+use crate::io::Json;
+use crate::obs::Domain;
+use crate::{Error, Result};
+
+use super::queue::{Admission, Request, RequestQueue, ShedPolicy};
+use super::stats::{merge_report, ServeReport};
+use super::ServerConfig;
+
+/// How one request left the engine. Workers post these onto the
+/// [`CompletionBoard`]; handler threads block until theirs arrives.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Outcome {
+    /// Answered: the predicted class.
+    Answer(i32),
+    /// Drained as a per-request error (fault injection, worker panic).
+    Error(String),
+    /// Evicted after admission ([`ShedPolicy::DropOldest`]) — never
+    /// served. Posted by the evicting handler, not by a worker.
+    Shed,
+}
+
+/// Id-keyed rendezvous between serve workers and connection handlers.
+/// Outcomes are retained (not consumed) until the run ends, so the
+/// drain accounting can be rebuilt from the board even if a handler
+/// timed out waiting — the board is the ground truth of what drained.
+#[derive(Default)]
+pub struct CompletionBoard {
+    slots: Mutex<HashMap<usize, Outcome>>,
+    ready: Condvar,
+}
+
+impl CompletionBoard {
+    /// Publish request `id`'s outcome and wake every waiter. Lock
+    /// poisoning is recovered: the map is a plain buffer, and a panicking
+    /// worker must never wedge the clients of its batch-mates.
+    pub fn post(&self, id: usize, outcome: Outcome) {
+        let mut slots = self.slots.lock().unwrap_or_else(|e| e.into_inner());
+        slots.insert(id, outcome);
+        self.ready.notify_all();
+    }
+
+    /// Block until `id`'s outcome is posted (cloned out, left on the
+    /// board) or `timeout` elapses.
+    pub fn wait(&self, id: usize, timeout: Duration) -> Option<Outcome> {
+        let deadline = Instant::now() + timeout;
+        let mut slots = self.slots.lock().unwrap_or_else(|e| e.into_inner());
+        loop {
+            if let Some(out) = slots.get(&id) {
+                return Some(out.clone());
+            }
+            let left = deadline.checked_duration_since(Instant::now())?;
+            let (guard, res) =
+                self.ready.wait_timeout(slots, left).unwrap_or_else(|e| e.into_inner());
+            slots = guard;
+            if res.timed_out() && !slots.contains_key(&id) {
+                return None;
+            }
+        }
+    }
+
+    fn snapshot(&self) -> HashMap<usize, Outcome> {
+        self.slots.lock().unwrap_or_else(|e| e.into_inner()).clone()
+    }
+}
+
+/// One client's share of the accounting identity
+/// `offered = accepted + shed + live_shed + errored`.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct ClientStats {
+    /// Well-formed predict requests offered over the socket.
+    pub offered: usize,
+    /// Answered with a prediction.
+    pub accepted: usize,
+    /// Refused at admission (full queue / draining engine).
+    pub shed: usize,
+    /// Admitted, then evicted by a later arrival (`DropOldest`).
+    pub live_shed: usize,
+    /// Drained as an error outcome (or timed out waiting).
+    pub errored: usize,
+}
+
+impl ClientStats {
+    /// Whether this ledger's identity holds exactly.
+    pub fn identity_holds(&self) -> bool {
+        self.offered == self.accepted + self.shed + self.live_shed + self.errored
+    }
+
+    fn add(&mut self, other: &ClientStats) {
+        self.offered += other.offered;
+        self.accepted += other.accepted;
+        self.shed += other.shed;
+        self.live_shed += other.live_shed;
+        self.errored += other.errored;
+    }
+
+    fn to_json(self) -> Json {
+        Json::obj(vec![
+            ("offered", Json::Num(self.offered as f64)),
+            ("accepted", Json::Num(self.accepted as f64)),
+            ("shed", Json::Num(self.shed as f64)),
+            ("live_shed", Json::Num(self.live_shed as f64)),
+            ("errored", Json::Num(self.errored as f64)),
+        ])
+    }
+}
+
+/// Everything `run_http` hands back after the drain: the bound address,
+/// the per-client + total ledgers, and the merged engine report (same
+/// [`ServeReport`] every other driver produces, predictions keyed by
+/// offered id).
+pub struct HttpReport {
+    /// The address the listener was bound to.
+    pub addr: String,
+    /// Per-client accounting, name-ordered.
+    pub clients: BTreeMap<String, ClientStats>,
+    /// Sum over clients.
+    pub totals: ClientStats,
+    /// Merged engine-side report (latency tails, telemetry, predictions).
+    pub report: ServeReport,
+}
+
+impl HttpReport {
+    /// Whether the accounting identity holds for the totals **and**
+    /// every per-client ledger.
+    pub fn identity_holds(&self) -> bool {
+        self.totals.identity_holds() && self.clients.values().all(ClientStats::identity_holds)
+    }
+
+    /// The drain accounting block `adaq serve --http` prints (and CI
+    /// greps): one identity line for the totals, one per client.
+    pub fn accounting_lines(&self) -> String {
+        let line = |label: &str, s: &ClientStats| {
+            format!(
+                "{label}: {} accepted + {} shed + {} live-shed + {} errored = {} offered\n",
+                s.accepted, s.shed, s.live_shed, s.errored, s.offered
+            )
+        };
+        let mut out = line(&format!("http drain [{}]", self.addr), &self.totals);
+        for (name, s) in &self.clients {
+            out.push_str(&line(&format!("  client {name}"), s));
+        }
+        out
+    }
+}
+
+/// Reply deadline for a handler blocked on the board. Generous: it only
+/// fires if the engine lost the request entirely, and a fired timeout
+/// shows up as `errored` so the identity still balances.
+const REPLY_TIMEOUT: Duration = Duration::from_secs(120);
+
+/// Per-connection socket read timeout (slowloris guard).
+const READ_TIMEOUT: Duration = Duration::from_secs(10);
+
+/// Largest accepted request head + body.
+const MAX_REQUEST_BYTES: usize = 64 * 1024;
+
+/// Shared front-door state (one `Arc` per connection handler).
+struct FrontDoor {
+    queue: Arc<RequestQueue>,
+    registry: Arc<Registry>,
+    board: Arc<CompletionBoard>,
+    clients: Mutex<BTreeMap<String, ClientStats>>,
+    /// Offered id → dataset index (drain-time label/correctness lookup).
+    idx_of: Mutex<HashMap<usize, usize>>,
+    shutting: AtomicBool,
+    next_id: AtomicUsize,
+    policy: ShedPolicy,
+    data_len: usize,
+    default_model: String,
+    addr: SocketAddr,
+}
+
+impl FrontDoor {
+    fn tally(&self, client: &str, f: impl FnOnce(&mut ClientStats)) {
+        let mut clients = self.clients.lock().unwrap_or_else(|e| e.into_inner());
+        f(clients.entry(client.to_string()).or_default());
+    }
+}
+
+/// Serve HTTP traffic on `listener` until a `POST /admin/shutdown`
+/// drains the engine. The registry's first model (active version) is the
+/// default route and provides the engine warm-up; `data` is the shared
+/// request dataset (`index` in the wire protocol names its rows).
+/// Blocks until the drain completes; tests bind `127.0.0.1:0` and drive
+/// it from a spawned thread.
+pub fn run_http(
+    registry: Arc<Registry>,
+    data: &Dataset,
+    cfg: &ServerConfig,
+    policy: ShedPolicy,
+    listener: TcpListener,
+) -> Result<HttpReport> {
+    if registry.is_empty() {
+        return Err(Error::Model("http front door needs at least one registered model".into()));
+    }
+    let addr = listener
+        .local_addr()
+        .map_err(|e| Error::Other(format!("http listener has no local addr: {e}")))?;
+    let default_model = registry.models()[0].name().to_string();
+    let default_route = registry.resolve(&default_model)?;
+    let (session0, bits0) = registry.resolve_route(default_route)?;
+
+    let (queue, mut params, timer, seed) = super::start_engine(session0, data, bits0, 1, cfg)?;
+    let queue = Arc::new(queue);
+    let board = Arc::new(CompletionBoard::default());
+    params.registry = Some(registry.clone());
+    params.board = Some(board.clone());
+
+    let front = Arc::new(FrontDoor {
+        queue: queue.clone(),
+        registry: registry.clone(),
+        board: board.clone(),
+        clients: Mutex::new(BTreeMap::new()),
+        idx_of: Mutex::new(HashMap::new()),
+        shutting: AtomicBool::new(false),
+        next_id: AtomicUsize::new(0),
+        policy,
+        data_len: data.len(),
+        default_model,
+        addr,
+    });
+    let handles: Mutex<Vec<std::thread::JoinHandle<()>>> = Mutex::new(Vec::new());
+
+    // the accept loop IS the engine's generator: when it returns,
+    // drive_engine closes the queue and the workers drain — graceful
+    // shutdown is the engine's ordinary close path, nothing bespoke
+    let (tallies, total_seconds) =
+        super::drive_engine(session0, data, bits0, cfg.workers, &queue, &params, &timer, |_q| {
+            for conn in listener.incoming() {
+                if front.shutting.load(Ordering::SeqCst) {
+                    break; // the unblocking self-connect (or a raced client)
+                }
+                let Ok(stream) = conn else { continue };
+                let front = front.clone();
+                let h = std::thread::spawn(move || handle_connection(&front, stream));
+                handles.lock().unwrap_or_else(|e| e.into_inner()).push(h);
+            }
+        })?;
+
+    // release every handler still parked on the board, then join them so
+    // the ledgers below are final
+    for h in handles.into_inner().unwrap_or_else(|e| e.into_inner()) {
+        let _ = h.join();
+    }
+
+    let n = front.next_id.load(Ordering::SeqCst);
+    let outcomes = board.snapshot();
+    // the board is the drain ground truth: an id drained iff a worker
+    // posted Answer/Error for it (Shed = evicted, never served)
+    let served: Vec<bool> = (0..n)
+        .map(|id| matches!(outcomes.get(&id), Some(Outcome::Answer(_)) | Some(Outcome::Error(_))))
+        .collect();
+    let idx_of = front.idx_of.lock().unwrap_or_else(|e| e.into_inner());
+    let labels = |id: usize| {
+        idx_of.get(&id).map_or(-1, |&idx| data.label(idx))
+    };
+    let mut report = merge_report(
+        tallies,
+        n,
+        Some(&served),
+        total_seconds,
+        cfg.workers,
+        cfg.batch,
+        cfg.deadline_us,
+        labels,
+        seed,
+    );
+    report.telemetry.metrics.set_gauge(
+        "queue_high_water",
+        Domain::Wall,
+        queue.high_water() as f64,
+    );
+
+    let clients = front.clients.lock().unwrap_or_else(|e| e.into_inner()).clone();
+    let mut totals = ClientStats::default();
+    for s in clients.values() {
+        totals.add(s);
+    }
+    Ok(HttpReport { addr: addr.to_string(), clients, totals, report })
+}
+
+/// Read one HTTP request (start line, headers, `Content-Length` body).
+fn read_request(stream: &mut TcpStream) -> Result<(String, String, String)> {
+    let io_err = |e: std::io::Error| Error::Other(format!("http read: {e}"));
+    stream.set_read_timeout(Some(READ_TIMEOUT)).map_err(io_err)?;
+    let mut buf: Vec<u8> = Vec::with_capacity(1024);
+    let mut tmp = [0u8; 2048];
+    let head_end = loop {
+        if let Some(pos) = buf.windows(4).position(|w| w == b"\r\n\r\n") {
+            break pos;
+        }
+        if buf.len() > MAX_REQUEST_BYTES {
+            return Err(Error::Other("http request head too large".into()));
+        }
+        let k = stream.read(&mut tmp).map_err(io_err)?;
+        if k == 0 {
+            return Err(Error::Other("http connection closed mid-request".into()));
+        }
+        buf.extend_from_slice(&tmp[..k]);
+    };
+    let head = String::from_utf8_lossy(&buf[..head_end]).to_string();
+    let mut lines = head.lines();
+    let start = lines.next().unwrap_or_default();
+    let mut parts = start.split_whitespace();
+    let method = parts.next().unwrap_or_default().to_string();
+    let path = parts.next().unwrap_or_default().to_string();
+    let content_length = lines
+        .filter_map(|l| l.split_once(':'))
+        .find(|(k, _)| k.eq_ignore_ascii_case("content-length"))
+        .and_then(|(_, v)| v.trim().parse::<usize>().ok())
+        .unwrap_or(0);
+    if content_length > MAX_REQUEST_BYTES {
+        return Err(Error::Other("http request body too large".into()));
+    }
+    let mut body = buf[head_end + 4..].to_vec();
+    while body.len() < content_length {
+        let k = stream.read(&mut tmp).map_err(io_err)?;
+        if k == 0 {
+            return Err(Error::Other("http connection closed mid-body".into()));
+        }
+        body.extend_from_slice(&tmp[..k]);
+    }
+    body.truncate(content_length);
+    Ok((method, path, String::from_utf8_lossy(&body).to_string()))
+}
+
+fn respond(stream: &mut TcpStream, status: u16, reason: &str, body: &Json) {
+    let text = body.to_string();
+    let _ = write!(
+        stream,
+        "HTTP/1.1 {status} {reason}\r\nContent-Type: application/json\r\n\
+         Content-Length: {}\r\nConnection: close\r\n\r\n{text}",
+        text.len()
+    );
+    let _ = stream.flush();
+}
+
+fn error_json(msg: &str) -> Json {
+    Json::obj(vec![("error", Json::Str(msg.to_string()))])
+}
+
+fn handle_connection(front: &FrontDoor, mut stream: TcpStream) {
+    let (method, path, body) = match read_request(&mut stream) {
+        Ok(r) => r,
+        Err(_) => return, // unreadable request: nothing to account or answer
+    };
+    match (method.as_str(), path.as_str()) {
+        ("POST", "/v1/predict") => handle_predict(front, &mut stream, &body),
+        ("GET", "/v1/models") => handle_models(front, &mut stream),
+        ("GET", "/v1/stats") => handle_stats(front, &mut stream),
+        ("POST", "/v1/models/activate") => handle_activate(front, &mut stream, &body),
+        ("POST", "/admin/shutdown") => handle_shutdown(front, &mut stream),
+        _ => respond(&mut stream, 404, "Not Found", &error_json("no such endpoint")),
+    }
+}
+
+fn handle_predict(front: &FrontDoor, stream: &mut TcpStream, body: &str) {
+    let Ok(req) = Json::parse(body) else {
+        return respond(stream, 400, "Bad Request", &error_json("body is not JSON"));
+    };
+    let Some(idx) = req.get("index").and_then(Json::as_usize) else {
+        return respond(stream, 400, "Bad Request", &error_json("missing/invalid \"index\""));
+    };
+    if idx >= front.data_len {
+        return respond(
+            stream,
+            400,
+            "Bad Request",
+            &error_json(&format!("index {idx} out of range (dataset has {})", front.data_len)),
+        );
+    }
+    let spec = req.get("model").and_then(Json::as_str).unwrap_or(&front.default_model);
+    let route = match front.registry.resolve(spec) {
+        Ok(r) => r,
+        Err(e) => return respond(stream, 400, "Bad Request", &error_json(&format!("{e}"))),
+    };
+    let client = req.get("client").and_then(Json::as_str).unwrap_or("anon").to_string();
+
+    // ---- the request is well-formed: it enters the ledger here ----
+    if front.shutting.load(Ordering::SeqCst) {
+        front.tally(&client, |s| {
+            s.offered += 1;
+            s.shed += 1;
+        });
+        return respond(stream, 503, "Service Unavailable", &error_json("draining"));
+    }
+    let id = front.next_id.fetch_add(1, Ordering::SeqCst);
+    front.idx_of.lock().unwrap_or_else(|e| e.into_inner()).insert(id, idx);
+    front.tally(&client, |s| s.offered += 1);
+
+    let mut request = Request::new(id, idx, Instant::now());
+    request.route = route;
+    match front.queue.offer(request, front.policy) {
+        Admission::Accepted => {}
+        Admission::Evicted(victim) => {
+            // the victim was admitted earlier and will never be served:
+            // release its handler as a live shed
+            front.board.post(victim.id, Outcome::Shed);
+        }
+        Admission::Rejected | Admission::Closed => {
+            front.tally(&client, |s| s.shed += 1);
+            return respond(stream, 503, "Service Unavailable", &error_json("queue full"));
+        }
+    }
+    match front.board.wait(id, REPLY_TIMEOUT) {
+        Some(Outcome::Answer(pred)) => {
+            front.tally(&client, |s| s.accepted += 1);
+            respond(
+                stream,
+                200,
+                "OK",
+                &Json::obj(vec![
+                    ("id", Json::Num(id as f64)),
+                    ("prediction", Json::Num(f64::from(pred))),
+                    ("model", Json::Str(front.registry.route_label(route))),
+                ]),
+            );
+        }
+        Some(Outcome::Error(msg)) => {
+            front.tally(&client, |s| s.errored += 1);
+            respond(stream, 500, "Internal Server Error", &error_json(&msg));
+        }
+        Some(Outcome::Shed) => {
+            front.tally(&client, |s| s.live_shed += 1);
+            respond(stream, 503, "Service Unavailable", &error_json("evicted under load"));
+        }
+        None => {
+            front.tally(&client, |s| s.errored += 1);
+            respond(stream, 504, "Gateway Timeout", &error_json("reply deadline exceeded"));
+        }
+    }
+}
+
+fn handle_models(front: &FrontDoor, stream: &mut TcpStream) {
+    let models: Vec<Json> = front
+        .registry
+        .models()
+        .iter()
+        .map(|m| {
+            Json::obj(vec![
+                ("name", Json::Str(m.name().to_string())),
+                ("active", Json::Num(f64::from(m.active_version()))),
+                (
+                    "versions",
+                    Json::Arr(
+                        m.versions().iter().map(|v| Json::Num(f64::from(v.version))).collect(),
+                    ),
+                ),
+            ])
+        })
+        .collect();
+    respond(stream, 200, "OK", &Json::obj(vec![("models", Json::Arr(models))]));
+}
+
+fn handle_stats(front: &FrontDoor, stream: &mut TcpStream) {
+    let clients = front.clients.lock().unwrap_or_else(|e| e.into_inner());
+    let entries: Vec<(&str, Json)> =
+        clients.iter().map(|(name, s)| (name.as_str(), s.to_json())).collect();
+    let body = Json::obj(vec![("clients", Json::obj(entries))]);
+    drop(clients);
+    respond(stream, 200, "OK", &body);
+}
+
+fn handle_activate(front: &FrontDoor, stream: &mut TcpStream, body: &str) {
+    let Ok(req) = Json::parse(body) else {
+        return respond(stream, 400, "Bad Request", &error_json("body is not JSON"));
+    };
+    let (Some(model), Some(version)) = (
+        req.get("model").and_then(Json::as_str),
+        req.get("version").and_then(Json::as_usize),
+    ) else {
+        return respond(stream, 400, "Bad Request", &error_json("want \"model\" and \"version\""));
+    };
+    match front.registry.activate(model, version as u32) {
+        Ok(prev) => respond(
+            stream,
+            200,
+            "OK",
+            &Json::obj(vec![
+                ("model", Json::Str(model.to_string())),
+                ("previous", Json::Num(f64::from(prev))),
+                ("active", Json::Num(version as f64)),
+            ]),
+        ),
+        Err(e) => respond(stream, 400, "Bad Request", &error_json(&format!("{e}"))),
+    }
+}
+
+fn handle_shutdown(front: &FrontDoor, stream: &mut TcpStream) {
+    front.shutting.store(true, Ordering::SeqCst);
+    respond(stream, 200, "OK", &Json::obj(vec![("draining", Json::Bool(true))]));
+    // unblock the accept loop so it observes the flag (a no-op request
+    // whose connection the loop drops on arrival)
+    let _ = TcpStream::connect(front.addr);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn board_posts_release_waiters_and_persist() {
+        let board = CompletionBoard::default();
+        board.post(3, Outcome::Answer(7));
+        assert_eq!(board.wait(3, Duration::from_millis(10)), Some(Outcome::Answer(7)));
+        // outcomes are retained — the drain accounting re-reads them
+        assert_eq!(board.wait(3, Duration::from_millis(10)), Some(Outcome::Answer(7)));
+        assert_eq!(board.wait(99, Duration::from_millis(10)), None, "absent id times out");
+        let snap = board.snapshot();
+        assert_eq!(snap.len(), 1);
+    }
+
+    #[test]
+    fn board_wait_crosses_threads() {
+        let board = Arc::new(CompletionBoard::default());
+        let b = board.clone();
+        let waiter = std::thread::spawn(move || b.wait(1, Duration::from_secs(5)));
+        std::thread::sleep(Duration::from_millis(20));
+        board.post(1, Outcome::Shed);
+        assert_eq!(waiter.join().unwrap(), Some(Outcome::Shed));
+    }
+
+    #[test]
+    fn client_stats_identity() {
+        let mut s = ClientStats::default();
+        assert!(s.identity_holds());
+        s.offered = 5;
+        s.accepted = 3;
+        s.shed = 1;
+        s.errored = 1;
+        assert!(s.identity_holds());
+        s.live_shed = 1;
+        assert!(!s.identity_holds(), "over-counted bucket must break the identity");
+    }
+}

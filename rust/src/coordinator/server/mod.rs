@@ -58,6 +58,7 @@
 
 pub mod degrade;
 mod fault;
+pub mod http;
 pub mod openloop;
 mod queue;
 pub mod scenario;
@@ -69,6 +70,7 @@ pub use degrade::{
     RungSlice, RungSwitch,
 };
 pub use fault::FaultPlan;
+pub use http::{run_http, ClientStats, CompletionBoard, HttpReport, Outcome};
 pub use openloop::{
     plan_arrivals, run_open_loop, run_rate_ladder, AdmissionPlan, LoadCurve, OpenLoopConfig,
     OpenLoopReport,
@@ -167,7 +169,7 @@ pub fn run_server(
                         b: 0,
                     });
                 }
-                let accepted = q.push(Request { id, idx, enqueued_at: Instant::now() });
+                let accepted = q.push(Request::new(id, idx, Instant::now()));
                 if !accepted {
                     break; // a worker died and closed the queue
                 }
@@ -261,6 +263,8 @@ fn start_engine(
         clock: ObsClock::logical(),
         rungs: None,
         fault: cfg.fault,
+        registry: None,
+        board: None,
     };
     Ok((queue, params, timer, seed))
 }

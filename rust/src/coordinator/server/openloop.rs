@@ -449,7 +449,7 @@ pub(crate) fn run_planned(
                 // the stamped variants: schedule lag and back-pressure
                 // waits count against latency (no coordinated omission),
                 // unlike the closed loop's re-stamping push
-                let req = Request { id, idx: id % data.len(), enqueued_at: target };
+                let req = Request::new(id, id % data.len(), target);
                 if ol.live_shed {
                     let live = |shed_id: usize| ev(EventKind::Shed, shed_id, clock.wall_us(), 0, 2);
                     match q.offer_stamped(req, ol.shed) {

@@ -26,10 +26,18 @@
 //! [`RequestQueue::offer_stamped`], so admission is decided by **real**
 //! queue depth — non-deterministic, reported separately from the
 //! ledger's sheds — while the planned-arrival sojourn origin is kept.
+//!
+//! Poison recovery: every lock and condvar wait recovers a poisoned
+//! mutex with `unwrap_or_else(|e| e.into_inner())`. The guarded state is
+//! a plain buffer plus a flag — no invariant spans a panic point, so the
+//! state a poisoning panic leaves behind is always consistent. This
+//! matters once external producers (the HTTP front door) feed the queue:
+//! one panicking producer must not cascade-panic every worker that
+//! touches the mutex after it.
 
 use std::collections::VecDeque;
 use std::sync::atomic::{AtomicUsize, Ordering};
-use std::sync::{Condvar, Mutex};
+use std::sync::{Condvar, Mutex, MutexGuard};
 use std::time::{Duration, Instant};
 
 /// What a bounded queue does with an arrival that finds it full — the
@@ -103,6 +111,20 @@ pub struct Request {
     /// [`RequestQueue::push_stamped`] preserves it (open loop: the
     /// planned arrival instant, so schedule lag **does** count).
     pub enqueued_at: Instant,
+    /// Routing tag pinned at admission: which model/version serves this
+    /// request (`coordinator::registry` packs
+    /// `(model + 1) << 16 | version_idx`, reserving 0 for "no
+    /// registry" so engines without one leave it 0). Pinning at
+    /// admission is what makes a registry hot-swap atomic — in-flight
+    /// requests keep the version they were admitted under.
+    pub route: u32,
+}
+
+impl Request {
+    /// A request with the default route (single-model engines).
+    pub fn new(id: usize, idx: usize, enqueued_at: Instant) -> Request {
+        Request { id, idx, enqueued_at, route: 0 }
+    }
 }
 
 struct State {
@@ -144,9 +166,16 @@ impl RequestQueue {
         self.high_water.load(Ordering::Relaxed)
     }
 
+    /// Take the state lock, recovering from poisoning (module docs): the
+    /// guarded state is always consistent, so a producer/consumer that
+    /// panicked while holding the guard must not take the engine down.
+    fn state(&self) -> MutexGuard<'_, State> {
+        self.inner.lock().unwrap_or_else(|e| e.into_inner())
+    }
+
     /// Current depth (pending requests) — a snapshot, for stats only.
     pub fn depth(&self) -> usize {
-        self.inner.lock().unwrap().buf.len()
+        self.state().buf.len()
     }
 
     /// Enqueue a request, blocking while the queue is full. Returns
@@ -174,7 +203,7 @@ impl RequestQueue {
     }
 
     fn push_inner(&self, mut req: Request, restamp: bool) -> bool {
-        let mut st = self.inner.lock().unwrap();
+        let mut st = self.state();
         loop {
             if st.closed {
                 return false;
@@ -182,7 +211,7 @@ impl RequestQueue {
             if st.buf.len() < self.cap {
                 break;
             }
-            st = self.not_full.wait(st).unwrap();
+            st = self.not_full.wait(st).unwrap_or_else(|e| e.into_inner());
         }
         if restamp {
             req.enqueued_at = Instant::now();
@@ -220,7 +249,7 @@ impl RequestQueue {
     }
 
     fn offer_inner(&self, mut req: Request, policy: ShedPolicy, restamp: bool) -> Admission {
-        let mut st = self.inner.lock().unwrap();
+        let mut st = self.state();
         if st.closed {
             return Admission::Closed;
         }
@@ -269,7 +298,7 @@ impl RequestQueue {
         out: &mut Vec<Request>,
     ) -> Option<usize> {
         let max = max.max(1);
-        let mut st = self.inner.lock().unwrap();
+        let mut st = self.state();
         loop {
             if !st.buf.is_empty() {
                 break;
@@ -277,7 +306,7 @@ impl RequestQueue {
             if st.closed {
                 return None;
             }
-            st = self.not_empty.wait(st).unwrap();
+            st = self.not_empty.wait(st).unwrap_or_else(|e| e.into_inner());
         }
         let first_pop = Instant::now();
         loop {
@@ -294,7 +323,10 @@ impl RequestQueue {
             if elapsed >= deadline {
                 break;
             }
-            let (guard, _timeout) = self.not_empty.wait_timeout(st, deadline - elapsed).unwrap();
+            let (guard, _timeout) = self
+                .not_empty
+                .wait_timeout(st, deadline - elapsed)
+                .unwrap_or_else(|e| e.into_inner());
             st = guard;
             if st.buf.is_empty() && first_pop.elapsed() >= deadline {
                 break;
@@ -309,14 +341,14 @@ impl RequestQueue {
     /// Close the queue: pending pushes (and all future ones) fail,
     /// consumers drain the backlog and then observe shutdown.
     pub fn close(&self) {
-        self.inner.lock().unwrap().closed = true;
+        self.state().closed = true;
         self.not_empty.notify_all();
         self.not_full.notify_all();
     }
 
     /// Whether [`RequestQueue::close`] has been called.
     pub fn is_closed(&self) -> bool {
-        self.inner.lock().unwrap().closed
+        self.state().closed
     }
 }
 
@@ -325,7 +357,7 @@ mod tests {
     use super::*;
 
     fn req(id: usize) -> Request {
-        Request { id, idx: id, enqueued_at: Instant::now() }
+        Request::new(id, id, Instant::now())
     }
 
     #[test]
@@ -406,21 +438,21 @@ mod tests {
     fn push_stamped_preserves_the_callers_stamp() {
         let q = RequestQueue::new(4);
         let stamp = Instant::now() - Duration::from_millis(50);
-        assert!(q.push_stamped(Request { id: 0, idx: 0, enqueued_at: stamp }));
-        assert!(q.push(Request { id: 1, idx: 1, enqueued_at: stamp }));
+        assert!(q.push_stamped(Request::new(0, 0, stamp)));
+        assert!(q.push(Request::new(1, 1, stamp)));
         let mut out = Vec::new();
         q.pop_batch(2, Duration::ZERO, &mut out).unwrap();
         assert_eq!(out[0].enqueued_at, stamp, "push_stamped keeps the planned-arrival origin");
         assert!(out[1].enqueued_at > stamp, "plain push re-stamps at admission");
         q.close();
-        assert!(!q.push_stamped(Request { id: 2, idx: 2, enqueued_at: stamp }));
+        assert!(!q.push_stamped(Request::new(2, 2, stamp)));
     }
 
     #[test]
     fn offer_stamped_preserves_the_callers_stamp() {
         let q = RequestQueue::new(1);
         let stamp = Instant::now() - Duration::from_millis(50);
-        let stamped = |id| Request { id, idx: id, enqueued_at: stamp };
+        let stamped = |id| Request::new(id, id, stamp);
         assert!(matches!(q.offer_stamped(stamped(0), ShedPolicy::RejectNew), Admission::Accepted));
         // full queue under drop-oldest: the admitted replacement keeps
         // its planned stamp too
@@ -480,5 +512,71 @@ mod tests {
             let accepted = 1 + producer.join().unwrap() as usize;
             assert_eq!(consumer.join().unwrap(), accepted);
         });
+    }
+
+    /// The satellite-bug regression: a producer that panics while
+    /// holding the queue mutex (mid-`offer`, as far as the lock is
+    /// concerned) poisons it. Every subsequent operation must recover
+    /// the intact state instead of cascade-panicking.
+    #[test]
+    fn poisoned_lock_recovers_and_drains_cleanly() {
+        let q = RequestQueue::new(4);
+        assert!(q.push(req(0)));
+        std::thread::scope(|s| {
+            let poisoner = s.spawn(|| {
+                let _guard = q.inner.lock().unwrap();
+                panic!("injected producer panic while holding the queue lock");
+            });
+            assert!(poisoner.join().is_err(), "the producer really panicked");
+        });
+        assert!(q.inner.is_poisoned(), "the mutex really was poisoned");
+        // admission, draining and shutdown all keep working
+        assert_eq!(q.depth(), 1);
+        assert!(q.push(req(1)));
+        assert!(matches!(q.offer(req(2), ShedPolicy::RejectNew), Admission::Accepted));
+        let mut out = Vec::new();
+        q.pop_batch(8, Duration::ZERO, &mut out).unwrap();
+        assert_eq!(out.iter().map(|r| r.id).collect::<Vec<_>>(), vec![0, 1, 2]);
+        q.close();
+        assert!(q.is_closed());
+        out.clear();
+        assert!(q.pop_batch(8, Duration::ZERO, &mut out).is_none(), "clean shutdown");
+    }
+
+    /// Same poisoning, but under the engine's consumer shape: 1/2/4
+    /// concurrent batch-poppers (the `--workers 1/2/4` acceptance grid)
+    /// must drain every accepted request after the mutex was poisoned.
+    #[test]
+    fn poisoned_lock_drains_under_concurrent_consumers() {
+        for consumers in [1usize, 2, 4] {
+            let q = RequestQueue::new(8);
+            let total = 64usize;
+            let drained = AtomicUsize::new(0);
+            std::thread::scope(|s| {
+                let poisoner = s.spawn(|| {
+                    let _guard = q.inner.lock().unwrap();
+                    panic!("injected panic while holding the queue lock");
+                });
+                assert!(poisoner.join().is_err());
+                for _ in 0..consumers {
+                    s.spawn(|| {
+                        let mut out = Vec::new();
+                        while q.pop_batch(4, Duration::ZERO, &mut out).is_some() {
+                            drained.fetch_add(out.len(), Ordering::SeqCst);
+                            out.clear();
+                        }
+                    });
+                }
+                for i in 0..total {
+                    assert!(q.push(req(i)), "pushes keep working on a poisoned queue");
+                }
+                q.close();
+            });
+            assert_eq!(
+                drained.load(Ordering::SeqCst),
+                total,
+                "every accepted request drains with {consumers} consumers"
+            );
+        }
     }
 }

@@ -315,6 +315,7 @@ pub(crate) fn merge_report(
         ("pool_jobs", d.pool_jobs),
         ("pool_idle_workers", d.pool_idle_workers),
         ("pool_probe_us", d.pool_probe_us),
+        ("qcache_evictions", d.qcache_evictions),
     ] {
         m.inc(name, Domain::Wall, v);
     }

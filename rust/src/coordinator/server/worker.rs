@@ -34,8 +34,10 @@
 //! inline instead of paying spawn overhead.
 
 use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::Arc;
 use std::time::Duration;
 
+use crate::coordinator::Registry;
 use crate::dataset::Dataset;
 use crate::obs::{self, Event, EventKind, ObsClock, Stage, StageClock};
 use crate::tensor::{self, Tensor};
@@ -43,6 +45,7 @@ use crate::util::{Scratch, Timer};
 use crate::{Error, Result};
 
 use super::fault::FaultPlan;
+use super::http::{CompletionBoard, Outcome};
 use super::queue::{Request, RequestQueue};
 use super::stats::WorkerTally;
 use super::Session;
@@ -76,6 +79,16 @@ pub(crate) struct WorkerParams {
     pub rungs: Option<RungTable>,
     /// Seeded fault injection (empty plan = no faults).
     pub fault: FaultPlan,
+    /// Model registry (HTTP front door): a request with a nonzero
+    /// [`Request::route`] resolves to its pinned `(Session, bits)`
+    /// instead of the engine defaults. Registry models share the
+    /// engine's dataset as input space — `idx` still names a row of the
+    /// one `data` the workers assemble batches from.
+    pub registry: Option<Arc<Registry>>,
+    /// Completion rendezvous (HTTP front door): when present, every
+    /// drained request additionally posts its outcome here so the
+    /// connection handler blocked on it can answer its client.
+    pub board: Option<Arc<CompletionBoard>>,
 }
 
 /// Run one worker until the queue shuts down. On any forward error —
@@ -117,20 +130,23 @@ fn panic_message(payload: &(dyn std::any::Any + Send)) -> String {
 }
 
 /// Split a popped batch into contiguous forward groups: a new group
-/// starts when the assigned rung changes, and any request the fault
-/// plan targets for failure is fenced into a singleton group so its
-/// error outcome can never spill onto batch-mates (which would make the
-/// error accounting depend on batch composition).
-fn forward_groups(batch: &[Request], params: &WorkerParams) -> Vec<(usize, usize, usize)> {
+/// starts when the assigned rung **or registry route** changes (requests
+/// pinned to different model versions never share a stacked forward),
+/// and any request the fault plan targets for failure is fenced into a
+/// singleton group so its error outcome can never spill onto batch-mates
+/// (which would make the error accounting depend on batch composition).
+fn forward_groups(batch: &[Request], params: &WorkerParams) -> Vec<(usize, usize, usize, u32)> {
     let rung_of = |id: usize| params.rungs.as_ref().map_or(0, |rt| rt.rung_of[id] as usize);
-    let mut groups: Vec<(usize, usize, usize)> = Vec::new(); // (start, end, rung)
+    let mut groups: Vec<(usize, usize, usize, u32)> = Vec::new(); // (start, end, rung, route)
     let mut prev_isolated = false;
     for (i, req) in batch.iter().enumerate() {
         let rung = rung_of(req.id);
         let isolated = params.fault.isolates(req.id);
         match groups.last_mut() {
-            Some(g) if !isolated && !prev_isolated && g.2 == rung => g.1 = i + 1,
-            _ => groups.push((i, i + 1, rung)),
+            Some(g) if !isolated && !prev_isolated && g.2 == rung && g.3 == req.route => {
+                g.1 = i + 1
+            }
+            _ => groups.push((i, i + 1, rung, req.route)),
         }
         prev_isolated = isolated;
     }
@@ -148,7 +164,6 @@ fn serve_requests(
     if params.gemm_cap > 0 {
         tensor::set_gemm_thread_cap(params.gemm_cap);
     }
-    let classes = session.artifacts.manifest.num_classes;
     let stride = data.image_elems();
     let sh = data.images.shape();
     let (h, w, c) = (sh[1], sh[2], sh[3]);
@@ -183,15 +198,17 @@ fn serve_requests(
                 depth as u64,
             ));
         }
-        for &(start, end, rung) in &forward_groups(&batch, params) {
+        for &(start, end, rung, route) in &forward_groups(&batch, params) {
             let group = &batch[start..end];
             let b = end - start;
             // a poisoned batch fails without forwarding (the stand-in
             // for corrupt input); isolation makes the group a singleton
             if let Some(req) = group.iter().find(|r| params.fault.poisons(r.id)) {
-                tally
-                    .errors
-                    .push((req.id, format!("injected poisoned batch at request {}", req.id)));
+                let what = format!("injected poisoned batch at request {}", req.id);
+                if let Some(board) = &params.board {
+                    board.post(req.id, Outcome::Error(what.clone()));
+                }
+                tally.errors.push((req.id, what));
                 tally.ring.record(ev(
                     EventKind::FaultAbsorbed,
                     req.id,
@@ -202,7 +219,15 @@ fn serve_requests(
                 ));
                 continue;
             }
-            let gbits = params.rungs.as_ref().map_or(bits, |rt| rt.bits[rung].as_slice());
+            // a nonzero route was pinned at admission by the registry:
+            // serve through that model version's session + calibrated
+            // bits; route 0 (every non-registry driver) keeps the
+            // engine's base session and the rung/base bits
+            let (gsession, gbits) = match &params.registry {
+                Some(reg) if route != 0 => reg.resolve_route(route)?,
+                _ => (session, params.rungs.as_ref().map_or(bits, |rt| rt.bits[rung].as_slice())),
+            };
+            let classes = gsession.artifacts.manifest.num_classes;
             ids.clear();
             ids.extend(group.iter().map(|r| r.idx));
             let mut xbuf = scratch.take_any(b * stride);
@@ -233,7 +258,7 @@ fn serve_requests(
                 if let Some(id) = panic_id {
                     panic!("injected worker panic at request {id}");
                 }
-                session.qforward_once(&x, gbits)
+                gsession.qforward_once(&x, gbits)
             }));
             let service_ms = t.millis();
             if obs_on {
@@ -259,7 +284,11 @@ fn serve_requests(
                     // drain as error outcomes, the worker keeps serving
                     let msg = panic_message(&payload);
                     for req in group {
-                        tally.errors.push((req.id, format!("worker panic: {msg}")));
+                        let what = format!("worker panic: {msg}");
+                        if let Some(board) = &params.board {
+                            board.post(req.id, Outcome::Error(what.clone()));
+                        }
+                        tally.errors.push((req.id, what));
                         tally.ring.record(ev(
                             EventKind::FaultAbsorbed,
                             req.id,
@@ -279,6 +308,9 @@ fn serve_requests(
             for (i, req) in group.iter().enumerate() {
                 let row = &logits[i * classes..(i + 1) * classes];
                 let (pred, _) = Tensor::top2(row);
+                if let Some(board) = &params.board {
+                    board.post(req.id, Outcome::Answer(pred as i32));
+                }
                 tally.results.push((req.id, pred as i32));
                 tally.sojourn_ms.push(req.enqueued_at.elapsed().as_secs_f64() * 1e3);
                 tally.service_ms.push(service_ms);

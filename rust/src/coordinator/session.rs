@@ -170,6 +170,13 @@ impl Session {
         self.backend.set_parallel_budget(outer_jobs);
     }
 
+    /// Size the backend's per-`bits` serve cache (the model registry
+    /// passes models × rungs so multi-model traffic never thrashes it;
+    /// see [`Backend::set_qcache_capacity`]). 0 keeps the current size.
+    pub fn set_qcache_capacity(&self, cap: usize) {
+        self.backend.set_qcache_capacity(cap);
+    }
+
     fn note_execs(&self) {
         // fetch_max (not store): concurrent workers may observe the
         // backend counter out of order, and the published count must

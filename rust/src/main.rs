@@ -16,9 +16,10 @@
 use adaq::cli::Args;
 use adaq::coordinator::{
     run_degrade, run_open_loop, run_rate_ladder, run_scenario, run_server, run_sweep_jobs,
-    DegradeConfig, EvalCache, FaultPlan, LoadCurve, OpenLoopConfig, Rung, ScenarioSpec,
+    DegradeConfig, EvalCache, FaultPlan, LoadCurve, OpenLoopConfig, Registry, Rung, ScenarioSpec,
     ServeReport, ServerConfig, Session, ShedPolicy, SweepConfig,
 };
+use adaq::coordinator::server::run_http;
 use adaq::dataset::Dataset;
 use adaq::io::Json;
 use adaq::measure::{adversarial_stats, calibrate_model_jobs, Calibration};
@@ -80,6 +81,18 @@ USAGE: adaq <command> [--flags]
               single-run only, conflicts with --rates)
              [--synthetic] (serve an in-process seeded random-weight MLP
               — no artifacts needed; for smokes and CI)
+             [--http PORT] [--versions B1;B2;…]
+             (HTTP/JSON front door on 127.0.0.1:PORT (0 = ephemeral):
+              POST /v1/predict {\"index\":N,\"model\":\"name@vK\",
+              \"client\":\"id\"} routes through a versioned model
+              registry — --versions lists bit allocations (each in the
+              --bits grammar, ';'-separated) published as name@v1…vN,
+              highest active; POST /v1/models/activate hot-swaps the
+              active version atomically (in-flight requests keep their
+              admitted version), GET /v1/models and /v1/stats inspect,
+              POST /admin/shutdown drains gracefully and prints the
+              exact per-client accounting identity
+              accepted + shed + live-shed + errored = offered)
   export     --model M (--bits … | --allocator A --b1 F) [--out DIR]
   figures    [--models a,b,…] (regenerate Fig. 6/8 sweeps in-process)
   selfcheck  [--models a,b,…]
@@ -439,6 +452,9 @@ fn cmd_serve(args: &Args) -> Result<()> {
         queue_cap: args.usize_flag("queue-cap", 0)?,
         fault,
     };
+    if args.flags.contains_key("http") {
+        return cmd_serve_http(args, session, test, &bits, &cfg);
+    }
     if args.flags.contains_key("scenario") {
         return cmd_serve_scenario(args, &session, &test, &bits, &cfg);
     }
@@ -471,6 +487,75 @@ fn cmd_serve(args: &Args) -> Result<()> {
     print_fault_outcome(&cfg.fault, &r);
     emit_telemetry(args, &r)?;
     Ok(())
+}
+
+/// `adaq serve --http PORT`: the HTTP/JSON front door. Builds a
+/// versioned model registry around the session (`--versions` names a
+/// ladder of bit allocations, semicolon-separated; each entry uses the
+/// `--bits` grammar and becomes v1, v2, …, with the highest version
+/// active), binds 127.0.0.1:PORT, and serves predict traffic through
+/// the same engine every in-process driver uses until a
+/// `POST /admin/shutdown` drains it. Prints the per-client accounting
+/// identity on drain (the line CI greps) and fails if it does not hold.
+fn cmd_serve_http(
+    args: &Args,
+    session: Session,
+    test: Dataset,
+    bits: &[f32],
+    cfg: &ServerConfig,
+) -> Result<()> {
+    let port = args.usize_flag("http", 0)?;
+    if port > u16::MAX as usize {
+        return Err(Error::Cli(format!("--http {port}: not a valid TCP port")));
+    }
+    let nwl = session.artifacts.manifest.num_weighted_layers;
+    let versions: Vec<(u32, Vec<f32>)> = match args.flags.get("versions") {
+        Some(spec) => {
+            let mut v = Vec::new();
+            for (i, entry) in spec.split(';').enumerate() {
+                v.push((i as u32 + 1, parse_bits(entry.trim(), nwl)?));
+            }
+            v
+        }
+        None => vec![(1, bits.to_vec())],
+    };
+    let name = args.str_flag("model", "synthetic");
+    let mut registry = Registry::default();
+    registry.add_model(&name, session, versions)?;
+    let registry = std::sync::Arc::new(registry);
+
+    let policy_spec = args.str_flag("shed", "reject-new");
+    let policy = ShedPolicy::parse(&policy_spec)
+        .ok_or_else(|| Error::Cli(format!("unknown --shed policy {policy_spec:?}")))?;
+    let listener = std::net::TcpListener::bind(("127.0.0.1", port as u16))
+        .map_err(|e| Error::Cli(format!("--http: cannot bind 127.0.0.1:{port}: {e}")))?;
+    let addr = listener
+        .local_addr()
+        .map_err(|e| Error::Cli(format!("--http: {e}")))?;
+    println!(
+        "http front door on {addr}: model {name}@v{} ({} versions), shed {}; \
+         POST /v1/predict, GET /v1/models, POST /v1/models/activate, \
+         POST /admin/shutdown drains",
+        registry.active_of(&name)?,
+        registry.models()[0].versions().len(),
+        policy.name(),
+    );
+    let report = run_http(registry, &test, cfg, policy, listener)?;
+    print!("{}", report.accounting_lines());
+    if !report.identity_holds() {
+        return Err(Error::Other(
+            "http accounting identity violated: offered != accepted + shed + live-shed + errored"
+                .into(),
+        ));
+    }
+    println!(
+        "  drained: acc {:.4}, {} errored, sojourn p50 {:.2} / p99 {:.2} ms",
+        report.report.accuracy(),
+        report.report.errored,
+        report.report.p50_ms,
+        report.report.p99_ms,
+    );
+    emit_telemetry(args, &report.report)
 }
 
 /// Shared telemetry tail of every serve path: write the merged trace

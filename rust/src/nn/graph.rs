@@ -28,7 +28,7 @@ use crate::tensor::Tensor;
 use crate::util::Scratch;
 use crate::{Error, Result};
 
-use super::ops::{self, QuantWeight};
+use super::ops::{self, Int8Act, QuantWeight};
 
 /// Where a layer reads one of its operands from.
 #[derive(Clone, Debug)]
@@ -66,6 +66,16 @@ pub struct GraphPlan {
     fused_producer: Vec<Option<usize>>,
     /// Producer layers whose evaluation is deferred into their sole ReLU.
     deferred: Vec<bool>,
+    /// MaxPool layer index → the weighted layer its output flows into
+    /// through single-use Flatten links, if any: the **int8 pool
+    /// hand-off**. In integer mode such a pool encodes its input once
+    /// (per sample), pools the `i8` codes ([`ops::maxpool_i8`] — bitwise
+    /// equal to pooling the decoded values, since max commutes with the
+    /// monotone affine decode), and the consumer uses the codes
+    /// directly instead of re-encoding — the f32-pooling round trip the
+    /// int8 serve path used to pay. Decided per forward: only fires when
+    /// the consumer has an encoded weight for the request's bits.
+    pool_handoff: Vec<Option<usize>>,
 }
 
 impl GraphPlan {
@@ -114,6 +124,32 @@ impl GraphPlan {
             }
         }
 
+        // int8 pool hand-off: a max-pool (pad < k, single consumer, not
+        // the output) whose value flows through single-use Flatten links
+        // into exactly one conv/dense layer can pool i8 codes directly
+        let mut pool_handoff = vec![None; layers.len()];
+        for i in 0..layers.len() {
+            let pool_ok = matches!(layers[i].kind, LayerKind::MaxPool { k, pad, .. } if pad < k);
+            if !pool_ok || uses[i] != 1 || output == Some(i) {
+                continue;
+            }
+            let mut cur = i;
+            pool_handoff[i] = loop {
+                // uses[cur] == 1 and cur is not the output, so exactly
+                // one layer reads cur — find it
+                let Some(m) = (0..layers.len()).find(|&m| {
+                    srcs[m].iter().any(|s| matches!(s, Src::Layer(j) if *j == cur))
+                }) else {
+                    break None;
+                };
+                match layers[m].kind {
+                    LayerKind::Conv { .. } | LayerKind::Dense { .. } => break Some(m),
+                    LayerKind::Flatten if uses[m] == 1 && output != Some(m) => cur = m,
+                    _ => break None,
+                }
+            };
+        }
+
         // param_idx counts executable slots where slot 0 is the input
         // batch; the params slice starts at slot 1 → store 0-based.
         let param_slots = layers
@@ -134,6 +170,7 @@ impl GraphPlan {
             output_name: manifest.output.clone(),
             fused_producer,
             deferred,
+            pool_handoff,
         }
     }
 
@@ -154,6 +191,12 @@ impl GraphPlan {
     /// The conv/dense producer fused into ReLU layer `i`, if any.
     pub fn fused_producer_of(&self, i: usize) -> Option<usize> {
         self.fused_producer[i]
+    }
+
+    /// The weighted consumer MaxPool layer `i` hands i8 codes to in
+    /// integer mode, if the hand-off is structurally possible.
+    pub fn pool_handoff_of(&self, i: usize) -> Option<usize> {
+        self.pool_handoff[i]
     }
 
     /// Forward pass with owned parameters (see [`GraphPlan::forward_with`]).
@@ -209,6 +252,10 @@ impl GraphPlan {
         scratch: &mut Scratch,
     ) -> Result<Tensor> {
         let mut acts: Vec<Option<Tensor>> = (0..self.len()).map(|_| None).collect();
+        // side table of i8 activations riding the pool hand-off; a layer
+        // with a populated slot holds a placeholder in `acts` that no
+        // consumer ever reads as f32
+        let mut qacts: Vec<Option<Int8Act>> = (0..self.len()).map(|_| None).collect();
         let mut remaining = self.uses.clone();
         for i in 0..self.len() {
             if self.deferred[i] {
@@ -216,13 +263,20 @@ impl GraphPlan {
             }
             let out = match self.fused_producer[i] {
                 Some(j) => {
-                    let xin = self.input(j, &acts, x, 0)?;
-                    let fused = self.eval_weighted(j, xin, params, qweights, true, scratch)?;
+                    let fused = match self.take_qact(j, &mut qacts) {
+                        Some(qa) => {
+                            self.eval_weighted_precoded(j, &qa, params, qweights, true, scratch)?
+                        }
+                        None => {
+                            let xin = self.input(j, &acts, x, 0)?;
+                            self.eval_weighted(j, xin, params, qweights, true, scratch)?
+                        }
+                    };
                     self.release(j, 0, &mut acts, &mut remaining, scratch);
                     fused
                 }
                 None => {
-                    let out = self.eval_layer(i, &acts, x, params, qweights, scratch)?;
+                    let out = self.eval_layer(i, &acts, x, params, qweights, &mut qacts, scratch)?;
                     for idx in 0..self.srcs[i].len() {
                         self.release(i, idx, &mut acts, &mut remaining, scratch);
                     }
@@ -298,6 +352,41 @@ impl GraphPlan {
         Ok((w, b))
     }
 
+    /// Take the i8 activation layer `i`'s first operand handed off, if
+    /// any. Taking (not borrowing) is sound because every hand-off chain
+    /// link has exactly one consumer (`uses == 1`, checked at plan time).
+    fn take_qact(&self, i: usize, qacts: &mut [Option<Int8Act>]) -> Option<Int8Act> {
+        match self.srcs[i].first() {
+            Some(Src::Layer(j)) => qacts[*j].take(),
+            _ => None,
+        }
+    }
+
+    /// Evaluate weighted layer `i` on a pre-encoded activation (the pool
+    /// hand-off path). Only reachable when the plan's hand-off fired,
+    /// which requires an encoded weight for `i` under the current bits.
+    fn eval_weighted_precoded(
+        &self,
+        i: usize,
+        qa: &Int8Act,
+        params: &[&Tensor],
+        qweights: Option<&[Option<QuantWeight>]>,
+        relu: bool,
+        scratch: &mut Scratch,
+    ) -> Result<Tensor> {
+        let (_w, b) = self.params_of(i, params)?;
+        let qw = qweights.and_then(|q| q[i].as_ref()).ok_or_else(|| {
+            Error::Model(format!("layer {}: pool hand-off without an int8 weight", self.names[i]))
+        })?;
+        match &self.kinds[i] {
+            LayerKind::Conv { k, stride, pad, .. } => {
+                ops::conv2d_int8_precoded(qa, qw, b, *k, *stride, *pad, relu, scratch)
+            }
+            LayerKind::Dense { .. } => ops::dense_int8_precoded(qa, qw, b, relu, scratch),
+            _ => unreachable!("only conv/dense layers consume a pool hand-off"),
+        }
+    }
+
     /// Evaluate weighted layer `i` (conv or dense) on `xin`, taking the
     /// int8 path when an encoded weight is available for it.
     fn eval_weighted(
@@ -326,6 +415,7 @@ impl GraphPlan {
         }
     }
 
+    #[allow(clippy::too_many_arguments)]
     fn eval_layer(
         &self,
         i: usize,
@@ -333,19 +423,41 @@ impl GraphPlan {
         x: &Tensor,
         params: &[&Tensor],
         qweights: Option<&[Option<QuantWeight>]>,
+        qacts: &mut [Option<Int8Act>],
         scratch: &mut Scratch,
     ) -> Result<Tensor> {
         match &self.kinds[i] {
             LayerKind::Conv { .. } | LayerKind::Dense { .. } => {
+                if let Some(qa) = self.take_qact(i, qacts) {
+                    return self.eval_weighted_precoded(i, &qa, params, qweights, false, scratch);
+                }
                 let xin = self.input(i, acts, x, 0)?;
                 self.eval_weighted(i, xin, params, qweights, false, scratch)
             }
             LayerKind::Relu => Ok(ops::relu_with(self.input(i, acts, x, 0)?, scratch)),
             LayerKind::MaxPool { k, stride, pad } => {
-                ops::maxpool(self.input(i, acts, x, 0)?, *k, *stride, *pad)
+                let xin = self.input(i, acts, x, 0)?;
+                // int8 pool hand-off: pool i8 codes, skip the f32 round
+                // trip (bitwise-equal pooling; see ops::maxpool_i8)
+                if let Some(m) = self.pool_handoff[i] {
+                    if qweights.map_or(false, |q| q[m].is_some()) {
+                        let qa = ops::maxpool_i8(&ops::quantize_act_tensor(xin), *k, *stride, *pad)?;
+                        qacts[i] = Some(qa);
+                        // placeholder activation: every consumer on the
+                        // hand-off chain reads the codes, never this
+                        return Ok(Tensor::zeros(&[1]));
+                    }
+                }
+                ops::maxpool(xin, *k, *stride, *pad)
             }
             LayerKind::Gap => ops::avgpool_global(self.input(i, acts, x, 0)?),
             LayerKind::Flatten => {
+                if let Some(qa) = self.take_qact(i, qacts) {
+                    let n = qa.shape[0];
+                    let rest: usize = qa.shape[1..].iter().product();
+                    qacts[i] = Some(Int8Act { shape: vec![n, rest], ..qa });
+                    return Ok(Tensor::zeros(&[1]));
+                }
                 let xin = self.input(i, acts, x, 0)?;
                 let n = xin.shape()[0];
                 let rest: usize = xin.shape()[1..].iter().product();
@@ -585,6 +697,108 @@ mod tests {
         // repeated int8 passes through the same scratch are deterministic
         let again = plan.forward_int8_with(&x, &refs, &qweights, &mut scratch).unwrap();
         assert_eq!(again.data(), i8_out.data());
+    }
+
+    #[test]
+    fn pool_handoff_planned_on_toy_graph() {
+        let m = toy_manifest();
+        let plan = GraphPlan::new(&m);
+        // pool1 (idx 2) hands its codes through flat (idx 3) to fc (idx 4)
+        assert_eq!(plan.pool_handoff_of(2), Some(4));
+        for i in [0, 1, 3, 4] {
+            assert_eq!(plan.pool_handoff_of(i), None, "layer {i}");
+        }
+    }
+
+    #[test]
+    fn int8_pool_handoff_is_batch_invariant() {
+        use crate::rng::{fill_normal, Pcg32};
+        let m = toy_manifest();
+        let plan = GraphPlan::new(&m);
+        let mut rng = Pcg32::new(41);
+        let t = |shape: &[usize], rng: &mut Pcg32| {
+            let n: usize = shape.iter().product();
+            let mut data = vec![0f32; n];
+            fill_normal(rng, &mut data);
+            Tensor::from_vec(shape, data).unwrap()
+        };
+        let params = vec![
+            t(&[3, 3, 1, 1], &mut rng),
+            t(&[1], &mut rng),
+            t(&[4, 2], &mut rng),
+            t(&[2], &mut rng),
+        ];
+        let x = t(&[2, 4, 4, 1], &mut rng);
+        let refs: Vec<&Tensor> = params.iter().collect();
+        let mut qweights: Vec<Option<QuantWeight>> = (0..plan.len()).map(|_| None).collect();
+        qweights[0] = QuantWeight::quantize(&params[0], 8.0);
+        qweights[4] = QuantWeight::quantize(&params[2], 8.0);
+        let mut scratch = Scratch::new();
+        let batch = plan.forward_int8_with(&x, &refs, &qweights, &mut scratch).unwrap();
+        // activation grids are per-sample, so each row of a batch-2 pass is
+        // bitwise identical to running that sample alone
+        for b in 0..2 {
+            let xi =
+                Tensor::from_vec(&[1, 4, 4, 1], x.data()[b * 16..(b + 1) * 16].to_vec()).unwrap();
+            let yi = plan.forward_int8_with(&xi, &refs, &qweights, &mut scratch).unwrap();
+            assert_eq!(yi.data(), &batch.data()[b * 2..(b + 1) * 2], "sample {b}");
+        }
+    }
+
+    #[test]
+    fn int8_pool_handoff_into_conv() {
+        use crate::rng::{fill_normal, Pcg32};
+        // pool1 feeds conv2 directly (no flatten): hand-off targets a conv
+        let m = Manifest::from_json(
+            &Json::parse(
+                r#"{
+            "model": "poolconv", "input_shape": [4,4,1], "num_classes": 2,
+            "output": "conv2", "num_weighted_layers": 2,
+            "total_quantizable_params": 9,
+            "layers": [
+              {"name":"conv1","kind":"conv","inputs":["input"],"cin":1,
+               "cout":1,"k":1,"stride":1,"pad":0,"param_idx_w":1,
+               "param_idx_b":2,"qindex":0,"s_i":1},
+              {"name":"relu1","kind":"relu","inputs":["conv1"]},
+              {"name":"pool1","kind":"maxpool","inputs":["relu1"],"k":2,
+               "stride":2,"pad":0},
+              {"name":"conv2","kind":"conv","inputs":["pool1"],"cin":1,
+               "cout":2,"k":2,"stride":1,"pad":0,"param_idx_w":3,
+               "param_idx_b":4,"qindex":1,"s_i":8}
+            ]}"#,
+            )
+            .unwrap(),
+        )
+        .unwrap();
+        let plan = GraphPlan::new(&m);
+        assert_eq!(plan.pool_handoff_of(2), Some(3));
+        let mut rng = Pcg32::new(97);
+        let t = |shape: &[usize], rng: &mut Pcg32| {
+            let n: usize = shape.iter().product();
+            let mut data = vec![0f32; n];
+            fill_normal(rng, &mut data);
+            Tensor::from_vec(shape, data).unwrap()
+        };
+        let params = vec![
+            t(&[1, 1, 1, 1], &mut rng),
+            t(&[1], &mut rng),
+            t(&[2, 2, 1, 2], &mut rng),
+            t(&[2], &mut rng),
+        ];
+        let x = t(&[2, 4, 4, 1], &mut rng);
+        let refs: Vec<&Tensor> = params.iter().collect();
+        let mut qweights: Vec<Option<QuantWeight>> = (0..plan.len()).map(|_| None).collect();
+        qweights[0] = QuantWeight::quantize(&params[0], 8.0);
+        qweights[3] = QuantWeight::quantize(&params[2], 8.0);
+        assert!(qweights[0].is_some() && qweights[3].is_some());
+        let mut scratch = Scratch::new();
+        let f32_out = plan.forward_with(&x, &refs, &mut scratch).unwrap();
+        let i8_out = plan.forward_int8_with(&x, &refs, &qweights, &mut scratch).unwrap();
+        assert_eq!(f32_out.shape(), i8_out.shape());
+        let scale = f32_out.data().iter().fold(0f32, |m, v| m.max(v.abs()));
+        for (a, b) in f32_out.data().iter().zip(i8_out.data()) {
+            assert!((a - b).abs() <= 0.05 * (1.0 + scale), "{a} vs {b}");
+        }
     }
 
     #[test]

@@ -542,6 +542,275 @@ pub fn conv2d_int8_fused(
     Tensor::from_vec(&[n, oh, ow, qw.cols()], out)
 }
 
+/// A quantized activation handed between layers of the integer path:
+/// signed 8-bit codes plus one affine grid per sample group (`scales`
+/// interleaves each group's `(scale, offset)`, `groups == shape[0]`).
+///
+/// Produced at an int8 pool hand-off
+/// ([`GraphPlan`](crate::nn::GraphPlan)): max-pool only *selects*
+/// elements, and each group's affine decode (`scale ≥ 0`) is monotone
+/// non-decreasing in the code, so pooling codes then decoding is
+/// **bitwise identical** to decoding then pooling — the pool runs on
+/// `i8` and the downstream weighted layer consumes the codes directly,
+/// deleting the decode → f32 pool → re-encode round trip the f32
+/// fallback used to pay.
+pub struct Int8Act {
+    /// Row-major signed codes, laid out like the f32 tensor they encode.
+    pub codes: Vec<i8>,
+    /// Logical tensor shape (`shape[0]` = sample groups).
+    pub shape: Vec<usize>,
+    /// Interleaved per-group `(scale, offset)` — `2 · shape[0]` floats.
+    pub scales: Vec<f32>,
+    /// Per-group code of real-valued `0.0` — the structural-padding fill
+    /// value im2col needs in code space.
+    pub zero_codes: Vec<i8>,
+}
+
+impl Int8Act {
+    /// Decode back to f32 on each group's grid (`scale·code + offset`,
+    /// exactly [`AffineI8::decode`]) — the f32 twin the parity tests
+    /// compare against, and the escape hatch for consumers without an
+    /// int8 form.
+    pub fn dequantize(&self) -> Result<Tensor> {
+        let groups = self.shape.first().copied().unwrap_or(1).max(1);
+        let elems = self.codes.len() / groups;
+        let mut out = vec![0f32; self.codes.len()];
+        for g in 0..groups {
+            let (s, o) = (self.scales[2 * g], self.scales[2 * g + 1]);
+            for (v, &c) in out[g * elems..(g + 1) * elems]
+                .iter_mut()
+                .zip(&self.codes[g * elems..(g + 1) * elems])
+            {
+                *v = s * c as f32 + o;
+            }
+        }
+        Tensor::from_vec(&self.shape, out)
+    }
+}
+
+/// Encode a whole activation tensor to signed 8-bit codes, one affine
+/// grid per sample (`shape[0]` groups) — [`quantize_act`]'s grid
+/// selection (8-bit grid over each sample's own dynamic range, constant
+/// group → zero codes with `scale = 0`) without the row sums, which the
+/// consumer computes *after* pooling/im2col reorders the codes.
+pub fn quantize_act_tensor(x: &Tensor) -> Int8Act {
+    let groups = x.shape().first().copied().unwrap_or(1).max(1);
+    let elems = x.len() / groups;
+    let mut codes = vec![0i8; x.len()];
+    let mut scales = vec![0f32; 2 * groups];
+    let mut zero_codes = vec![0i8; groups];
+    for g in 0..groups {
+        let xg = &x.data()[g * elems..(g + 1) * elems];
+        let og = &mut codes[g * elems..(g + 1) * elems];
+        let mut lo = f32::INFINITY;
+        let mut hi = f32::NEG_INFINITY;
+        for &v in xg {
+            if v < lo {
+                lo = v;
+            }
+            if v > hi {
+                hi = v;
+            }
+        }
+        let (s, o, z) = match AffineI8::of(QuantRange { lo, hi }, 8.0) {
+            Some(grid) => {
+                for (o, &v) in og.iter_mut().zip(xg) {
+                    *o = grid.encode(v);
+                }
+                (grid.scale, grid.offset, grid.encode(0.0))
+            }
+            None => (0.0, if lo.is_finite() { lo } else { 0.0 }, 0),
+        };
+        scales[2 * g] = s;
+        scales[2 * g + 1] = o;
+        zero_codes[g] = z;
+    }
+    Int8Act { codes, shape: x.shape().to_vec(), scales, zero_codes }
+}
+
+/// [`maxpool`] on signed 8-bit codes: same NHWC tap loop, comparing
+/// codes instead of floats. Because each group's decode is monotone
+/// non-decreasing, `decode(maxpool_i8(codes))` is bitwise equal to
+/// `maxpool(decode(codes))` (enforced by the parity test below). Wants
+/// `pad < k` — a window with no in-bounds tap has no defined maximum
+/// (the f32 path yields `−∞` there; pool hand-off is only planned for
+/// `pad < k`).
+pub fn maxpool_i8(act: &Int8Act, k: usize, stride: usize, pad: usize) -> Result<Int8Act> {
+    let sh = &act.shape;
+    if sh.len() != 4 {
+        return Err(Error::Shape(format!("maxpool_i8 wants NHWC, got {sh:?}")));
+    }
+    if pad >= k {
+        return Err(Error::Shape(format!("maxpool_i8 wants pad < k, got k {k} pad {pad}")));
+    }
+    let (n, h, w, c) = (sh[0], sh[1], sh[2], sh[3]);
+    let oh = (h + 2 * pad - k) / stride + 1;
+    let ow = (w + 2 * pad - k) / stride + 1;
+    let mut out = vec![i8::MIN; n * oh * ow * c];
+    for b in 0..n {
+        let xoff = b * h * w * c;
+        for oy in 0..oh {
+            for ox in 0..ow {
+                let dst = ((b * oh + oy) * ow + ox) * c;
+                for ky in 0..k {
+                    let iy = (oy * stride + ky) as isize - pad as isize;
+                    if iy < 0 || iy >= h as isize {
+                        continue;
+                    }
+                    for kx in 0..k {
+                        let ix = (ox * stride + kx) as isize - pad as isize;
+                        if ix < 0 || ix >= w as isize {
+                            continue;
+                        }
+                        let src = xoff + ((iy as usize) * w + ix as usize) * c;
+                        for ch in 0..c {
+                            let v = act.codes[src + ch];
+                            if v > out[dst + ch] {
+                                out[dst + ch] = v;
+                            }
+                        }
+                    }
+                }
+            }
+        }
+    }
+    Ok(Int8Act {
+        codes: out,
+        shape: vec![n, oh, ow, c],
+        scales: act.scales.clone(),
+        zero_codes: act.zero_codes.clone(),
+    })
+}
+
+/// Shared int8 matmul + requantize core over **pre-encoded** codes (the
+/// pool hand-off path): row sums are computed from the codes, the GEMM
+/// and requantizing write-back are exactly [`int8_matmul_requant`]'s.
+fn int8_matmul_requant_codes(
+    codes: &[i8],
+    rows: usize,
+    scales: &[f32],
+    qw: &QuantWeight,
+    bias: &Tensor,
+    relu: bool,
+    scratch: &mut Scratch,
+) -> Result<Vec<f32>> {
+    let kdim = qw.rows();
+    let cols = qw.cols();
+    if bias.len() != cols {
+        return Err(Error::Shape(format!("int8 bias {} vs cout {cols}", bias.len())));
+    }
+    let groups = scales.len() / 2;
+    if groups == 0 || rows % groups != 0 {
+        return Err(Error::Shape(format!("int8: {rows} rows not divisible into {groups} groups")));
+    }
+    debug_assert_eq!(codes.len(), rows * kdim);
+    let mut rsum = scratch.take_i32(rows);
+    for (rs, row) in rsum.iter_mut().zip(codes.chunks(kdim.max(1))) {
+        *rs = row.iter().map(|&c| c as i32).sum();
+    }
+    let mut acc = scratch.take_i32(rows * cols);
+    gemm_i8_packed_scratch(codes, &qw.packed, rows, &mut acc, scratch);
+    let mut out = scratch.take_any(rows * cols);
+    let mut colc = scratch.take_any(cols);
+    requant_bias_act(&acc, &rsum, scales, qw, kdim, bias.data(), relu, &mut out, &mut colc);
+    scratch.put_i32(rsum);
+    scratch.put_i32(acc);
+    scratch.put(colc);
+    Ok(out)
+}
+
+/// [`dense_int8_fused`] over a pre-encoded activation: the caller
+/// (an int8 pool hand-off) already holds per-sample codes, so the layer
+/// skips its own encode. For a `[n, cin]` activation the grids are the
+/// same per-row grids [`dense_int8_fused`] would have built, so the two
+/// paths agree bitwise when the codes come straight from
+/// [`quantize_act_tensor`] (enforced in tests).
+pub fn dense_int8_precoded(
+    act: &Int8Act,
+    qw: &QuantWeight,
+    bias: &Tensor,
+    relu: bool,
+    scratch: &mut Scratch,
+) -> Result<Tensor> {
+    if act.shape.len() != 2 {
+        return Err(Error::Shape(format!("dense_int8 wants [n,cin], got {:?}", act.shape)));
+    }
+    let (n, cin) = (act.shape[0], act.shape[1]);
+    if cin != qw.rows() {
+        return Err(Error::Shape(format!("dense_int8: cin {cin} vs weight rows {}", qw.rows())));
+    }
+    let out = int8_matmul_requant_codes(&act.codes, n, &act.scales, qw, bias, relu, scratch)?;
+    Tensor::from_vec(&[n, qw.cols()], out)
+}
+
+/// [`conv2d_int8_fused`] over a pre-encoded activation: im2col runs
+/// directly on the codes, with each image's structural padding filled
+/// with **its own** zero code (`Int8Act::zero_codes`) so padding decodes
+/// to (the grid's nearest representation of) 0.0, then the shared
+/// pre-encoded GEMM + requantize core finishes the layer.
+#[allow(clippy::too_many_arguments)]
+pub fn conv2d_int8_precoded(
+    act: &Int8Act,
+    qw: &QuantWeight,
+    bias: &Tensor,
+    k: usize,
+    stride: usize,
+    pad: usize,
+    relu: bool,
+    scratch: &mut Scratch,
+) -> Result<Tensor> {
+    let sh = &act.shape;
+    if sh.len() != 4 {
+        return Err(Error::Shape(format!("conv_int8 wants NHWC input, got {sh:?}")));
+    }
+    let (n, h, w, cin) = (sh[0], sh[1], sh[2], sh[3]);
+    if k * k * cin != qw.rows() {
+        return Err(Error::Shape(format!(
+            "conv_int8: k²·cin {} vs weight rows {}",
+            k * k * cin,
+            qw.rows()
+        )));
+    }
+    if h + 2 * pad < k || w + 2 * pad < k {
+        return Err(Error::Shape(format!("kernel {k} too large for {h}x{w} pad {pad}")));
+    }
+    let oh = (h + 2 * pad - k) / stride + 1;
+    let ow = (w + 2 * pad - k) / stride + 1;
+    let cols = k * k * cin;
+    let rows = n * oh * ow;
+    let mut patches = scratch.take_i8(rows * cols);
+    for b in 0..n {
+        let prows = &mut patches[b * oh * ow * cols..(b + 1) * oh * ow * cols];
+        if pad > 0 {
+            prows.fill(act.zero_codes[b]);
+        }
+        let xoff = b * h * w * cin;
+        for oy in 0..oh {
+            for ox in 0..ow {
+                let row = (oy * ow + ox) * cols;
+                for ky in 0..k {
+                    let iy = (oy * stride + ky) as isize - pad as isize;
+                    if iy < 0 || iy >= h as isize {
+                        continue;
+                    }
+                    for kx in 0..k {
+                        let ix = (ox * stride + kx) as isize - pad as isize;
+                        if ix < 0 || ix >= w as isize {
+                            continue;
+                        }
+                        let src = xoff + ((iy as usize) * w + ix as usize) * cin;
+                        let dst = row + (ky * k + kx) * cin;
+                        prows[dst..dst + cin].copy_from_slice(&act.codes[src..src + cin]);
+                    }
+                }
+            }
+        }
+    }
+    let out = int8_matmul_requant_codes(&patches, rows, &act.scales, qw, bias, relu, scratch)?;
+    scratch.put_i8(patches);
+    Tensor::from_vec(&[n, oh, ow, qw.cols()], out)
+}
+
 /// Elementwise max(x, 0).
 pub fn relu(x: &Tensor) -> Tensor {
     let data = x.data().iter().map(|&v| v.max(0.0)).collect();
@@ -908,6 +1177,100 @@ mod tests {
         let want = int8_reference(&x, &w, &b, 8.0, false, 3);
         for (g, e) in got.data().iter().zip(want.data()) {
             assert!((g - e).abs() <= 1e-4 * (1.0 + e.abs()), "{g} vs {e}");
+        }
+    }
+
+    #[test]
+    fn maxpool_i8_bitwise_parity_with_f32_reference() {
+        // the satellite-bug parity test: max-pool selects elements and
+        // each sample's affine decode is monotone (scale ≥ 0), so
+        // decode(maxpool_i8(codes)) must equal maxpool(decode(codes))
+        // BITWISE, for any kernel/stride/pad the f32 path accepts
+        let x = randn(&[3, 6, 6, 2], 500);
+        let qa = quantize_act_tensor(&x);
+        assert_eq!(qa.scales.len(), 6, "one (scale, offset) grid per sample");
+        for &(k, stride, pad) in &[(2usize, 2usize, 0usize), (3, 1, 1), (3, 2, 1), (2, 1, 0)] {
+            let pooled = maxpool_i8(&qa, k, stride, pad).unwrap();
+            let got = pooled.dequantize().unwrap();
+            let want = maxpool(&qa.dequantize().unwrap(), k, stride, pad).unwrap();
+            assert_eq!(got.shape(), want.shape(), "k{k} s{stride} p{pad}");
+            for (g, e) in got.data().iter().zip(want.data()) {
+                assert_eq!(g.to_bits(), e.to_bits(), "k{k} s{stride} p{pad}: {g} vs {e}");
+            }
+        }
+        // constant sample (degenerate grid, scale 0): still exact
+        let flat = t(&[1, 4, 4, 1], vec![2.5; 16]);
+        let qf = quantize_act_tensor(&flat);
+        let got = maxpool_i8(&qf, 2, 2, 0).unwrap().dequantize().unwrap();
+        let want = maxpool(&qf.dequantize().unwrap(), 2, 2, 0).unwrap();
+        for (g, e) in got.data().iter().zip(want.data()) {
+            assert_eq!(g.to_bits(), e.to_bits());
+        }
+        assert!(maxpool_i8(&qa, 2, 1, 2).is_err(), "pad ≥ k has windows with no taps");
+    }
+
+    #[test]
+    fn dense_int8_precoded_matches_fused_bitwise() {
+        // for a [n, cin] activation, quantize_act_tensor builds the same
+        // per-row grids dense_int8_fused builds internally, so skipping
+        // the layer's own encode must not change a single bit
+        let (n, cin, cout) = (5usize, 9usize, 4usize);
+        let x = randn(&[n, cin], 510);
+        let w = randn(&[cin, cout], 511);
+        let b = randn(&[cout], 512);
+        let qw = QuantWeight::quantize(&w, 6.0).unwrap();
+        let mut s = Scratch::new();
+        for relu_on in [false, true] {
+            let fused = dense_int8_fused(&x, &qw, &b, relu_on, &mut s).unwrap();
+            let pre = dense_int8_precoded(&quantize_act_tensor(&x), &qw, &b, relu_on, &mut s)
+                .unwrap();
+            for (a, b) in fused.data().iter().zip(pre.data()) {
+                assert_eq!(a.to_bits(), b.to_bits(), "relu {relu_on}");
+            }
+        }
+    }
+
+    #[test]
+    fn conv_int8_precoded_matches_fused_bitwise_when_windows_cover_input() {
+        // k2/s1/p0 windows visit every pixel, so the per-image patch
+        // range equals the image range: fused (patch-grid) and precoded
+        // (tensor-grid) encode identically and must agree bitwise
+        let (k, cin, cout) = (2usize, 3usize, 4usize);
+        let x = randn(&[2, 4, 4, cin], 520);
+        let w = randn(&[k, k, cin, cout], 521);
+        let b = randn(&[cout], 522);
+        let qw = QuantWeight::quantize(&w, 8.0).unwrap();
+        let mut s = Scratch::new();
+        let fused = conv2d_int8_fused(&x, &qw, &b, k, 1, 0, true, &mut s).unwrap();
+        let pre =
+            conv2d_int8_precoded(&quantize_act_tensor(&x), &qw, &b, k, 1, 0, true, &mut s)
+                .unwrap();
+        assert_eq!(fused.shape(), pre.shape());
+        for (a, b) in fused.data().iter().zip(pre.data()) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+    }
+
+    #[test]
+    fn conv_int8_precoded_padded_stays_close_to_f32_reference() {
+        // with structural padding the pad taps decode to each image's
+        // nearest-representable 0.0 instead of exactly 0.0 — a ≤ half-
+        // step perturbation; assert the usual int8-vs-f32 closeness
+        let (k, cin, cout) = (3usize, 2usize, 3usize);
+        let x = randn(&[2, 5, 5, cin], 530);
+        let w = randn(&[k, k, cin, cout], 531);
+        let b = randn(&[cout], 532);
+        let qw = QuantWeight::quantize(&w, 8.0).unwrap();
+        let mut s = Scratch::new();
+        let qa = quantize_act_tensor(&x);
+        let got = conv2d_int8_precoded(&qa, &qw, &b, k, 1, 1, false, &mut s).unwrap();
+        let patches = im2col(&qa.dequantize().unwrap(), k, 1, 1).unwrap();
+        let wflat = w.clone().reshape(&[k * k * cin, cout]).unwrap();
+        let mut want = crate::tensor::matmul_reference(&patches, &fake_quant(&wflat, 8.0)).unwrap();
+        bias_act_inplace(want.data_mut(), b.data(), false);
+        let scale = want.data().iter().fold(0f32, |m, v| m.max(v.abs()));
+        for (g, e) in got.data().iter().zip(want.data()) {
+            assert!((g - e).abs() <= 0.05 * (1.0 + scale), "{g} vs {e}");
         }
     }
 

@@ -241,6 +241,7 @@ pub struct ObsHub {
     pool_jobs: AtomicU64,
     pool_idle_workers: AtomicU64,
     pool_probe_us: AtomicU64,
+    qcache_evictions: AtomicU64,
     side: Mutex<EventRing>,
 }
 
@@ -261,6 +262,7 @@ pub fn hub() -> &'static ObsHub {
         pool_jobs: AtomicU64::new(0),
         pool_idle_workers: AtomicU64::new(0),
         pool_probe_us: AtomicU64::new(0),
+        qcache_evictions: AtomicU64::new(0),
         side: Mutex::new(EventRing::new(SIDE_RING_CAP)),
     })
 }
@@ -321,6 +323,16 @@ impl ObsHub {
         self.pool_probe_us.fetch_add(probe_us, Ordering::Relaxed);
     }
 
+    /// Count one serve-qcache LRU eviction. A hot counter here (rather
+    /// than a silent `remove(0)`) is what makes multi-model thrash — N
+    /// registries' ladders fighting over one undersized cache — visible
+    /// as a rate instead of an unexplained requant-latency cliff.
+    pub fn note_qcache_eviction(&self) {
+        if enabled() {
+            self.qcache_evictions.fetch_add(1, Ordering::Relaxed);
+        }
+    }
+
     /// Record a low-frequency event into the shared side ring, stamped
     /// with the hub epoch (wall-clock domain, no deterministic time).
     pub fn side_event(&self, kind: EventKind, id: u64, a: u64, b: u64) {
@@ -328,7 +340,9 @@ impl ObsHub {
             return;
         }
         let wall_us = self.epoch.elapsed().as_micros() as u64;
-        self.side.lock().unwrap().record(Event {
+        // the ring is a plain buffer: recover a poisoned lock rather than
+        // letting one panicking recorder wedge every later side event
+        self.side.lock().unwrap_or_else(|e| e.into_inner()).record(Event {
             kind,
             id,
             virtual_us: NO_VIRTUAL,
@@ -343,7 +357,7 @@ impl ObsHub {
     /// Concurrent runs race for side events; deterministic projections
     /// are unaffected (side-event kinds are all wall-domain).
     pub fn drain_side(&self) -> (Vec<Event>, u64) {
-        let mut ring = self.side.lock().unwrap();
+        let mut ring = self.side.lock().unwrap_or_else(|e| e.into_inner());
         std::mem::replace(&mut *ring, EventRing::new(SIDE_RING_CAP)).into_parts()
     }
 }
@@ -373,6 +387,8 @@ pub struct HubSnapshot {
     pub pool_idle_workers: u64,
     /// Summed per-job probe µs across all pool runs.
     pub pool_probe_us: u64,
+    /// Serve-qcache LRU evictions (re-encode pressure under multi-model).
+    pub qcache_evictions: u64,
 }
 
 impl HubSnapshot {
@@ -390,6 +406,7 @@ impl HubSnapshot {
             pool_jobs: h.pool_jobs.load(Ordering::Relaxed),
             pool_idle_workers: h.pool_idle_workers.load(Ordering::Relaxed),
             pool_probe_us: h.pool_probe_us.load(Ordering::Relaxed),
+            qcache_evictions: h.qcache_evictions.load(Ordering::Relaxed),
         }
     }
 
@@ -406,6 +423,7 @@ impl HubSnapshot {
             pool_jobs: self.pool_jobs.saturating_sub(earlier.pool_jobs),
             pool_idle_workers: self.pool_idle_workers.saturating_sub(earlier.pool_idle_workers),
             pool_probe_us: self.pool_probe_us.saturating_sub(earlier.pool_probe_us),
+            qcache_evictions: self.qcache_evictions.saturating_sub(earlier.qcache_evictions),
         }
     }
 }

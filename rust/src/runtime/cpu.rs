@@ -89,7 +89,7 @@ pub struct CpuBackend {
     /// Serve requests take the integer path (see [`CpuBackend::with_int8_serving`]).
     int8_serving: bool,
     /// Cached quantized parameter sets keyed on the bits vector (serve
-    /// path), most recently used last, at most [`QCACHE_CAP`] entries.
+    /// path), most recently used last, at most `qcache_cap` entries.
     /// Each set is behind an `Arc` so a request clones the handle under
     /// a short lock and runs its forward **outside** the mutex —
     /// concurrent serve workers share the cache without serializing on
@@ -103,6 +103,15 @@ pub struct CpuBackend {
     /// Cached int8 weight sets keyed on the bits vector (integer
     /// serving); same `Arc` hand-off and LRU discipline as `qcache`.
     qcache_int8: Mutex<Vec<(Vec<f32>, Arc<Int8Set>)>>,
+    /// Capacity shared by both serve caches. Defaults to
+    /// [`QCACHE_DEFAULT_CAP`] (one degrade ladder); the model registry
+    /// resizes it to models × rungs at load/swap time so a multi-model
+    /// deployment never silently thrashes — an undersized cache shows up
+    /// as the `qcache_evictions` obs counter climbing, not as a
+    /// mysterious requant-latency cliff. Atomic so the registry can grow
+    /// it while serve workers are mid-request; shrinking only bounds
+    /// *future* insertions (extant entries age out by LRU).
+    qcache_cap: AtomicUsize,
     /// Pool of scratch arenas for [`Backend::qforward_one`]: each request
     /// pops one (or builds a fresh one under contention), forwards, and
     /// pushes it back — steady-state serving allocates nothing, and N
@@ -115,21 +124,25 @@ pub struct CpuBackend {
 /// resident memory after a burst of concurrent workers).
 const SERVE_SCRATCH_CAP: usize = 32;
 
-/// Distinct bits vectors the serve caches keep encoded at once. Sized
-/// for a deep degradation ladder (every rung resident simultaneously)
-/// with headroom; least recently used entries are evicted beyond this.
-const QCACHE_CAP: usize = 8;
+/// Default capacity of the serve caches: distinct bits vectors kept
+/// encoded at once, sized for a deep degradation ladder (every rung
+/// resident simultaneously) with headroom. Deployments serving several
+/// models resize via [`Backend::set_qcache_capacity`].
+pub const QCACHE_DEFAULT_CAP: usize = 8;
 
 /// Look up `bits` in a keyed LRU of shared weight-set handles, building
 /// (and caching) the set on a miss. Hits move the entry to the back —
 /// rung-alternating serve traffic keeps a whole ladder resident instead
-/// of thrashing one slot.
+/// of thrashing one slot. Evictions are counted on the obs hub. The
+/// cached sets are immutable once built, so a poisoned lock (a panicking
+/// forward elsewhere in the worker) is recovered, not propagated.
 fn qcache_get<T>(
     cache: &Mutex<Vec<(Vec<f32>, Arc<T>)>>,
+    cap: usize,
     bits: &[f32],
     build: impl FnOnce() -> T,
 ) -> Arc<T> {
-    let mut entries = cache.lock().unwrap();
+    let mut entries = cache.lock().unwrap_or_else(|e| e.into_inner());
     if let Some(pos) = entries.iter().position(|(b, _)| b.as_slice() == bits) {
         let entry = entries.remove(pos);
         let handle = entry.1.clone();
@@ -137,8 +150,9 @@ fn qcache_get<T>(
         return handle;
     }
     let handle = Arc::new(build());
-    if entries.len() >= QCACHE_CAP {
+    while entries.len() >= cap.max(1) {
         entries.remove(0);
+        hub().note_qcache_eviction();
     }
     entries.push((bits.to_vec(), handle.clone()));
     handle
@@ -187,6 +201,7 @@ impl CpuBackend {
             int8_serving: false,
             qcache: Mutex::new(Vec::new()),
             qcache_int8: Mutex::new(Vec::new()),
+            qcache_cap: AtomicUsize::new(QCACHE_DEFAULT_CAP),
             serve_scratch: Mutex::new(Vec::new()),
             execs: AtomicU64::new(0),
         })
@@ -222,6 +237,15 @@ impl CpuBackend {
     /// and must keep its exact semantics.
     pub fn with_int8_serving(mut self, on: bool) -> CpuBackend {
         self.int8_serving = on;
+        self
+    }
+
+    /// Set the serve-cache capacity at construction (0 = keep default).
+    /// Runtime resizes go through [`Backend::set_qcache_capacity`].
+    pub fn with_qcache_capacity(self, cap: usize) -> CpuBackend {
+        if cap > 0 {
+            self.qcache_cap.store(cap, Ordering::Relaxed);
+        }
         self
     }
 
@@ -356,23 +380,27 @@ impl CpuBackend {
     /// vector); steady-state requests — including a degrade ladder
     /// alternating between resident rungs — only clone an `Arc`.
     fn quantized_for(&self, bits: &[f32]) -> Arc<Vec<(usize, Tensor)>> {
-        qcache_get(&self.qcache, bits, || self.quantize_params(bits))
+        let cap = self.qcache_cap.load(Ordering::Relaxed);
+        qcache_get(&self.qcache, cap, bits, || self.quantize_params(bits))
     }
 
     /// The (cached) int8 weight set for `bits` — encoded once per bits
     /// vector, handed out as a shared handle like [`CpuBackend::quantized_for`].
     fn int8_for(&self, bits: &[f32]) -> Arc<Int8Set> {
-        qcache_get(&self.qcache_int8, bits, || self.quantize_params_int8(bits))
+        let cap = self.qcache_cap.load(Ordering::Relaxed);
+        qcache_get(&self.qcache_int8, cap, bits, || self.quantize_params_int8(bits))
     }
 
     /// Pop a serve arena from the pool (or build one under contention).
+    /// Arenas are plain buffers — recover a poisoned lock (a worker that
+    /// panicked mid-forward) instead of cascading the panic.
     fn take_serve_scratch(&self) -> Scratch {
-        self.serve_scratch.lock().unwrap().pop().unwrap_or_default()
+        self.serve_scratch.lock().unwrap_or_else(|e| e.into_inner()).pop().unwrap_or_default()
     }
 
     /// Return a serve arena to the pool.
     fn put_serve_scratch(&self, scratch: Scratch) {
-        let mut pool = self.serve_scratch.lock().unwrap();
+        let mut pool = self.serve_scratch.lock().unwrap_or_else(|e| e.into_inner());
         if pool.len() < SERVE_SCRATCH_CAP {
             pool.push(scratch);
         }
@@ -440,6 +468,12 @@ impl Backend for CpuBackend {
 
     fn set_parallel_budget(&self, outer_jobs: usize) {
         self.outer_jobs.store(outer_jobs.max(1), Ordering::Relaxed);
+    }
+
+    fn set_qcache_capacity(&self, cap: usize) {
+        if cap > 0 {
+            self.qcache_cap.store(cap, Ordering::Relaxed);
+        }
     }
 }
 
@@ -554,13 +588,40 @@ mod tests {
         }
         assert_eq!(be.qcache.lock().unwrap().len(), ladder.len(), "whole ladder resident");
         // a stream of one-shot vectors stays bounded at the cap…
-        for k in 0..QCACHE_CAP + 3 {
+        let before = crate::obs::HubSnapshot::capture();
+        for k in 0..QCACHE_DEFAULT_CAP + 3 {
             let b = 9.0 + 0.25 * k as f32;
             be.qforward_one(&x, &[b, b]).unwrap();
         }
-        assert_eq!(be.qcache.lock().unwrap().len(), QCACHE_CAP);
+        assert_eq!(be.qcache.lock().unwrap().len(), QCACHE_DEFAULT_CAP);
+        // …and the overflow shows up on the obs eviction counter (the
+        // hub is process-global, so assert growth, not an exact count)
+        let delta = crate::obs::HubSnapshot::capture().since(&before);
+        assert!(delta.qcache_evictions >= 1, "evictions visible: {}", delta.qcache_evictions);
         // …and an evicted rung rebuilds to the same bits
         assert_eq!(&be.qforward_one(&x, &ladder[0]).unwrap(), &first[0]);
+    }
+
+    #[test]
+    fn qcache_capacity_sized_for_multi_model_registries() {
+        // a registry holding 2 models × 6 rungs resizes the cache so a
+        // round-robin over every (model, rung) bits vector stays resident
+        let be = toy_backend(1).with_qcache_capacity(12);
+        let x = be.batches[0].clone();
+        let vectors: Vec<[f32; 2]> =
+            (0..12).map(|k| [2.0 + 0.5 * k as f32, 8.0]).collect();
+        let first: Vec<Vec<f32>> =
+            vectors.iter().map(|b| be.qforward_one(&x, b).unwrap()).collect();
+        for (b, want) in vectors.iter().zip(&first) {
+            assert_eq!(&be.qforward_one(&x, b).unwrap(), want);
+        }
+        // a full round of revisits left every entry resident — nothing
+        // was evicted, so nothing re-encoded
+        assert_eq!(be.qcache.lock().unwrap().len(), 12, "all 12 allocations resident");
+        // shrinking through the Backend trait bounds future insertions
+        Backend::set_qcache_capacity(&be, 3);
+        be.qforward_one(&x, &[99.0, 99.0]).unwrap();
+        assert!(be.qcache.lock().unwrap().len() <= 3);
     }
 
     #[test]

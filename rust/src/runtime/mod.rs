@@ -86,4 +86,12 @@ pub trait Backend: Send + Sync {
     /// Backends without internal threading may ignore this (default
     /// no-op).
     fn set_parallel_budget(&self, _outer_jobs: usize) {}
+
+    /// Size the backend's per-`bits` serve cache for the deployment:
+    /// the model registry calls this with models × rungs at load/swap
+    /// time so multi-model traffic keeps every active allocation's
+    /// encoded weights resident instead of thrashing an LRU sized for a
+    /// single degrade ladder. `0` keeps the current capacity. Backends
+    /// without such a cache ignore this (default no-op).
+    fn set_qcache_capacity(&self, _cap: usize) {}
 }

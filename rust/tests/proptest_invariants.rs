@@ -274,7 +274,7 @@ fn prop_queue_shed_policies() {
     use std::collections::VecDeque;
     use std::time::{Duration, Instant};
 
-    let req = |id: usize| Request { id, idx: id, enqueued_at: Instant::now() };
+    let req = |id: usize| Request::new(id, id, Instant::now());
     for seed in 700..700 + CASES {
         let mut rng = Pcg32::new(seed);
         let cap = 1 + rng.below(10) as usize;

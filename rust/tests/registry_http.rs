@@ -1,0 +1,225 @@
+//! Integration tests for the HTTP front door + versioned model registry:
+//! a real TCP round trip through `run_http`, and the headline acceptance
+//! property — an atomic hot-swap under open-loop socket load drops zero
+//! requests and keeps predictions bitwise identical per pinned version,
+//! at 1, 2, and 4 workers.
+//!
+//! Clients here speak raw HTTP/1.1 over `TcpStream` (the server is
+//! dependency-light; so are its tests).
+
+use std::io::{Read, Write};
+use std::net::{SocketAddr, TcpStream};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+use std::time::Duration;
+
+use adaq::bench_support::synthetic_parts;
+use adaq::coordinator::server::{run_http, HttpReport};
+use adaq::coordinator::{Registry, ServerConfig, Session, ShedPolicy};
+use adaq::dataset::Dataset;
+use adaq::io::Json;
+use adaq::tensor::Tensor;
+use adaq::Result;
+
+/// Expected prediction for dataset row `idx` under `bits` — the batch-1
+/// reference the engine's answers must match bitwise.
+fn ref_pred(session: &Session, data: &Dataset, idx: usize, bits: &[f32]) -> i32 {
+    let x = data.batch(idx, 1).unwrap();
+    let logits = session.qforward_once(&x, bits).unwrap();
+    Tensor::top2(&logits).0 as i32
+}
+
+/// Bind an ephemeral listener, build a synthetic single-model registry
+/// (`m` @ the given versions), and drive `run_http` from a thread.
+/// Returns the bound address and the server handle to join after
+/// `POST /admin/shutdown`.
+fn start_server(
+    versions: Vec<(u32, Vec<f32>)>,
+    cfg: ServerConfig,
+) -> (SocketAddr, JoinHandle<Result<HttpReport>>) {
+    let listener = std::net::TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap();
+    let handle = std::thread::spawn(move || {
+        let (artifacts, test) = synthetic_parts(16)?;
+        let session = Session::from_parts(artifacts, test.clone(), 4)?;
+        let mut registry = Registry::default();
+        registry.add_model("m", session, versions)?;
+        run_http(Arc::new(registry), &test, &cfg, ShedPolicy::RejectNew, listener)
+    });
+    (addr, handle)
+}
+
+/// One raw HTTP/1.1 exchange: returns (status, parsed JSON body).
+fn http(addr: SocketAddr, method: &str, path: &str, body: &str) -> (u16, Json) {
+    let mut stream = TcpStream::connect(addr).expect("server is listening");
+    stream.set_read_timeout(Some(Duration::from_secs(150))).unwrap();
+    write!(
+        stream,
+        "{method} {path} HTTP/1.1\r\nHost: test\r\nContent-Length: {}\r\n\r\n{body}",
+        body.len()
+    )
+    .unwrap();
+    stream.flush().unwrap();
+    let mut raw = Vec::new();
+    stream.read_to_end(&mut raw).unwrap(); // server sends Connection: close
+    let text = String::from_utf8_lossy(&raw).to_string();
+    let status: u16 = text
+        .split_whitespace()
+        .nth(1)
+        .and_then(|s| s.parse().ok())
+        .unwrap_or_else(|| panic!("unparseable response: {text:?}"));
+    let json_body = text
+        .split_once("\r\n\r\n")
+        .map(|(_, b)| b)
+        .filter(|b| !b.is_empty())
+        .map(|b| Json::parse(b).expect("response body is JSON"))
+        .unwrap_or(Json::Null);
+    (status, json_body)
+}
+
+fn predict_body(idx: usize, model: &str, client: &str) -> String {
+    format!("{{\"index\": {idx}, \"model\": \"{model}\", \"client\": \"{client}\"}}")
+}
+
+#[test]
+fn http_round_trip_accounting_and_rejections() {
+    let cfg = ServerConfig { workers: 2, batch: 2, queue_cap: 64, ..ServerConfig::sequential() };
+    // reference predictions from an identical (seeded) synthetic model
+    let (artifacts, test) = synthetic_parts(16).unwrap();
+    let session = Session::from_parts(artifacts, test.clone(), 4).unwrap();
+    let v1 = vec![8.0, 8.0];
+    let v2 = vec![4.0, 4.0];
+    let refs_v1: Vec<i32> = (0..4).map(|i| ref_pred(&session, &test, i, &v1)).collect();
+    let refs_v2: Vec<i32> = (0..4).map(|i| ref_pred(&session, &test, i, &v2)).collect();
+
+    let (addr, server) = start_server(vec![(1, v1), (2, v2)], cfg);
+
+    // the registry publishes both versions, latest active
+    let (status, models) = http(addr, "GET", "/v1/models", "");
+    assert_eq!(status, 200);
+    let m = &models.get("models").and_then(Json::as_arr).unwrap()[0];
+    assert_eq!(m.get("name").and_then(Json::as_str), Some("m"));
+    assert_eq!(m.get("active").and_then(Json::as_usize), Some(2));
+    assert_eq!(m.get("versions").and_then(Json::as_arr).unwrap().len(), 2);
+
+    // answered requests match the batch-1 reference bitwise, per version
+    for i in 0..4 {
+        let (status, body) = http(addr, "POST", "/v1/predict", &predict_body(i, "m@v1", "a"));
+        assert_eq!(status, 200, "pinned v1 predict answers");
+        assert_eq!(body.get("prediction").and_then(Json::as_f64), Some(f64::from(refs_v1[i])));
+        assert_eq!(body.get("model").and_then(Json::as_str), Some("m@v1"));
+        // bare name resolves to the active version (v2)
+        let (status, body) = http(addr, "POST", "/v1/predict", &predict_body(i, "m", "b"));
+        assert_eq!(status, 200);
+        assert_eq!(body.get("prediction").and_then(Json::as_f64), Some(f64::from(refs_v2[i])));
+        assert_eq!(body.get("model").and_then(Json::as_str), Some("m@v2"));
+    }
+
+    // malformed requests are refused before admission: not in the ledger
+    let (status, _) = http(addr, "POST", "/v1/predict", "this is not json");
+    assert_eq!(status, 400);
+    let (status, _) = http(addr, "POST", "/v1/predict", &predict_body(9999, "m", "a"));
+    assert_eq!(status, 400, "out-of-range index");
+    let (status, _) = http(addr, "POST", "/v1/predict", &predict_body(0, "ghost", "a"));
+    assert_eq!(status, 400, "unknown model");
+    let (status, _) = http(addr, "GET", "/v1/nothing", "");
+    assert_eq!(status, 404);
+
+    // live per-client stats see both clients
+    let (status, stats) = http(addr, "GET", "/v1/stats", "");
+    assert_eq!(status, 200);
+    let clients = stats.get("clients").unwrap();
+    assert_eq!(clients.get("a").and_then(|c| c.get("offered")).and_then(Json::as_usize), Some(4));
+    assert_eq!(clients.get("b").and_then(|c| c.get("accepted")).and_then(Json::as_usize), Some(4));
+
+    let (status, _) = http(addr, "POST", "/admin/shutdown", "");
+    assert_eq!(status, 200);
+    let report = server.join().unwrap().unwrap();
+
+    // exact accounting identity over socket traffic, totals + per client
+    assert!(report.identity_holds(), "offered = accepted + shed + live-shed + errored");
+    assert_eq!(report.totals.offered, 8, "only well-formed predicts enter the ledger");
+    assert_eq!(report.totals.accepted, 8);
+    assert_eq!(report.totals.shed + report.totals.live_shed + report.totals.errored, 0);
+    assert_eq!(report.clients.len(), 2);
+    assert_eq!(report.clients["a"].accepted, 4);
+    assert_eq!(report.clients["b"].accepted, 4);
+    assert_eq!(report.report.errored, 0, "engine-side report agrees");
+}
+
+/// The headline acceptance property: hot-swapping the active version
+/// under sustained open-loop socket load drops zero requests, and every
+/// answer is bitwise identical to its pinned version's batch-1
+/// reference — at 1, 2, and 4 workers.
+#[test]
+fn hot_swap_under_load_drops_nothing_at_1_2_4_workers() {
+    let versions = [vec![8.0, 8.0], vec![6.0, 6.0], vec![4.0, 4.0]];
+    let (artifacts, test) = synthetic_parts(16).unwrap();
+    let session = Session::from_parts(artifacts, test.clone(), 4).unwrap();
+    let refs: Vec<Vec<i32>> = versions
+        .iter()
+        .map(|b| (0..16).map(|i| ref_pred(&session, &test, i, b)).collect())
+        .collect();
+
+    for workers in [1usize, 2, 4] {
+        let cfg = ServerConfig {
+            workers,
+            batch: 4,
+            deadline_us: 100,
+            queue_cap: 256,
+            ..ServerConfig::sequential()
+        };
+        let ladder: Vec<(u32, Vec<f32>)> =
+            versions.iter().cloned().enumerate().map(|(i, b)| (i as u32 + 1, b)).collect();
+        let (addr, server) = start_server(ladder, cfg);
+
+        let per_thread = 24usize;
+        std::thread::scope(|s| {
+            // three clients pin a version each; a fourth rides the alias
+            // while the active version is swapped underneath it
+            for (t, spec) in ["m@v1", "m@v2", "m@v3", "m"].into_iter().enumerate() {
+                let refs = &refs;
+                s.spawn(move || {
+                    for k in 0..per_thread {
+                        let idx = (t * 7 + k) % 16;
+                        let (status, body) =
+                            http(addr, "POST", "/v1/predict", &predict_body(idx, spec, spec));
+                        assert_eq!(status, 200, "zero drops: every request is answered");
+                        let pred = body.get("prediction").and_then(Json::as_f64).unwrap() as i32;
+                        let label = body.get("model").and_then(Json::as_str).unwrap().to_string();
+                        // the response names the version that served it;
+                        // the prediction must be that version's, bitwise
+                        let v: usize = label.rsplit_once('v').unwrap().1.parse().unwrap();
+                        assert_eq!(
+                            pred, refs[v - 1][idx],
+                            "{spec} (served as {label}) answers its pinned version's \
+                             reference at {workers} workers"
+                        );
+                    }
+                });
+            }
+            // the swapper: walk the ladder down and back up mid-load
+            s.spawn(move || {
+                for v in [2usize, 1, 2, 3] {
+                    std::thread::sleep(Duration::from_millis(15));
+                    let body = format!("{{\"model\": \"m\", \"version\": {v}}}");
+                    let (status, resp) = http(addr, "POST", "/v1/models/activate", &body);
+                    assert_eq!(status, 200, "activate succeeds mid-load");
+                    assert_eq!(resp.get("active").and_then(Json::as_usize), Some(v));
+                }
+            });
+        });
+
+        let (status, _) = http(addr, "POST", "/admin/shutdown", "");
+        assert_eq!(status, 200);
+        let report = server.join().unwrap().unwrap();
+        assert!(report.identity_holds(), "identity holds at {workers} workers");
+        assert_eq!(report.totals.offered, 4 * per_thread);
+        assert_eq!(
+            report.totals.accepted,
+            4 * per_thread,
+            "hot-swap under load drops zero requests at {workers} workers"
+        );
+        assert_eq!(report.totals.shed + report.totals.live_shed + report.totals.errored, 0);
+    }
+}

@@ -245,10 +245,10 @@ fn queue_drains_all_accepted_requests_on_shutdown() {
             })
             .collect();
         for id in 0..n {
-            assert!(queue.push(Request { id, idx: id, enqueued_at: Instant::now() }));
+            assert!(queue.push(Request::new(id, id, Instant::now())));
         }
         queue.close();
-        assert!(!queue.push(Request { id: n, idx: 0, enqueued_at: Instant::now() }));
+        assert!(!queue.push(Request::new(n, 0, Instant::now())));
         for c in consumers {
             for id in c.join().unwrap() {
                 assert!(!seen[id], "request {id} served twice");
